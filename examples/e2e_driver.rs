@@ -1,0 +1,133 @@
+//! END-TO-END DRIVER — proves all layers compose on a real workload:
+//!
+//! 1. generate a SIFT-like corpus (substrate for SIFT1M),
+//! 2. fit PCA (128→15) and build the HNSW graph,
+//! 3. serve batched queries through the L3 coordinator with THREE engines:
+//!    plain HNSW, native pHNSW, and pHNSW with the AOT-compiled JAX/Pallas
+//!    rerank running through PJRT (`phnsw-xla`) — Python is never invoked,
+//! 4. verify recall against exact ground truth for every engine,
+//! 5. cycle-simulate the pHNSW processor on the same query traces and
+//!    report the Table III / Fig. 5 headline numbers.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_driver`
+//! The recorded run lives in EXPERIMENTS.md §End-to-end.
+
+use phnsw::coordinator::{Query, RoutePolicy, Router, Server, ServerConfig, XlaPhnswEngine};
+use phnsw::dram::DramConfig;
+use phnsw::hw::EngineKind;
+use phnsw::metrics::recall_at_k;
+use phnsw::runtime::XlaRerankEngine;
+use phnsw::search::{AnnEngine, PhnswParams, SearchParams};
+use phnsw::workbench::{Workbench, WorkbenchConfig};
+use std::sync::Arc;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> phnsw::Result<()> {
+    let n = env_usize("PHNSW_E2E_N", 20_000);
+    let nq = env_usize("PHNSW_E2E_QUERIES", 300);
+
+    println!("=== pHNSW end-to-end driver (n={n}, queries={nq}) ===\n");
+    let w = Arc::new(Workbench::assemble(WorkbenchConfig {
+        n_base: n,
+        n_queries: nq,
+        ..WorkbenchConfig::default()
+    })?);
+    println!(
+        "[1] corpus {}×{}d, graph {} levels, PCA 128→15 ({:.0}% variance)",
+        w.base.len(),
+        w.base.dim(),
+        w.graph.max_level() + 1,
+        100.0 * w.pca.explained_variance_ratio()
+    );
+
+    // --- engines, including the AOT/PJRT path -------------------------
+    let artifacts = std::env::var("PHNSW_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let xla = Arc::new(XlaRerankEngine::start(&artifacts)?);
+    println!("[2] XLA runtime up: artifacts = {:?}", xla.available()?);
+
+    let mut router = Router::new(RoutePolicy::Default("phnsw-xla".into()));
+    router.register("hnsw", Arc::new(w.hnsw(SearchParams::default())) as Arc<dyn AnnEngine>);
+    router.register("phnsw", Arc::new(w.phnsw(PhnswParams::default())) as Arc<dyn AnnEngine>);
+    router.register(
+        "phnsw-xla",
+        Arc::new(XlaPhnswEngine::new(
+            Arc::new(w.phnsw(PhnswParams::default())),
+            xla,
+            w.base.clone(),
+            16,
+        )),
+    );
+
+    // --- serve the full query set through the coordinator -------------
+    let server = Server::start(ServerConfig { workers: 4, ..Default::default() }, Arc::new(router));
+    let handle = server.handle();
+    println!("[3] serving {} queries × 3 engines through the coordinator...", nq);
+    let mut results: std::collections::BTreeMap<&str, Vec<Vec<u32>>> = Default::default();
+    let t0 = std::time::Instant::now();
+    for engine in ["hnsw", "phnsw", "phnsw-xla"] {
+        let mut per_engine = Vec::with_capacity(nq);
+        for qi in 0..nq {
+            let mut q = Query::new(w.queries.row(qi).to_vec());
+            q.engine = Some(engine.to_string());
+            let res = handle.query_blocking(q)?;
+            per_engine.push(res.neighbors.iter().map(|n| n.id).collect::<Vec<u32>>());
+        }
+        results.insert(engine, per_engine);
+    }
+    let serve_elapsed = t0.elapsed();
+    println!(
+        "    done in {serve_elapsed:.2?} → {:.0} QPS aggregate\n{}",
+        (3 * nq) as f64 / serve_elapsed.as_secs_f64(),
+        server.stats().render()
+    );
+
+    // --- recall verification -------------------------------------------
+    println!("[4] recall@10 vs exact ground truth:");
+    for (engine, res) in &results {
+        let r = recall_at_k(res, &w.gt, 10);
+        println!("    {engine:<10} {r:.3}");
+        assert!(r > 0.85, "{engine} recall {r} below threshold");
+    }
+    // The XLA rerank must agree with the native engine on the result SET
+    // (distances recomputed through PJRT, same candidates).
+    let native = &results["phnsw"];
+    let xla_res = &results["phnsw-xla"];
+    let mut agree = 0usize;
+    for (a, b) in native.iter().zip(xla_res) {
+        let sa: std::collections::HashSet<_> = a.iter().collect();
+        let sb: std::collections::HashSet<_> = b.iter().collect();
+        if sa == sb {
+            agree += 1;
+        }
+    }
+    println!(
+        "    native vs XLA result-set agreement: {agree}/{} queries",
+        native.len()
+    );
+    assert!(agree as f64 >= 0.95 * native.len() as f64);
+    server.shutdown();
+
+    // --- processor simulation (headline metric) ------------------------
+    println!("\n[5] pHNSW processor simulation (paper Table III / Fig. 5):");
+    let p_traces = w.phnsw_traces(PhnswParams::default(), nq.min(200));
+    let h_traces = w.hnsw_traces(SearchParams::default(), nq.min(200));
+    let cpu_qps = w.evaluate(&w.hnsw(SearchParams::default()), 10).qps;
+    for dram in [DramConfig::ddr4(), DramConfig::hbm()] {
+        let std_sim = w.simulate(EngineKind::HnswStd, &h_traces, dram.clone());
+        let ours = w.simulate(EngineKind::Phnsw, &p_traces, dram.clone());
+        println!(
+            "    [{:<6}] HNSW-Std {:>8.0} QPS | pHNSW {:>8.0} QPS ({:.2}× vs HNSW-CPU {:.0}) | energy −{:.1}%",
+            dram.name,
+            std_sim.qps,
+            ours.qps,
+            ours.qps / cpu_qps,
+            cpu_qps,
+            100.0 * (1.0 - ours.mean_energy.total_pj() / std_sim.mean_energy.total_pj()),
+        );
+    }
+    println!("\n=== end-to-end driver complete: all layers composed ===");
+    Ok(())
+}

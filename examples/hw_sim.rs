@@ -1,0 +1,89 @@
+//! Hardware walk-through: drive the pHNSW processor's functional units on
+//! one real hop of a real search, then cycle-simulate the whole workload
+//! on all three database layouts × both DRAM standards (the full Table
+//! III / Fig. 5 machinery, narrated).
+//!
+//! Run: `cargo run --release --example hw_sim`
+
+use phnsw::dram::DramConfig;
+use phnsw::hw::dist_unit::{DistH, DistL, MinH};
+use phnsw::hw::ksort::ksort_topk;
+use phnsw::hw::EngineKind;
+use phnsw::search::{PhnswParams, SearchParams};
+use phnsw::workbench::{Workbench, WorkbenchConfig};
+
+fn main() -> phnsw::Result<()> {
+    let w = Workbench::assemble(WorkbenchConfig {
+        n_base: 10_000,
+        n_queries: 100,
+        ..WorkbenchConfig::default()
+    })?;
+
+    // ---- one hop through the functional units (§IV-C dataflow) --------
+    let q_high = w.queries.row(0);
+    let mut q_pca = vec![0f32; w.cfg.dim_low];
+    w.pca.project(q_high, &mut q_pca);
+
+    let ep = w.graph.entry_point();
+    let nbrs = w.graph.neighbors(ep, 0);
+    println!("hop at entry point {ep}: {} neighbors at layer 0", nbrs.len());
+
+    // Dist.L: score the DMA'd low-dim neighbor tile.
+    let mut tile = Vec::new();
+    for &nb in nbrs {
+        tile.extend_from_slice(w.base_low.row(nb as usize));
+    }
+    let (dists_low, dl_cycles) = DistL::default().run(&q_pca, &tile, w.cfg.dim_low);
+    println!("Dist.L scored {} lanes in {dl_cycles} cycles", dists_low.len());
+
+    // kSort.L: comparator-matrix top-k (k = 16 at layer 0).
+    let k = 16.min(dists_low.len());
+    let survivors = ksort_topk(&dists_low, k);
+    println!(
+        "kSort.L top-{k} (7 cycles per 16-block): best low-dim d={:.1} → neighbor {}",
+        survivors[0].0,
+        nbrs[survivors[0].1 as usize]
+    );
+
+    // Dist.H + Min.H on the survivors' high-dim rows (step 5).
+    let dist_h = DistH::default();
+    let mut highs = Vec::new();
+    let mut dh_cycles = 0;
+    for &(_, slot) in &survivors {
+        let id = nbrs[slot as usize];
+        let (d, c) = dist_h.run(q_high, w.base.row(id as usize));
+        highs.push(d);
+        dh_cycles += c;
+    }
+    let (best, _) = MinH.run(&highs);
+    let (slot, d) = best.unwrap();
+    println!(
+        "Dist.H reranked {k} survivors in {dh_cycles} cycles; Min.H → neighbor {} at d={:.0}\n",
+        nbrs[survivors[slot].1 as usize],
+        d
+    );
+
+    // ---- whole-workload cycle simulation ------------------------------
+    let p_traces = w.phnsw_traces(PhnswParams::default(), 50);
+    let h_traces = w.hnsw_traces(SearchParams::default(), 50);
+    println!("cycle simulation (50 queries):");
+    for dram in [DramConfig::ddr4(), DramConfig::hbm()] {
+        for (engine, traces) in [
+            (EngineKind::HnswStd, &h_traces),
+            (EngineKind::PhnswSep, &p_traces),
+            (EngineKind::Phnsw, &p_traces),
+        ] {
+            let sim = w.simulate(engine, traces, dram.clone());
+            println!(
+                "  {:<14} [{:<6}] {:>9.0} QPS  {:>7.2} µJ/query  dram {:>4.1}%  row-hits {:>4.1}%",
+                sim.engine.label(),
+                sim.dram_name,
+                sim.qps,
+                sim.mean_energy.total_pj() / 1e6,
+                100.0 * sim.mean_energy.dram_share(),
+                100.0 * sim.dram.hit_rate()
+            );
+        }
+    }
+    Ok(())
+}

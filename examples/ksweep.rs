@@ -1,0 +1,45 @@
+//! Filter-size selection study (the §III-B methodology): sweep k at
+//! layer 0 and layer 1, report Recall@10, CPU QPS, simulated processor
+//! QPS, and the high-dim traffic — the data behind Fig. 2 and the paper's
+//! choice of k = 16/8/3.
+//!
+//! Run: `cargo run --release --example ksweep`
+
+use phnsw::dram::DramConfig;
+use phnsw::hw::EngineKind;
+use phnsw::search::PhnswParams;
+use phnsw::workbench::{Workbench, WorkbenchConfig};
+
+fn main() -> phnsw::Result<()> {
+    let w = Workbench::assemble(WorkbenchConfig {
+        n_base: 20_000,
+        n_queries: 300,
+        ..WorkbenchConfig::default()
+    })?;
+
+    println!("k(L0) sweep with k(L1)=8 (paper Fig. 2b):");
+    println!("{:>5} {:>10} {:>10} {:>12} {:>14}", "k0", "recall@10", "cpu QPS", "sim QPS/HBM", "highdim/query");
+    for k0 in [4usize, 8, 10, 12, 14, 16, 18, 20] {
+        let params = PhnswParams::with_k01(k0, 8);
+        let eval = w.evaluate(&w.phnsw(params.clone()), 10);
+        let traces = w.phnsw_traces(params, 100);
+        let sim = w.simulate(EngineKind::Phnsw, &traces, DramConfig::hbm());
+        let highdim = sim.stats.highdim_dists as f64 / traces.len() as f64;
+        println!(
+            "{k0:>5} {:>10.3} {:>10.0} {:>12.0} {:>14.1}",
+            eval.recall, eval.qps, sim.qps, highdim
+        );
+    }
+
+    println!("\nk(L1) sweep with k(L0)=16 (paper Fig. 2a):");
+    println!("{:>5} {:>10} {:>10} {:>12}", "k1", "recall@10", "cpu QPS", "sim QPS/HBM");
+    for k1 in [2usize, 3, 4, 6, 8, 10, 12] {
+        let params = PhnswParams::with_k01(16, k1);
+        let eval = w.evaluate(&w.phnsw(params.clone()), 10);
+        let sim = w.simulate(EngineKind::Phnsw, &w.phnsw_traces(params, 100), DramConfig::hbm());
+        println!("{k1:>5} {:>10.3} {:>10.0} {:>12.0}", eval.recall, eval.qps, sim.qps);
+    }
+
+    println!("\npaper's selection: k(L0)=16, k(L1)=8, k(L2..5)=3 → recall@10 ≈ 0.92");
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Quickstart: build an index over a synthetic SIFT-like corpus, run the
+//! paper's pHNSW search next to plain HNSW, and compare recall and the
+//! high-dimensional traffic the PCA filter saves.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use phnsw::search::{AnnEngine, PhnswParams, SearchParams};
+use phnsw::workbench::{Workbench, WorkbenchConfig};
+
+fn main() -> phnsw::Result<()> {
+    // 1. Assemble the stack: corpus → PCA(128→15) → HNSW graph.
+    let w = Workbench::assemble(WorkbenchConfig {
+        n_base: 10_000,
+        n_queries: 200,
+        ..WorkbenchConfig::default()
+    })?;
+    println!(
+        "corpus: {}×{}d | graph: {} levels | PCA 128→15 keeps {:.0}% variance",
+        w.base.len(),
+        w.base.dim(),
+        w.graph.max_level() + 1,
+        100.0 * w.pca.explained_variance_ratio()
+    );
+
+    // 2. Two engines over the same graph.
+    let hnsw = w.hnsw(SearchParams::default());
+    let phnsw = w.phnsw(PhnswParams::default()); // k = 16/8/3 per layer
+
+    // 3. One query, side by side.
+    let q = w.queries.row(0);
+    let (h_res, h_stats) = hnsw.search_with_stats(q);
+    let (p_res, p_stats) = phnsw.search_with_stats(q);
+    println!("\nquery 0 — top-5 of each:");
+    for i in 0..5.min(h_res.len()).min(p_res.len()) {
+        println!(
+            "  hnsw: id={:<7} d={:<10.0} | phnsw: id={:<7} d={:.0}",
+            h_res[i].id, h_res[i].dist, p_res[i].id, p_res[i].dist
+        );
+    }
+    println!(
+        "\nhigh-dim distance computations: hnsw={}  phnsw={}  ({:.1}× fewer — the paper's filter at work)",
+        h_stats.highdim_dists,
+        p_stats.highdim_dists,
+        h_stats.highdim_dists as f64 / p_stats.highdim_dists.max(1) as f64
+    );
+
+    // 4. Whole query set: recall + throughput.
+    let he = w.evaluate(&hnsw, 10);
+    let pe = w.evaluate(&phnsw, 10);
+    println!(
+        "\nrecall@10: hnsw={:.3} phnsw={:.3} (paper operating point: 0.92)\nsingle-thread QPS: hnsw={:.0} phnsw={:.0}",
+        he.recall, pe.recall, he.qps, pe.qps
+    );
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Serving scenario: run the L3 coordinator (dynamic batcher + router +
+//! worker pool) under concurrent client load, with both engines
+//! registered and round-robin A/B routing — the deployment shape the
+//! paper's processor would slot into as a lookaside accelerator.
+//!
+//! Run: `cargo run --release --example serve_queries`
+
+use phnsw::coordinator::{Query, RoutePolicy, Router, Server, ServerConfig};
+use phnsw::search::{AnnEngine, PhnswParams, SearchParams};
+use phnsw::workbench::{Workbench, WorkbenchConfig};
+use std::sync::Arc;
+
+fn main() -> phnsw::Result<()> {
+    let w = Arc::new(Workbench::assemble(WorkbenchConfig {
+        n_base: 10_000,
+        n_queries: 500,
+        ..WorkbenchConfig::default()
+    })?);
+
+    // Register both engines; round-robin splits traffic for an A/B view.
+    let mut router = Router::new(RoutePolicy::RoundRobin);
+    router.register("hnsw", Arc::new(w.hnsw(SearchParams::default())) as Arc<dyn AnnEngine>);
+    router.register("phnsw", Arc::new(w.phnsw(PhnswParams::default())) as Arc<dyn AnnEngine>);
+
+    let server = Server::start(ServerConfig { workers: 4, ..Default::default() }, Arc::new(router));
+    let handle = server.handle();
+
+    // 8 concurrent clients, 500 requests each.
+    const CLIENTS: usize = 8;
+    const PER_CLIENT: usize = 500;
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..CLIENTS {
+            let h = handle.clone();
+            let w = w.clone();
+            s.spawn(move || {
+                for i in 0..PER_CLIENT {
+                    let qi = (c * PER_CLIENT + i) % w.queries.len();
+                    let mut q = Query::new(w.queries.row(qi).to_vec());
+                    q.topk = 10;
+                    let res = h.query_blocking(q).expect("query failed");
+                    assert_eq!(res.neighbors.len(), 10);
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed();
+
+    println!(
+        "served {} queries from {CLIENTS} clients in {elapsed:.2?} → {:.0} QPS aggregate",
+        CLIENTS * PER_CLIENT,
+        (CLIENTS * PER_CLIENT) as f64 / elapsed.as_secs_f64()
+    );
+    println!("{}", server.stats().render());
+    server.shutdown();
+    Ok(())
+}

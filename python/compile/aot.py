@@ -1,0 +1,128 @@
+"""AOT pipeline: lower the Layer-2 entry points to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``). The rust runtime loads the
+text with ``HloModuleProto::from_text_file`` and compiles it on the PJRT
+CPU client.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits protos with 64-bit instruction ids that the crate's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids.
+See /opt/xla-example/README.md.
+
+Artifacts (shapes fixed at the paper's operating point, params.rs):
+
+  project.hlo.txt      (16,128)q × (15,128)comp × (128,)mean → (16,15)
+  filter_l0.hlo.txt    (15,)q × (32,15)nb × (32,)mask → top-16 vals+idx
+  filter_l1.hlo.txt    (15,)q × (16,15)nb × (16,)mask → top-8  vals+idx
+  filter_upper.hlo.txt (15,)q × (16,15)nb × (16,)mask → top-3  vals+idx
+  rerank16.hlo.txt     (128,)q × (16,128)cands → (16,) dists + argmin
+  batch_rerank.hlo.txt (8,128)Q × (8,16,128)C → (8,16) dists
+
+Each artifact gets a sibling ``.meta`` line-format descriptor, and
+``manifest.txt`` indexes them all for the rust ArtifactRegistry.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+DIM_HIGH = 128
+DIM_LOW = 15
+M0 = 32
+M = 16
+K_L0 = 16
+K_L1 = 8
+K_UPPER = 3
+PROJECT_BATCH = 16
+RERANK_BATCH = 8
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def entries():
+    """(name, fn, example_args) for every artifact."""
+    return [
+        (
+            "project",
+            lambda q, c, m: model.project(q, c, m),
+            (f32(PROJECT_BATCH, DIM_HIGH), f32(DIM_LOW, DIM_HIGH), f32(DIM_HIGH)),
+        ),
+        (
+            "filter_l0",
+            lambda q, nb, v: model.filter_step(q, nb, v, K_L0),
+            (f32(DIM_LOW), f32(M0, DIM_LOW), f32(M0)),
+        ),
+        (
+            "filter_l1",
+            lambda q, nb, v: model.filter_step(q, nb, v, K_L1),
+            (f32(DIM_LOW), f32(M, DIM_LOW), f32(M)),
+        ),
+        (
+            "filter_upper",
+            lambda q, nb, v: model.filter_step(q, nb, v, K_UPPER),
+            (f32(DIM_LOW), f32(M, DIM_LOW), f32(M)),
+        ),
+        (
+            "rerank16",
+            lambda q, c: model.rerank(q, c),
+            (f32(DIM_HIGH), f32(K_L0, DIM_HIGH)),
+        ),
+        (
+            "batch_rerank",
+            model.rerank_batch,
+            (f32(RERANK_BATCH, DIM_HIGH), f32(RERANK_BATCH, K_L0, DIM_HIGH)),
+        ),
+        (
+            "fused_hop",
+            lambda q, qp, nb, v, c: model.fused_hop(q, qp, nb, v, c, K_L0),
+            (f32(DIM_HIGH), f32(DIM_LOW), f32(M0, DIM_LOW), f32(M0), f32(K_L0, DIM_HIGH)),
+        ),
+    ]
+
+
+def shape_str(s):
+    return "x".join(str(d) for d in s.shape) or "scalar"
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for name, fn, example in entries():
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        inputs = ";".join(shape_str(s) for s in example)
+        manifest.append(f"{name}\t{name}.hlo.txt\t{inputs}")
+        print(f"  {name:<14} {len(text):>8} chars  inputs={inputs}")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("# name\tfile\tinput-shapes (f32)\n")
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

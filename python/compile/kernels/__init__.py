@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels — the paper's compute units in TPU terms.
+
+| paper unit | kernel | file |
+|------------|--------|------|
+| Dist.L     | `dist_l`      | dist_l.py |
+| kSort.L    | `ksort_topk`  | ksort_topk.py |
+| Dist.H     | `dist_h`      | dist_h.py |
+| PCA step ① | `pca_project` | pca_project.py |
+
+All kernels run with `interpret=True` (CPU PJRT cannot execute Mosaic
+custom-calls); `ref.py` holds the pure-jnp oracles they are tested against.
+"""
+
+from .dist_h import dist_h
+from .dist_l import dist_l, LANES
+from .ksort_topk import ksort_topk
+from .pca_project import pca_project, TILE_B
+
+__all__ = ["dist_h", "dist_l", "ksort_topk", "pca_project", "LANES", "TILE_B"]

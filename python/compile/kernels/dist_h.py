@@ -1,0 +1,44 @@
+"""Dist.H — high-dimensional rerank distances as a Pallas kernel.
+
+Hardware adaptation: the ASIC's Dist.H streams one 128-dim vector at a
+time through a MAC array. On a TPU the natural formulation routes the
+inner product through the MXU instead:
+
+    ‖q − c‖² = ‖q‖² + ‖c‖² − 2·(c @ q)
+
+with the candidate tile (K × 128 — the top-k survivors the DMA staged)
+resident in VMEM and `c @ q` a (K,128)×(128,1) matmul feeding the systolic
+array. For the ≤ 32-candidate shapes used here the norms + correction run
+on the VPU in the same kernel invocation (one fused pass, no HBM round
+trip), mirroring how Min.H consumes Dist.H results register-to-register.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dist_h_kernel(q_ref, c_ref, o_ref):
+    q = q_ref[...]                  # (1, D)
+    c = c_ref[...]                  # (K, D)
+    # MXU path: inner products as a matmul against the query column.
+    dots = jnp.dot(c, q.T)[:, 0]    # (K,)
+    qq = jnp.sum(q * q)
+    cc = jnp.sum(c * c, axis=-1)
+    d = qq + cc - 2.0 * dots
+    # Clamp tiny negatives from the expansion (never hurts exactness
+    # beyond float32 rounding, keeps distances valid for sqrt callers).
+    o_ref[...] = jnp.maximum(d, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dist_h(q, cands, *, interpret=True):
+    """Squared L2 distances from `q` (D,) to `cands` (K, D)."""
+    k, d = cands.shape
+    return pl.pallas_call(
+        _dist_h_kernel,
+        out_shape=jax.ShapeDtypeStruct((k,), q.dtype),
+        interpret=interpret,
+    )(q[None, :], cands)

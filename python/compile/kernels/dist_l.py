@@ -1,0 +1,55 @@
+"""Dist.L — the 16-lane low-dimensional distance unit as a Pallas kernel.
+
+Hardware mapping (DESIGN.md §Hardware-Adaptation): the ASIC scores 16
+neighbors in parallel, one PCA dimension per cycle per lane, reading the
+neighbor block that the DMA staged in SPM. Here the same tiling is
+expressed with a BlockSpec: the grid walks the neighbor list in
+LANES-row tiles, each tile resident in VMEM (the TPU's SPM analogue),
+and the subtract–square–reduce runs on the VPU.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the rust
+runtime's CPU client runs bit-identically.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lane count of the Dist.L unit (§IV-B3: 16 points simultaneously).
+LANES = 16
+
+
+def _dist_l_kernel(q_ref, nb_ref, o_ref):
+    """One grid step: score a (LANES, d) neighbor tile against q (1, d)."""
+    q = q_ref[...]          # (1, d) broadcast row
+    nb = nb_ref[...]        # (LANES, d) tile in VMEM
+    diff = nb - q
+    o_ref[...] = jnp.sum(diff * diff, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dist_l(q_pca, neighbors, *, interpret=True):
+    """Squared L2 distances from `q_pca` (d,) to `neighbors` (N, d).
+
+    N must be a multiple of LANES (the DB layout pads neighbor blocks to
+    lane width, like the capacity-padded index-table entries).
+    """
+    n, d = neighbors.shape
+    assert n % LANES == 0, f"neighbor count {n} must be a multiple of {LANES}"
+    grid = (n // LANES,)
+    return pl.pallas_call(
+        _dist_l_kernel,
+        grid=grid,
+        in_specs=[
+            # q is re-fetched whole each step (one VMEM row).
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            # neighbor tile i: rows [i*LANES, (i+1)*LANES).
+            pl.BlockSpec((LANES, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((LANES,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), q_pca.dtype),
+        interpret=interpret,
+    )(q_pca[None, :], neighbors)

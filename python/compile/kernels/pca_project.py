@@ -1,0 +1,48 @@
+"""PCA projection (step ① of Fig. 1(c)) as a Pallas kernel.
+
+Batched query projection: (B, 128) → (B, 15). This is a small matmul —
+`(q − mean) @ componentsᵀ` — tiled so each grid step keeps one TILE_B-row
+query tile plus the whole 128×15 component matrix (7.5 KB) in VMEM and
+issues a single MXU matmul. The mean subtraction fuses into the same pass.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Query rows per grid step.
+TILE_B = 8
+
+
+def _project_kernel(q_ref, comp_t_ref, mean_ref, o_ref):
+    q = q_ref[...]              # (TILE_B, D)
+    comp_t = comp_t_ref[...]    # (D, d)
+    mean = mean_ref[...]        # (1, D)
+    o_ref[...] = jnp.dot(q - mean, comp_t)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pca_project(queries, components, mean, *, interpret=True):
+    """Project `queries` (B, D) with `components` (d, D), `mean` (D,).
+
+    B must be a multiple of TILE_B (the batcher pads to tile width).
+    """
+    b, dim = queries.shape
+    d = components.shape[0]
+    assert components.shape[1] == dim and mean.shape == (dim,)
+    assert b % TILE_B == 0, f"batch {b} must be a multiple of {TILE_B}"
+    grid = (b // TILE_B,)
+    return pl.pallas_call(
+        _project_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_B, dim), lambda i: (i, 0)),
+            pl.BlockSpec((dim, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, dim), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_B, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), queries.dtype),
+        interpret=interpret,
+    )(queries, components.T, mean[None, :])

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness contract: each kernel in this package must match
+its `ref_*` twin to float32 tolerance under `interpret=True`. The pytest
+suite (and its hypothesis sweeps) enforces that; the rust side additionally
+cross-checks the AOT artifacts against its own scalar implementations.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_pca_project(queries, components, mean):
+    """Project rows of `queries` (B, D) with `components` (d, D) and `mean` (D,).
+
+    Returns (B, d): ``(q - mean) @ components.T``.
+    """
+    return (queries - mean[None, :]) @ components.T
+
+
+def ref_dist_l(q_pca, neighbors):
+    """Squared L2 distances from `q_pca` (d,) to rows of `neighbors` (N, d)."""
+    diff = neighbors - q_pca[None, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def ref_dist_h(q, cands):
+    """Squared L2 distances from `q` (D,) to rows of `cands` (K, D)."""
+    diff = cands - q[None, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def ref_ranks(dists):
+    """Comparison-matrix ranks (kSort.L, Fig. 3(c)).
+
+    rank[i] = #{j : d[i] > d[j] or (d[i] == d[j] and i > j)} — the count of
+    elements that i beats, with index tie-breaking; always a permutation.
+    """
+    n = dists.shape[0]
+    di = dists[:, None]
+    dj = dists[None, :]
+    i_idx = jnp.arange(n)[:, None]
+    j_idx = jnp.arange(n)[None, :]
+    beats = (di > dj) | ((di == dj) & (i_idx > j_idx))
+    return jnp.sum(beats.astype(jnp.int32), axis=1)
+
+
+def ref_ksort_topk(dists, k):
+    """Top-k smallest distances via rank-decode: (values (k,), indices (k,))."""
+    r = ref_ranks(dists)
+    n = dists.shape[0]
+    onehot = (r[None, :] == jnp.arange(k)[:, None]).astype(dists.dtype)  # (k, n)
+    vals = onehot @ dists
+    idx = (onehot @ jnp.arange(n, dtype=dists.dtype)).astype(jnp.int32)
+    return vals, idx
+
+
+def ref_filter_step(q_pca, neighbors, k):
+    """Fused hop filter: Dist.L then kSort.L top-k."""
+    return ref_ksort_topk(ref_dist_l(q_pca, neighbors), k)
+
+
+def ref_rerank(q, cands):
+    """Dist.H + Min.H: distances (K,) and the argmin index (int32 scalar)."""
+    d = ref_dist_h(q, cands)
+    return d, jnp.argmin(d).astype(jnp.int32)
+
+
+def ref_batch_rerank(queries, cands):
+    """Batched rerank for the coordinator: (B, D) × (B, K, D) → (B, K)."""
+    diff = cands - queries[:, None, :]
+    return jnp.sum(diff * diff, axis=-1)

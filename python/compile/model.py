@@ -1,0 +1,85 @@
+"""Layer-2 JAX model: the pHNSW per-hop compute graph, composed from the
+Layer-1 Pallas kernels.
+
+Three entry points get AOT-compiled (aot.py) and loaded by the rust
+runtime; Python never runs on the request path:
+
+* ``filter_step`` — one hop of Algorithm 1 steps ②+③-prep: Dist.L over a
+  padded neighbor tile + kSort.L top-k. The rust engine hands it the
+  neighbor block exactly as DMA'd from the inline DB layout.
+* ``rerank`` — Dist.H + Min.H over the k survivors' high-dim rows.
+* ``project`` — batched query PCA projection (step ①), used by the
+  coordinator's ingest path.
+
+Every function returns a tuple (lowering uses ``return_tuple=True``; the
+rust side unwraps with ``to_tuple``).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import dist_h, dist_l, ksort_topk, pca_project
+
+# Padding value for unused neighbor slots: any real distance beats it, so
+# padded lanes can never enter the top-k (matches the capacity-padded
+# index-table entries of the DB layout).
+PAD_DIST = jnp.float32(3.4e38)
+
+
+def filter_step(q_pca, neighbors, valid, k):
+    """One pHNSW hop filter.
+
+    Args:
+      q_pca: (d,) projected query.
+      neighbors: (N, d) lane-padded low-dim neighbor tile (N % 16 == 0).
+      valid: (N,) float32 mask — 1.0 for real neighbors, 0.0 for padding.
+      k: static filter size.
+
+    Returns:
+      (values (k,), indices (k,)): the k smallest masked distances and the
+      tile-local indices of their neighbors.
+    """
+    d = dist_l(q_pca, neighbors)
+    d = jnp.where(valid > 0.5, d, PAD_DIST)
+    vals, idx = ksort_topk(d, k)
+    return vals, idx
+
+
+def rerank(q, cands):
+    """Dist.H + Min.H over the survivors.
+
+    Args:
+      q: (D,) original-space query.
+      cands: (K, D) survivors' high-dim rows.
+
+    Returns:
+      (dists (K,), best (int32)): squared distances and the argmin slot.
+    """
+    dists = dist_h(q, cands)
+    best = jnp.argmin(dists).astype(jnp.int32)
+    return dists, best
+
+
+def project(queries, components, mean):
+    """Batched PCA projection (B, D) → (B, d)."""
+    return (pca_project(queries, components, mean),)
+
+
+def rerank_batch(queries, cands):
+    """Coordinator batch rerank: (B, D) × (B, K, D) → (B, K) squared
+    distances. Plain jnp (XLA already fuses this perfectly; a Pallas tile
+    would only re-state the obvious) — the kernels stay for the per-hop
+    path where the tiling mirrors the hardware."""
+    diff = cands - queries[:, None, :]
+    return (jnp.sum(diff * diff, axis=-1),)
+
+
+def fused_hop(q, q_pca, neighbors, valid, cands, k):
+    """The full §IV-C dataflow for one hop in a single lowered module:
+    filter (steps ②–③) + rerank (step ⑤) — the shape the pHNSW processor
+    pipelines in hardware. `cands` are the high-dim rows the DMA fetched
+    for the *previous* hop's survivors, so the two halves are independent
+    and XLA can schedule them in parallel.
+    """
+    vals, idx = filter_step(q_pca, neighbors, valid, k)
+    dists, best = rerank(q, cands)
+    return vals, idx, dists, best

@@ -1,0 +1,210 @@
+"""Kernel-vs-oracle correctness: every Pallas kernel against ref.py,
+with hypothesis sweeps over shapes and value distributions.
+
+This is the CORE correctness signal for Layer 1 — the same computations
+the rust runtime executes from the AOT artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dist_h, dist_l, ksort_topk, pca_project, LANES, TILE_B
+from compile.kernels.ref import (
+    ref_dist_h,
+    ref_dist_l,
+    ref_ksort_topk,
+    ref_pca_project,
+    ref_ranks,
+)
+
+RTOL = 1e-5
+ATOL = 1e-3  # SIFT-scale values (0..255) squared → distances up to ~8e6
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- dist_l
+
+
+class TestDistL:
+    @pytest.mark.parametrize("n", [16, 32, 48, 64])
+    @pytest.mark.parametrize("d", [15, 8, 32])
+    def test_matches_ref(self, n, d):
+        r = rng(n * 100 + d)
+        q = r.uniform(-50, 50, size=(d,)).astype(np.float32)
+        nb = r.uniform(0, 255, size=(n, d)).astype(np.float32)
+        got = dist_l(jnp.asarray(q), jnp.asarray(nb))
+        want = ref_dist_l(jnp.asarray(q), jnp.asarray(nb))
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_matches_numpy(self):
+        r = rng(7)
+        q = r.normal(size=(15,)).astype(np.float32)
+        nb = r.normal(size=(32, 15)).astype(np.float32)
+        want = ((nb - q[None, :]) ** 2).sum(axis=1)
+        got = np.asarray(dist_l(jnp.asarray(q), jnp.asarray(nb)))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_rejects_unpadded(self):
+        with pytest.raises(AssertionError):
+            dist_l(jnp.zeros((15,)), jnp.zeros((17, 15)))
+
+    def test_zero_distance_to_self(self):
+        q = jnp.arange(15, dtype=jnp.float32)
+        nb = jnp.tile(q, (LANES, 1))
+        got = dist_l(q, nb)
+        np.testing.assert_allclose(got, np.zeros(LANES), atol=1e-6)
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        blocks=st.integers(1, 4),
+        d=st.integers(2, 24),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, blocks, d, seed):
+        r = rng(seed)
+        n = blocks * LANES
+        q = r.uniform(-10, 10, size=(d,)).astype(np.float32)
+        nb = r.uniform(-10, 10, size=(n, d)).astype(np.float32)
+        got = dist_l(jnp.asarray(q), jnp.asarray(nb))
+        want = ref_dist_l(jnp.asarray(q), jnp.asarray(nb))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------ ksort_topk
+
+
+class TestKsortTopk:
+    @pytest.mark.parametrize("n,k", [(16, 16), (16, 8), (32, 16), (16, 3), (32, 1)])
+    def test_matches_ref(self, n, k):
+        r = rng(n * 10 + k)
+        d = r.uniform(0, 1e6, size=(n,)).astype(np.float32)
+        gv, gi = ksort_topk(jnp.asarray(d), k)
+        wv, wi = ref_ksort_topk(jnp.asarray(d), k)
+        np.testing.assert_allclose(gv, wv, rtol=RTOL, atol=ATOL)
+        np.testing.assert_array_equal(gi, wi)
+
+    @pytest.mark.parametrize("n,k", [(16, 16), (32, 8)])
+    def test_matches_argsort(self, n, k):
+        r = rng(n + k)
+        d = r.uniform(0, 100, size=(n,)).astype(np.float32)
+        gv, gi = ksort_topk(jnp.asarray(d), k)
+        order = np.argsort(d, kind="stable")[:k]
+        np.testing.assert_array_equal(np.asarray(gi), order)
+        np.testing.assert_allclose(np.asarray(gv), d[order], rtol=1e-6)
+
+    def test_duplicates_tie_break_by_index(self):
+        d = jnp.asarray([2.0, 1.0, 2.0, 1.0] * 4, dtype=jnp.float32)
+        gv, gi = ksort_topk(d, 4)
+        np.testing.assert_array_equal(np.asarray(gi), [1, 3, 5, 7])
+        np.testing.assert_allclose(np.asarray(gv), [1.0, 1.0, 1.0, 1.0])
+
+    def test_ranks_are_permutation(self):
+        r = rng(3)
+        d = jnp.asarray(r.integers(0, 4, size=(16,)).astype(np.float32))
+        ranks = np.asarray(ref_ranks(d))
+        assert sorted(ranks.tolist()) == list(range(16))
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        n=st.sampled_from([16, 32, 48]),
+        k=st.integers(1, 16),
+        coarse=st.booleans(),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_vs_argsort(self, n, k, coarse, seed):
+        r = rng(seed)
+        if coarse:
+            d = r.integers(0, 5, size=(n,)).astype(np.float32)  # heavy ties
+        else:
+            d = r.uniform(0, 1e4, size=(n,)).astype(np.float32)
+        gv, gi = ksort_topk(jnp.asarray(d), k)
+        order = np.argsort(d, kind="stable")[:k]
+        np.testing.assert_array_equal(np.asarray(gi), order)
+        np.testing.assert_allclose(np.asarray(gv), d[order], rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------- dist_h
+
+
+class TestDistH:
+    @pytest.mark.parametrize("k", [1, 3, 8, 16, 32])
+    @pytest.mark.parametrize("d", [128, 64, 200])
+    def test_matches_ref(self, k, d):
+        r = rng(k * 1000 + d)
+        q = r.uniform(0, 255, size=(d,)).astype(np.float32)
+        c = r.uniform(0, 255, size=(k, d)).astype(np.float32)
+        got = dist_h(jnp.asarray(q), jnp.asarray(c))
+        want = ref_dist_h(jnp.asarray(q), jnp.asarray(c))
+        # MXU decomposition (‖a‖²+‖b‖²−2ab) loses a little precision on
+        # large-magnitude inputs: allow 1e-3 relative.
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1.0)
+
+    def test_non_negative(self):
+        r = rng(11)
+        q = r.uniform(0, 255, size=(128,)).astype(np.float32)
+        c = np.tile(q, (4, 1)).astype(np.float32)  # identical rows → d = 0
+        got = np.asarray(dist_h(jnp.asarray(q), jnp.asarray(c)))
+        assert (got >= 0).all()
+        np.testing.assert_allclose(got, np.zeros(4), atol=1.0)
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        k=st.integers(1, 24),
+        d=st.sampled_from([16, 96, 128]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis(self, k, d, seed):
+        r = rng(seed)
+        q = r.normal(scale=20.0, size=(d,)).astype(np.float32)
+        c = r.normal(scale=20.0, size=(k, d)).astype(np.float32)
+        got = dist_h(jnp.asarray(q), jnp.asarray(c))
+        want = ref_dist_h(jnp.asarray(q), jnp.asarray(c))
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=0.5)
+
+
+# ------------------------------------------------------------ pca_project
+
+
+class TestPcaProject:
+    @pytest.mark.parametrize("b", [8, 16, 32])
+    def test_matches_ref(self, b):
+        r = rng(b)
+        q = r.uniform(0, 255, size=(b, 128)).astype(np.float32)
+        comp = r.normal(size=(15, 128)).astype(np.float32)
+        mean = r.uniform(0, 255, size=(128,)).astype(np.float32)
+        got = pca_project(jnp.asarray(q), jnp.asarray(comp), jnp.asarray(mean))
+        want = ref_pca_project(jnp.asarray(q), jnp.asarray(comp), jnp.asarray(mean))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)
+
+    def test_rejects_unpadded_batch(self):
+        with pytest.raises(AssertionError):
+            pca_project(jnp.zeros((7, 128)), jnp.zeros((15, 128)), jnp.zeros((128,)))
+
+    def test_zero_after_centering(self):
+        mean = np.arange(128, dtype=np.float32)
+        q = np.tile(mean, (TILE_B, 1))
+        comp = rng(5).normal(size=(15, 128)).astype(np.float32)
+        got = np.asarray(pca_project(jnp.asarray(q), jnp.asarray(comp), jnp.asarray(mean)))
+        np.testing.assert_allclose(got, np.zeros((TILE_B, 15)), atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        tiles=st.integers(1, 4),
+        d_low=st.integers(2, 20),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis(self, tiles, d_low, seed):
+        r = rng(seed)
+        b = tiles * TILE_B
+        q = r.normal(size=(b, 64)).astype(np.float32)
+        comp = r.normal(size=(d_low, 64)).astype(np.float32)
+        mean = r.normal(size=(64,)).astype(np.float32)
+        got = pca_project(jnp.asarray(q), jnp.asarray(comp), jnp.asarray(mean))
+        want = ref_pca_project(jnp.asarray(q), jnp.asarray(comp), jnp.asarray(mean))
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)

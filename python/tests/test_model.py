@@ -1,0 +1,94 @@
+"""Layer-2 model tests: fused entry points, masking semantics, and the
+shape contracts the AOT artifacts freeze."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels.ref import ref_dist_l, ref_ksort_topk
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+class TestFilterStep:
+    def test_fullly_valid_matches_unmasked_ref(self):
+        r = rng(1)
+        q = jnp.asarray(r.uniform(-5, 5, size=(15,)).astype(np.float32))
+        nb = jnp.asarray(r.uniform(0, 255, size=(32, 15)).astype(np.float32))
+        valid = jnp.ones((32,), jnp.float32)
+        vals, idx = model.filter_step(q, nb, valid, 16)
+        wv, wi = ref_ksort_topk(ref_dist_l(q, nb), 16)
+        np.testing.assert_allclose(vals, wv, rtol=1e-5, atol=1e-3)
+        np.testing.assert_array_equal(idx, wi)
+
+    def test_padding_never_selected(self):
+        r = rng(2)
+        q = jnp.zeros((15,), jnp.float32)
+        nb = jnp.asarray(r.uniform(0, 255, size=(32, 15)).astype(np.float32))
+        valid = jnp.asarray((np.arange(32) < 20).astype(np.float32))
+        vals, idx = model.filter_step(q, nb, valid, 16)
+        assert (np.asarray(idx) < 20).all(), "padded lanes must not survive the filter"
+        assert (np.asarray(vals) < float(model.PAD_DIST)).all()
+
+    def test_k_larger_than_valid_exposes_pad(self):
+        # With only 2 valid neighbors and k=3, slot 2 must carry PAD_DIST —
+        # the rust engine drops those by value.
+        q = jnp.zeros((15,), jnp.float32)
+        nb = jnp.ones((16, 15), jnp.float32)
+        valid = jnp.asarray(([1.0, 1.0] + [0.0] * 14), dtype=jnp.float32)
+        vals, _ = model.filter_step(q, nb, valid, 3)
+        v = np.asarray(vals)
+        assert v[0] == pytest.approx(15.0)
+        assert v[1] == pytest.approx(15.0)
+        assert v[2] >= 1e38
+
+
+class TestRerank:
+    def test_distances_and_argmin(self):
+        r = rng(3)
+        q = jnp.asarray(r.uniform(0, 255, size=(128,)).astype(np.float32))
+        c = jnp.asarray(r.uniform(0, 255, size=(16, 128)).astype(np.float32))
+        dists, best = model.rerank(q, c)
+        want = np.sum((np.asarray(c) - np.asarray(q)[None, :]) ** 2, axis=1)
+        np.testing.assert_allclose(dists, want, rtol=1e-3, atol=1.0)
+        assert int(best) == int(np.argmin(want))
+
+    def test_batch_rerank_matches_loop(self):
+        r = rng(4)
+        Q = r.uniform(0, 255, size=(8, 128)).astype(np.float32)
+        C = r.uniform(0, 255, size=(8, 16, 128)).astype(np.float32)
+        (got,) = model.rerank_batch(jnp.asarray(Q), jnp.asarray(C))
+        for b in range(8):
+            want = np.sum((C[b] - Q[b][None, :]) ** 2, axis=1)
+            np.testing.assert_allclose(np.asarray(got)[b], want, rtol=1e-5, atol=1e-2)
+
+
+class TestFusedHop:
+    def test_matches_separate_calls(self):
+        r = rng(5)
+        q = jnp.asarray(r.uniform(0, 255, size=(128,)).astype(np.float32))
+        qp = jnp.asarray(r.uniform(-50, 50, size=(15,)).astype(np.float32))
+        nb = jnp.asarray(r.uniform(-50, 50, size=(32, 15)).astype(np.float32))
+        valid = jnp.ones((32,), jnp.float32)
+        c = jnp.asarray(r.uniform(0, 255, size=(16, 128)).astype(np.float32))
+        fv, fi, fd, fb = model.fused_hop(q, qp, nb, valid, c, 16)
+        sv, si = model.filter_step(qp, nb, valid, 16)
+        sd, sb = model.rerank(q, c)
+        np.testing.assert_allclose(fv, sv, rtol=1e-6)
+        np.testing.assert_array_equal(fi, si)
+        np.testing.assert_allclose(fd, sd, rtol=1e-6)
+        assert int(fb) == int(sb)
+
+
+class TestProject:
+    def test_tuple_contract(self):
+        r = rng(6)
+        q = jnp.asarray(r.uniform(0, 255, size=(16, 128)).astype(np.float32))
+        comp = jnp.asarray(r.normal(size=(15, 128)).astype(np.float32))
+        mean = jnp.asarray(r.uniform(0, 255, size=(128,)).astype(np.float32))
+        out = model.project(q, comp, mean)
+        assert isinstance(out, tuple) and len(out) == 1
+        assert out[0].shape == (16, 15)

@@ -1,0 +1,76 @@
+//! Ablation bench: the paper's §VI future-work directions, quantified —
+//! (a) multi-core pHNSW sharing one DRAM channel (bandwidth wall),
+//! (b) corpus scaling toward SIFT1B (log-QPS, linear DB footprint, DRAM
+//! capacity cliff), and (c) serving latency under open-loop Poisson load
+//! through the coordinator.
+//!
+//! Run: `cargo bench --bench abl_scaling`.
+
+mod common;
+
+use phnsw::coordinator::loadgen::{run_open_loop, LoadConfig};
+use phnsw::coordinator::{RoutePolicy, Router, Server, ServerConfig};
+use phnsw::db::LayoutKind;
+use phnsw::dram::DramConfig;
+use phnsw::hw::scaling::{corpus_scaling, multicore};
+use phnsw::hw::EngineKind;
+use phnsw::search::{AnnEngine, PhnswParams};
+use std::sync::Arc;
+
+fn main() {
+    let w = common::bench_workbench();
+    let traces = w.phnsw_traces(PhnswParams::default(), common::trace_limit());
+
+    println!("(a) multi-core pHNSW, shared DRAM channel:");
+    for dram in [DramConfig::ddr4(), DramConfig::hbm()] {
+        let sim = w.simulate(EngineKind::Phnsw, &traces, dram.clone());
+        println!("  [{}] single-core {:.0} QPS", dram.name, sim.qps);
+        for p in multicore(&sim, &dram, &[1, 2, 4, 8, 16]) {
+            println!(
+                "    cores={:<3} {:>12.0} QPS  channel {:>5.1}% {}",
+                p.cores,
+                p.qps,
+                100.0 * p.dram_utilization,
+                if p.bandwidth_bound { "(bandwidth-bound)" } else { "" }
+            );
+        }
+    }
+
+    println!("\n(b) corpus scaling toward SIFT1B (inline layout, 64 GB DRAM):");
+    let sim = w.simulate(EngineKind::Phnsw, &traces, DramConfig::hbm());
+    let db = w.layout(LayoutKind::Inline).total_bytes();
+    for p in corpus_scaling(
+        w.cfg.n_base,
+        &sim,
+        db,
+        64u64 << 30,
+        &[w.cfg.n_base, 1_000_000, 10_000_000, 100_000_000, 1_000_000_000],
+    ) {
+        println!(
+            "    n={:<13} {:>10.0} QPS  db={:>8.1} GB  {}",
+            p.n,
+            p.qps,
+            p.db_bytes as f64 / (1u64 << 30) as f64,
+            if p.fits_dram { "fits" } else { "NEEDS PARTITIONING (paper §VI)" }
+        );
+    }
+
+    println!("\n(c) coordinator under open-loop Poisson load (pHNSW engine):");
+    let wb = Arc::new(w);
+    let mut router = Router::new(RoutePolicy::Default("phnsw".into()));
+    router.register("phnsw", Arc::new(wb.phnsw(PhnswParams::default())) as Arc<dyn AnnEngine>);
+    let server = Server::start(ServerConfig { workers: 2, ..Default::default() }, Arc::new(router));
+    for rate in [500.0, 2_000.0, 8_000.0] {
+        let mut report = run_open_loop(
+            &server.handle(),
+            &wb.queries,
+            &LoadConfig { rate_qps: rate, total: 400, seed: 42, engine: None },
+        );
+        let (p50, p95, p99) = report.latency.summary();
+        println!(
+            "    offered {:>6.0} QPS → goodput {:>7.0} QPS  p50={:>7.1}µs p95={:>8.1}µs p99={:>8.1}µs rejected={}",
+            rate, report.goodput_qps, p50, p95, p99, report.rejected
+        );
+    }
+    server.shutdown();
+}

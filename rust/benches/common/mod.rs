@@ -1,0 +1,51 @@
+//! Shared bench-harness plumbing (criterion is unavailable in the offline
+//! registry, so each bench is a `harness = false` main that prints the
+//! paper row/series it regenerates).
+//!
+//! Env knobs:
+//!   PHNSW_BENCH_N        base corpus size   (default 20000)
+//!   PHNSW_BENCH_QUERIES  query count        (default 200)
+//!   PHNSW_BENCH_TRACES   traced queries     (default 100)
+
+#![allow(dead_code)]
+use phnsw::workbench::{Workbench, WorkbenchConfig};
+
+/// Read an env-var usize with default.
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Assemble the bench workbench at the env-configured scale.
+pub fn bench_workbench() -> Workbench {
+    let cfg = WorkbenchConfig {
+        n_base: env_usize("PHNSW_BENCH_N", 20_000),
+        n_queries: env_usize("PHNSW_BENCH_QUERIES", 200),
+        ..WorkbenchConfig::default()
+    };
+    eprintln!(
+        "[bench] assembling workbench n={} queries={} (cached after first run)",
+        cfg.n_base, cfg.n_queries
+    );
+    Workbench::assemble(cfg).expect("workbench assembly")
+}
+
+/// Traced-query budget for simulations.
+pub fn trace_limit() -> usize {
+    env_usize("PHNSW_BENCH_TRACES", 100)
+}
+
+/// Time a closure over `iters` runs and report ns/iter (simple criterion
+/// stand-in for micro-kernels).
+pub fn time_it<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
+    // Warmup.
+    for _ in 0..iters.min(16) {
+        f();
+    }
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    println!("  {label:<44} {ns:>12.1} ns/iter");
+    ns
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerate **Fig. 2** — Recall@10 and QPS as functions of the
+//! per-layer filter sizes: (a) k(Layer1) with k(Layer0)=16, (b) k(Layer0)
+//! with k(Layer1)=8.
+//!
+//! Run: `cargo bench --bench fig2_ksweep`.
+
+mod common;
+
+fn main() {
+    let w = common::bench_workbench();
+    let out = phnsw::reports::fig2(&w, common::trace_limit());
+    println!("{out}");
+}

@@ -1,0 +1,24 @@
+//! Bench: regenerate **Fig. 4** — area breakdown of the pHNSW processor
+//! (0.739 mm² @ 65 nm), plus ablation points showing how the breakdown
+//! scales with the Dist.L lane count / kSort width.
+//!
+//! Run: `cargo bench --bench fig4_area`.
+
+use phnsw::area::AreaModel;
+use phnsw::hw::isa::CoreConfig;
+
+fn main() {
+    println!("{}", phnsw::reports::fig4());
+
+    println!("ablation — structural scaling of the filter units:");
+    for lanes in [8usize, 16, 32] {
+        let core = CoreConfig { dist_l_lanes: lanes, ksort_width: lanes, ..CoreConfig::default() };
+        let m = AreaModel::new(&core, phnsw::params::SPM_BYTES);
+        let filter = m.share("Dist.L") + m.share("kSort.L");
+        println!(
+            "  lanes={lanes:<3} total={:.3} mm²  Dist.L+kSort.L={:.1}%",
+            m.total_mm2(),
+            100.0 * filter
+        );
+    }
+}

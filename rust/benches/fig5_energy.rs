@@ -1,0 +1,14 @@
+//! Bench: regenerate **Fig. 5** — normalized energy of a single query
+//! search (HNSW-Std vs pHNSW-Sep vs pHNSW, DDR4 and HBM), with the
+//! DRAM/SPM/filter/core/static component shares.
+//!
+//! Run: `cargo bench --bench fig5_energy`.
+
+mod common;
+
+fn main() {
+    let w = common::bench_workbench();
+    let out = phnsw::reports::fig5(&w, common::trace_limit());
+    println!("{out}");
+    println!("{}", phnsw::reports::db_footprints(&w));
+}

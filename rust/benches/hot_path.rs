@@ -1,0 +1,70 @@
+//! Bench: hot-path micro-benchmarks for the §Perf optimization loop —
+//! distance kernels, the visited set, the comparator sort, the PCA
+//! projection, and a full pHNSW search. These are the numbers tracked in
+//! EXPERIMENTS.md §Perf (before/after each optimization).
+//!
+//! Run: `cargo bench --bench hot_path`.
+
+mod common;
+
+use phnsw::dataset::l2_sq_scalar;
+use phnsw::pca::PcaModel;
+use phnsw::rng::Pcg32;
+use phnsw::search::dist::{l2_sq, l2_sq_batch};
+use phnsw::search::visited::VisitedSet;
+use phnsw::search::{AnnEngine, PhnswParams, SearchParams};
+
+fn main() {
+    let mut rng = Pcg32::new(1);
+    let a: Vec<f32> = (0..128).map(|_| rng.gaussian()).collect();
+    let b: Vec<f32> = (0..128).map(|_| rng.gaussian()).collect();
+    let q15: Vec<f32> = (0..15).map(|_| rng.gaussian()).collect();
+    let block: Vec<f32> = (0..32 * 15).map(|_| rng.gaussian()).collect();
+    let mut out = vec![0f32; 32];
+
+    println!("distance kernels:");
+    common::time_it("l2_sq 128-dim (unrolled)", 1_000_000, || {
+        std::hint::black_box(l2_sq(std::hint::black_box(&a), std::hint::black_box(&b)));
+    });
+    common::time_it("l2_sq_scalar 128-dim (reference)", 1_000_000, || {
+        std::hint::black_box(l2_sq_scalar(std::hint::black_box(&a), std::hint::black_box(&b)));
+    });
+    common::time_it("l2_sq_batch 32×15 (Dist.L shape)", 500_000, || {
+        l2_sq_batch(std::hint::black_box(&q15), std::hint::black_box(&block), 15, &mut out);
+        std::hint::black_box(&out);
+    });
+
+    println!("visited set:");
+    let mut vs = VisitedSet::new(1_000_000);
+    common::time_it("clear (epoch bump, 1M slots)", 1_000_000, || {
+        vs.clear();
+    });
+    let mut i = 0u32;
+    common::time_it("insert+contains", 1_000_000, || {
+        i = i.wrapping_add(2_654_435_761) % 1_000_000;
+        std::hint::black_box(vs.insert(i));
+    });
+
+    println!("full-stack (small workbench):");
+    let w = common::bench_workbench();
+    let pca = PcaModel::fit(&w.base, 15, 3);
+    let qhigh = w.queries.row(0).to_vec();
+    let mut proj = vec![0f32; 15];
+    common::time_it("pca project 128→15", 200_000, || {
+        pca.project(std::hint::black_box(&qhigh), &mut proj);
+        std::hint::black_box(&proj);
+    });
+
+    let hnsw = w.hnsw(SearchParams::default());
+    let phnsw = w.phnsw(PhnswParams::default());
+    let nq = w.queries.len();
+    let mut qi = 0usize;
+    common::time_it("hnsw.search (ef=10)", 2_000, || {
+        qi = (qi + 1) % nq;
+        std::hint::black_box(hnsw.search(w.queries.row(qi)));
+    });
+    common::time_it("phnsw.search (paper k-schedule)", 2_000, || {
+        qi = (qi + 1) % nq;
+        std::hint::black_box(phnsw.search(w.queries.row(qi)));
+    });
+}

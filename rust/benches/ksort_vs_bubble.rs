@@ -1,0 +1,30 @@
+//! Bench: the §IV-B3 sorting claim — kSort.L's comparison-matrix sort
+//! completes 16 elements in 7 cycles where bubble sort needs 120
+//! (94.17 % improvement). Prints the hardware cycle model and the
+//! software wall-clock of both functional models.
+//!
+//! Run: `cargo bench --bench ksort_vs_bubble`.
+
+mod common;
+
+use phnsw::hw::ksort::{bubble_topk, ksort_topk};
+use phnsw::rng::Pcg32;
+
+fn main() {
+    println!("{}", phnsw::reports::ksort_comparison());
+
+    let mut rng = Pcg32::new(7);
+    let v16: Vec<f32> = (0..16).map(|_| rng.f32()).collect();
+    let v32: Vec<f32> = (0..32).map(|_| rng.f32()).collect();
+
+    println!("functional-model wall clock (software, for regression tracking):");
+    common::time_it("ksort_topk 16→16", 100_000, || {
+        std::hint::black_box(ksort_topk(std::hint::black_box(&v16), 16));
+    });
+    common::time_it("bubble_topk 16→16", 100_000, || {
+        std::hint::black_box(bubble_topk(std::hint::black_box(&v16), 16));
+    });
+    common::time_it("ksort_topk 32→16", 50_000, || {
+        std::hint::black_box(ksort_topk(std::hint::black_box(&v32), 16));
+    });
+}

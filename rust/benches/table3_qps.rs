@@ -1,0 +1,13 @@
+//! Bench: regenerate **Table III** — single-query search throughput (QPS)
+//! for HNSW-CPU / HNSW-GPU(reported) / pHNSW-CPU / HNSW-Std / pHNSW-Sep /
+//! pHNSW × {DDR4, HBM1.0}, normalized to HNSW-CPU.
+//!
+//! Run: `cargo bench --bench table3_qps` (scale via PHNSW_BENCH_N).
+
+mod common;
+
+fn main() {
+    let w = common::bench_workbench();
+    let out = phnsw::reports::table3(&w, common::trace_limit());
+    println!("{out}");
+}

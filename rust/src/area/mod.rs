@@ -1,0 +1,184 @@
+//! Parametric area model — regenerates the Fig. 4 breakdown
+//! (0.739 mm² total at 65 nm).
+//!
+//! Substitute for Synopsys DC synthesis (DESIGN.md §5): each component's
+//! area is computed from its structural parameters (lane/comparator/port
+//! counts, register bytes) times 65 nm per-element constants calibrated
+//! against the published breakdown. The *structure* scales — double the
+//! lanes and Dist.L doubles — so ablation benches can explore design
+//! points, while the default configuration reproduces Fig. 4.
+
+use crate::energy::SramModel;
+use crate::hw::isa::CoreConfig;
+
+/// 65 nm per-element area constants (mm²).
+mod unit65 {
+    /// One 32-bit FP multiply-accumulate datapath.
+    pub const MAC: f64 = 1.05e-3;
+    /// One 32-bit subtract-square lane element (sub + mul + acc),
+    /// including its share of the dim-pipeline registers.
+    pub const DIST_LANE: f64 = 1.72e-3;
+    /// One 32-bit comparator.
+    pub const COMPARATOR: f64 = 1.0e-4;
+    /// One 16-input × 32-bit one-hot multiplexer.
+    pub const MUX16: f64 = 1.6e-3;
+    /// Register file: per byte-entry per port.
+    pub const REG_BYTE_PORT: f64 = 3.5e-7;
+    /// Move/BUS wiring + port drivers, per port.
+    pub const MOVE_PORT: f64 = 1.77e-3;
+    /// Control logic (decoder, sequencer), per supported instruction class.
+    pub const CTRL_PER_INSTR: f64 = 1.1e-3;
+    /// DMA engine + AGU.
+    pub const DMA_AGU: f64 = 1.4e-2;
+    /// RMF + Min.H + misc datapath, clock tree, pads.
+    pub const MISC: f64 = 4.5e-2;
+}
+
+/// One component's area entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AreaEntry {
+    /// Component label (Fig. 4 naming).
+    pub name: &'static str,
+    /// Area in mm².
+    pub mm2: f64,
+}
+
+/// Full processor area model.
+#[derive(Debug, Clone)]
+pub struct AreaModel {
+    entries: Vec<AreaEntry>,
+}
+
+impl AreaModel {
+    /// Build the model for a core configuration + SPM size.
+    pub fn new(core: &CoreConfig, spm_bytes: usize) -> Self {
+        let spm = SramModel::new(spm_bytes).area_mm2();
+
+        // Register files: low-dim + high-dim staging registers. The paper
+        // notes capacity is set by the data dimensions (15 + 128 dims ×
+        // 4 B) with heavy multi-porting for parallel lane access.
+        let reg_bytes = (core.dim_low + core.dim_high) as f64 * 4.0;
+        // lanes-wide read + write ports on both register groups, 16 deep
+        let reg_ports = (2 * core.dist_l_lanes) as f64;
+        let regfile = reg_bytes * 16.0 * reg_ports * unit65::REG_BYTE_PORT;
+
+        // Two Move units + two BUS units: area is dominated by port count
+        // ("extensive use of ports", §V-B) — each Move unit drives
+        // lanes×2 ports, each BUS unit lanes ports.
+        let move_ports = core.move_units as f64 * (core.dist_l_lanes * 2) as f64;
+        let bus_ports = 2.0 * core.dist_l_lanes as f64;
+        let move_units = (move_ports + bus_ports) * unit65::MOVE_PORT;
+
+        // Dist.L: lanes × per-lane datapath × dim-pipeline registers.
+        let dist_l = core.dist_l_lanes as f64 * unit65::DIST_LANE * 2.6;
+
+        // kSort.L: width² comparator array + 4 rank-decode muxes (§V-B).
+        let ksort = (core.ksort_width * core.ksort_width) as f64 * unit65::COMPARATOR
+            + 4.0 * unit65::MUX16;
+
+        // Dist.H: MAC array.
+        let dist_h = core.dist_h_macs as f64 * unit65::MAC;
+
+        // Controller: 9 instruction classes (Table II).
+        let controller = 9.0 * unit65::CTRL_PER_INSTR;
+
+        let entries = vec![
+            AreaEntry { name: "SPM", mm2: spm },
+            AreaEntry { name: "RegFiles", mm2: regfile },
+            AreaEntry { name: "Move+BUS", mm2: move_units },
+            AreaEntry { name: "Dist.L", mm2: dist_l },
+            AreaEntry { name: "kSort.L", mm2: ksort },
+            AreaEntry { name: "Dist.H", mm2: dist_h },
+            AreaEntry { name: "Controller", mm2: controller },
+            AreaEntry { name: "DMA+AGU", mm2: unit65::DMA_AGU },
+            AreaEntry { name: "Min.H+RMF+misc", mm2: unit65::MISC },
+        ];
+        Self { entries }
+    }
+
+    /// Default pHNSW processor (paper configuration).
+    pub fn paper_default() -> Self {
+        Self::new(&CoreConfig::default(), crate::params::SPM_BYTES)
+    }
+
+    /// Component entries.
+    pub fn entries(&self) -> &[AreaEntry] {
+        &self.entries
+    }
+
+    /// Total area (mm²).
+    pub fn total_mm2(&self) -> f64 {
+        self.entries.iter().map(|e| e.mm2).sum()
+    }
+
+    /// Share of `name` in total area.
+    pub fn share(&self, name: &str) -> f64 {
+        let t = self.total_mm2();
+        self.entries
+            .iter()
+            .filter(|e| e.name == name)
+            .map(|e| e.mm2 / t)
+            .sum()
+    }
+
+    /// Render the Fig. 4 table.
+    pub fn render(&self) -> String {
+        let total = self.total_mm2();
+        let mut s = format!("Fig.4 — area breakdown (total {total:.3} mm², 65 nm @ 1 GHz)\n");
+        for e in &self.entries {
+            s.push_str(&format!(
+                "  {:<16} {:>7.4} mm²  {:>5.1} %\n",
+                e.name,
+                e.mm2,
+                100.0 * e.mm2 / total
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_matches_paper() {
+        let m = AreaModel::paper_default();
+        let t = m.total_mm2();
+        assert!((t - 0.739).abs() < 0.05, "total area {t} mm² vs paper 0.739");
+    }
+
+    #[test]
+    fn fig4_shares_within_tolerance() {
+        let m = AreaModel::paper_default();
+        // Paper: SPM 37.5%, RegFiles 13.9%, Move 23%, Dist.L+kSort.L 14.0%.
+        assert!((m.share("SPM") - 0.375).abs() < 0.03, "SPM {}", m.share("SPM"));
+        assert!((m.share("RegFiles") - 0.139).abs() < 0.03, "Reg {}", m.share("RegFiles"));
+        assert!((m.share("Move+BUS") - 0.23).abs() < 0.03, "Move {}", m.share("Move+BUS"));
+        let filter = m.share("Dist.L") + m.share("kSort.L");
+        assert!((filter - 0.14).abs() < 0.03, "Dist.L+kSort.L {filter}");
+    }
+
+    #[test]
+    fn scales_with_structure() {
+        let base = AreaModel::paper_default();
+        let mut big_core = CoreConfig::default();
+        big_core.dist_l_lanes = 32;
+        big_core.ksort_width = 32;
+        let big = AreaModel::new(&big_core, crate::params::SPM_BYTES);
+        assert!(big.share("Dist.L") > base.share("Dist.L"));
+        assert!(big.total_mm2() > base.total_mm2());
+        // 32² vs 16² comparators → kSort grows ~4×
+        let k_ratio = big.entries().iter().find(|e| e.name == "kSort.L").unwrap().mm2
+            / base.entries().iter().find(|e| e.name == "kSort.L").unwrap().mm2;
+        assert!(k_ratio > 2.5, "kSort area ratio {k_ratio}");
+    }
+
+    #[test]
+    fn render_contains_all_components() {
+        let s = AreaModel::paper_default().render();
+        for name in ["SPM", "RegFiles", "Move+BUS", "Dist.L", "kSort.L", "Dist.H"] {
+            assert!(s.contains(name), "missing {name} in:\n{s}");
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! Hand-rolled command-line argument parsing (no `clap` in the offline
+//! registry). Supports `--flag`, `--key value`, `--key=value`, and
+//! positional arguments, with typed getters and an auto-generated usage
+//! string.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: options + positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Declared option for usage text.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    /// Long name without leading dashes.
+    pub name: &'static str,
+    /// Help text.
+    pub help: &'static str,
+    /// Default rendering (None = required or flag).
+    pub default: Option<String>,
+    /// True for value-less flags.
+    pub is_flag: bool,
+}
+
+impl Args {
+    /// Parse from an explicit token list. Tokens starting with `--` become
+    /// options; a token with `=` is split, otherwise the following token is
+    /// consumed as the value unless it also starts with `--` (then the
+    /// option is a flag).
+    pub fn parse_from(tokens: &[String]) -> Self {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(body) = t.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    out.opts.insert(body.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse_from(&tokens)
+    }
+
+    /// Positional arguments in order.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// True if `--name` appeared as a flag (or with any value).
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.opts.contains_key(name)
+    }
+
+    /// Raw string option.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Typed option parse with default; returns an error naming the flag on
+    /// a malformed value.
+    pub fn get_parsed_or<T: std::str::FromStr>(&self, name: &str, default: T) -> crate::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(raw) => raw
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("invalid --{name} {raw:?}: {e}")),
+        }
+    }
+
+    /// Comma-separated list of usize (e.g. `--k-schedule 16,8,3`).
+    pub fn get_usize_list(&self, name: &str) -> crate::Result<Option<Vec<usize>>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(raw) => {
+                let mut out = Vec::new();
+                for part in raw.split(',') {
+                    out.push(
+                        part.trim()
+                            .parse::<usize>()
+                            .map_err(|e| anyhow::anyhow!("invalid --{name} element {part:?}: {e}"))?,
+                    );
+                }
+                Ok(Some(out))
+            }
+        }
+    }
+
+    /// Unknown-option check against a declared spec list.
+    pub fn check_known(&self, specs: &[OptSpec]) -> crate::Result<()> {
+        for key in self.opts.keys().chain(self.flags.iter()) {
+            if !specs.iter().any(|s| s.name == key) {
+                anyhow::bail!("unknown option --{key} (see --help)");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Render a usage block for a subcommand.
+pub fn usage(cmd: &str, summary: &str, specs: &[OptSpec]) -> String {
+    let mut s = format!("{cmd} — {summary}\n\noptions:\n");
+    for spec in specs {
+        let lhs = if spec.is_flag {
+            format!("  --{}", spec.name)
+        } else {
+            format!("  --{} <v>", spec.name)
+        };
+        let def = spec
+            .default
+            .as_ref()
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("{lhs:<28}{}{def}\n", spec.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse_from(&tokens.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn parses_key_value_pairs() {
+        // NB: a bare `--opt value` pair is greedy, so value-less flags must
+        // come last or be followed by another `--` token.
+        let a = parse(&["--n", "100", "--name=foo", "pos1", "pos2", "--verbose"]);
+        assert_eq!(a.get("n"), Some("100"));
+        assert_eq!(a.get("name"), Some("foo"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string(), "pos2".to_string()]);
+    }
+
+    #[test]
+    fn typed_parse_with_default() {
+        let a = parse(&["--n", "42"]);
+        assert_eq!(a.get_parsed_or("n", 7usize).unwrap(), 42);
+        assert_eq!(a.get_parsed_or("missing", 7usize).unwrap(), 7);
+        assert!(a.get_parsed_or::<usize>("n", 0).is_ok());
+        let bad = parse(&["--n", "notanumber"]);
+        assert!(bad.get_parsed_or("n", 0usize).is_err());
+    }
+
+    #[test]
+    fn usize_list_parsing() {
+        let a = parse(&["--ks", "16,8,3"]);
+        assert_eq!(a.get_usize_list("ks").unwrap(), Some(vec![16, 8, 3]));
+        assert_eq!(a.get_usize_list("missing").unwrap(), None);
+        let bad = parse(&["--ks", "16,x"]);
+        assert!(bad.get_usize_list("ks").is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--fast", "--n", "3"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("n"), Some("3"));
+    }
+
+    #[test]
+    fn check_known_rejects_typos() {
+        let specs = [OptSpec { name: "n", help: "", default: None, is_flag: false }];
+        let good = parse(&["--n", "1"]);
+        assert!(good.check_known(&specs).is_ok());
+        let bad = parse(&["--m", "1"]);
+        assert!(bad.check_known(&specs).is_err());
+    }
+
+    #[test]
+    fn usage_renders_all_options() {
+        let specs = [
+            OptSpec { name: "n", help: "count", default: Some("10".into()), is_flag: false },
+            OptSpec { name: "fast", help: "go fast", default: None, is_flag: true },
+        ];
+        let u = usage("cmd", "does things", &specs);
+        assert!(u.contains("--n"));
+        assert!(u.contains("--fast"));
+        assert!(u.contains("default: 10"));
+    }
+}

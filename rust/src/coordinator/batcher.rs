@@ -1,0 +1,193 @@
+//! Dynamic batcher: queries accumulate until either `max_batch` is
+//! reached or the oldest enqueued query has waited `max_wait` — the
+//! standard latency/throughput trade-off knob of serving systems.
+
+use super::{Query, QueryResult};
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Batcher tuning.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Maximum queries per batch.
+    pub max_batch: usize,
+    /// Maximum time the oldest query may wait before a partial batch is
+    /// released.
+    pub max_wait: Duration,
+    /// Bound on queued items (backpressure); `enqueue` fails beyond it.
+    pub queue_cap: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 32, max_wait: Duration::from_micros(200), queue_cap: 4096 }
+    }
+}
+
+/// One enqueued query plus its response channel and arrival time.
+pub struct Pending {
+    /// The request.
+    pub query: Query,
+    /// Where the worker sends the result.
+    pub reply: std::sync::mpsc::Sender<QueryResult>,
+    /// Arrival timestamp (latency accounting).
+    pub arrived: Instant,
+}
+
+struct Inner {
+    queue: VecDeque<Pending>,
+    closed: bool,
+}
+
+/// Thread-safe dynamic batcher.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl Batcher {
+    /// New batcher with the given tuning.
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Self { cfg, inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }), cv: Condvar::new() }
+    }
+
+    /// Configured tuning.
+    pub fn config(&self) -> &BatcherConfig {
+        &self.cfg
+    }
+
+    /// Enqueue a query; fails when the queue is full (backpressure) or the
+    /// batcher is shut down.
+    pub fn enqueue(&self, p: Pending) -> Result<(), Pending> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed || g.queue.len() >= self.cfg.queue_cap {
+            return Err(p);
+        }
+        g.queue.push_back(p);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Current queue depth.
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    /// Block until a batch is ready (size or deadline trigger); `None`
+    /// after shutdown once the queue drains.
+    pub fn next_batch(&self) -> Option<Vec<Pending>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.queue.len() >= self.cfg.max_batch {
+                break;
+            }
+            if !g.queue.is_empty() {
+                let oldest = g.queue.front().unwrap().arrived;
+                let age = oldest.elapsed();
+                if age >= self.cfg.max_wait {
+                    break;
+                }
+                let (ng, _timeout) = self
+                    .cv
+                    .wait_timeout(g, self.cfg.max_wait - age)
+                    .unwrap();
+                g = ng;
+                continue;
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+        let take = g.queue.len().min(self.cfg.max_batch);
+        Some(g.queue.drain(..take).collect())
+    }
+
+    /// Shut down: wake all waiters; queued items still drain.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::sync::Arc;
+
+    fn pending(v: f32) -> (Pending, mpsc::Receiver<QueryResult>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Pending { query: Query::new(vec![v]), reply: tx, arrived: Instant::now() },
+            rx,
+        )
+    }
+
+    #[test]
+    fn size_trigger_releases_full_batch() {
+        let b = Batcher::new(BatcherConfig { max_batch: 4, max_wait: Duration::from_secs(10), queue_cap: 100 });
+        for i in 0..4 {
+            b.enqueue(pending(i as f32).0).map_err(|_| ()).unwrap();
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(b.depth(), 0);
+    }
+
+    #[test]
+    fn deadline_trigger_releases_partial_batch() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 100,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 100,
+        });
+        b.enqueue(pending(1.0).0).map_err(|_| ()).unwrap();
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(4), "released too early");
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let b = Batcher::new(BatcherConfig { max_batch: 8, max_wait: Duration::from_secs(1), queue_cap: 2 });
+        assert!(b.enqueue(pending(1.0).0).is_ok());
+        assert!(b.enqueue(pending(2.0).0).is_ok());
+        assert!(b.enqueue(pending(3.0).0).is_err(), "third enqueue must bounce");
+    }
+
+    #[test]
+    fn close_wakes_blocked_worker() {
+        let b = Arc::new(Batcher::new(BatcherConfig::default()));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(20));
+        b.close();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn close_rejects_new_but_drains_queued() {
+        let b = Batcher::new(BatcherConfig { max_batch: 10, max_wait: Duration::from_millis(1), queue_cap: 10 });
+        b.enqueue(pending(1.0).0).map_err(|_| ()).unwrap();
+        b.close();
+        assert!(b.enqueue(pending(2.0).0).is_err());
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn fifo_order_within_batch() {
+        let b = Batcher::new(BatcherConfig { max_batch: 3, max_wait: Duration::from_secs(10), queue_cap: 10 });
+        for i in 0..3 {
+            b.enqueue(pending(i as f32).0).map_err(|_| ()).unwrap();
+        }
+        let batch = b.next_batch().unwrap();
+        let vals: Vec<f32> = batch.iter().map(|p| p.query.vector[0]).collect();
+        assert_eq!(vals, vec![0.0, 1.0, 2.0]);
+    }
+}

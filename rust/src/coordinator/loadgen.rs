@@ -1,0 +1,164 @@
+//! Open-loop load generator: Poisson arrivals at a configured offered
+//! rate, driving the server the way external clients would — latency
+//! under load (queueing included), not just closed-loop throughput.
+
+use super::{Query, QueryResult, ServerHandle};
+use crate::dataset::VectorSet;
+use crate::metrics::LatencyStats;
+use crate::rng::Pcg32;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Load-test configuration.
+#[derive(Debug, Clone)]
+pub struct LoadConfig {
+    /// Offered rate (queries/second).
+    pub rate_qps: f64,
+    /// Total queries to offer.
+    pub total: usize,
+    /// RNG seed for arrival jitter + query choice.
+    pub seed: u64,
+    /// Engine override (None = router policy).
+    pub engine: Option<String>,
+}
+
+/// Result of an open-loop run.
+#[derive(Debug)]
+pub struct LoadReport {
+    /// Queries offered.
+    pub offered: usize,
+    /// Queries completed.
+    pub completed: usize,
+    /// Queries rejected by backpressure.
+    pub rejected: usize,
+    /// Wall time of the run.
+    pub elapsed: Duration,
+    /// Achieved goodput (completed / elapsed).
+    pub goodput_qps: f64,
+    /// End-to-end latency stats (µs percentiles via `summary()`).
+    pub latency: LatencyStats,
+}
+
+/// Drive `handle` at `cfg.rate_qps` with Poisson arrivals, drawing query
+/// vectors uniformly from `queries`. Blocks until all responses arrive
+/// (or their channels close).
+pub fn run_open_loop(handle: &ServerHandle, queries: &VectorSet, cfg: &LoadConfig) -> LoadReport {
+    assert!(cfg.rate_qps > 0.0 && cfg.total > 0 && !queries.is_empty());
+    let mut rng = Pcg32::new(cfg.seed);
+    let mut inflight: Vec<(Instant, mpsc::Receiver<QueryResult>)> = Vec::with_capacity(cfg.total);
+    let mut rejected = 0usize;
+
+    let start = Instant::now();
+    let mut next_arrival = start;
+    for _ in 0..cfg.total {
+        // Exponential inter-arrival: -ln(U)/λ.
+        let u = rng.f64().max(1e-12);
+        next_arrival += Duration::from_secs_f64(-u.ln() / cfg.rate_qps);
+        let now = Instant::now();
+        if next_arrival > now {
+            std::thread::sleep(next_arrival - now);
+        }
+        let qi = rng.range(0, queries.len());
+        let mut q = Query::new(queries.row(qi).to_vec());
+        q.engine = cfg.engine.clone();
+        match handle.submit(q) {
+            Ok(rx) => inflight.push((Instant::now(), rx)),
+            Err(_) => rejected += 1,
+        }
+    }
+
+    let mut latency = LatencyStats::new();
+    let mut completed = 0usize;
+    for (sent, rx) in inflight {
+        if rx.recv().is_ok() {
+            latency.record(sent.elapsed());
+            completed += 1;
+        }
+    }
+    let elapsed = start.elapsed();
+    LoadReport {
+        offered: cfg.total,
+        completed,
+        rejected,
+        elapsed,
+        goodput_qps: completed as f64 / elapsed.as_secs_f64(),
+        latency,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{RoutePolicy, Router, Server, ServerConfig};
+    use crate::search::{AnnEngine, Neighbor, SearchStats};
+    use std::sync::Arc;
+
+    /// Cheap deterministic engine for load tests.
+    struct Fast;
+    impl AnnEngine for Fast {
+        fn name(&self) -> &str {
+            "fast"
+        }
+        fn search(&self, q: &[f32]) -> Vec<Neighbor> {
+            vec![Neighbor { id: q[0] as u32, dist: 0.0 }; 10]
+        }
+        fn search_with_stats(&self, q: &[f32]) -> (Vec<Neighbor>, SearchStats) {
+            (self.search(q), SearchStats::default())
+        }
+    }
+
+    fn server() -> Server {
+        let mut r = Router::new(RoutePolicy::Default("fast".into()));
+        r.register("fast", Arc::new(Fast));
+        Server::start(ServerConfig { workers: 2, ..Default::default() }, Arc::new(r))
+    }
+
+    fn queries() -> VectorSet {
+        let mut vs = VectorSet::new(2);
+        for i in 0..32 {
+            vs.push(&[i as f32, 0.0]);
+        }
+        vs
+    }
+
+    #[test]
+    fn open_loop_completes_all_at_moderate_rate() {
+        let s = server();
+        let report = run_open_loop(
+            &s.handle(),
+            &queries(),
+            &LoadConfig { rate_qps: 2_000.0, total: 200, seed: 1, engine: None },
+        );
+        assert_eq!(report.completed, 200);
+        assert_eq!(report.rejected, 0);
+        assert!(report.goodput_qps > 500.0, "goodput {}", report.goodput_qps);
+        s.shutdown();
+    }
+
+    #[test]
+    fn latency_percentiles_reported() {
+        let s = server();
+        let mut report = run_open_loop(
+            &s.handle(),
+            &queries(),
+            &LoadConfig { rate_qps: 1_000.0, total: 100, seed: 2, engine: None },
+        );
+        let (p50, p95, p99) = report.latency.summary();
+        assert!(p50 > 0.0 && p95 >= p50 && p99 >= p95);
+        s.shutdown();
+    }
+
+    #[test]
+    fn arrival_pacing_roughly_matches_rate() {
+        let s = server();
+        let report = run_open_loop(
+            &s.handle(),
+            &queries(),
+            &LoadConfig { rate_qps: 500.0, total: 100, seed: 3, engine: None },
+        );
+        // 100 arrivals at 500/s ≈ 200 ms expected; allow generous slack.
+        let secs = report.elapsed.as_secs_f64();
+        assert!((0.1..2.0).contains(&secs), "elapsed {secs}s");
+        s.shutdown();
+    }
+}

@@ -1,0 +1,54 @@
+//! Layer-3 serving coordinator.
+//!
+//! pHNSW is a search system, so L3 is a query server: a [`batcher`]
+//! aggregates incoming queries into dynamic batches (size- or
+//! deadline-triggered), a [`router`] picks the engine (CPU HNSW, CPU
+//! pHNSW, or the XLA-backed rerank path), and a [`server`] worker pool
+//! drains batches, executes searches, and returns results through
+//! per-request channels while [`stats`] aggregates QPS/latency.
+//!
+//! Everything is `std::thread` + `mpsc` (tokio is not in the offline
+//! registry — DESIGN.md §5); the architecture mirrors vLLM's router:
+//! front-end enqueue → batch former → worker pool → response delivery.
+
+pub mod batcher;
+pub mod loadgen;
+pub mod router;
+pub mod server;
+pub mod stats;
+pub mod xla_engine;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use router::{Router, RoutePolicy};
+pub use server::{Server, ServerConfig, ServerHandle};
+pub use stats::ServeStats;
+pub use xla_engine::XlaPhnswEngine;
+
+/// A search request: the query vector plus the number of neighbors wanted.
+#[derive(Debug, Clone)]
+pub struct Query {
+    /// Query vector (original high-dim space).
+    pub vector: Vec<f32>,
+    /// Number of neighbors requested.
+    pub topk: usize,
+    /// Optional engine override (router falls back to its policy).
+    pub engine: Option<String>,
+}
+
+impl Query {
+    /// Convenience constructor with the default top-k of 10 (Recall@10).
+    pub fn new(vector: Vec<f32>) -> Self {
+        Self { vector, topk: 10, engine: None }
+    }
+}
+
+/// A completed search.
+#[derive(Debug, Clone)]
+pub struct QueryResult {
+    /// Neighbors, ascending by distance.
+    pub neighbors: Vec<crate::search::Neighbor>,
+    /// Which engine served it.
+    pub engine: String,
+    /// Serve-side latency (queue + execution).
+    pub latency: std::time::Duration,
+}

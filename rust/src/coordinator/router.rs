@@ -1,0 +1,130 @@
+//! Engine router: named engine registry + routing policy.
+
+use crate::search::AnnEngine;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// How the router picks an engine when the query does not name one.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Always use the named default engine.
+    Default(String),
+    /// Round-robin across all registered engines (A/B or replica spread).
+    RoundRobin,
+}
+
+/// Thread-safe engine registry + policy.
+pub struct Router {
+    engines: BTreeMap<String, Arc<dyn AnnEngine>>,
+    policy: RoutePolicy,
+    rr: AtomicUsize,
+}
+
+impl Router {
+    /// New router with a policy; register engines with [`Self::register`].
+    pub fn new(policy: RoutePolicy) -> Self {
+        Self { engines: BTreeMap::new(), policy, rr: AtomicUsize::new(0) }
+    }
+
+    /// Register an engine under a name. Replaces any previous holder.
+    pub fn register(&mut self, name: impl Into<String>, engine: Arc<dyn AnnEngine>) -> &mut Self {
+        self.engines.insert(name.into(), engine);
+        self
+    }
+
+    /// Registered engine names (sorted).
+    pub fn names(&self) -> Vec<&str> {
+        self.engines.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Look up an engine by exact name.
+    pub fn get(&self, name: &str) -> Option<Arc<dyn AnnEngine>> {
+        self.engines.get(name).cloned()
+    }
+
+    /// Route a query: explicit override first, then the policy.
+    pub fn route(&self, requested: Option<&str>) -> crate::Result<(String, Arc<dyn AnnEngine>)> {
+        anyhow::ensure!(!self.engines.is_empty(), "no engines registered");
+        if let Some(name) = requested {
+            let e = self
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown engine {name:?} (have {:?})", self.names()))?;
+            return Ok((name.to_string(), e));
+        }
+        match &self.policy {
+            RoutePolicy::Default(name) => {
+                let e = self
+                    .get(name)
+                    .ok_or_else(|| anyhow::anyhow!("default engine {name:?} not registered"))?;
+                Ok((name.clone(), e))
+            }
+            RoutePolicy::RoundRobin => {
+                let i = self.rr.fetch_add(1, Ordering::Relaxed) % self.engines.len();
+                let (name, e) = self.engines.iter().nth(i).unwrap();
+                Ok((name.clone(), e.clone()))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::{Neighbor, SearchStats};
+
+    /// Trivial engine stub for router tests.
+    struct Stub(&'static str);
+    impl AnnEngine for Stub {
+        fn name(&self) -> &str {
+            self.0
+        }
+        fn search(&self, _q: &[f32]) -> Vec<Neighbor> {
+            vec![Neighbor { id: 0, dist: 0.0 }]
+        }
+        fn search_with_stats(&self, q: &[f32]) -> (Vec<Neighbor>, SearchStats) {
+            (self.search(q), SearchStats::default())
+        }
+    }
+
+    fn router(policy: RoutePolicy) -> Router {
+        let mut r = Router::new(policy);
+        r.register("a", Arc::new(Stub("a")));
+        r.register("b", Arc::new(Stub("b")));
+        r
+    }
+
+    #[test]
+    fn explicit_override_wins() {
+        let r = router(RoutePolicy::Default("a".into()));
+        let (name, _) = r.route(Some("b")).unwrap();
+        assert_eq!(name, "b");
+    }
+
+    #[test]
+    fn default_policy() {
+        let r = router(RoutePolicy::Default("a".into()));
+        for _ in 0..3 {
+            assert_eq!(r.route(None).unwrap().0, "a");
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let r = router(RoutePolicy::RoundRobin);
+        let picks: Vec<String> = (0..4).map(|_| r.route(None).unwrap().0).collect();
+        assert_eq!(picks, vec!["a", "b", "a", "b"]);
+    }
+
+    #[test]
+    fn unknown_engine_is_an_error() {
+        let r = router(RoutePolicy::RoundRobin);
+        assert!(r.route(Some("zzz")).is_err());
+    }
+
+    #[test]
+    fn empty_router_errors() {
+        let r = Router::new(RoutePolicy::RoundRobin);
+        assert!(r.route(None).is_err());
+    }
+}

@@ -1,0 +1,230 @@
+//! The serving loop: worker threads drain the batcher, route each batch,
+//! execute searches, and deliver results through per-request channels.
+
+use super::batcher::{Batcher, BatcherConfig, Pending};
+use super::router::Router;
+use super::stats::ServeStats;
+use super::{Query, QueryResult};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Server tuning.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Worker thread count.
+    pub workers: usize,
+    /// Batcher tuning.
+    pub batcher: BatcherConfig,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { workers: 4, batcher: BatcherConfig::default() }
+    }
+}
+
+/// A running server (workers live until [`ServerHandle::shutdown`]).
+pub struct Server {
+    batcher: Arc<Batcher>,
+    stats: Arc<ServeStats>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Cloneable submission handle.
+#[derive(Clone)]
+pub struct ServerHandle {
+    batcher: Arc<Batcher>,
+    stats: Arc<ServeStats>,
+}
+
+impl Server {
+    /// Start the worker pool over a router.
+    pub fn start(cfg: ServerConfig, router: Arc<Router>) -> Self {
+        assert!(cfg.workers >= 1, "need at least one worker");
+        let batcher = Arc::new(Batcher::new(cfg.batcher.clone()));
+        let stats = Arc::new(ServeStats::new());
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let batcher = batcher.clone();
+            let stats = stats.clone();
+            let router = router.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("phnsw-worker-{w}"))
+                    .spawn(move || worker_loop(batcher, router, stats))
+                    .expect("spawn worker"),
+            );
+        }
+        Self { batcher, stats, workers }
+    }
+
+    /// Submission handle (cloneable across client threads).
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { batcher: self.batcher.clone(), stats: self.stats.clone() }
+    }
+
+    /// Serve statistics.
+    pub fn stats(&self) -> &Arc<ServeStats> {
+        &self.stats
+    }
+
+    /// Drain and stop. Queued queries still complete.
+    pub fn shutdown(self) {
+        self.batcher.close();
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+impl ServerHandle {
+    /// Submit a query; returns the channel the result arrives on, or the
+    /// query back on backpressure rejection.
+    pub fn submit(&self, query: Query) -> Result<mpsc::Receiver<QueryResult>, Query> {
+        let (tx, rx) = mpsc::channel();
+        let pending = Pending { query, reply: tx, arrived: Instant::now() };
+        match self.batcher.enqueue(pending) {
+            Ok(()) => Ok(rx),
+            Err(p) => {
+                self.stats.record_rejected();
+                Err(p.query)
+            }
+        }
+    }
+
+    /// Submit and block for the result.
+    pub fn query_blocking(&self, query: Query) -> crate::Result<QueryResult> {
+        let rx = self
+            .submit(query)
+            .map_err(|_| anyhow::anyhow!("server queue full (backpressure)"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("server dropped the request"))
+    }
+
+    /// Current queue depth (observability).
+    pub fn queue_depth(&self) -> usize {
+        self.batcher.depth()
+    }
+}
+
+fn worker_loop(batcher: Arc<Batcher>, router: Arc<Router>, stats: Arc<ServeStats>) {
+    while let Some(batch) = batcher.next_batch() {
+        for p in batch {
+            let Pending { query, reply, arrived } = p;
+            match router.route(query.engine.as_deref()) {
+                Ok((name, engine)) => {
+                    let mut neighbors = engine.search(&query.vector);
+                    neighbors.truncate(query.topk);
+                    let latency = arrived.elapsed();
+                    stats.record(&name, latency);
+                    let _ = reply.send(QueryResult { neighbors, engine: name, latency });
+                }
+                Err(_) => {
+                    stats.record_error();
+                    // Dropping `reply` signals the error to the caller.
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::RoutePolicy;
+    use crate::search::{AnnEngine, Neighbor, SearchStats};
+
+    /// Engine stub that returns its input rounded as an id.
+    struct Echo;
+    impl AnnEngine for Echo {
+        fn name(&self) -> &str {
+            "echo"
+        }
+        fn search(&self, q: &[f32]) -> Vec<Neighbor> {
+            (0..20).map(|i| Neighbor { id: q[0] as u32 + i, dist: i as f32 }).collect()
+        }
+        fn search_with_stats(&self, q: &[f32]) -> (Vec<Neighbor>, SearchStats) {
+            (self.search(q), SearchStats::default())
+        }
+    }
+
+    fn server() -> Server {
+        let mut r = Router::new(RoutePolicy::Default("echo".into()));
+        r.register("echo", Arc::new(Echo));
+        Server::start(
+            ServerConfig { workers: 2, batcher: BatcherConfig::default() },
+            Arc::new(r),
+        )
+    }
+
+    #[test]
+    fn serves_a_query_end_to_end() {
+        let s = server();
+        let h = s.handle();
+        let res = h.query_blocking(Query::new(vec![42.0])).unwrap();
+        assert_eq!(res.neighbors.len(), 10, "topk clamps results");
+        assert_eq!(res.neighbors[0].id, 42);
+        assert_eq!(res.engine, "echo");
+        s.shutdown();
+    }
+
+    #[test]
+    fn respects_topk() {
+        let s = server();
+        let h = s.handle();
+        let mut q = Query::new(vec![1.0]);
+        q.topk = 3;
+        let res = h.query_blocking(q).unwrap();
+        assert_eq!(res.neighbors.len(), 3);
+        s.shutdown();
+    }
+
+    #[test]
+    fn unknown_engine_drops_channel() {
+        let s = server();
+        let h = s.handle();
+        let mut q = Query::new(vec![1.0]);
+        q.engine = Some("nope".into());
+        let rx = h.submit(q).unwrap();
+        assert!(rx.recv().is_err(), "error surfaces as dropped reply channel");
+        assert_eq!(s.stats().errors(), 1);
+        s.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let s = server();
+        let h = s.handle();
+        let mut joins = Vec::new();
+        for t in 0..8 {
+            let h = h.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    let res = h.query_blocking(Query::new(vec![(t * 100 + i) as f32])).unwrap();
+                    assert_eq!(res.neighbors[0].id, (t * 100 + i) as u32);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(s.stats().served(), 400);
+        assert!(s.stats().qps() > 0.0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn shutdown_completes_queued_work() {
+        let s = server();
+        let h = s.handle();
+        let rxs: Vec<_> = (0..20).map(|i| h.submit(Query::new(vec![i as f32])).unwrap()).collect();
+        s.shutdown();
+        let mut got = 0;
+        for rx in rxs {
+            if rx.recv().is_ok() {
+                got += 1;
+            }
+        }
+        assert_eq!(got, 20, "all queued queries must complete through shutdown");
+    }
+}

@@ -1,0 +1,162 @@
+//! Serve-side statistics: request counters, per-engine tallies, latency
+//! percentiles, and wall-clock QPS.
+
+use crate::metrics::LatencyStats;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+struct Inner {
+    started: Instant,
+    served: u64,
+    errors: u64,
+    rejected: u64,
+    by_engine: BTreeMap<String, u64>,
+    latency: LatencyStats,
+}
+
+/// Thread-safe serve statistics.
+pub struct ServeStats {
+    inner: Mutex<Inner>,
+}
+
+impl Default for ServeStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServeStats {
+    /// Fresh collector (clock starts now).
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                started: Instant::now(),
+                served: 0,
+                errors: 0,
+                rejected: 0,
+                by_engine: BTreeMap::new(),
+                latency: LatencyStats::new(),
+            }),
+        }
+    }
+
+    /// Record a served query.
+    pub fn record(&self, engine: &str, latency: Duration) {
+        let mut g = self.inner.lock().unwrap();
+        g.served += 1;
+        *g.by_engine.entry(engine.to_string()).or_insert(0) += 1;
+        g.latency.record(latency);
+    }
+
+    /// Record a failed query.
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    /// Record a backpressure rejection.
+    pub fn record_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// Served query count.
+    pub fn served(&self) -> u64 {
+        self.inner.lock().unwrap().served
+    }
+
+    /// Error count.
+    pub fn errors(&self) -> u64 {
+        self.inner.lock().unwrap().errors
+    }
+
+    /// Rejection count.
+    pub fn rejected(&self) -> u64 {
+        self.inner.lock().unwrap().rejected
+    }
+
+    /// Per-engine served counts.
+    pub fn by_engine(&self) -> BTreeMap<String, u64> {
+        self.inner.lock().unwrap().by_engine.clone()
+    }
+
+    /// Wall-clock QPS since construction.
+    pub fn qps(&self) -> f64 {
+        let g = self.inner.lock().unwrap();
+        let secs = g.started.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            g.served as f64 / secs
+        }
+    }
+
+    /// (p50, p95, p99) latency in µs.
+    pub fn latency_summary(&self) -> (f64, f64, f64) {
+        self.inner.lock().unwrap().latency.summary()
+    }
+
+    /// Render a one-page report.
+    pub fn render(&self) -> String {
+        let (p50, p95, p99) = self.latency_summary();
+        let g = self.inner.lock().unwrap();
+        let mut s = format!(
+            "served={} errors={} rejected={} p50={p50:.1}µs p95={p95:.1}µs p99={p99:.1}µs\n",
+            g.served, g.errors, g.rejected
+        );
+        for (name, n) in &g.by_engine {
+            s.push_str(&format!("  engine {name}: {n}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let s = ServeStats::new();
+        s.record("phnsw", Duration::from_micros(100));
+        s.record("phnsw", Duration::from_micros(300));
+        s.record("hnsw", Duration::from_micros(200));
+        s.record_error();
+        s.record_rejected();
+        assert_eq!(s.served(), 3);
+        assert_eq!(s.errors(), 1);
+        assert_eq!(s.rejected(), 1);
+        assert_eq!(s.by_engine()["phnsw"], 2);
+        let (p50, _, p99) = s.latency_summary();
+        assert!(p50 >= 100.0 && p50 <= 300.0);
+        assert!(p99 >= p50);
+        let r = s.render();
+        assert!(r.contains("served=3"));
+        assert!(r.contains("engine phnsw: 2"));
+    }
+
+    #[test]
+    fn qps_positive_after_serving() {
+        let s = ServeStats::new();
+        s.record("e", Duration::from_micros(10));
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(s.qps() > 0.0);
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let s = std::sync::Arc::new(ServeStats::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..250 {
+                    s.record("e", Duration::from_micros(50));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.served(), 1000);
+    }
+}

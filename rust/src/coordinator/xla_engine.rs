@@ -1,0 +1,89 @@
+//! XLA-backed pHNSW engine: graph traversal + PCA filtering in rust, final
+//! rerank through the AOT-compiled `batch_rerank` artifact — the
+//! three-layer composition on the live request path.
+//!
+//! The traversal/filter loop stays native (per-hop XLA dispatch for a
+//! 32×15 tile costs more in call overhead than the math itself — measured
+//! in EXPERIMENTS.md §Perf); the *result verification* rerank, which is
+//! the batched dense compute the paper's ASIC dedicates Dist.H to, runs
+//! on the PJRT executable. The `rerank16`/`filter_*` artifacts remain
+//! available for kernel-level validation (see `rust/tests/runtime_xla.rs`).
+
+use crate::dataset::VectorSet;
+use crate::runtime::XlaRerankEngine;
+use crate::search::{AnnEngine, Neighbor, PhnswSearcher, SearchStats};
+use std::sync::Arc;
+
+/// pHNSW searcher whose final distances come from the XLA artifact.
+pub struct XlaPhnswEngine {
+    searcher: Arc<PhnswSearcher>,
+    xla: Arc<XlaRerankEngine>,
+    data_high: Arc<VectorSet>,
+    /// Fixed rerank width (candidates are padded/truncated to this).
+    k: usize,
+}
+
+impl XlaPhnswEngine {
+    /// Wrap a searcher + running XLA engine. `data_high` must be the
+    /// corpus the searcher was built over.
+    pub fn new(
+        searcher: Arc<PhnswSearcher>,
+        xla: Arc<XlaRerankEngine>,
+        data_high: Arc<VectorSet>,
+        k: usize,
+    ) -> Self {
+        assert!(k >= 1);
+        Self { searcher, xla, data_high, k }
+    }
+
+    /// Rerank `ids` against `query` through the artifact; returns
+    /// neighbors sorted ascending by the XLA-computed distance.
+    fn xla_rerank(&self, query: &[f32], ids: &[u32]) -> crate::Result<Vec<Neighbor>> {
+        if ids.is_empty() {
+            return Ok(Vec::new());
+        }
+        let d = self.data_high.dim();
+        let k = self.k;
+        // Pad the candidate tile by repeating the first id; padded slots
+        // are dropped after scoring.
+        let mut cands = Vec::with_capacity(k * d);
+        for slot in 0..k {
+            let id = ids[slot.min(ids.len() - 1)];
+            cands.extend_from_slice(self.data_high.row(id as usize));
+        }
+        let dists = self.xla.batch_rerank(query, &cands, 1, k, d)?;
+        let mut out: Vec<Neighbor> = ids
+            .iter()
+            .take(k)
+            .enumerate()
+            .map(|(slot, &id)| Neighbor { id, dist: dists[slot] })
+            .collect();
+        out.sort_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap().then(a.id.cmp(&b.id)));
+        Ok(out)
+    }
+}
+
+impl AnnEngine for XlaPhnswEngine {
+    fn name(&self) -> &str {
+        "phnsw-xla"
+    }
+
+    fn search(&self, query: &[f32]) -> Vec<Neighbor> {
+        let native = self.searcher.search(query);
+        let ids: Vec<u32> = native.iter().map(|n| n.id).collect();
+        match self.xla_rerank(query, &ids) {
+            Ok(reranked) if !reranked.is_empty() => reranked,
+            _ => native, // graceful fallback keeps the server healthy
+        }
+    }
+
+    fn search_with_stats(&self, query: &[f32]) -> (Vec<Neighbor>, SearchStats) {
+        let (native, stats) = self.searcher.search_with_stats(query);
+        let ids: Vec<u32> = native.iter().map(|n| n.id).collect();
+        let res = match self.xla_rerank(query, &ids) {
+            Ok(r) if !r.is_empty() => r,
+            _ => native,
+        };
+        (res, stats)
+    }
+}

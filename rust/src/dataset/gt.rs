@@ -1,0 +1,204 @@
+//! Exact (brute-force) k-nearest-neighbor ground truth.
+//!
+//! Recall@k needs the true neighbor sets. For the default benchmark scale
+//! (100k base × 1k queries × 128 dims) this is ~12.8 GFLOP — a few seconds
+//! multi-threaded. Work is sharded over queries with `std::thread::scope`
+//! (rayon is unavailable in the offline registry).
+
+use super::VectorSet;
+use crate::search::dist::l2_sq;
+
+/// A bounded max-heap over (distance, id) keeping the k smallest entries.
+/// Used by ground truth and by the exact-rerank stages.
+#[derive(Debug, Clone)]
+pub struct TopK {
+    k: usize,
+    // (dist, id) max-heap by dist: the root is the worst of the kept set.
+    heap: Vec<(f32, u32)>,
+}
+
+impl TopK {
+    /// Create a collector for the `k` smallest-distance entries.
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0);
+        Self { k, heap: Vec::with_capacity(k + 1) }
+    }
+
+    /// Current worst (largest) kept distance, or `f32::INFINITY` while the
+    /// collector holds fewer than `k` entries.
+    #[inline]
+    pub fn threshold(&self) -> f32 {
+        if self.heap.len() < self.k {
+            f32::INFINITY
+        } else {
+            self.heap[0].0
+        }
+    }
+
+    /// Offer an entry; keeps it only if it is among the k smallest so far.
+    #[inline]
+    pub fn offer(&mut self, dist: f32, id: u32) {
+        if self.heap.len() < self.k {
+            self.heap.push((dist, id));
+            self.sift_up(self.heap.len() - 1);
+        } else if dist < self.heap[0].0 {
+            self.heap[0] = (dist, id);
+            self.sift_down(0);
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let p = (i - 1) / 2;
+            if self.heap[p].0 < self.heap[i].0 {
+                self.heap.swap(p, i);
+                i = p;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut biggest = i;
+            if l < self.heap.len() && self.heap[l].0 > self.heap[biggest].0 {
+                biggest = l;
+            }
+            if r < self.heap.len() && self.heap[r].0 > self.heap[biggest].0 {
+                biggest = r;
+            }
+            if biggest == i {
+                return;
+            }
+            self.heap.swap(i, biggest);
+            i = biggest;
+        }
+    }
+
+    /// Number of entries currently held.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True if no entries are held.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Consume into `(dist, id)` pairs sorted ascending by distance
+    /// (ties broken by id for determinism).
+    pub fn into_sorted(mut self) -> Vec<(f32, u32)> {
+        self.heap
+            .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then_with(|| a.1.cmp(&b.1)));
+        self.heap
+    }
+}
+
+/// Exact top-`k` neighbor ids for every query, by brute force, sharded
+/// across available cores.
+pub fn ground_truth(base: &VectorSet, queries: &VectorSet, k: usize) -> Vec<Vec<u32>> {
+    assert_eq!(base.dim(), queries.dim(), "base/query dimensionality mismatch");
+    assert!(k <= base.len(), "k={k} larger than base size {}", base.len());
+    let nq = queries.len();
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let chunk = nq.div_ceil(threads.max(1));
+    let mut out: Vec<Vec<u32>> = vec![Vec::new(); nq];
+
+    std::thread::scope(|s| {
+        for (t, slot) in out.chunks_mut(chunk.max(1)).enumerate() {
+            let start = t * chunk.max(1);
+            s.spawn(move || {
+                for (off, row) in slot.iter_mut().enumerate() {
+                    let q = queries.row(start + off);
+                    let mut top = TopK::new(k);
+                    for (id, v) in base.iter().enumerate() {
+                        top.offer(l2_sq(q, v), id as u32);
+                    }
+                    *row = top.into_sorted().into_iter().map(|(_, id)| id).collect();
+                }
+            });
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn naive_topk(base: &VectorSet, q: &[f32], k: usize) -> Vec<u32> {
+        let mut d: Vec<(f32, u32)> = base
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (l2_sq(q, v), i as u32))
+            .collect();
+        d.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then_with(|| a.1.cmp(&b.1)));
+        d.truncate(k);
+        d.into_iter().map(|(_, i)| i).collect()
+    }
+
+    #[test]
+    fn topk_keeps_k_smallest() {
+        let mut t = TopK::new(3);
+        for (i, d) in [5.0f32, 1.0, 4.0, 2.0, 3.0, 0.5].iter().enumerate() {
+            t.offer(*d, i as u32);
+        }
+        let got = t.into_sorted();
+        assert_eq!(got.iter().map(|p| p.1).collect::<Vec<_>>(), vec![5, 1, 3]);
+        assert_eq!(got[0].0, 0.5);
+    }
+
+    #[test]
+    fn topk_threshold_transitions() {
+        let mut t = TopK::new(2);
+        assert_eq!(t.threshold(), f32::INFINITY);
+        t.offer(3.0, 0);
+        assert_eq!(t.threshold(), f32::INFINITY);
+        t.offer(1.0, 1);
+        assert_eq!(t.threshold(), 3.0);
+        t.offer(2.0, 2);
+        assert_eq!(t.threshold(), 2.0);
+    }
+
+    #[test]
+    fn topk_handles_fewer_offers_than_k() {
+        let mut t = TopK::new(10);
+        t.offer(1.0, 7);
+        let got = t.into_sorted();
+        assert_eq!(got, vec![(1.0, 7)]);
+    }
+
+    #[test]
+    fn ground_truth_matches_naive_sort() {
+        let mut rng = Pcg32::new(42);
+        let mut base = VectorSet::new(8);
+        for _ in 0..300 {
+            let v: Vec<f32> = (0..8).map(|_| rng.gaussian()).collect();
+            base.push(&v);
+        }
+        let mut queries = VectorSet::new(8);
+        for _ in 0..17 {
+            let v: Vec<f32> = (0..8).map(|_| rng.gaussian()).collect();
+            queries.push(&v);
+        }
+        let gt = ground_truth(&base, &queries, 10);
+        for (qi, row) in gt.iter().enumerate() {
+            assert_eq!(row, &naive_topk(&base, queries.row(qi), 10), "query {qi}");
+        }
+    }
+
+    #[test]
+    fn ground_truth_self_query_finds_itself() {
+        let mut base = VectorSet::new(4);
+        for i in 0..50 {
+            base.push(&[i as f32, 0.0, 0.0, 0.0]);
+        }
+        let mut q = VectorSet::new(4);
+        q.push(&[20.0, 0.0, 0.0, 0.0]);
+        let gt = ground_truth(&base, &q, 3);
+        assert_eq!(gt[0][0], 20);
+    }
+}

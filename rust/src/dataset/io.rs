@@ -1,0 +1,163 @@
+//! fvecs / ivecs interchange (the TEXMEX / ANN-benchmarks container used by
+//! SIFT1M) plus a simple binary container for saving generated corpora.
+//!
+//! fvecs format: each vector is `[d: i32-le][d × f32-le]`; ivecs is the same
+//! with i32 payloads. `read_fvecs` lets a real SIFT1M download drop into the
+//! benchmark pipeline unchanged.
+
+use super::VectorSet;
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+fn read_u32_le(r: &mut impl Read) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Read an entire fvecs file into a [`VectorSet`].
+pub fn read_fvecs(path: impl AsRef<Path>) -> Result<VectorSet> {
+    let path = path.as_ref();
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let len = f.metadata()?.len();
+    let mut r = BufReader::new(f);
+    let mut vs: Option<VectorSet> = None;
+    let mut consumed = 0u64;
+    let mut buf: Vec<u8> = Vec::new();
+    while consumed < len {
+        let d = read_u32_le(&mut r)? as usize;
+        if d == 0 || d > 1 << 20 {
+            bail!("implausible fvecs dimension {d} at offset {consumed}");
+        }
+        buf.resize(d * 4, 0);
+        r.read_exact(&mut buf)?;
+        consumed += 4 + (d as u64) * 4;
+        let row: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let set = vs.get_or_insert_with(|| VectorSet::new(d));
+        if set.dim() != d {
+            bail!("inconsistent dimension {d} (expected {})", set.dim());
+        }
+        set.push(&row);
+    }
+    vs.ok_or_else(|| anyhow::anyhow!("empty fvecs file {}", path.display()))
+}
+
+/// Write a [`VectorSet`] in fvecs format.
+pub fn write_fvecs(path: impl AsRef<Path>, vs: &VectorSet) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())?;
+    let mut w = BufWriter::new(f);
+    for row in vs.iter() {
+        w.write_all(&(vs.dim() as u32).to_le_bytes())?;
+        for &x in row {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read an ivecs file (e.g. SIFT1M's ground-truth lists).
+pub fn read_ivecs(path: impl AsRef<Path>) -> Result<Vec<Vec<u32>>> {
+    let path = path.as_ref();
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let len = f.metadata()?.len();
+    let mut r = BufReader::new(f);
+    let mut out = Vec::new();
+    let mut consumed = 0u64;
+    while consumed < len {
+        let d = read_u32_le(&mut r)? as usize;
+        if d > 1 << 20 {
+            bail!("implausible ivecs row length {d}");
+        }
+        let mut row = Vec::with_capacity(d);
+        for _ in 0..d {
+            row.push(read_u32_le(&mut r)?);
+        }
+        consumed += 4 + (d as u64) * 4;
+        out.push(row);
+    }
+    Ok(out)
+}
+
+/// Write ground-truth lists in ivecs format.
+pub fn write_ivecs(path: impl AsRef<Path>, rows: &[Vec<u32>]) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())?;
+    let mut w = BufWriter::new(f);
+    for row in rows {
+        w.write_all(&(row.len() as u32).to_le_bytes())?;
+        for &x in row {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("phnsw_io_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn fvecs_roundtrip() {
+        let mut vs = VectorSet::new(4);
+        vs.push(&[1.0, -2.5, 3.25, 0.0]);
+        vs.push(&[4.0, 5.0, 6.0, -7.5]);
+        let p = tmp("roundtrip.fvecs");
+        write_fvecs(&p, &vs).unwrap();
+        let back = read_fvecs(&p).unwrap();
+        assert_eq!(vs, back);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn ivecs_roundtrip() {
+        let rows = vec![vec![1u32, 2, 3], vec![9, 8, 7]];
+        let p = tmp("roundtrip.ivecs");
+        write_ivecs(&p, &rows).unwrap();
+        let back = read_ivecs(&p).unwrap();
+        assert_eq!(rows, back);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn read_fvecs_rejects_missing_file() {
+        assert!(read_fvecs("/nonexistent/definitely_not_here.fvecs").is_err());
+    }
+
+    #[test]
+    fn read_fvecs_rejects_inconsistent_dims() {
+        let p = tmp("ragged.fvecs");
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&p).unwrap();
+            // one 2-dim row then one 3-dim row
+            f.write_all(&2u32.to_le_bytes()).unwrap();
+            f.write_all(&1.0f32.to_le_bytes()).unwrap();
+            f.write_all(&2.0f32.to_le_bytes()).unwrap();
+            f.write_all(&3u32.to_le_bytes()).unwrap();
+            for _ in 0..3 {
+                f.write_all(&0.0f32.to_le_bytes()).unwrap();
+            }
+        }
+        assert!(read_fvecs(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn empty_fvecs_is_an_error() {
+        let p = tmp("empty.fvecs");
+        std::fs::File::create(&p).unwrap();
+        assert!(read_fvecs(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,182 @@
+//! Dataset substrate: vector storage, synthetic SIFT-like generation,
+//! fvecs/ivecs interchange, and brute-force ground truth.
+//!
+//! The paper evaluates on SIFT1M [4]. That corpus is not redistributable
+//! here, so [`synthetic`] generates a clustered, anisotropic corpus whose
+//! PCA energy profile matches SIFT's (≈80 % of variance in the top 15 of
+//! 128 dimensions) — the property pHNSW's filtering quality depends on.
+//! Real SIFT1M drops in through [`io::read_fvecs`].
+
+pub mod gt;
+pub mod io;
+pub mod synthetic;
+
+pub use gt::ground_truth;
+pub use synthetic::{SyntheticConfig, generate};
+
+/// A dense, row-major matrix of `n` vectors × `dim` f32 components.
+///
+/// This is the canonical in-memory vector container for the whole crate:
+/// the graph builder, the PCA trainer, the DB layout packers and the
+/// search engines all borrow rows out of one `VectorSet`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VectorSet {
+    dim: usize,
+    data: Vec<f32>,
+}
+
+impl VectorSet {
+    /// Create an empty set with the given dimensionality.
+    pub fn new(dim: usize) -> Self {
+        assert!(dim > 0, "dimension must be positive");
+        Self { dim, data: Vec::new() }
+    }
+
+    /// Build from a flat row-major buffer. `data.len()` must be a multiple
+    /// of `dim`.
+    pub fn from_flat(dim: usize, data: Vec<f32>) -> Self {
+        assert!(dim > 0, "dimension must be positive");
+        assert_eq!(data.len() % dim, 0, "flat length {} not divisible by dim {dim}", data.len());
+        Self { dim, data }
+    }
+
+    /// Number of vectors.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    /// True if the set holds no vectors.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Dimensionality of every vector.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Borrow vector `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Mutably borrow vector `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Append one vector (must match `dim`).
+    pub fn push(&mut self, v: &[f32]) {
+        assert_eq!(v.len(), self.dim, "vector length mismatch");
+        self.data.extend_from_slice(v);
+    }
+
+    /// The flat row-major backing buffer.
+    #[inline]
+    pub fn flat(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Iterate over rows.
+    pub fn iter(&self) -> impl Iterator<Item = &[f32]> {
+        self.data.chunks_exact(self.dim)
+    }
+
+    /// Total payload bytes when stored as f32 (the paper's storage unit).
+    pub fn payload_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// A benchmark bundle: base corpus, query set, and exact top-k ground truth.
+#[derive(Debug, Clone)]
+pub struct Benchmark {
+    /// Base vectors the index is built over.
+    pub base: VectorSet,
+    /// Query vectors.
+    pub queries: VectorSet,
+    /// `gt[q]` = indices of the exact `k_gt` nearest base vectors to query `q`.
+    pub gt: Vec<Vec<u32>>,
+    /// Depth of the ground-truth lists.
+    pub k_gt: usize,
+}
+
+impl Benchmark {
+    /// Assemble a benchmark, computing exact ground truth by brute force.
+    pub fn with_ground_truth(base: VectorSet, queries: VectorSet, k_gt: usize) -> Self {
+        let gt = ground_truth(&base, &queries, k_gt);
+        Self { base, queries, gt, k_gt }
+    }
+}
+
+/// Squared Euclidean distance between two equal-length slices.
+///
+/// This is the crate's scalar reference implementation; the hot paths use
+/// [`crate::search::dist::l2_sq`] which is unrolled.
+#[inline]
+pub fn l2_sq_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0f32;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        acc += d * d;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vectorset_roundtrip() {
+        let mut vs = VectorSet::new(3);
+        assert!(vs.is_empty());
+        vs.push(&[1.0, 2.0, 3.0]);
+        vs.push(&[4.0, 5.0, 6.0]);
+        assert_eq!(vs.len(), 2);
+        assert_eq!(vs.dim(), 3);
+        assert_eq!(vs.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(vs.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(vs.flat().len(), 6);
+        assert_eq!(vs.payload_bytes(), 24);
+    }
+
+    #[test]
+    fn vectorset_from_flat_and_iter() {
+        let vs = VectorSet::from_flat(2, vec![1.0, 2.0, 3.0, 4.0]);
+        let rows: Vec<&[f32]> = vs.iter().collect();
+        assert_eq!(rows, vec![&[1.0, 2.0][..], &[3.0, 4.0][..]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn vectorset_from_flat_rejects_ragged() {
+        let _ = VectorSet::from_flat(3, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn vectorset_push_rejects_wrong_dim() {
+        let mut vs = VectorSet::new(3);
+        vs.push(&[1.0]);
+    }
+
+    #[test]
+    fn l2_matches_hand_computation() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [4.0f32, 6.0, 3.0];
+        assert_eq!(l2_sq_scalar(&a, &b), 9.0 + 16.0);
+    }
+
+    #[test]
+    fn l2_zero_on_identical() {
+        let a = [0.5f32; 17];
+        assert_eq!(l2_sq_scalar(&a, &a), 0.0);
+    }
+}

@@ -1,0 +1,23 @@
+//! Off-chip database organization — Fig. 3(a) of the paper.
+//!
+//! Three layouts are modeled; each assigns every piece of search-time data
+//! a DRAM address so the timing simulator can classify accesses as
+//! sequential bursts vs. irregular row activations:
+//!
+//! * [`LayoutKind::Std`] (②) — per-layer index tables hold neighbor id
+//!   lists only; all raw data lives in one high-dimensional table. This is
+//!   what HNSW-Std traverses: every distance needs an *irregular* high-dim
+//!   row fetch.
+//! * [`LayoutKind::Sep`] (④, pKNN-style) — like Std plus a separate
+//!   low-dimensional table. The filter stage reads low-dim rows, but each
+//!   neighbor's low-dim vector is an independent irregular access.
+//! * [`LayoutKind::Inline`] (③, the paper's contribution) — each node's
+//!   index-table entry stores the neighbor id list *followed by those
+//!   neighbors' low-dim vectors*, so one sequential burst delivers
+//!   everything the filter stage needs. Costs ≈2.92× the raw dataset in
+//!   DRAM (Section IV-A / V-C) because low-dim data is duplicated once per
+//!   in-edge.
+
+pub mod layout;
+
+pub use layout::{AccessClass, DbLayout, LayoutKind, MemRequest, Region};

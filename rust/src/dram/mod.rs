@@ -1,0 +1,13 @@
+//! DRAM timing + energy model (Ramulator substitute, §V-A1).
+//!
+//! The paper models DDR4 (19.2 GB/s, 18.75 pJ/bit) and HBM1.0
+//! (128 GB/s, 7 pJ/bit) with Ramulator. What the evaluation actually needs
+//! from the DRAM model is the *differential cost of irregular vs
+//! sequential access*: layout ③ turns per-neighbor pointer chases into one
+//! burst, and Table III/Fig. 5 quantify what that buys. This model
+//! captures exactly that: banks with open-row tracking, row-activation
+//! penalties on misses, and bandwidth-limited streaming for bursts.
+
+pub mod model;
+
+pub use model::{DramConfig, DramSim, DramStats};

@@ -1,0 +1,195 @@
+//! Energy accounting (Fig. 5).
+//!
+//! Three contributors per query:
+//! * **DRAM** — from [`crate::dram::DramSim`] (pJ/bit + activation energy);
+//!   the paper's dominant term (82–87 % on DDR4, 63–72 % on HBM).
+//! * **SPM** — access energy from the CACTI-style [`spm_model`].
+//! * **Core** — per-op dynamic energies for each unit plus static
+//!   (leakage + clock) power integrated over the query's runtime.
+//!
+//! Per-op energies are calibrated from the synthesized-power operating
+//! point the paper reports (65 nm @ 1 GHz; Dist.L+kSort.L < 1 % of total
+//! query energy) — see DESIGN.md §5 for the substitution note.
+
+pub mod spm_model;
+
+pub use spm_model::SramModel;
+
+use crate::hw::isa::InstrMix;
+
+/// Per-op dynamic energies (pJ) and static power for the core.
+#[derive(Debug, Clone)]
+pub struct EnergyConfig {
+    /// One 16-lane Dist.L element step (16 MACs).
+    pub dist_l_op_pj: f64,
+    /// One Dist.H MAC step (16 MACs).
+    pub dist_h_op_pj: f64,
+    /// One kSort.L invocation (16×16 comparator array + rank decode).
+    pub ksort_pj: f64,
+    /// One register move (register file read + write).
+    pub move_pj: f64,
+    /// One Min.H selection.
+    pub min_h_pj: f64,
+    /// One RMF operation.
+    pub rmf_pj: f64,
+    /// One jump.
+    pub jmp_pj: f64,
+    /// One DMA descriptor issue (AGU + DMA control).
+    pub dma_issue_pj: f64,
+    /// SPM access energy (pJ per word access).
+    pub spm_access_pj: f64,
+    /// Core static power (leakage + clock tree), mW.
+    pub static_mw: f64,
+}
+
+impl Default for EnergyConfig {
+    fn default() -> Self {
+        let spm = SramModel::new(crate::params::SPM_BYTES);
+        Self {
+            dist_l_op_pj: 8.0,
+            dist_h_op_pj: 8.0,
+            ksort_pj: 60.0,
+            move_pj: 1.0,
+            min_h_pj: 1.0,
+            rmf_pj: 4.0,
+            jmp_pj: 0.5,
+            dma_issue_pj: 2.0,
+            spm_access_pj: spm.access_pj(),
+            static_mw: 55.0 + spm.leakage_mw(),
+        }
+    }
+}
+
+/// Energy of one simulated query, by contributor (pJ).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    /// Off-chip DRAM energy.
+    pub dram_pj: f64,
+    /// Scratchpad access energy.
+    pub spm_pj: f64,
+    /// Functional-unit dynamic energy (Dist.L + kSort.L separated out
+    /// because the paper calls out their < 1 % share).
+    pub filter_units_pj: f64,
+    /// Remaining core dynamic energy (Dist.H, moves, control).
+    pub core_other_pj: f64,
+    /// Static (leakage + clock) energy over the query runtime.
+    pub static_pj: f64,
+}
+
+impl EnergyBreakdown {
+    /// Total energy (pJ).
+    pub fn total_pj(&self) -> f64 {
+        self.dram_pj + self.spm_pj + self.filter_units_pj + self.core_other_pj + self.static_pj
+    }
+
+    /// DRAM share of total.
+    pub fn dram_share(&self) -> f64 {
+        let t = self.total_pj();
+        if t <= 0.0 {
+            0.0
+        } else {
+            self.dram_pj / t
+        }
+    }
+
+    /// Dist.L + kSort.L share (paper: < 1 %).
+    pub fn filter_share(&self) -> f64 {
+        let t = self.total_pj();
+        if t <= 0.0 {
+            0.0
+        } else {
+            self.filter_units_pj / t
+        }
+    }
+
+    /// Element-wise sum.
+    pub fn add(&mut self, o: &EnergyBreakdown) {
+        self.dram_pj += o.dram_pj;
+        self.spm_pj += o.spm_pj;
+        self.filter_units_pj += o.filter_units_pj;
+        self.core_other_pj += o.core_other_pj;
+        self.static_pj += o.static_pj;
+    }
+}
+
+/// Fold an instruction mix + runtime + memory traffic into a breakdown.
+///
+/// `dram_pj` comes straight from the DRAM simulator; `spm_accesses` from
+/// the SPM model; `runtime_ns` integrates static power.
+pub fn account(
+    cfg: &EnergyConfig,
+    mix: &InstrMix,
+    dram_pj: f64,
+    spm_accesses: u64,
+    runtime_ns: f64,
+) -> EnergyBreakdown {
+    let filter_units_pj = mix.dist_l as f64 * cfg.dist_l_op_pj + mix.ksort as f64 * cfg.ksort_pj;
+    let core_other_pj = mix.dist_h as f64 * cfg.dist_h_op_pj
+        + mix.moves as f64 * cfg.move_pj
+        + mix.min_h as f64 * cfg.min_h_pj
+        + mix.rmf as f64 * cfg.rmf_pj
+        + mix.jmp as f64 * cfg.jmp_pj
+        + mix.dma as f64 * cfg.dma_issue_pj;
+    EnergyBreakdown {
+        dram_pj,
+        spm_pj: spm_accesses as f64 * cfg.spm_access_pj,
+        filter_units_pj,
+        core_other_pj,
+        // 1 mW × 1 ns = 1e-3 J/s × 1e-9 s = 1e-12 J = 1 pJ, so mW·ns is pJ.
+        static_pj: cfg.static_mw * runtime_ns,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_energy_units() {
+        // 55 mW for 1 µs = 55e-3 J/s × 1e-6 s = 55 nJ = 55_000 pJ.
+        let cfg = EnergyConfig { static_mw: 55.0, ..Default::default() };
+        let e = account(&cfg, &InstrMix::default(), 0.0, 0, 1000.0);
+        assert!((e.static_pj - 55_000.0).abs() < 1e-6, "got {} pJ", e.static_pj);
+    }
+
+    #[test]
+    fn breakdown_sums_and_shares() {
+        let b = EnergyBreakdown {
+            dram_pj: 80.0,
+            spm_pj: 10.0,
+            filter_units_pj: 1.0,
+            core_other_pj: 5.0,
+            static_pj: 4.0,
+        };
+        assert!((b.total_pj() - 100.0).abs() < 1e-12);
+        assert!((b.dram_share() - 0.8).abs() < 1e-12);
+        assert!((b.filter_share() - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn account_attributes_units() {
+        let cfg = EnergyConfig::default();
+        let mix = InstrMix { dist_l: 10, ksort: 2, dist_h: 4, moves: 100, ..Default::default() };
+        let e = account(&cfg, &mix, 500.0, 20, 0.0);
+        assert!((e.filter_units_pj - (10.0 * cfg.dist_l_op_pj + 2.0 * cfg.ksort_pj)).abs() < 1e-9);
+        assert!(
+            (e.core_other_pj - (4.0 * cfg.dist_h_op_pj + 100.0 * cfg.move_pj)).abs() < 1e-9
+        );
+        assert_eq!(e.dram_pj, 500.0);
+        assert!((e.spm_pj - 20.0 * cfg.spm_access_pj).abs() < 1e-9);
+    }
+
+    #[test]
+    fn add_is_elementwise() {
+        let mut a = EnergyBreakdown {
+            dram_pj: 1.0,
+            spm_pj: 2.0,
+            filter_units_pj: 3.0,
+            core_other_pj: 4.0,
+            static_pj: 5.0,
+        };
+        let b = a;
+        a.add(&b);
+        assert!((a.total_pj() - 30.0).abs() < 1e-12);
+    }
+}

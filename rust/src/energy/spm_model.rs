@@ -1,0 +1,87 @@
+//! CACTI-style analytic SRAM model (substitute for CACTI 7.0, §V-A1).
+//!
+//! CACTI's outputs for single-port SRAM at 65 nm are well approximated by
+//! power-law fits in capacity. The constants below are calibrated so the
+//! paper's 128 KB SPM lands at its published operating point: 37.5 % of
+//! the 0.739 mm² processor (≈0.277 mm²) with a read energy in the 20 pJ
+//! range typical of 65 nm 128 KB arrays.
+
+/// Analytic SRAM macro model.
+#[derive(Debug, Clone)]
+pub struct SramModel {
+    /// Capacity in bytes.
+    pub capacity_bytes: usize,
+    /// Read/write port count.
+    pub ports: usize,
+}
+
+impl SramModel {
+    /// Single-port macro of the given capacity.
+    pub fn new(capacity_bytes: usize) -> Self {
+        Self { capacity_bytes, ports: 1 }
+    }
+
+    fn kb(&self) -> f64 {
+        self.capacity_bytes as f64 / 1024.0
+    }
+
+    /// Area in mm² (65 nm). Linear in capacity with a fixed periphery
+    /// term; extra ports multiply the cell array.
+    pub fn area_mm2(&self) -> f64 {
+        let cell = 0.00193 * self.kb() * (1.0 + 0.65 * (self.ports as f64 - 1.0));
+        0.030 + cell
+    }
+
+    /// Dynamic energy per access (pJ): wordline/bitline energy grows with
+    /// the square root of capacity (longer lines), per CACTI scaling.
+    pub fn access_pj(&self) -> f64 {
+        2.0 * self.kb().sqrt() * (1.0 + 0.3 * (self.ports as f64 - 1.0))
+    }
+
+    /// Leakage power (mW), linear in capacity.
+    pub fn leakage_mw(&self) -> f64 {
+        0.045 * self.kb()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spm_128kb_matches_fig4_share() {
+        let m = SramModel::new(128 * 1024);
+        // Fig. 4: SPM = 37.5% of 0.739 mm² ≈ 0.277 mm².
+        let want = 0.739 * 0.375;
+        assert!(
+            (m.area_mm2() - want).abs() < 0.01,
+            "area {} vs Fig.4 {}",
+            m.area_mm2(),
+            want
+        );
+    }
+
+    #[test]
+    fn access_energy_in_65nm_band() {
+        let m = SramModel::new(128 * 1024);
+        let pj = m.access_pj();
+        assert!((10.0..40.0).contains(&pj), "128 KB access energy {pj} pJ");
+    }
+
+    #[test]
+    fn monotone_in_capacity() {
+        let small = SramModel::new(16 * 1024);
+        let big = SramModel::new(256 * 1024);
+        assert!(small.area_mm2() < big.area_mm2());
+        assert!(small.access_pj() < big.access_pj());
+        assert!(small.leakage_mw() < big.leakage_mw());
+    }
+
+    #[test]
+    fn ports_cost_area_and_energy() {
+        let sp = SramModel::new(32 * 1024);
+        let mp = SramModel { capacity_bytes: 32 * 1024, ports: 4 };
+        assert!(mp.area_mm2() > 1.5 * sp.area_mm2());
+        assert!(mp.access_pj() > sp.access_pj());
+    }
+}

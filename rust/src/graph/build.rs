@@ -1,0 +1,328 @@
+//! HNSW index construction (Algorithm 1 + 4 of [2]).
+//!
+//! Single-threaded insertion (deterministic given the seed). Neighbor
+//! selection uses the *heuristic* variant of [2] §4 (`select_neighbors_heuristic`
+//! with `extendCandidates = false`, `keepPrunedConnections = true`), which
+//! is what hnswlib ships and what the paper's recall numbers assume.
+
+use super::HnswGraph;
+use crate::dataset::gt::TopK;
+use crate::dataset::VectorSet;
+use crate::rng::Pcg32;
+use crate::search::dist::l2_sq;
+use crate::search::visited::VisitedSet;
+use std::collections::BinaryHeap;
+
+/// Construction parameters.
+#[derive(Debug, Clone)]
+pub struct BuildConfig {
+    /// Max neighbors per node, levels ≥ 1 (level 0 gets `2 * m`).
+    pub m: usize,
+    /// Beam width during construction.
+    pub ef_construction: usize,
+    /// Level-assignment temperature; `None` → `1 / ln(m)` (paper default).
+    pub ml: Option<f64>,
+    /// RNG seed for level draws.
+    pub seed: u64,
+    /// Cap on the highest level (the paper's SIFT1M graph has 6 layers,
+    /// i.e. levels 0..=5).
+    pub max_level: usize,
+}
+
+impl Default for BuildConfig {
+    fn default() -> Self {
+        Self {
+            m: crate::params::M,
+            ef_construction: crate::params::EF_CONSTRUCTION,
+            ml: None,
+            seed: 0xC0FFEE,
+            max_level: crate::params::LAYERS - 1,
+        }
+    }
+}
+
+/// Min-heap adapter over (dist, id) — BinaryHeap is a max-heap, so wrap
+/// with reversed ordering.
+#[derive(PartialEq)]
+struct MinDist(f32, u32);
+impl Eq for MinDist {}
+impl PartialOrd for MinDist {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for MinDist {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other.0.partial_cmp(&self.0).unwrap().then_with(|| other.1.cmp(&self.1))
+    }
+}
+
+/// Beam search at one level: returns up to `ef` closest nodes to `q`,
+/// sorted ascending by distance. This is Algorithm 2 of [2].
+fn search_layer(
+    graph: &HnswGraph,
+    data: &VectorSet,
+    q: &[f32],
+    entry: &[(f32, u32)],
+    ef: usize,
+    level: usize,
+    visited: &mut VisitedSet,
+) -> Vec<(f32, u32)> {
+    visited.clear();
+    let mut candidates = BinaryHeap::new(); // min-heap by dist
+    let mut found = TopK::new(ef); // keeps ef smallest
+    for &(d, id) in entry {
+        visited.insert(id);
+        candidates.push(MinDist(d, id));
+        found.offer(d, id);
+    }
+    while let Some(MinDist(d, c)) = candidates.pop() {
+        if d > found.threshold() {
+            break;
+        }
+        for &nb in graph.neighbors(c, level) {
+            if visited.insert(nb) {
+                let dn = l2_sq(q, data.row(nb as usize));
+                if dn < found.threshold() || found.len() < ef {
+                    candidates.push(MinDist(dn, nb));
+                    found.offer(dn, nb);
+                }
+            }
+        }
+    }
+    found.into_sorted()
+}
+
+/// Heuristic neighbor selection (Algorithm 4 of [2]): prefer candidates
+/// that are closer to `q` than to any already-selected neighbor, so edges
+/// spread in different directions; backfill with pruned candidates.
+fn select_neighbors_heuristic(
+    data: &VectorSet,
+    _q: &[f32],
+    mut candidates: Vec<(f32, u32)>,
+    m: usize,
+) -> Vec<u32> {
+    if candidates.len() <= m {
+        return candidates.into_iter().map(|(_, id)| id).collect();
+    }
+    candidates.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then_with(|| a.1.cmp(&b.1)));
+    let mut selected: Vec<(f32, u32)> = Vec::with_capacity(m);
+    let mut pruned: Vec<(f32, u32)> = Vec::new();
+    for (d, id) in candidates {
+        if selected.len() >= m {
+            break;
+        }
+        let dominated = selected.iter().any(|&(_, s)| {
+            l2_sq(data.row(id as usize), data.row(s as usize)) < d
+        });
+        if dominated {
+            pruned.push((d, id));
+        } else {
+            selected.push((d, id));
+        }
+    }
+    // keepPrunedConnections: backfill to m with the best pruned candidates.
+    for (d, id) in pruned {
+        if selected.len() >= m {
+            break;
+        }
+        selected.push((d, id));
+    }
+    selected.into_iter().map(|(_, id)| id).collect()
+}
+
+/// Re-prune `node`'s neighbor list at `level` down to capacity after a new
+/// back-edge pushed it over.
+fn shrink_neighbors(graph: &mut HnswGraph, data: &VectorSet, node: u32, level: usize) {
+    let cap = graph.capacity(level);
+    let list = graph.neighbors(node, level);
+    if list.len() <= cap {
+        return;
+    }
+    let q = data.row(node as usize);
+    let cands: Vec<(f32, u32)> = list
+        .iter()
+        .map(|&nb| (l2_sq(q, data.row(nb as usize)), nb))
+        .collect();
+    let new_list = select_neighbors_heuristic(data, q, cands, cap);
+    graph.set_neighbors(node, level, new_list);
+}
+
+/// Build an HNSW index over `data`.
+pub fn build(data: &VectorSet, cfg: &BuildConfig) -> HnswGraph {
+    assert!(cfg.m >= 2, "M must be >= 2");
+    let m0 = cfg.m * 2;
+    let ml = cfg.ml.unwrap_or(1.0 / (cfg.m as f64).ln());
+    let mut rng = Pcg32::new(cfg.seed);
+    let mut graph = HnswGraph::empty(cfg.m, m0);
+    if data.is_empty() {
+        return graph;
+    }
+    let mut visited = VisitedSet::new(data.len());
+
+    for i in 0..data.len() {
+        let level = rng.hnsw_level(ml, cfg.max_level);
+        let q = data.row(i);
+
+        if graph.is_empty() {
+            graph.add_node(level);
+            continue;
+        }
+
+        let prev_max = graph.max_level();
+        let prev_ep = graph.entry_point();
+        let node = graph.add_node(level);
+
+        // Greedy descent from the old entry point down to level+1.
+        let mut ep = vec![(l2_sq(q, data.row(prev_ep as usize)), prev_ep)];
+        let mut l = prev_max;
+        while l > level {
+            ep = search_layer(&graph, data, q, &ep, 1, l, &mut visited);
+            l -= 1;
+        }
+
+        // Insert at each level from min(level, prev_max) down to 0.
+        let top = level.min(prev_max);
+        for lvl in (0..=top).rev() {
+            let found = search_layer(&graph, data, q, &ep, cfg.ef_construction, lvl, &mut visited);
+            let m_here = graph.capacity(lvl);
+            let selected = select_neighbors_heuristic(data, q, found.clone(), m_here);
+            graph.set_neighbors(node, lvl, selected.clone());
+            for nb in selected {
+                graph.push_neighbor(nb, lvl, node);
+                shrink_neighbors(&mut graph, data, nb, lvl);
+            }
+            ep = found;
+        }
+    }
+    graph
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic::{generate, SyntheticConfig};
+
+    fn small_benchmark() -> (VectorSet, HnswGraph) {
+        let cfg = SyntheticConfig { n_base: 1_000, n_queries: 1, ..SyntheticConfig::tiny() };
+        let (base, _) = generate(&cfg);
+        let bc = BuildConfig { m: 8, ef_construction: 64, ..Default::default() };
+        let g = build(&base, &bc);
+        (base, g)
+    }
+
+    #[test]
+    fn builds_all_nodes_and_invariants_hold() {
+        let (base, g) = small_benchmark();
+        assert_eq!(g.len(), base.len());
+        let errs = g.check_invariants();
+        assert!(errs.is_empty(), "{errs:?}");
+    }
+
+    #[test]
+    fn level_population_decays_geometrically() {
+        let (_, g) = small_benchmark();
+        let n0 = g.nodes_at_level(0);
+        let n1 = g.nodes_at_level(1);
+        assert_eq!(n0, g.len());
+        // P(level >= 1) = 1/m = 1/8 → about 125 of 1000.
+        assert!((60..=200).contains(&n1), "level-1 population {n1}");
+    }
+
+    #[test]
+    fn graph_is_connected_enough_at_level0() {
+        // BFS from entry point at level 0 should reach nearly every node;
+        // HNSW does not guarantee strong connectivity but on clustered
+        // data the giant component dominates.
+        let (_, g) = small_benchmark();
+        let mut seen = vec![false; g.len()];
+        let mut stack = vec![g.entry_point()];
+        seen[g.entry_point() as usize] = true;
+        let mut count = 1;
+        while let Some(n) = stack.pop() {
+            for &nb in g.neighbors(n, 0) {
+                if !seen[nb as usize] {
+                    seen[nb as usize] = true;
+                    count += 1;
+                    stack.push(nb);
+                }
+            }
+        }
+        assert!(
+            count as f64 >= 0.99 * g.len() as f64,
+            "only {count}/{} reachable",
+            g.len()
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = SyntheticConfig { n_base: 300, n_queries: 1, ..SyntheticConfig::tiny() };
+        let (base, _) = generate(&cfg);
+        let bc = BuildConfig { m: 6, ef_construction: 32, ..Default::default() };
+        let g1 = build(&base, &bc);
+        let g2 = build(&base, &bc);
+        assert_eq!(g1.entry_point(), g2.entry_point());
+        for n in 0..g1.len() as u32 {
+            assert_eq!(g1.level(n), g2.level(n));
+            for l in 0..=g1.level(n) {
+                assert_eq!(g1.neighbors(n, l), g2.neighbors(n, l));
+            }
+        }
+    }
+
+    #[test]
+    fn respects_max_level_cap() {
+        let cfg = SyntheticConfig { n_base: 2_000, n_queries: 1, ..SyntheticConfig::tiny() };
+        let (base, _) = generate(&cfg);
+        let bc = BuildConfig { m: 4, ef_construction: 16, max_level: 2, ..Default::default() };
+        let g = build(&base, &bc);
+        assert!(g.max_level() <= 2);
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs() {
+        let empty = VectorSet::new(4);
+        let g = build(&empty, &BuildConfig::default());
+        assert!(g.is_empty());
+
+        let mut one = VectorSet::new(4);
+        one.push(&[1.0, 2.0, 3.0, 4.0]);
+        let g = build(&one, &BuildConfig::default());
+        assert_eq!(g.len(), 1);
+        assert!(g.check_invariants().is_empty());
+    }
+
+    #[test]
+    fn select_neighbors_heuristic_keeps_closest_when_under_budget() {
+        let mut vs = VectorSet::new(2);
+        for i in 0..5 {
+            vs.push(&[i as f32, 0.0]);
+        }
+        let cands = vec![(1.0, 1), (4.0, 2)];
+        let sel = select_neighbors_heuristic(&vs, &[0.0, 0.0], cands, 4);
+        assert_eq!(sel, vec![1, 2]);
+    }
+
+    #[test]
+    fn select_neighbors_heuristic_diversifies() {
+        // q at origin; three candidates clustered to the right, one to the
+        // left but farther. With budget 2 the heuristic should pick one of
+        // the right cluster and the left point rather than two duplicates.
+        let mut vs = VectorSet::new(2);
+        vs.push(&[0.0, 0.0]); // 0: unused (q stand-in)
+        vs.push(&[1.0, 0.0]); // 1: right, close
+        vs.push(&[1.1, 0.0]); // 2: right, nearly same spot
+        vs.push(&[1.2, 0.0]); // 3: right, nearly same spot
+        vs.push(&[-2.0, 0.0]); // 4: left, farther
+        let q = [0.0f32, 0.0];
+        let cands: Vec<(f32, u32)> = [1u32, 2, 3, 4]
+            .iter()
+            .map(|&id| (l2_sq(&q, vs.row(id as usize)), id))
+            .collect();
+        let sel = select_neighbors_heuristic(&vs, &q, cands, 2);
+        assert_eq!(sel.len(), 2);
+        assert!(sel.contains(&1), "closest kept: {sel:?}");
+        assert!(sel.contains(&4), "diverse direction kept: {sel:?}");
+    }
+}

@@ -1,0 +1,276 @@
+//! HNSW graph construction — the *C* phase of [2] (Malkov & Yashunin).
+//!
+//! pHNSW reuses the standard HNSW index unmodified (the paper's
+//! contribution is in the *search* phase and the memory layout), so this
+//! module is a faithful implementation of Algorithm 1/4 of [2]:
+//! geometric layer assignment, greedy descent, efConstruction beam search
+//! per layer, heuristic neighbor selection, bidirectional linking with
+//! pruning.
+
+pub mod build;
+pub mod serialize;
+
+pub use build::{build, BuildConfig};
+
+/// Maximum representable layer (the paper's SIFT1M graph has 6).
+pub const MAX_LEVEL: usize = 15;
+
+/// A hierarchical navigable small-world graph.
+///
+/// Adjacency is stored per node, per level: `neighbors[node][level]` is the
+/// list of neighbor ids at that level. A node of level `L` has `L + 1`
+/// lists. Level capacities are `m0` at level 0 and `m` above.
+#[derive(Debug, Clone)]
+pub struct HnswGraph {
+    /// Max-neighbor budget for levels ≥ 1.
+    m: usize,
+    /// Max-neighbor budget for level 0.
+    m0: usize,
+    /// Entry point node id (a node on the top level).
+    entry_point: u32,
+    /// Highest populated level.
+    max_level: usize,
+    /// Per-node assigned level.
+    levels: Vec<u8>,
+    /// `adjacency[node][level]` → neighbor ids.
+    adjacency: Vec<Vec<Vec<u32>>>,
+}
+
+impl HnswGraph {
+    /// Create an empty graph (used by the builder).
+    pub(crate) fn empty(m: usize, m0: usize) -> Self {
+        Self { m, m0, entry_point: 0, max_level: 0, levels: Vec::new(), adjacency: Vec::new() }
+    }
+
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// True if the graph has no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.levels.is_empty()
+    }
+
+    /// Neighbor budget at `level`.
+    #[inline]
+    pub fn capacity(&self, level: usize) -> usize {
+        if level == 0 {
+            self.m0
+        } else {
+            self.m
+        }
+    }
+
+    /// M parameter (levels ≥ 1).
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// M0 parameter (level 0).
+    pub fn m0(&self) -> usize {
+        self.m0
+    }
+
+    /// Current entry point (top-level node).
+    pub fn entry_point(&self) -> u32 {
+        self.entry_point
+    }
+
+    /// Highest populated level.
+    pub fn max_level(&self) -> usize {
+        self.max_level
+    }
+
+    /// Level assigned to `node`.
+    #[inline]
+    pub fn level(&self, node: u32) -> usize {
+        self.levels[node as usize] as usize
+    }
+
+    /// Neighbors of `node` at `level` (empty if the node does not reach the
+    /// level).
+    #[inline]
+    pub fn neighbors(&self, node: u32, level: usize) -> &[u32] {
+        let lists = &self.adjacency[node as usize];
+        if level < lists.len() {
+            &lists[level]
+        } else {
+            &[]
+        }
+    }
+
+    /// Number of nodes present at `level` (i.e. with `level(n) >= level`).
+    pub fn nodes_at_level(&self, level: usize) -> usize {
+        self.levels.iter().filter(|&&l| l as usize >= level).count()
+    }
+
+    /// Total directed edges at `level`.
+    pub fn edges_at_level(&self, level: usize) -> usize {
+        self.adjacency
+            .iter()
+            .map(|lists| lists.get(level).map_or(0, |l| l.len()))
+            .sum()
+    }
+
+    /// Mean out-degree at `level` over nodes present there.
+    pub fn mean_degree(&self, level: usize) -> f64 {
+        let n = self.nodes_at_level(level);
+        if n == 0 {
+            return 0.0;
+        }
+        self.edges_at_level(level) as f64 / n as f64
+    }
+
+    // ---- mutation (builder only) -------------------------------------
+
+    pub(crate) fn add_node(&mut self, level: usize) -> u32 {
+        let id = self.levels.len() as u32;
+        self.levels.push(level as u8);
+        self.adjacency.push(vec![Vec::new(); level + 1]);
+        if id == 0 || level > self.max_level {
+            self.max_level = level;
+            self.entry_point = id;
+        }
+        id
+    }
+
+    pub(crate) fn set_neighbors(&mut self, node: u32, level: usize, list: Vec<u32>) {
+        debug_assert!(list.len() <= self.capacity(level) + 1);
+        self.adjacency[node as usize][level] = list;
+    }
+
+    pub(crate) fn push_neighbor(&mut self, node: u32, level: usize, nb: u32) {
+        self.adjacency[node as usize][level].push(nb);
+    }
+
+    /// Verify structural invariants; returns a list of violations (empty =
+    /// healthy). Used by tests and by `phnsw check`.
+    pub fn check_invariants(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        let n = self.len() as u32;
+        if self.is_empty() {
+            return errs;
+        }
+        if self.entry_point >= n {
+            errs.push(format!("entry point {} out of range", self.entry_point));
+        }
+        if self.level(self.entry_point) != self.max_level {
+            errs.push(format!(
+                "entry point level {} != max level {}",
+                self.level(self.entry_point),
+                self.max_level
+            ));
+        }
+        for node in 0..n {
+            let lvl = self.level(node);
+            if self.adjacency[node as usize].len() != lvl + 1 {
+                errs.push(format!("node {node}: {} lists for level {lvl}", self.adjacency[node as usize].len()));
+            }
+            for l in 0..=lvl {
+                let nbrs = self.neighbors(node, l);
+                if nbrs.len() > self.capacity(l) {
+                    errs.push(format!("node {node} level {l}: degree {} > cap {}", nbrs.len(), self.capacity(l)));
+                }
+                let mut seen = std::collections::HashSet::new();
+                for &nb in nbrs {
+                    if nb >= n {
+                        errs.push(format!("node {node} level {l}: neighbor {nb} out of range"));
+                    } else {
+                        if self.level(nb) < l {
+                            errs.push(format!(
+                                "node {node} level {l}: neighbor {nb} only reaches level {}",
+                                self.level(nb)
+                            ));
+                        }
+                        if nb == node {
+                            errs.push(format!("node {node} level {l}: self-loop"));
+                        }
+                        if !seen.insert(nb) {
+                            errs.push(format!("node {node} level {l}: duplicate neighbor {nb}"));
+                        }
+                    }
+                }
+            }
+        }
+        errs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_graph_is_sane() {
+        let g = HnswGraph::empty(16, 32);
+        assert!(g.is_empty());
+        assert_eq!(g.len(), 0);
+        assert!(g.check_invariants().is_empty());
+    }
+
+    #[test]
+    fn add_node_tracks_entry_point_and_levels() {
+        let mut g = HnswGraph::empty(4, 8);
+        let a = g.add_node(0);
+        assert_eq!(g.entry_point(), a);
+        assert_eq!(g.max_level(), 0);
+        let b = g.add_node(3);
+        assert_eq!(g.entry_point(), b);
+        assert_eq!(g.max_level(), 3);
+        let _c = g.add_node(1);
+        assert_eq!(g.entry_point(), b, "lower-level insert must not steal entry point");
+        assert_eq!(g.len(), 3);
+    }
+
+    #[test]
+    fn neighbors_empty_above_node_level() {
+        let mut g = HnswGraph::empty(4, 8);
+        let a = g.add_node(1);
+        let b = g.add_node(0);
+        g.push_neighbor(a, 0, b);
+        assert_eq!(g.neighbors(a, 0), &[b]);
+        assert_eq!(g.neighbors(a, 1), &[] as &[u32]);
+        assert_eq!(g.neighbors(b, 1), &[] as &[u32]);
+        assert_eq!(g.neighbors(a, 5), &[] as &[u32]);
+    }
+
+    #[test]
+    fn capacity_split_by_level() {
+        let g = HnswGraph::empty(16, 32);
+        assert_eq!(g.capacity(0), 32);
+        assert_eq!(g.capacity(1), 16);
+        assert_eq!(g.capacity(5), 16);
+    }
+
+    #[test]
+    fn invariant_checker_catches_violations() {
+        let mut g = HnswGraph::empty(4, 8);
+        let a = g.add_node(0);
+        let b = g.add_node(2);
+        // self loop
+        g.push_neighbor(a, 0, a);
+        // neighbor above its level: a (level 0) as neighbor at level 2
+        g.push_neighbor(b, 2, a);
+        let errs = g.check_invariants();
+        assert!(errs.iter().any(|e| e.contains("self-loop")), "{errs:?}");
+        assert!(errs.iter().any(|e| e.contains("only reaches level")), "{errs:?}");
+    }
+
+    #[test]
+    fn degree_stats() {
+        let mut g = HnswGraph::empty(4, 8);
+        let a = g.add_node(1);
+        let b = g.add_node(1);
+        let c = g.add_node(0);
+        g.push_neighbor(a, 0, b);
+        g.push_neighbor(a, 0, c);
+        g.push_neighbor(b, 0, a);
+        g.push_neighbor(a, 1, b);
+        assert_eq!(g.nodes_at_level(0), 3);
+        assert_eq!(g.nodes_at_level(1), 2);
+        assert_eq!(g.edges_at_level(0), 3);
+        assert_eq!(g.edges_at_level(1), 1);
+        assert!((g.mean_degree(0) - 1.0).abs() < 1e-12);
+    }
+}

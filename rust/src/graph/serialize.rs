@@ -1,0 +1,147 @@
+//! Graph (de)serialization — a small framed binary format (the offline
+//! registry has no serde), so benchmark runs can build the index once and
+//! reuse it across invocations.
+//!
+//! Layout (all little-endian):
+//! ```text
+//!   magic "HNS1"  u32 m  u32 m0  u32 entry  u32 max_level  u64 n
+//!   n × u8 level
+//!   per node, per level 0..=level(node): u32 len, len × u32 neighbor
+//! ```
+
+use super::HnswGraph;
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Serialize `graph` to `path`.
+pub fn save(graph: &HnswGraph, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("create {}", path.as_ref().display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(b"HNS1")?;
+    w.write_all(&(graph.m() as u32).to_le_bytes())?;
+    w.write_all(&(graph.m0() as u32).to_le_bytes())?;
+    w.write_all(&graph.entry_point().to_le_bytes())?;
+    w.write_all(&(graph.max_level() as u32).to_le_bytes())?;
+    w.write_all(&(graph.len() as u64).to_le_bytes())?;
+    for n in 0..graph.len() as u32 {
+        w.write_all(&[graph.level(n) as u8])?;
+    }
+    for n in 0..graph.len() as u32 {
+        for l in 0..=graph.level(n) {
+            let nbrs = graph.neighbors(n, l);
+            w.write_all(&(nbrs.len() as u32).to_le_bytes())?;
+            for &nb in nbrs {
+                w.write_all(&nb.to_le_bytes())?;
+            }
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Load a graph previously written by [`save`].
+pub fn load(path: impl AsRef<Path>) -> Result<HnswGraph> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != b"HNS1" {
+        bail!("bad graph magic {magic:?}");
+    }
+    let m = read_u32(&mut r)? as usize;
+    let m0 = read_u32(&mut r)? as usize;
+    let entry = read_u32(&mut r)?;
+    let max_level = read_u32(&mut r)? as usize;
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    let n = u64::from_le_bytes(b8) as usize;
+    ensure!(n < u32::MAX as usize, "graph too large");
+
+    let mut levels = vec![0u8; n];
+    r.read_exact(&mut levels)?;
+
+    let mut graph = HnswGraph::empty(m, m0);
+    for &lvl in &levels {
+        graph.add_node(lvl as usize);
+    }
+    for node in 0..n as u32 {
+        for l in 0..=(levels[node as usize] as usize) {
+            let len = read_u32(&mut r)? as usize;
+            ensure!(len <= m0 + 1, "implausible neighbor count {len}");
+            let mut list = Vec::with_capacity(len);
+            for _ in 0..len {
+                list.push(read_u32(&mut r)?);
+            }
+            graph.set_neighbors(node, l, list);
+        }
+    }
+    // add_node recomputed entry/max_level from levels; cross-check header.
+    ensure!(graph.max_level() == max_level, "max level mismatch");
+    ensure!(graph.level(entry) == max_level, "stored entry point not on top level");
+    Ok(graph)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic::{generate, SyntheticConfig};
+    use crate::graph::build::{build, BuildConfig};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("phnsw_graph_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip_preserves_structure() {
+        let cfg = SyntheticConfig { n_base: 400, n_queries: 1, ..SyntheticConfig::tiny() };
+        let (base, _) = generate(&cfg);
+        let g = build(&base, &BuildConfig { m: 6, ef_construction: 32, ..Default::default() });
+        let p = tmp("roundtrip.hnsw");
+        save(&g, &p).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(g.len(), back.len());
+        assert_eq!(g.entry_point(), back.entry_point());
+        assert_eq!(g.max_level(), back.max_level());
+        assert_eq!(g.m(), back.m());
+        assert_eq!(g.m0(), back.m0());
+        for n in 0..g.len() as u32 {
+            assert_eq!(g.level(n), back.level(n));
+            for l in 0..=g.level(n) {
+                assert_eq!(g.neighbors(n, l), back.neighbors(n, l));
+            }
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn load_rejects_bad_magic() {
+        let p = tmp("bad.hnsw");
+        std::fs::write(&p, b"XXXXrest").unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn load_rejects_truncated_file() {
+        let cfg = SyntheticConfig { n_base: 100, n_queries: 1, ..SyntheticConfig::tiny() };
+        let (base, _) = generate(&cfg);
+        let g = build(&base, &BuildConfig { m: 4, ef_construction: 16, ..Default::default() });
+        let p = tmp("trunc.hnsw");
+        save(&g, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

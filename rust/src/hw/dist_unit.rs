@@ -1,0 +1,124 @@
+//! Functional models of the distance units (§IV-B3).
+//!
+//! * [`DistL`] — 16 parallel lanes, each computing a low-dimensional
+//!   squared-L2 distance element-step by element-step (one dimension per
+//!   cycle per lane). Scoring a 32-neighbor list takes two lane batches.
+//! * [`DistH`] — the sequential high-dimensional unit: a 16-MAC array
+//!   consuming one vector at a time (`ceil(128/16)` = 8 cycles/vector).
+//! * [`MinH`] — single-cycle minimum selection over high-dim distances.
+//!
+//! Each `run` returns both results and the cycle count charged by the
+//! timing model, so tests can pin the functional/timing contract.
+
+/// 16-lane low-dimensional distance unit.
+#[derive(Debug, Clone)]
+pub struct DistL {
+    /// Number of parallel lanes.
+    pub lanes: usize,
+}
+
+impl Default for DistL {
+    fn default() -> Self {
+        Self { lanes: 16 }
+    }
+}
+
+impl DistL {
+    /// Score `n` neighbors (rows of `block`, row-major `n × dim`) against
+    /// `q`. Returns (distances, cycles).
+    pub fn run(&self, q: &[f32], block: &[f32], dim: usize) -> (Vec<f32>, u64) {
+        assert!(dim > 0 && block.len() % dim == 0);
+        assert_eq!(q.len(), dim);
+        let n = block.len() / dim;
+        let mut out = vec![0f32; n];
+        crate::search::dist::l2_sq_batch(q, block, dim, &mut out);
+        let batches = n.div_ceil(self.lanes) as u64;
+        (out, batches * dim as u64)
+    }
+}
+
+/// Sequential high-dimensional distance unit (16-wide MAC array).
+#[derive(Debug, Clone)]
+pub struct DistH {
+    /// MAC array width.
+    pub macs: usize,
+}
+
+impl Default for DistH {
+    fn default() -> Self {
+        Self { macs: 16 }
+    }
+}
+
+impl DistH {
+    /// Distance of one candidate vector. Returns (distance, cycles).
+    pub fn run(&self, q: &[f32], v: &[f32]) -> (f32, u64) {
+        assert_eq!(q.len(), v.len());
+        let d = crate::search::dist::l2_sq(q, v);
+        (d, (q.len() as u64).div_ceil(self.macs as u64))
+    }
+}
+
+/// Single-cycle minimum selector over a register of distances.
+#[derive(Debug, Clone, Default)]
+pub struct MinH;
+
+impl MinH {
+    /// Index + value of the minimum. Returns ((idx, value), cycles = 1).
+    /// Ties resolve to the lowest index (hardware priority encoder).
+    pub fn run(&self, dists: &[f32]) -> (Option<(usize, f32)>, u64) {
+        let mut best: Option<(usize, f32)> = None;
+        for (i, &d) in dists.iter().enumerate() {
+            match best {
+                None => best = Some((i, d)),
+                Some((_, bd)) if d < bd => best = Some((i, d)),
+                _ => {}
+            }
+        }
+        (best, 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+    use crate::search::dist::l2_sq;
+
+    #[test]
+    fn dist_l_matches_software_and_cycles() {
+        let mut rng = Pcg32::new(1);
+        let dim = 15;
+        let unit = DistL::default();
+        for n in [1usize, 15, 16, 17, 32] {
+            let q: Vec<f32> = (0..dim).map(|_| rng.gaussian()).collect();
+            let block: Vec<f32> = (0..n * dim).map(|_| rng.gaussian()).collect();
+            let (d, cycles) = unit.run(&q, &block, dim);
+            assert_eq!(d.len(), n);
+            for i in 0..n {
+                assert_eq!(d[i], l2_sq(&q, &block[i * dim..(i + 1) * dim]));
+            }
+            assert_eq!(cycles, (n.div_ceil(16) * dim) as u64);
+        }
+    }
+
+    #[test]
+    fn dist_h_cycles_for_sift_dims() {
+        let unit = DistH::default();
+        let q = vec![1.0f32; 128];
+        let v = vec![2.0f32; 128];
+        let (d, cycles) = unit.run(&q, &v);
+        assert_eq!(d, 128.0);
+        assert_eq!(cycles, 8, "128 dims / 16 MACs");
+    }
+
+    #[test]
+    fn min_h_selects_minimum_with_low_index_ties() {
+        let m = MinH;
+        let (best, cycles) = m.run(&[3.0, 1.0, 2.0, 1.0]);
+        assert_eq!(best, Some((1, 1.0)));
+        assert_eq!(cycles, 1);
+        let (none, _) = m.run(&[]);
+        assert_eq!(none, None);
+    }
+}

@@ -1,0 +1,270 @@
+//! Custom instruction set (Table II) and the core's cycle-cost formulas.
+
+/// The Table II instruction classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Instr {
+    /// Move data between registers (1 cycle; two Move units issue 2/cycle).
+    Move,
+    /// Read from off-chip memory (multi-cycle; resolved by the DRAM model).
+    Dma,
+    /// Read/write visit bit or raw data in SPM (1–2 cycles).
+    VisitRaw,
+    /// Filter the top-k nearest low-dim distances (7 cycles per 16-block).
+    KSortL,
+    /// Minimum of high-dim distances (1 cycle).
+    MinH,
+    /// Remove indexes from the F-list (8 cycles).
+    Rmf,
+    /// Conditional jump (1 cycle).
+    Jmp,
+    /// Low-dim distance lane operation (16 lanes in parallel).
+    DistL,
+    /// High-dim distance (sequential unit).
+    DistH,
+}
+
+/// Dynamic instruction counts of a simulated search.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct InstrMix {
+    /// Register moves.
+    pub moves: u64,
+    /// DMA requests issued.
+    pub dma: u64,
+    /// Visit&Raw SPM operations.
+    pub visit_raw: u64,
+    /// kSort.L invocations.
+    pub ksort: u64,
+    /// Min.H operations.
+    pub min_h: u64,
+    /// RMF operations.
+    pub rmf: u64,
+    /// Jumps.
+    pub jmp: u64,
+    /// Dist.L lane-batch operations (one per 16-lane batch per dim).
+    pub dist_l: u64,
+    /// Dist.H MAC-step operations.
+    pub dist_h: u64,
+}
+
+impl InstrMix {
+    /// Total dynamic instructions.
+    pub fn total(&self) -> u64 {
+        self.moves
+            + self.dma
+            + self.visit_raw
+            + self.ksort
+            + self.min_h
+            + self.rmf
+            + self.jmp
+            + self.dist_l
+            + self.dist_h
+    }
+
+    /// Fraction of `Move` instructions (the paper reports up to 72.8%).
+    pub fn move_share(&self) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            self.moves as f64 / self.total() as f64
+        }
+    }
+
+    /// Element-wise sum.
+    pub fn add(&mut self, o: &InstrMix) {
+        self.moves += o.moves;
+        self.dma += o.dma;
+        self.visit_raw += o.visit_raw;
+        self.ksort += o.ksort;
+        self.min_h += o.min_h;
+        self.rmf += o.rmf;
+        self.jmp += o.jmp;
+        self.dist_l += o.dist_l;
+        self.dist_h += o.dist_h;
+    }
+}
+
+/// Microarchitecture parameters of the pHNSW processor core.
+#[derive(Debug, Clone)]
+pub struct CoreConfig {
+    /// Clock frequency (GHz) — cycles and ns coincide at 1 GHz.
+    pub clock_ghz: f64,
+    /// Dist.L lane count (16: one neighbor per lane, §IV-B3).
+    pub dist_l_lanes: usize,
+    /// MAC width of the sequential Dist.H unit.
+    pub dist_h_macs: usize,
+    /// kSort.L comparator-matrix width (16 → 7-cycle sort).
+    pub ksort_width: usize,
+    /// Cycles per kSort.L pass (paper: 7).
+    pub ksort_cycles: u64,
+    /// Cycles per RMF (paper: 8).
+    pub rmf_cycles: u64,
+    /// Cycles per Visit&Raw (paper: 1 or 2 — we charge 2: read + write).
+    pub visit_cycles: u64,
+    /// Move instructions generated per functional-unit busy cycle
+    /// (calibrated so the simulated dynamic Move share lands at the
+    /// paper's ≈72.8% — see `hw::processor` tests; the base counts unit
+    /// cycles, which slightly exceed instruction counts, hence < 2.676).
+    pub moves_per_op: f64,
+    /// Parallel Move units (2 Move + 2 BUS, §IV-B1).
+    pub move_units: usize,
+    /// Fixed per-hop control overhead (loop management) in cycles.
+    pub hop_overhead_cycles: u64,
+    /// Low (PCA) dimensionality.
+    pub dim_low: usize,
+    /// High (original) dimensionality.
+    pub dim_high: usize,
+}
+
+impl Default for CoreConfig {
+    fn default() -> Self {
+        Self {
+            clock_ghz: crate::params::CLOCK_GHZ,
+            dist_l_lanes: 16,
+            dist_h_macs: 16,
+            ksort_width: 16,
+            ksort_cycles: 7,
+            rmf_cycles: 8,
+            visit_cycles: 2,
+            // Calibrated: simulated workloads land at ≈72.8% Move share.
+            moves_per_op: 1.95,
+            move_units: 2,
+            hop_overhead_cycles: 10,
+            dim_low: crate::params::DIM_LOW,
+            dim_high: crate::params::DIM_HIGH,
+        }
+    }
+}
+
+impl CoreConfig {
+    /// Convert ns (DRAM model time) to core cycles.
+    #[inline]
+    pub fn ns_to_cycles(&self, ns: f64) -> f64 {
+        ns * self.clock_ghz
+    }
+
+    /// Convert core cycles to ns.
+    #[inline]
+    pub fn cycles_to_ns(&self, cycles: f64) -> f64 {
+        cycles / self.clock_ghz
+    }
+
+    /// Dist.L cycles to score `n` neighbors: `ceil(n/lanes)` batches, each
+    /// pipelined over `dim_low` element steps.
+    pub fn dist_l_cycles(&self, n: u64) -> u64 {
+        n.div_ceil(self.dist_l_lanes as u64) * self.dim_low as u64
+    }
+
+    /// kSort.L cycles for `n` elements: one 7-cycle pass per 16-block plus
+    /// a 7-cycle merge round between blocks (Fig. 3(c) scaled up).
+    pub fn ksort_cycles_for(&self, n: u64) -> u64 {
+        if n == 0 {
+            return 0;
+        }
+        let blocks = n.div_ceil(self.ksort_width as u64);
+        blocks * self.ksort_cycles + blocks.saturating_sub(1) * self.ksort_cycles
+    }
+
+    /// Dist.H cycles for one high-dim vector: `ceil(dim/macs)` MAC steps.
+    pub fn dist_h_cycles_per_vec(&self) -> u64 {
+        (self.dim_high as u64).div_ceil(self.dist_h_macs as u64)
+    }
+
+    /// Cycles to PCA-project the query on the device (once per query):
+    /// `dim_high × dim_low` MACs on the Dist.H MAC array.
+    pub fn query_project_cycles(&self) -> u64 {
+        (self.dim_high as u64 * self.dim_low as u64).div_ceil(self.dist_h_macs as u64)
+    }
+
+    /// Move cycles implied by `ops` non-move instructions, spread across
+    /// the parallel Move units.
+    pub fn move_cycles(&self, ops: u64) -> u64 {
+        let moves = (ops as f64 * self.moves_per_op).round() as u64;
+        moves.div_ceil(self.move_units as u64)
+    }
+
+    /// Move instruction *count* (for the mix) implied by `ops`.
+    pub fn move_count(&self, ops: u64) -> u64 {
+        (ops as f64 * self.moves_per_op).round() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_ii_constants() {
+        let c = CoreConfig::default();
+        assert_eq!(c.ksort_cycles, 7);
+        assert_eq!(c.rmf_cycles, 8);
+        assert_eq!(c.dist_l_lanes, 16);
+        assert_eq!(c.ksort_width, 16);
+        assert_eq!(c.clock_ghz, 1.0);
+    }
+
+    #[test]
+    fn dist_l_cycles_scaling() {
+        let c = CoreConfig::default(); // dim_low = 15
+        assert_eq!(c.dist_l_cycles(16), 15, "one full batch = dim_low cycles");
+        assert_eq!(c.dist_l_cycles(32), 30, "two batches");
+        assert_eq!(c.dist_l_cycles(1), 15, "partial batch still pays a batch");
+        assert_eq!(c.dist_l_cycles(0), 0);
+    }
+
+    #[test]
+    fn ksort_matches_paper_for_16() {
+        let c = CoreConfig::default();
+        assert_eq!(c.ksort_cycles_for(16), 7, "16 elements sort in 7 cycles (§IV-B3)");
+        assert_eq!(c.ksort_cycles_for(5), 7);
+        assert_eq!(c.ksort_cycles_for(32), 21, "two blocks + one merge");
+        assert_eq!(c.ksort_cycles_for(0), 0);
+    }
+
+    #[test]
+    fn bubble_sort_comparison_claim() {
+        // §IV-B3: bubble sort needs 120 cycles for 16 elements; kSort.L 7
+        // → 94.17% improvement.
+        let bubble = 16 * 15 / 2; // n(n-1)/2 compare-swap cycles
+        assert_eq!(bubble, 120);
+        let c = CoreConfig::default();
+        let improvement = 1.0 - c.ksort_cycles_for(16) as f64 / bubble as f64;
+        assert!((improvement - 0.9417).abs() < 1e-3, "improvement {improvement}");
+    }
+
+    #[test]
+    fn dist_h_and_projection_cycles() {
+        let c = CoreConfig::default();
+        assert_eq!(c.dist_h_cycles_per_vec(), 8); // 128 / 16
+        assert_eq!(c.query_project_cycles(), 120); // 128*15/16
+    }
+
+    #[test]
+    fn move_generation_and_dual_unit_cycles() {
+        let c = CoreConfig::default();
+        let ops = 10_000u64;
+        let moves = c.move_count(ops);
+        assert_eq!(moves, (ops as f64 * c.moves_per_op).round() as u64);
+        // dual units halve the cycle cost
+        assert_eq!(c.move_cycles(ops), moves.div_ceil(2));
+        // End-to-end Move-share calibration (≈72.8%) is asserted against
+        // real workloads in hw::processor::tests and tests/integration.rs.
+    }
+
+    #[test]
+    fn instr_mix_totals_and_share() {
+        let mut m = InstrMix { moves: 728, jmp: 100, dist_l: 100, dist_h: 72, ..Default::default() };
+        assert_eq!(m.total(), 1000);
+        assert!((m.move_share() - 0.728).abs() < 1e-12);
+        let m2 = m;
+        m.add(&m2);
+        assert_eq!(m.total(), 2000);
+        assert!((m.move_share() - 0.728).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ns_cycle_roundtrip() {
+        let c = CoreConfig { clock_ghz: 2.0, ..Default::default() };
+        assert_eq!(c.ns_to_cycles(10.0), 20.0);
+        assert_eq!(c.cycles_to_ns(20.0), 10.0);
+    }
+}

@@ -1,0 +1,156 @@
+//! kSort.L — the fully parallel comparison-matrix sorter of Fig. 3(c).
+//!
+//! All pairs are compared simultaneously into an `n × n` matrix; each
+//! element's *rank* is the count of `>` entries in its row (with index
+//! tie-breaking to make ranks a permutation). A rank-decoder (the paper's
+//! four 16-input multiplexers) then routes the top-k values out. In
+//! hardware this takes 7 cycles for 16 elements regardless of data; this
+//! module is the bit-honest functional model used by tests, the `hw_sim`
+//! example, and as the oracle for the Pallas `ksort_topk` kernel (which
+//! vectorizes the very same rank-by-count construction).
+
+/// Comparison matrix: `mat[i][j] = true` iff element i should be ordered
+/// after element j (i.e. `v[i] > v[j]`, ties broken by index).
+pub fn comparison_matrix(values: &[f32]) -> Vec<Vec<bool>> {
+    let n = values.len();
+    let mut mat = vec![vec![false; n]; n];
+    for i in 0..n {
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            mat[i][j] = values[i] > values[j] || (values[i] == values[j] && i > j);
+        }
+    }
+    mat
+}
+
+/// Rank of every element = number of elements it beats (row popcount).
+/// Ranks are a permutation of `0..n` by construction.
+pub fn ranks(values: &[f32]) -> Vec<usize> {
+    comparison_matrix(values)
+        .iter()
+        .map(|row| row.iter().filter(|&&b| b).count())
+        .collect()
+}
+
+/// Top-k smallest elements via the comparator matrix: returns `(value,
+/// original_index)` pairs ordered by rank (ascending value). `k` is
+/// clamped to `values.len()`.
+pub fn ksort_topk(values: &[f32], k: usize) -> Vec<(f32, u32)> {
+    let n = values.len();
+    let k = k.min(n);
+    let r = ranks(values);
+    // Rank decoder: out[rank] = element with that rank.
+    let mut out: Vec<(f32, u32)> = vec![(0.0, 0); n];
+    for (i, &rank) in r.iter().enumerate() {
+        out[rank] = (values[i], i as u32);
+    }
+    out.truncate(k);
+    out
+}
+
+/// Software bubble sort retained as the §IV-B3 comparison baseline (120
+/// compare-swap steps for 16 elements vs kSort.L's 7 cycles). Returns the
+/// same `(value, index)` pairs as [`ksort_topk`] and the number of
+/// compare-swap steps performed (its cycle count in hardware).
+pub fn bubble_topk(values: &[f32], k: usize) -> (Vec<(f32, u32)>, u64) {
+    let mut pairs: Vec<(f32, u32)> = values.iter().copied().zip(0u32..).collect();
+    let n = pairs.len();
+    let mut steps = 0u64;
+    for i in 0..n {
+        for j in 0..n.saturating_sub(1 + i) {
+            steps += 1;
+            let swap = pairs[j].0 > pairs[j + 1].0
+                || (pairs[j].0 == pairs[j + 1].0 && pairs[j].1 > pairs[j + 1].1);
+            if swap {
+                pairs.swap(j, j + 1);
+            }
+        }
+    }
+    pairs.truncate(k.min(n));
+    (pairs, steps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn matches_fig3c_example() {
+        // Fig. 3(c) sorts five elements; any 5-element input must produce
+        // a valid permutation of ranks.
+        let v = [3.0f32, 1.0, 4.0, 1.5, 2.0];
+        let r = ranks(&v);
+        let mut sorted_r = r.clone();
+        sorted_r.sort_unstable();
+        assert_eq!(sorted_r, vec![0, 1, 2, 3, 4]);
+        // smallest value (1.0 at index 1) has rank 0
+        assert_eq!(r[1], 0);
+        // largest (4.0 at index 2) has rank 4
+        assert_eq!(r[2], 4);
+    }
+
+    #[test]
+    fn topk_equals_std_sort() {
+        let mut rng = Pcg32::new(1);
+        for n in [1usize, 2, 5, 15, 16, 17, 32] {
+            for k in [1usize, 3, 8, 16] {
+                let v: Vec<f32> = (0..n).map(|_| rng.f32() * 100.0).collect();
+                let got = ksort_topk(&v, k);
+                let mut want: Vec<(f32, u32)> = v.iter().copied().zip(0u32..).collect();
+                want.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+                want.truncate(k.min(n));
+                assert_eq!(got, want, "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn handles_duplicates_deterministically() {
+        let v = [2.0f32, 1.0, 2.0, 1.0];
+        let got = ksort_topk(&v, 4);
+        // ties broken by original index
+        assert_eq!(got, vec![(1.0, 1), (1.0, 3), (2.0, 0), (2.0, 2)]);
+    }
+
+    #[test]
+    fn ranks_are_always_a_permutation() {
+        let mut rng = Pcg32::new(2);
+        for _ in 0..100 {
+            let n = rng.range(1, 33);
+            // Coarse quantization forces many duplicates.
+            let v: Vec<f32> = (0..n).map(|_| (rng.below(4)) as f32).collect();
+            let r = ranks(&v);
+            let mut sorted = r.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..n).collect::<Vec<_>>(), "values {v:?}");
+        }
+    }
+
+    #[test]
+    fn bubble_agrees_with_ksort_and_costs_120_steps_for_16() {
+        let mut rng = Pcg32::new(3);
+        let v: Vec<f32> = (0..16).map(|_| rng.f32()).collect();
+        let (b, steps) = bubble_topk(&v, 16);
+        let k = ksort_topk(&v, 16);
+        assert_eq!(b, k);
+        assert_eq!(steps, 120, "16-element bubble sort = 120 compare-swaps (§IV-B3)");
+    }
+
+    #[test]
+    fn k_larger_than_n_is_clamped() {
+        let v = [5.0f32, 1.0];
+        assert_eq!(ksort_topk(&v, 10).len(), 2);
+        assert_eq!(bubble_topk(&v, 10).0.len(), 2);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(ksort_topk(&[], 4).is_empty());
+        let (out, steps) = bubble_topk(&[], 4);
+        assert!(out.is_empty());
+        assert_eq!(steps, 0);
+    }
+}

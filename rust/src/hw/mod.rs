@@ -1,0 +1,35 @@
+//! The pHNSW processor — §IV of the paper.
+//!
+//! A 65 nm, 1 GHz custom processor with the Table II instruction set:
+//!
+//! | Category | ISA        | Cycles | Unit here |
+//! |----------|------------|--------|-----------|
+//! | Data     | `Move`     | 1      | [`isa`] (dual Move + dual BUS)  |
+//! | Access   | `DMA`      | multi  | [`crate::dram`] via [`processor`] |
+//! |          | `Visit&Raw`| 1–2    | [`spm`] (visit bits + raw data) |
+//! | Compute  | `kSort.L`  | 7      | [`ksort`] comparator-matrix sort |
+//! |          | `Min.H`    | 1      | [`dist_unit::MinH`] |
+//! |          | `RMF`      | 8      | counted in [`isa::InstrMix`] |
+//! |          | `Dist.L`   | pipelined | [`dist_unit::DistL`] (16 lanes) |
+//! |          | `Dist.H`   | sequential| [`dist_unit::DistH`] |
+//! | Control  | `JMP`      | 1      | counted in [`isa::InstrMix`] |
+//!
+//! [`processor`] replays a [`crate::search::SearchTrace`] against a
+//! [`crate::db::DbLayout`] + [`crate::dram::DramSim`] and produces cycles,
+//! instruction mix, DRAM statistics and an energy breakdown — the raw
+//! material for Table III and Fig. 5.
+//!
+//! Functional models ([`ksort::ksort_topk`], [`dist_unit`]) are bit-honest
+//! implementations of the units (used by tests and by the `hw_sim`
+//! example); timing comes from the cycle formulas in [`isa`].
+
+pub mod dist_unit;
+pub mod isa;
+pub mod ksort;
+pub mod processor;
+pub mod program;
+pub mod scaling;
+pub mod spm;
+
+pub use isa::{CoreConfig, Instr, InstrMix};
+pub use processor::{simulate_query, simulate_workload, EngineKind, QuerySim, WorkloadSim};

@@ -1,0 +1,397 @@
+//! ISA-level micro-simulator: assembled instruction programs executed on
+//! a register-file + SPM machine model.
+//!
+//! The trace-replay simulator ([`super::processor`]) answers "how many
+//! cycles does a whole search take"; this module answers "does the §IV-C
+//! dataflow actually *work* as an instruction stream on the Table II ISA".
+//! [`assemble_hop`] emits the five-step per-hop program the paper
+//! describes, and [`Machine`] executes it against real data — register
+//! moves, SPM traffic, functional units and all — producing bit-exact
+//! results (checked against the software searcher in tests) plus a cycle
+//! count built from the same [`CoreConfig`] formulas the replay model uses.
+
+use super::dist_unit::{DistH, DistL, MinH};
+use super::isa::CoreConfig;
+use super::ksort::ksort_topk;
+
+/// Register identifiers. The machine has a small scalar file and wide
+/// vector registers sized by the data dimensions (the paper's register
+/// files store "temporary data, primarily determined by the data
+/// dimensions", §V-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Reg {
+    /// Scalar register (ids, counts, loop vars, the Min.H result).
+    S(u8),
+    /// Vector register (query, one raw vector, a distance vector).
+    V(u8),
+}
+
+/// Number of scalar / vector registers.
+pub const N_SREG: usize = 16;
+/// Number of vector registers.
+pub const N_VREG: usize = 8;
+
+/// One instruction of the Table II ISA, operand-level.
+#[derive(Debug, Clone)]
+pub enum Op {
+    /// Move a scalar register (1 cycle; dual-issue).
+    MoveS { dst: u8, src: u8 },
+    /// DMA a block from "DRAM" (modeled as the program's input arrays)
+    /// into SPM at `spm_addr`. Which block is fetched is program-defined:
+    /// 0 = neighbor tile (ids + low-dim), 1 = high-dim rows of the
+    /// current survivor list.
+    Dma { what: DmaWhat, spm_addr: usize },
+    /// Load the low-dim neighbor tile from SPM into the Dist.L lanes and
+    /// score it against VREG[q_pca]; distances land in `dst` (vector).
+    DistL { dst: u8 },
+    /// kSort.L over the distance vector in `src`: keep top-k (values +
+    /// tile-local indices) in the sorter's output latch.
+    KSortL { src: u8, k: usize },
+    /// Visit&Raw: test-and-set the visit bit of survivor slot `slot`'s id;
+    /// result (1 = was new) goes to scalar `dst`.
+    Visit { slot: usize, dst: u8 },
+    /// Dist.H: score survivor slot `slot`'s high-dim row (from SPM)
+    /// against VREG[q]; scalar distance to S(dst).
+    DistH { slot: usize, dst: u8 },
+    /// Min.H over the accumulated high-dim distances → S(dst) = slot idx.
+    MinH { dst: u8 },
+    /// Remove-from-F bookkeeping (8 cycles; modeled as a unit op).
+    Rmf,
+    /// Conditional jump: if S(cond) != 0, continue; else skip `skip` ops.
+    JmpIfZero { cond: u8, skip: usize },
+    /// Stop.
+    Halt,
+}
+
+/// What a DMA op fetches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DmaWhat {
+    /// Neighbor tile: ids + inline low-dim payload (layout ③ burst).
+    NeighborTile,
+    /// High-dim rows of the current top-k survivors.
+    SurvivorRows,
+}
+
+/// A program plus metadata.
+#[derive(Debug, Clone)]
+pub struct Program {
+    /// Instruction stream.
+    pub ops: Vec<Op>,
+    /// Filter size the program was assembled for.
+    pub k: usize,
+}
+
+/// Assemble the per-hop program of §IV-C:
+/// (2) DMA neighbor tile → (3) Dist.L + kSort.L → (4) DMA survivors →
+/// (5) per-survivor Visit&Raw + Dist.H, then Min.H (+ RMF slot).
+pub fn assemble_hop(k: usize) -> Program {
+    let mut ops = Vec::new();
+    ops.push(Op::Dma { what: DmaWhat::NeighborTile, spm_addr: 0 });
+    ops.push(Op::MoveS { dst: 1, src: 0 }); // stage tile base pointer
+    ops.push(Op::DistL { dst: 1 });
+    ops.push(Op::KSortL { src: 1, k });
+    ops.push(Op::Dma { what: DmaWhat::SurvivorRows, spm_addr: 2048 });
+    for slot in 0..k {
+        ops.push(Op::Visit { slot, dst: 2 });
+        // if already visited (S2 == 0), skip this survivor's Dist.H.
+        ops.push(Op::JmpIfZero { cond: 2, skip: 1 });
+        ops.push(Op::DistH { slot, dst: 3 });
+        ops.push(Op::MoveS { dst: 4, src: 3 }); // shuttle into compare latch
+    }
+    ops.push(Op::MinH { dst: 5 });
+    ops.push(Op::Rmf);
+    ops.push(Op::Halt);
+    Program { ops, k }
+}
+
+/// Inputs for one hop execution.
+pub struct HopInputs<'a> {
+    /// Projected query (low-dim, padded or not).
+    pub q_pca: &'a [f32],
+    /// Original query.
+    pub q: &'a [f32],
+    /// Neighbor ids of the expanded node.
+    pub neighbor_ids: &'a [u32],
+    /// Low-dim rows, one per neighbor (row-major `n × dim_low`).
+    pub neighbors_low: &'a [f32],
+    /// Lookup of high-dim rows by id.
+    pub high_row: &'a dyn Fn(u32) -> &'a [f32],
+    /// Visit-bit test-and-set (true = was unvisited).
+    pub visit: &'a mut dyn FnMut(u32) -> bool,
+}
+
+/// Result of one hop execution.
+#[derive(Debug, Clone)]
+pub struct HopResult {
+    /// Survivor ids after kSort.L (global ids, rank order).
+    pub survivors: Vec<u32>,
+    /// Low-dim distances of the survivors (rank order).
+    pub survivor_low_dists: Vec<f32>,
+    /// (id, high-dim distance) for survivors that passed the visit check.
+    pub scored: Vec<(u32, f32)>,
+    /// Id selected by Min.H (None if every survivor was already visited).
+    pub nearest: Option<u32>,
+    /// Total cycles charged.
+    pub cycles: u64,
+    /// Dynamic instruction count by mnemonic (move, dma, visit, distl
+    /// element-steps, ksort, disth steps, minh, rmf, jmp).
+    pub executed: usize,
+}
+
+/// The machine: registers + latches, executing one program over one hop's
+/// inputs. DRAM timing is out of scope here (the replay simulator owns
+/// it); DMA charges one issue cycle, matching the AGU issue cost the
+/// replay model uses.
+pub struct Machine {
+    core: CoreConfig,
+    sreg: [u32; N_SREG],
+    vreg: Vec<Vec<f32>>,
+}
+
+impl Machine {
+    /// New machine with the given core parameters.
+    pub fn new(core: CoreConfig) -> Self {
+        Self { core, sreg: [0; N_SREG], vreg: vec![Vec::new(); N_VREG] }
+    }
+
+    /// Execute `prog` against `inputs`. Panics on malformed programs
+    /// (register indices out of range etc.) — assembler bugs, not data.
+    pub fn run(&mut self, prog: &Program, inputs: &mut HopInputs<'_>) -> HopResult {
+        let dim_low = self.core.dim_low.min(inputs.q_pca.len());
+        let n = inputs.neighbor_ids.len();
+        let dist_l = DistL { lanes: self.core.dist_l_lanes };
+        let dist_h = DistH { macs: self.core.dist_h_macs };
+
+        let mut cycles = 0u64;
+        let mut executed = 0usize;
+        // Latches between units.
+        let mut sorter_out: Vec<(f32, u32)> = Vec::new(); // (low dist, tile slot)
+        let mut high_dists: Vec<(usize, f32)> = Vec::new(); // (slot, dist)
+        let mut visit_flags: Vec<bool> = vec![false; prog.k];
+        let mut pending_moves = 0u64;
+
+        let mut pc = 0usize;
+        while pc < prog.ops.len() {
+            let op = &prog.ops[pc];
+            pc += 1;
+            executed += 1;
+            match op {
+                Op::MoveS { dst, src } => {
+                    assert!((*dst as usize) < N_SREG && (*src as usize) < N_SREG);
+                    self.sreg[*dst as usize] = self.sreg[*src as usize];
+                    pending_moves += 1; // dual-issue: folded below
+                }
+                Op::Dma { .. } => {
+                    cycles += 1; // AGU + descriptor issue (timing in replay sim)
+                }
+                Op::DistL { dst } => {
+                    let (dists, c) =
+                        dist_l.run(&inputs.q_pca[..dim_low], inputs.neighbors_low, dim_low);
+                    self.vreg[*dst as usize] = dists;
+                    cycles += c;
+                }
+                Op::KSortL { src, k } => {
+                    sorter_out = ksort_topk(&self.vreg[*src as usize], *k);
+                    cycles += self.core.ksort_cycles_for(n as u64);
+                }
+                Op::Visit { slot, dst } => {
+                    let fresh = if *slot < sorter_out.len() {
+                        let id = inputs.neighbor_ids[sorter_out[*slot].1 as usize];
+                        (inputs.visit)(id)
+                    } else {
+                        false // padded slot
+                    };
+                    visit_flags[*slot] = fresh;
+                    self.sreg[*dst as usize] = fresh as u32;
+                    cycles += self.core.visit_cycles;
+                }
+                Op::DistH { slot, dst } => {
+                    let id = inputs.neighbor_ids[sorter_out[*slot].1 as usize];
+                    let (d, c) = dist_h.run(inputs.q, (inputs.high_row)(id));
+                    high_dists.push((*slot, d));
+                    self.sreg[*dst as usize] = d.to_bits();
+                    cycles += c;
+                }
+                Op::MinH { dst } => {
+                    let ds: Vec<f32> = high_dists.iter().map(|&(_, d)| d).collect();
+                    let (best, c) = MinH.run(&ds);
+                    self.sreg[*dst as usize] = best.map(|(i, _)| high_dists[i].0 as u32).unwrap_or(u32::MAX);
+                    cycles += c;
+                }
+                Op::Rmf => {
+                    cycles += self.core.rmf_cycles;
+                }
+                Op::JmpIfZero { cond, skip } => {
+                    cycles += 1;
+                    if self.sreg[*cond as usize] == 0 {
+                        pc += skip;
+                    }
+                }
+                Op::Halt => break,
+            }
+        }
+        // Dual Move/BUS units run alongside the functional pipeline; they
+        // only bound the hop if they exceed unit-busy time (same rule as
+        // the replay model).
+        let move_cycles = pending_moves.div_ceil(self.core.move_units as u64);
+        cycles = cycles.max(move_cycles);
+
+        let survivors: Vec<u32> = sorter_out
+            .iter()
+            .map(|&(_, slot)| inputs.neighbor_ids[slot as usize])
+            .collect();
+        let survivor_low_dists: Vec<f32> = sorter_out.iter().map(|&(d, _)| d).collect();
+        let scored: Vec<(u32, f32)> = high_dists
+            .iter()
+            .map(|&(slot, d)| (inputs.neighbor_ids[sorter_out[slot].1 as usize], d))
+            .collect();
+        let nearest = {
+            let sel = self.sreg[5];
+            if sel == u32::MAX || sorter_out.is_empty() || scored.is_empty() {
+                None
+            } else {
+                Some(inputs.neighbor_ids[sorter_out[sel as usize].1 as usize])
+            }
+        };
+        HopResult { survivors, survivor_low_dists, scored, nearest, cycles, executed }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+    use crate::search::dist::l2_sq;
+
+    /// Build random hop inputs: n neighbors, dim_low/dim_high data.
+    struct Fixture {
+        q: Vec<f32>,
+        q_pca: Vec<f32>,
+        ids: Vec<u32>,
+        low: Vec<f32>,
+        high: std::collections::HashMap<u32, Vec<f32>>,
+    }
+
+    fn fixture(n: usize, seed: u64) -> Fixture {
+        let mut rng = Pcg32::new(seed);
+        let dim_low = 15;
+        let dim_high = 128;
+        let ids: Vec<u32> = (0..n as u32).map(|i| 1000 + i * 3).collect();
+        let low: Vec<f32> = (0..n * dim_low).map(|_| rng.gaussian() * 10.0).collect();
+        let mut high = std::collections::HashMap::new();
+        for &id in &ids {
+            high.insert(id, (0..dim_high).map(|_| 255.0 * rng.f32()).collect());
+        }
+        Fixture {
+            q: (0..dim_high).map(|_| 255.0 * rng.f32()).collect(),
+            q_pca: (0..dim_low).map(|_| rng.gaussian() * 10.0).collect(),
+            ids,
+            low,
+            high,
+        }
+    }
+
+    fn run_hop(f: &Fixture, k: usize, visited: &mut std::collections::HashSet<u32>) -> HopResult {
+        let prog = assemble_hop(k);
+        let mut machine = Machine::new(CoreConfig::default());
+        let high = &f.high;
+        let row = move |id: u32| -> &[f32] { high.get(&id).unwrap().as_slice() };
+        let mut visit = |id: u32| visited.insert(id);
+        let mut inputs = HopInputs {
+            q_pca: &f.q_pca,
+            q: &f.q,
+            neighbor_ids: &f.ids,
+            neighbors_low: &f.low,
+            high_row: &row,
+            visit: &mut visit,
+        };
+        machine.run(&prog, &mut inputs)
+    }
+
+    #[test]
+    fn survivors_match_software_filter() {
+        let f = fixture(32, 1);
+        let mut visited = std::collections::HashSet::new();
+        let r = run_hop(&f, 16, &mut visited);
+        // Oracle: software distances + comparator sort.
+        let dists: Vec<f32> = (0..32).map(|i| l2_sq(&f.q_pca, &f.low[i * 15..(i + 1) * 15])).collect();
+        let want = crate::hw::ksort::ksort_topk(&dists, 16);
+        assert_eq!(r.survivors.len(), 16);
+        for (s, w) in r.survivors.iter().zip(&want) {
+            assert_eq!(*s, f.ids[w.1 as usize]);
+        }
+        for (d, w) in r.survivor_low_dists.iter().zip(&want) {
+            assert_eq!(*d, w.0);
+        }
+    }
+
+    #[test]
+    fn high_dim_scores_match_and_minh_selects_nearest() {
+        let f = fixture(32, 2);
+        let mut visited = std::collections::HashSet::new();
+        let r = run_hop(&f, 16, &mut visited);
+        assert_eq!(r.scored.len(), 16, "all unvisited → all scored");
+        let mut best = (u32::MAX, f32::INFINITY);
+        for &(id, d) in &r.scored {
+            let want = l2_sq(&f.q, f.high.get(&id).unwrap());
+            assert_eq!(d, want, "id {id}");
+            if d < best.1 {
+                best = (id, d);
+            }
+        }
+        assert_eq!(r.nearest, Some(best.0));
+    }
+
+    #[test]
+    fn visited_survivors_are_skipped() {
+        let f = fixture(32, 3);
+        // Pre-visit every neighbor id.
+        let mut visited: std::collections::HashSet<u32> = f.ids.iter().copied().collect();
+        let r = run_hop(&f, 16, &mut visited);
+        assert_eq!(r.scored.len(), 0, "no Dist.H for visited survivors");
+        assert_eq!(r.nearest, None);
+    }
+
+    #[test]
+    fn second_run_skips_previously_visited() {
+        let f = fixture(32, 4);
+        let mut visited = std::collections::HashSet::new();
+        let r1 = run_hop(&f, 16, &mut visited);
+        assert_eq!(r1.scored.len(), 16);
+        let r2 = run_hop(&f, 16, &mut visited);
+        assert_eq!(r2.scored.len(), 0, "same hop again → everything visited");
+    }
+
+    #[test]
+    fn cycle_count_matches_core_formulas() {
+        let f = fixture(32, 5);
+        let mut visited = std::collections::HashSet::new();
+        let r = run_hop(&f, 16, &mut visited);
+        let core = CoreConfig::default();
+        // dma(2 × 1) + distl(2 batches × 15) + ksort(32 → 21) + 16 × (visit 2
+        // + jmp 1 + disth 8) + minh 1 + rmf 8.
+        let want = 2 + core.dist_l_cycles(32) + core.ksort_cycles_for(32)
+            + 16 * (core.visit_cycles + 1 + core.dist_h_cycles_per_vec())
+            + 1
+            + core.rmf_cycles;
+        assert_eq!(r.cycles, want, "cycle model must be exactly reproducible");
+    }
+
+    #[test]
+    fn k_smaller_than_tile() {
+        let f = fixture(16, 6);
+        let mut visited = std::collections::HashSet::new();
+        let r = run_hop(&f, 3, &mut visited);
+        assert_eq!(r.survivors.len(), 3);
+        assert_eq!(r.scored.len(), 3);
+    }
+
+    #[test]
+    fn program_shape() {
+        let p = assemble_hop(16);
+        assert!(matches!(p.ops[0], Op::Dma { what: DmaWhat::NeighborTile, .. }));
+        assert!(matches!(p.ops.last(), Some(Op::Halt)));
+        // 16 survivors × 4 ops each + fixed preamble/postamble
+        assert_eq!(p.ops.len(), 5 + 16 * 4 + 3);
+    }
+}

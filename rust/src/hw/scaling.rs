@@ -1,0 +1,154 @@
+//! Scaling studies — the paper's §VI future work, modeled:
+//!
+//! * **Multi-core pHNSW** ("scale the pHNSW processor to multi-core
+//!   systems for multi-query search"): P cores run independent queries,
+//!   sharing one DRAM channel. Compute scales linearly; the shared
+//!   channel saturates when aggregate demand hits its bandwidth —
+//!   classic bandwidth-wall behaviour.
+//! * **Corpus scaling** (toward SIFT1B): per-query work in HNSW grows
+//!   ≈ logarithmically with n while the inline DB grows linearly; this
+//!   model projects QPS and footprint across n and flags where the DB no
+//!   longer fits typical DRAM capacities (the paper's stated SIFT1B
+//!   challenge: 512 GB raw — partitioning required).
+
+use crate::dram::DramConfig;
+use crate::hw::WorkloadSim;
+
+/// Multi-core throughput projection from a single-core simulation.
+#[derive(Debug, Clone)]
+pub struct MultiCorePoint {
+    /// Core count.
+    pub cores: usize,
+    /// Aggregate QPS.
+    pub qps: f64,
+    /// Fraction of the DRAM channel consumed (1.0 = saturated).
+    pub dram_utilization: f64,
+    /// Whether the point is bandwidth-bound.
+    pub bandwidth_bound: bool,
+}
+
+/// Project multi-query throughput for `cores` replicas of the simulated
+/// single-core engine sharing one `dram` channel.
+///
+/// Per-core demand is derived from the single-core run: bytes/query ×
+/// QPS. Aggregate QPS = min(linear scaling, channel bandwidth / bytes
+/// per query).
+pub fn multicore(sim: &WorkloadSim, dram: &DramConfig, cores_list: &[usize]) -> Vec<MultiCorePoint> {
+    let bytes_per_query = sim.dram.bytes as f64 / sim.queries as f64;
+    let channel_bps = dram.bandwidth_gbps * 1e9;
+    let qps_bw_cap = channel_bps / bytes_per_query.max(1.0);
+    cores_list
+        .iter()
+        .map(|&cores| {
+            let linear = sim.qps * cores as f64;
+            let qps = linear.min(qps_bw_cap);
+            MultiCorePoint {
+                cores,
+                qps,
+                dram_utilization: (qps * bytes_per_query / channel_bps).min(1.0),
+                bandwidth_bound: linear > qps_bw_cap,
+            }
+        })
+        .collect()
+}
+
+/// Corpus-scaling projection point.
+#[derive(Debug, Clone)]
+pub struct CorpusPoint {
+    /// Base corpus size.
+    pub n: usize,
+    /// Projected single-core QPS.
+    pub qps: f64,
+    /// Inline-layout DB footprint (bytes).
+    pub db_bytes: u64,
+    /// Fits in the modeled DRAM capacity?
+    pub fits_dram: bool,
+}
+
+/// Project QPS and DB footprint across corpus sizes from one measured
+/// anchor `(n0, sim)`.
+///
+/// HNSW per-query cost grows ≈ `log(n)` (hop count ∝ graph diameter);
+/// the inline DB grows linearly (per-node cost is constant: capacity-
+/// padded lists + inline payload + raw row).
+pub fn corpus_scaling(
+    n0: usize,
+    sim: &WorkloadSim,
+    db_bytes0: u64,
+    dram_capacity_bytes: u64,
+    ns: &[usize],
+) -> Vec<CorpusPoint> {
+    let per_node = db_bytes0 as f64 / n0 as f64;
+    ns.iter()
+        .map(|&n| {
+            let slowdown = (n as f64).ln() / (n0 as f64).ln();
+            let db_bytes = (per_node * n as f64) as u64;
+            CorpusPoint {
+                n,
+                qps: sim.qps / slowdown,
+                db_bytes,
+                fits_dram: db_bytes <= dram_capacity_bytes,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::DramStats;
+    use crate::energy::EnergyBreakdown;
+    use crate::hw::isa::InstrMix;
+    use crate::hw::EngineKind;
+    use crate::search::SearchStats;
+
+    fn fake_sim(qps: f64, bytes_per_query: u64, queries: usize) -> WorkloadSim {
+        WorkloadSim {
+            engine: EngineKind::Phnsw,
+            dram_name: "DDR4",
+            queries,
+            mean_cycles: 1e9 / qps,
+            qps,
+            mean_energy: EnergyBreakdown::default(),
+            mix: InstrMix::default(),
+            dram: DramStats { bytes: bytes_per_query * queries as u64, ..Default::default() },
+            stats: SearchStats::default(),
+        }
+    }
+
+    #[test]
+    fn multicore_scales_linearly_until_bandwidth_wall() {
+        // 100k QPS × 100 KB/query = 10 GB/s per core; DDR4 (19.2 GB/s)
+        // saturates just below 2 cores.
+        let sim = fake_sim(100_000.0, 100_000, 10);
+        let pts = multicore(&sim, &DramConfig::ddr4(), &[1, 2, 4, 8]);
+        assert!(!pts[0].bandwidth_bound);
+        assert!((pts[0].qps - 100_000.0).abs() < 1.0);
+        assert!(pts[1].bandwidth_bound);
+        let cap = 19.2e9 / 100_000.0;
+        assert!((pts[3].qps - cap).abs() < 1.0, "capped at {} got {}", cap, pts[3].qps);
+        assert!(pts[3].dram_utilization > 0.99);
+    }
+
+    #[test]
+    fn multicore_hbm_extends_scaling() {
+        let sim = fake_sim(100_000.0, 100_000, 10);
+        let ddr = multicore(&sim, &DramConfig::ddr4(), &[4]);
+        let hbm = multicore(&sim, &DramConfig::hbm(), &[4]);
+        assert!(hbm[0].qps > 2.0 * ddr[0].qps, "HBM should push the wall out");
+    }
+
+    #[test]
+    fn corpus_scaling_projects_log_slowdown_and_linear_db() {
+        let sim = fake_sim(200_000.0, 50_000, 10);
+        let pts = corpus_scaling(100_000, &sim, 250_000_000, 4 << 30, &[100_000, 1_000_000, 1_000_000_000]);
+        assert!((pts[0].qps - 200_000.0).abs() < 1.0);
+        assert!(pts[1].qps < pts[0].qps && pts[1].qps > pts[0].qps * 0.7);
+        // 1B nodes × 2.5 KB/node = 2.5 TB ≫ 4 GB → partitioning needed,
+        // exactly the paper's stated SIFT1B challenge.
+        assert!(!pts[2].fits_dram);
+        assert!(pts[0].fits_dram);
+        assert_eq!(pts[1].db_bytes, 10 * pts[0].db_bytes / 10 * 10); // linear-ish sanity
+        assert!(pts[1].db_bytes == pts[0].db_bytes * 10);
+    }
+}

@@ -1,0 +1,164 @@
+//! Scratchpad memory (SPM) functional + accounting model.
+//!
+//! The 128 KB SPM (§V-A1) holds (a) the visit list — 1 bit per base vector,
+//! 1 Mbit for SIFT1M — and (b) staging buffers for DMA'd neighbor blocks
+//! and top-k high-dim vectors. This model tracks capacity occupancy and
+//! access counts; access energy comes from the CACTI-style model in
+//! [`crate::energy::spm_model`].
+
+/// Scratchpad with capacity accounting and access counters.
+#[derive(Debug, Clone)]
+pub struct Spm {
+    capacity_bytes: usize,
+    /// Bytes statically reserved (visit list).
+    reserved_bytes: usize,
+    /// Peak dynamic staging occupancy seen.
+    peak_staging: usize,
+    /// Current dynamic staging occupancy.
+    staging: usize,
+    /// Read accesses (word granularity).
+    pub reads: u64,
+    /// Write accesses (word granularity).
+    pub writes: u64,
+    /// Access word width in bytes (SRAM port width).
+    pub word_bytes: usize,
+}
+
+/// Over-capacity staging error.
+#[derive(Debug, thiserror::Error)]
+#[error("SPM overflow: need {need} bytes, {avail} available (capacity {cap})")]
+pub struct SpmOverflow {
+    /// Bytes requested.
+    pub need: usize,
+    /// Bytes free.
+    pub avail: usize,
+    /// Total capacity.
+    pub cap: usize,
+}
+
+impl Spm {
+    /// New SPM of `capacity_bytes` with a visit list for `n_vectors`
+    /// reserved (1 bit per vector, rounded to bytes).
+    pub fn new(capacity_bytes: usize, n_vectors: usize) -> Result<Self, SpmOverflow> {
+        let visit_bytes = n_vectors.div_ceil(8);
+        if visit_bytes > capacity_bytes {
+            return Err(SpmOverflow { need: visit_bytes, avail: capacity_bytes, cap: capacity_bytes });
+        }
+        Ok(Self {
+            capacity_bytes,
+            reserved_bytes: visit_bytes,
+            peak_staging: 0,
+            staging: 0,
+            reads: 0,
+            writes: 0,
+            word_bytes: 8,
+        })
+    }
+
+    /// Total capacity in bytes.
+    pub fn capacity(&self) -> usize {
+        self.capacity_bytes
+    }
+
+    /// Bytes reserved for the visit list.
+    pub fn visit_list_bytes(&self) -> usize {
+        self.reserved_bytes
+    }
+
+    /// Free bytes for staging.
+    pub fn free(&self) -> usize {
+        self.capacity_bytes - self.reserved_bytes - self.staging
+    }
+
+    /// Stage `bytes` of DMA'd data (counts the writes). Fails when the
+    /// working set exceeds SPM capacity — which is itself a meaningful
+    /// design-check (the paper sized 128 KB to fit the SIFT1M working set).
+    pub fn stage(&mut self, bytes: usize) -> Result<(), SpmOverflow> {
+        if bytes > self.free() {
+            return Err(SpmOverflow { need: bytes, avail: self.free(), cap: self.capacity_bytes });
+        }
+        self.staging += bytes;
+        self.peak_staging = self.peak_staging.max(self.staging);
+        self.writes += (bytes.div_ceil(self.word_bytes)) as u64;
+        Ok(())
+    }
+
+    /// Consume (read) `bytes` of staged data and release the space.
+    pub fn consume(&mut self, bytes: usize) {
+        assert!(bytes <= self.staging, "consuming more than staged");
+        self.staging -= bytes;
+        self.reads += (bytes.div_ceil(self.word_bytes)) as u64;
+    }
+
+    /// One visit-list check (read) and optional mark (write).
+    pub fn visit_access(&mut self, mark: bool) {
+        self.reads += 1;
+        if mark {
+            self.writes += 1;
+        }
+    }
+
+    /// Peak staging occupancy observed (bytes).
+    pub fn peak_staging(&self) -> usize {
+        self.peak_staging
+    }
+
+    /// Total accesses.
+    pub fn accesses(&self) -> u64 {
+        self.reads + self.writes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sift1m_visit_list_fits_128kb() {
+        // 1M vectors → 125 KB of visit bits: fits in the 128 KB SPM with
+        // ~3 KB to spare — tight, exactly as the paper sized it.
+        let spm = Spm::new(128 * 1024, 1_000_000).unwrap();
+        assert_eq!(spm.visit_list_bytes(), 125_000);
+        assert!(spm.free() > 0);
+    }
+
+    #[test]
+    fn overflow_reported() {
+        assert!(Spm::new(1024, 10_000_000).is_err());
+        let mut spm = Spm::new(4096, 1000).unwrap();
+        let free = spm.free();
+        assert!(spm.stage(free + 1).is_err());
+        assert!(spm.stage(free).is_ok());
+        assert_eq!(spm.free(), 0);
+    }
+
+    #[test]
+    fn stage_consume_cycle() {
+        let mut spm = Spm::new(8192, 64).unwrap();
+        spm.stage(1024).unwrap();
+        assert_eq!(spm.peak_staging(), 1024);
+        spm.consume(1024);
+        assert_eq!(spm.free(), 8192 - 8 - 0);
+        assert_eq!(spm.writes, 128); // 1024 / 8B words
+        assert_eq!(spm.reads, 128);
+        // peak survives release
+        assert_eq!(spm.peak_staging(), 1024);
+    }
+
+    #[test]
+    fn visit_access_counts() {
+        let mut spm = Spm::new(8192, 64).unwrap();
+        spm.visit_access(false);
+        spm.visit_access(true);
+        assert_eq!(spm.reads, 2);
+        assert_eq!(spm.writes, 1);
+        assert_eq!(spm.accesses(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "consuming more than staged")]
+    fn consume_without_stage_panics() {
+        let mut spm = Spm::new(8192, 64).unwrap();
+        spm.consume(1);
+    }
+}

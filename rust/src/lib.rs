@@ -1,0 +1,78 @@
+//! # phnsw — PCA-filtered HNSW approximate nearest-neighbor search
+//!
+//! Reproduction of *"pHNSW: PCA-Based Filtering to Accelerate HNSW
+//! Approximate Nearest Neighbor Search"* (ASP-DAC 2026) as a three-layer
+//! rust + JAX + Pallas system:
+//!
+//! * **Algorithm** — [`search::phnsw`] implements Algorithm 1: candidate
+//!   filtering in a PCA-reduced low-dimensional space with per-layer top-k
+//!   filter sizes, re-ranking only the k survivors in the original space.
+//! * **Database organization** — [`db`] builds the three off-chip layouts of
+//!   Fig. 3(a): high-dim-only (`Std`), separate low-dim table (`Sep`,
+//!   pKNN-style), and inline low-dim neighbor blocks (`Inline`, the paper's
+//!   contribution).
+//! * **Hardware** — [`hw`] is a cycle-level simulator of the custom pHNSW
+//!   processor (1 GHz, custom ISA of Table II), driven by [`dram`] (DDR4 /
+//!   HBM1.0 timing + energy) with [`energy`] and [`area`] models
+//!   regenerating Fig. 4 / Fig. 5 / Table III.
+//! * **Runtime** — [`runtime`] loads the AOT-compiled JAX/Pallas artifacts
+//!   (HLO text → PJRT CPU executable) so the per-hop filter/rerank hot path
+//!   can run through the same kernels the paper's ASIC implements.
+//! * **Serving** — [`coordinator`] wraps everything in a query server with a
+//!   dynamic batcher and per-engine routing.
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod area;
+pub mod cli;
+pub mod coordinator;
+pub mod dataset;
+pub mod db;
+pub mod dram;
+pub mod energy;
+pub mod graph;
+pub mod hw;
+pub mod metrics;
+pub mod pca;
+pub mod proptest_lite;
+pub mod rng;
+pub mod reports;
+pub mod runtime;
+pub mod search;
+pub mod workbench;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Paper-default configuration constants (SIFT1M operating point, §III-B, §V-A).
+pub mod params {
+    /// Original vector dimensionality (SIFT descriptors).
+    pub const DIM_HIGH: usize = 128;
+    /// PCA-reduced dimensionality (Fig. 1(c) step 1: 128 → 15).
+    pub const DIM_LOW: usize = 15;
+    /// Bytes per stored scalar (paper stores f32 in both spaces).
+    pub const BYTES_PER_SCALAR: usize = 4;
+    /// HNSW M: max neighbors per node on layers ≥ 1.
+    pub const M: usize = 16;
+    /// Max neighbors on layer 0 (2M).
+    pub const M0: usize = 32;
+    /// Number of graph layers in the paper's SIFT1M graph.
+    pub const LAYERS: usize = 6;
+    /// efConstruction used when building the graph.
+    pub const EF_CONSTRUCTION: usize = 200;
+    /// ef during search on upper layers 1..=5.
+    pub const EF_UPPER: usize = 1;
+    /// ef during search on layer 0 (Recall@10 evaluation).
+    pub const EF_L0: usize = 10;
+    /// Filter size k for layers 2..=5 (3 × ef per [10]).
+    pub const K_UPPER: usize = 3;
+    /// Filter size k for layer 1 (Fig. 2(a) selected value).
+    pub const K_L1: usize = 8;
+    /// Filter size k for layer 0 (Fig. 2(b) selected value).
+    pub const K_L0: usize = 16;
+    /// Processor clock (GHz) used by the timing model.
+    pub const CLOCK_GHZ: f64 = 1.0;
+    /// On-chip scratchpad capacity (bytes) — §V-A1.
+    pub const SPM_BYTES: usize = 128 * 1024;
+}

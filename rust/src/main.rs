@@ -1,0 +1,355 @@
+//! pHNSW command-line interface — the Layer-3 leader entrypoint.
+//!
+//! ```text
+//! phnsw gen      --n 100000 --queries 1000 --out-dir data/
+//! phnsw build    --n 100000 --m 16 --efc 128
+//! phnsw query    --n 10000 --engine phnsw --q 5
+//! phnsw serve    --n 10000 --engine phnsw --clients 4 --requests 2000
+//! phnsw sim      --engine phnsw --dram hbm --traces 100
+//! phnsw report   --what table3|fig2|fig4|fig5|ksort|db   (paper artifacts)
+//! phnsw check    --n 10000                                (graph invariants)
+//! ```
+//!
+//! Every subcommand is driven by the same [`phnsw::workbench`] pipeline the
+//! benches use, so CLI output and bench output agree.
+
+use phnsw::cli::{usage, Args, OptSpec};
+use phnsw::coordinator::{Query, RoutePolicy, Router, Server, ServerConfig};
+use phnsw::dram::DramConfig;
+use phnsw::hw::EngineKind;
+use phnsw::search::{AnnEngine, PhnswParams, SearchParams};
+use phnsw::workbench::{Workbench, WorkbenchConfig};
+use phnsw::{reports, Result};
+use std::sync::Arc;
+
+fn main() {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        print_usage();
+        std::process::exit(2);
+    }
+    let cmd = args.remove(0);
+    let parsed = Args::parse_from(&args);
+    let r = match cmd.as_str() {
+        "gen" => cmd_gen(&parsed),
+        "build" => cmd_build(&parsed),
+        "query" => cmd_query(&parsed),
+        "serve" => cmd_serve(&parsed),
+        "sim" => cmd_sim(&parsed),
+        "report" => cmd_report(&parsed),
+        "check" => cmd_check(&parsed),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print_usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "phnsw — PCA-filtered HNSW search (paper reproduction)\n\n\
+         subcommands:\n\
+         \x20 gen     generate a synthetic SIFT-like corpus to fvecs files\n\
+         \x20 build   build (and cache) the HNSW index + PCA for a scale\n\
+         \x20 query   run single queries through an engine\n\
+         \x20 serve   run the query server demo (batcher + workers)\n\
+         \x20 sim     run the pHNSW processor simulation\n\
+         \x20 report  regenerate a paper table/figure\n\
+         \x20 check   verify graph invariants\n\n\
+         run `phnsw <cmd> --help` for options"
+    );
+}
+
+fn wb_opts() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "n", help: "base corpus size", default: Some("10000".into()), is_flag: false },
+        OptSpec { name: "queries", help: "query count", default: Some("200".into()), is_flag: false },
+        OptSpec { name: "m", help: "HNSW M", default: Some("16".into()), is_flag: false },
+        OptSpec { name: "efc", help: "efConstruction", default: Some("128".into()), is_flag: false },
+        OptSpec { name: "dim-low", help: "PCA dims", default: Some("15".into()), is_flag: false },
+        OptSpec { name: "seed", help: "dataset seed (hex)", default: Some("5EED0001".into()), is_flag: false },
+    ]
+}
+
+fn workbench_from(args: &Args) -> Result<Workbench> {
+    let cfg = WorkbenchConfig {
+        n_base: args.get_parsed_or("n", 10_000usize)?,
+        n_queries: args.get_parsed_or("queries", 200usize)?,
+        m: args.get_parsed_or("m", phnsw::params::M)?,
+        ef_construction: args.get_parsed_or("efc", 128usize)?,
+        dim_low: args.get_parsed_or("dim-low", phnsw::params::DIM_LOW)?,
+        seed: u64::from_str_radix(args.get_or("seed", "5EED0001").trim_start_matches("0x"), 16)
+            .unwrap_or(0x5EED_0001),
+        k_gt: 10,
+    };
+    Workbench::assemble(cfg)
+}
+
+fn phnsw_params(args: &Args) -> Result<PhnswParams> {
+    let mut p = PhnswParams::default();
+    if let Some(ks) = args.get_usize_list("k-schedule")? {
+        p.k_schedule = ks;
+    }
+    p.search.ef_l0 = args.get_parsed_or("ef", phnsw::params::EF_L0)?;
+    p.validate()?;
+    Ok(p)
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    if args.flag("help") {
+        println!("{}", usage("phnsw gen", "generate synthetic corpus + queries (fvecs)", &wb_opts()));
+        return Ok(());
+    }
+    use phnsw::dataset::synthetic::{generate, SyntheticConfig};
+    let out = args.get_or("out-dir", "data");
+    std::fs::create_dir_all(&out)?;
+    let cfg = SyntheticConfig {
+        n_base: args.get_parsed_or("n", 100_000usize)?,
+        n_queries: args.get_parsed_or("queries", 1_000usize)?,
+        ..SyntheticConfig::default()
+    };
+    let (base, queries) = generate(&cfg);
+    phnsw::dataset::io::write_fvecs(format!("{out}/base.fvecs"), &base)?;
+    phnsw::dataset::io::write_fvecs(format!("{out}/queries.fvecs"), &queries)?;
+    println!(
+        "wrote {}/base.fvecs ({} × {}) and queries.fvecs ({})",
+        out,
+        base.len(),
+        base.dim(),
+        queries.len()
+    );
+    Ok(())
+}
+
+fn cmd_build(args: &Args) -> Result<()> {
+    if args.flag("help") {
+        println!("{}", usage("phnsw build", "build + cache index, PCA, ground truth", &wb_opts()));
+        return Ok(());
+    }
+    let w = workbench_from(args)?;
+    println!(
+        "graph: {} nodes, max level {}, mean degree L0 {:.1}",
+        w.graph.len(),
+        w.graph.max_level(),
+        w.graph.mean_degree(0)
+    );
+    println!(
+        "pca: {} → {} dims, explained variance {:.1}%",
+        w.base.dim(),
+        w.cfg.dim_low,
+        100.0 * w.pca.explained_variance_ratio()
+    );
+    println!("{}", reports::db_footprints(&w));
+    Ok(())
+}
+
+fn cmd_query(args: &Args) -> Result<()> {
+    if args.flag("help") {
+        let mut o = wb_opts();
+        o.push(OptSpec { name: "engine", help: "hnsw | phnsw", default: Some("phnsw".into()), is_flag: false });
+        o.push(OptSpec { name: "q", help: "query index", default: Some("0".into()), is_flag: false });
+        println!("{}", usage("phnsw query", "run one query and print neighbors", &o));
+        return Ok(());
+    }
+    let w = workbench_from(args)?;
+    let qi: usize = args.get_parsed_or("q", 0usize)?;
+    anyhow::ensure!(qi < w.queries.len(), "query index out of range");
+    let q = w.queries.row(qi);
+    let engine = args.get_or("engine", "phnsw");
+    let (res, stats) = match engine.as_str() {
+        "hnsw" => w.hnsw(SearchParams::default()).search_with_stats(q),
+        "phnsw" => w.phnsw(phnsw_params(args)?).search_with_stats(q),
+        other => anyhow::bail!("unknown engine {other:?}"),
+    };
+    println!("query {qi} via {engine}:");
+    for n in &res {
+        println!("  id={:<8} dist={:.1}", n.id, n.dist);
+    }
+    println!(
+        "stats: hops={} lowdim={} highdim={} (gt: {:?})",
+        stats.hops,
+        stats.lowdim_dists,
+        stats.highdim_dists,
+        &w.gt[qi][..res.len().min(w.gt[qi].len())]
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    if args.flag("help") {
+        let mut o = wb_opts();
+        o.push(OptSpec { name: "engine", help: "hnsw | phnsw | phnsw-xla | rr", default: Some("phnsw".into()), is_flag: false });
+        o.push(OptSpec { name: "clients", help: "client threads", default: Some("4".into()), is_flag: false });
+        o.push(OptSpec { name: "requests", help: "total requests", default: Some("2000".into()), is_flag: false });
+        o.push(OptSpec { name: "workers", help: "server workers", default: Some("4".into()), is_flag: false });
+        o.push(OptSpec { name: "artifacts", help: "artifact dir (for phnsw-xla)", default: Some("artifacts".into()), is_flag: false });
+        println!("{}", usage("phnsw serve", "query server demo: batcher + router + workers", &o));
+        return Ok(());
+    }
+    let w = Arc::new(workbench_from(args)?);
+    let engine_name = args.get_or("engine", "phnsw");
+    let mut router = Router::new(match engine_name.as_str() {
+        "rr" => RoutePolicy::RoundRobin,
+        name => RoutePolicy::Default(name.to_string()),
+    });
+    let hnsw: Arc<dyn AnnEngine> = Arc::new(w.hnsw(SearchParams::default()));
+    let phnsw_engine: Arc<dyn AnnEngine> = Arc::new(w.phnsw(phnsw_params(args)?));
+    router.register("hnsw", hnsw);
+    router.register("phnsw", phnsw_engine);
+    if engine_name == "phnsw-xla" {
+        let xla = Arc::new(phnsw::runtime::XlaRerankEngine::start(args.get_or("artifacts", "artifacts"))?);
+        let searcher = Arc::new(w.phnsw(phnsw_params(args)?));
+        router.register(
+            "phnsw-xla",
+            Arc::new(phnsw::coordinator::XlaPhnswEngine::new(searcher, xla, w.base.clone(), 16)),
+        );
+    }
+
+    let server = Server::start(
+        ServerConfig { workers: args.get_parsed_or("workers", 4usize)?, ..Default::default() },
+        Arc::new(router),
+    );
+    let handle = server.handle();
+    let clients: usize = args.get_parsed_or("clients", 4usize)?;
+    let total: usize = args.get_parsed_or("requests", 2_000usize)?;
+    let per_client = total / clients.max(1);
+
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let h = handle.clone();
+            let w = w.clone();
+            s.spawn(move || {
+                for i in 0..per_client {
+                    let qi = (c * per_client + i) % w.queries.len();
+                    let q = Query::new(w.queries.row(qi).to_vec());
+                    let _ = h.query_blocking(q);
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed();
+    println!(
+        "served {} requests in {:.2?} → {:.0} QPS (offered by {clients} clients)",
+        per_client * clients,
+        elapsed,
+        (per_client * clients) as f64 / elapsed.as_secs_f64()
+    );
+    println!("{}", server.stats().render());
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    if args.flag("help") {
+        let mut o = wb_opts();
+        o.push(OptSpec { name: "engine", help: "std | sep | phnsw", default: Some("phnsw".into()), is_flag: false });
+        o.push(OptSpec { name: "dram", help: "ddr4 | hbm", default: Some("ddr4".into()), is_flag: false });
+        o.push(OptSpec { name: "traces", help: "queries to trace", default: Some("100".into()), is_flag: false });
+        println!("{}", usage("phnsw sim", "cycle-simulate the pHNSW processor", &o));
+        return Ok(());
+    }
+    let w = workbench_from(args)?;
+    let dram = match args.get_or("dram", "ddr4").as_str() {
+        "ddr4" => DramConfig::ddr4(),
+        "hbm" => DramConfig::hbm(),
+        other => anyhow::bail!("unknown dram {other:?}"),
+    };
+    let limit: usize = args.get_parsed_or("traces", 100usize)?;
+    let (engine, traces) = match args.get_or("engine", "phnsw").as_str() {
+        "std" => (EngineKind::HnswStd, w.hnsw_traces(SearchParams::default(), limit)),
+        "sep" => (EngineKind::PhnswSep, w.phnsw_traces(phnsw_params(args)?, limit)),
+        "phnsw" => (EngineKind::Phnsw, w.phnsw_traces(phnsw_params(args)?, limit)),
+        other => anyhow::bail!("unknown engine {other:?}"),
+    };
+    let sim = w.simulate(engine, &traces, dram);
+    println!(
+        "{} on {}: {:.0} QPS  mean {:.1} µs/query  move-share {:.1}%",
+        sim.engine.label(),
+        sim.dram_name,
+        sim.qps,
+        sim.mean_cycles / 1000.0,
+        100.0 * sim.mix.move_share()
+    );
+    let e = &sim.mean_energy;
+    println!(
+        "energy/query: {:.2} µJ  (dram {:.1}%, spm {:.1}%, filter {:.2}%, other {:.1}%, static {:.1}%)",
+        e.total_pj() / 1e6,
+        100.0 * e.dram_pj / e.total_pj(),
+        100.0 * e.spm_pj / e.total_pj(),
+        100.0 * e.filter_units_pj / e.total_pj(),
+        100.0 * e.core_other_pj / e.total_pj(),
+        100.0 * e.static_pj / e.total_pj()
+    );
+    println!(
+        "dram: {} reads, {:.1}% row hits, {} bytes",
+        sim.dram.reads,
+        100.0 * sim.dram.hit_rate(),
+        sim.dram.bytes
+    );
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    if args.flag("help") {
+        let mut o = wb_opts();
+        o.push(OptSpec { name: "what", help: "table3 | fig2 | fig4 | fig5 | ksort | db | all", default: Some("all".into()), is_flag: false });
+        o.push(OptSpec { name: "traces", help: "queries to trace for sims", default: Some("100".into()), is_flag: false });
+        println!("{}", usage("phnsw report", "regenerate paper tables/figures", &o));
+        return Ok(());
+    }
+    let what = args.get_or("what", "all");
+    let limit: usize = args.get_parsed_or("traces", 100usize)?;
+    if what == "fig4" {
+        println!("{}", reports::fig4());
+        return Ok(());
+    }
+    if what == "ksort" {
+        println!("{}", reports::ksort_comparison());
+        return Ok(());
+    }
+    let w = workbench_from(args)?;
+    match what.as_str() {
+        "table3" => println!("{}", reports::table3(&w, limit)),
+        "fig2" => println!("{}", reports::fig2(&w, limit)),
+        "fig5" => println!("{}", reports::fig5(&w, limit)),
+        "db" => println!("{}", reports::db_footprints(&w)),
+        "all" => {
+            println!("{}", reports::table3(&w, limit));
+            println!("{}", reports::fig2(&w, limit));
+            println!("{}", reports::fig4());
+            println!("{}", reports::fig5(&w, limit));
+            println!("{}", reports::ksort_comparison());
+            println!("{}", reports::db_footprints(&w));
+        }
+        other => anyhow::bail!("unknown report {other:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_check(args: &Args) -> Result<()> {
+    if args.flag("help") {
+        println!("{}", usage("phnsw check", "verify graph invariants", &wb_opts()));
+        return Ok(());
+    }
+    let w = workbench_from(args)?;
+    let errs = w.graph.check_invariants();
+    if errs.is_empty() {
+        println!("graph OK: {} nodes, {} levels", w.graph.len(), w.graph.max_level() + 1);
+        Ok(())
+    } else {
+        for e in &errs {
+            eprintln!("violation: {e}");
+        }
+        anyhow::bail!("{} invariant violations", errs.len())
+    }
+}

@@ -1,0 +1,174 @@
+//! Evaluation metrics: Recall@k, QPS, and latency histograms — the
+//! quantities every table/figure in the paper reports.
+
+/// Recall@k: fraction of true top-k neighbors present in the returned
+/// top-k, averaged over queries. `results[q]` and `gt[q]` are id lists;
+/// only the first `k` of each are considered.
+pub fn recall_at_k(results: &[Vec<u32>], gt: &[Vec<u32>], k: usize) -> f64 {
+    assert_eq!(results.len(), gt.len(), "results/gt query count mismatch");
+    assert!(k > 0);
+    if results.is_empty() {
+        return 0.0;
+    }
+    let mut total = 0f64;
+    for (res, truth) in results.iter().zip(gt) {
+        let truth_k: std::collections::HashSet<u32> = truth.iter().take(k).copied().collect();
+        assert!(
+            truth_k.len() >= k.min(truth.len()),
+            "ground-truth lists must hold distinct ids"
+        );
+        let hit = res.iter().take(k).filter(|id| truth_k.contains(id)).count();
+        total += hit as f64 / truth_k.len().max(1) as f64;
+    }
+    total / results.len() as f64
+}
+
+/// Queries-per-second from a query count and elapsed wall time.
+pub fn qps(n_queries: usize, elapsed: std::time::Duration) -> f64 {
+    let secs = elapsed.as_secs_f64();
+    if secs <= 0.0 {
+        return f64::INFINITY;
+    }
+    n_queries as f64 / secs
+}
+
+/// Streaming latency statistics with percentile extraction.
+///
+/// Stores every sample (searches here are ≤ millions of queries, so exact
+/// percentiles are affordable and simpler than a sketch).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    samples_us: Vec<f64>,
+    sorted: bool,
+}
+
+impl LatencyStats {
+    /// New empty collector.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one latency sample.
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.samples_us.push(d.as_secs_f64() * 1e6);
+        self.sorted = false;
+    }
+
+    /// Record a raw microsecond value (used by the simulator, which works
+    /// in model time rather than wall time).
+    pub fn record_us(&mut self, us: f64) {
+        self.samples_us.push(us);
+        self.sorted = false;
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    /// True if no samples were recorded.
+    pub fn is_empty(&self) -> bool {
+        self.samples_us.is_empty()
+    }
+
+    /// Mean latency in microseconds.
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Exact percentile (nearest-rank), `p` in [0, 100].
+    pub fn percentile_us(&mut self, p: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&p));
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let rank = ((p / 100.0) * (self.samples_us.len() - 1) as f64).round() as usize;
+        self.samples_us[rank]
+    }
+
+    /// Convenience: (p50, p95, p99) in microseconds.
+    pub fn summary(&mut self) -> (f64, f64, f64) {
+        (self.percentile_us(50.0), self.percentile_us(95.0), self.percentile_us(99.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn recall_perfect_and_zero() {
+        let gt = vec![vec![1u32, 2, 3], vec![4, 5, 6]];
+        assert_eq!(recall_at_k(&gt.clone(), &gt, 3), 1.0);
+        let miss = vec![vec![9u32, 8, 7], vec![9, 8, 7]];
+        assert_eq!(recall_at_k(&miss, &gt, 3), 0.0);
+    }
+
+    #[test]
+    fn recall_partial_overlap() {
+        let gt = vec![vec![1u32, 2, 3, 4]];
+        let res = vec![vec![1u32, 9, 3, 8]];
+        assert!((recall_at_k(&res, &gt, 4) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recall_order_insensitive_within_k() {
+        let gt = vec![vec![1u32, 2, 3]];
+        let res = vec![vec![3u32, 1, 2]];
+        assert_eq!(recall_at_k(&res, &gt, 3), 1.0);
+    }
+
+    #[test]
+    fn recall_ignores_entries_beyond_k() {
+        let gt = vec![vec![1u32, 2, 3, 99]];
+        let res = vec![vec![1u32, 2, 3, 42]];
+        assert_eq!(recall_at_k(&res, &gt, 3), 1.0);
+    }
+
+    #[test]
+    fn qps_basic() {
+        let v = qps(1000, Duration::from_secs(2));
+        assert!((v - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let mut l = LatencyStats::new();
+        for us in 1..=100 {
+            l.record_us(us as f64);
+        }
+        assert_eq!(l.len(), 100);
+        assert!((l.mean_us() - 50.5).abs() < 1e-9);
+        assert!((l.percentile_us(0.0) - 1.0).abs() < 1e-9);
+        assert!((l.percentile_us(100.0) - 100.0).abs() < 1e-9);
+        let p50 = l.percentile_us(50.0);
+        assert!((49.0..=52.0).contains(&p50), "p50 = {p50}");
+    }
+
+    #[test]
+    fn latency_record_duration() {
+        let mut l = LatencyStats::new();
+        l.record(Duration::from_micros(250));
+        assert!((l.mean_us() - 250.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_latency_is_zero() {
+        let mut l = LatencyStats::new();
+        assert_eq!(l.mean_us(), 0.0);
+        assert_eq!(l.percentile_us(99.0), 0.0);
+        assert!(l.is_empty());
+    }
+}

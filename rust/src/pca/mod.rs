@@ -1,0 +1,413 @@
+//! Principal Component Analysis — step ① of the pHNSW pipeline (Fig. 1(c)).
+//!
+//! pHNSW projects the corpus from `DIM_HIGH` (128) to `DIM_LOW` (15)
+//! dimensions before building the filter tables. The offline registry has
+//! no linear-algebra crate, so this module carries its own dense symmetric
+//! eigensolver: covariance accumulation + cyclic Jacobi rotations
+//! ([`jacobi`]), which is exact, robust, and fast enough for the 128×128
+//! covariance this paper needs (< 10 ms).
+
+pub mod jacobi;
+
+use crate::dataset::VectorSet;
+use crate::rng::Pcg32;
+pub use jacobi::jacobi_eigen;
+
+/// A trained PCA projection.
+///
+/// `project` maps high-dim rows into the low-dim filter space; the
+/// components are orthonormal rows of the `k × dim` matrix.
+#[derive(Debug, Clone)]
+pub struct PcaModel {
+    /// Input dimensionality.
+    dim: usize,
+    /// Output (reduced) dimensionality.
+    k: usize,
+    /// Per-dimension mean of the training sample (length `dim`).
+    mean: Vec<f32>,
+    /// Row-major `k × dim` projection matrix (rows = top eigenvectors).
+    components: Vec<f32>,
+    /// Eigenvalues (variances) of the kept components, descending.
+    eigenvalues: Vec<f64>,
+    /// Total variance (trace of the covariance), for explained-ratio.
+    total_variance: f64,
+}
+
+/// Maximum number of rows sampled for covariance estimation. A 128-dim
+/// covariance stabilizes with a few tens of thousands of samples; fitting
+/// on more wastes time without changing the projection meaningfully.
+const MAX_FIT_SAMPLES: usize = 50_000;
+
+impl PcaModel {
+    /// Fit a `k`-component PCA on (a sample of) `data`.
+    ///
+    /// `seed` controls the subsample when `data.len() > MAX_FIT_SAMPLES`.
+    pub fn fit(data: &VectorSet, k: usize, seed: u64) -> Self {
+        let dim = data.dim();
+        assert!(k >= 1 && k <= dim, "k={k} out of range 1..={dim}");
+        assert!(data.len() >= 2, "need at least 2 vectors to fit PCA");
+
+        // Subsample rows if the corpus is large.
+        let idx: Vec<usize> = if data.len() > MAX_FIT_SAMPLES {
+            Pcg32::new(seed).sample_indices(data.len(), MAX_FIT_SAMPLES)
+        } else {
+            (0..data.len()).collect()
+        };
+        let n = idx.len();
+
+        // Mean.
+        let mut mean = vec![0f64; dim];
+        for &i in &idx {
+            for (m, &x) in mean.iter_mut().zip(data.row(i)) {
+                *m += x as f64;
+            }
+        }
+        for m in &mut mean {
+            *m /= n as f64;
+        }
+
+        // Covariance (upper triangle, then mirrored).
+        let mut cov = vec![0f64; dim * dim];
+        let mut centered = vec![0f64; dim];
+        for &i in &idx {
+            for (c, (&x, &m)) in centered.iter_mut().zip(data.row(i).iter().zip(&mean)) {
+                *c = x as f64 - m;
+            }
+            for a in 0..dim {
+                let ca = centered[a];
+                // accumulate row a of the upper triangle
+                for b in a..dim {
+                    cov[a * dim + b] += ca * centered[b];
+                }
+            }
+        }
+        let denom = (n - 1) as f64;
+        for a in 0..dim {
+            for b in a..dim {
+                let v = cov[a * dim + b] / denom;
+                cov[a * dim + b] = v;
+                cov[b * dim + a] = v;
+            }
+        }
+        let total_variance: f64 = (0..dim).map(|i| cov[i * dim + i]).sum();
+
+        // Eigen-decomposition; take the top-k eigenpairs.
+        let eig = jacobi_eigen(&cov, dim);
+        let mut order: Vec<usize> = (0..dim).collect();
+        order.sort_by(|&a, &b| eig.values[b].partial_cmp(&eig.values[a]).unwrap());
+
+        let mut components = vec![0f32; k * dim];
+        let mut eigenvalues = Vec::with_capacity(k);
+        for (row, &src) in order[..k].iter().enumerate() {
+            eigenvalues.push(eig.values[src].max(0.0));
+            for d in 0..dim {
+                // eigenvectors are stored column-major in `vectors`
+                components[row * dim + d] = eig.vectors[d * dim + src] as f32;
+            }
+        }
+
+        Self {
+            dim,
+            k,
+            mean: mean.into_iter().map(|m| m as f32).collect(),
+            components,
+            eigenvalues,
+            total_variance,
+        }
+    }
+
+    /// Input dimensionality.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Reduced dimensionality.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// The training-sample mean.
+    pub fn mean(&self) -> &[f32] {
+        &self.mean
+    }
+
+    /// Row-major `k × dim` component matrix.
+    pub fn components(&self) -> &[f32] {
+        &self.components
+    }
+
+    /// Kept eigenvalues, descending.
+    pub fn eigenvalues(&self) -> &[f64] {
+        &self.eigenvalues
+    }
+
+    /// Fraction of total variance captured by the kept components.
+    pub fn explained_variance_ratio(&self) -> f64 {
+        if self.total_variance <= 0.0 {
+            return 0.0;
+        }
+        self.eigenvalues.iter().sum::<f64>() / self.total_variance
+    }
+
+    /// Project one vector into the reduced space.
+    ///
+    /// Lane-coherent 8-wide accumulation (same §Perf pattern as
+    /// `search::dist::l2_sq`): each SIMD lane owns a partial dot product,
+    /// reduced once per component row.
+    pub fn project(&self, v: &[f32], out: &mut [f32]) {
+        assert_eq!(v.len(), self.dim);
+        assert_eq!(out.len(), self.k);
+        for (r, o) in out.iter_mut().enumerate() {
+            let row = &self.components[r * self.dim..(r + 1) * self.dim];
+            let mut acc = [0f32; 8];
+            let rc = row.chunks_exact(8);
+            let vc = v.chunks_exact(8);
+            let mc = self.mean.chunks_exact(8);
+            let (rt, vt, mt) = (rc.remainder(), vc.remainder(), mc.remainder());
+            for ((cr, cv), cm) in rc.zip(vc).zip(mc) {
+                for j in 0..8 {
+                    acc[j] = cr[j].mul_add(cv[j] - cm[j], acc[j]);
+                }
+            }
+            let mut tail = 0f32;
+            for j in 0..rt.len() {
+                tail += rt[j] * (vt[j] - mt[j]);
+            }
+            *o = ((acc[0] + acc[4]) + (acc[1] + acc[5]))
+                + ((acc[2] + acc[6]) + (acc[3] + acc[7]))
+                + tail;
+        }
+    }
+
+    /// Project every row of a [`VectorSet`].
+    pub fn project_set(&self, data: &VectorSet) -> VectorSet {
+        let mut out = VectorSet::new(self.k);
+        let mut buf = vec![0f32; self.k];
+        for row in data.iter() {
+            self.project(row, &mut buf);
+            out.push(&buf);
+        }
+        out
+    }
+
+    /// Reconstruct (back-project) a reduced vector into the original space.
+    /// Used only for diagnostics — pHNSW re-reads the *original* vectors for
+    /// the high-dim rerank rather than reconstructing.
+    pub fn back_project(&self, z: &[f32], out: &mut [f32]) {
+        assert_eq!(z.len(), self.k);
+        assert_eq!(out.len(), self.dim);
+        out.copy_from_slice(&self.mean);
+        for (r, &zr) in z.iter().enumerate() {
+            let row = &self.components[r * self.dim..(r + 1) * self.dim];
+            for d in 0..self.dim {
+                out[d] += zr * row[d];
+            }
+        }
+    }
+
+    /// Serialize to a flat binary blob (own format; serde is unavailable).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"PCA1");
+        out.extend_from_slice(&(self.dim as u32).to_le_bytes());
+        out.extend_from_slice(&(self.k as u32).to_le_bytes());
+        for &m in &self.mean {
+            out.extend_from_slice(&m.to_le_bytes());
+        }
+        for &c in &self.components {
+            out.extend_from_slice(&c.to_le_bytes());
+        }
+        for &e in &self.eigenvalues {
+            out.extend_from_slice(&e.to_le_bytes());
+        }
+        out.extend_from_slice(&self.total_variance.to_le_bytes());
+        out
+    }
+
+    /// Deserialize from [`Self::to_bytes`] output.
+    pub fn from_bytes(bytes: &[u8]) -> crate::Result<Self> {
+        use anyhow::{bail, ensure};
+        ensure!(bytes.len() >= 12, "PCA blob too short");
+        if &bytes[0..4] != b"PCA1" {
+            bail!("bad PCA magic");
+        }
+        let dim = u32::from_le_bytes(bytes[4..8].try_into()?) as usize;
+        let k = u32::from_le_bytes(bytes[8..12].try_into()?) as usize;
+        let want = 12 + 4 * dim + 4 * k * dim + 8 * k + 8;
+        ensure!(bytes.len() == want, "PCA blob length {} != expected {want}", bytes.len());
+        let mut off = 12;
+        let f32s = |n: usize, off: &mut usize| -> Vec<f32> {
+            let v = bytes[*off..*off + 4 * n]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            *off += 4 * n;
+            v
+        };
+        let mean = f32s(dim, &mut off);
+        let components = f32s(k * dim, &mut off);
+        let mut eigenvalues = Vec::with_capacity(k);
+        for _ in 0..k {
+            eigenvalues.push(f64::from_le_bytes(bytes[off..off + 8].try_into()?));
+            off += 8;
+        }
+        let total_variance = f64::from_le_bytes(bytes[off..off + 8].try_into()?);
+        Ok(Self { dim, k, mean, components, eigenvalues, total_variance })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{l2_sq_scalar, VectorSet};
+    use crate::rng::Pcg32;
+
+    /// Data with known structure: variance 9 along axis0, 1 along axis1,
+    /// ~0 elsewhere.
+    fn axis_aligned_data() -> VectorSet {
+        let mut rng = Pcg32::new(99);
+        let mut vs = VectorSet::new(5);
+        for _ in 0..2000 {
+            let v = [
+                3.0 * rng.gaussian() + 10.0,
+                1.0 * rng.gaussian() - 4.0,
+                0.01 * rng.gaussian(),
+                0.01 * rng.gaussian(),
+                0.01 * rng.gaussian(),
+            ];
+            vs.push(&v);
+        }
+        vs
+    }
+
+    #[test]
+    fn recovers_dominant_axes() {
+        let data = axis_aligned_data();
+        let pca = PcaModel::fit(&data, 2, 1);
+        // First component should be ±e0, second ±e1.
+        let c0 = &pca.components()[0..5];
+        let c1 = &pca.components()[5..10];
+        assert!(c0[0].abs() > 0.99, "c0 = {c0:?}");
+        assert!(c1[1].abs() > 0.99, "c1 = {c1:?}");
+        // Eigenvalues ≈ 9 and 1.
+        assert!((pca.eigenvalues()[0] - 9.0).abs() < 0.7, "{:?}", pca.eigenvalues());
+        assert!((pca.eigenvalues()[1] - 1.0).abs() < 0.2, "{:?}", pca.eigenvalues());
+        // Those two axes carry essentially all the variance.
+        assert!(pca.explained_variance_ratio() > 0.999);
+    }
+
+    #[test]
+    fn components_are_orthonormal() {
+        let data = axis_aligned_data();
+        let pca = PcaModel::fit(&data, 3, 1);
+        for i in 0..3 {
+            for j in 0..3 {
+                let a = &pca.components()[i * 5..(i + 1) * 5];
+                let b = &pca.components()[j * 5..(j + 1) * 5];
+                let dot: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-4, "<c{i},c{j}> = {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn projection_centers_data() {
+        let data = axis_aligned_data();
+        let pca = PcaModel::fit(&data, 2, 1);
+        let proj = pca.project_set(&data);
+        // Projected mean ≈ 0 in every kept dimension.
+        let mut mean = [0f64; 2];
+        for row in proj.iter() {
+            mean[0] += row[0] as f64;
+            mean[1] += row[1] as f64;
+        }
+        for m in &mut mean {
+            *m /= proj.len() as f64;
+        }
+        assert!(mean[0].abs() < 0.15 && mean[1].abs() < 0.15, "{mean:?}");
+    }
+
+    #[test]
+    fn full_rank_projection_preserves_distances() {
+        // With k = dim, PCA is an isometry (orthogonal transform of
+        // centered data): pairwise distances must be preserved.
+        let data = axis_aligned_data();
+        let pca = PcaModel::fit(&data, 5, 1);
+        let proj = pca.project_set(&data);
+        for i in (0..40).step_by(7) {
+            for j in (0..40).step_by(11) {
+                let d_orig = l2_sq_scalar(data.row(i), data.row(j));
+                let d_proj = l2_sq_scalar(proj.row(i), proj.row(j));
+                assert!(
+                    (d_orig - d_proj).abs() <= 1e-2 * d_orig.max(1.0),
+                    "({i},{j}): {d_orig} vs {d_proj}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn low_dim_distances_lower_bound_high_dim() {
+        // Projection onto an orthonormal subspace can only shrink distances
+        // — the property that makes PCA filtering safe (candidates pruned
+        // by low-dim distance are provably at least that far away).
+        let data = axis_aligned_data();
+        let pca = PcaModel::fit(&data, 2, 1);
+        let proj = pca.project_set(&data);
+        for i in (0..60).step_by(5) {
+            for j in (0..60).step_by(9) {
+                let d_orig = l2_sq_scalar(data.row(i), data.row(j));
+                let d_proj = l2_sq_scalar(proj.row(i), proj.row(j));
+                assert!(d_proj <= d_orig * 1.001 + 1e-4, "({i},{j}): {d_proj} > {d_orig}");
+            }
+        }
+    }
+
+    #[test]
+    fn back_project_roundtrips_in_kept_subspace() {
+        let data = axis_aligned_data();
+        let pca = PcaModel::fit(&data, 5, 1);
+        let mut z = vec![0f32; 5];
+        let mut back = vec![0f32; 5];
+        pca.project(data.row(3), &mut z);
+        pca.back_project(&z, &mut back);
+        for (a, b) in data.row(3).iter().zip(&back) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let data = axis_aligned_data();
+        let pca = PcaModel::fit(&data, 3, 1);
+        let blob = pca.to_bytes();
+        let back = PcaModel::from_bytes(&blob).unwrap();
+        assert_eq!(pca.mean(), back.mean());
+        assert_eq!(pca.components(), back.components());
+        assert_eq!(pca.eigenvalues(), back.eigenvalues());
+        let mut a = vec![0f32; 3];
+        let mut b = vec![0f32; 3];
+        pca.project(data.row(0), &mut a);
+        back.project(data.row(0), &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn from_bytes_rejects_garbage() {
+        assert!(PcaModel::from_bytes(b"nope").is_err());
+        assert!(PcaModel::from_bytes(b"PCA1aaaaaaaaaaaa").is_err());
+    }
+
+    #[test]
+    fn fit_subsamples_large_corpora_deterministically() {
+        let mut rng = Pcg32::new(5);
+        let mut vs = VectorSet::new(3);
+        for _ in 0..1000 {
+            vs.push(&[rng.gaussian() * 2.0, rng.gaussian(), 0.1 * rng.gaussian()]);
+        }
+        let a = PcaModel::fit(&vs, 2, 7);
+        let b = PcaModel::fit(&vs, 2, 7);
+        assert_eq!(a.components(), b.components());
+    }
+}

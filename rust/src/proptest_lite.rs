@@ -1,0 +1,136 @@
+//! Minimal property-based testing harness.
+//!
+//! The offline registry has no `proptest`, so this module supplies the
+//! subset the test suites need: seeded case generation, configurable case
+//! counts, and greedy input shrinking for failures on `Vec`-shaped inputs.
+//! It is deliberately tiny — generators are closures over [`Pcg32`] and a
+//! failing case is reported with its seed so it can be replayed.
+
+use crate::rng::Pcg32;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of random cases to execute.
+    pub cases: usize,
+    /// Base seed; case `i` uses `seed + i`.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 256, seed: 0x9095_EED5 }
+    }
+}
+
+/// Run `prop` against `cases` random inputs drawn by `gen`.
+///
+/// Panics with the failing seed and debug representation on the first
+/// falsified case.
+pub fn run<T: std::fmt::Debug>(
+    cfg: &Config,
+    mut gen: impl FnMut(&mut Pcg32) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    for i in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(i as u64);
+        let mut rng = Pcg32::new(case_seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property falsified on case {i} (seed {case_seed}): {input:#?}"
+            );
+        }
+    }
+}
+
+/// Run a property over `Vec<T>` inputs with greedy shrinking: on failure,
+/// repeatedly try dropping halves/elements while the property still fails,
+/// then report the minimal counterexample.
+pub fn run_vec<T: Clone + std::fmt::Debug>(
+    cfg: &Config,
+    mut gen: impl FnMut(&mut Pcg32) -> Vec<T>,
+    mut prop: impl FnMut(&[T]) -> bool,
+) {
+    for i in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(i as u64);
+        let mut rng = Pcg32::new(case_seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            let minimal = shrink_vec(input, &mut prop);
+            panic!(
+                "property falsified on case {i} (seed {case_seed}); shrunk to {} elems: {minimal:#?}",
+                minimal.len()
+            );
+        }
+    }
+}
+
+/// Greedy vector shrinking: try removing chunks (half, quarter, ... single
+/// elements) as long as the property keeps failing.
+fn shrink_vec<T: Clone>(mut failing: Vec<T>, prop: &mut impl FnMut(&[T]) -> bool) -> Vec<T> {
+    let mut chunk = failing.len() / 2;
+    while chunk >= 1 {
+        let mut start = 0;
+        while start + chunk <= failing.len() {
+            let mut candidate = failing.clone();
+            candidate.drain(start..start + chunk);
+            if !prop(&candidate) {
+                failing = candidate; // keep the smaller failing input
+            } else {
+                start += chunk;
+            }
+        }
+        chunk /= 2;
+    }
+    failing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        run(
+            &Config { cases: 64, seed: 1 },
+            |rng| rng.below(100),
+            |&x| x < 100,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "falsified")]
+    fn failing_property_panics_with_seed() {
+        run(
+            &Config { cases: 64, seed: 2 },
+            |rng| rng.below(100),
+            |&x| x < 50, // fails ~half the time
+        );
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // Property: "no element equals 7". Generate vectors containing 7
+        // sometimes; the shrunk counterexample should be tiny.
+        let result = std::panic::catch_unwind(|| {
+            run_vec(
+                &Config { cases: 200, seed: 3 },
+                |rng| (0..rng.range(1, 50)).map(|_| rng.below(10)).collect::<Vec<u32>>(),
+                |xs| !xs.contains(&7),
+            );
+        });
+        let err = result.expect_err("property should be falsified");
+        let msg = err.downcast_ref::<String>().expect("panic with String");
+        // Shrunk vector should contain only the single offending element.
+        assert!(msg.contains("shrunk to 1 elems"), "got: {msg}");
+    }
+
+    #[test]
+    fn shrink_vec_direct() {
+        let failing: Vec<u32> = vec![1, 2, 3, 7, 4, 5];
+        let mut prop = |xs: &[u32]| !xs.contains(&7);
+        let minimal = shrink_vec(failing, &mut prop);
+        assert_eq!(minimal, vec![7]);
+    }
+}

@@ -1,0 +1,305 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline crate registry has no `rand` crate, so the repo carries its
+//! own small generator stack: [`SplitMix64`] for seeding and [`Pcg32`]
+//! (PCG-XSH-RR 64/32) as the workhorse stream, plus the distribution
+//! helpers the dataset generator and the property tests need
+//! (uniform ranges, Gaussians via Box–Muller, Fisher–Yates shuffles).
+//!
+//! Everything is seedable and reproducible: every experiment in
+//! `EXPERIMENTS.md` records its seed.
+
+/// SplitMix64 — used to expand one `u64` seed into PCG state/stream pairs.
+///
+/// Reference: Steele, Lea, Flood, "Fast Splittable Pseudorandom Number
+/// Generators" (OOPSLA 2014).
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create a generator from a raw seed.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG-XSH-RR 64/32: small, fast, statistically solid 32-bit generator.
+///
+/// Reference: O'Neill, "PCG: A Family of Simple Fast Space-Efficient
+/// Statistically Good Algorithms for Random Number Generation" (2014).
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6_364_136_223_846_793_005;
+
+impl Pcg32 {
+    /// Construct from a single seed; state and stream are derived via
+    /// SplitMix64 so nearby seeds give unrelated streams.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let state = sm.next_u64();
+        let inc = sm.next_u64() | 1; // stream must be odd
+        let mut rng = Self { state: 0, inc };
+        rng.state = state.wrapping_add(inc);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive an independent child generator (for per-thread / per-node use).
+    pub fn split(&mut self) -> Pcg32 {
+        Pcg32::new(((self.next_u32() as u64) << 32) | self.next_u32() as u64)
+    }
+
+    /// Next 32-bit output.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next 64-bit output (two 32-bit draws).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)` with 32 bits of resolution.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of resolution.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Unbiased uniform integer in `[0, bound)` (Lemire rejection method).
+    pub fn below(&mut self, bound: u32) -> u32 {
+        assert!(bound > 0, "below(0) is meaningless");
+        let threshold = bound.wrapping_neg() % bound;
+        loop {
+            let r = self.next_u32();
+            let m = (r as u64) * (bound as u64);
+            if (m as u32) >= threshold {
+                return (m >> 32) as u32;
+            }
+        }
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo, "empty range {lo}..{hi}");
+        lo + self.below((hi - lo) as u32) as usize
+    }
+
+    /// Standard normal via Box–Muller (one value per call; the pair's twin
+    /// is discarded for simplicity — generation is not a hot path).
+    pub fn gaussian(&mut self) -> f32 {
+        loop {
+            let u1 = self.f64();
+            if u1 > 1e-12 {
+                let u2 = self.f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return (r * (2.0 * std::f64::consts::PI * u2).cos()) as f32;
+            }
+        }
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `n` distinct indices from `[0, pool)` (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, pool: usize, n: usize) -> Vec<usize> {
+        assert!(n <= pool, "cannot sample {n} from pool of {pool}");
+        // For small n relative to pool use rejection; otherwise shuffle.
+        if n * 4 < pool {
+            let mut seen = std::collections::HashSet::with_capacity(n * 2);
+            let mut out = Vec::with_capacity(n);
+            while out.len() < n {
+                let x = self.below(pool as u32) as usize;
+                if seen.insert(x) {
+                    out.push(x);
+                }
+            }
+            out
+        } else {
+            let mut all: Vec<usize> = (0..pool).collect();
+            self.shuffle(&mut all);
+            all.truncate(n);
+            all
+        }
+    }
+
+    /// Geometric level draw used by HNSW insertion: `floor(-ln(U) * mL)`,
+    /// clamped to `max_level`.
+    pub fn hnsw_level(&mut self, ml: f64, max_level: usize) -> usize {
+        let u = self.f64().max(1e-300);
+        ((-u.ln() * ml).floor() as usize).min(max_level)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn splitmix_differs_by_seed() {
+        let mut a = SplitMix64::new(1);
+        let mut b = SplitMix64::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn pcg_deterministic_and_seed_sensitive() {
+        let xs: Vec<u32> = {
+            let mut r = Pcg32::new(7);
+            (0..8).map(|_| r.next_u32()).collect()
+        };
+        let ys: Vec<u32> = {
+            let mut r = Pcg32::new(7);
+            (0..8).map(|_| r.next_u32()).collect()
+        };
+        let zs: Vec<u32> = {
+            let mut r = Pcg32::new(8);
+            (0..8).map(|_| r.next_u32()).collect()
+        };
+        assert_eq!(xs, ys);
+        assert_ne!(xs, zs);
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = Pcg32::new(3);
+        for _ in 0..10_000 {
+            let x = r.f32();
+            assert!((0.0..1.0).contains(&x), "{x} out of [0,1)");
+        }
+    }
+
+    #[test]
+    fn below_respects_bound_and_hits_all_values() {
+        let mut r = Pcg32::new(11);
+        let mut seen = [false; 7];
+        for _ in 0..10_000 {
+            let v = r.below(7) as usize;
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues should appear");
+    }
+
+    #[test]
+    fn below_is_roughly_uniform() {
+        let mut r = Pcg32::new(5);
+        let mut counts = [0u32; 10];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[r.below(10) as usize] += 1;
+        }
+        for c in counts {
+            // expect 10_000 per bucket; allow 5% slack
+            assert!((9_500..10_500).contains(&c), "bucket count {c}");
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Pcg32::new(13);
+        let n = 200_000;
+        let (mut sum, mut sumsq) = (0f64, 0f64);
+        for _ in 0..n {
+            let g = r.gaussian() as f64;
+            sum += g;
+            sumsq += g * g;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut r = Pcg32::new(17);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut r = Pcg32::new(19);
+        for &(pool, n) in &[(1000usize, 10usize), (100, 90), (5, 5), (1, 1)] {
+            let s = r.sample_indices(pool, n);
+            assert_eq!(s.len(), n);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), n, "indices must be distinct");
+            assert!(s.iter().all(|&i| i < pool));
+        }
+    }
+
+    #[test]
+    fn hnsw_level_distribution_is_geometric_like() {
+        let mut r = Pcg32::new(23);
+        let ml = 1.0 / (16f64).ln();
+        let n = 100_000;
+        let mut level0 = 0;
+        let mut maxl = 0;
+        for _ in 0..n {
+            let l = r.hnsw_level(ml, 12);
+            maxl = maxl.max(l);
+            if l == 0 {
+                level0 += 1;
+            }
+        }
+        // P(level = 0) = 1 - 1/16 = 0.9375
+        let frac = level0 as f64 / n as f64;
+        assert!((frac - 0.9375).abs() < 0.01, "P(l=0) = {frac}");
+        assert!(maxl <= 12);
+        assert!(maxl >= 3, "with 100k draws some node should reach level 3+");
+    }
+
+    #[test]
+    fn split_streams_are_decorrelated() {
+        let mut parent = Pcg32::new(29);
+        let mut a = parent.split();
+        let mut b = parent.split();
+        let matches = (0..1000).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(matches < 5, "{matches} collisions in 1000 draws");
+    }
+}

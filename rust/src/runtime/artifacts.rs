@@ -1,0 +1,107 @@
+//! Artifact registry: discovers `artifacts/*.hlo.txt`, compiles each once
+//! on the PJRT CPU client, and caches the loaded executables.
+//!
+//! PJRT wrapper types are `Rc`-based (not `Send`), so a registry lives on
+//! a single thread; the coordinator wraps it in a dedicated worker thread
+//! (see [`super::engine`]).
+
+use anyhow::{ensure, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// A compiled artifact ready for execution.
+pub struct Executable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Artifact name (file stem).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with the given inputs; returns the flattened output tuple
+    /// (aot.py lowers every entry with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("execute artifact {}", self.name))?;
+        ensure!(!out.is_empty() && !out[0].is_empty(), "empty execution result");
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Run and read output `i` as an `f32` vector.
+    pub fn run_f32(&self, inputs: &[xla::Literal], i: usize) -> Result<Vec<f32>> {
+        let outs = self.run(inputs)?;
+        ensure!(i < outs.len(), "output index {i} out of range ({})", outs.len());
+        Ok(outs[i].to_vec::<f32>()?)
+    }
+}
+
+/// Lazily-compiling registry over an artifact directory.
+pub struct ArtifactRegistry {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl ArtifactRegistry {
+    /// Open a registry over `dir` (created by `make artifacts`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        ensure!(dir.is_dir(), "artifact directory {} missing — run `make artifacts`", dir.display());
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self { client, dir, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Platform string of the underlying PJRT client.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Names of all available artifacts (sorted).
+    pub fn available(&self) -> Vec<String> {
+        let mut names: Vec<String> = std::fs::read_dir(&self.dir)
+            .into_iter()
+            .flatten()
+            .flatten()
+            .filter_map(|e| {
+                let f = e.file_name().into_string().ok()?;
+                f.strip_suffix(".hlo.txt").map(|s| s.to_string())
+            })
+            .collect();
+        names.sort();
+        names
+    }
+
+    /// Fetch (compiling on first use) the named artifact.
+    pub fn get(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        ensure!(path.is_file(), "artifact {} not found at {}", name, path.display());
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT-compile artifact {name}"))?;
+        let e = Rc::new(Executable { name: name.to_string(), exe });
+        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], shape: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = shape.iter().product();
+    ensure!(n as usize == data.len(), "shape {shape:?} does not match {} elements", data.len());
+    Ok(xla::Literal::vec1(data).reshape(shape)?)
+}

@@ -1,0 +1,213 @@
+//! Thread-hosted XLA engine: a `Send + Sync` handle over a dedicated
+//! worker thread that owns the (non-`Send`) PJRT client and executes the
+//! AOT artifacts on request.
+//!
+//! The coordinator's rerank path routes through this engine, proving the
+//! three-layer composition end to end: rust search loop → AOT-compiled
+//! JAX/Pallas kernels → PJRT CPU execution, with Python long gone.
+
+use super::artifacts::{literal_f32, ArtifactRegistry};
+use anyhow::{Context, Result};
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+/// Jobs the worker understands.
+enum Job {
+    /// Batched rerank: queries (B×D), candidates (B×K×D) → distances (B×K).
+    BatchRerank {
+        queries: Vec<f32>,
+        cands: Vec<f32>,
+        b: usize,
+        k: usize,
+        d: usize,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    /// Single filter step (kernel `filter_l0` etc.): q_pca, neighbor tile,
+    /// valid mask → (top-k dists, top-k tile indices).
+    FilterStep {
+        artifact: &'static str,
+        q_pca: Vec<f32>,
+        neighbors: Vec<f32>,
+        valid: Vec<f32>,
+        n: usize,
+        d: usize,
+        reply: mpsc::Sender<Result<(Vec<f32>, Vec<i32>)>>,
+    },
+    /// List available artifacts (health check).
+    Available { reply: mpsc::Sender<Result<Vec<String>>> },
+    Shutdown,
+}
+
+/// `Send + Sync` handle to the XLA worker thread.
+pub struct XlaRerankEngine {
+    tx: Mutex<mpsc::Sender<Job>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl XlaRerankEngine {
+    /// Spawn the worker over an artifact directory. Fails fast if the
+    /// registry cannot open or the `batch_rerank` artifact is missing.
+    pub fn start(artifact_dir: impl Into<std::path::PathBuf>) -> Result<Self> {
+        let dir = artifact_dir.into();
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("xla-worker".into())
+            .spawn(move || worker(dir, rx, ready_tx))
+            .context("spawn xla worker")?;
+        ready_rx.recv().context("xla worker died during startup")??;
+        Ok(Self { tx: Mutex::new(tx), handle: Some(handle) })
+    }
+
+    fn send(&self, job: Job) -> Result<()> {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(job)
+            .map_err(|_| anyhow::anyhow!("xla worker gone"))
+    }
+
+    /// Batched rerank through the `batch_rerank` artifact. `queries` is
+    /// `b × d` row-major, `cands` is `b × k × d`. Batches are padded to
+    /// the artifact's fixed batch of 8 by repeating the last row.
+    pub fn batch_rerank(&self, queries: &[f32], cands: &[f32], b: usize, k: usize, d: usize) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Job::BatchRerank {
+            queries: queries.to_vec(),
+            cands: cands.to_vec(),
+            b,
+            k,
+            d,
+            reply,
+        })?;
+        rx.recv().context("xla worker dropped reply")?
+    }
+
+    /// One filter step through a fixed-shape filter artifact
+    /// (`filter_l0` / `filter_l1` / `filter_upper`).
+    pub fn filter_step(
+        &self,
+        artifact: &'static str,
+        q_pca: &[f32],
+        neighbors: &[f32],
+        valid: &[f32],
+    ) -> Result<(Vec<f32>, Vec<i32>)> {
+        let d = q_pca.len();
+        let n = valid.len();
+        anyhow::ensure!(neighbors.len() == n * d, "neighbor tile shape mismatch");
+        let (reply, rx) = mpsc::channel();
+        self.send(Job::FilterStep {
+            artifact,
+            q_pca: q_pca.to_vec(),
+            neighbors: neighbors.to_vec(),
+            valid: valid.to_vec(),
+            n,
+            d,
+            reply,
+        })?;
+        rx.recv().context("xla worker dropped reply")?
+    }
+
+    /// Artifact names the worker can see.
+    pub fn available(&self) -> Result<Vec<String>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Job::Available { reply })?;
+        rx.recv().context("xla worker dropped reply")?
+    }
+}
+
+impl Drop for XlaRerankEngine {
+    fn drop(&mut self) {
+        let _ = self.send(Job::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Fixed batch the `batch_rerank` artifact was lowered with (aot.py).
+const RERANK_BATCH: usize = 8;
+
+fn worker(dir: std::path::PathBuf, rx: mpsc::Receiver<Job>, ready: mpsc::Sender<Result<()>>) {
+    let registry = match ArtifactRegistry::open(&dir) {
+        Ok(r) => {
+            let _ = ready.send(Ok(()));
+            r
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Shutdown => break,
+            Job::Available { reply } => {
+                let _ = reply.send(Ok(registry.available()));
+            }
+            Job::FilterStep { artifact, q_pca, neighbors, valid, n, d, reply } => {
+                let _ = reply.send(run_filter(&registry, artifact, &q_pca, &neighbors, &valid, n, d));
+            }
+            Job::BatchRerank { queries, cands, b, k, d, reply } => {
+                let _ = reply.send(run_batch_rerank(&registry, &queries, &cands, b, k, d));
+            }
+        }
+    }
+}
+
+fn run_filter(
+    registry: &ArtifactRegistry,
+    artifact: &str,
+    q_pca: &[f32],
+    neighbors: &[f32],
+    valid: &[f32],
+    n: usize,
+    d: usize,
+) -> Result<(Vec<f32>, Vec<i32>)> {
+    let exe = registry.get(artifact)?;
+    let inputs = vec![
+        literal_f32(q_pca, &[d as i64])?,
+        literal_f32(neighbors, &[n as i64, d as i64])?,
+        literal_f32(valid, &[n as i64])?,
+    ];
+    let outs = exe.run(&inputs)?;
+    anyhow::ensure!(outs.len() == 2, "filter artifact returns 2 outputs, got {}", outs.len());
+    let vals = outs[0].to_vec::<f32>()?;
+    let idx = outs[1].to_vec::<i32>()?;
+    Ok((vals, idx))
+}
+
+fn run_batch_rerank(
+    registry: &ArtifactRegistry,
+    queries: &[f32],
+    cands: &[f32],
+    b: usize,
+    k: usize,
+    d: usize,
+) -> Result<Vec<f32>> {
+    anyhow::ensure!(queries.len() == b * d, "queries shape mismatch");
+    anyhow::ensure!(cands.len() == b * k * d, "candidates shape mismatch");
+    let exe = registry.get("batch_rerank")?;
+    let mut out = Vec::with_capacity(b * k);
+    // Pad each chunk to the artifact's fixed batch by repeating row 0.
+    let mut chunk_q = vec![0f32; RERANK_BATCH * d];
+    let mut chunk_c = vec![0f32; RERANK_BATCH * k * d];
+    let mut done = 0;
+    while done < b {
+        let take = (b - done).min(RERANK_BATCH);
+        for slot in 0..RERANK_BATCH {
+            let src = if slot < take { done + slot } else { done };
+            chunk_q[slot * d..(slot + 1) * d].copy_from_slice(&queries[src * d..(src + 1) * d]);
+            chunk_c[slot * k * d..(slot + 1) * k * d]
+                .copy_from_slice(&cands[src * k * d..(src + 1) * k * d]);
+        }
+        let inputs = vec![
+            literal_f32(&chunk_q, &[RERANK_BATCH as i64, d as i64])?,
+            literal_f32(&chunk_c, &[RERANK_BATCH as i64, k as i64, d as i64])?,
+        ];
+        let dists = exe.run_f32(&inputs, 0)?;
+        out.extend_from_slice(&dists[..take * k]);
+        done += take;
+    }
+    Ok(out)
+}

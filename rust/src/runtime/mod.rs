@@ -1,0 +1,17 @@
+//! PJRT runtime — loads the AOT-compiled JAX/Pallas artifacts and executes
+//! them from the rust request path (Python never runs at serve time).
+//!
+//! Pipeline: `artifacts/<name>.hlo.txt` (HLO text, written once by
+//! `python/compile/aot.py`) → [`xla::HloModuleProto::from_text_file`] →
+//! [`xla::XlaComputation`] → `PjRtClient::compile` → reusable
+//! [`xla::PjRtLoadedExecutable`]s behind typed wrappers.
+//!
+//! HLO *text* is the interchange format (not serialized protos): jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns them (see /opt/xla-example/README.md).
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{ArtifactRegistry, Executable};
+pub use engine::XlaRerankEngine;

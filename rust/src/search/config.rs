@@ -1,0 +1,118 @@
+//! Search-phase parameters: beam widths and the per-layer filter sizes
+//! that are the paper's key tuning knob (§III-B).
+
+/// Beam widths for plain HNSW search.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SearchParams {
+    /// ef on layers ≥ 1 (paper: 1).
+    pub ef_upper: usize,
+    /// ef on layer 0 (paper: 10 for Recall@10).
+    pub ef_l0: usize,
+}
+
+impl Default for SearchParams {
+    fn default() -> Self {
+        Self { ef_upper: crate::params::EF_UPPER, ef_l0: crate::params::EF_L0 }
+    }
+}
+
+impl SearchParams {
+    /// ef used at `layer`.
+    #[inline]
+    pub fn ef(&self, layer: usize) -> usize {
+        if layer == 0 {
+            self.ef_l0
+        } else {
+            self.ef_upper
+        }
+    }
+}
+
+/// pHNSW parameters: beam widths plus the hierarchical filter-size
+/// schedule. The paper sets k = 3 on sparse upper layers (2..=5), 8 on
+/// layer 1, and 16 on the dense layer 0 (Fig. 2).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PhnswParams {
+    /// Beam widths (shared with plain HNSW).
+    pub search: SearchParams,
+    /// `k_schedule[layer]` = filter size at that layer; layers beyond the
+    /// schedule's length use the last entry.
+    pub k_schedule: Vec<usize>,
+}
+
+impl Default for PhnswParams {
+    fn default() -> Self {
+        Self {
+            search: SearchParams::default(),
+            // layer 0, layer 1, layers >= 2
+            k_schedule: vec![crate::params::K_L0, crate::params::K_L1, crate::params::K_UPPER],
+        }
+    }
+}
+
+impl PhnswParams {
+    /// Filter size at `layer`.
+    #[inline]
+    pub fn k(&self, layer: usize) -> usize {
+        let i = layer.min(self.k_schedule.len() - 1);
+        self.k_schedule[i]
+    }
+
+    /// Convenience constructor for the Fig. 2 sweeps: override k at layer 0
+    /// and layer 1, keep 3 above.
+    pub fn with_k01(k_l0: usize, k_l1: usize) -> Self {
+        Self {
+            search: SearchParams::default(),
+            k_schedule: vec![k_l0, k_l1, crate::params::K_UPPER],
+        }
+    }
+
+    /// Validate: every k ≥ 1 and schedule non-empty.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(!self.k_schedule.is_empty(), "k schedule must be non-empty");
+        anyhow::ensure!(
+            self.k_schedule.iter().all(|&k| k >= 1),
+            "all filter sizes must be >= 1"
+        );
+        anyhow::ensure!(self.search.ef_upper >= 1 && self.search.ef_l0 >= 1, "ef must be >= 1");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_operating_point() {
+        let p = PhnswParams::default();
+        assert_eq!(p.k(0), 16);
+        assert_eq!(p.k(1), 8);
+        assert_eq!(p.k(2), 3);
+        assert_eq!(p.k(5), 3, "layers beyond schedule reuse last entry");
+        assert_eq!(p.search.ef(0), 10);
+        assert_eq!(p.search.ef(3), 1);
+    }
+
+    #[test]
+    fn with_k01_overrides() {
+        let p = PhnswParams::with_k01(18, 6);
+        assert_eq!(p.k(0), 18);
+        assert_eq!(p.k(1), 6);
+        assert_eq!(p.k(4), 3);
+    }
+
+    #[test]
+    fn validate_rejects_degenerate() {
+        let mut p = PhnswParams::default();
+        p.k_schedule = vec![];
+        assert!(p.validate().is_err());
+        let mut p = PhnswParams::default();
+        p.k_schedule = vec![0];
+        assert!(p.validate().is_err());
+        let mut p = PhnswParams::default();
+        p.search.ef_l0 = 0;
+        assert!(p.validate().is_err());
+        assert!(PhnswParams::default().validate().is_ok());
+    }
+}

@@ -1,0 +1,271 @@
+//! Standard HNSW search (Algorithm 2 + 5 of [2]) — the HNSW-CPU /
+//! HNSW-Std baseline. Every unvisited neighbor of an expanded node costs
+//! one *high-dimensional* distance computation and one high-dim raw-data
+//! fetch: exactly the traffic pHNSW's low-dim filter removes.
+
+use super::config::SearchParams;
+use super::dist::l2_sq;
+use super::stats::{HopEvent, SearchStats, SearchTrace};
+use super::visited::VisitedSet;
+use super::{AnnEngine, Neighbor};
+use crate::dataset::gt::TopK;
+use crate::dataset::VectorSet;
+use crate::graph::HnswGraph;
+use std::collections::BinaryHeap;
+use std::sync::{Arc, Mutex};
+
+/// Reusable per-query scratch (pooled so `search(&self)` stays lock-cheap).
+struct Scratch {
+    visited: VisitedSet,
+}
+
+/// Min-heap entry (BinaryHeap is a max-heap; invert the ordering).
+#[derive(PartialEq)]
+pub(crate) struct MinDist(pub f32, pub u32);
+impl Eq for MinDist {}
+impl PartialOrd for MinDist {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for MinDist {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other.0.partial_cmp(&self.0).unwrap().then_with(|| other.1.cmp(&self.1))
+    }
+}
+
+/// Standard HNSW searcher over a built graph.
+pub struct HnswSearcher {
+    graph: Arc<HnswGraph>,
+    data: Arc<VectorSet>,
+    params: SearchParams,
+    pool: Mutex<Vec<Scratch>>,
+}
+
+impl HnswSearcher {
+    /// Create a searcher. `data` must be the corpus the graph was built on.
+    pub fn new(graph: Arc<HnswGraph>, data: Arc<VectorSet>, params: SearchParams) -> Self {
+        assert_eq!(graph.len(), data.len(), "graph/corpus size mismatch");
+        Self { graph, data, params, pool: Mutex::new(Vec::new()) }
+    }
+
+    /// The search parameters in use.
+    pub fn params(&self) -> &SearchParams {
+        &self.params
+    }
+
+    fn take_scratch(&self) -> Scratch {
+        self.pool
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_else(|| Scratch { visited: VisitedSet::new(self.data.len()) })
+    }
+
+    fn put_scratch(&self, s: Scratch) {
+        self.pool.lock().unwrap().push(s);
+    }
+
+    /// Beam search at one layer; `entry` must be sorted ascending.
+    /// Returns up to `ef` nearest, ascending.
+    fn search_layer(
+        &self,
+        q: &[f32],
+        entry: &[(f32, u32)],
+        ef: usize,
+        layer: usize,
+        visited: &mut VisitedSet,
+        trace: Option<&mut SearchTrace>,
+    ) -> Vec<(f32, u32)> {
+        let mut trace = trace;
+        visited.clear();
+        let mut candidates = BinaryHeap::new();
+        let mut found = TopK::new(ef);
+        let mut f_len = 0usize;
+        for &(d, id) in entry {
+            visited.insert(id);
+            candidates.push(MinDist(d, id));
+            found.offer(d, id);
+            f_len = (f_len + 1).min(ef);
+        }
+        while let Some(MinDist(d, c)) = candidates.pop() {
+            if d > found.threshold() {
+                break;
+            }
+            let nbrs = self.graph.neighbors(c, layer);
+            let mut highdim = 0u32;
+            let mut inserts = 0u32;
+            let mut removals = 0u32;
+            for &nb in nbrs {
+                if visited.insert(nb) {
+                    let dn = l2_sq(q, self.data.row(nb as usize));
+                    highdim += 1;
+                    if dn < found.threshold() || found.len() < ef {
+                        candidates.push(MinDist(dn, nb));
+                        if found.len() == ef {
+                            removals += 1; // RMF: worst of F evicted
+                        }
+                        found.offer(dn, nb);
+                        inserts += 1;
+                    }
+                }
+            }
+            if let Some(t) = trace.as_deref_mut() {
+                t.push(HopEvent {
+                    layer: layer as u8,
+                    node: c,
+                    n_neighbors: nbrs.len() as u32,
+                    n_lowdim_dists: 0,
+                    n_ksort: 0,
+                    n_highdim_dists: highdim,
+                    n_visited_checks: nbrs.len() as u32,
+                    n_f_inserts: inserts,
+                    n_f_removals: removals,
+                });
+            }
+        }
+        found.into_sorted()
+    }
+
+    /// Full multi-layer search, optionally tracing.
+    pub fn search_traced(&self, q: &[f32], mut trace: Option<&mut SearchTrace>) -> Vec<Neighbor> {
+        assert_eq!(q.len(), self.data.dim(), "query dimensionality mismatch");
+        if self.graph.is_empty() {
+            return Vec::new();
+        }
+        let mut scratch = self.take_scratch();
+        let ep = self.graph.entry_point();
+        let mut entry = vec![(l2_sq(q, self.data.row(ep as usize)), ep)];
+        for layer in (1..=self.graph.max_level()).rev() {
+            entry = self.search_layer(
+                q,
+                &entry,
+                self.params.ef(layer),
+                layer,
+                &mut scratch.visited,
+                trace.as_deref_mut(),
+            );
+        }
+        let found = self.search_layer(
+            q,
+            &entry,
+            self.params.ef(0),
+            0,
+            &mut scratch.visited,
+            trace.as_deref_mut(),
+        );
+        self.put_scratch(scratch);
+        found.into_iter().map(|(dist, id)| Neighbor { id, dist }).collect()
+    }
+
+    /// Search and return the trace (used by the hw simulator).
+    pub fn search_full_trace(&self, q: &[f32]) -> (Vec<Neighbor>, SearchTrace) {
+        let mut t = SearchTrace::new();
+        let r = self.search_traced(q, Some(&mut t));
+        (r, t)
+    }
+}
+
+impl AnnEngine for HnswSearcher {
+    fn name(&self) -> &str {
+        "hnsw"
+    }
+
+    fn search(&self, query: &[f32]) -> Vec<Neighbor> {
+        self.search_traced(query, None)
+    }
+
+    fn search_with_stats(&self, query: &[f32]) -> (Vec<Neighbor>, SearchStats) {
+        let (r, t) = self.search_full_trace(query);
+        (r, t.stats())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic::{generate, SyntheticConfig};
+    use crate::dataset::{ground_truth, VectorSet};
+    use crate::graph::build::{build, BuildConfig};
+    use crate::metrics::recall_at_k;
+
+    fn setup(n: usize) -> (Arc<VectorSet>, VectorSet, Arc<HnswGraph>) {
+        let cfg = SyntheticConfig { n_base: n, n_queries: 50, ..SyntheticConfig::tiny() };
+        let (base, queries) = generate(&cfg);
+        let g = build(&base, &BuildConfig { m: 8, ef_construction: 100, ..Default::default() });
+        (Arc::new(base), queries, Arc::new(g))
+    }
+
+    #[test]
+    fn finds_exact_match_for_base_vector_query() {
+        let (base, _, g) = setup(1000);
+        let s = HnswSearcher::new(g, base.clone(), SearchParams::default());
+        for id in [0u32, 123, 999] {
+            let res = s.search(base.row(id as usize));
+            assert_eq!(res[0].id, id, "querying a base vector must return itself first");
+            assert_eq!(res[0].dist, 0.0);
+        }
+    }
+
+    #[test]
+    fn results_sorted_and_unique() {
+        let (base, queries, g) = setup(1000);
+        let s = HnswSearcher::new(g, base, SearchParams::default());
+        for q in queries.iter().take(10) {
+            let res = s.search(q);
+            assert_eq!(res.len(), 10);
+            for w in res.windows(2) {
+                assert!(w[0].dist <= w[1].dist, "not sorted");
+            }
+            let ids: std::collections::HashSet<_> = res.iter().map(|n| n.id).collect();
+            assert_eq!(ids.len(), res.len(), "duplicate ids");
+        }
+    }
+
+    #[test]
+    fn recall_is_high_on_clustered_data() {
+        let (base, queries, g) = setup(2000);
+        let gt = ground_truth(&base, &queries, 10);
+        let s = HnswSearcher::new(g, base, SearchParams { ef_upper: 1, ef_l0: 32 });
+        let results: Vec<Vec<u32>> = queries
+            .iter()
+            .map(|q| s.search(q).into_iter().map(|n| n.id).collect())
+            .collect();
+        let r = recall_at_k(&results, &gt, 10);
+        assert!(r > 0.85, "recall@10 = {r}");
+    }
+
+    #[test]
+    fn trace_counters_are_consistent() {
+        let (base, queries, g) = setup(1000);
+        let s = HnswSearcher::new(g, base, SearchParams::default());
+        let (_, t) = s.search_full_trace(queries.row(0));
+        let st = t.stats();
+        assert!(st.hops > 0);
+        assert_eq!(st.lowdim_dists, 0, "plain HNSW computes no low-dim distances");
+        assert_eq!(st.ksort_calls, 0);
+        assert!(st.highdim_dists <= st.neighbors_fetched);
+        assert!(st.visited_checks >= st.highdim_dists);
+        assert!(st.hops_l0 <= st.hops);
+    }
+
+    #[test]
+    fn stats_match_traced_run() {
+        let (base, queries, g) = setup(500);
+        let s = HnswSearcher::new(g, base, SearchParams::default());
+        let (r1, st) = s.search_with_stats(queries.row(1));
+        let (r2, t) = s.search_full_trace(queries.row(1));
+        assert_eq!(r1, r2);
+        assert_eq!(st, t.stats());
+    }
+
+    #[test]
+    fn searcher_is_reusable_across_queries() {
+        let (base, queries, g) = setup(500);
+        let s = HnswSearcher::new(g, base, SearchParams::default());
+        let first = s.search(queries.row(0));
+        for _ in 0..5 {
+            assert_eq!(s.search(queries.row(0)), first, "results must be deterministic");
+        }
+    }
+}

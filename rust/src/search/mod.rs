@@ -1,0 +1,43 @@
+//! Query-phase search engines (the *S* phase).
+//!
+//! * [`hnsw`] — standard HNSW search (Algorithm 5 of [2]); the HNSW-CPU /
+//!   HNSW-Std baseline.
+//! * [`phnsw`] — the paper's Algorithm 1: per-hop candidate filtering in
+//!   PCA space with per-layer top-k, high-dim distances only for the k
+//!   survivors.
+//!
+//! Both engines produce a [`stats::SearchStats`] (and optionally a full
+//! [`stats::SearchTrace`]) so the hardware timing/energy simulator can
+//! replay exactly the memory traffic and compute the search generated.
+
+pub mod config;
+pub mod dist;
+pub mod hnsw;
+pub mod phnsw;
+pub mod stats;
+pub mod visited;
+
+pub use config::{PhnswParams, SearchParams};
+pub use hnsw::HnswSearcher;
+pub use phnsw::PhnswSearcher;
+pub use stats::{HopEvent, SearchStats, SearchTrace};
+
+/// A search result: base-vector id plus its (squared) distance to the query.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Neighbor {
+    /// Base vector id.
+    pub id: u32,
+    /// Squared L2 distance in the *original* high-dimensional space.
+    pub dist: f32,
+}
+
+/// Common engine interface implemented by both searchers — the coordinator
+/// routes requests through this trait.
+pub trait AnnEngine: Send + Sync {
+    /// Human-readable engine name (used in reports and routing).
+    fn name(&self) -> &str;
+    /// Return the `ef` nearest neighbors of `query` (sorted ascending).
+    fn search(&self, query: &[f32]) -> Vec<Neighbor>;
+    /// Like [`Self::search`] but also returns instruction/traffic statistics.
+    fn search_with_stats(&self, query: &[f32]) -> (Vec<Neighbor>, SearchStats);
+}

@@ -1,0 +1,475 @@
+//! pHNSW search — Algorithm 1 of the paper.
+//!
+//! Per expanded node, *all* neighbors are scored in the PCA-reduced
+//! low-dimensional space (`Dist.L`), a top-k filter keeps the best k
+//! (`kSort.L`), and only those k survivors get a high-dimensional distance
+//! (`Dist.H`) and result-list update. The filter size k varies per layer
+//! (the paper's hierarchical-k contribution, §III-B).
+//!
+//! Interpretation notes (the listing leaves two details implicit):
+//! * `C_pca_tmp` is reset at each hop — it collects the survivors that the
+//!   high-dim check *admitted* during this hop, and becomes the next hop's
+//!   `C_pca` (line 24), whose furthest element provides the `f_pca` prune
+//!   threshold (line 5). An empty survivor set yields an infinite
+//!   threshold, which is safe (no pruning).
+//! * The visited check happens *after* the top-k filter (line 16), exactly
+//!   as listed: already-visited nodes may occupy filter slots. This is the
+//!   faithful behaviour and is what the hardware's dataflow (§IV-C step 5)
+//!   implements.
+
+use super::config::PhnswParams;
+use super::dist::l2_sq;
+use super::hnsw::MinDist;
+use super::stats::{HopEvent, SearchStats, SearchTrace};
+use super::visited::VisitedSet;
+use super::{AnnEngine, Neighbor};
+use crate::dataset::gt::TopK;
+use crate::dataset::VectorSet;
+use crate::graph::HnswGraph;
+use crate::pca::PcaModel;
+use std::collections::BinaryHeap;
+use std::sync::{Arc, Mutex};
+
+/// Per-query scratch state, pooled across queries.
+struct Scratch {
+    visited: VisitedSet,
+    /// Projected query.
+    q_pca: Vec<f32>,
+    /// Projected query, zero-padded to the SIMD width of `low_padded`.
+    q_pca_pad: Vec<f32>,
+}
+
+/// pHNSW searcher: graph + high-dim corpus + PCA model + projected corpus.
+pub struct PhnswSearcher {
+    graph: Arc<HnswGraph>,
+    data_high: Arc<VectorSet>,
+    /// PCA-projected corpus (the low-dim filter table, layout ③/④ payload).
+    data_low: Arc<VectorSet>,
+    /// `data_low` zero-padded to a SIMD-friendly width (§Perf L3 #3: a
+    /// 15-dim distance leaves a 7-element scalar tail on *every* filter
+    /// call — padding to a multiple of 8 keeps the hot loop fully
+    /// vectorized; zero padding cannot change distances).
+    low_padded: VectorSet,
+    pca: Arc<PcaModel>,
+    params: PhnswParams,
+    pool: Mutex<Vec<Scratch>>,
+}
+
+/// Round `dim` up to the SIMD lane multiple used by `dist::l2_sq`.
+fn pad_dim(dim: usize) -> usize {
+    dim.div_ceil(8) * 8
+}
+
+/// Zero-pad every row of `vs` to `pad_dim(vs.dim())`.
+fn pad_set(vs: &VectorSet) -> VectorSet {
+    let dim = vs.dim();
+    let padded = pad_dim(dim);
+    if padded == dim {
+        return vs.clone();
+    }
+    let mut out = VectorSet::new(padded);
+    let mut buf = vec![0f32; padded];
+    for row in vs.iter() {
+        buf[..dim].copy_from_slice(row);
+        out.push(&buf);
+    }
+    out
+}
+
+impl PhnswSearcher {
+    /// Create a searcher. `data_low` must be `pca.project_set(data_high)`
+    /// (checked probabilistically on construction).
+    pub fn new(
+        graph: Arc<HnswGraph>,
+        data_high: Arc<VectorSet>,
+        data_low: Arc<VectorSet>,
+        pca: Arc<PcaModel>,
+        params: PhnswParams,
+    ) -> Self {
+        assert_eq!(graph.len(), data_high.len(), "graph/corpus size mismatch");
+        assert_eq!(data_high.len(), data_low.len(), "high/low corpus size mismatch");
+        assert_eq!(pca.dim(), data_high.dim(), "PCA input dim mismatch");
+        assert_eq!(pca.k(), data_low.dim(), "PCA output dim mismatch");
+        params.validate().expect("invalid pHNSW params");
+        // Spot-check that data_low really is the projection of data_high.
+        if !data_high.is_empty() {
+            let mut buf = vec![0f32; pca.k()];
+            for &probe in &[0usize, data_high.len() / 2, data_high.len() - 1] {
+                pca.project(data_high.row(probe), &mut buf);
+                let err = l2_sq(&buf, data_low.row(probe));
+                assert!(
+                    err < 1e-3 * (1.0 + l2_sq(&buf, &vec![0.0; pca.k()])),
+                    "data_low row {probe} is not the PCA projection of data_high"
+                );
+            }
+        }
+        let low_padded = pad_set(&data_low);
+        Self { graph, data_high, data_low, low_padded, pca, params, pool: Mutex::new(Vec::new()) }
+    }
+
+    /// Convenience constructor: fit PCA and project the corpus internally.
+    pub fn build_from(
+        graph: Arc<HnswGraph>,
+        data_high: Arc<VectorSet>,
+        dim_low: usize,
+        params: PhnswParams,
+        seed: u64,
+    ) -> Self {
+        let pca = Arc::new(PcaModel::fit(&data_high, dim_low, seed));
+        let data_low = Arc::new(pca.project_set(&data_high));
+        Self::new(graph, data_high, data_low, pca, params)
+    }
+
+    /// The filter parameters in use.
+    pub fn params(&self) -> &PhnswParams {
+        &self.params
+    }
+
+    /// The PCA model (shared with the AOT kernel path).
+    pub fn pca(&self) -> &Arc<PcaModel> {
+        &self.pca
+    }
+
+    /// The projected corpus.
+    pub fn data_low(&self) -> &Arc<VectorSet> {
+        &self.data_low
+    }
+
+    fn take_scratch(&self) -> Scratch {
+        self.pool.lock().unwrap().pop().unwrap_or_else(|| Scratch {
+            visited: VisitedSet::new(self.data_high.len()),
+            q_pca: vec![0f32; self.pca.k()],
+            q_pca_pad: vec![0f32; pad_dim(self.pca.k())],
+        })
+    }
+
+    fn put_scratch(&self, s: Scratch) {
+        self.pool.lock().unwrap().push(s);
+    }
+
+    /// Algorithm 1 at a single layer. `entry` carries (high-dim dist, id),
+    /// ascending. Returns up to `ef` nearest by high-dim distance.
+    #[allow(clippy::too_many_arguments)]
+    fn search_layer(
+        &self,
+        q: &[f32],
+        q_pca: &[f32],
+        entry: &[(f32, u32)],
+        ef: usize,
+        k: usize,
+        layer: usize,
+        scratch: &mut Scratch,
+        mut trace: Option<&mut SearchTrace>,
+    ) -> Vec<(f32, u32)> {
+        let visited = &mut scratch.visited;
+        visited.clear();
+        // V, C, F ← ep  (line 1)
+        let mut candidates = BinaryHeap::new(); // C: min-heap by high-dim dist
+        let mut final_list = TopK::new(ef); // F: keeps ef closest
+        for &(d, id) in entry {
+            visited.insert(id);
+            candidates.push(MinDist(d, id));
+            final_list.offer(d, id);
+        }
+        // C_pca from the previous hop (survivors); provides f_pca threshold.
+        let mut cpca_prev: Vec<(f32, u32)> = Vec::with_capacity(k);
+
+        while let Some(MinDist(d_c, c)) = candidates.pop() {
+            // line 7: stop when the nearest remaining candidate cannot improve F.
+            if d_c > final_list.threshold() {
+                break;
+            }
+            // line 5: f_pca ← furthest element of C_pca to q_pca (∞ if empty).
+            let f_pca = cpca_prev
+                .iter()
+                .map(|&(d, _)| d)
+                .fold(f32::NEG_INFINITY, f32::max);
+            let f_pca = if cpca_prev.is_empty() { f32::INFINITY } else { f_pca };
+
+            // Step 2 (lines 9–13): low-dim filter over all neighbors.
+            let nbrs = self.graph.neighbors(c, layer);
+            let mut cpca = TopK::new(k); // top-k smallest low-dim distances
+            for &e in nbrs {
+                let d_low = l2_sq(q_pca, self.low_padded.row(e as usize));
+                if d_low < f_pca {
+                    cpca.offer(d_low, e);
+                }
+            }
+            let survivors = cpca.into_sorted();
+
+            // Step 3 (lines 14–23): high-dim rerank of the ≤ k survivors.
+            let mut cpca_tmp: Vec<(f32, u32)> = Vec::with_capacity(k);
+            let mut highdim = 0u32;
+            let mut inserts = 0u32;
+            let mut removals = 0u32;
+            for &(d_low, m) in &survivors {
+                if visited.insert(m) {
+                    // line 18–19
+                    let d_m = l2_sq(q, self.data_high.row(m as usize));
+                    highdim += 1;
+                    if d_m < final_list.threshold() || final_list.len() < ef {
+                        cpca_tmp.push((d_low, m)); // line 20
+                        candidates.push(MinDist(d_m, m)); // line 21: C ∪ m
+                        if final_list.len() == ef {
+                            removals += 1; // lines 22–23: RMF
+                        }
+                        final_list.offer(d_m, m); // line 21: F ∪ m
+                        inserts += 1;
+                    }
+                }
+            }
+            // line 24: C_pca ← C_pca_tmp for the next hop's threshold.
+            cpca_prev = cpca_tmp;
+
+            if let Some(t) = trace.as_deref_mut() {
+                t.push(HopEvent {
+                    layer: layer as u8,
+                    node: c,
+                    n_neighbors: nbrs.len() as u32,
+                    n_lowdim_dists: nbrs.len() as u32,
+                    n_ksort: 1,
+                    n_highdim_dists: highdim,
+                    n_visited_checks: survivors.len() as u32,
+                    n_f_inserts: inserts,
+                    n_f_removals: removals,
+                });
+            }
+        }
+        final_list.into_sorted()
+    }
+
+    /// Full multi-layer pHNSW search, optionally tracing.
+    pub fn search_traced(&self, q: &[f32], mut trace: Option<&mut SearchTrace>) -> Vec<Neighbor> {
+        assert_eq!(q.len(), self.data_high.dim(), "query dimensionality mismatch");
+        if self.graph.is_empty() {
+            return Vec::new();
+        }
+        let mut scratch = self.take_scratch();
+        // Step 1 (Fig. 1(c)): project the query once, then pad to the
+        // filter table's SIMD width (padding lanes are zero on both sides,
+        // so distances are unchanged).
+        let mut q_pca = std::mem::take(&mut scratch.q_pca);
+        self.pca.project(q, &mut q_pca);
+        let mut q_pad = std::mem::take(&mut scratch.q_pca_pad);
+        q_pad[..q_pca.len()].copy_from_slice(&q_pca);
+
+        let ep = self.graph.entry_point();
+        let mut entry = vec![(l2_sq(q, self.data_high.row(ep as usize)), ep)];
+        for layer in (1..=self.graph.max_level()).rev() {
+            entry = self.search_layer(
+                q,
+                &q_pad,
+                &entry,
+                self.params.search.ef(layer),
+                self.params.k(layer),
+                layer,
+                &mut scratch,
+                trace.as_deref_mut(),
+            );
+        }
+        let found = self.search_layer(
+            q,
+            &q_pad,
+            &entry,
+            self.params.search.ef(0),
+            self.params.k(0),
+            0,
+            &mut scratch,
+            trace.as_deref_mut(),
+        );
+        scratch.q_pca = q_pca;
+        scratch.q_pca_pad = q_pad;
+        self.put_scratch(scratch);
+        found.into_iter().map(|(dist, id)| Neighbor { id, dist }).collect()
+    }
+
+    /// Search and return the trace (consumed by the hw simulator).
+    pub fn search_full_trace(&self, q: &[f32]) -> (Vec<Neighbor>, SearchTrace) {
+        let mut t = SearchTrace::new();
+        let r = self.search_traced(q, Some(&mut t));
+        (r, t)
+    }
+}
+
+impl AnnEngine for PhnswSearcher {
+    fn name(&self) -> &str {
+        "phnsw"
+    }
+
+    fn search(&self, query: &[f32]) -> Vec<Neighbor> {
+        self.search_traced(query, None)
+    }
+
+    fn search_with_stats(&self, query: &[f32]) -> (Vec<Neighbor>, SearchStats) {
+        let (r, t) = self.search_full_trace(query);
+        (r, t.stats())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic::{generate, SyntheticConfig};
+    use crate::dataset::ground_truth;
+    use crate::graph::build::{build, BuildConfig};
+    use crate::metrics::recall_at_k;
+    use crate::search::config::SearchParams;
+    use crate::search::hnsw::HnswSearcher;
+
+    struct Fixture {
+        base: Arc<VectorSet>,
+        queries: VectorSet,
+        graph: Arc<HnswGraph>,
+        gt: Vec<Vec<u32>>,
+    }
+
+    fn fixture(n: usize) -> Fixture {
+        let cfg = SyntheticConfig { n_base: n, n_queries: 60, ..SyntheticConfig::tiny() };
+        let (base, queries) = generate(&cfg);
+        let graph = Arc::new(build(
+            &base,
+            &BuildConfig { m: 8, ef_construction: 100, ..Default::default() },
+        ));
+        let gt = ground_truth(&base, &queries, 10);
+        Fixture { base: Arc::new(base), queries, graph, gt }
+    }
+
+    fn searcher(f: &Fixture, params: PhnswParams) -> PhnswSearcher {
+        PhnswSearcher::build_from(f.graph.clone(), f.base.clone(), 8, params, 7)
+    }
+
+    #[test]
+    fn returns_sorted_unique_results() {
+        let f = fixture(1500);
+        let s = searcher(&f, PhnswParams { search: SearchParams { ef_upper: 1, ef_l0: 10 }, ..Default::default() });
+        for q in f.queries.iter().take(10) {
+            let res = s.search(q);
+            assert!(!res.is_empty());
+            for w in res.windows(2) {
+                assert!(w[0].dist <= w[1].dist);
+            }
+            let ids: std::collections::HashSet<_> = res.iter().map(|n| n.id).collect();
+            assert_eq!(ids.len(), res.len());
+        }
+    }
+
+    #[test]
+    fn recall_close_to_hnsw_with_generous_k() {
+        // With a large filter size pHNSW degenerates toward plain HNSW, so
+        // recall should be close.
+        let f = fixture(2000);
+        let sp = SearchParams { ef_upper: 1, ef_l0: 32 };
+        let hnsw = HnswSearcher::new(f.graph.clone(), f.base.clone(), sp.clone());
+        let phnsw = searcher(
+            &f,
+            PhnswParams { search: sp, k_schedule: vec![16, 16, 16] },
+        );
+        let collect = |e: &dyn AnnEngine| -> Vec<Vec<u32>> {
+            f.queries
+                .iter()
+                .map(|q| e.search(q).into_iter().map(|n| n.id).take(10).collect())
+                .collect()
+        };
+        let r_h = recall_at_k(&collect(&hnsw), &f.gt, 10);
+        let r_p = recall_at_k(&collect(&phnsw), &f.gt, 10);
+        assert!(r_h > 0.85, "hnsw recall {r_h}");
+        assert!(r_p > r_h - 0.12, "phnsw recall {r_p} far below hnsw {r_h}");
+    }
+
+    #[test]
+    fn smaller_k_means_fewer_highdim_dists() {
+        let f = fixture(2000);
+        let sp = SearchParams { ef_upper: 1, ef_l0: 10 };
+        let s_small = searcher(&f, PhnswParams { search: sp.clone(), k_schedule: vec![4, 3, 3] });
+        let s_big = searcher(&f, PhnswParams { search: sp, k_schedule: vec![24, 8, 3] });
+        let mut tot_small = 0u64;
+        let mut tot_big = 0u64;
+        for q in f.queries.iter().take(20) {
+            tot_small += s_small.search_with_stats(q).1.highdim_dists;
+            tot_big += s_big.search_with_stats(q).1.highdim_dists;
+        }
+        assert!(
+            tot_small < tot_big,
+            "k=4 should compute fewer high-dim distances ({tot_small} vs {tot_big})"
+        );
+    }
+
+    #[test]
+    fn highdim_dists_bounded_by_k_per_hop() {
+        let f = fixture(1000);
+        let params = PhnswParams::default();
+        let s = searcher(&f, params.clone());
+        let (_, t) = s.search_full_trace(f.queries.row(0));
+        for h in &t.hops {
+            let k = params.k(h.layer as usize);
+            assert!(
+                h.n_highdim_dists as usize <= k,
+                "hop on layer {} computed {} high-dim dists > k={k}",
+                h.layer,
+                h.n_highdim_dists
+            );
+            assert_eq!(h.n_lowdim_dists, h.n_neighbors);
+            assert_eq!(h.n_ksort, 1);
+        }
+    }
+
+    #[test]
+    fn filter_reduces_highdim_traffic_vs_hnsw() {
+        // The headline claim: pHNSW's high-dim distance count (and thus
+        // irregular high-dim fetch traffic) is far below plain HNSW's.
+        let f = fixture(2000);
+        let sp = SearchParams { ef_upper: 1, ef_l0: 10 };
+        let hnsw = HnswSearcher::new(f.graph.clone(), f.base.clone(), sp.clone());
+        let phnsw = searcher(&f, PhnswParams { search: sp, ..Default::default() });
+        let mut h_tot = 0u64;
+        let mut p_tot = 0u64;
+        for q in f.queries.iter().take(20) {
+            h_tot += hnsw.search_with_stats(q).1.highdim_dists;
+            p_tot += phnsw.search_with_stats(q).1.highdim_dists;
+        }
+        assert!(
+            (p_tot as f64) < 0.8 * h_tot as f64,
+            "expected sizable high-dim reduction: phnsw {p_tot} vs hnsw {h_tot}"
+        );
+    }
+
+    #[test]
+    fn exact_base_vector_query_finds_itself() {
+        let f = fixture(1000);
+        let s = searcher(&f, PhnswParams::default());
+        for id in [5u32, 500] {
+            let res = s.search(f.base.row(id as usize));
+            assert_eq!(res[0].id, id);
+            assert_eq!(res[0].dist, 0.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let f = fixture(800);
+        let s = searcher(&f, PhnswParams::default());
+        let first = s.search(f.queries.row(3));
+        for _ in 0..3 {
+            assert_eq!(s.search(f.queries.row(3)), first);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not the PCA projection")]
+    fn constructor_rejects_mismatched_low_table() {
+        let f = fixture(300);
+        let pca = Arc::new(PcaModel::fit(&f.base, 8, 7));
+        let mut wrong = pca.project_set(&f.base);
+        // corrupt one row badly
+        for x in wrong.row_mut(150) {
+            *x += 1000.0;
+        }
+        let _ = PhnswSearcher::new(
+            f.graph.clone(),
+            f.base.clone(),
+            Arc::new(wrong),
+            pca,
+            PhnswParams::default(),
+        );
+    }
+}

@@ -1,0 +1,173 @@
+//! Search instrumentation.
+//!
+//! Every engine can emit (a) aggregate [`SearchStats`] counters and (b) a
+//! full per-hop [`SearchTrace`]. The trace is the contract between the
+//! algorithm layer and the hardware simulator: [`crate::hw::processor`]
+//! replays a trace against a DB layout + DRAM model to obtain cycles and
+//! energy, without re-running the algorithm.
+
+/// One expanded node ("hop") during a search.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HopEvent {
+    /// Graph layer of the hop.
+    pub layer: u8,
+    /// Expanded node id (whose neighbor list was fetched).
+    pub node: u32,
+    /// Neighbor-list length fetched from memory.
+    pub n_neighbors: u32,
+    /// Low-dimensional distance computations (pHNSW: = n_neighbors;
+    /// HNSW: 0).
+    pub n_lowdim_dists: u32,
+    /// Number of kSort.L invocations (1 if a top-k filter ran).
+    pub n_ksort: u32,
+    /// High-dimensional distance computations (pHNSW: ≤ k survivors;
+    /// HNSW: every unvisited neighbor).
+    pub n_highdim_dists: u32,
+    /// Visited-list lookups performed.
+    pub n_visited_checks: u32,
+    /// Insertions into the result list F.
+    pub n_f_inserts: u32,
+    /// Removals from F (RMF instructions).
+    pub n_f_removals: u32,
+}
+
+/// Aggregate per-query counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SearchStats {
+    /// Nodes expanded (neighbor lists fetched).
+    pub hops: u64,
+    /// Hops on layer 0 (the dense layer dominates cost).
+    pub hops_l0: u64,
+    /// Total neighbors read from adjacency lists.
+    pub neighbors_fetched: u64,
+    /// Low-dimensional distance computations.
+    pub lowdim_dists: u64,
+    /// kSort.L invocations.
+    pub ksort_calls: u64,
+    /// High-dimensional distance computations.
+    pub highdim_dists: u64,
+    /// Visited-list lookups.
+    pub visited_checks: u64,
+    /// Insertions into F.
+    pub f_inserts: u64,
+    /// Removals from F.
+    pub f_removals: u64,
+}
+
+impl SearchStats {
+    /// Fold one hop into the aggregate.
+    pub fn absorb(&mut self, h: &HopEvent) {
+        self.hops += 1;
+        if h.layer == 0 {
+            self.hops_l0 += 1;
+        }
+        self.neighbors_fetched += h.n_neighbors as u64;
+        self.lowdim_dists += h.n_lowdim_dists as u64;
+        self.ksort_calls += h.n_ksort as u64;
+        self.highdim_dists += h.n_highdim_dists as u64;
+        self.visited_checks += h.n_visited_checks as u64;
+        self.f_inserts += h.n_f_inserts as u64;
+        self.f_removals += h.n_f_removals as u64;
+    }
+
+    /// Element-wise sum (for averaging across a query batch).
+    pub fn add(&mut self, o: &SearchStats) {
+        self.hops += o.hops;
+        self.hops_l0 += o.hops_l0;
+        self.neighbors_fetched += o.neighbors_fetched;
+        self.lowdim_dists += o.lowdim_dists;
+        self.ksort_calls += o.ksort_calls;
+        self.highdim_dists += o.highdim_dists;
+        self.visited_checks += o.visited_checks;
+        self.f_inserts += o.f_inserts;
+        self.f_removals += o.f_removals;
+    }
+}
+
+/// Full per-hop record of one query's search.
+#[derive(Debug, Clone, Default)]
+pub struct SearchTrace {
+    /// Hop events in execution order.
+    pub hops: Vec<HopEvent>,
+}
+
+impl SearchTrace {
+    /// New empty trace.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a hop.
+    pub fn push(&mut self, h: HopEvent) {
+        self.hops.push(h);
+    }
+
+    /// Aggregate counters of the trace.
+    pub fn stats(&self) -> SearchStats {
+        let mut s = SearchStats::default();
+        for h in &self.hops {
+            s.absorb(h);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hop(layer: u8, nn: u32, hd: u32) -> HopEvent {
+        HopEvent {
+            layer,
+            node: 0,
+            n_neighbors: nn,
+            n_lowdim_dists: nn,
+            n_ksort: 1,
+            n_highdim_dists: hd,
+            n_visited_checks: hd,
+            n_f_inserts: hd / 2,
+            n_f_removals: hd / 4,
+        }
+    }
+
+    #[test]
+    fn absorb_accumulates() {
+        let mut s = SearchStats::default();
+        s.absorb(&hop(0, 32, 16));
+        s.absorb(&hop(1, 16, 8));
+        assert_eq!(s.hops, 2);
+        assert_eq!(s.hops_l0, 1);
+        assert_eq!(s.neighbors_fetched, 48);
+        assert_eq!(s.lowdim_dists, 48);
+        assert_eq!(s.ksort_calls, 2);
+        assert_eq!(s.highdim_dists, 24);
+        assert_eq!(s.f_inserts, 12);
+        assert_eq!(s.f_removals, 6);
+    }
+
+    #[test]
+    fn trace_stats_equals_manual_fold() {
+        let mut t = SearchTrace::new();
+        t.push(hop(2, 16, 3));
+        t.push(hop(0, 32, 16));
+        let s = t.stats();
+        let mut manual = SearchStats::default();
+        for h in &t.hops {
+            manual.absorb(h);
+        }
+        assert_eq!(s, manual);
+    }
+
+    #[test]
+    fn add_is_elementwise() {
+        let mut a = SearchStats::default();
+        a.absorb(&hop(0, 10, 5));
+        let mut b = SearchStats::default();
+        b.absorb(&hop(1, 20, 2));
+        let mut c = a;
+        c.add(&b);
+        assert_eq!(c.hops, 2);
+        assert_eq!(c.neighbors_fetched, 30);
+        assert_eq!(c.highdim_dists, 7);
+    }
+}

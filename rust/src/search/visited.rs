@@ -1,0 +1,125 @@
+//! Visited-set (the paper's *V-list*).
+//!
+//! The pHNSW processor keeps the visit list as a 1M-bit state in SPM
+//! (§IV-B2). This is the software twin: a bitset with *epoch tagging* so
+//! `clear()` is O(1) — per-query clearing of a 1M-entry bitmap would
+//! otherwise dominate short searches. Each slot stores the epoch of its
+//! last insertion; bumping the epoch invalidates everything at once.
+
+/// Epoch-tagged visited set over ids `0..n`.
+#[derive(Debug, Clone)]
+pub struct VisitedSet {
+    epoch: u16,
+    marks: Vec<u16>,
+}
+
+impl VisitedSet {
+    /// Create a set for ids `0..n`.
+    pub fn new(n: usize) -> Self {
+        Self { epoch: 1, marks: vec![0; n] }
+    }
+
+    /// Number of id slots.
+    pub fn capacity(&self) -> usize {
+        self.marks.len()
+    }
+
+    /// Forget all marks (O(1) amortized; O(n) once every 65535 epochs).
+    pub fn clear(&mut self) {
+        if self.epoch == u16::MAX {
+            self.marks.fill(0);
+            self.epoch = 1;
+        } else {
+            self.epoch += 1;
+        }
+    }
+
+    /// Mark `id`; returns `true` if it was *not* previously marked
+    /// (i.e. this call inserted it).
+    #[inline]
+    pub fn insert(&mut self, id: u32) -> bool {
+        let slot = &mut self.marks[id as usize];
+        if *slot == self.epoch {
+            false
+        } else {
+            *slot = self.epoch;
+            true
+        }
+    }
+
+    /// True if `id` is marked in the current epoch.
+    #[inline]
+    pub fn contains(&self, id: u32) -> bool {
+        self.marks[id as usize] == self.epoch
+    }
+
+    /// Grow to accommodate ids up to `n - 1` (new slots unmarked).
+    pub fn grow(&mut self, n: usize) {
+        if n > self.marks.len() {
+            self.marks.resize(n, 0);
+        }
+    }
+
+    /// Bits of SPM state this set would occupy on the device (1 bit/id) —
+    /// feeds the SPM sizing check in the hw model.
+    pub fn device_bits(&self) -> usize {
+        self.marks.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_and_contains() {
+        let mut v = VisitedSet::new(10);
+        assert!(!v.contains(3));
+        assert!(v.insert(3));
+        assert!(v.contains(3));
+        assert!(!v.insert(3), "second insert reports already-present");
+    }
+
+    #[test]
+    fn clear_is_logical_reset() {
+        let mut v = VisitedSet::new(5);
+        v.insert(0);
+        v.insert(4);
+        v.clear();
+        for id in 0..5 {
+            assert!(!v.contains(id));
+        }
+        assert!(v.insert(0));
+    }
+
+    #[test]
+    fn epoch_wraparound_still_correct() {
+        let mut v = VisitedSet::new(3);
+        v.insert(1);
+        // Force many epochs past the u16 wrap.
+        for _ in 0..70_000 {
+            v.clear();
+        }
+        assert!(!v.contains(1));
+        assert!(v.insert(1));
+        assert!(v.contains(1));
+        assert!(!v.contains(0));
+    }
+
+    #[test]
+    fn grow_preserves_marks() {
+        let mut v = VisitedSet::new(2);
+        v.insert(1);
+        v.grow(10);
+        assert!(v.contains(1));
+        assert!(!v.contains(9));
+        assert!(v.insert(9));
+    }
+
+    #[test]
+    fn device_bits_matches_paper_scale() {
+        // SIFT1M → 1M-bit V-list state (§IV-B2).
+        let v = VisitedSet::new(1_000_000);
+        assert_eq!(v.device_bits(), 1_000_000);
+    }
+}

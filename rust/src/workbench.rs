@@ -1,0 +1,293 @@
+//! Experiment workbench: one place that assembles the full stack
+//! (synthetic corpus → PCA → HNSW graph → searchers → DB layouts →
+//! processor simulation) so the CLI, the benches, and the examples all
+//! drive identical pipelines.
+//!
+//! Graphs and ground truth are cached on disk keyed by their parameters —
+//! a bench re-run pays seconds, not the full index build.
+
+use crate::dataset::synthetic::{generate, SyntheticConfig};
+use crate::dataset::{ground_truth, VectorSet};
+use crate::db::{DbLayout, LayoutKind};
+use crate::dram::{DramConfig, DramSim};
+use crate::energy::EnergyConfig;
+use crate::graph::build::{build, BuildConfig};
+use crate::graph::{serialize, HnswGraph};
+use crate::hw::{simulate_workload, CoreConfig, EngineKind, WorkloadSim};
+use crate::metrics::{qps, recall_at_k};
+use crate::pca::PcaModel;
+use crate::search::{
+    AnnEngine, HnswSearcher, PhnswParams, PhnswSearcher, SearchParams, SearchTrace,
+};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Workbench scale / parameters.
+#[derive(Debug, Clone)]
+pub struct WorkbenchConfig {
+    /// Base corpus size.
+    pub n_base: usize,
+    /// Query count.
+    pub n_queries: usize,
+    /// HNSW M.
+    pub m: usize,
+    /// efConstruction.
+    pub ef_construction: usize,
+    /// PCA dimensionality.
+    pub dim_low: usize,
+    /// Dataset seed.
+    pub seed: u64,
+    /// Ground-truth depth.
+    pub k_gt: usize,
+}
+
+impl Default for WorkbenchConfig {
+    fn default() -> Self {
+        Self {
+            n_base: 100_000,
+            n_queries: 500,
+            m: crate::params::M,
+            ef_construction: 128,
+            dim_low: crate::params::DIM_LOW,
+            seed: 0x5EED_0001,
+            k_gt: 10,
+        }
+    }
+}
+
+impl WorkbenchConfig {
+    /// Small scale for quick runs / CI.
+    pub fn small() -> Self {
+        Self { n_base: 10_000, n_queries: 200, ef_construction: 96, ..Self::default() }
+    }
+
+    /// Cache key for graph/gt reuse.
+    fn cache_key(&self) -> String {
+        format!(
+            "n{}_q{}_m{}_efc{}_dl{}_s{:x}_k{}",
+            self.n_base, self.n_queries, self.m, self.ef_construction, self.dim_low, self.seed, self.k_gt
+        )
+    }
+}
+
+/// Fully assembled benchmark stack.
+pub struct Workbench {
+    /// Configuration used.
+    pub cfg: WorkbenchConfig,
+    /// Base corpus (high-dim).
+    pub base: Arc<VectorSet>,
+    /// Query set.
+    pub queries: VectorSet,
+    /// Exact ground truth (top `k_gt`).
+    pub gt: Vec<Vec<u32>>,
+    /// Built HNSW graph.
+    pub graph: Arc<HnswGraph>,
+    /// Trained PCA.
+    pub pca: Arc<PcaModel>,
+    /// Projected corpus.
+    pub base_low: Arc<VectorSet>,
+}
+
+fn cache_dir() -> std::path::PathBuf {
+    std::env::var_os("PHNSW_CACHE")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("target/phnsw_cache"))
+}
+
+impl Workbench {
+    /// Assemble (generate + build or load from cache) the full stack.
+    pub fn assemble(cfg: WorkbenchConfig) -> crate::Result<Self> {
+        let t0 = Instant::now();
+        let syn = SyntheticConfig {
+            n_base: cfg.n_base,
+            n_queries: cfg.n_queries,
+            seed: cfg.seed,
+            ..SyntheticConfig::default()
+        };
+        let (base, queries) = generate(&syn);
+        log::info!("dataset generated in {:.1?}", t0.elapsed());
+
+        let dir = cache_dir();
+        std::fs::create_dir_all(&dir).ok();
+        let graph_path = dir.join(format!("{}.hnsw", cfg.cache_key()));
+        let gt_path = dir.join(format!("{}.gt.ivecs", cfg.cache_key()));
+
+        let graph = match serialize::load(&graph_path) {
+            Ok(g) if g.len() == base.len() => {
+                log::info!("graph loaded from cache {}", graph_path.display());
+                g
+            }
+            _ => {
+                let t = Instant::now();
+                let g = build(
+                    &base,
+                    &BuildConfig {
+                        m: cfg.m,
+                        ef_construction: cfg.ef_construction,
+                        ..Default::default()
+                    },
+                );
+                log::info!("graph built in {:.1?}", t.elapsed());
+                serialize::save(&g, &graph_path).ok();
+                g
+            }
+        };
+
+        let gt = match crate::dataset::io::read_ivecs(&gt_path) {
+            Ok(g) if g.len() == queries.len() => g,
+            _ => {
+                let t = Instant::now();
+                let g = ground_truth(&base, &queries, cfg.k_gt);
+                log::info!("ground truth in {:.1?}", t.elapsed());
+                crate::dataset::io::write_ivecs(&gt_path, &g).ok();
+                g
+            }
+        };
+
+        let pca = Arc::new(PcaModel::fit(&base, cfg.dim_low, cfg.seed));
+        let base = Arc::new(base);
+        let base_low = Arc::new(pca.project_set(&base));
+        Ok(Self { cfg, base, queries, gt, graph: Arc::new(graph), pca, base_low })
+    }
+
+    /// Plain HNSW searcher (HNSW-CPU baseline).
+    pub fn hnsw(&self, params: SearchParams) -> HnswSearcher {
+        HnswSearcher::new(self.graph.clone(), self.base.clone(), params)
+    }
+
+    /// pHNSW searcher (pHNSW-CPU + the traced workload source for the sim).
+    pub fn phnsw(&self, params: PhnswParams) -> PhnswSearcher {
+        PhnswSearcher::new(
+            self.graph.clone(),
+            self.base.clone(),
+            self.base_low.clone(),
+            self.pca.clone(),
+            params,
+        )
+    }
+
+    /// Measure recall@k + wall-clock QPS of an engine over the query set.
+    pub fn evaluate(&self, engine: &dyn AnnEngine, k: usize) -> EngineEval {
+        let t0 = Instant::now();
+        let results: Vec<Vec<u32>> = self
+            .queries
+            .iter()
+            .map(|q| engine.search(q).into_iter().map(|n| n.id).take(k).collect())
+            .collect();
+        let elapsed = t0.elapsed();
+        EngineEval {
+            recall: recall_at_k(&results, &self.gt, k),
+            qps: qps(self.queries.len(), elapsed),
+            queries: self.queries.len(),
+        }
+    }
+
+    /// Collect per-query traces from a pHNSW searcher (sim input).
+    pub fn phnsw_traces(&self, params: PhnswParams, limit: usize) -> Vec<SearchTrace> {
+        let s = self.phnsw(params);
+        self.queries
+            .iter()
+            .take(limit)
+            .map(|q| s.search_full_trace(q).1)
+            .collect()
+    }
+
+    /// Collect per-query traces from the plain HNSW searcher.
+    pub fn hnsw_traces(&self, params: SearchParams, limit: usize) -> Vec<SearchTrace> {
+        let s = self.hnsw(params);
+        self.queries
+            .iter()
+            .take(limit)
+            .map(|q| s.search_full_trace(q).1)
+            .collect()
+    }
+
+    /// Build the DB layout an engine variant needs.
+    pub fn layout(&self, kind: LayoutKind) -> DbLayout {
+        DbLayout::new(&self.graph, kind, self.cfg.dim_low, self.base.dim())
+    }
+
+    /// Run the processor simulation for one Table III cell.
+    pub fn simulate(
+        &self,
+        engine: EngineKind,
+        traces: &[SearchTrace],
+        dram: DramConfig,
+    ) -> WorkloadSim {
+        let layout = self.layout(engine.layout_kind());
+        let mut sim = DramSim::new(dram);
+        simulate_workload(
+            engine,
+            traces,
+            &layout,
+            &mut sim,
+            &CoreConfig::default(),
+            &EnergyConfig::default(),
+        )
+    }
+}
+
+/// Recall/QPS result of one engine evaluation.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineEval {
+    /// Recall@k against exact ground truth.
+    pub recall: f64,
+    /// Wall-clock single-stream queries per second.
+    pub qps: f64,
+    /// Number of queries evaluated.
+    pub queries: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wb() -> Workbench {
+        Workbench::assemble(WorkbenchConfig {
+            n_base: 3_000,
+            n_queries: 40,
+            ef_construction: 48,
+            m: 8,
+            ..WorkbenchConfig::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn assembles_consistent_stack() {
+        let w = wb();
+        assert_eq!(w.base.len(), 3_000);
+        assert_eq!(w.base_low.len(), 3_000);
+        assert_eq!(w.base_low.dim(), w.cfg.dim_low);
+        assert_eq!(w.gt.len(), 40);
+        assert!(w.graph.check_invariants().is_empty());
+    }
+
+    #[test]
+    fn cache_roundtrip_is_stable() {
+        let a = wb();
+        let b = wb(); // second call loads from cache
+        assert_eq!(a.graph.entry_point(), b.graph.entry_point());
+        assert_eq!(a.gt, b.gt);
+    }
+
+    #[test]
+    fn evaluate_reports_sane_recall() {
+        let w = wb();
+        let h = w.hnsw(SearchParams { ef_upper: 1, ef_l0: 32 });
+        let e = w.evaluate(&h, 10);
+        assert!(e.recall > 0.7, "recall {}", e.recall);
+        assert!(e.qps > 0.0);
+        assert_eq!(e.queries, 40);
+    }
+
+    #[test]
+    fn traces_and_simulation_run() {
+        let w = wb();
+        let traces = w.phnsw_traces(PhnswParams::default(), 10);
+        assert_eq!(traces.len(), 10);
+        let sim = w.simulate(EngineKind::Phnsw, &traces, DramConfig::ddr4());
+        assert!(sim.qps > 0.0);
+        assert!(sim.mean_energy.total_pj() > 0.0);
+    }
+}

@@ -1,0 +1,187 @@
+//! Coordinator integration tests: the serving stack over *real* search
+//! engines (not stubs) — routing, batching under load, backpressure,
+//! statistics, and graceful shutdown.
+
+use phnsw::coordinator::{
+    BatcherConfig, Query, RoutePolicy, Router, Server, ServerConfig,
+};
+use phnsw::metrics::recall_at_k;
+use phnsw::search::{AnnEngine, PhnswParams, SearchParams};
+use phnsw::workbench::{Workbench, WorkbenchConfig};
+use std::sync::Arc;
+
+fn wb() -> Arc<Workbench> {
+    Arc::new(
+        Workbench::assemble(WorkbenchConfig {
+            n_base: 4_000,
+            n_queries: 120,
+            m: 8,
+            ef_construction: 64,
+            ..WorkbenchConfig::default()
+        })
+        .expect("workbench"),
+    )
+}
+
+fn real_router(w: &Arc<Workbench>, policy: RoutePolicy) -> Arc<Router> {
+    let mut r = Router::new(policy);
+    r.register("hnsw", Arc::new(w.hnsw(SearchParams::default())) as Arc<dyn AnnEngine>);
+    r.register("phnsw", Arc::new(w.phnsw(PhnswParams::default())) as Arc<dyn AnnEngine>);
+    Arc::new(r)
+}
+
+#[test]
+fn served_results_match_direct_engine_calls() {
+    let w = wb();
+    let server = Server::start(
+        ServerConfig { workers: 2, ..Default::default() },
+        real_router(&w, RoutePolicy::Default("phnsw".into())),
+    );
+    let h = server.handle();
+    let direct = w.phnsw(PhnswParams::default());
+    for qi in 0..10 {
+        let res = h.query_blocking(Query::new(w.queries.row(qi).to_vec())).unwrap();
+        let want: Vec<u32> = direct.search(w.queries.row(qi)).iter().take(10).map(|n| n.id).collect();
+        let got: Vec<u32> = res.neighbors.iter().map(|n| n.id).collect();
+        assert_eq!(got, want, "query {qi}");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn recall_through_the_server_matches_offline() {
+    let w = wb();
+    let server = Server::start(
+        ServerConfig { workers: 4, ..Default::default() },
+        real_router(&w, RoutePolicy::Default("phnsw".into())),
+    );
+    let h = server.handle();
+    let results: Vec<Vec<u32>> = (0..w.queries.len())
+        .map(|qi| {
+            h.query_blocking(Query::new(w.queries.row(qi).to_vec()))
+                .unwrap()
+                .neighbors
+                .iter()
+                .map(|n| n.id)
+                .collect()
+        })
+        .collect();
+    let r = recall_at_k(&results, &w.gt, 10);
+    assert!(r > 0.85, "served recall {r}");
+    server.shutdown();
+}
+
+#[test]
+fn round_robin_splits_real_traffic() {
+    let w = wb();
+    let server = Server::start(
+        ServerConfig { workers: 2, ..Default::default() },
+        real_router(&w, RoutePolicy::RoundRobin),
+    );
+    let h = server.handle();
+    for qi in 0..40 {
+        h.query_blocking(Query::new(w.queries.row(qi % w.queries.len()).to_vec())).unwrap();
+    }
+    let by = server.stats().by_engine();
+    assert_eq!(by.values().sum::<u64>(), 40);
+    for (name, n) in &by {
+        assert!(*n >= 10, "engine {name} starved: {n}");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn per_query_engine_override() {
+    let w = wb();
+    let server = Server::start(
+        ServerConfig { workers: 2, ..Default::default() },
+        real_router(&w, RoutePolicy::Default("hnsw".into())),
+    );
+    let h = server.handle();
+    let mut q = Query::new(w.queries.row(0).to_vec());
+    q.engine = Some("phnsw".into());
+    let res = h.query_blocking(q).unwrap();
+    assert_eq!(res.engine, "phnsw");
+    server.shutdown();
+}
+
+#[test]
+fn backpressure_bounds_queue_and_reports_rejections() {
+    let w = wb();
+    let server = Server::start(
+        ServerConfig {
+            workers: 1,
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: std::time::Duration::from_millis(1),
+                queue_cap: 8,
+            },
+        },
+        real_router(&w, RoutePolicy::Default("phnsw".into())),
+    );
+    let h = server.handle();
+    // Flood without consuming: some must bounce.
+    let mut accepted = 0;
+    let mut rejected = 0;
+    let mut rxs = Vec::new();
+    for qi in 0..200 {
+        match h.submit(Query::new(w.queries.row(qi % w.queries.len()).to_vec())) {
+            Ok(rx) => {
+                accepted += 1;
+                rxs.push(rx);
+            }
+            Err(_) => rejected += 1,
+        }
+    }
+    assert!(accepted > 0);
+    // Everything accepted eventually completes.
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    assert_eq!(server.stats().served(), accepted);
+    assert_eq!(server.stats().rejected(), rejected);
+    server.shutdown();
+}
+
+#[test]
+fn latency_stats_populated_under_concurrent_load() {
+    let w = wb();
+    let server = Server::start(
+        ServerConfig { workers: 4, ..Default::default() },
+        real_router(&w, RoutePolicy::RoundRobin),
+    );
+    let h = server.handle();
+    std::thread::scope(|s| {
+        for t in 0..6 {
+            let h = h.clone();
+            let w = w.clone();
+            s.spawn(move || {
+                for i in 0..40 {
+                    let qi = (t * 40 + i) % w.queries.len();
+                    h.query_blocking(Query::new(w.queries.row(qi).to_vec())).unwrap();
+                }
+            });
+        }
+    });
+    assert_eq!(server.stats().served(), 240);
+    let (p50, p95, p99) = server.stats().latency_summary();
+    assert!(p50 > 0.0 && p95 >= p50 && p99 >= p95);
+    assert!(server.stats().qps() > 0.0);
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_drains_in_flight_work() {
+    let w = wb();
+    let server = Server::start(
+        ServerConfig { workers: 2, ..Default::default() },
+        real_router(&w, RoutePolicy::Default("hnsw".into())),
+    );
+    let h = server.handle();
+    let rxs: Vec<_> = (0..50)
+        .map(|qi| h.submit(Query::new(w.queries.row(qi % w.queries.len()).to_vec())).unwrap())
+        .collect();
+    server.shutdown();
+    let completed = rxs.into_iter().filter(|rx| rx.recv().is_ok()).count();
+    assert_eq!(completed, 50, "all accepted queries complete through shutdown");
+}

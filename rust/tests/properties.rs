@@ -1,0 +1,388 @@
+//! Property-based tests (proptest is unavailable offline; these run on
+//! the crate's own `proptest_lite` harness — seeded generators, greedy
+//! shrinking, replayable failures).
+
+use phnsw::dataset::gt::TopK;
+use phnsw::dataset::{l2_sq_scalar, VectorSet};
+use phnsw::dram::{DramConfig, DramSim};
+use phnsw::hw::ksort::{bubble_topk, ksort_topk, ranks};
+use phnsw::pca::PcaModel;
+use phnsw::proptest_lite::{run, run_vec, Config};
+use phnsw::rng::Pcg32;
+use phnsw::search::dist::{l2_sq, l2_sq_via_dot, norm_sq};
+use phnsw::search::visited::VisitedSet;
+
+fn cfg(cases: usize, seed: u64) -> Config {
+    Config { cases, seed }
+}
+
+#[test]
+fn prop_l2_matches_scalar_reference() {
+    run(
+        &cfg(300, 101),
+        |rng| {
+            let n = rng.range(0, 300);
+            let a: Vec<f32> = (0..n).map(|_| rng.gaussian() * 50.0).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.gaussian() * 50.0).collect();
+            (a, b)
+        },
+        |(a, b)| {
+            let fast = l2_sq(a, b);
+            let slow = l2_sq_scalar(a, b);
+            (fast - slow).abs() <= 1e-3 * slow.max(1.0)
+        },
+    );
+}
+
+#[test]
+fn prop_l2_dot_formulation_agrees() {
+    run(
+        &cfg(200, 102),
+        |rng| {
+            let n = rng.range(1, 200);
+            let a: Vec<f32> = (0..n).map(|_| 255.0 * rng.f32()).collect();
+            let b: Vec<f32> = (0..n).map(|_| 255.0 * rng.f32()).collect();
+            (a, b)
+        },
+        |(a, b)| {
+            let direct = l2_sq(a, b);
+            let viadot = l2_sq_via_dot(a, b, norm_sq(a), norm_sq(b));
+            (direct - viadot).abs() <= 2e-3 * direct.max(1.0)
+        },
+    );
+}
+
+#[test]
+fn prop_ksort_equals_stable_argsort() {
+    run_vec(
+        &cfg(300, 103),
+        |rng| {
+            let n = rng.range(1, 48);
+            // coarse values force ties
+            (0..n).map(|_| rng.below(8) as f32).collect::<Vec<f32>>()
+        },
+        |v| {
+            if v.is_empty() {
+                return true;
+            }
+            let k = v.len().min(16);
+            let got = ksort_topk(v, k);
+            let mut want: Vec<(f32, u32)> = v.iter().copied().zip(0u32..).collect();
+            want.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            want.truncate(k);
+            got == want
+        },
+    );
+}
+
+#[test]
+fn prop_ksort_ranks_are_permutations() {
+    run_vec(
+        &cfg(200, 104),
+        |rng| {
+            let n = rng.range(1, 40);
+            (0..n).map(|_| rng.below(4) as f32).collect::<Vec<f32>>()
+        },
+        |v| {
+            if v.is_empty() {
+                return true;
+            }
+            let mut r = ranks(v);
+            r.sort_unstable();
+            r == (0..v.len()).collect::<Vec<_>>()
+        },
+    );
+}
+
+#[test]
+fn prop_bubble_and_ksort_agree() {
+    run_vec(
+        &cfg(150, 105),
+        |rng| {
+            let n = rng.range(1, 33);
+            (0..n).map(|_| rng.f32() * 1000.0).collect::<Vec<f32>>()
+        },
+        |v| {
+            if v.is_empty() {
+                return true;
+            }
+            let k = v.len().min(8);
+            bubble_topk(v, k).0 == ksort_topk(v, k)
+        },
+    );
+}
+
+#[test]
+fn prop_topk_heap_keeps_k_smallest() {
+    run_vec(
+        &cfg(250, 106),
+        |rng| {
+            let n = rng.range(1, 200);
+            (0..n).map(|_| rng.f32() * 100.0).collect::<Vec<f32>>()
+        },
+        |v| {
+            if v.is_empty() {
+                return true;
+            }
+            let k = 1 + (v.len() % 13);
+            let mut t = TopK::new(k);
+            for (i, &d) in v.iter().enumerate() {
+                t.offer(d, i as u32);
+            }
+            let got: Vec<f32> = t.into_sorted().into_iter().map(|(d, _)| d).collect();
+            let mut want = v.to_vec();
+            want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            want.truncate(k);
+            got == want
+        },
+    );
+}
+
+#[test]
+fn prop_pca_projection_is_contraction() {
+    // Projecting onto orthonormal components can never increase pairwise
+    // distance — the safety property behind PCA filtering.
+    run(
+        &cfg(20, 107),
+        |rng| {
+            let dim = rng.range(6, 24);
+            let k = rng.range(2, dim.min(8));
+            let n = 80;
+            let mut vs = VectorSet::new(dim);
+            for _ in 0..n {
+                let v: Vec<f32> = (0..dim).map(|_| rng.gaussian() * 10.0).collect();
+                vs.push(&v);
+            }
+            (vs, k, rng.next_u64())
+        },
+        |(vs, k, seed)| {
+            let pca = PcaModel::fit(vs, *k, *seed);
+            let proj = pca.project_set(vs);
+            for i in (0..vs.len()).step_by(7) {
+                for j in (0..vs.len()).step_by(11) {
+                    let hi = l2_sq(vs.row(i), vs.row(j));
+                    let lo = l2_sq(proj.row(i), proj.row(j));
+                    if lo > hi * 1.001 + 1e-3 {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_visited_set_matches_hashset() {
+    run_vec(
+        &cfg(150, 108),
+        |rng| {
+            let ops = rng.range(1, 400);
+            // (op, id): op 0 = insert, 1 = contains-check, 2 = clear (rare)
+            (0..ops)
+                .map(|_| {
+                    let op = if rng.below(20) == 0 { 2u8 } else { rng.below(2) as u8 };
+                    (op, rng.below(64))
+                })
+                .collect::<Vec<(u8, u32)>>()
+        },
+        |ops| {
+            let mut vs = VisitedSet::new(64);
+            let mut model = std::collections::HashSet::new();
+            for &(op, id) in ops {
+                match op {
+                    0 => {
+                        if vs.insert(id) != model.insert(id) {
+                            return false;
+                        }
+                    }
+                    1 => {
+                        if vs.contains(id) != model.contains(&id) {
+                            return false;
+                        }
+                    }
+                    _ => {
+                        vs.clear();
+                        model.clear();
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_dram_energy_is_exact_accounting() {
+    run_vec(
+        &cfg(100, 109),
+        |rng| {
+            let n = rng.range(1, 40);
+            (0..n)
+                .map(|_| (rng.next_u64() % (1 << 28), 1 + rng.below(4096)))
+                .collect::<Vec<(u64, u32)>>()
+        },
+        |reqs| {
+            let cfg = DramConfig::ddr4();
+            let mut sim = DramSim::new(cfg.clone());
+            for &(a, b) in reqs {
+                sim.read(a, b);
+            }
+            let s = sim.stats();
+            let want = s.bytes as f64 * 8.0 * cfg.pj_per_bit + s.row_misses as f64 * cfg.act_pj;
+            (s.energy_pj - want).abs() < 1e-6 * want.max(1.0)
+        },
+    );
+}
+
+#[test]
+fn prop_dram_batch_and_serial_same_energy() {
+    run_vec(
+        &cfg(80, 110),
+        |rng| {
+            let n = rng.range(1, 30);
+            (0..n)
+                .map(|_| ((rng.next_u64() % (1 << 26)), 1 + rng.below(2048)))
+                .collect::<Vec<(u64, u32)>>()
+        },
+        |reqs| {
+            let mut a = DramSim::new(DramConfig::hbm());
+            let mut b = DramSim::new(DramConfig::hbm());
+            a.read_batch(reqs);
+            for &(addr, bytes) in reqs {
+                b.read(addr, bytes);
+            }
+            // same bits + same row walk → identical energy.
+            (a.stats().energy_pj - b.stats().energy_pj).abs() < 1e-6
+        },
+    );
+}
+
+#[test]
+fn prop_recall_bounded_and_exact_for_known_overlap() {
+    run(
+        &cfg(100, 111),
+        |rng| {
+            let k = rng.range(1, 10);
+            let gt: Vec<u32> = (0..k as u32).collect();
+            let overlap = rng.range(0, k + 1);
+            let mut res: Vec<u32> = gt[..overlap].to_vec();
+            let mut filler = 1000;
+            while res.len() < k {
+                res.push(filler);
+                filler += 1;
+            }
+            (vec![res], vec![gt], k, overlap)
+        },
+        |(res, gt, k, overlap)| {
+            let r = phnsw::metrics::recall_at_k(res, gt, *k);
+            (0.0..=1.0).contains(&r) && (r - *overlap as f64 / *k as f64).abs() < 1e-9
+        },
+    );
+}
+
+#[test]
+fn prop_pcg_below_is_in_range_and_covers() {
+    run(
+        &cfg(50, 112),
+        |rng| (rng.next_u64(), 1 + rng.below(40)),
+        |&(seed, bound)| {
+            let mut r = Pcg32::new(seed);
+            let mut seen = vec![false; bound as usize];
+            for _ in 0..(bound as usize * 60) {
+                let v = r.below(bound);
+                if v >= bound {
+                    return false;
+                }
+                seen[v as usize] = true;
+            }
+            seen.iter().all(|&s| s)
+        },
+    );
+}
+
+#[test]
+fn prop_graph_invariants_hold_for_random_configs() {
+    use phnsw::dataset::synthetic::{generate, SyntheticConfig};
+    use phnsw::graph::build::{build, BuildConfig};
+    run(
+        &cfg(8, 113),
+        |rng| {
+            let n = rng.range(50, 600);
+            let m = rng.range(2, 12);
+            let efc = rng.range(8, 64);
+            let seed = rng.next_u64();
+            (n, m, efc, seed)
+        },
+        |&(n, m, efc, seed)| {
+            let (base, _) = generate(&SyntheticConfig {
+                n_base: n,
+                n_queries: 1,
+                seed,
+                ..SyntheticConfig::tiny()
+            });
+            let g = build(
+                &base,
+                &BuildConfig { m, ef_construction: efc, seed, ..Default::default() },
+            );
+            g.len() == n && g.check_invariants().is_empty()
+        },
+    );
+}
+
+#[test]
+fn prop_phnsw_results_sorted_unique_and_within_corpus() {
+    use phnsw::dataset::synthetic::{generate, SyntheticConfig};
+    use phnsw::graph::build::{build, BuildConfig};
+    use phnsw::search::{AnnEngine, PhnswParams, PhnswSearcher};
+    use std::sync::Arc;
+
+    let (base, queries) = generate(&SyntheticConfig {
+        n_base: 1200,
+        n_queries: 64,
+        ..SyntheticConfig::tiny()
+    });
+    let g = Arc::new(build(&base, &BuildConfig { m: 8, ef_construction: 48, ..Default::default() }));
+    let base = Arc::new(base);
+    let s = PhnswSearcher::build_from(g, base.clone(), 8, PhnswParams::default(), 1);
+
+    run(
+        &cfg(64, 114),
+        |rng| rng.range(0, 64),
+        |&qi| {
+            let res = s.search(queries.row(qi));
+            if res.is_empty() {
+                return false;
+            }
+            let sorted = res.windows(2).all(|w| w[0].dist <= w[1].dist);
+            let ids: std::collections::HashSet<_> = res.iter().map(|n| n.id).collect();
+            sorted
+                && ids.len() == res.len()
+                && res.iter().all(|n| (n.id as usize) < base.len() && n.dist >= 0.0)
+        },
+    );
+}
+
+#[test]
+fn prop_db_layout_addresses_never_alias_across_regions() {
+    use phnsw::dataset::synthetic::{generate, SyntheticConfig};
+    use phnsw::db::{DbLayout, LayoutKind};
+    use phnsw::graph::build::{build, BuildConfig};
+
+    let (base, _) = generate(&SyntheticConfig { n_base: 400, n_queries: 1, ..SyntheticConfig::tiny() });
+    let g = build(&base, &BuildConfig { m: 6, ef_construction: 24, ..Default::default() });
+    let sep = DbLayout::new(&g, LayoutKind::Sep, 15, 128);
+
+    run(
+        &cfg(200, 115),
+        |rng| (rng.below(400), rng.below(400)),
+        |&(a, b)| {
+            // low-table and high-table rows of any two ids never overlap.
+            let low = sep.lowdim_requests(&[a])[0];
+            let high = sep.highdim_request(b);
+            let low_end = low.addr + low.bytes as u64;
+            let high_end = high.addr + high.bytes as u64;
+            low_end <= high.addr || high_end <= low.addr
+        },
+    );
+}

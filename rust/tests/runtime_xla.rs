@@ -1,0 +1,265 @@
+//! Integration tests for the AOT → PJRT bridge: every artifact produced by
+//! `python/compile/aot.py` is loaded, compiled, executed, and checked
+//! against the rust-side oracles. Requires `make artifacts` (the Makefile
+//! `test` target guarantees it).
+
+use phnsw::dataset::VectorSet;
+use phnsw::hw::ksort::ksort_topk;
+use phnsw::pca::PcaModel;
+use phnsw::rng::Pcg32;
+use phnsw::runtime::artifacts::literal_f32;
+use phnsw::runtime::{ArtifactRegistry, XlaRerankEngine};
+use phnsw::search::dist::l2_sq;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.txt").is_file()
+}
+
+/// Skip (not fail) when artifacts have not been built — mirrors how
+/// hardware-gated tests behave; `make test` always builds them first.
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts/ missing — run `make artifacts`");
+            return;
+        }
+    };
+}
+
+#[test]
+fn registry_lists_all_artifacts() {
+    require_artifacts!();
+    let reg = ArtifactRegistry::open(artifacts_dir()).unwrap();
+    let names = reg.available();
+    for want in [
+        "batch_rerank",
+        "filter_l0",
+        "filter_l1",
+        "filter_upper",
+        "fused_hop",
+        "project",
+        "rerank16",
+    ] {
+        assert!(names.iter().any(|n| n == want), "missing artifact {want}: {names:?}");
+    }
+    assert!(reg.platform().to_lowercase().contains("cpu") || !reg.platform().is_empty());
+}
+
+#[test]
+fn rerank16_matches_rust_distances() {
+    require_artifacts!();
+    let reg = ArtifactRegistry::open(artifacts_dir()).unwrap();
+    let exe = reg.get("rerank16").unwrap();
+    let mut rng = Pcg32::new(1);
+    let q: Vec<f32> = (0..128).map(|_| 255.0 * rng.f32()).collect();
+    let cands: Vec<f32> = (0..16 * 128).map(|_| 255.0 * rng.f32()).collect();
+    let outs = exe
+        .run(&[
+            literal_f32(&q, &[128]).unwrap(),
+            literal_f32(&cands, &[16, 128]).unwrap(),
+        ])
+        .unwrap();
+    assert_eq!(outs.len(), 2, "rerank returns (dists, argmin)");
+    let dists = outs[0].to_vec::<f32>().unwrap();
+    let best = outs[1].to_vec::<i32>().unwrap()[0];
+    let mut want_best = 0usize;
+    for i in 0..16 {
+        let want = l2_sq(&q, &cands[i * 128..(i + 1) * 128]);
+        let got = dists[i];
+        assert!(
+            (want - got).abs() <= 1e-3 * want.max(1.0),
+            "cand {i}: rust {want} vs xla {got}"
+        );
+        if dists[i] < dists[want_best] {
+            want_best = i;
+        }
+    }
+    assert_eq!(best as usize, want_best);
+}
+
+#[test]
+fn filter_l0_matches_rust_ksort() {
+    require_artifacts!();
+    let reg = ArtifactRegistry::open(artifacts_dir()).unwrap();
+    let exe = reg.get("filter_l0").unwrap();
+    let mut rng = Pcg32::new(2);
+    let q: Vec<f32> = (0..15).map(|_| 100.0 * rng.f32()).collect();
+    let nb: Vec<f32> = (0..32 * 15).map(|_| 100.0 * rng.f32()).collect();
+    let valid = vec![1.0f32; 32];
+    let outs = exe
+        .run(&[
+            literal_f32(&q, &[15]).unwrap(),
+            literal_f32(&nb, &[32, 15]).unwrap(),
+            literal_f32(&valid, &[32]).unwrap(),
+        ])
+        .unwrap();
+    let vals = outs[0].to_vec::<f32>().unwrap();
+    let idx = outs[1].to_vec::<i32>().unwrap();
+    assert_eq!(vals.len(), 16);
+
+    // Oracle: rust-side distances + the comparator-matrix sorter.
+    let dists: Vec<f32> = (0..32).map(|i| l2_sq(&q, &nb[i * 15..(i + 1) * 15])).collect();
+    let want = ksort_topk(&dists, 16);
+    for s in 0..16 {
+        assert_eq!(idx[s] as u32, want[s].1, "slot {s}");
+        assert!((vals[s] - want[s].0).abs() <= 1e-3 * want[s].0.max(1.0));
+    }
+}
+
+#[test]
+fn filter_masking_excludes_padded_lanes() {
+    require_artifacts!();
+    let reg = ArtifactRegistry::open(artifacts_dir()).unwrap();
+    let exe = reg.get("filter_l1").unwrap();
+    let q = vec![0.0f32; 15];
+    let nb = vec![1.0f32; 16 * 15];
+    let mut valid = vec![0.0f32; 16];
+    valid[3] = 1.0;
+    valid[9] = 1.0;
+    let outs = exe
+        .run(&[
+            literal_f32(&q, &[15]).unwrap(),
+            literal_f32(&nb, &[16, 15]).unwrap(),
+            literal_f32(&valid, &[16]).unwrap(),
+        ])
+        .unwrap();
+    let vals = outs[0].to_vec::<f32>().unwrap();
+    let idx = outs[1].to_vec::<i32>().unwrap();
+    assert_eq!(idx[0], 3);
+    assert_eq!(idx[1], 9);
+    assert!((vals[0] - 15.0).abs() < 1e-3);
+    assert!(vals[2] > 1e37, "slot beyond valid count must be PAD_DIST");
+}
+
+#[test]
+fn project_matches_rust_pca() {
+    require_artifacts!();
+    let reg = ArtifactRegistry::open(artifacts_dir()).unwrap();
+    let exe = reg.get("project").unwrap();
+
+    // Train a real PCA in rust, push its matrices through the artifact.
+    let mut rng = Pcg32::new(3);
+    let mut data = VectorSet::new(128);
+    for _ in 0..500 {
+        let v: Vec<f32> = (0..128).map(|_| 255.0 * rng.f32()).collect();
+        data.push(&v);
+    }
+    let pca = PcaModel::fit(&data, 15, 7);
+    let queries: Vec<f32> = (0..16 * 128).map(|_| 255.0 * rng.f32()).collect();
+    let outs = exe
+        .run(&[
+            literal_f32(&queries, &[16, 128]).unwrap(),
+            literal_f32(pca.components(), &[15, 128]).unwrap(),
+            literal_f32(pca.mean(), &[128]).unwrap(),
+        ])
+        .unwrap();
+    let got = outs[0].to_vec::<f32>().unwrap();
+    let mut want = vec![0f32; 15];
+    for b in 0..16 {
+        pca.project(&queries[b * 128..(b + 1) * 128], &mut want);
+        for j in 0..15 {
+            let g = got[b * 15 + j];
+            assert!(
+                (g - want[j]).abs() <= 1e-2 + 1e-4 * want[j].abs(),
+                "batch {b} dim {j}: rust {} vs xla {g}",
+                want[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_hop_composes_filter_and_rerank() {
+    require_artifacts!();
+    let reg = ArtifactRegistry::open(artifacts_dir()).unwrap();
+    let exe = reg.get("fused_hop").unwrap();
+    let mut rng = Pcg32::new(6);
+    let q: Vec<f32> = (0..128).map(|_| 255.0 * rng.f32()).collect();
+    let qp: Vec<f32> = (0..15).map(|_| 50.0 * rng.f32()).collect();
+    let nb: Vec<f32> = (0..32 * 15).map(|_| 50.0 * rng.f32()).collect();
+    let valid = vec![1.0f32; 32];
+    let cands: Vec<f32> = (0..16 * 128).map(|_| 255.0 * rng.f32()).collect();
+    let outs = exe
+        .run(&[
+            literal_f32(&q, &[128]).unwrap(),
+            literal_f32(&qp, &[15]).unwrap(),
+            literal_f32(&nb, &[32, 15]).unwrap(),
+            literal_f32(&valid, &[32]).unwrap(),
+            literal_f32(&cands, &[16, 128]).unwrap(),
+        ])
+        .unwrap();
+    assert_eq!(outs.len(), 4, "fused hop returns (vals, idx, dists, best)");
+    // Filter half matches the standalone filter oracle.
+    let dists_low: Vec<f32> = (0..32).map(|i| l2_sq(&qp, &nb[i * 15..(i + 1) * 15])).collect();
+    let want = ksort_topk(&dists_low, 16);
+    let idx = outs[1].to_vec::<i32>().unwrap();
+    for s in 0..16 {
+        assert_eq!(idx[s] as u32, want[s].1, "slot {s}");
+    }
+    // Rerank half matches rust distances.
+    let dh = outs[2].to_vec::<f32>().unwrap();
+    for i in 0..16 {
+        let w = l2_sq(&q, &cands[i * 128..(i + 1) * 128]);
+        assert!((dh[i] - w).abs() <= 1e-3 * w.max(1.0));
+    }
+}
+
+#[test]
+fn xla_engine_batch_rerank_roundtrip() {
+    require_artifacts!();
+    let eng = XlaRerankEngine::start(artifacts_dir()).unwrap();
+    assert!(eng.available().unwrap().len() >= 7);
+
+    let mut rng = Pcg32::new(4);
+    let b = 5; // deliberately not a multiple of the artifact batch (8)
+    let k = 16;
+    let d = 128;
+    let queries: Vec<f32> = (0..b * d).map(|_| 255.0 * rng.f32()).collect();
+    let cands: Vec<f32> = (0..b * k * d).map(|_| 255.0 * rng.f32()).collect();
+    let dists = eng.batch_rerank(&queries, &cands, b, k, d).unwrap();
+    assert_eq!(dists.len(), b * k);
+    for qi in 0..b {
+        for ci in 0..k {
+            let want = l2_sq(
+                &queries[qi * d..(qi + 1) * d],
+                &cands[(qi * k + ci) * d..(qi * k + ci + 1) * d],
+            );
+            let got = dists[qi * k + ci];
+            assert!(
+                (want - got).abs() <= 1e-3 * want.max(1.0),
+                "q{qi} c{ci}: {want} vs {got}"
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_engine_filter_step_roundtrip() {
+    require_artifacts!();
+    let eng = XlaRerankEngine::start(artifacts_dir()).unwrap();
+    let mut rng = Pcg32::new(5);
+    let q: Vec<f32> = (0..15).map(|_| rng.gaussian()).collect();
+    let nb: Vec<f32> = (0..32 * 15).map(|_| rng.gaussian()).collect();
+    let valid = vec![1.0f32; 32];
+    let (vals, idx) = eng.filter_step("filter_l0", &q, &nb, &valid).unwrap();
+    assert_eq!(vals.len(), 16);
+    assert_eq!(idx.len(), 16);
+    for w in vals.windows(2) {
+        assert!(w[0] <= w[1], "filter output must be sorted ascending");
+    }
+}
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    require_artifacts!();
+    let reg = ArtifactRegistry::open(artifacts_dir()).unwrap();
+    let err = match reg.get("definitely_not_an_artifact") {
+        Ok(_) => panic!("expected an error for a missing artifact"),
+        Err(e) => e,
+    };
+    assert!(err.to_string().contains("not found"), "{err}");
+}
