@@ -67,4 +67,42 @@ fn main() {
         qi = (qi + 1) % nq;
         std::hint::black_box(phnsw.search(w.queries.row(qi)));
     });
+
+    println!("graph adjacency (neighbor fetch, pseudo-random node order):");
+    let g = w.graph.as_ref();
+    assert!(g.is_frozen(), "workbench graphs are frozen CSR");
+    // Reconstruct the nested Vec<Vec<Vec<u32>>> layout the graph used
+    // before the CSR refactor, to measure what the flattening bought.
+    let nested: Vec<Vec<Vec<u32>>> = (0..g.len() as u32)
+        .map(|n| (0..=g.level(n)).map(|l| g.neighbors(n, l).to_vec()).collect())
+        .collect();
+    let n_nodes = g.len() as u32;
+    let mut acc = 0u64;
+    let mut i = 0u32;
+    common::time_it("neighbors(node, 0) — CSR (frozen)", 2_000_000, || {
+        i = i.wrapping_mul(1_664_525).wrapping_add(1_013_904_223);
+        let node = i % n_nodes;
+        let nbrs = g.neighbors(std::hint::black_box(node), 0);
+        acc = acc.wrapping_add(nbrs.iter().map(|&x| x as u64).sum::<u64>());
+    });
+    i = 0;
+    common::time_it("neighbors(node, 0) — nested Vec (legacy)", 2_000_000, || {
+        i = i.wrapping_mul(1_664_525).wrapping_add(1_013_904_223);
+        let node = i % n_nodes;
+        let lists = &nested[std::hint::black_box(node) as usize];
+        let nbrs: &[u32] = if lists.is_empty() { &[] } else { &lists[0] };
+        acc = acc.wrapping_add(nbrs.iter().map(|&x| x as u64).sum::<u64>());
+    });
+    std::hint::black_box(acc);
+
+    println!("batch engine API:");
+    let qrefs: Vec<&[f32]> = (0..64).map(|j| w.queries.row(j % nq)).collect();
+    common::time_it("phnsw.search ×64 (sequential)", 30, || {
+        for q in &qrefs {
+            std::hint::black_box(phnsw.search(q));
+        }
+    });
+    common::time_it("phnsw.search_batch 64q (scoped threads)", 30, || {
+        std::hint::black_box(phnsw.search_batch(&qrefs));
+    });
 }

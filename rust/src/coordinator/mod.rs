@@ -4,8 +4,11 @@
 //! aggregates incoming queries into dynamic batches (size- or
 //! deadline-triggered), a [`router`] picks the engine (CPU HNSW, CPU
 //! pHNSW, or the XLA-backed rerank path), and a [`server`] worker pool
-//! drains batches, executes searches, and returns results through
-//! per-request channels while [`stats`] aggregates QPS/latency.
+//! drains batches, dispatches each batch *whole* through
+//! [`crate::search::AnnEngine::search_batch`] (grouped by resolved
+//! engine, so the engines' data-parallel overrides see the full batch),
+//! and returns results through per-request channels while [`stats`]
+//! aggregates QPS/latency.
 //!
 //! Everything is `std::thread` + `mpsc` (tokio is not in the offline
 //! registry — DESIGN.md §5); the architecture mirrors vLLM's router:

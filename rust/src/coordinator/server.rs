@@ -1,10 +1,18 @@
 //! The serving loop: worker threads drain the batcher, route each batch,
 //! execute searches, and deliver results through per-request channels.
+//!
+//! Dispatch is *batch-first*: a drained batch is grouped by resolved
+//! engine and each group goes through [`AnnEngine::search_batch`] in one
+//! call, so the engines' data-parallel overrides see whole batches
+//! instead of a per-query loop. Results are bitwise identical to
+//! sequential dispatch (the `search_batch` contract).
 
 use super::batcher::{Batcher, BatcherConfig, Pending};
 use super::router::Router;
 use super::stats::ServeStats;
 use super::{Query, QueryResult};
+use crate::search::AnnEngine;
+use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
@@ -109,21 +117,43 @@ impl ServerHandle {
 
 fn worker_loop(batcher: Arc<Batcher>, router: Arc<Router>, stats: Arc<ServeStats>) {
     while let Some(batch) = batcher.next_batch() {
-        for p in batch {
-            let Pending { query, reply, arrived } = p;
-            match router.route(query.engine.as_deref()) {
-                Ok((name, engine)) => {
-                    let mut neighbors = engine.search(&query.vector);
-                    neighbors.truncate(query.topk);
-                    let latency = arrived.elapsed();
-                    stats.record(&name, latency);
-                    let _ = reply.send(QueryResult { neighbors, engine: name, latency });
-                }
-                Err(_) => {
-                    stats.record_error();
-                    // Dropping `reply` signals the error to the caller.
-                }
+        dispatch_batch(batch, &router, &stats);
+    }
+}
+
+/// Route a drained batch as a whole: resolve each query's engine (so
+/// per-query overrides and round-robin policies behave exactly as under
+/// per-query dispatch), group the queries by engine, run each group
+/// through one `search_batch` call, and deliver per-request results.
+fn dispatch_batch(batch: Vec<Pending>, router: &Router, stats: &ServeStats) {
+    let mut pending: Vec<Option<Pending>> = batch.into_iter().map(Some).collect();
+    let mut groups: BTreeMap<String, (Arc<dyn AnnEngine>, Vec<usize>)> = BTreeMap::new();
+    for (i, slot) in pending.iter_mut().enumerate() {
+        let requested = slot.as_ref().unwrap().query.engine.clone();
+        match router.route(requested.as_deref()) {
+            Ok((name, engine)) => {
+                groups.entry(name).or_insert_with(|| (engine, Vec::new())).1.push(i);
             }
+            Err(_) => {
+                stats.record_error();
+                // Dropping `reply` signals the error to the caller.
+                *slot = None;
+            }
+        }
+    }
+    for (name, (engine, idxs)) in groups {
+        let queries: Vec<&[f32]> = idxs
+            .iter()
+            .map(|&i| pending[i].as_ref().unwrap().query.vector.as_slice())
+            .collect();
+        let results = engine.search_batch(&queries);
+        debug_assert_eq!(results.len(), idxs.len(), "search_batch must be 1:1 with queries");
+        for (&i, mut neighbors) in idxs.iter().zip(results) {
+            let Pending { query, reply, arrived } = pending[i].take().unwrap();
+            neighbors.truncate(query.topk);
+            let latency = arrived.elapsed();
+            stats.record(&name, latency);
+            let _ = reply.send(QueryResult { neighbors, engine: name.clone(), latency });
         }
     }
 }
@@ -210,6 +240,118 @@ mod tests {
         }
         assert_eq!(s.stats().served(), 400);
         assert!(s.stats().qps() > 0.0);
+        s.shutdown();
+    }
+
+    /// Engine stub that counts how often the server goes through the
+    /// batch entry point (vs. per-query `search`).
+    struct BatchProbe {
+        batch_calls: std::sync::atomic::AtomicUsize,
+    }
+    impl AnnEngine for BatchProbe {
+        fn name(&self) -> &str {
+            "probe"
+        }
+        fn search(&self, q: &[f32]) -> Vec<Neighbor> {
+            vec![Neighbor { id: q[0] as u32, dist: 0.0 }]
+        }
+        fn search_with_stats(&self, q: &[f32]) -> (Vec<Neighbor>, SearchStats) {
+            (self.search(q), SearchStats::default())
+        }
+        fn search_batch(&self, queries: &[&[f32]]) -> Vec<Vec<Neighbor>> {
+            self.batch_calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            queries.iter().map(|q| self.search(q)).collect()
+        }
+    }
+
+    #[test]
+    fn full_batch_dispatches_through_one_search_batch_call() {
+        let probe = Arc::new(BatchProbe { batch_calls: std::sync::atomic::AtomicUsize::new(0) });
+        let mut r = Router::new(RoutePolicy::Default("probe".into()));
+        r.register("probe", probe.clone() as Arc<dyn AnnEngine>);
+        // One worker + a size-only trigger: the batch arrives whole.
+        let s = Server::start(
+            ServerConfig {
+                workers: 1,
+                batcher: BatcherConfig {
+                    max_batch: 4,
+                    max_wait: std::time::Duration::from_secs(30),
+                    queue_cap: 64,
+                },
+            },
+            Arc::new(r),
+        );
+        let h = s.handle();
+        let rxs: Vec<_> = (0..4).map(|i| h.submit(Query::new(vec![i as f32])).unwrap()).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap().neighbors[0].id, i as u32);
+        }
+        assert_eq!(
+            probe.batch_calls.load(std::sync::atomic::Ordering::SeqCst),
+            1,
+            "4 queries at max_batch=4 must arrive as one search_batch call"
+        );
+        s.shutdown();
+    }
+
+    #[test]
+    fn mixed_engine_batch_routes_per_query() {
+        struct Tagged(u32);
+        impl AnnEngine for Tagged {
+            fn name(&self) -> &str {
+                "tagged"
+            }
+            fn search(&self, _q: &[f32]) -> Vec<Neighbor> {
+                vec![Neighbor { id: self.0, dist: 0.0 }]
+            }
+            fn search_with_stats(&self, q: &[f32]) -> (Vec<Neighbor>, SearchStats) {
+                (self.search(q), SearchStats::default())
+            }
+        }
+        let mut r = Router::new(RoutePolicy::Default("a".into()));
+        r.register("a", Arc::new(Tagged(1)) as Arc<dyn AnnEngine>);
+        r.register("b", Arc::new(Tagged(2)) as Arc<dyn AnnEngine>);
+        let s = Server::start(
+            ServerConfig {
+                workers: 1,
+                batcher: BatcherConfig {
+                    max_batch: 6,
+                    max_wait: std::time::Duration::from_secs(30),
+                    queue_cap: 64,
+                },
+            },
+            Arc::new(r),
+        );
+        let h = s.handle();
+        // A single batch mixing default-routed and overridden queries.
+        let rxs: Vec<_> = (0..6)
+            .map(|i| {
+                let mut q = Query::new(vec![i as f32]);
+                if i % 2 == 1 {
+                    q.engine = Some("b".into());
+                }
+                h.submit(q).unwrap()
+            })
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let res = rx.recv().unwrap();
+            let want = if i % 2 == 1 { 2 } else { 1 };
+            assert_eq!(res.neighbors[0].id, want, "query {i} hit the wrong engine");
+            assert_eq!(res.engine, if i % 2 == 1 { "b" } else { "a" });
+        }
+        s.shutdown();
+    }
+
+    #[test]
+    fn unknown_engine_in_batch_fails_only_that_query() {
+        let s = server();
+        let h = s.handle();
+        let mut bad = Query::new(vec![1.0]);
+        bad.engine = Some("nope".into());
+        let rx_bad = h.submit(bad).unwrap();
+        let rx_ok = h.submit(Query::new(vec![7.0])).unwrap();
+        assert!(rx_bad.recv().is_err(), "bad query's channel drops");
+        assert_eq!(rx_ok.recv().unwrap().neighbors[0].id, 7, "good query still served");
         s.shutdown();
     }
 

@@ -58,8 +58,18 @@ impl XlaPhnswEngine {
             .enumerate()
             .map(|(slot, &id)| Neighbor { id, dist: dists[slot] })
             .collect();
-        out.sort_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap().then(a.id.cmp(&b.id)));
+        out.sort_by(|a, b| a.dist.total_cmp(&b.dist).then(a.id.cmp(&b.id)));
         Ok(out)
+    }
+
+    /// Rerank one native result through the artifact, falling back to the
+    /// native ordering on any XLA-side failure.
+    fn rerank_or_native(&self, query: &[f32], native: Vec<Neighbor>) -> Vec<Neighbor> {
+        let ids: Vec<u32> = native.iter().map(|n| n.id).collect();
+        match self.xla_rerank(query, &ids) {
+            Ok(reranked) if !reranked.is_empty() => reranked,
+            _ => native, // graceful fallback keeps the server healthy
+        }
     }
 }
 
@@ -70,20 +80,25 @@ impl AnnEngine for XlaPhnswEngine {
 
     fn search(&self, query: &[f32]) -> Vec<Neighbor> {
         let native = self.searcher.search(query);
-        let ids: Vec<u32> = native.iter().map(|n| n.id).collect();
-        match self.xla_rerank(query, &ids) {
-            Ok(reranked) if !reranked.is_empty() => reranked,
-            _ => native, // graceful fallback keeps the server healthy
-        }
+        self.rerank_or_native(query, native)
     }
 
     fn search_with_stats(&self, query: &[f32]) -> (Vec<Neighbor>, SearchStats) {
         let (native, stats) = self.searcher.search_with_stats(query);
-        let ids: Vec<u32> = native.iter().map(|n| n.id).collect();
-        let res = match self.xla_rerank(query, &ids) {
-            Ok(r) if !r.is_empty() => r,
-            _ => native,
-        };
+        let res = self.rerank_or_native(query, native);
         (res, stats)
+    }
+
+    fn search_batch(&self, queries: &[&[f32]]) -> Vec<Vec<Neighbor>> {
+        // Traversal + PCA filtering fan out across the searcher's
+        // data-parallel batch path; the rerank stays sequential because
+        // the PJRT executable is owned by a single worker thread and
+        // serializes jobs anyway.
+        let native = self.searcher.search_batch(queries);
+        native
+            .into_iter()
+            .zip(queries)
+            .map(|(nat, &q)| self.rerank_or_native(q, nat))
+            .collect()
     }
 }

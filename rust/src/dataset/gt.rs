@@ -88,10 +88,11 @@ impl TopK {
     }
 
     /// Consume into `(dist, id)` pairs sorted ascending by distance
-    /// (ties broken by id for determinism).
+    /// (ties broken by id for determinism). `total_cmp` keeps the sort
+    /// panic-free when NaN distances slip in (e.g. a NaN query vector).
     pub fn into_sorted(mut self) -> Vec<(f32, u32)> {
         self.heap
-            .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then_with(|| a.1.cmp(&b.1)));
+            .sort_by(|a, b| a.0.total_cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
         self.heap
     }
 }

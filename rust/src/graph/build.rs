@@ -6,12 +6,11 @@
 //! is what hnswlib ships and what the paper's recall numbers assume.
 
 use super::HnswGraph;
-use crate::dataset::gt::TopK;
 use crate::dataset::VectorSet;
 use crate::rng::Pcg32;
+use crate::search::beam::{beam_search_layer, HighDimScorer};
 use crate::search::dist::l2_sq;
 use crate::search::visited::VisitedSet;
-use std::collections::BinaryHeap;
 
 /// Construction parameters.
 #[derive(Debug, Clone)]
@@ -41,24 +40,9 @@ impl Default for BuildConfig {
     }
 }
 
-/// Min-heap adapter over (dist, id) — BinaryHeap is a max-heap, so wrap
-/// with reversed ordering.
-#[derive(PartialEq)]
-struct MinDist(f32, u32);
-impl Eq for MinDist {}
-impl PartialOrd for MinDist {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for MinDist {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        other.0.partial_cmp(&self.0).unwrap().then_with(|| other.1.cmp(&self.1))
-    }
-}
-
 /// Beam search at one level: returns up to `ef` closest nodes to `q`,
-/// sorted ascending by distance. This is Algorithm 2 of [2].
+/// sorted ascending by distance. This is Algorithm 2 of [2], delegated
+/// to the shared beam core with the plain high-dim scorer and no trace.
 fn search_layer(
     graph: &HnswGraph,
     data: &VectorSet,
@@ -68,29 +52,8 @@ fn search_layer(
     level: usize,
     visited: &mut VisitedSet,
 ) -> Vec<(f32, u32)> {
-    visited.clear();
-    let mut candidates = BinaryHeap::new(); // min-heap by dist
-    let mut found = TopK::new(ef); // keeps ef smallest
-    for &(d, id) in entry {
-        visited.insert(id);
-        candidates.push(MinDist(d, id));
-        found.offer(d, id);
-    }
-    while let Some(MinDist(d, c)) = candidates.pop() {
-        if d > found.threshold() {
-            break;
-        }
-        for &nb in graph.neighbors(c, level) {
-            if visited.insert(nb) {
-                let dn = l2_sq(q, data.row(nb as usize));
-                if dn < found.threshold() || found.len() < ef {
-                    candidates.push(MinDist(dn, nb));
-                    found.offer(dn, nb);
-                }
-            }
-        }
-    }
-    found.into_sorted()
+    let mut scorer = HighDimScorer::new(q, data);
+    beam_search_layer(graph, &mut scorer, entry, ef, level, visited, None)
 }
 
 /// Heuristic neighbor selection (Algorithm 4 of [2]): prefer candidates
@@ -156,6 +119,7 @@ pub fn build(data: &VectorSet, cfg: &BuildConfig) -> HnswGraph {
     let mut rng = Pcg32::new(cfg.seed);
     let mut graph = HnswGraph::empty(cfg.m, m0);
     if data.is_empty() {
+        graph.freeze();
         return graph;
     }
     let mut visited = VisitedSet::new(data.len());
@@ -195,6 +159,9 @@ pub fn build(data: &VectorSet, cfg: &BuildConfig) -> HnswGraph {
             ep = found;
         }
     }
+    // Compact the staging adjacency into the cache-linear CSR form the
+    // search path runs on.
+    graph.freeze();
     graph
 }
 
@@ -217,6 +184,19 @@ mod tests {
         assert_eq!(g.len(), base.len());
         let errs = g.check_invariants();
         assert!(errs.is_empty(), "{errs:?}");
+    }
+
+    #[test]
+    fn build_returns_frozen_csr_graph() {
+        let (_, g) = small_benchmark();
+        assert!(g.is_frozen(), "the search path must run on the CSR form");
+    }
+
+    #[test]
+    fn empty_build_is_frozen_too() {
+        let g = build(&VectorSet::new(4), &BuildConfig::default());
+        assert!(g.is_frozen());
+        assert!(g.is_empty());
     }
 
     #[test]

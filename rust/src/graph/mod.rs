@@ -6,6 +6,19 @@
 //! geometric layer assignment, greedy descent, efConstruction beam search
 //! per layer, heuristic neighbor selection, bidirectional linking with
 //! pruning.
+//!
+//! ## Storage
+//!
+//! The graph has two representations. During construction it is a
+//! *staging* form — per-node, per-level `Vec`s that the builder can grow
+//! and re-prune freely. [`HnswGraph::freeze`] then compacts it into a
+//! per-level **CSR** form: one `offsets`/`neighbors` array pair per
+//! level, every level's adjacency contiguous in memory. A neighbor fetch
+//! on the frozen form is two loads into one flat array instead of three
+//! pointer hops — the software twin of the contiguous index-table layout
+//! the paper's processor assumes (§IV memory layout). The public accessor
+//! API ([`HnswGraph::neighbors`] returning `&[u32]`) is identical for
+//! both forms; only the builder's mutators require the staging form.
 
 pub mod build;
 pub mod serialize;
@@ -15,11 +28,29 @@ pub use build::{build, BuildConfig};
 /// Maximum representable layer (the paper's SIFT1M graph has 6).
 pub const MAX_LEVEL: usize = 15;
 
+/// One frozen level: classic CSR. `offsets` has `n + 1` entries indexed
+/// by node id; node `v`'s neighbors at this level are
+/// `neighbors[offsets[v]..offsets[v + 1]]` (an empty range for nodes that
+/// do not reach the level).
+#[derive(Debug, Clone)]
+struct CsrLevel {
+    offsets: Vec<u32>,
+    neighbors: Vec<u32>,
+}
+
+/// Adjacency storage: builder-mutable staging vs. frozen CSR.
+#[derive(Debug, Clone)]
+enum Adjacency {
+    /// `staging[node][level]` → neighbor ids (construction only).
+    Staging(Vec<Vec<Vec<u32>>>),
+    /// Per-level flat arrays (the search path).
+    Csr(Vec<CsrLevel>),
+}
+
 /// A hierarchical navigable small-world graph.
 ///
-/// Adjacency is stored per node, per level: `neighbors[node][level]` is the
-/// list of neighbor ids at that level. A node of level `L` has `L + 1`
-/// lists. Level capacities are `m0` at level 0 and `m` above.
+/// A node of level `L` has neighbor lists on levels `0..=L`. Level
+/// capacities are `m0` at level 0 and `m` above.
 #[derive(Debug, Clone)]
 pub struct HnswGraph {
     /// Max-neighbor budget for levels ≥ 1.
@@ -32,14 +63,27 @@ pub struct HnswGraph {
     max_level: usize,
     /// Per-node assigned level.
     levels: Vec<u8>,
-    /// `adjacency[node][level]` → neighbor ids.
-    adjacency: Vec<Vec<Vec<u32>>>,
+    /// Adjacency lists (staging or CSR).
+    adjacency: Adjacency,
+    /// Per-level resident-node counts, cached at freeze time.
+    level_nodes: Vec<usize>,
+    /// Per-level directed-edge counts, cached at freeze time.
+    level_edges: Vec<usize>,
 }
 
 impl HnswGraph {
-    /// Create an empty graph (used by the builder).
+    /// Create an empty graph in staging form (used by the builder).
     pub(crate) fn empty(m: usize, m0: usize) -> Self {
-        Self { m, m0, entry_point: 0, max_level: 0, levels: Vec::new(), adjacency: Vec::new() }
+        Self {
+            m,
+            m0,
+            entry_point: 0,
+            max_level: 0,
+            levels: Vec::new(),
+            adjacency: Adjacency::Staging(Vec::new()),
+            level_nodes: Vec::new(),
+            level_edges: Vec::new(),
+        }
     }
 
     /// Number of nodes.
@@ -88,29 +132,65 @@ impl HnswGraph {
         self.levels[node as usize] as usize
     }
 
-    /// Neighbors of `node` at `level` (empty if the node does not reach the
-    /// level).
+    /// True once [`Self::freeze`] has compacted the graph into CSR form.
+    pub fn is_frozen(&self) -> bool {
+        matches!(self.adjacency, Adjacency::Csr(_))
+    }
+
+    /// Neighbors of `node` at `level` (empty if the node does not reach
+    /// the level).
     #[inline]
     pub fn neighbors(&self, node: u32, level: usize) -> &[u32] {
-        let lists = &self.adjacency[node as usize];
-        if level < lists.len() {
-            &lists[level]
-        } else {
-            &[]
+        match &self.adjacency {
+            Adjacency::Staging(adj) => {
+                let lists = &adj[node as usize];
+                if level < lists.len() {
+                    &lists[level]
+                } else {
+                    &[]
+                }
+            }
+            Adjacency::Csr(levels) => match levels.get(level) {
+                Some(lv) => {
+                    let i = node as usize;
+                    &lv.neighbors[lv.offsets[i] as usize..lv.offsets[i + 1] as usize]
+                }
+                None => &[],
+            },
+        }
+    }
+
+    /// The raw `(offsets, neighbors)` arrays of one frozen level, or
+    /// `None` when the graph is still in staging form (or the level does
+    /// not exist). Lets the serializer write the CSR image directly
+    /// instead of re-deriving it through per-node accessors.
+    pub(crate) fn csr_level(&self, level: usize) -> Option<(&[u32], &[u32])> {
+        match &self.adjacency {
+            Adjacency::Csr(levels) => levels
+                .get(level)
+                .map(|lv| (lv.offsets.as_slice(), lv.neighbors.as_slice())),
+            Adjacency::Staging(_) => None,
         }
     }
 
     /// Number of nodes present at `level` (i.e. with `level(n) >= level`).
+    /// O(1) on a frozen graph; an O(n) scan in staging form.
     pub fn nodes_at_level(&self, level: usize) -> usize {
+        if self.is_frozen() {
+            return self.level_nodes.get(level).copied().unwrap_or(0);
+        }
         self.levels.iter().filter(|&&l| l as usize >= level).count()
     }
 
-    /// Total directed edges at `level`.
+    /// Total directed edges at `level`. O(1) on a frozen graph.
     pub fn edges_at_level(&self, level: usize) -> usize {
-        self.adjacency
-            .iter()
-            .map(|lists| lists.get(level).map_or(0, |l| l.len()))
-            .sum()
+        match &self.adjacency {
+            Adjacency::Csr(_) => self.level_edges.get(level).copied().unwrap_or(0),
+            Adjacency::Staging(adj) => adj
+                .iter()
+                .map(|lists| lists.get(level).map_or(0, |l| l.len()))
+                .sum(),
+        }
     }
 
     /// Mean out-degree at `level` over nodes present there.
@@ -122,12 +202,21 @@ impl HnswGraph {
         self.edges_at_level(level) as f64 / n as f64
     }
 
-    // ---- mutation (builder only) -------------------------------------
+    // ---- mutation (builder only, staging form) -----------------------
+
+    fn staging_mut(&mut self) -> &mut Vec<Vec<Vec<u32>>> {
+        match &mut self.adjacency {
+            Adjacency::Staging(s) => s,
+            Adjacency::Csr(_) => {
+                panic!("graph is frozen; builder mutation is only valid before freeze()")
+            }
+        }
+    }
 
     pub(crate) fn add_node(&mut self, level: usize) -> u32 {
         let id = self.levels.len() as u32;
         self.levels.push(level as u8);
-        self.adjacency.push(vec![Vec::new(); level + 1]);
+        self.staging_mut().push(vec![Vec::new(); level + 1]);
         if id == 0 || level > self.max_level {
             self.max_level = level;
             self.entry_point = id;
@@ -137,15 +226,116 @@ impl HnswGraph {
 
     pub(crate) fn set_neighbors(&mut self, node: u32, level: usize, list: Vec<u32>) {
         debug_assert!(list.len() <= self.capacity(level) + 1);
-        self.adjacency[node as usize][level] = list;
+        self.staging_mut()[node as usize][level] = list;
     }
 
     pub(crate) fn push_neighbor(&mut self, node: u32, level: usize, nb: u32) {
-        self.adjacency[node as usize][level].push(nb);
+        self.staging_mut()[node as usize][level].push(nb);
+    }
+
+    /// Compact the staging adjacency into per-level CSR arrays and cache
+    /// the per-level node/edge counts. Idempotent; a no-op when already
+    /// frozen. After this, the builder mutators panic.
+    pub fn freeze(&mut self) {
+        let staging = match &mut self.adjacency {
+            Adjacency::Staging(s) => std::mem::take(s),
+            Adjacency::Csr(_) => return,
+        };
+        let n = self.levels.len();
+        let n_levels = if n == 0 { 0 } else { self.max_level + 1 };
+        let mut csr = Vec::with_capacity(n_levels);
+        let mut level_nodes = vec![0usize; n_levels];
+        let mut level_edges = vec![0usize; n_levels];
+        for l in 0..n_levels {
+            let total: usize = staging
+                .iter()
+                .map(|lists| lists.get(l).map_or(0, |x| x.len()))
+                .sum();
+            debug_assert!(total < u32::MAX as usize, "level {l} edge count overflows u32");
+            let mut offsets = Vec::with_capacity(n + 1);
+            offsets.push(0u32);
+            let mut neighbors = Vec::with_capacity(total);
+            for lists in &staging {
+                if let Some(list) = lists.get(l) {
+                    neighbors.extend_from_slice(list);
+                }
+                offsets.push(neighbors.len() as u32);
+            }
+            level_nodes[l] = self.levels.iter().filter(|&&x| x as usize >= l).count();
+            level_edges[l] = neighbors.len();
+            csr.push(CsrLevel { offsets, neighbors });
+        }
+        self.adjacency = Adjacency::Csr(csr);
+        self.level_nodes = level_nodes;
+        self.level_edges = level_edges;
+    }
+
+    /// Assemble a frozen graph directly from per-level CSR arrays (the v2
+    /// serialization path). Validates structural well-formedness of the
+    /// arrays; semantic checks (id ranges, capacities) are
+    /// [`Self::check_invariants`]'s job.
+    pub(crate) fn from_csr_parts(
+        m: usize,
+        m0: usize,
+        entry_point: u32,
+        max_level: usize,
+        levels: Vec<u8>,
+        parts: Vec<(Vec<u32>, Vec<u32>)>,
+    ) -> crate::Result<Self> {
+        let n = levels.len();
+        let expected_levels = if n == 0 { 0 } else { max_level + 1 };
+        anyhow::ensure!(
+            parts.len() == expected_levels,
+            "expected {expected_levels} CSR levels, got {}",
+            parts.len()
+        );
+        if n > 0 {
+            let actual_max = levels.iter().map(|&l| l as usize).max().unwrap_or(0);
+            anyhow::ensure!(
+                actual_max == max_level,
+                "stored max level {max_level} != observed {actual_max}"
+            );
+            anyhow::ensure!((entry_point as usize) < n, "entry point {entry_point} out of range");
+        }
+        let mut csr = Vec::with_capacity(parts.len());
+        let mut level_nodes = vec![0usize; parts.len()];
+        let mut level_edges = vec![0usize; parts.len()];
+        for (l, (offsets, neighbors)) in parts.into_iter().enumerate() {
+            anyhow::ensure!(
+                offsets.len() == n + 1,
+                "level {l}: {} offsets for {n} nodes",
+                offsets.len()
+            );
+            anyhow::ensure!(offsets[0] == 0, "level {l}: offsets must start at 0");
+            anyhow::ensure!(
+                offsets.windows(2).all(|w| w[0] <= w[1]),
+                "level {l}: offsets not monotonic"
+            );
+            anyhow::ensure!(
+                offsets[n] as usize == neighbors.len(),
+                "level {l}: final offset {} != {} neighbors",
+                offsets[n],
+                neighbors.len()
+            );
+            level_nodes[l] = levels.iter().filter(|&&x| x as usize >= l).count();
+            level_edges[l] = neighbors.len();
+            csr.push(CsrLevel { offsets, neighbors });
+        }
+        Ok(Self {
+            m,
+            m0,
+            entry_point,
+            max_level: if n == 0 { 0 } else { max_level },
+            levels,
+            adjacency: Adjacency::Csr(csr),
+            level_nodes,
+            level_edges,
+        })
     }
 
     /// Verify structural invariants; returns a list of violations (empty =
-    /// healthy). Used by tests and by `phnsw check`.
+    /// healthy). Used by tests and by `phnsw check`. Works on both the
+    /// staging and the frozen form.
     pub fn check_invariants(&self) -> Vec<String> {
         let mut errs = Vec::new();
         let n = self.len() as u32;
@@ -164,13 +354,29 @@ impl HnswGraph {
         }
         for node in 0..n {
             let lvl = self.level(node);
-            if self.adjacency[node as usize].len() != lvl + 1 {
-                errs.push(format!("node {node}: {} lists for level {lvl}", self.adjacency[node as usize].len()));
+            if let Adjacency::Staging(adj) = &self.adjacency {
+                if adj[node as usize].len() != lvl + 1 {
+                    errs.push(format!(
+                        "node {node}: {} lists for level {lvl}",
+                        adj[node as usize].len()
+                    ));
+                }
+            }
+            for l in lvl + 1..=self.max_level {
+                if !self.neighbors(node, l).is_empty() {
+                    errs.push(format!(
+                        "node {node}: non-empty neighbor list at level {l} above its level {lvl}"
+                    ));
+                }
             }
             for l in 0..=lvl {
                 let nbrs = self.neighbors(node, l);
                 if nbrs.len() > self.capacity(l) {
-                    errs.push(format!("node {node} level {l}: degree {} > cap {}", nbrs.len(), self.capacity(l)));
+                    errs.push(format!(
+                        "node {node} level {l}: degree {} > cap {}",
+                        nbrs.len(),
+                        self.capacity(l)
+                    ));
                 }
                 let mut seen = std::collections::HashSet::new();
                 for &nb in nbrs {
@@ -193,6 +399,26 @@ impl HnswGraph {
                 }
             }
         }
+        // The frozen form must agree with a fresh scan of its own arrays.
+        if self.is_frozen() {
+            for l in 0..=self.max_level {
+                let scan_nodes = self.levels.iter().filter(|&&x| x as usize >= l).count();
+                if self.nodes_at_level(l) != scan_nodes {
+                    errs.push(format!(
+                        "level {l}: cached node count {} != scanned {scan_nodes}",
+                        self.nodes_at_level(l)
+                    ));
+                }
+                let scan_edges: usize =
+                    (0..n).map(|v| self.neighbors(v, l).len()).sum();
+                if self.edges_at_level(l) != scan_edges {
+                    errs.push(format!(
+                        "level {l}: cached edge count {} != scanned {scan_edges}",
+                        self.edges_at_level(l)
+                    ));
+                }
+            }
+        }
         errs
     }
 }
@@ -207,6 +433,12 @@ mod tests {
         assert!(g.is_empty());
         assert_eq!(g.len(), 0);
         assert!(g.check_invariants().is_empty());
+        let mut g = g;
+        g.freeze();
+        assert!(g.is_frozen());
+        assert!(g.check_invariants().is_empty());
+        assert_eq!(g.nodes_at_level(0), 0);
+        assert_eq!(g.edges_at_level(0), 0);
     }
 
     #[test]
@@ -233,6 +465,11 @@ mod tests {
         assert_eq!(g.neighbors(a, 1), &[] as &[u32]);
         assert_eq!(g.neighbors(b, 1), &[] as &[u32]);
         assert_eq!(g.neighbors(a, 5), &[] as &[u32]);
+        g.freeze();
+        assert_eq!(g.neighbors(a, 0), &[b]);
+        assert_eq!(g.neighbors(a, 1), &[] as &[u32]);
+        assert_eq!(g.neighbors(b, 1), &[] as &[u32]);
+        assert_eq!(g.neighbors(a, 5), &[] as &[u32]);
     }
 
     #[test]
@@ -255,6 +492,11 @@ mod tests {
         let errs = g.check_invariants();
         assert!(errs.iter().any(|e| e.contains("self-loop")), "{errs:?}");
         assert!(errs.iter().any(|e| e.contains("only reaches level")), "{errs:?}");
+        // Violations survive the freeze — the checker sees the same graph.
+        g.freeze();
+        let errs = g.check_invariants();
+        assert!(errs.iter().any(|e| e.contains("self-loop")), "{errs:?}");
+        assert!(errs.iter().any(|e| e.contains("only reaches level")), "{errs:?}");
     }
 
     #[test]
@@ -272,5 +514,79 @@ mod tests {
         assert_eq!(g.edges_at_level(0), 3);
         assert_eq!(g.edges_at_level(1), 1);
         assert!((g.mean_degree(0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn freeze_preserves_adjacency_and_stats() {
+        let mut g = HnswGraph::empty(4, 8);
+        let a = g.add_node(1);
+        let b = g.add_node(1);
+        let c = g.add_node(0);
+        g.push_neighbor(a, 0, b);
+        g.push_neighbor(a, 0, c);
+        g.push_neighbor(b, 0, a);
+        g.push_neighbor(a, 1, b);
+        let before: Vec<Vec<Vec<u32>>> = (0..g.len() as u32)
+            .map(|n| (0..=g.level(n)).map(|l| g.neighbors(n, l).to_vec()).collect())
+            .collect();
+        let (n0, n1, e0, e1) =
+            (g.nodes_at_level(0), g.nodes_at_level(1), g.edges_at_level(0), g.edges_at_level(1));
+        assert!(!g.is_frozen());
+        g.freeze();
+        assert!(g.is_frozen());
+        for node in 0..g.len() as u32 {
+            for l in 0..=g.level(node) {
+                assert_eq!(g.neighbors(node, l), before[node as usize][l], "node {node} level {l}");
+            }
+        }
+        // Cached O(1) stats agree with the staging-form scans.
+        assert_eq!(g.nodes_at_level(0), n0);
+        assert_eq!(g.nodes_at_level(1), n1);
+        assert_eq!(g.edges_at_level(0), e0);
+        assert_eq!(g.edges_at_level(1), e1);
+        assert_eq!(g.nodes_at_level(7), 0, "beyond max level");
+        assert_eq!(g.edges_at_level(7), 0);
+        assert!(g.check_invariants().is_empty());
+    }
+
+    #[test]
+    fn freeze_is_idempotent() {
+        let mut g = HnswGraph::empty(4, 8);
+        let a = g.add_node(0);
+        let b = g.add_node(0);
+        g.push_neighbor(a, 0, b);
+        g.freeze();
+        let snapshot = g.neighbors(a, 0).to_vec();
+        g.freeze();
+        assert_eq!(g.neighbors(a, 0), snapshot.as_slice());
+    }
+
+    #[test]
+    #[should_panic(expected = "frozen")]
+    fn frozen_graph_rejects_mutation() {
+        let mut g = HnswGraph::empty(4, 8);
+        g.add_node(0);
+        g.freeze();
+        g.add_node(0);
+    }
+
+    #[test]
+    fn from_csr_parts_rejects_malformed_offsets() {
+        // 2 nodes at level 0; offsets array too short.
+        let bad = HnswGraph::from_csr_parts(4, 8, 0, 0, vec![0, 0], vec![(vec![0, 1], vec![1])]);
+        assert!(bad.is_err());
+        // Non-monotonic offsets.
+        let bad =
+            HnswGraph::from_csr_parts(4, 8, 0, 0, vec![0, 0], vec![(vec![0, 2, 1], vec![1])]);
+        assert!(bad.is_err());
+        // Final offset disagrees with the neighbor array length.
+        let bad =
+            HnswGraph::from_csr_parts(4, 8, 0, 0, vec![0, 0], vec![(vec![0, 1, 1], vec![1, 0])]);
+        assert!(bad.is_err());
+        // Well-formed.
+        let ok =
+            HnswGraph::from_csr_parts(4, 8, 0, 0, vec![0, 0], vec![(vec![0, 1, 1], vec![1])]);
+        assert!(ok.is_ok());
+        assert_eq!(ok.unwrap().neighbors(0, 0), &[1]);
     }
 }

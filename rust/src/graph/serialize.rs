@@ -2,7 +2,24 @@
 //! registry has no serde), so benchmark runs can build the index once and
 //! reuse it across invocations.
 //!
-//! Layout (all little-endian):
+//! ## v2 (current, magic `HNS2`)
+//!
+//! A direct image of the frozen CSR storage — load is a straight read
+//! into the per-level flat arrays:
+//! ```text
+//!   magic "HNS2"  u32 m  u32 m0  u32 entry  u32 max_level  u64 n
+//!   n × u8 level
+//!   u32 n_levels                      (0 for the empty graph)
+//!   per level 0..n_levels:
+//!     u64 n_edges
+//!     n_edges × u32 neighbor
+//!     (n + 1) × u32 offset
+//! ```
+//!
+//! ## v1 (legacy, magic `HNS1`)
+//!
+//! Per-node, per-level framed lists; still readable (and frozen into CSR
+//! on load) so caches written before the CSR refactor keep working:
 //! ```text
 //!   magic "HNS1"  u32 m  u32 m0  u32 entry  u32 max_level  u64 n
 //!   n × u8 level
@@ -14,16 +31,73 @@ use anyhow::{bail, ensure, Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-/// Serialize `graph` to `path`.
+fn write_u32(w: &mut impl Write, v: u32) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+/// Serialize `graph` to `path` in the v2 (CSR) format. Works on both the
+/// staging and the frozen form — the CSR arrays are derived through the
+/// public accessors.
 pub fn save(graph: &HnswGraph, path: impl AsRef<Path>) -> Result<()> {
     let f = std::fs::File::create(path.as_ref())
         .with_context(|| format!("create {}", path.as_ref().display()))?;
     let mut w = BufWriter::new(f);
+    let n = graph.len();
+    w.write_all(b"HNS2")?;
+    write_u32(&mut w, graph.m() as u32)?;
+    write_u32(&mut w, graph.m0() as u32)?;
+    write_u32(&mut w, graph.entry_point())?;
+    write_u32(&mut w, graph.max_level() as u32)?;
+    w.write_all(&(n as u64).to_le_bytes())?;
+    for node in 0..n as u32 {
+        w.write_all(&[graph.level(node) as u8])?;
+    }
+    let n_levels = if graph.is_empty() { 0 } else { graph.max_level() + 1 };
+    write_u32(&mut w, n_levels as u32)?;
+    for l in 0..n_levels {
+        if let Some((offsets, neighbors)) = graph.csr_level(l) {
+            // Frozen: the arrays already exist; write them verbatim.
+            w.write_all(&(neighbors.len() as u64).to_le_bytes())?;
+            for &nb in neighbors {
+                write_u32(&mut w, nb)?;
+            }
+            for &off in offsets {
+                write_u32(&mut w, off)?;
+            }
+        } else {
+            // Staging: derive the CSR image through the accessors.
+            let mut offsets = Vec::with_capacity(n + 1);
+            offsets.push(0u32);
+            let mut flat: Vec<u32> = Vec::new();
+            for node in 0..n as u32 {
+                flat.extend_from_slice(graph.neighbors(node, l));
+                offsets.push(flat.len() as u32);
+            }
+            w.write_all(&(flat.len() as u64).to_le_bytes())?;
+            for &nb in &flat {
+                write_u32(&mut w, nb)?;
+            }
+            for &off in &offsets {
+                write_u32(&mut w, off)?;
+            }
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Serialize `graph` in the legacy v1 per-node framed format. Kept so
+/// migration coverage can generate old-format files; new code should use
+/// [`save`].
+pub fn save_v1(graph: &HnswGraph, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("create {}", path.as_ref().display()))?;
+    let mut w = BufWriter::new(f);
     w.write_all(b"HNS1")?;
-    w.write_all(&(graph.m() as u32).to_le_bytes())?;
-    w.write_all(&(graph.m0() as u32).to_le_bytes())?;
-    w.write_all(&graph.entry_point().to_le_bytes())?;
-    w.write_all(&(graph.max_level() as u32).to_le_bytes())?;
+    write_u32(&mut w, graph.m() as u32)?;
+    write_u32(&mut w, graph.m0() as u32)?;
+    write_u32(&mut w, graph.entry_point())?;
+    write_u32(&mut w, graph.max_level() as u32)?;
     w.write_all(&(graph.len() as u64).to_le_bytes())?;
     for n in 0..graph.len() as u32 {
         w.write_all(&[graph.level(n) as u8])?;
@@ -31,9 +105,9 @@ pub fn save(graph: &HnswGraph, path: impl AsRef<Path>) -> Result<()> {
     for n in 0..graph.len() as u32 {
         for l in 0..=graph.level(n) {
             let nbrs = graph.neighbors(n, l);
-            w.write_all(&(nbrs.len() as u32).to_le_bytes())?;
+            write_u32(&mut w, nbrs.len() as u32)?;
             for &nb in nbrs {
-                w.write_all(&nb.to_le_bytes())?;
+                write_u32(&mut w, nb)?;
             }
         }
     }
@@ -47,44 +121,117 @@ fn read_u32(r: &mut impl Read) -> std::io::Result<u32> {
     Ok(u32::from_le_bytes(b))
 }
 
-/// Load a graph previously written by [`save`].
+fn read_u64(r: &mut impl Read) -> std::io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Shared header fields of both formats (everything after the magic).
+struct Header {
+    m: usize,
+    m0: usize,
+    entry: u32,
+    max_level: usize,
+    levels: Vec<u8>,
+}
+
+/// `file_len` bounds every untrusted count in the header: a field that
+/// implies more payload bytes than the file holds is corruption, and is
+/// rejected *before* any allocation sized from it — a bit-flipped cache
+/// must surface as `Err` (so callers rebuild), never as an OOM abort.
+fn read_header(r: &mut impl Read, file_len: u64) -> Result<Header> {
+    let m = read_u32(r)? as usize;
+    let m0 = read_u32(r)? as usize;
+    let entry = read_u32(r)?;
+    let max_level = read_u32(r)? as usize;
+    let n = read_u64(r)?;
+    ensure!(n < u32::MAX as u64, "graph too large");
+    ensure!(n <= file_len, "corrupt header: {n} nodes cannot fit in {file_len} bytes");
+    let n = n as usize;
+    ensure!(max_level <= super::MAX_LEVEL, "implausible max level {max_level}");
+    ensure!(m >= 1 && m0 >= 1, "corrupt header: zero neighbor budget");
+    ensure!(m <= 1 << 16 && m0 <= 1 << 16, "implausible neighbor budget m={m} m0={m0}");
+    let mut levels = vec![0u8; n];
+    r.read_exact(&mut levels)?;
+    Ok(Header { m, m0, entry, max_level, levels })
+}
+
+/// Load a graph previously written by [`save`] (v2) or the legacy v1
+/// writer. Always returns a frozen (CSR) graph.
 pub fn load(path: impl AsRef<Path>) -> Result<HnswGraph> {
     let f = std::fs::File::open(path.as_ref())
         .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let file_len = f
+        .metadata()
+        .with_context(|| format!("stat {}", path.as_ref().display()))?
+        .len();
     let mut r = BufReader::new(f);
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
-    if &magic != b"HNS1" {
-        bail!("bad graph magic {magic:?}");
+    match &magic {
+        b"HNS2" => load_v2(&mut r, file_len),
+        b"HNS1" => load_v1(&mut r, file_len),
+        other => bail!("bad graph magic {other:?}"),
     }
-    let m = read_u32(&mut r)? as usize;
-    let m0 = read_u32(&mut r)? as usize;
-    let entry = read_u32(&mut r)?;
-    let max_level = read_u32(&mut r)? as usize;
-    let mut b8 = [0u8; 8];
-    r.read_exact(&mut b8)?;
-    let n = u64::from_le_bytes(b8) as usize;
-    ensure!(n < u32::MAX as usize, "graph too large");
+}
 
-    let mut levels = vec![0u8; n];
-    r.read_exact(&mut levels)?;
+fn load_v2(r: &mut impl Read, file_len: u64) -> Result<HnswGraph> {
+    let h = read_header(r, file_len)?;
+    let n = h.levels.len();
+    let n_levels = read_u32(r)? as usize;
+    let expected = if n == 0 { 0 } else { h.max_level + 1 };
+    ensure!(n_levels == expected, "v2: {n_levels} CSR levels for max level {}", h.max_level);
+    let mut parts = Vec::with_capacity(n_levels);
+    for l in 0..n_levels {
+        let n_edges = read_u64(r)?;
+        ensure!(
+            n_edges <= n as u64 * (h.m0 as u64 + 1) && n_edges * 4 <= file_len,
+            "v2 level {l}: implausible edge count {n_edges}"
+        );
+        let n_edges = n_edges as usize;
+        let mut neighbors = Vec::with_capacity(n_edges);
+        for _ in 0..n_edges {
+            neighbors.push(read_u32(r)?);
+        }
+        let mut offsets = Vec::with_capacity(n + 1);
+        for _ in 0..=n {
+            offsets.push(read_u32(r)?);
+        }
+        parts.push((offsets, neighbors));
+    }
+    let graph = HnswGraph::from_csr_parts(h.m, h.m0, h.entry, h.max_level, h.levels, parts)?;
+    finish_load(graph, h.entry, h.max_level)
+}
 
-    let mut graph = HnswGraph::empty(m, m0);
-    for &lvl in &levels {
+fn load_v1(r: &mut impl Read, file_len: u64) -> Result<HnswGraph> {
+    let h = read_header(r, file_len)?;
+    let n = h.levels.len();
+    let mut graph = HnswGraph::empty(h.m, h.m0);
+    for &lvl in &h.levels {
         graph.add_node(lvl as usize);
     }
     for node in 0..n as u32 {
-        for l in 0..=(levels[node as usize] as usize) {
-            let len = read_u32(&mut r)? as usize;
-            ensure!(len <= m0 + 1, "implausible neighbor count {len}");
+        for l in 0..=(h.levels[node as usize] as usize) {
+            let len = read_u32(r)? as usize;
+            ensure!(len <= h.m0 + 1, "implausible neighbor count {len}");
             let mut list = Vec::with_capacity(len);
             for _ in 0..len {
-                list.push(read_u32(&mut r)?);
+                list.push(read_u32(r)?);
             }
             graph.set_neighbors(node, l, list);
         }
     }
-    // add_node recomputed entry/max_level from levels; cross-check header.
+    graph.freeze();
+    finish_load(graph, h.entry, h.max_level)
+}
+
+/// Cross-check the reconstructed graph against the stored header.
+fn finish_load(graph: HnswGraph, entry: u32, max_level: usize) -> Result<HnswGraph> {
+    if graph.is_empty() {
+        return Ok(graph);
+    }
+    ensure!((entry as usize) < graph.len(), "stored entry point out of range");
     ensure!(graph.max_level() == max_level, "max level mismatch");
     ensure!(graph.level(entry) == max_level, "stored entry point not on top level");
     Ok(graph)
@@ -94,6 +241,7 @@ pub fn load(path: impl AsRef<Path>) -> Result<HnswGraph> {
 mod tests {
     use super::*;
     use crate::dataset::synthetic::{generate, SyntheticConfig};
+    use crate::dataset::VectorSet;
     use crate::graph::build::{build, BuildConfig};
 
     fn tmp(name: &str) -> std::path::PathBuf {
@@ -102,25 +250,82 @@ mod tests {
         p
     }
 
+    fn build_graph(n: usize) -> HnswGraph {
+        let cfg = SyntheticConfig { n_base: n, n_queries: 1, ..SyntheticConfig::tiny() };
+        let (base, _) = generate(&cfg);
+        build(&base, &BuildConfig { m: 6, ef_construction: 32, ..Default::default() })
+    }
+
+    fn assert_graphs_equal(a: &HnswGraph, b: &HnswGraph) {
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.entry_point(), b.entry_point());
+        assert_eq!(a.max_level(), b.max_level());
+        assert_eq!(a.m(), b.m());
+        assert_eq!(a.m0(), b.m0());
+        for n in 0..a.len() as u32 {
+            assert_eq!(a.level(n), b.level(n));
+            for l in 0..=a.level(n) {
+                assert_eq!(a.neighbors(n, l), b.neighbors(n, l), "node {n} level {l}");
+            }
+        }
+    }
+
     #[test]
     fn roundtrip_preserves_structure() {
-        let cfg = SyntheticConfig { n_base: 400, n_queries: 1, ..SyntheticConfig::tiny() };
-        let (base, _) = generate(&cfg);
-        let g = build(&base, &BuildConfig { m: 6, ef_construction: 32, ..Default::default() });
+        let g = build_graph(400);
         let p = tmp("roundtrip.hnsw");
         save(&g, &p).unwrap();
         let back = load(&p).unwrap();
-        assert_eq!(g.len(), back.len());
-        assert_eq!(g.entry_point(), back.entry_point());
-        assert_eq!(g.max_level(), back.max_level());
-        assert_eq!(g.m(), back.m());
-        assert_eq!(g.m0(), back.m0());
-        for n in 0..g.len() as u32 {
-            assert_eq!(g.level(n), back.level(n));
-            for l in 0..=g.level(n) {
-                assert_eq!(g.neighbors(n, l), back.neighbors(n, l));
-            }
-        }
+        assert!(back.is_frozen());
+        assert_graphs_equal(&g, &back);
+        assert!(back.check_invariants().is_empty());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn v1_files_still_load() {
+        // A cache written before the CSR refactor must keep loading, and
+        // must agree neighbor-for-neighbor with the v2 image.
+        let g = build_graph(300);
+        let p1 = tmp("legacy.hnsw");
+        let p2 = tmp("modern.hnsw");
+        save_v1(&g, &p1).unwrap();
+        save(&g, &p2).unwrap();
+        let from_v1 = load(&p1).unwrap();
+        let from_v2 = load(&p2).unwrap();
+        assert!(from_v1.is_frozen());
+        assert_graphs_equal(&g, &from_v1);
+        assert_graphs_equal(&from_v1, &from_v2);
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+    }
+
+    #[test]
+    fn empty_graph_roundtrips() {
+        let g = build(&VectorSet::new(4), &BuildConfig::default());
+        assert!(g.is_empty());
+        let p = tmp("empty.hnsw");
+        save(&g, &p).unwrap();
+        let back = load(&p).unwrap();
+        assert!(back.is_empty());
+        assert!(back.is_frozen());
+        assert_eq!(back.m(), g.m());
+        assert_eq!(back.m0(), g.m0());
+        assert!(back.check_invariants().is_empty());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn single_node_graph_roundtrips() {
+        let mut one = VectorSet::new(4);
+        one.push(&[1.0, 2.0, 3.0, 4.0]);
+        let g = build(&one, &BuildConfig::default());
+        assert_eq!(g.len(), 1);
+        let p = tmp("single.hnsw");
+        save(&g, &p).unwrap();
+        let back = load(&p).unwrap();
+        assert_graphs_equal(&g, &back);
+        assert!(back.check_invariants().is_empty());
         std::fs::remove_file(&p).ok();
     }
 
@@ -133,15 +338,42 @@ mod tests {
     }
 
     #[test]
-    fn load_rejects_truncated_file() {
-        let cfg = SyntheticConfig { n_base: 100, n_queries: 1, ..SyntheticConfig::tiny() };
-        let (base, _) = generate(&cfg);
-        let g = build(&base, &BuildConfig { m: 4, ef_construction: 16, ..Default::default() });
-        let p = tmp("trunc.hnsw");
+    fn load_rejects_implausible_header_counts() {
+        // A bit-flipped cache must come back as Err (so callers rebuild),
+        // not abort on a multi-gigabyte allocation sized from the header.
+        let g = build_graph(50);
+        let p = tmp("corrupt.hnsw");
         save(&g, &p).unwrap();
-        let bytes = std::fs::read(&p).unwrap();
-        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
-        assert!(load(&p).is_err());
+        let mut bytes = std::fs::read(&p).unwrap();
+        // Blow up the stored M0 (bytes 8..12 after the magic+m fields).
+        bytes[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load(&p).is_err(), "absurd M0 must be rejected");
+
+        save(&g, &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // Blow up the node count (u64 at bytes 20..28): far larger than
+        // the file itself, so it must fail the file-length bound.
+        bytes[20..28].copy_from_slice(&(u32::MAX as u64 - 1).to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load(&p).is_err(), "node count exceeding the file must be rejected");
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn load_rejects_truncated_file() {
+        let g = build_graph(100);
+        let writers: [(&str, &dyn Fn(&HnswGraph, &std::path::Path) -> Result<()>); 2] = [
+            ("trunc2.hnsw", &|g, p| save(g, p)),
+            ("trunc1.hnsw", &|g, p| save_v1(g, p)),
+        ];
+        for (name, writer) in writers {
+            let p = tmp(name);
+            writer(&g, &p).unwrap();
+            let bytes = std::fs::read(&p).unwrap();
+            std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+            assert!(load(&p).is_err(), "{name} must fail to load when truncated");
+            std::fs::remove_file(&p).ok();
+        }
     }
 }

@@ -1,0 +1,249 @@
+//! The shared beam-search core.
+//!
+//! Algorithm 2 of [2] (plain HNSW) and Algorithm 1 of the paper (pHNSW)
+//! run the *same* per-layer loop: pop the nearest unexpanded candidate,
+//! stop once it cannot improve the result list F, fetch its neighbor
+//! list, score some subset of the neighbors, and admit the improving ones
+//! into both the candidate heap C and F. The two engines differ only in
+//! the *scoring* step — plain HNSW pays one high-dimensional distance per
+//! unvisited neighbor, pHNSW filters all neighbors in PCA space first and
+//! re-ranks only the top-k survivors.
+//!
+//! [`beam_search_layer`] owns the loop, the C/F bookkeeping, and the
+//! per-hop trace emission; a [`NeighborScorer`] plugs in the
+//! engine-specific scoring. The graph builder reuses the same core with
+//! the plain scorer and no trace, so the loop exists exactly once.
+
+use super::stats::{HopEvent, SearchTrace};
+use super::visited::VisitedSet;
+use crate::dataset::gt::TopK;
+use crate::dataset::VectorSet;
+use crate::graph::HnswGraph;
+use crate::search::dist::l2_sq;
+use std::collections::BinaryHeap;
+
+/// Min-heap entry over (dist, id) — `BinaryHeap` is a max-heap, so the
+/// ordering is inverted. Distances compare via [`f32::total_cmp`], which
+/// orders NaN after every real value instead of panicking: a NaN query
+/// (or corrupt vector) degrades the result instead of crashing the
+/// server.
+pub(crate) struct MinDist(pub f32, pub u32);
+
+impl PartialEq for MinDist {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for MinDist {}
+impl PartialOrd for MinDist {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for MinDist {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other.0.total_cmp(&self.0).then_with(|| other.1.cmp(&self.1))
+    }
+}
+
+/// Engine-specific counters of one hop, folded into the [`HopEvent`].
+pub(crate) struct HopCounters {
+    /// Low-dimensional (PCA-space) distance computations.
+    pub lowdim: u32,
+    /// kSort.L invocations (1 if a top-k filter ran).
+    pub ksort: u32,
+    /// High-dimensional distance computations.
+    pub highdim: u32,
+    /// Visited-list lookups performed.
+    pub visited_checks: u32,
+}
+
+/// The C (candidate heap) + F (result list) pair of the beam loop, with
+/// the per-hop insert/removal counters the trace records.
+pub(crate) struct BeamState {
+    candidates: BinaryHeap<MinDist>,
+    found: TopK,
+    ef: usize,
+    inserts: u32,
+    removals: u32,
+}
+
+impl BeamState {
+    fn new(ef: usize) -> Self {
+        Self {
+            candidates: BinaryHeap::new(),
+            found: TopK::new(ef),
+            ef,
+            inserts: 0,
+            removals: 0,
+        }
+    }
+
+    /// The admission rule shared by every engine (lines 18–23 of
+    /// Algorithm 1, and the inner update of Algorithm 2): a scored
+    /// neighbor enters C and F iff it improves the current worst of F or
+    /// F is not yet full. Returns whether the neighbor was admitted.
+    #[inline]
+    pub fn admit(&mut self, dist: f32, id: u32) -> bool {
+        if dist < self.found.threshold() || self.found.len() < self.ef {
+            self.candidates.push(MinDist(dist, id));
+            if self.found.len() == self.ef {
+                self.removals += 1; // RMF: worst of F evicted
+            }
+            self.found.offer(dist, id);
+            self.inserts += 1;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Engine-specific neighbor scoring plugged into [`beam_search_layer`].
+pub(crate) trait NeighborScorer {
+    /// Reset any per-layer state before a layer's beam loop starts.
+    fn begin_layer(&mut self) {}
+
+    /// Expand one hop: score `nbrs`, admit the improving ones into `beam`
+    /// via [`BeamState::admit`], and report what the hop cost.
+    fn expand(
+        &mut self,
+        nbrs: &[u32],
+        visited: &mut VisitedSet,
+        beam: &mut BeamState,
+    ) -> HopCounters;
+}
+
+/// Beam search at one layer. `entry` carries (high-dim dist, id) pairs,
+/// ascending; returns up to `ef` nearest by high-dim distance, ascending.
+pub(crate) fn beam_search_layer<S: NeighborScorer>(
+    graph: &HnswGraph,
+    scorer: &mut S,
+    entry: &[(f32, u32)],
+    ef: usize,
+    layer: usize,
+    visited: &mut VisitedSet,
+    mut trace: Option<&mut SearchTrace>,
+) -> Vec<(f32, u32)> {
+    visited.clear();
+    scorer.begin_layer();
+    let mut beam = BeamState::new(ef);
+    for &(d, id) in entry {
+        visited.insert(id);
+        beam.candidates.push(MinDist(d, id));
+        beam.found.offer(d, id);
+    }
+    while let Some(MinDist(d, c)) = beam.candidates.pop() {
+        // Stop when the nearest remaining candidate cannot improve F
+        // (line 7 of Algorithm 1 / line 4 of Algorithm 2).
+        if d > beam.found.threshold() {
+            break;
+        }
+        let nbrs = graph.neighbors(c, layer);
+        beam.inserts = 0;
+        beam.removals = 0;
+        let counters = scorer.expand(nbrs, visited, &mut beam);
+        if let Some(t) = trace.as_deref_mut() {
+            t.push(HopEvent {
+                layer: layer as u8,
+                node: c,
+                n_neighbors: nbrs.len() as u32,
+                n_lowdim_dists: counters.lowdim,
+                n_ksort: counters.ksort,
+                n_highdim_dists: counters.highdim,
+                n_visited_checks: counters.visited_checks,
+                n_f_inserts: beam.inserts,
+                n_f_removals: beam.removals,
+            });
+        }
+    }
+    beam.found.into_sorted()
+}
+
+/// Plain HNSW scoring: every unvisited neighbor pays one
+/// high-dimensional distance and one raw-data fetch — exactly the
+/// traffic pHNSW's low-dim filter removes. Also used by the graph
+/// builder's efConstruction beam search.
+pub(crate) struct HighDimScorer<'a> {
+    q: &'a [f32],
+    data: &'a VectorSet,
+}
+
+impl<'a> HighDimScorer<'a> {
+    pub fn new(q: &'a [f32], data: &'a VectorSet) -> Self {
+        Self { q, data }
+    }
+}
+
+impl NeighborScorer for HighDimScorer<'_> {
+    fn expand(
+        &mut self,
+        nbrs: &[u32],
+        visited: &mut VisitedSet,
+        beam: &mut BeamState,
+    ) -> HopCounters {
+        let mut highdim = 0u32;
+        for &nb in nbrs {
+            if visited.insert(nb) {
+                let dn = l2_sq(self.q, self.data.row(nb as usize));
+                highdim += 1;
+                beam.admit(dn, nb);
+            }
+        }
+        HopCounters { lowdim: 0, ksort: 0, highdim, visited_checks: nbrs.len() as u32 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mindist_orders_as_min_heap() {
+        let mut h = BinaryHeap::new();
+        h.push(MinDist(3.0, 1));
+        h.push(MinDist(1.0, 2));
+        h.push(MinDist(2.0, 3));
+        assert_eq!(h.pop().unwrap().1, 2, "smallest distance pops first");
+        assert_eq!(h.pop().unwrap().1, 3);
+        assert_eq!(h.pop().unwrap().1, 1);
+    }
+
+    #[test]
+    fn mindist_ties_break_by_id() {
+        let mut h = BinaryHeap::new();
+        h.push(MinDist(1.0, 9));
+        h.push(MinDist(1.0, 4));
+        assert_eq!(h.pop().unwrap().1, 4, "equal distances pop lower id first");
+    }
+
+    #[test]
+    fn mindist_tolerates_nan_without_panicking() {
+        // The regression the total_cmp fix targets: a NaN distance used to
+        // panic inside partial_cmp().unwrap(). It must instead order after
+        // every finite distance.
+        let mut h = BinaryHeap::new();
+        h.push(MinDist(f32::NAN, 1));
+        h.push(MinDist(0.5, 2));
+        h.push(MinDist(f32::INFINITY, 3));
+        assert_eq!(h.pop().unwrap().1, 2);
+        assert_eq!(h.pop().unwrap().1, 3, "inf pops before NaN");
+        assert_eq!(h.pop().unwrap().1, 1);
+    }
+
+    #[test]
+    fn admit_respects_ef_and_counts_evictions() {
+        let mut beam = BeamState::new(2);
+        assert!(beam.admit(5.0, 0));
+        assert!(beam.admit(3.0, 1));
+        assert_eq!(beam.inserts, 2);
+        assert_eq!(beam.removals, 0);
+        // Worse than the current worst and F full → rejected.
+        assert!(!beam.admit(9.0, 2));
+        // Improvement evicts the worst.
+        assert!(beam.admit(1.0, 3));
+        assert_eq!(beam.removals, 1);
+        let sorted = beam.found.into_sorted();
+        assert_eq!(sorted.iter().map(|p| p.1).collect::<Vec<_>>(), vec![3, 1]);
+    }
+}

@@ -3,35 +3,19 @@
 //! one *high-dimensional* distance computation and one high-dim raw-data
 //! fetch: exactly the traffic pHNSW's low-dim filter removes.
 
+use super::beam::{beam_search_layer, HighDimScorer};
 use super::config::SearchParams;
 use super::dist::l2_sq;
-use super::stats::{HopEvent, SearchStats, SearchTrace};
+use super::stats::{SearchStats, SearchTrace};
 use super::visited::VisitedSet;
 use super::{AnnEngine, Neighbor};
-use crate::dataset::gt::TopK;
 use crate::dataset::VectorSet;
 use crate::graph::HnswGraph;
-use std::collections::BinaryHeap;
 use std::sync::{Arc, Mutex};
 
 /// Reusable per-query scratch (pooled so `search(&self)` stays lock-cheap).
 struct Scratch {
     visited: VisitedSet,
-}
-
-/// Min-heap entry (BinaryHeap is a max-heap; invert the ordering).
-#[derive(PartialEq)]
-pub(crate) struct MinDist(pub f32, pub u32);
-impl Eq for MinDist {}
-impl PartialOrd for MinDist {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for MinDist {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        other.0.partial_cmp(&self.0).unwrap().then_with(|| other.1.cmp(&self.1))
-    }
 }
 
 /// Standard HNSW searcher over a built graph.
@@ -67,7 +51,8 @@ impl HnswSearcher {
     }
 
     /// Beam search at one layer; `entry` must be sorted ascending.
-    /// Returns up to `ef` nearest, ascending.
+    /// Returns up to `ef` nearest, ascending. Delegates to the shared
+    /// beam core with the plain high-dim scorer.
     fn search_layer(
         &self,
         q: &[f32],
@@ -77,54 +62,8 @@ impl HnswSearcher {
         visited: &mut VisitedSet,
         trace: Option<&mut SearchTrace>,
     ) -> Vec<(f32, u32)> {
-        let mut trace = trace;
-        visited.clear();
-        let mut candidates = BinaryHeap::new();
-        let mut found = TopK::new(ef);
-        let mut f_len = 0usize;
-        for &(d, id) in entry {
-            visited.insert(id);
-            candidates.push(MinDist(d, id));
-            found.offer(d, id);
-            f_len = (f_len + 1).min(ef);
-        }
-        while let Some(MinDist(d, c)) = candidates.pop() {
-            if d > found.threshold() {
-                break;
-            }
-            let nbrs = self.graph.neighbors(c, layer);
-            let mut highdim = 0u32;
-            let mut inserts = 0u32;
-            let mut removals = 0u32;
-            for &nb in nbrs {
-                if visited.insert(nb) {
-                    let dn = l2_sq(q, self.data.row(nb as usize));
-                    highdim += 1;
-                    if dn < found.threshold() || found.len() < ef {
-                        candidates.push(MinDist(dn, nb));
-                        if found.len() == ef {
-                            removals += 1; // RMF: worst of F evicted
-                        }
-                        found.offer(dn, nb);
-                        inserts += 1;
-                    }
-                }
-            }
-            if let Some(t) = trace.as_deref_mut() {
-                t.push(HopEvent {
-                    layer: layer as u8,
-                    node: c,
-                    n_neighbors: nbrs.len() as u32,
-                    n_lowdim_dists: 0,
-                    n_ksort: 0,
-                    n_highdim_dists: highdim,
-                    n_visited_checks: nbrs.len() as u32,
-                    n_f_inserts: inserts,
-                    n_f_removals: removals,
-                });
-            }
-        }
-        found.into_sorted()
+        let mut scorer = HighDimScorer::new(q, &self.data);
+        beam_search_layer(&self.graph, &mut scorer, entry, ef, layer, visited, trace)
     }
 
     /// Full multi-layer search, optionally tracing.
@@ -178,6 +117,10 @@ impl AnnEngine for HnswSearcher {
     fn search_with_stats(&self, query: &[f32]) -> (Vec<Neighbor>, SearchStats) {
         let (r, t) = self.search_full_trace(query);
         (r, t.stats())
+    }
+
+    fn search_batch(&self, queries: &[&[f32]]) -> Vec<Vec<Neighbor>> {
+        super::parallel_search_batch(self, queries)
     }
 }
 
@@ -267,5 +210,34 @@ mod tests {
         for _ in 0..5 {
             assert_eq!(s.search(queries.row(0)), first, "results must be deterministic");
         }
+    }
+
+    #[test]
+    fn nan_query_does_not_panic() {
+        // Regression for the MinDist NaN panic: partial_cmp().unwrap()
+        // aborted the search thread on any NaN distance. total_cmp orders
+        // NaN after every finite value instead.
+        let (base, _, g) = setup(500);
+        let s = HnswSearcher::new(g, base.clone(), SearchParams::default());
+        let mut q = base.row(0).to_vec();
+        q[3] = f32::NAN;
+        let res = s.search(&q);
+        assert!(res.len() <= s.params().ef(0), "NaN query returns without panicking");
+        // The searcher must stay healthy for subsequent well-formed queries.
+        let ok = s.search(base.row(1));
+        assert_eq!(ok[0].id, 1);
+    }
+
+    #[test]
+    fn search_batch_matches_sequential_bitwise() {
+        let (base, queries, g) = setup(1000);
+        let s = HnswSearcher::new(g, base, SearchParams::default());
+        let qrefs: Vec<&[f32]> = (0..30).map(|i| queries.row(i)).collect();
+        let sequential: Vec<Vec<Neighbor>> = qrefs.iter().map(|q| s.search(q)).collect();
+        let batched = s.search_batch(&qrefs);
+        assert_eq!(batched, sequential, "batched results must be bitwise identical");
+        // Single-element and empty batches take the sequential path.
+        assert_eq!(s.search_batch(&qrefs[..1]), sequential[..1].to_vec());
+        assert!(s.search_batch(&[]).is_empty());
     }
 }

@@ -5,11 +5,16 @@
 //! * [`phnsw`] — the paper's Algorithm 1: per-hop candidate filtering in
 //!   PCA space with per-layer top-k, high-dim distances only for the k
 //!   survivors.
+//! * `beam` (crate-private) — the single beam-search loop both engines
+//!   (and the graph builder) delegate to, parameterized over a
+//!   neighbor-scoring strategy; tracing and C/F bookkeeping live there
+//!   exactly once.
 //!
 //! Both engines produce a [`stats::SearchStats`] (and optionally a full
 //! [`stats::SearchTrace`]) so the hardware timing/energy simulator can
 //! replay exactly the memory traffic and compute the search generated.
 
+pub(crate) mod beam;
 pub mod config;
 pub mod dist;
 pub mod hnsw;
@@ -40,4 +45,51 @@ pub trait AnnEngine: Send + Sync {
     fn search(&self, query: &[f32]) -> Vec<Neighbor>;
     /// Like [`Self::search`] but also returns instruction/traffic statistics.
     fn search_with_stats(&self, query: &[f32]) -> (Vec<Neighbor>, SearchStats);
+    /// Search a whole batch, one result vector per query, in order.
+    ///
+    /// The default runs the queries sequentially. Engines override it
+    /// with data-parallel execution; every override must return results
+    /// bitwise identical to sequential [`Self::search`] calls — the
+    /// coordinator's batch dispatch relies on that equivalence.
+    fn search_batch(&self, queries: &[&[f32]]) -> Vec<Vec<Neighbor>> {
+        queries.iter().map(|q| self.search(q)).collect()
+    }
+}
+
+/// Scratch-pooled data-parallel batch execution shared by the engine
+/// overrides: shard the batch over `std::thread::scope` workers (the
+/// offline registry has no tokio/rayon — DESIGN.md §5) and let each
+/// worker run plain `search`, which draws per-query scratch from the
+/// engine's pool. Search is deterministic per query, so sharding cannot
+/// change results.
+pub(crate) fn parallel_search_batch<E>(engine: &E, queries: &[&[f32]]) -> Vec<Vec<Neighbor>>
+where
+    E: AnnEngine + ?Sized,
+{
+    // Scoped threads are spawned per batch, so tiny batches are cheaper
+    // run inline, and large ones get at most one worker per
+    // MIN_QUERIES_PER_WORKER queries — several server workers may be
+    // dispatching concurrently, and unbounded fan-out would oversubscribe
+    // the cores they share.
+    const MIN_QUERIES_PER_WORKER: usize = 4;
+    if queries.len() < 2 * MIN_QUERIES_PER_WORKER {
+        return queries.iter().map(|q| engine.search(q)).collect();
+    }
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(queries.len() / MIN_QUERIES_PER_WORKER);
+    let chunk = queries.len().div_ceil(workers);
+    let mut out: Vec<Vec<Neighbor>> = Vec::new();
+    out.resize_with(queries.len(), Vec::new);
+    std::thread::scope(|s| {
+        for (qs, slots) in queries.chunks(chunk).zip(out.chunks_mut(chunk)) {
+            s.spawn(move || {
+                for (q, slot) in qs.iter().zip(slots.iter_mut()) {
+                    *slot = engine.search(q);
+                }
+            });
+        }
+    });
+    out
 }

@@ -17,17 +17,16 @@
 //!   faithful behaviour and is what the hardware's dataflow (§IV-C step 5)
 //!   implements.
 
+use super::beam::{beam_search_layer, BeamState, HopCounters, NeighborScorer};
 use super::config::PhnswParams;
 use super::dist::l2_sq;
-use super::hnsw::MinDist;
-use super::stats::{HopEvent, SearchStats, SearchTrace};
+use super::stats::{SearchStats, SearchTrace};
 use super::visited::VisitedSet;
 use super::{AnnEngine, Neighbor};
 use crate::dataset::gt::TopK;
 use crate::dataset::VectorSet;
 use crate::graph::HnswGraph;
 use crate::pca::PcaModel;
-use std::collections::BinaryHeap;
 use std::sync::{Arc, Mutex};
 
 /// Per-query scratch state, pooled across queries.
@@ -58,6 +57,80 @@ pub struct PhnswSearcher {
 /// Round `dim` up to the SIMD lane multiple used by `dist::l2_sq`.
 fn pad_dim(dim: usize) -> usize {
     dim.div_ceil(8) * 8
+}
+
+/// Algorithm 1's per-hop scoring, plugged into the shared beam core:
+/// low-dim filter over *all* neighbors (Dist.L, lines 9–13), top-k
+/// selection (kSort.L), then high-dim rerank of the ≤ k survivors
+/// (Dist.H, lines 14–23). The visited check happens *after* the filter
+/// (line 16), exactly as listed.
+struct PcaFilterScorer<'a> {
+    /// Query, original space.
+    q: &'a [f32],
+    /// Projected query, zero-padded to the filter table's SIMD width.
+    q_pca: &'a [f32],
+    data_high: &'a VectorSet,
+    low_padded: &'a VectorSet,
+    /// Filter size at the current layer (set per layer by the caller).
+    k: usize,
+    /// Survivors the high-dim check admitted during the previous hop;
+    /// their furthest low-dim distance is the f_pca prune threshold
+    /// (line 5). Empty → infinite threshold (no pruning), which is safe.
+    cpca_prev: Vec<(f32, u32)>,
+}
+
+impl NeighborScorer for PcaFilterScorer<'_> {
+    fn begin_layer(&mut self) {
+        self.cpca_prev.clear();
+    }
+
+    fn expand(
+        &mut self,
+        nbrs: &[u32],
+        visited: &mut VisitedSet,
+        beam: &mut BeamState,
+    ) -> HopCounters {
+        // line 5: f_pca ← furthest element of C_pca to q_pca (∞ if empty).
+        let f_pca = if self.cpca_prev.is_empty() {
+            f32::INFINITY
+        } else {
+            self.cpca_prev.iter().map(|&(d, _)| d).fold(f32::NEG_INFINITY, f32::max)
+        };
+
+        // Step 2 (lines 9–13): low-dim filter over all neighbors.
+        let mut cpca = TopK::new(self.k); // top-k smallest low-dim distances
+        for &e in nbrs {
+            let d_low = l2_sq(self.q_pca, self.low_padded.row(e as usize));
+            if d_low < f_pca {
+                cpca.offer(d_low, e);
+            }
+        }
+        let survivors = cpca.into_sorted();
+
+        // Step 3 (lines 14–23): high-dim rerank of the ≤ k survivors.
+        let mut cpca_tmp: Vec<(f32, u32)> = Vec::with_capacity(self.k);
+        let mut highdim = 0u32;
+        for &(d_low, m) in &survivors {
+            if visited.insert(m) {
+                // lines 18–19
+                let d_m = l2_sq(self.q, self.data_high.row(m as usize));
+                highdim += 1;
+                // lines 20–23: C ∪ m, F ∪ m (+ RMF) via the shared rule.
+                if beam.admit(d_m, m) {
+                    cpca_tmp.push((d_low, m)); // line 20
+                }
+            }
+        }
+        // line 24: C_pca ← C_pca_tmp for the next hop's threshold.
+        self.cpca_prev = cpca_tmp;
+
+        HopCounters {
+            lowdim: nbrs.len() as u32,
+            ksort: 1,
+            highdim,
+            visited_checks: survivors.len() as u32,
+        }
+    }
 }
 
 /// Zero-pad every row of `vs` to `pad_dim(vs.dim())`.
@@ -147,97 +220,6 @@ impl PhnswSearcher {
         self.pool.lock().unwrap().push(s);
     }
 
-    /// Algorithm 1 at a single layer. `entry` carries (high-dim dist, id),
-    /// ascending. Returns up to `ef` nearest by high-dim distance.
-    #[allow(clippy::too_many_arguments)]
-    fn search_layer(
-        &self,
-        q: &[f32],
-        q_pca: &[f32],
-        entry: &[(f32, u32)],
-        ef: usize,
-        k: usize,
-        layer: usize,
-        scratch: &mut Scratch,
-        mut trace: Option<&mut SearchTrace>,
-    ) -> Vec<(f32, u32)> {
-        let visited = &mut scratch.visited;
-        visited.clear();
-        // V, C, F ← ep  (line 1)
-        let mut candidates = BinaryHeap::new(); // C: min-heap by high-dim dist
-        let mut final_list = TopK::new(ef); // F: keeps ef closest
-        for &(d, id) in entry {
-            visited.insert(id);
-            candidates.push(MinDist(d, id));
-            final_list.offer(d, id);
-        }
-        // C_pca from the previous hop (survivors); provides f_pca threshold.
-        let mut cpca_prev: Vec<(f32, u32)> = Vec::with_capacity(k);
-
-        while let Some(MinDist(d_c, c)) = candidates.pop() {
-            // line 7: stop when the nearest remaining candidate cannot improve F.
-            if d_c > final_list.threshold() {
-                break;
-            }
-            // line 5: f_pca ← furthest element of C_pca to q_pca (∞ if empty).
-            let f_pca = cpca_prev
-                .iter()
-                .map(|&(d, _)| d)
-                .fold(f32::NEG_INFINITY, f32::max);
-            let f_pca = if cpca_prev.is_empty() { f32::INFINITY } else { f_pca };
-
-            // Step 2 (lines 9–13): low-dim filter over all neighbors.
-            let nbrs = self.graph.neighbors(c, layer);
-            let mut cpca = TopK::new(k); // top-k smallest low-dim distances
-            for &e in nbrs {
-                let d_low = l2_sq(q_pca, self.low_padded.row(e as usize));
-                if d_low < f_pca {
-                    cpca.offer(d_low, e);
-                }
-            }
-            let survivors = cpca.into_sorted();
-
-            // Step 3 (lines 14–23): high-dim rerank of the ≤ k survivors.
-            let mut cpca_tmp: Vec<(f32, u32)> = Vec::with_capacity(k);
-            let mut highdim = 0u32;
-            let mut inserts = 0u32;
-            let mut removals = 0u32;
-            for &(d_low, m) in &survivors {
-                if visited.insert(m) {
-                    // line 18–19
-                    let d_m = l2_sq(q, self.data_high.row(m as usize));
-                    highdim += 1;
-                    if d_m < final_list.threshold() || final_list.len() < ef {
-                        cpca_tmp.push((d_low, m)); // line 20
-                        candidates.push(MinDist(d_m, m)); // line 21: C ∪ m
-                        if final_list.len() == ef {
-                            removals += 1; // lines 22–23: RMF
-                        }
-                        final_list.offer(d_m, m); // line 21: F ∪ m
-                        inserts += 1;
-                    }
-                }
-            }
-            // line 24: C_pca ← C_pca_tmp for the next hop's threshold.
-            cpca_prev = cpca_tmp;
-
-            if let Some(t) = trace.as_deref_mut() {
-                t.push(HopEvent {
-                    layer: layer as u8,
-                    node: c,
-                    n_neighbors: nbrs.len() as u32,
-                    n_lowdim_dists: nbrs.len() as u32,
-                    n_ksort: 1,
-                    n_highdim_dists: highdim,
-                    n_visited_checks: survivors.len() as u32,
-                    n_f_inserts: inserts,
-                    n_f_removals: removals,
-                });
-            }
-        }
-        final_list.into_sorted()
-    }
-
     /// Full multi-layer pHNSW search, optionally tracing.
     pub fn search_traced(&self, q: &[f32], mut trace: Option<&mut SearchTrace>) -> Vec<Neighbor> {
         assert_eq!(q.len(), self.data_high.dim(), "query dimensionality mismatch");
@@ -253,28 +235,36 @@ impl PhnswSearcher {
         let mut q_pad = std::mem::take(&mut scratch.q_pca_pad);
         q_pad[..q_pca.len()].copy_from_slice(&q_pca);
 
+        let mut scorer = PcaFilterScorer {
+            q,
+            q_pca: &q_pad,
+            data_high: &self.data_high,
+            low_padded: &self.low_padded,
+            k: self.params.k(0),
+            cpca_prev: Vec::new(),
+        };
         let ep = self.graph.entry_point();
         let mut entry = vec![(l2_sq(q, self.data_high.row(ep as usize)), ep)];
         for layer in (1..=self.graph.max_level()).rev() {
-            entry = self.search_layer(
-                q,
-                &q_pad,
+            scorer.k = self.params.k(layer);
+            entry = beam_search_layer(
+                &self.graph,
+                &mut scorer,
                 &entry,
                 self.params.search.ef(layer),
-                self.params.k(layer),
                 layer,
-                &mut scratch,
+                &mut scratch.visited,
                 trace.as_deref_mut(),
             );
         }
-        let found = self.search_layer(
-            q,
-            &q_pad,
+        scorer.k = self.params.k(0);
+        let found = beam_search_layer(
+            &self.graph,
+            &mut scorer,
             &entry,
             self.params.search.ef(0),
-            self.params.k(0),
             0,
-            &mut scratch,
+            &mut scratch.visited,
             trace.as_deref_mut(),
         );
         scratch.q_pca = q_pca;
@@ -303,6 +293,10 @@ impl AnnEngine for PhnswSearcher {
     fn search_with_stats(&self, query: &[f32]) -> (Vec<Neighbor>, SearchStats) {
         let (r, t) = self.search_full_trace(query);
         (r, t.stats())
+    }
+
+    fn search_batch(&self, queries: &[&[f32]]) -> Vec<Vec<Neighbor>> {
+        super::parallel_search_batch(self, queries)
     }
 }
 
@@ -452,6 +446,33 @@ mod tests {
         for _ in 0..3 {
             assert_eq!(s.search(f.queries.row(3)), first);
         }
+    }
+
+    #[test]
+    fn search_batch_matches_sequential_bitwise() {
+        let f = fixture(1200);
+        let s = searcher(&f, PhnswParams::default());
+        let qrefs: Vec<&[f32]> = (0..40).map(|i| f.queries.row(i)).collect();
+        let sequential: Vec<Vec<Neighbor>> = qrefs.iter().map(|q| s.search(q)).collect();
+        for _ in 0..2 {
+            assert_eq!(
+                s.search_batch(&qrefs),
+                sequential,
+                "scratch-pooled data-parallel batch must be bitwise identical"
+            );
+        }
+    }
+
+    #[test]
+    fn nan_query_does_not_panic() {
+        let f = fixture(600);
+        let s = searcher(&f, PhnswParams::default());
+        let mut q = f.base.row(0).to_vec();
+        q[0] = f32::NAN;
+        let _ = s.search(&q);
+        // The scratch pool must stay healthy afterwards.
+        let ok = s.search(f.base.row(7));
+        assert_eq!(ok[0].id, 7);
     }
 
     #[test]

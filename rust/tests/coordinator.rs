@@ -72,6 +72,40 @@ fn recall_through_the_server_matches_offline() {
 }
 
 #[test]
+fn batched_serving_matches_direct_engine_calls() {
+    // Saturate the batcher from many clients so the workers actually see
+    // multi-query batches, then check every served result against a
+    // direct sequential engine call — the determinism contract of the
+    // batch dispatch path.
+    let w = wb();
+    let server = Server::start(
+        ServerConfig { workers: 2, ..Default::default() },
+        real_router(&w, RoutePolicy::Default("phnsw".into())),
+    );
+    let h = server.handle();
+    let direct = w.phnsw(PhnswParams::default());
+    std::thread::scope(|s| {
+        for t in 0..8 {
+            let h = h.clone();
+            let w = w.clone();
+            let direct = &direct;
+            s.spawn(move || {
+                for i in 0..30 {
+                    let qi = (t * 30 + i) % w.queries.len();
+                    let res = h.query_blocking(Query::new(w.queries.row(qi).to_vec())).unwrap();
+                    let want: Vec<u32> =
+                        direct.search(w.queries.row(qi)).iter().take(10).map(|n| n.id).collect();
+                    let got: Vec<u32> = res.neighbors.iter().map(|n| n.id).collect();
+                    assert_eq!(got, want, "query {qi} diverged under batch dispatch");
+                }
+            });
+        }
+    });
+    assert_eq!(server.stats().served(), 240);
+    server.shutdown();
+}
+
+#[test]
 fn round_robin_splits_real_traffic() {
     let w = wb();
     let server = Server::start(

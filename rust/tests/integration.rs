@@ -189,6 +189,45 @@ fn spm_fits_paper_working_set() {
 }
 
 #[test]
+fn search_batch_bitwise_matches_sequential_for_both_engines() {
+    // The batch-first engine API contract: overrides shard the batch over
+    // scoped worker threads but must return results bitwise identical to
+    // sequential `search` calls.
+    let w = wb(4_000, 60);
+    let hnsw = w.hnsw(SearchParams::default());
+    let phnsw = w.phnsw(PhnswParams::default());
+    let engines: [&dyn AnnEngine; 2] = [&hnsw, &phnsw];
+    let qrefs: Vec<&[f32]> = w.queries.iter().collect();
+    for engine in engines {
+        let sequential: Vec<_> = qrefs.iter().map(|q| engine.search(q)).collect();
+        for round in 0..2 {
+            assert_eq!(
+                engine.search_batch(&qrefs),
+                sequential,
+                "{} batch round {round} diverged from sequential",
+                engine.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn frozen_graph_level_stats_are_consistent() {
+    // nodes_at_level/edges_at_level are O(1) caches after freeze(); they
+    // must agree with what the public accessors observe.
+    let w = wb(4_000, 20);
+    let g = &w.graph;
+    assert!(g.is_frozen());
+    for l in 0..=g.max_level() {
+        let scan_nodes = (0..g.len() as u32).filter(|&n| g.level(n) >= l).count();
+        let scan_edges: usize = (0..g.len() as u32).map(|n| g.neighbors(n, l).len()).sum();
+        assert_eq!(g.nodes_at_level(l), scan_nodes, "level {l} node count");
+        assert_eq!(g.edges_at_level(l), scan_edges, "level {l} edge count");
+    }
+    assert_eq!(g.nodes_at_level(g.max_level() + 1), 0);
+}
+
+#[test]
 fn exact_queries_resolve_through_all_engines() {
     let w = wb(4_000, 20);
     let hnsw = w.hnsw(SearchParams::default());
