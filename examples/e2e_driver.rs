@@ -18,6 +18,7 @@ use phnsw::hw::EngineKind;
 use phnsw::metrics::recall_at_k;
 use phnsw::runtime::XlaRerankEngine;
 use phnsw::search::{AnnEngine, PhnswParams, SearchParams};
+use phnsw::store::VectorStore;
 use phnsw::workbench::{Workbench, WorkbenchConfig};
 use std::sync::Arc;
 
@@ -43,6 +44,30 @@ fn main() -> phnsw::Result<()> {
         100.0 * w.pca.explained_variance_ratio()
     );
 
+    // --- single-artifact boot: .phnsw bundle round trip ----------------
+    // Save the assembled index as one file and reconstruct the serving
+    // engine from it — the path a production server boots through
+    // (no PCA refit, no re-projection, no re-quantization).
+    let bundle_path =
+        std::env::temp_dir().join(format!("phnsw_e2e_{}.phnsw", std::process::id()));
+    w.save_bundle(&bundle_path)?;
+    let bundle = phnsw::runtime::IndexBundle::open(&bundle_path)?;
+    let booted = bundle.searcher(PhnswParams::default());
+    let native = w.phnsw(PhnswParams::default());
+    for qi in 0..5.min(nq) {
+        assert_eq!(
+            booted.search(w.queries.row(qi)),
+            native.search(w.queries.row(qi)),
+            "bundle-booted searcher must be bitwise identical"
+        );
+    }
+    println!(
+        "[1b] .phnsw bundle round-trip OK: {} bytes, low-dim codec {}",
+        std::fs::metadata(&bundle_path)?.len(),
+        bundle.low.codec().label()
+    );
+    std::fs::remove_file(&bundle_path).ok();
+
     // --- engines, including the AOT/PJRT path -------------------------
     let artifacts = std::env::var("PHNSW_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let xla = Arc::new(XlaRerankEngine::start(&artifacts)?);
@@ -50,7 +75,9 @@ fn main() -> phnsw::Result<()> {
 
     let mut router = Router::new(RoutePolicy::Default("phnsw-xla".into()));
     router.register("hnsw", Arc::new(w.hnsw(SearchParams::default())) as Arc<dyn AnnEngine>);
-    router.register("phnsw", Arc::new(w.phnsw(PhnswParams::default())) as Arc<dyn AnnEngine>);
+    // The served pHNSW engine is the bundle-booted one: the coordinator
+    // runs off the artifact exactly as a fresh process would.
+    router.register("phnsw", Arc::new(booted) as Arc<dyn AnnEngine>);
     router.register(
         "phnsw-xla",
         Arc::new(XlaPhnswEngine::new(

@@ -34,6 +34,15 @@ pub fn trace_limit() -> usize {
     env_usize("PHNSW_BENCH_TRACES", 100)
 }
 
+/// Like [`time_it`] but also emits one machine-readable JSON line
+/// (`{"bench":...,"ns_per_iter":...}`) so perf-trajectory tooling can
+/// scrape the numbers without parsing the human table.
+pub fn time_it_json<F: FnMut()>(label: &str, iters: usize, f: F) -> f64 {
+    let ns = time_it(label, iters, f);
+    println!("{{\"bench\":\"{label}\",\"ns_per_iter\":{ns:.1}}}");
+    ns
+}
+
 /// Time a closure over `iters` runs and report ns/iter (simple criterion
 /// stand-in for micro-kernels).
 pub fn time_it<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {

@@ -10,9 +10,10 @@ mod common;
 use phnsw::dataset::l2_sq_scalar;
 use phnsw::pca::PcaModel;
 use phnsw::rng::Pcg32;
-use phnsw::search::dist::{l2_sq, l2_sq_batch};
+use phnsw::search::dist::{l2_sq, l2_sq_batch, l2_sq_batch_sq8};
 use phnsw::search::visited::VisitedSet;
 use phnsw::search::{AnnEngine, PhnswParams, SearchParams};
+use phnsw::store::{F32Store, Sq8Store, StoreScratch, VectorStore};
 
 fn main() {
     let mut rng = Pcg32::new(1);
@@ -31,6 +32,26 @@ fn main() {
     });
     common::time_it("l2_sq_batch 32×15 (Dist.L shape)", 500_000, || {
         l2_sq_batch(std::hint::black_box(&q15), std::hint::black_box(&block), 15, &mut out);
+        std::hint::black_box(&out);
+    });
+
+    // SQ8 vs f32 kernel at the padded Dist.L shape (32 rows × 16 dims).
+    let q16: Vec<f32> = (0..16).map(|_| rng.gaussian()).collect();
+    let block16: Vec<f32> = (0..32 * 16).map(|_| rng.gaussian()).collect();
+    let codes16: Vec<u8> = (0..32 * 16).map(|_| (rng.f32() * 255.0) as u8).collect();
+    let weight16: Vec<f32> = (0..16).map(|_| 0.01 + rng.f32()).collect();
+    common::time_it_json("kernel f32 l2_sq_batch 32x16", 500_000, || {
+        l2_sq_batch(std::hint::black_box(&q16), std::hint::black_box(&block16), 16, &mut out);
+        std::hint::black_box(&out);
+    });
+    common::time_it_json("kernel sq8 l2_sq_batch_sq8 32x16", 500_000, || {
+        l2_sq_batch_sq8(
+            std::hint::black_box(&q16),
+            std::hint::black_box(&codes16),
+            16,
+            std::hint::black_box(&weight16),
+            &mut out,
+        );
         std::hint::black_box(&out);
     });
 
@@ -94,6 +115,53 @@ fn main() {
         acc = acc.wrapping_add(nbrs.iter().map(|&x| x as u64).sum::<u64>());
     });
     std::hint::black_box(acc);
+
+    println!("store codecs (filter scoring, one 32-neighbor adjacency list):");
+    // Gathered-block batch scoring (what PcaFilterScorer::expand now
+    // does) vs the per-row row()+l2_sq loop it replaced, on both codecs.
+    let low_f32 = F32Store::from_set(&w.base_low);
+    let low_sq8 = Sq8Store::from_set(&w.base_low);
+    let n_low = w.base_low.len() as u32;
+    let mut id_rng = 0u32;
+    let mut ids = [0u32; 32];
+    let mut next_ids = move || {
+        for slot in ids.iter_mut() {
+            id_rng = id_rng.wrapping_mul(1_664_525).wrapping_add(1_013_904_223);
+            *slot = id_rng % n_low;
+        }
+        ids
+    };
+    let qlow: Vec<f32> = {
+        let mut v = vec![0f32; w.base_low.dim()];
+        pca.project(&qhigh, &mut v);
+        v
+    };
+    let mut scratch = StoreScratch::new();
+    let mut dists = vec![0f32; 32];
+    low_f32.prepare_query(&qlow, &mut scratch);
+    common::time_it_json("filter f32 gathered block 32 nbrs", 200_000, || {
+        let ids = next_ids();
+        low_f32.score_block(&mut scratch, std::hint::black_box(&ids), &mut dists);
+        std::hint::black_box(&dists);
+    });
+    common::time_it_json("filter f32 per-row (legacy path) 32 nbrs", 200_000, || {
+        let ids = next_ids();
+        for (lane, &id) in ids.iter().enumerate() {
+            dists[lane] = l2_sq(std::hint::black_box(&qlow), w.base_low.row(id as usize));
+        }
+        std::hint::black_box(&dists);
+    });
+    low_sq8.prepare_query(&qlow, &mut scratch);
+    common::time_it_json("filter sq8 gathered block 32 nbrs", 200_000, || {
+        let ids = next_ids();
+        low_sq8.score_block(&mut scratch, std::hint::black_box(&ids), &mut dists);
+        std::hint::black_box(&dists);
+    });
+    println!(
+        "  (low-dim table: {} B sq8 vs {} B f32)",
+        low_sq8.payload_bytes(),
+        low_f32.payload_bytes()
+    );
 
     println!("batch engine API:");
     let qrefs: Vec<&[f32]> = (0..64).map(|j| w.queries.row(j % nq)).collect();

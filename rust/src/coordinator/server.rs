@@ -47,6 +47,20 @@ pub struct ServerHandle {
 }
 
 impl Server {
+    /// Boot a server straight from a `.phnsw` index artifact: the pHNSW
+    /// engine is constructed from the bundle's components (graph + PCA +
+    /// quantized stores) and registered as the default route — no PCA
+    /// refit or corpus re-projection at startup.
+    pub fn start_from_bundle(
+        cfg: ServerConfig,
+        bundle: &crate::runtime::IndexBundle,
+        params: crate::search::PhnswParams,
+    ) -> Self {
+        let mut router = Router::new(super::router::RoutePolicy::Default("phnsw".into()));
+        router.register("phnsw", Arc::new(bundle.searcher(params)) as Arc<dyn AnnEngine>);
+        Self::start(cfg, Arc::new(router))
+    }
+
     /// Start the worker pool over a router.
     pub fn start(cfg: ServerConfig, router: Arc<Router>) -> Self {
         assert!(cfg.workers >= 1, "need at least one worker");

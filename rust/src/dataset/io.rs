@@ -17,6 +17,12 @@ fn read_u32_le(r: &mut impl Read) -> std::io::Result<u32> {
 }
 
 /// Read an entire fvecs file into a [`VectorSet`].
+///
+/// Headers are untrusted: every declared row length is validated against
+/// the bytes actually remaining in the file *before* any buffer is sized
+/// from it, so a corrupt or truncated download surfaces as `Err` rather
+/// than a huge allocation. The [`VectorSet`] is pre-reserved from the
+/// file length (one allocation for a SIFT1M-sized load).
 pub fn read_fvecs(path: impl AsRef<Path>) -> Result<VectorSet> {
     let path = path.as_ref();
     let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
@@ -25,19 +31,32 @@ pub fn read_fvecs(path: impl AsRef<Path>) -> Result<VectorSet> {
     let mut vs: Option<VectorSet> = None;
     let mut consumed = 0u64;
     let mut buf: Vec<u8> = Vec::new();
+    let mut row: Vec<f32> = Vec::new();
     while consumed < len {
         let d = read_u32_le(&mut r)? as usize;
         if d == 0 || d > 1 << 20 {
             bail!("implausible fvecs dimension {d} at offset {consumed}");
         }
+        if (d as u64) * 4 > len - consumed - 4 {
+            bail!(
+                "fvecs row at offset {consumed} declares {d} components but only {} bytes remain",
+                len - consumed - 4
+            );
+        }
         buf.resize(d * 4, 0);
         r.read_exact(&mut buf)?;
         consumed += 4 + (d as u64) * 4;
-        let row: Vec<f32> = buf
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
-        let set = vs.get_or_insert_with(|| VectorSet::new(d));
+        row.clear();
+        row.extend(
+            buf.chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+        );
+        let set = vs.get_or_insert_with(|| {
+            let mut s = VectorSet::new(d);
+            // Every well-formed row costs 4 + 4·d bytes.
+            s.reserve_rows((len / (4 + 4 * d as u64)) as usize);
+            s
+        });
         if set.dim() != d {
             bail!("inconsistent dimension {d} (expected {})", set.dim());
         }
@@ -46,52 +65,75 @@ pub fn read_fvecs(path: impl AsRef<Path>) -> Result<VectorSet> {
     vs.ok_or_else(|| anyhow::anyhow!("empty fvecs file {}", path.display()))
 }
 
-/// Write a [`VectorSet`] in fvecs format.
+/// Write a [`VectorSet`] in fvecs format. Each row is staged into one
+/// buffer and written with a single `write_all` (instead of one call per
+/// component).
 pub fn write_fvecs(path: impl AsRef<Path>, vs: &VectorSet) -> Result<()> {
     let f = std::fs::File::create(path.as_ref())?;
     let mut w = BufWriter::new(f);
+    let mut buf: Vec<u8> = Vec::with_capacity(4 + vs.dim() * 4);
     for row in vs.iter() {
-        w.write_all(&(vs.dim() as u32).to_le_bytes())?;
+        buf.clear();
+        buf.extend_from_slice(&(vs.dim() as u32).to_le_bytes());
         for &x in row {
-            w.write_all(&x.to_le_bytes())?;
+            buf.extend_from_slice(&x.to_le_bytes());
         }
+        w.write_all(&buf)?;
     }
     w.flush()?;
     Ok(())
 }
 
-/// Read an ivecs file (e.g. SIFT1M's ground-truth lists).
+/// Read an ivecs file (e.g. SIFT1M's ground-truth lists). Row lengths are
+/// validated against the remaining file bytes before any allocation, same
+/// policy as [`read_fvecs`].
 pub fn read_ivecs(path: impl AsRef<Path>) -> Result<Vec<Vec<u32>>> {
     let path = path.as_ref();
     let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
     let len = f.metadata()?.len();
     let mut r = BufReader::new(f);
-    let mut out = Vec::new();
+    let mut out: Vec<Vec<u32>> = Vec::new();
     let mut consumed = 0u64;
+    let mut buf: Vec<u8> = Vec::new();
     while consumed < len {
         let d = read_u32_le(&mut r)? as usize;
         if d > 1 << 20 {
             bail!("implausible ivecs row length {d}");
         }
-        let mut row = Vec::with_capacity(d);
-        for _ in 0..d {
-            row.push(read_u32_le(&mut r)?);
+        if (d as u64) * 4 > len - consumed - 4 {
+            bail!(
+                "ivecs row at offset {consumed} declares {d} entries but only {} bytes remain",
+                len - consumed - 4
+            );
         }
+        if out.is_empty() && d > 0 {
+            out.reserve((len / (4 + 4 * d as u64)) as usize);
+        }
+        buf.resize(d * 4, 0);
+        r.read_exact(&mut buf)?;
         consumed += 4 + (d as u64) * 4;
-        out.push(row);
+        out.push(
+            buf.chunks_exact(4)
+                .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        );
     }
     Ok(out)
 }
 
-/// Write ground-truth lists in ivecs format.
+/// Write ground-truth lists in ivecs format (row-buffered like
+/// [`write_fvecs`]).
 pub fn write_ivecs(path: impl AsRef<Path>, rows: &[Vec<u32>]) -> Result<()> {
     let f = std::fs::File::create(path.as_ref())?;
     let mut w = BufWriter::new(f);
+    let mut buf: Vec<u8> = Vec::new();
     for row in rows {
-        w.write_all(&(row.len() as u32).to_le_bytes())?;
+        buf.clear();
+        buf.extend_from_slice(&(row.len() as u32).to_le_bytes());
         for &x in row {
-            w.write_all(&x.to_le_bytes())?;
+            buf.extend_from_slice(&x.to_le_bytes());
         }
+        w.write_all(&buf)?;
     }
     w.flush()?;
     Ok(())
@@ -150,6 +192,54 @@ mod tests {
             }
         }
         assert!(read_fvecs(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn read_fvecs_rejects_row_exceeding_file() {
+        // A header claiming more components than the file holds must be
+        // rejected by the remaining-bytes bound, before any buffer is
+        // sized from it.
+        let p = tmp("oversized.fvecs");
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&p).unwrap();
+            f.write_all(&1_000_000u32.to_le_bytes()).unwrap();
+            f.write_all(&1.0f32.to_le_bytes()).unwrap();
+        }
+        let err = read_fvecs(&p).unwrap_err();
+        assert!(err.to_string().contains("remain"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn read_ivecs_rejects_row_exceeding_file() {
+        let p = tmp("oversized.ivecs");
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&p).unwrap();
+            f.write_all(&500_000u32.to_le_bytes()).unwrap();
+            f.write_all(&7u32.to_le_bytes()).unwrap();
+        }
+        assert!(read_ivecs(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn large_roundtrip_survives_prealloc_path() {
+        // Exercise the reserve-from-file-length path with enough rows to
+        // have mattered for realloc churn.
+        let mut vs = VectorSet::new(16);
+        let mut row = [0f32; 16];
+        for i in 0..2_000 {
+            row[0] = i as f32;
+            row[15] = -(i as f32);
+            vs.push(&row);
+        }
+        let p = tmp("large.fvecs");
+        write_fvecs(&p, &vs).unwrap();
+        let back = read_fvecs(&p).unwrap();
+        assert_eq!(vs, back);
         std::fs::remove_file(&p).ok();
     }
 

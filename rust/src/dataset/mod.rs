@@ -76,6 +76,13 @@ impl VectorSet {
         self.data.extend_from_slice(v);
     }
 
+    /// Pre-reserve capacity for `n` additional rows. File readers size
+    /// this from the file length so a SIFT1M-scale load does one
+    /// allocation instead of doubling-realloc churn.
+    pub fn reserve_rows(&mut self, n: usize) {
+        self.data.reserve(n.saturating_mul(self.dim));
+    }
+
     /// The flat row-major backing buffer.
     #[inline]
     pub fn flat(&self) -> &[f32] {

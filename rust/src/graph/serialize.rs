@@ -42,6 +42,14 @@ pub fn save(graph: &HnswGraph, path: impl AsRef<Path>) -> Result<()> {
     let f = std::fs::File::create(path.as_ref())
         .with_context(|| format!("create {}", path.as_ref().display()))?;
     let mut w = BufWriter::new(f);
+    write_to(graph, &mut w)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Write the v2 (CSR) image into any sink — the `.phnsw` bundle embeds
+/// the same bytes [`save`] writes to a standalone file.
+pub fn write_to(graph: &HnswGraph, w: &mut impl Write) -> Result<()> {
     let n = graph.len();
     w.write_all(b"HNS2")?;
     write_u32(&mut w, graph.m() as u32)?;
@@ -82,7 +90,6 @@ pub fn save(graph: &HnswGraph, path: impl AsRef<Path>) -> Result<()> {
             }
         }
     }
-    w.flush()?;
     Ok(())
 }
 
@@ -167,11 +174,18 @@ pub fn load(path: impl AsRef<Path>) -> Result<HnswGraph> {
         .with_context(|| format!("stat {}", path.as_ref().display()))?
         .len();
     let mut r = BufReader::new(f);
+    read_from(&mut r, file_len)
+}
+
+/// Read a graph image from any source. `byte_len` is the total image
+/// size (file or bundle-section length) and bounds every untrusted count
+/// before allocation, exactly as [`load`] does for standalone files.
+pub fn read_from(r: &mut impl Read, byte_len: u64) -> Result<HnswGraph> {
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
     match &magic {
-        b"HNS2" => load_v2(&mut r, file_len),
-        b"HNS1" => load_v1(&mut r, file_len),
+        b"HNS2" => load_v2(r, byte_len),
+        b"HNS1" => load_v1(r, byte_len),
         other => bail!("bad graph magic {other:?}"),
     }
 }

@@ -199,11 +199,14 @@ pub fn simulate_query(
                     spm_accesses += reqs.iter().map(|r| (r.1 as u64).div_ceil(8)).sum::<u64>();
                 }
 
-                // --- step 3: Dist.L + kSort.L over all neighbors. ---
+                // --- step 3: Dist.L + kSort.L over all neighbors. The
+                // SPM traffic tracks the layout's low-dim codec (15 B/row
+                // under SQ8 vs 60 B/row f32). ---
                 let dl = core.dist_l_cycles(hop.n_lowdim_dists as u64);
                 mix.dist_l += dl;
                 hop_units += dl;
-                spm_accesses += (hop.n_lowdim_dists as u64 * layoutdim_low(layout) as u64 * 4) / 8;
+                spm_accesses +=
+                    (hop.n_lowdim_dists as u64 * layout.low_row_bytes() as u64).div_ceil(8);
                 if hop.n_ksort > 0 {
                     mix.ksort += hop.n_ksort as u64;
                     hop_units += core.ksort_cycles_for(hop.n_lowdim_dists as u64);
@@ -255,11 +258,6 @@ pub fn simulate_query(
     let dram_pj = dram.stats().energy_pj - energy_before;
     let energy = account(energy_cfg, &mix, dram_pj, spm_accesses, runtime_ns);
     QuerySim { cycles, mix, spm_accesses, energy }
-}
-
-/// Low dimensionality helper (layout does not expose it publicly).
-fn layoutdim_low(_layout: &DbLayout) -> usize {
-    crate::params::DIM_LOW
 }
 
 /// Deterministic pseudo-id for irregular-traffic synthesis: the trace does

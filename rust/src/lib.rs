@@ -7,10 +7,15 @@
 //! * **Algorithm** — [`search::phnsw`] implements Algorithm 1: candidate
 //!   filtering in a PCA-reduced low-dimensional space with per-layer top-k
 //!   filter sizes, re-ranking only the k survivors in the original space.
+//! * **Storage** — [`store`] is the pluggable vector-storage layer: an f32
+//!   codec and an SQ8 scalar-quantized codec (default for the PCA filter
+//!   table) behind one [`store::VectorStore`] trait with gathered-block
+//!   batch scoring; [`runtime::IndexBundle`] packs graph + PCA + both
+//!   stores into a single `.phnsw` artifact.
 //! * **Database organization** — [`db`] builds the three off-chip layouts of
 //!   Fig. 3(a): high-dim-only (`Std`), separate low-dim table (`Sep`,
 //!   pKNN-style), and inline low-dim neighbor blocks (`Inline`, the paper's
-//!   contribution).
+//!   contribution), with codec-aware low-dim payload accounting.
 //! * **Hardware** — [`hw`] is a cycle-level simulator of the custom pHNSW
 //!   processor (1 GHz, custom ISA of Table II), driven by [`dram`] (DDR4 /
 //!   HBM1.0 timing + energy) with [`energy`] and [`area`] models
@@ -40,6 +45,7 @@ pub mod rng;
 pub mod reports;
 pub mod runtime;
 pub mod search;
+pub mod store;
 pub mod workbench;
 
 /// Crate-wide result alias.

@@ -18,6 +18,7 @@ use phnsw::coordinator::{Query, RoutePolicy, Router, Server, ServerConfig};
 use phnsw::dram::DramConfig;
 use phnsw::hw::EngineKind;
 use phnsw::search::{AnnEngine, PhnswParams, SearchParams};
+use phnsw::store::VectorStore;
 use phnsw::workbench::{Workbench, WorkbenchConfig};
 use phnsw::{reports, Result};
 use std::sync::Arc;
@@ -132,7 +133,14 @@ fn cmd_gen(args: &Args) -> Result<()> {
 
 fn cmd_build(args: &Args) -> Result<()> {
     if args.flag("help") {
-        println!("{}", usage("phnsw build", "build + cache index, PCA, ground truth", &wb_opts()));
+        let mut o = wb_opts();
+        o.push(OptSpec {
+            name: "bundle-out",
+            help: "write the index as a single .phnsw artifact",
+            default: None,
+            is_flag: false,
+        });
+        println!("{}", usage("phnsw build", "build + cache index, PCA, ground truth", &o));
         return Ok(());
     }
     let w = workbench_from(args)?;
@@ -149,6 +157,13 @@ fn cmd_build(args: &Args) -> Result<()> {
         100.0 * w.pca.explained_variance_ratio()
     );
     println!("{}", reports::db_footprints(&w));
+    if let Some(out) = args.get("bundle-out") {
+        w.save_bundle(out)?;
+        println!(
+            "bundle: wrote {out} ({} bytes — graph + PCA + sq8 low store + f32 high store)",
+            std::fs::metadata(out)?.len()
+        );
+    }
     Ok(())
 }
 
@@ -192,32 +207,65 @@ fn cmd_serve(args: &Args) -> Result<()> {
         o.push(OptSpec { name: "requests", help: "total requests", default: Some("2000".into()), is_flag: false });
         o.push(OptSpec { name: "workers", help: "server workers", default: Some("4".into()), is_flag: false });
         o.push(OptSpec { name: "artifacts", help: "artifact dir (for phnsw-xla)", default: Some("artifacts".into()), is_flag: false });
+        o.push(OptSpec {
+            name: "bundle",
+            help: "boot the pHNSW engine from a .phnsw artifact (no refit)",
+            default: None,
+            is_flag: false,
+        });
         println!("{}", usage("phnsw serve", "query server demo: batcher + router + workers", &o));
         return Ok(());
     }
-    let w = Arc::new(workbench_from(args)?);
-    let engine_name = args.get_or("engine", "phnsw");
-    let mut router = Router::new(match engine_name.as_str() {
-        "rr" => RoutePolicy::RoundRobin,
-        name => RoutePolicy::Default(name.to_string()),
-    });
-    let hnsw: Arc<dyn AnnEngine> = Arc::new(w.hnsw(SearchParams::default()));
-    let phnsw_engine: Arc<dyn AnnEngine> = Arc::new(w.phnsw(phnsw_params(args)?));
-    router.register("hnsw", hnsw);
-    router.register("phnsw", phnsw_engine);
-    if engine_name == "phnsw-xla" {
-        let xla = Arc::new(phnsw::runtime::XlaRerankEngine::start(args.get_or("artifacts", "artifacts"))?);
-        let searcher = Arc::new(w.phnsw(phnsw_params(args)?));
-        router.register(
-            "phnsw-xla",
-            Arc::new(phnsw::coordinator::XlaPhnswEngine::new(searcher, xla, w.base.clone(), 16)),
+    let cfg = ServerConfig {
+        workers: args.get_parsed_or("workers", 4usize)?,
+        ..Default::default()
+    };
+    let (server, queries) = if let Some(bundle_path) = args.get("bundle") {
+        // Single-artifact boot: the engine comes out of the .phnsw file.
+        // Deliberately NO workbench here — assembling one would refit
+        // PCA, re-project the corpus, and rebuild the graph, which is
+        // exactly the startup cost the bundle eliminates. The demo load
+        // only needs query vectors, drawn fresh from the synthetic
+        // mixture at the bundle's dimensionality.
+        let bundle = phnsw::runtime::IndexBundle::open(bundle_path)?;
+        use phnsw::dataset::synthetic::{generate, SyntheticConfig};
+        let syn = SyntheticConfig {
+            n_base: 1,
+            n_queries: args.get_parsed_or("queries", 200usize)?,
+            dim: bundle.high.dim(),
+            dominant_dims: 24.min(bundle.high.dim()),
+            seed: u64::from_str_radix(args.get_or("seed", "5EED0001").trim_start_matches("0x"), 16)
+                .unwrap_or(0x5EED_0001),
+            ..SyntheticConfig::default()
+        };
+        let (_, queries) = generate(&syn);
+        println!(
+            "booting from {bundle_path}: {} vectors, low codec {}",
+            bundle.high.len(),
+            bundle.low.codec().label()
         );
-    }
-
-    let server = Server::start(
-        ServerConfig { workers: args.get_parsed_or("workers", 4usize)?, ..Default::default() },
-        Arc::new(router),
-    );
+        (Server::start_from_bundle(cfg, &bundle, phnsw_params(args)?), queries)
+    } else {
+        let w = workbench_from(args)?;
+        let engine_name = args.get_or("engine", "phnsw");
+        let mut router = Router::new(match engine_name.as_str() {
+            "rr" => RoutePolicy::RoundRobin,
+            name => RoutePolicy::Default(name.to_string()),
+        });
+        let hnsw: Arc<dyn AnnEngine> = Arc::new(w.hnsw(SearchParams::default()));
+        let phnsw_engine: Arc<dyn AnnEngine> = Arc::new(w.phnsw(phnsw_params(args)?));
+        router.register("hnsw", hnsw);
+        router.register("phnsw", phnsw_engine);
+        if engine_name == "phnsw-xla" {
+            let xla = Arc::new(phnsw::runtime::XlaRerankEngine::start(args.get_or("artifacts", "artifacts"))?);
+            let searcher = Arc::new(w.phnsw(phnsw_params(args)?));
+            router.register(
+                "phnsw-xla",
+                Arc::new(phnsw::coordinator::XlaPhnswEngine::new(searcher, xla, w.base.clone(), 16)),
+            );
+        }
+        (Server::start(cfg, Arc::new(router)), w.queries.clone())
+    };
     let handle = server.handle();
     let clients: usize = args.get_parsed_or("clients", 4usize)?;
     let total: usize = args.get_parsed_or("requests", 2_000usize)?;
@@ -227,11 +275,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     std::thread::scope(|s| {
         for c in 0..clients {
             let h = handle.clone();
-            let w = w.clone();
+            let queries = &queries;
             s.spawn(move || {
                 for i in 0..per_client {
-                    let qi = (c * per_client + i) % w.queries.len();
-                    let q = Query::new(w.queries.row(qi).to_vec());
+                    let qi = (c * per_client + i) % queries.len();
+                    let q = Query::new(queries.row(qi).to_vec());
                     let _ = h.query_blocking(q);
                 }
             });

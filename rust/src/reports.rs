@@ -159,14 +159,19 @@ pub fn ksort_comparison() -> String {
     )
 }
 
-/// §IV-A / §V-C — database organization footprints.
+/// §IV-A / §V-C — database organization footprints. The deployed layouts
+/// carry SQ8 low-dim payloads (1 B/component — what the store layer
+/// serves); the paper's f32 inline overhead is recomputed alongside for
+/// the §IV-A comparison.
 pub fn db_footprints(w: &Workbench) -> String {
-    use crate::db::LayoutKind;
+    use crate::db::{DbLayout, LayoutKind};
     let std = w.layout(LayoutKind::Std);
     let sep = w.layout(LayoutKind::Sep);
     let inl = w.layout(LayoutKind::Inline);
+    let std_f32 = DbLayout::new(&w.graph, LayoutKind::Std, w.cfg.dim_low, w.base.dim());
+    let inl_f32 = DbLayout::new(&w.graph, LayoutKind::Inline, w.cfg.dim_low, w.base.dim());
     format!(
-        "Database organization footprints (n={}):\n  Std(2):    {:>12} B ({:.2}× raw)\n  Sep(4):    {:>12} B ({:.2}× raw)\n  Inline(3): {:>12} B ({:.2}× raw)\n  inline payload vs Std total: {:.2}× (paper: 2.92×)\n",
+        "Database organization footprints (n={}, low codec sq8):\n  Std(2):    {:>12} B ({:.2}× raw)\n  Sep(4):    {:>12} B ({:.2}× raw)\n  Inline(3): {:>12} B ({:.2}× raw)\n  inline payload vs Std total: {:.2}× sq8 / {:.2}× f32 (paper, f32: 2.92×)\n",
         w.cfg.n_base,
         std.total_bytes(),
         std.overhead_ratio(),
@@ -175,6 +180,7 @@ pub fn db_footprints(w: &Workbench) -> String {
         inl.total_bytes(),
         inl.overhead_ratio(),
         inl.inline_overhead_vs_std(&std),
+        inl_f32.inline_overhead_vs_std(&std_f32),
     )
 }
 

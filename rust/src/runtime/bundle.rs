@@ -1,0 +1,327 @@
+//! The `.phnsw` index artifact — one self-contained file bundling
+//! everything a server needs to answer queries: the frozen CSR graph, the
+//! trained [`PcaModel`], the SQ8-quantized low-dim filter store, and the
+//! f32 high-dim rerank table. A process boots by [`IndexBundle::open`]
+//! instead of re-fitting PCA and re-projecting the corpus at startup, and
+//! the reconstructed searcher is bitwise identical to the one the bundle
+//! was saved from (tests pin this).
+//!
+//! ## Format
+//!
+//! ```text
+//!   magic "PHNB"  u32 version (=1)  u32 n_sections
+//!   per section: [4-byte tag][u64 len][len payload bytes]
+//! ```
+//!
+//! Sections (any order; unknown tags are skipped for forward compat):
+//!
+//! | tag    | payload |
+//! |--------|---------|
+//! | `GRPH` | graph v2 image (`graph::serialize::write_to`) |
+//! | `PCAM` | [`PcaModel::to_bytes`] |
+//! | `LOWQ` | low-dim [`VectorStore`] blob (`store::store_from_bytes`) |
+//! | `HIGH` | high-dim f32 table: `[u32 dim][u64 n][n × dim × f32-le]` |
+//!
+//! Every declared length is validated against the remaining file bytes
+//! *before* any allocation sized from it — a corrupt artifact surfaces as
+//! `Err`, never as an OOM abort (same policy as `graph/serialize.rs`).
+
+use crate::dataset::VectorSet;
+use crate::graph::{serialize, HnswGraph};
+use crate::pca::PcaModel;
+use crate::search::{PhnswParams, PhnswSearcher};
+use crate::store::{store_from_bytes, VectorStore};
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+const MAGIC: &[u8; 4] = b"PHNB";
+const VERSION: u32 = 1;
+
+const TAG_GRAPH: &[u8; 4] = b"GRPH";
+const TAG_PCA: &[u8; 4] = b"PCAM";
+const TAG_LOW: &[u8; 4] = b"LOWQ";
+const TAG_HIGH: &[u8; 4] = b"HIGH";
+
+/// An opened `.phnsw` artifact: every component a [`PhnswSearcher`] needs.
+pub struct IndexBundle {
+    /// Frozen CSR graph.
+    pub graph: Arc<HnswGraph>,
+    /// Trained PCA projection.
+    pub pca: Arc<PcaModel>,
+    /// Low-dim filter store (codec as saved — SQ8 on the default path).
+    pub low: Arc<dyn VectorStore>,
+    /// High-dim f32 rerank table.
+    pub high: Arc<VectorSet>,
+}
+
+fn write_section(w: &mut impl Write, tag: &[u8; 4], payload: &[u8]) -> Result<()> {
+    w.write_all(tag)?;
+    w.write_all(&(payload.len() as u64).to_le_bytes())?;
+    w.write_all(payload)?;
+    Ok(())
+}
+
+/// Stream the HIGH section without materializing a second copy of the
+/// corpus: its length is exactly `12 + n·dim·4`, so the section frame can
+/// be written up front and the f32 rows encoded through a small chunk
+/// buffer.
+fn write_high_section(w: &mut impl Write, high: &VectorSet) -> Result<()> {
+    w.write_all(TAG_HIGH)?;
+    let len = 12u64 + high.flat().len() as u64 * 4;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(&(high.dim() as u32).to_le_bytes())?;
+    w.write_all(&(high.len() as u64).to_le_bytes())?;
+    let mut chunk: Vec<u8> = Vec::with_capacity(CHUNK);
+    for &x in high.flat() {
+        chunk.extend_from_slice(&x.to_le_bytes());
+        if chunk.len() >= CHUNK {
+            w.write_all(&chunk)?;
+            chunk.clear();
+        }
+    }
+    w.write_all(&chunk)?;
+    Ok(())
+}
+
+/// Staging-buffer size for the streamed HIGH section.
+const CHUNK: usize = 64 * 1024;
+
+fn decode_high(bytes: &[u8]) -> Result<VectorSet> {
+    ensure!(bytes.len() >= 12, "HIGH section too short");
+    let dim = u32::from_le_bytes(bytes[0..4].try_into()?) as usize;
+    let n = u64::from_le_bytes(bytes[4..12].try_into()?);
+    ensure!(dim >= 1 && dim <= 1 << 20, "implausible HIGH section dim {dim}");
+    // Checked arithmetic: a crafted n must fail validation, not wrap.
+    let want = n
+        .checked_mul(dim as u64 * 4)
+        .and_then(|p| p.checked_add(12))
+        .unwrap_or(u64::MAX);
+    ensure!(
+        bytes.len() as u64 == want,
+        "HIGH section length {} != expected {want}",
+        bytes.len()
+    );
+    let mut data = Vec::with_capacity((n as usize) * dim);
+    for c in bytes[12..].chunks_exact(4) {
+        data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+    Ok(VectorSet::from_flat(dim, data))
+}
+
+impl IndexBundle {
+    /// Write a `.phnsw` artifact assembling the four components.
+    pub fn save(
+        path: impl AsRef<Path>,
+        graph: &HnswGraph,
+        pca: &PcaModel,
+        low: &dyn VectorStore,
+        high: &VectorSet,
+    ) -> Result<()> {
+        let path = path.as_ref();
+        let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&4u32.to_le_bytes())?;
+        // GRPH/PCAM/LOWQ are buffered (a few bytes per edge / component —
+        // small next to the corpus); HIGH, the dominant section, streams
+        // straight from the corpus so save never holds a second f32 copy.
+        let mut graph_bytes = Vec::new();
+        serialize::write_to(graph, &mut graph_bytes)?;
+        write_section(&mut w, TAG_GRAPH, &graph_bytes)?;
+        drop(graph_bytes);
+        write_section(&mut w, TAG_PCA, &pca.to_bytes())?;
+        write_section(&mut w, TAG_LOW, &low.to_bytes())?;
+        write_high_section(&mut w, high)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Open a `.phnsw` artifact, validating every section against the
+    /// file length and the components against each other.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let file_len = f.metadata().with_context(|| format!("stat {}", path.display()))?.len();
+        let mut r = BufReader::new(f);
+
+        let mut head = [0u8; 12];
+        r.read_exact(&mut head).context("bundle header")?;
+        ensure!(&head[0..4] == MAGIC, "bad bundle magic {:?}", &head[0..4]);
+        let version = u32::from_le_bytes(head[4..8].try_into()?);
+        ensure!(version == VERSION, "unsupported bundle version {version}");
+        let n_sections = u32::from_le_bytes(head[8..12].try_into()?);
+        ensure!(n_sections <= 64, "implausible section count {n_sections}");
+
+        let mut consumed = 12u64;
+        let mut graph = None;
+        let mut pca = None;
+        let mut low: Option<Arc<dyn VectorStore>> = None;
+        let mut high = None;
+        for _ in 0..n_sections {
+            let mut tag = [0u8; 4];
+            r.read_exact(&mut tag).context("section tag")?;
+            let mut lenb = [0u8; 8];
+            r.read_exact(&mut lenb).context("section length")?;
+            let len = u64::from_le_bytes(lenb);
+            consumed += 12;
+            ensure!(
+                len <= file_len.saturating_sub(consumed),
+                "section {:?} declares {len} bytes but only {} remain",
+                tag,
+                file_len.saturating_sub(consumed)
+            );
+            let mut payload = vec![0u8; len as usize];
+            r.read_exact(&mut payload)
+                .with_context(|| format!("section {:?} payload", tag))?;
+            consumed += len;
+            match &tag {
+                TAG_GRAPH => {
+                    graph = Some(serialize::read_from(&mut payload.as_slice(), len)?);
+                }
+                TAG_PCA => pca = Some(PcaModel::from_bytes(&payload)?),
+                TAG_LOW => low = Some(store_from_bytes(&payload)?),
+                TAG_HIGH => high = Some(decode_high(&payload)?),
+                // Unknown tags are skipped: newer writers may append
+                // sections old readers do not understand.
+                _ => {}
+            }
+        }
+        let (Some(graph), Some(pca), Some(low), Some(high)) = (graph, pca, low, high) else {
+            bail!("bundle is missing a required section (GRPH/PCAM/LOWQ/HIGH)");
+        };
+
+        ensure!(graph.len() == high.len(), "graph/high-dim size mismatch");
+        ensure!(graph.len() == low.len(), "graph/low-dim size mismatch");
+        ensure!(pca.dim() == high.dim(), "PCA input dim != high-dim table dim");
+        ensure!(pca.k() == low.dim(), "PCA output dim != low-dim store dim");
+        Ok(Self {
+            graph: Arc::new(graph),
+            pca: Arc::new(pca),
+            low,
+            high: Arc::new(high),
+        })
+    }
+
+    /// Construct a ready-to-serve searcher from the opened components —
+    /// no PCA refit, no re-projection, no re-quantization.
+    pub fn searcher(&self, params: PhnswParams) -> PhnswSearcher {
+        PhnswSearcher::with_store(
+            self.graph.clone(),
+            self.high.clone(),
+            self.low.clone(),
+            self.pca.clone(),
+            params,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic::{generate, SyntheticConfig};
+    use crate::graph::build::{build, BuildConfig};
+    use crate::search::AnnEngine;
+    use crate::store::Sq8Store;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("phnsw_bundle_{}_{name}", std::process::id()));
+        p
+    }
+
+    struct Stack {
+        base: VectorSet,
+        queries: VectorSet,
+        graph: HnswGraph,
+        pca: PcaModel,
+        low: Sq8Store,
+    }
+
+    fn stack(n: usize) -> Stack {
+        let cfg = SyntheticConfig { n_base: n, n_queries: 20, ..SyntheticConfig::tiny() };
+        let (base, queries) = generate(&cfg);
+        let graph = build(&base, &BuildConfig { m: 8, ef_construction: 48, ..Default::default() });
+        let pca = PcaModel::fit(&base, 8, 7);
+        let low = Sq8Store::from_set(&pca.project_set(&base));
+        Stack { base, queries, graph, pca, low }
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise_identical() {
+        let s = stack(800);
+        let p = tmp("roundtrip.phnsw");
+        IndexBundle::save(&p, &s.graph, &s.pca, &s.low, &s.base).unwrap();
+        let b = IndexBundle::open(&p).unwrap();
+
+        let native = PhnswSearcher::with_store(
+            Arc::new(s.graph.clone()),
+            Arc::new(s.base.clone()),
+            Arc::new(s.low.clone()),
+            Arc::new(s.pca.clone()),
+            PhnswParams::default(),
+        );
+        let booted = b.searcher(PhnswParams::default());
+        for q in s.queries.iter() {
+            assert_eq!(native.search(q), booted.search(q), "bundle boot must be bitwise identical");
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn open_rejects_truncation_and_corruption() {
+        let s = stack(300);
+        let p = tmp("corrupt.phnsw");
+        IndexBundle::save(&p, &s.graph, &s.pca, &s.low, &s.base).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+
+        // Truncated mid-section.
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(IndexBundle::open(&p).is_err(), "truncated bundle must fail");
+
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0..4].copy_from_slice(b"XXXX");
+        std::fs::write(&p, &bad).unwrap();
+        assert!(IndexBundle::open(&p).is_err());
+
+        // Section length blown up far past the file: must be rejected by
+        // the remaining-bytes bound, not attempted as an allocation.
+        let mut bad = bytes.clone();
+        // First section header sits right after the 12-byte file header.
+        bad[16..24].copy_from_slice(&(u64::MAX / 2).to_le_bytes());
+        std::fs::write(&p, &bad).unwrap();
+        assert!(IndexBundle::open(&p).is_err());
+
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn open_rejects_missing_section() {
+        // A file with only the header and zero sections parses the frame
+        // but fails the completeness check.
+        let p = tmp("empty.phnsw");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"PHNB");
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let err = IndexBundle::open(&p).unwrap_err();
+        assert!(err.to_string().contains("missing"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn open_rejects_cross_component_mismatch() {
+        // Swap in a low store of the wrong population: sizes must be
+        // cross-checked at open time, before a searcher is built.
+        let s = stack(300);
+        let small = stack(100);
+        let p = tmp("mismatch.phnsw");
+        IndexBundle::save(&p, &s.graph, &s.pca, &small.low, &s.base).unwrap();
+        assert!(IndexBundle::open(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -9,9 +9,14 @@
 //! HLO *text* is the interchange format (not serialized protos): jax ≥ 0.5
 //! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns them (see /opt/xla-example/README.md).
+//!
+//! [`bundle`] is the other serve-time artifact: the single-file `.phnsw`
+//! index image (graph + PCA + vector stores) a server boots from.
 
 pub mod artifacts;
+pub mod bundle;
 pub mod engine;
 
 pub use artifacts::{ArtifactRegistry, Executable};
+pub use bundle::IndexBundle;
 pub use engine::XlaRerankEngine;

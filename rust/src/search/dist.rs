@@ -30,21 +30,105 @@ pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
         let d = x - y;
         tail += d * d;
     }
-    let s = ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
-    s + tail
+    hsum8(&acc) + tail
+}
+
+/// The exact lane reduction `l2_sq` uses — every batched kernel must
+/// reduce identically so batch results stay bitwise equal to per-row
+/// calls (tests pin this).
+#[inline]
+fn hsum8(acc: &[f32; 8]) -> f32 {
+    ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]))
 }
 
 /// Batched distances: query against `k` contiguous rows of `block`
 /// (row-major `k × dim`). Mirrors the 16-lane `Dist.L` unit: the caller
-/// hands one packed neighbor block (DB layout ③) and receives all lane
-/// distances. Results are written into `out[..k]`.
+/// hands one packed neighbor block (DB layout ③, [`crate::store`]'s
+/// gather path) and receives all lane distances in `out[..k]`.
+///
+/// Lane-coherent: rows are processed two at a time, each with its own
+/// 8-wide accumulator bank, so the FMA pipes see two independent
+/// dependency chains per SIMD lane instead of one serial chain per row.
+/// Per-row results are bitwise identical to [`l2_sq`] (same accumulation
+/// and reduction order).
 #[inline]
 pub fn l2_sq_batch(query: &[f32], block: &[f32], dim: usize, out: &mut [f32]) {
+    debug_assert!(dim > 0);
     debug_assert_eq!(block.len() % dim, 0);
     let k = block.len() / dim;
     debug_assert!(out.len() >= k);
-    for (lane, row) in block.chunks_exact(dim).enumerate() {
-        out[lane] = l2_sq(query, row);
+    let mut lane = 0;
+    while lane + 2 <= k {
+        let r0 = &block[lane * dim..(lane + 1) * dim];
+        let r1 = &block[(lane + 1) * dim..(lane + 2) * dim];
+        let mut acc0 = [0f32; 8];
+        let mut acc1 = [0f32; 8];
+        let qc = query.chunks_exact(8);
+        let c0 = r0.chunks_exact(8);
+        let c1 = r1.chunks_exact(8);
+        let (qt, t0, t1) = (qc.remainder(), c0.remainder(), c1.remainder());
+        for ((cq, ca), cb) in qc.zip(c0).zip(c1) {
+            for j in 0..8 {
+                let d0 = cq[j] - ca[j];
+                acc0[j] = d0.mul_add(d0, acc0[j]);
+                let d1 = cq[j] - cb[j];
+                acc1[j] = d1.mul_add(d1, acc1[j]);
+            }
+        }
+        let (mut tail0, mut tail1) = (0f32, 0f32);
+        for j in 0..qt.len() {
+            let d0 = qt[j] - t0[j];
+            tail0 += d0 * d0;
+            let d1 = qt[j] - t1[j];
+            tail1 += d1 * d1;
+        }
+        out[lane] = hsum8(&acc0) + tail0;
+        out[lane + 1] = hsum8(&acc1) + tail1;
+        lane += 2;
+    }
+    if lane < k {
+        out[lane] = l2_sq(query, &block[lane * dim..(lane + 1) * dim]);
+    }
+}
+
+/// Int8 sibling of [`l2_sq_batch`] for the SQ8 codec: the query arrives
+/// pre-transformed into code space (`q̃_d = (q_d − min_d) / scale_d`),
+/// `codes` holds `k` contiguous u8 rows, and `weight[d] = scale_d²`
+/// restores the metric — `out[lane] = Σ_d weight_d · (q̃_d − code_d)²`,
+/// the exact squared L2 against the dequantized row. Padded dimensions
+/// carry `weight = 0` and contribute nothing.
+#[inline]
+pub fn l2_sq_batch_sq8(
+    query_codes: &[f32],
+    codes: &[u8],
+    dim: usize,
+    weight: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert!(dim > 0);
+    debug_assert_eq!(codes.len() % dim, 0);
+    debug_assert_eq!(query_codes.len(), dim);
+    debug_assert_eq!(weight.len(), dim);
+    let k = codes.len() / dim;
+    debug_assert!(out.len() >= k);
+    for (lane, row) in codes.chunks_exact(dim).enumerate() {
+        let mut acc = [0f32; 8];
+        let qc = query_codes.chunks_exact(8);
+        let wc = weight.chunks_exact(8);
+        let rc = row.chunks_exact(8);
+        let (qt, wt, rt) = (qc.remainder(), wc.remainder(), rc.remainder());
+        for ((cq, cw), cr) in qc.zip(wc).zip(rc) {
+            for j in 0..8 {
+                let d = cq[j] - cr[j] as f32;
+                acc[j] = (cw[j] * d).mul_add(d, acc[j]);
+            }
+        }
+        let mut tail = 0f32;
+        for j in 0..qt.len() {
+            let d = qt[j] - rt[j] as f32;
+            tail += wt[j] * d * d;
+        }
+        out[lane] = hsum8(&acc) + tail;
     }
 }
 
@@ -94,16 +178,64 @@ mod tests {
     #[test]
     fn batch_matches_individual() {
         let mut rng = Pcg32::new(2);
-        let dim = 15;
-        let k = 16;
-        let q: Vec<f32> = (0..dim).map(|_| rng.gaussian()).collect();
-        let block: Vec<f32> = (0..k * dim).map(|_| rng.gaussian()).collect();
-        let mut out = vec![0f32; k];
-        l2_sq_batch(&q, &block, dim, &mut out);
-        for lane in 0..k {
-            let row = &block[lane * dim..(lane + 1) * dim];
-            assert_eq!(out[lane], l2_sq(&q, row));
+        // Odd/even row counts and tail/no-tail dims all go through the
+        // paired fast path plus the remainder row.
+        for (dim, k) in [(15usize, 16usize), (15, 7), (16, 32), (16, 1), (8, 3), (3, 5)] {
+            let q: Vec<f32> = (0..dim).map(|_| rng.gaussian()).collect();
+            let block: Vec<f32> = (0..k * dim).map(|_| rng.gaussian()).collect();
+            let mut out = vec![0f32; k];
+            l2_sq_batch(&q, &block, dim, &mut out);
+            for lane in 0..k {
+                let row = &block[lane * dim..(lane + 1) * dim];
+                assert_eq!(out[lane], l2_sq(&q, row), "dim={dim} k={k} lane={lane}");
+            }
         }
+    }
+
+    #[test]
+    fn sq8_batch_matches_scalar_dequant_reference() {
+        let mut rng = Pcg32::new(7);
+        for (dim, k) in [(16usize, 9usize), (8, 1), (24, 32), (5, 4)] {
+            // Synthetic affine params: positive scales, arbitrary mins.
+            let scale: Vec<f32> = (0..dim).map(|_| 0.01 + rng.f32()).collect();
+            let min: Vec<f32> = (0..dim).map(|_| rng.gaussian()).collect();
+            let weight: Vec<f32> = scale.iter().map(|&s| s * s).collect();
+            let codes: Vec<u8> = (0..k * dim).map(|_| (rng.f32() * 255.0) as u8).collect();
+            let q: Vec<f32> = (0..dim).map(|_| rng.gaussian() * 3.0).collect();
+            let qc: Vec<f32> =
+                (0..dim).map(|d| (q[d] - min[d]) / scale[d]).collect();
+            let mut out = vec![0f32; k];
+            l2_sq_batch_sq8(&qc, &codes, dim, &weight, &mut out);
+            for lane in 0..k {
+                // Scalar reference: dequantize, then plain L2.
+                let mut want = 0f64;
+                for d in 0..dim {
+                    let x = min[d] + codes[lane * dim + d] as f32 * scale[d];
+                    let diff = (q[d] - x) as f64;
+                    want += diff * diff;
+                }
+                let want = want as f32;
+                assert!(
+                    (out[lane] - want).abs() <= 1e-3 * want.max(1.0),
+                    "dim={dim} k={k} lane={lane}: {} vs {want}",
+                    out[lane]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sq8_batch_zero_weight_pads_contribute_nothing() {
+        // Pad lanes carry weight 0: whatever garbage sits in the query or
+        // code pads must not leak into the distance.
+        let dim = 8;
+        let weight = [1.0f32, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let qc = [3.0f32, -2.0, 99.0, 99.0, 99.0, 99.0, 99.0, 99.0];
+        let codes: Vec<u8> = vec![1, 2, 200, 200, 200, 200, 200, 200];
+        let mut out = [0f32; 1];
+        l2_sq_batch_sq8(&qc, &codes, dim, &weight, &mut out);
+        let want = (3.0f32 - 1.0).powi(2) + (-2.0f32 - 2.0).powi(2);
+        assert!((out[0] - want).abs() < 1e-5, "{} vs {want}", out[0]);
     }
 
     #[test]

@@ -6,12 +6,24 @@
 //! (`Dist.H`) and result-list update. The filter size k varies per layer
 //! (the paper's hierarchical-k contribution, §III-B).
 //!
+//! The low-dim filter table lives behind a [`VectorStore`] codec
+//! (default: SQ8 scalar quantization, 1 byte/component). Each hop gathers
+//! the adjacency list's vectors into one contiguous block and scores the
+//! whole list through a batched kernel — the software analog of the
+//! paper's inline neighbor block (DB layout ③) streaming through the
+//! 16-lane Dist.L unit — never one `row()` + `l2_sq` per neighbor. The
+//! high-dim rerank stays full-precision f32, so codec error perturbs only
+//! the filter *ordering*, exactly the regime the paper's Algorithm 1
+//! tolerates.
+//!
 //! Interpretation notes (the listing leaves two details implicit):
 //! * `C_pca_tmp` is reset at each hop — it collects the survivors that the
-//!   high-dim check *admitted* during this hop, and becomes the next hop's
-//!   `C_pca` (line 24), whose furthest element provides the `f_pca` prune
-//!   threshold (line 5). An empty survivor set yields an infinite
-//!   threshold, which is safe (no pruning).
+//!   high-dim check *admitted* during this hop, and its furthest low-dim
+//!   distance becomes the next hop's `f_pca` prune threshold (lines 5/24).
+//!   Only that scalar is carried between hops (survivors arrive sorted
+//!   ascending from `TopK::into_sorted`, so the threshold is the last
+//!   admitted element — no per-hop fold over a saved list). An empty
+//!   survivor set yields an infinite threshold, which is safe (no pruning).
 //! * The visited check happens *after* the top-k filter (line 16), exactly
 //!   as listed: already-visited nodes may occupy filter slots. This is the
 //!   faithful behaviour and is what the hardware's dataflow (§IV-C step 5)
@@ -27,61 +39,58 @@ use crate::dataset::gt::TopK;
 use crate::dataset::VectorSet;
 use crate::graph::HnswGraph;
 use crate::pca::PcaModel;
+use crate::store::{Sq8Store, StoreScratch, VectorStore};
 use std::sync::{Arc, Mutex};
 
 /// Per-query scratch state, pooled across queries.
 struct Scratch {
     visited: VisitedSet,
-    /// Projected query.
+    /// Projected query (PCA space, f32).
     q_pca: Vec<f32>,
-    /// Projected query, zero-padded to the SIMD width of `low_padded`.
-    q_pca_pad: Vec<f32>,
+    /// Store-side scratch: codec-domain query + gather block.
+    store: StoreScratch,
+    /// Per-hop batched filter distances (one slot per neighbor).
+    dists: Vec<f32>,
 }
 
-/// pHNSW searcher: graph + high-dim corpus + PCA model + projected corpus.
+/// pHNSW searcher: graph + high-dim corpus + PCA model + low-dim filter
+/// store (codec-quantized).
 pub struct PhnswSearcher {
     graph: Arc<HnswGraph>,
     data_high: Arc<VectorSet>,
-    /// PCA-projected corpus (the low-dim filter table, layout ③/④ payload).
-    data_low: Arc<VectorSet>,
-    /// `data_low` zero-padded to a SIMD-friendly width (§Perf L3 #3: a
-    /// 15-dim distance leaves a 7-element scalar tail on *every* filter
-    /// call — padding to a multiple of 8 keeps the hot loop fully
-    /// vectorized; zero padding cannot change distances).
-    low_padded: VectorSet,
+    /// The low-dim filter table (layout ③/④ payload) behind its codec.
+    low: Arc<dyn VectorStore>,
     pca: Arc<PcaModel>,
     params: PhnswParams,
     pool: Mutex<Vec<Scratch>>,
 }
 
-/// Round `dim` up to the SIMD lane multiple used by `dist::l2_sq`.
-fn pad_dim(dim: usize) -> usize {
-    dim.div_ceil(8) * 8
-}
-
 /// Algorithm 1's per-hop scoring, plugged into the shared beam core:
-/// low-dim filter over *all* neighbors (Dist.L, lines 9–13), top-k
-/// selection (kSort.L), then high-dim rerank of the ≤ k survivors
-/// (Dist.H, lines 14–23). The visited check happens *after* the filter
-/// (line 16), exactly as listed.
+/// low-dim filter over *all* neighbors (Dist.L, lines 9–13) through one
+/// gathered-block kernel call, top-k selection (kSort.L), then high-dim
+/// rerank of the ≤ k survivors (Dist.H, lines 14–23). The visited check
+/// happens *after* the filter (line 16), exactly as listed.
 struct PcaFilterScorer<'a> {
     /// Query, original space.
     q: &'a [f32],
-    /// Projected query, zero-padded to the filter table's SIMD width.
-    q_pca: &'a [f32],
     data_high: &'a VectorSet,
-    low_padded: &'a VectorSet,
+    /// Low-dim filter store (scored via its batched kernel).
+    low: &'a dyn VectorStore,
+    /// Codec-domain query + gather block, prepared once per search.
+    store_scratch: &'a mut StoreScratch,
+    /// Batched filter distances for the current hop.
+    dists: &'a mut Vec<f32>,
     /// Filter size at the current layer (set per layer by the caller).
     k: usize,
-    /// Survivors the high-dim check admitted during the previous hop;
-    /// their furthest low-dim distance is the f_pca prune threshold
-    /// (line 5). Empty → infinite threshold (no pruning), which is safe.
-    cpca_prev: Vec<(f32, u32)>,
+    /// f_pca prune threshold (line 5): the furthest low-dim distance among
+    /// the survivors the high-dim check admitted during the previous hop.
+    /// ∞ when no survivor was admitted (no pruning), which is safe.
+    f_pca: f32,
 }
 
 impl NeighborScorer for PcaFilterScorer<'_> {
     fn begin_layer(&mut self) {
-        self.cpca_prev.clear();
+        self.f_pca = f32::INFINITY;
     }
 
     fn expand(
@@ -90,25 +99,27 @@ impl NeighborScorer for PcaFilterScorer<'_> {
         visited: &mut VisitedSet,
         beam: &mut BeamState,
     ) -> HopCounters {
-        // line 5: f_pca ← furthest element of C_pca to q_pca (∞ if empty).
-        let f_pca = if self.cpca_prev.is_empty() {
-            f32::INFINITY
-        } else {
-            self.cpca_prev.iter().map(|&(d, _)| d).fold(f32::NEG_INFINITY, f32::max)
-        };
-
-        // Step 2 (lines 9–13): low-dim filter over all neighbors.
+        // Step 2 (lines 9–13): low-dim filter over all neighbors — one
+        // gather + one batched kernel pass for the whole adjacency list.
+        if self.dists.len() < nbrs.len() {
+            self.dists.resize(nbrs.len(), 0.0);
+        }
+        self.low.score_block(self.store_scratch, nbrs, &mut self.dists[..nbrs.len()]);
         let mut cpca = TopK::new(self.k); // top-k smallest low-dim distances
-        for &e in nbrs {
-            let d_low = l2_sq(self.q_pca, self.low_padded.row(e as usize));
-            if d_low < f_pca {
+        for (lane, &e) in nbrs.iter().enumerate() {
+            let d_low = self.dists[lane];
+            if d_low < self.f_pca {
                 cpca.offer(d_low, e);
             }
         }
         let survivors = cpca.into_sorted();
 
         // Step 3 (lines 14–23): high-dim rerank of the ≤ k survivors.
-        let mut cpca_tmp: Vec<(f32, u32)> = Vec::with_capacity(self.k);
+        // Survivors arrive ascending by d_low, so the last *admitted* one
+        // carries the next hop's f_pca threshold (line 24) — tracked as a
+        // scalar instead of re-deriving it from a saved C_pca list.
+        let mut next_f_pca = f32::INFINITY;
+        let mut any_admitted = false;
         let mut highdim = 0u32;
         for &(d_low, m) in &survivors {
             if visited.insert(m) {
@@ -117,12 +128,13 @@ impl NeighborScorer for PcaFilterScorer<'_> {
                 highdim += 1;
                 // lines 20–23: C ∪ m, F ∪ m (+ RMF) via the shared rule.
                 if beam.admit(d_m, m) {
-                    cpca_tmp.push((d_low, m)); // line 20
+                    next_f_pca = d_low; // line 20: m joins C_pca_tmp
+                    any_admitted = true;
                 }
             }
         }
-        // line 24: C_pca ← C_pca_tmp for the next hop's threshold.
-        self.cpca_prev = cpca_tmp;
+        // line 24: C_pca ← C_pca_tmp; only its furthest distance matters.
+        self.f_pca = if any_admitted { next_f_pca } else { f32::INFINITY };
 
         HopCounters {
             lowdim: nbrs.len() as u32,
@@ -133,25 +145,30 @@ impl NeighborScorer for PcaFilterScorer<'_> {
     }
 }
 
-/// Zero-pad every row of `vs` to `pad_dim(vs.dim())`.
-fn pad_set(vs: &VectorSet) -> VectorSet {
-    let dim = vs.dim();
-    let padded = pad_dim(dim);
-    if padded == dim {
-        return vs.clone();
-    }
-    let mut out = VectorSet::new(padded);
-    let mut buf = vec![0f32; padded];
-    for row in vs.iter() {
-        buf[..dim].copy_from_slice(row);
-        out.push(&buf);
-    }
-    out
-}
-
 impl PhnswSearcher {
-    /// Create a searcher. `data_low` must be `pca.project_set(data_high)`
-    /// (checked probabilistically on construction).
+    /// Create a searcher over an explicit low-dim store (any codec).
+    ///
+    /// `low` must hold the PCA projection of `data_high` under its codec;
+    /// dimensional consistency is asserted here, value consistency is the
+    /// caller's contract (see [`Self::new`] for the checked f32 path).
+    pub fn with_store(
+        graph: Arc<HnswGraph>,
+        data_high: Arc<VectorSet>,
+        low: Arc<dyn VectorStore>,
+        pca: Arc<PcaModel>,
+        params: PhnswParams,
+    ) -> Self {
+        assert_eq!(graph.len(), data_high.len(), "graph/corpus size mismatch");
+        assert_eq!(data_high.len(), low.len(), "high/low corpus size mismatch");
+        assert_eq!(pca.dim(), data_high.dim(), "PCA input dim mismatch");
+        assert_eq!(pca.k(), low.dim(), "PCA output dim mismatch");
+        params.validate().expect("invalid pHNSW params");
+        Self { graph, data_high, low, pca, params, pool: Mutex::new(Vec::new()) }
+    }
+
+    /// Create a searcher from an f32 projection table. `data_low` must be
+    /// `pca.project_set(data_high)` (checked probabilistically); it is
+    /// then quantized into the default SQ8 filter store.
     pub fn new(
         graph: Arc<HnswGraph>,
         data_high: Arc<VectorSet>,
@@ -159,13 +176,11 @@ impl PhnswSearcher {
         pca: Arc<PcaModel>,
         params: PhnswParams,
     ) -> Self {
-        assert_eq!(graph.len(), data_high.len(), "graph/corpus size mismatch");
         assert_eq!(data_high.len(), data_low.len(), "high/low corpus size mismatch");
-        assert_eq!(pca.dim(), data_high.dim(), "PCA input dim mismatch");
         assert_eq!(pca.k(), data_low.dim(), "PCA output dim mismatch");
-        params.validate().expect("invalid pHNSW params");
         // Spot-check that data_low really is the projection of data_high.
         if !data_high.is_empty() {
+            assert_eq!(pca.dim(), data_high.dim(), "PCA input dim mismatch");
             let mut buf = vec![0f32; pca.k()];
             for &probe in &[0usize, data_high.len() / 2, data_high.len() - 1] {
                 pca.project(data_high.row(probe), &mut buf);
@@ -176,11 +191,12 @@ impl PhnswSearcher {
                 );
             }
         }
-        let low_padded = pad_set(&data_low);
-        Self { graph, data_high, data_low, low_padded, pca, params, pool: Mutex::new(Vec::new()) }
+        let low: Arc<dyn VectorStore> = Arc::new(Sq8Store::from_set(&data_low));
+        Self::with_store(graph, data_high, low, pca, params)
     }
 
-    /// Convenience constructor: fit PCA and project the corpus internally.
+    /// Convenience constructor: fit PCA, project the corpus, and quantize
+    /// the filter table (SQ8) internally.
     pub fn build_from(
         graph: Arc<HnswGraph>,
         data_high: Arc<VectorSet>,
@@ -203,16 +219,17 @@ impl PhnswSearcher {
         &self.pca
     }
 
-    /// The projected corpus.
-    pub fn data_low(&self) -> &Arc<VectorSet> {
-        &self.data_low
+    /// The low-dim filter store (codec-quantized projected corpus).
+    pub fn low_store(&self) -> &Arc<dyn VectorStore> {
+        &self.low
     }
 
     fn take_scratch(&self) -> Scratch {
         self.pool.lock().unwrap().pop().unwrap_or_else(|| Scratch {
             visited: VisitedSet::new(self.data_high.len()),
             q_pca: vec![0f32; self.pca.k()],
-            q_pca_pad: vec![0f32; pad_dim(self.pca.k())],
+            store: StoreScratch::new(),
+            dists: vec![0f32; self.graph.m0() + 1],
         })
     }
 
@@ -227,21 +244,23 @@ impl PhnswSearcher {
             return Vec::new();
         }
         let mut scratch = self.take_scratch();
-        // Step 1 (Fig. 1(c)): project the query once, then pad to the
-        // filter table's SIMD width (padding lanes are zero on both sides,
-        // so distances are unchanged).
+        // Step 1 (Fig. 1(c)): project the query once, then transform it
+        // into the store's codec domain (both transforms are per-query,
+        // not per-hop).
         let mut q_pca = std::mem::take(&mut scratch.q_pca);
         self.pca.project(q, &mut q_pca);
-        let mut q_pad = std::mem::take(&mut scratch.q_pca_pad);
-        q_pad[..q_pca.len()].copy_from_slice(&q_pca);
+        let mut store_scratch = std::mem::take(&mut scratch.store);
+        self.low.prepare_query(&q_pca, &mut store_scratch);
+        let mut dists = std::mem::take(&mut scratch.dists);
 
         let mut scorer = PcaFilterScorer {
             q,
-            q_pca: &q_pad,
             data_high: &self.data_high,
-            low_padded: &self.low_padded,
+            low: self.low.as_ref(),
+            store_scratch: &mut store_scratch,
+            dists: &mut dists,
             k: self.params.k(0),
-            cpca_prev: Vec::new(),
+            f_pca: f32::INFINITY,
         };
         let ep = self.graph.entry_point();
         let mut entry = vec![(l2_sq(q, self.data_high.row(ep as usize)), ep)];
@@ -268,7 +287,8 @@ impl PhnswSearcher {
             trace.as_deref_mut(),
         );
         scratch.q_pca = q_pca;
-        scratch.q_pca_pad = q_pad;
+        scratch.store = store_scratch;
+        scratch.dists = dists;
         self.put_scratch(scratch);
         found.into_iter().map(|(dist, id)| Neighbor { id, dist }).collect()
     }
@@ -309,6 +329,7 @@ mod tests {
     use crate::metrics::recall_at_k;
     use crate::search::config::SearchParams;
     use crate::search::hnsw::HnswSearcher;
+    use crate::store::F32Store;
 
     struct Fixture {
         base: Arc<VectorSet>,
@@ -332,6 +353,13 @@ mod tests {
         PhnswSearcher::build_from(f.graph.clone(), f.base.clone(), 8, params, 7)
     }
 
+    /// Same stack but with the f32 filter codec (comparison path).
+    fn searcher_f32(f: &Fixture, params: PhnswParams) -> PhnswSearcher {
+        let pca = Arc::new(PcaModel::fit(&f.base, 8, 7));
+        let low = Arc::new(F32Store::from_set(&pca.project_set(&f.base)));
+        PhnswSearcher::with_store(f.graph.clone(), f.base.clone(), low, pca, params)
+    }
+
     #[test]
     fn returns_sorted_unique_results() {
         let f = fixture(1500);
@@ -345,6 +373,14 @@ mod tests {
             let ids: std::collections::HashSet<_> = res.iter().map(|n| n.id).collect();
             assert_eq!(ids.len(), res.len());
         }
+    }
+
+    #[test]
+    fn default_codec_is_sq8() {
+        let f = fixture(500);
+        let s = searcher(&f, PhnswParams::default());
+        assert_eq!(s.low_store().codec(), crate::store::Codec::Sq8);
+        assert_eq!(s.low_store().row_bytes(), 8, "1 byte per PCA component");
     }
 
     #[test]
@@ -368,6 +404,28 @@ mod tests {
         let r_p = recall_at_k(&collect(&phnsw), &f.gt, 10);
         assert!(r_h > 0.85, "hnsw recall {r_h}");
         assert!(r_p > r_h - 0.12, "phnsw recall {r_p} far below hnsw {r_h}");
+    }
+
+    #[test]
+    fn sq8_filter_tracks_f32_filter() {
+        // The quantized filter may reorder near-ties but must not change
+        // recall materially — the f32 rerank guards the result list.
+        let f = fixture(2000);
+        let params = PhnswParams::default();
+        let sq8 = searcher(&f, params.clone());
+        let f32s = searcher_f32(&f, params);
+        let collect = |e: &dyn AnnEngine| -> Vec<Vec<u32>> {
+            f.queries
+                .iter()
+                .map(|q| e.search(q).into_iter().map(|n| n.id).take(10).collect())
+                .collect()
+        };
+        let r_sq8 = recall_at_k(&collect(&sq8), &f.gt, 10);
+        let r_f32 = recall_at_k(&collect(&f32s), &f.gt, 10);
+        assert!(
+            (r_sq8 - r_f32).abs() <= 0.01,
+            "sq8 recall {r_sq8} drifted from f32 recall {r_f32}"
+        );
     }
 
     #[test]

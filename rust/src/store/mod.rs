@@ -1,0 +1,367 @@
+//! Pluggable vector storage — the codec layer between the raw corpus and
+//! the search engines.
+//!
+//! The paper's thesis is that neighbor-vector *traffic* is what limits
+//! HNSW (§III–IV): the filter stage touches every neighbor's low-dim
+//! vector on every hop. A [`VectorStore`] owns those vectors behind a
+//! codec and scores a whole adjacency list in one pass:
+//! [`VectorStore::score_block`] gathers the rows named by an id list into
+//! one contiguous block (the software twin of the DB-layout-③ inline
+//! neighbor block the Dist.L unit streams over) and hands the block to a
+//! batched kernel in [`crate::search::dist`].
+//!
+//! Two codecs:
+//!
+//! | codec | bytes/component | used for | kernel |
+//! |-------|-----------------|----------|--------|
+//! | [`F32Store`]          | 4 | high-dim rerank table, f32 filter baseline | `l2_sq_batch` |
+//! | [`sq8::Sq8Store`]     | 1 | PCA-projected filter vectors (default)     | `l2_sq_batch_sq8` |
+//!
+//! SQ8 is per-dimension affine scalar quantization (AQR-HNSW-style,
+//! arXiv 2602.21600): `code = round((x − min_d) / scale_d)` in u8, with
+//! exact distances recovered up to quantization error as
+//! `Σ_d scale_d² · (q̃_d − code_d)²` where `q̃_d = (q_d − min_d)/scale_d`.
+//! Filtering through SQ8 cuts low-dim bandwidth 4×; recall is guarded by
+//! the unchanged f32 rerank (paper Algorithm 1 step 3).
+
+pub mod sq8;
+
+pub use sq8::Sq8Store;
+
+use crate::dataset::VectorSet;
+use crate::search::dist::l2_sq_batch;
+
+/// Storage codec identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Codec {
+    /// Raw little-endian f32 components.
+    F32,
+    /// Per-dimension affine scalar-quantized u8 components.
+    Sq8,
+}
+
+impl Codec {
+    /// Stored bytes per vector component.
+    #[inline]
+    pub fn bytes_per_component(&self) -> usize {
+        match self {
+            Codec::F32 => 4,
+            Codec::Sq8 => 1,
+        }
+    }
+
+    /// Short display label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Codec::F32 => "f32",
+            Codec::Sq8 => "sq8",
+        }
+    }
+}
+
+/// Round `dim` up to the SIMD lane multiple the batched kernels assume.
+/// Zero-padded lanes contribute nothing to distances on either codec.
+#[inline]
+pub(crate) fn pad_dim(dim: usize) -> usize {
+    dim.div_ceil(8) * 8
+}
+
+/// Reusable per-query scratch for a store: the codec-domain query and the
+/// contiguous gather block. Pooled by the searcher so the hot path never
+/// allocates.
+#[derive(Debug, Default, Clone)]
+pub struct StoreScratch {
+    /// Query transformed into the store's scoring domain, zero-padded to
+    /// the store's padded width.
+    pub(crate) query: Vec<f32>,
+    /// Gathered f32 rows (F32 codec path).
+    pub(crate) block_f32: Vec<f32>,
+    /// Gathered u8 code rows (SQ8 codec path).
+    pub(crate) block_u8: Vec<u8>,
+}
+
+impl StoreScratch {
+    /// Fresh, empty scratch (buffers grow on first use).
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// A read-only table of fixed-dimension vectors behind a codec.
+///
+/// The contract of [`Self::score_block`] is the heart of the filter
+/// stage: gather the rows of `ids` into one contiguous block and score
+/// them against the query prepared by [`Self::prepare_query`] in a single
+/// batched kernel pass — never one `row()` + `l2_sq` per neighbor.
+pub trait VectorStore: Send + Sync {
+    /// Number of vectors.
+    fn len(&self) -> usize;
+
+    /// True if the store holds no vectors.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Logical dimensionality of every vector.
+    fn dim(&self) -> usize;
+
+    /// The storage codec.
+    fn codec(&self) -> Codec;
+
+    /// Stored bytes of one row's vector payload (logical, unpadded).
+    fn row_bytes(&self) -> usize {
+        self.dim() * self.codec().bytes_per_component()
+    }
+
+    /// Total stored vector payload bytes (logical, unpadded).
+    fn payload_bytes(&self) -> usize {
+        self.len() * self.row_bytes()
+    }
+
+    /// Decode row `i` into f32 components (`out.len() == dim()`).
+    fn decode_row(&self, i: usize, out: &mut [f32]);
+
+    /// Transform a query (length `dim()`, f32 space) into the codec's
+    /// scoring domain, leaving it in `scratch` for [`Self::score_block`].
+    fn prepare_query(&self, q: &[f32], scratch: &mut StoreScratch);
+
+    /// Gather the rows of `ids` into `scratch`'s contiguous block and
+    /// write `out[i] =` squared L2 between the prepared query and row
+    /// `ids[i]` — exact for F32, quantized for SQ8. `out.len() >= ids.len()`.
+    fn score_block(&self, scratch: &mut StoreScratch, ids: &[u32], out: &mut [f32]);
+
+    /// Serialize to a self-describing binary blob (see each codec's
+    /// format note). Round-trips bitwise through [`store_from_bytes`].
+    fn to_bytes(&self) -> Vec<u8>;
+}
+
+/// The f32 codec: today's [`VectorSet`] semantics with rows pre-padded to
+/// the SIMD width, so the batched kernel never sees a scalar tail.
+///
+/// Blob format (`F32S`):
+/// `[magic "F32S"][u32 dim][u64 n][n × dim × f32-le]` (unpadded rows).
+#[derive(Debug, Clone)]
+pub struct F32Store {
+    dim: usize,
+    padded: usize,
+    /// Row-major `n × padded`, pad lanes zero.
+    data: Vec<f32>,
+}
+
+impl F32Store {
+    /// Build from a [`VectorSet`] (rows are copied and zero-padded).
+    pub fn from_set(vs: &VectorSet) -> Self {
+        let dim = vs.dim();
+        let padded = pad_dim(dim);
+        let mut data = vec![0f32; vs.len() * padded];
+        for (i, row) in vs.iter().enumerate() {
+            data[i * padded..i * padded + dim].copy_from_slice(row);
+        }
+        Self { dim, padded, data }
+    }
+
+    /// Deserialize a blob written by [`VectorStore::to_bytes`].
+    pub fn from_bytes(bytes: &[u8]) -> crate::Result<Self> {
+        use anyhow::ensure;
+        ensure!(bytes.len() >= 16, "F32 store blob too short");
+        ensure!(&bytes[0..4] == b"F32S", "bad F32 store magic");
+        let dim = u32::from_le_bytes(bytes[4..8].try_into()?) as usize;
+        let n = u64::from_le_bytes(bytes[8..16].try_into()?);
+        ensure!(dim >= 1 && dim <= 1 << 20, "implausible F32 store dim {dim}");
+        // Checked arithmetic: a crafted n must fail validation, not wrap.
+        let want = n
+            .checked_mul(dim as u64 * 4)
+            .and_then(|p| p.checked_add(16))
+            .unwrap_or(u64::MAX);
+        ensure!(
+            bytes.len() as u64 == want,
+            "F32 store blob length {} != expected {want}",
+            bytes.len()
+        );
+        let n = n as usize;
+        let padded = pad_dim(dim);
+        let mut data = vec![0f32; n * padded];
+        for (i, row) in bytes[16..].chunks_exact(dim * 4).enumerate() {
+            for (d, c) in row.chunks_exact(4).enumerate() {
+                data[i * padded + d] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+        }
+        Ok(Self { dim, padded, data })
+    }
+
+    /// The padded row width the kernels run at.
+    pub fn padded_dim(&self) -> usize {
+        self.padded
+    }
+}
+
+impl VectorStore for F32Store {
+    fn len(&self) -> usize {
+        if self.padded == 0 {
+            0
+        } else {
+            self.data.len() / self.padded
+        }
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn codec(&self) -> Codec {
+        Codec::F32
+    }
+
+    fn decode_row(&self, i: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.dim);
+        out.copy_from_slice(&self.data[i * self.padded..i * self.padded + self.dim]);
+    }
+
+    fn prepare_query(&self, q: &[f32], scratch: &mut StoreScratch) {
+        assert_eq!(q.len(), self.dim);
+        scratch.query.clear();
+        scratch.query.resize(self.padded, 0.0);
+        scratch.query[..self.dim].copy_from_slice(q);
+    }
+
+    fn score_block(&self, scratch: &mut StoreScratch, ids: &[u32], out: &mut [f32]) {
+        debug_assert!(out.len() >= ids.len());
+        let StoreScratch { query, block_f32, .. } = scratch;
+        block_f32.clear();
+        block_f32.reserve(ids.len() * self.padded);
+        for &id in ids {
+            let i = id as usize;
+            block_f32.extend_from_slice(&self.data[i * self.padded..(i + 1) * self.padded]);
+        }
+        l2_sq_batch(query, block_f32, self.padded, out);
+    }
+
+    fn to_bytes(&self) -> Vec<u8> {
+        let n = self.len();
+        let mut out = Vec::with_capacity(16 + n * self.dim * 4);
+        out.extend_from_slice(b"F32S");
+        out.extend_from_slice(&(self.dim as u32).to_le_bytes());
+        out.extend_from_slice(&(n as u64).to_le_bytes());
+        for i in 0..n {
+            for &x in &self.data[i * self.padded..i * self.padded + self.dim] {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        out
+    }
+}
+
+/// Deserialize any codec's blob (dispatching on the magic) into a boxed
+/// store — the bundle reader's entry point.
+pub fn store_from_bytes(bytes: &[u8]) -> crate::Result<std::sync::Arc<dyn VectorStore>> {
+    use anyhow::bail;
+    if bytes.len() < 4 {
+        bail!("vector store blob too short");
+    }
+    match &bytes[0..4] {
+        b"F32S" => Ok(std::sync::Arc::new(F32Store::from_bytes(bytes)?)),
+        b"SQ81" => Ok(std::sync::Arc::new(Sq8Store::from_bytes(bytes)?)),
+        other => bail!("unknown vector store magic {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+    use crate::search::dist::l2_sq;
+
+    fn random_set(n: usize, dim: usize, seed: u64) -> VectorSet {
+        let mut rng = Pcg32::new(seed);
+        let mut vs = VectorSet::new(dim);
+        let mut row = vec![0f32; dim];
+        for _ in 0..n {
+            for x in &mut row {
+                *x = rng.gaussian() * 3.0;
+            }
+            vs.push(&row);
+        }
+        vs
+    }
+
+    #[test]
+    fn f32_store_scores_exactly_like_per_row_l2() {
+        let vs = random_set(200, 15, 1);
+        let store = F32Store::from_set(&vs);
+        assert_eq!(store.len(), 200);
+        assert_eq!(store.dim(), 15);
+        assert_eq!(store.padded_dim(), 16);
+        let mut rng = Pcg32::new(2);
+        let q: Vec<f32> = (0..15).map(|_| rng.gaussian()).collect();
+        let mut scratch = StoreScratch::new();
+        store.prepare_query(&q, &mut scratch);
+        let ids: Vec<u32> = vec![3, 17, 44, 3, 199, 0];
+        let mut out = vec![0f32; ids.len()];
+        store.score_block(&mut scratch, &ids, &mut out);
+        for (lane, &id) in ids.iter().enumerate() {
+            let want = l2_sq(&q, vs.row(id as usize));
+            assert!(
+                (out[lane] - want).abs() <= 1e-4 * want.max(1.0),
+                "lane {lane} id {id}: {} vs {want}",
+                out[lane]
+            );
+        }
+    }
+
+    #[test]
+    fn f32_store_decode_roundtrips() {
+        let vs = random_set(50, 7, 3);
+        let store = F32Store::from_set(&vs);
+        let mut row = vec![0f32; 7];
+        for i in [0usize, 25, 49] {
+            store.decode_row(i, &mut row);
+            assert_eq!(&row[..], vs.row(i));
+        }
+    }
+
+    #[test]
+    fn f32_store_serialization_roundtrips_bitwise() {
+        let vs = random_set(80, 15, 4);
+        let store = F32Store::from_set(&vs);
+        let blob = store.to_bytes();
+        let back = F32Store::from_bytes(&blob).unwrap();
+        assert_eq!(store.data, back.data);
+        assert_eq!(store.payload_bytes(), 80 * 15 * 4);
+    }
+
+    #[test]
+    fn store_from_bytes_dispatches_and_rejects_garbage() {
+        let vs = random_set(10, 5, 5);
+        let f = F32Store::from_set(&vs).to_bytes();
+        assert_eq!(store_from_bytes(&f).unwrap().codec(), Codec::F32);
+        let s = Sq8Store::from_set(&vs).to_bytes();
+        assert_eq!(store_from_bytes(&s).unwrap().codec(), Codec::Sq8);
+        assert!(store_from_bytes(b"JUNKjunk").is_err());
+        assert!(store_from_bytes(b"").is_err());
+    }
+
+    #[test]
+    fn f32_from_bytes_rejects_truncation() {
+        let vs = random_set(10, 5, 6);
+        let blob = F32Store::from_set(&vs).to_bytes();
+        assert!(F32Store::from_bytes(&blob[..blob.len() - 3]).is_err());
+        assert!(F32Store::from_bytes(&blob[..10]).is_err());
+    }
+
+    #[test]
+    fn codec_bytes_per_component() {
+        assert_eq!(Codec::F32.bytes_per_component(), 4);
+        assert_eq!(Codec::Sq8.bytes_per_component(), 1);
+        assert_eq!(Codec::Sq8.label(), "sq8");
+    }
+
+    #[test]
+    fn empty_ids_score_nothing() {
+        let vs = random_set(10, 8, 7);
+        let store = F32Store::from_set(&vs);
+        let mut scratch = StoreScratch::new();
+        store.prepare_query(vs.row(0), &mut scratch);
+        let mut out = [0f32; 0];
+        store.score_block(&mut scratch, &[], &mut out);
+    }
+}

@@ -1,0 +1,348 @@
+//! SQ8: per-dimension affine scalar quantization to u8.
+//!
+//! Training scans the corpus once for per-dimension `[min, max]`; each
+//! component is stored as `code = round((x − min_d) / scale_d)` with
+//! `scale_d = (max_d − min_d) / 255`. Dequantization is
+//! `x̂ = min_d + code · scale_d`.
+//!
+//! Scoring never dequantizes the corpus side: the query is transformed
+//! once per search into code space (`q̃_d = (q_d − min_d) / scale_d`) and
+//! the batched kernel computes `Σ_d scale_d² · (q̃_d − code_d)²`, which
+//! equals `Σ_d (q_d − x̂_d)²` — the exact squared L2 against the
+//! dequantized row. Quantization error is bounded by `scale_d / 2` per
+//! component, a rounding perturbation of the *filter ordering* only; the
+//! f32 rerank recomputes true distances for every survivor.
+
+use super::{pad_dim, Codec, StoreScratch, VectorStore};
+use crate::dataset::VectorSet;
+use crate::search::dist::l2_sq_batch_sq8;
+
+/// Scalar-quantized (u8) vector store with per-dimension affine params.
+///
+/// Blob format (`SQ81`):
+/// `[magic "SQ81"][u32 dim][u64 n][dim × f32 min][dim × f32 scale][n × dim × u8 codes]`
+/// (unpadded codes; the SIMD padding is rebuilt on load).
+#[derive(Debug, Clone)]
+pub struct Sq8Store {
+    dim: usize,
+    padded: usize,
+    /// Row-major `n × padded` codes, pad lanes 0.
+    codes: Vec<u8>,
+    /// Per-dimension dequant offset (length `dim`).
+    min: Vec<f32>,
+    /// Per-dimension dequant step (length `dim`, strictly positive).
+    scale: Vec<f32>,
+    /// `scale_d²`, padded to `padded` with zeros — the batch kernel's
+    /// per-dimension weights (pad lanes contribute nothing).
+    weight: Vec<f32>,
+    /// `1 / scale_d` (length `dim`), for encode and query preparation.
+    inv_scale: Vec<f32>,
+}
+
+impl Sq8Store {
+    /// Train the per-dimension affine params on `vs` and encode every row.
+    pub fn from_set(vs: &VectorSet) -> Self {
+        let dim = vs.dim();
+        let mut min = vec![f32::INFINITY; dim];
+        let mut max = vec![f32::NEG_INFINITY; dim];
+        for row in vs.iter() {
+            for d in 0..dim {
+                min[d] = min[d].min(row[d]);
+                max[d] = max[d].max(row[d]);
+            }
+        }
+        if vs.is_empty() {
+            min.iter_mut().for_each(|m| *m = 0.0);
+            max.iter_mut().for_each(|m| *m = 0.0);
+        }
+        let scale: Vec<f32> = min
+            .iter()
+            .zip(&max)
+            .map(|(&lo, &hi)| {
+                let range = hi - lo;
+                // A constant (or non-finite) dimension quantizes to code 0
+                // with a unit step, keeping the query transform finite.
+                if range > 0.0 && range.is_finite() {
+                    range / 255.0
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        let mut s = Self::from_params(dim, min, scale, Vec::new());
+        s.codes = vec![0u8; vs.len() * s.padded];
+        for (i, row) in vs.iter().enumerate() {
+            let base = i * s.padded;
+            for d in 0..dim {
+                let c = ((row[d] - s.min[d]) * s.inv_scale[d]).round();
+                s.codes[base + d] = c.clamp(0.0, 255.0) as u8;
+            }
+        }
+        s
+    }
+
+    /// Assemble from explicit params + pre-padded codes (internal).
+    fn from_params(dim: usize, min: Vec<f32>, scale: Vec<f32>, codes: Vec<u8>) -> Self {
+        assert!(dim > 0, "dimension must be positive");
+        assert_eq!(min.len(), dim);
+        assert_eq!(scale.len(), dim);
+        let padded = pad_dim(dim);
+        let mut weight = vec![0f32; padded];
+        for d in 0..dim {
+            weight[d] = scale[d] * scale[d];
+        }
+        let inv_scale: Vec<f32> = scale.iter().map(|&s| 1.0 / s).collect();
+        Self { dim, padded, codes, min, scale, weight, inv_scale }
+    }
+
+    /// Deserialize a blob written by [`VectorStore::to_bytes`].
+    pub fn from_bytes(bytes: &[u8]) -> crate::Result<Self> {
+        use anyhow::ensure;
+        ensure!(bytes.len() >= 16, "SQ8 store blob too short");
+        ensure!(&bytes[0..4] == b"SQ81", "bad SQ8 store magic");
+        let dim = u32::from_le_bytes(bytes[4..8].try_into()?) as usize;
+        let n = u64::from_le_bytes(bytes[8..16].try_into()?);
+        ensure!(dim >= 1 && dim <= 1 << 20, "implausible SQ8 store dim {dim}");
+        // Checked arithmetic: a crafted n must fail validation, not wrap.
+        let want = n
+            .checked_mul(dim as u64)
+            .and_then(|p| p.checked_add(16 + 8 * dim as u64))
+            .unwrap_or(u64::MAX);
+        ensure!(
+            bytes.len() as u64 == want,
+            "SQ8 store blob length {} != expected {want}",
+            bytes.len()
+        );
+        let n = n as usize;
+        let f32s = |off: usize| -> Vec<f32> {
+            bytes[off..off + 4 * dim]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        };
+        let min = f32s(16);
+        let scale = f32s(16 + 4 * dim);
+        ensure!(
+            scale.iter().all(|&s| s > 0.0 && s.is_finite()),
+            "SQ8 store scale must be positive and finite"
+        );
+        let mut s = Self::from_params(dim, min, scale, Vec::new());
+        s.codes = vec![0u8; n * s.padded];
+        let payload = &bytes[16 + 8 * dim..];
+        for (i, row) in payload.chunks_exact(dim).enumerate() {
+            s.codes[i * s.padded..i * s.padded + dim].copy_from_slice(row);
+        }
+        Ok(s)
+    }
+
+    /// Per-dimension dequant offsets.
+    pub fn min(&self) -> &[f32] {
+        &self.min
+    }
+
+    /// Per-dimension dequant steps.
+    pub fn scale(&self) -> &[f32] {
+        &self.scale
+    }
+}
+
+impl VectorStore for Sq8Store {
+    fn len(&self) -> usize {
+        self.codes.len() / self.padded
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn codec(&self) -> Codec {
+        Codec::Sq8
+    }
+
+    fn decode_row(&self, i: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.dim);
+        let row = &self.codes[i * self.padded..i * self.padded + self.dim];
+        for d in 0..self.dim {
+            out[d] = self.min[d] + row[d] as f32 * self.scale[d];
+        }
+    }
+
+    fn prepare_query(&self, q: &[f32], scratch: &mut StoreScratch) {
+        assert_eq!(q.len(), self.dim);
+        scratch.query.clear();
+        scratch.query.resize(self.padded, 0.0);
+        for d in 0..self.dim {
+            scratch.query[d] = (q[d] - self.min[d]) * self.inv_scale[d];
+        }
+    }
+
+    fn score_block(&self, scratch: &mut StoreScratch, ids: &[u32], out: &mut [f32]) {
+        debug_assert!(out.len() >= ids.len());
+        let StoreScratch { query, block_u8, .. } = scratch;
+        block_u8.clear();
+        block_u8.reserve(ids.len() * self.padded);
+        for &id in ids {
+            let i = id as usize;
+            block_u8.extend_from_slice(&self.codes[i * self.padded..(i + 1) * self.padded]);
+        }
+        l2_sq_batch_sq8(query, block_u8, self.padded, &self.weight, out);
+    }
+
+    fn to_bytes(&self) -> Vec<u8> {
+        let n = self.len();
+        let mut out = Vec::with_capacity(16 + 8 * self.dim + n * self.dim);
+        out.extend_from_slice(b"SQ81");
+        out.extend_from_slice(&(self.dim as u32).to_le_bytes());
+        out.extend_from_slice(&(n as u64).to_le_bytes());
+        for &m in &self.min {
+            out.extend_from_slice(&m.to_le_bytes());
+        }
+        for &s in &self.scale {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+        for i in 0..n {
+            out.extend_from_slice(&self.codes[i * self.padded..i * self.padded + self.dim]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::l2_sq_scalar;
+    use crate::rng::Pcg32;
+
+    fn random_set(n: usize, dim: usize, seed: u64) -> VectorSet {
+        let mut rng = Pcg32::new(seed);
+        let mut vs = VectorSet::new(dim);
+        let mut row = vec![0f32; dim];
+        for _ in 0..n {
+            for x in &mut row {
+                *x = rng.gaussian() * 5.0 + 1.0;
+            }
+            vs.push(&row);
+        }
+        vs
+    }
+
+    #[test]
+    fn decode_error_bounded_by_half_step() {
+        let vs = random_set(300, 15, 1);
+        let store = Sq8Store::from_set(&vs);
+        let mut dec = vec![0f32; 15];
+        for i in (0..300).step_by(17) {
+            store.decode_row(i, &mut dec);
+            for d in 0..15 {
+                let err = (dec[d] - vs.row(i)[d]).abs();
+                assert!(
+                    err <= 0.5 * store.scale()[d] + 1e-5,
+                    "row {i} dim {d}: err {err} > step/2 {}",
+                    0.5 * store.scale()[d]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scored_distance_matches_dequantized_l2() {
+        // The kernel's weighted code-space form must equal plain L2
+        // against the dequantized rows (up to f32 rounding).
+        let vs = random_set(120, 15, 2);
+        let store = Sq8Store::from_set(&vs);
+        let mut rng = Pcg32::new(3);
+        let q: Vec<f32> = (0..15).map(|_| rng.gaussian() * 5.0).collect();
+        let mut scratch = StoreScratch::new();
+        store.prepare_query(&q, &mut scratch);
+        let ids: Vec<u32> = vec![0, 7, 63, 119, 7];
+        let mut out = vec![0f32; ids.len()];
+        store.score_block(&mut scratch, &ids, &mut out);
+        let mut dec = vec![0f32; 15];
+        for (lane, &id) in ids.iter().enumerate() {
+            store.decode_row(id as usize, &mut dec);
+            let want = l2_sq_scalar(&q, &dec);
+            assert!(
+                (out[lane] - want).abs() <= 1e-3 * want.max(1.0),
+                "lane {lane}: {} vs {want}",
+                out[lane]
+            );
+        }
+    }
+
+    #[test]
+    fn quantized_distance_close_to_true_distance() {
+        let vs = random_set(200, 15, 4);
+        let store = Sq8Store::from_set(&vs);
+        let q = vs.row(0).to_vec();
+        let mut scratch = StoreScratch::new();
+        store.prepare_query(&q, &mut scratch);
+        let ids: Vec<u32> = (0..200).collect();
+        let mut out = vec![0f32; 200];
+        store.score_block(&mut scratch, &ids, &mut out);
+        for (i, &got) in out.iter().enumerate() {
+            let truth = l2_sq_scalar(&q, vs.row(i));
+            // Worst-case absolute error: Σ_d (step_d·(|q̃−x̃| + ¼·step))
+            // — loose bound: 2·√truth·ε + ε² with ε = ‖step/2‖.
+            let eps: f32 =
+                store.scale().iter().map(|&s| (0.5 * s) * (0.5 * s)).sum::<f32>().sqrt();
+            let slack = 2.0 * truth.sqrt() * eps + eps * eps + 1e-3;
+            assert!(
+                (got - truth).abs() <= slack,
+                "row {i}: quantized {got} vs true {truth} (slack {slack})"
+            );
+        }
+    }
+
+    #[test]
+    fn serialization_roundtrips_bitwise() {
+        let vs = random_set(90, 15, 5);
+        let store = Sq8Store::from_set(&vs);
+        let blob = store.to_bytes();
+        let back = Sq8Store::from_bytes(&blob).unwrap();
+        assert_eq!(store.codes, back.codes);
+        assert_eq!(store.min, back.min);
+        assert_eq!(store.scale, back.scale);
+        assert_eq!(store.weight, back.weight);
+        assert_eq!(store.payload_bytes(), 90 * 15);
+    }
+
+    #[test]
+    fn from_bytes_rejects_corruption() {
+        let vs = random_set(20, 8, 6);
+        let blob = Sq8Store::from_set(&vs).to_bytes();
+        assert!(Sq8Store::from_bytes(&blob[..blob.len() - 1]).is_err());
+        assert!(Sq8Store::from_bytes(b"SQ81").is_err());
+        let mut bad = blob.clone();
+        bad[0..4].copy_from_slice(b"NOPE");
+        assert!(Sq8Store::from_bytes(&bad).is_err());
+        // Zero out a scale → must be rejected (would poison the query
+        // transform with infinities).
+        let mut bad = blob;
+        let scale_off = 16 + 4 * 8;
+        bad[scale_off..scale_off + 4].copy_from_slice(&0f32.to_le_bytes());
+        assert!(Sq8Store::from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn constant_dimension_is_exact() {
+        let mut vs = VectorSet::new(3);
+        for i in 0..10 {
+            vs.push(&[42.0, i as f32, -1.0]);
+        }
+        let store = Sq8Store::from_set(&vs);
+        let mut dec = vec![0f32; 3];
+        for i in 0..10 {
+            store.decode_row(i, &mut dec);
+            assert_eq!(dec[0], 42.0, "constant dim must decode exactly");
+            assert_eq!(dec[2], -1.0);
+        }
+    }
+
+    #[test]
+    fn payload_is_quarter_of_f32() {
+        let vs = random_set(64, 16, 7);
+        let sq8 = Sq8Store::from_set(&vs);
+        let f32s = super::super::F32Store::from_set(&vs);
+        assert_eq!(4 * sq8.payload_bytes(), f32s.payload_bytes());
+    }
+}

@@ -16,9 +16,11 @@ use crate::graph::{serialize, HnswGraph};
 use crate::hw::{simulate_workload, CoreConfig, EngineKind, WorkloadSim};
 use crate::metrics::{qps, recall_at_k};
 use crate::pca::PcaModel;
+use crate::runtime::IndexBundle;
 use crate::search::{
     AnnEngine, HnswSearcher, PhnswParams, PhnswSearcher, SearchParams, SearchTrace,
 };
+use crate::store::{Codec, F32Store, Sq8Store, VectorStore};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -155,12 +157,26 @@ impl Workbench {
         HnswSearcher::new(self.graph.clone(), self.base.clone(), params)
     }
 
-    /// pHNSW searcher (pHNSW-CPU + the traced workload source for the sim).
+    /// pHNSW searcher (pHNSW-CPU + the traced workload source for the
+    /// sim). The filter table is SQ8-quantized — the system default.
     pub fn phnsw(&self, params: PhnswParams) -> PhnswSearcher {
         PhnswSearcher::new(
             self.graph.clone(),
             self.base.clone(),
             self.base_low.clone(),
+            self.pca.clone(),
+            params,
+        )
+    }
+
+    /// pHNSW searcher with the f32 low-dim codec — the comparison path
+    /// recall regression tests hold the SQ8 default against.
+    pub fn phnsw_f32(&self, params: PhnswParams) -> PhnswSearcher {
+        let low: Arc<dyn VectorStore> = Arc::new(F32Store::from_set(&self.base_low));
+        PhnswSearcher::with_store(
+            self.graph.clone(),
+            self.base.clone(),
+            low,
             self.pca.clone(),
             params,
         )
@@ -202,9 +218,19 @@ impl Workbench {
             .collect()
     }
 
-    /// Build the DB layout an engine variant needs.
+    /// Build the DB layout an engine variant needs. Low-dim payloads use
+    /// the SQ8 codec (1 B/component) — what the store layer actually
+    /// serves — so simulated DRAM traffic and energy reflect it.
     pub fn layout(&self, kind: LayoutKind) -> DbLayout {
-        DbLayout::new(&self.graph, kind, self.cfg.dim_low, self.base.dim())
+        DbLayout::with_low_codec(&self.graph, kind, self.cfg.dim_low, self.base.dim(), Codec::Sq8)
+    }
+
+    /// Save the assembled index as a single `.phnsw` artifact (CSR graph
+    /// + PCA + SQ8 low store + f32 high store). A server boots from this
+    /// file via [`IndexBundle::open`] without refitting anything.
+    pub fn save_bundle(&self, path: impl AsRef<std::path::Path>) -> crate::Result<()> {
+        let low = Sq8Store::from_set(&self.base_low);
+        IndexBundle::save(path, &self.graph, &self.pca, &low, &self.base)
     }
 
     /// Run the processor simulation for one Table III cell.

@@ -205,6 +205,35 @@ fn latency_stats_populated_under_concurrent_load() {
 }
 
 #[test]
+fn server_boots_from_phnsw_bundle() {
+    // The single-artifact boot path: save the assembled index as one
+    // .phnsw file, start a server straight from it, and check served
+    // results match the in-memory engine bitwise.
+    let w = wb();
+    let path = std::env::temp_dir()
+        .join(format!("phnsw_coord_boot_{}.phnsw", std::process::id()));
+    w.save_bundle(&path).unwrap();
+    let bundle = phnsw::runtime::IndexBundle::open(&path).unwrap();
+    let server = Server::start_from_bundle(
+        ServerConfig { workers: 2, ..Default::default() },
+        &bundle,
+        PhnswParams::default(),
+    );
+    let h = server.handle();
+    let direct = w.phnsw(PhnswParams::default());
+    for qi in 0..10 {
+        let res = h.query_blocking(Query::new(w.queries.row(qi).to_vec())).unwrap();
+        assert_eq!(res.engine, "phnsw");
+        let want: Vec<u32> =
+            direct.search(w.queries.row(qi)).iter().take(10).map(|n| n.id).collect();
+        let got: Vec<u32> = res.neighbors.iter().map(|n| n.id).collect();
+        assert_eq!(got, want, "bundle-booted server diverged on query {qi}");
+    }
+    server.shutdown();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
 fn shutdown_drains_in_flight_work() {
     let w = wb();
     let server = Server::start(

@@ -29,6 +29,42 @@ fn recall_targets_at_paper_operating_point() {
 }
 
 #[test]
+fn sq8_filter_recall_within_001_of_f32_filter() {
+    // Recall regression guard for the quantized filter path: the SQ8
+    // codec (the PhnswSearcher default) must hold a fixed recall floor
+    // AND stay within 0.01 of the f32-filtered path — quantization may
+    // only perturb filter ordering, never the result quality, because
+    // the f32 rerank recomputes true distances for every survivor.
+    let w = wb(8_000, 150);
+    let sq8 = w.evaluate(&w.phnsw(PhnswParams::default()), 10);
+    let f32e = w.evaluate(&w.phnsw_f32(PhnswParams::default()), 10);
+    assert!(sq8.recall >= 0.90, "sq8-filtered recall {} below floor", sq8.recall);
+    assert!(
+        (sq8.recall - f32e.recall).abs() <= 0.01,
+        "sq8 recall {} drifted from f32 recall {}",
+        sq8.recall,
+        f32e.recall
+    );
+}
+
+#[test]
+fn phnsw_bundle_roundtrips_to_bitwise_identical_results() {
+    // The .phnsw artifact contract: save → open → every search result is
+    // bitwise identical to the searcher the bundle was written from.
+    let w = wb(4_000, 60);
+    let path = std::env::temp_dir()
+        .join(format!("phnsw_integration_{}.phnsw", std::process::id()));
+    w.save_bundle(&path).unwrap();
+    let bundle = phnsw::runtime::IndexBundle::open(&path).unwrap();
+    let native = w.phnsw(PhnswParams::default());
+    let booted = bundle.searcher(PhnswParams::default());
+    for (qi, q) in w.queries.iter().enumerate() {
+        assert_eq!(native.search(q), booted.search(q), "query {qi} diverged after round trip");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
 fn phnsw_cuts_highdim_traffic() {
     // The core algorithmic claim: high-dim distance computations (and the
     // raw-data fetch traffic they imply) drop sharply under PCA filtering.
