@@ -8,11 +8,13 @@
 mod common;
 
 use phnsw::dataset::l2_sq_scalar;
+use phnsw::graph::build::{select_neighbors_heuristic, BuildConfig};
 use phnsw::pca::PcaModel;
 use phnsw::rng::Pcg32;
 use phnsw::search::dist::{l2_sq, l2_sq_batch, l2_sq_batch_sq8};
 use phnsw::search::visited::VisitedSet;
 use phnsw::search::{AnnEngine, PhnswParams, SearchParams};
+use phnsw::segment::{build_segmented, SegmentSpec};
 use phnsw::store::{F32Store, Sq8Store, StoreScratch, VectorStore};
 
 fn main() {
@@ -173,4 +175,55 @@ fn main() {
     common::time_it("phnsw.search_batch 64q (scoped threads)", 30, || {
         std::hint::black_box(phnsw.search_batch(&qrefs));
     });
+
+    println!("graph builder (shrink distance reuse):");
+    // One over-capacity trim (33 candidates → 32) with cached distances —
+    // what the builder's shrink path now does — vs recomputing every
+    // high-dim distance first, which is what it did before.
+    let mut trim_rng = Pcg32::new(9);
+    let trim_ids: Vec<u32> = (0..33)
+        .map(|_| (trim_rng.f32() * (w.base.len() as f32 - 1.0)) as u32)
+        .collect();
+    let trim_q = w.base.row(0);
+    let cached: Vec<(f32, u32)> = trim_ids
+        .iter()
+        .map(|&id| (l2_sq(trim_q, w.base.row(id as usize)), id))
+        .collect();
+    common::time_it_json("shrink trim 33 nbrs cached dists", 50_000, || {
+        let kept = select_neighbors_heuristic(&w.base, trim_q, cached.clone(), 32);
+        std::hint::black_box(kept);
+    });
+    common::time_it_json("shrink trim 33 nbrs recompute dists (legacy)", 50_000, || {
+        let cands: Vec<(f32, u32)> = trim_ids
+            .iter()
+            .map(|&id| (l2_sq(std::hint::black_box(trim_q), w.base.row(id as usize)), id))
+            .collect();
+        let kept = select_neighbors_heuristic(&w.base, trim_q, cands, 32);
+        std::hint::black_box(kept);
+    });
+
+    println!("segmented build (parallel shard construction):");
+    // Wall-clock index build, monolithic vs 4 shards on 4 threads — the
+    // acceptance series for the segment layer (ms, not ns/iter: one full
+    // build per measurement).
+    let seg_n = common::env_usize("PHNSW_BENCH_BUILD_N", 8_000);
+    let seg_base = {
+        use phnsw::dataset::synthetic::{generate, SyntheticConfig};
+        let cfg = SyntheticConfig { n_base: seg_n, n_queries: 1, ..SyntheticConfig::default() };
+        generate(&cfg).0
+    };
+    let bc = BuildConfig { m: 8, ef_construction: 64, ..Default::default() };
+    let time_build = |s: usize, t: usize| -> f64 {
+        let t0 = std::time::Instant::now();
+        let idx = build_segmented(&seg_base, &bc, 15, 3, &SegmentSpec::new(s, t));
+        std::hint::black_box(&idx);
+        t0.elapsed().as_secs_f64() * 1e3
+    };
+    let ms_s1 = time_build(1, 1);
+    println!("{{\"bench\":\"segmented build S=1 T=1 n={seg_n}\",\"ms\":{ms_s1:.1}}}");
+    let ms_s4 = time_build(4, 4);
+    println!(
+        "{{\"bench\":\"segmented build S=4 T=4 n={seg_n}\",\"ms\":{ms_s4:.1},\"speedup_vs_s1\":{:.2}}}",
+        ms_s1 / ms_s4
+    );
 }

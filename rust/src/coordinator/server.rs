@@ -47,6 +47,20 @@ pub struct ServerHandle {
 }
 
 impl Server {
+    /// Boot a server over a single pre-built engine registered as the
+    /// default route — the path both bundle flavors (monolithic
+    /// searcher, segmented fan-out engine) boot through.
+    pub fn start_with_engine(
+        cfg: ServerConfig,
+        name: impl Into<String>,
+        engine: Arc<dyn AnnEngine>,
+    ) -> Self {
+        let name = name.into();
+        let mut router = Router::new(super::router::RoutePolicy::Default(name.clone()));
+        router.register(name, engine);
+        Self::start(cfg, Arc::new(router))
+    }
+
     /// Boot a server straight from a `.phnsw` index artifact: the pHNSW
     /// engine is constructed from the bundle's components (graph + PCA +
     /// quantized stores) and registered as the default route — no PCA
@@ -56,9 +70,7 @@ impl Server {
         bundle: &crate::runtime::IndexBundle,
         params: crate::search::PhnswParams,
     ) -> Self {
-        let mut router = Router::new(super::router::RoutePolicy::Default("phnsw".into()));
-        router.register("phnsw", Arc::new(bundle.searcher(params)) as Arc<dyn AnnEngine>);
-        Self::start(cfg, Arc::new(router))
+        Self::start_with_engine(cfg, "phnsw", Arc::new(bundle.searcher(params)))
     }
 
     /// Start the worker pool over a router.

@@ -97,8 +97,30 @@ impl TopK {
     }
 }
 
+/// Exact top-`k` ids for one query — the shared per-query kernel both
+/// the serial and the sharded driver call, so their outputs are bitwise
+/// identical by construction.
+fn exact_topk(base: &VectorSet, q: &[f32], k: usize) -> Vec<u32> {
+    let mut top = TopK::new(k);
+    for (id, v) in base.iter().enumerate() {
+        top.offer(l2_sq(q, v), id as u32);
+    }
+    top.into_sorted().into_iter().map(|(_, id)| id).collect()
+}
+
+/// Exact top-`k` neighbor ids for every query, single-threaded — the
+/// reference path the parallel driver is pinned against.
+pub fn ground_truth_serial(base: &VectorSet, queries: &VectorSet, k: usize) -> Vec<Vec<u32>> {
+    assert_eq!(base.dim(), queries.dim(), "base/query dimensionality mismatch");
+    assert!(k <= base.len(), "k={k} larger than base size {}", base.len());
+    queries.iter().map(|q| exact_topk(base, q, k)).collect()
+}
+
 /// Exact top-`k` neighbor ids for every query, by brute force, sharded
-/// across available cores.
+/// across available cores with `std::thread::scope`. Each worker owns a
+/// disjoint query range and runs the same per-query kernel as
+/// [`ground_truth_serial`], so the output is bitwise identical to the
+/// serial path regardless of core count.
 pub fn ground_truth(base: &VectorSet, queries: &VectorSet, k: usize) -> Vec<Vec<u32>> {
     assert_eq!(base.dim(), queries.dim(), "base/query dimensionality mismatch");
     assert!(k <= base.len(), "k={k} larger than base size {}", base.len());
@@ -112,12 +134,7 @@ pub fn ground_truth(base: &VectorSet, queries: &VectorSet, k: usize) -> Vec<Vec<
             let start = t * chunk.max(1);
             s.spawn(move || {
                 for (off, row) in slot.iter_mut().enumerate() {
-                    let q = queries.row(start + off);
-                    let mut top = TopK::new(k);
-                    for (id, v) in base.iter().enumerate() {
-                        top.offer(l2_sq(q, v), id as u32);
-                    }
-                    *row = top.into_sorted().into_iter().map(|(_, id)| id).collect();
+                    *row = exact_topk(base, queries.row(start + off), k);
                 }
             });
         }
@@ -136,7 +153,7 @@ mod tests {
             .enumerate()
             .map(|(i, v)| (l2_sq(q, v), i as u32))
             .collect();
-        d.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then_with(|| a.1.cmp(&b.1)));
+        d.sort_by(|a, b| a.0.total_cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
         d.truncate(k);
         d.into_iter().map(|(_, i)| i).collect()
     }
@@ -189,6 +206,25 @@ mod tests {
         for (qi, row) in gt.iter().enumerate() {
             assert_eq!(row, &naive_topk(&base, queries.row(qi), 10), "query {qi}");
         }
+    }
+
+    #[test]
+    fn parallel_ground_truth_is_bitwise_identical_to_serial() {
+        let mut rng = Pcg32::new(7);
+        let mut base = VectorSet::new(12);
+        for _ in 0..500 {
+            let v: Vec<f32> = (0..12).map(|_| rng.gaussian()).collect();
+            base.push(&v);
+        }
+        let mut queries = VectorSet::new(12);
+        // More queries than cores, plus a remainder chunk.
+        for _ in 0..37 {
+            let v: Vec<f32> = (0..12).map(|_| rng.gaussian()).collect();
+            queries.push(&v);
+        }
+        let par = ground_truth(&base, &queries, 10);
+        let ser = ground_truth_serial(&base, &queries, 10);
+        assert_eq!(par, ser, "sharded GT must be bitwise identical to the serial path");
     }
 
     #[test]

@@ -11,7 +11,7 @@ pub mod gt;
 pub mod io;
 pub mod synthetic;
 
-pub use gt::ground_truth;
+pub use gt::{ground_truth, ground_truth_serial};
 pub use synthetic::{SyntheticConfig, generate};
 
 /// A dense, row-major matrix of `n` vectors × `dim` f32 components.

@@ -59,16 +59,22 @@ fn search_layer(
 /// Heuristic neighbor selection (Algorithm 4 of [2]): prefer candidates
 /// that are closer to `q` than to any already-selected neighbor, so edges
 /// spread in different directions; backfill with pruned candidates.
-fn select_neighbors_heuristic(
+///
+/// Returns the kept `(distance-to-q, id)` pairs so callers can cache the
+/// distances alongside the adjacency instead of recomputing them at the
+/// next re-prune. Distances sort via `total_cmp` (ties broken by id), so
+/// a NaN distance — e.g. a corrupt corpus row — orders last instead of
+/// panicking the builder.
+pub fn select_neighbors_heuristic(
     data: &VectorSet,
     _q: &[f32],
     mut candidates: Vec<(f32, u32)>,
     m: usize,
-) -> Vec<u32> {
+) -> Vec<(f32, u32)> {
     if candidates.len() <= m {
-        return candidates.into_iter().map(|(_, id)| id).collect();
+        return candidates;
     }
-    candidates.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then_with(|| a.1.cmp(&b.1)));
+    candidates.sort_by(|a, b| a.0.total_cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
     let mut selected: Vec<(f32, u32)> = Vec::with_capacity(m);
     let mut pruned: Vec<(f32, u32)> = Vec::new();
     for (d, id) in candidates {
@@ -91,24 +97,37 @@ fn select_neighbors_heuristic(
         }
         selected.push((d, id));
     }
-    selected.into_iter().map(|(_, id)| id).collect()
+    selected
 }
 
+/// Per-node, per-level cached neighbor distances, kept exactly parallel
+/// to the staging adjacency lists: `cache[node][level][slot]` is the
+/// (high-dim squared L2) distance between `node` and its `slot`-th
+/// neighbor at `level`. Every distance in it was already computed by the
+/// construction beam search or a previous selection pass, so re-pruning
+/// never pays the `O(cap · dim)` recomputation it used to.
+type DistCache = Vec<Vec<Vec<f32>>>;
+
 /// Re-prune `node`'s neighbor list at `level` down to capacity after a new
-/// back-edge pushed it over.
-fn shrink_neighbors(graph: &mut HnswGraph, data: &VectorSet, node: u32, level: usize) {
+/// back-edge pushed it over, reusing the cached candidate distances.
+fn shrink_neighbors(
+    graph: &mut HnswGraph,
+    cache: &mut DistCache,
+    data: &VectorSet,
+    node: u32,
+    level: usize,
+) {
     let cap = graph.capacity(level);
     let list = graph.neighbors(node, level);
     if list.len() <= cap {
         return;
     }
-    let q = data.row(node as usize);
-    let cands: Vec<(f32, u32)> = list
-        .iter()
-        .map(|&nb| (l2_sq(q, data.row(nb as usize)), nb))
-        .collect();
-    let new_list = select_neighbors_heuristic(data, q, cands, cap);
-    graph.set_neighbors(node, level, new_list);
+    let dists = &cache[node as usize][level];
+    debug_assert_eq!(dists.len(), list.len(), "distance cache out of sync");
+    let cands: Vec<(f32, u32)> = dists.iter().copied().zip(list.iter().copied()).collect();
+    let kept = select_neighbors_heuristic(data, data.row(node as usize), cands, cap);
+    graph.set_neighbors(node, level, kept.iter().map(|&(_, id)| id).collect());
+    cache[node as usize][level] = kept.into_iter().map(|(d, _)| d).collect();
 }
 
 /// Build an HNSW index over `data`.
@@ -123,6 +142,11 @@ pub fn build(data: &VectorSet, cfg: &BuildConfig) -> HnswGraph {
         return graph;
     }
     let mut visited = VisitedSet::new(data.len());
+    // Neighbor distances cached parallel to the staging adjacency, so
+    // over-capacity trims never recompute what the beam search already
+    // measured (values are bitwise what `l2_sq` would return — the kernel
+    // is bitwise symmetric in its arguments).
+    let mut cache: DistCache = Vec::with_capacity(data.len());
 
     for i in 0..data.len() {
         let level = rng.hnsw_level(ml, cfg.max_level);
@@ -130,12 +154,14 @@ pub fn build(data: &VectorSet, cfg: &BuildConfig) -> HnswGraph {
 
         if graph.is_empty() {
             graph.add_node(level);
+            cache.push(vec![Vec::new(); level + 1]);
             continue;
         }
 
         let prev_max = graph.max_level();
         let prev_ep = graph.entry_point();
         let node = graph.add_node(level);
+        cache.push(vec![Vec::new(); level + 1]);
 
         // Greedy descent from the old entry point down to level+1.
         let mut ep = vec![(l2_sq(q, data.row(prev_ep as usize)), prev_ep)];
@@ -151,10 +177,14 @@ pub fn build(data: &VectorSet, cfg: &BuildConfig) -> HnswGraph {
             let found = search_layer(&graph, data, q, &ep, cfg.ef_construction, lvl, &mut visited);
             let m_here = graph.capacity(lvl);
             let selected = select_neighbors_heuristic(data, q, found.clone(), m_here);
-            graph.set_neighbors(node, lvl, selected.clone());
-            for nb in selected {
+            graph.set_neighbors(node, lvl, selected.iter().map(|&(_, id)| id).collect());
+            cache[node as usize][lvl] = selected.iter().map(|&(d, _)| d).collect();
+            for (d, nb) in selected {
                 graph.push_neighbor(nb, lvl, node);
-                shrink_neighbors(&mut graph, data, nb, lvl);
+                // The back edge nb → node has the same distance the beam
+                // search just measured for node → nb.
+                cache[nb as usize][lvl].push(d);
+                shrink_neighbors(&mut graph, &mut cache, data, nb, lvl);
             }
             ep = found;
         }
@@ -280,7 +310,10 @@ mod tests {
             vs.push(&[i as f32, 0.0]);
         }
         let cands = vec![(1.0, 1), (4.0, 2)];
-        let sel = select_neighbors_heuristic(&vs, &[0.0, 0.0], cands, 4);
+        let sel: Vec<u32> = select_neighbors_heuristic(&vs, &[0.0, 0.0], cands, 4)
+            .into_iter()
+            .map(|(_, id)| id)
+            .collect();
         assert_eq!(sel, vec![1, 2]);
     }
 
@@ -300,9 +333,108 @@ mod tests {
             .iter()
             .map(|&id| (l2_sq(&q, vs.row(id as usize)), id))
             .collect();
-        let sel = select_neighbors_heuristic(&vs, &q, cands, 2);
+        let sel: Vec<u32> = select_neighbors_heuristic(&vs, &q, cands, 2)
+            .into_iter()
+            .map(|(_, id)| id)
+            .collect();
         assert_eq!(sel.len(), 2);
         assert!(sel.contains(&1), "closest kept: {sel:?}");
         assert!(sel.contains(&4), "diverse direction kept: {sel:?}");
+    }
+
+    #[test]
+    fn nan_corpus_row_does_not_panic_builder() {
+        // Regression for the remaining partial_cmp().unwrap() sort in the
+        // neighbor-selection heuristic: a NaN distance (corrupt corpus
+        // row) used to abort construction. total_cmp orders NaN last.
+        let cfg = SyntheticConfig { n_base: 300, n_queries: 1, ..SyntheticConfig::tiny() };
+        let (mut base, _) = generate(&cfg);
+        base.row_mut(50)[0] = f32::NAN;
+        base.row_mut(51)[3] = f32::NAN;
+        let g = build(&base, &BuildConfig { m: 4, ef_construction: 24, ..Default::default() });
+        assert_eq!(g.len(), 300, "all rows inserted despite NaN distances");
+        assert!(g.is_frozen());
+    }
+
+    /// The pre-cache builder: identical insertion loop, but every
+    /// over-capacity trim recomputes all neighbor distances from scratch
+    /// (what `shrink_neighbors` did before the distance cache).
+    fn build_recompute_reference(data: &VectorSet, cfg: &BuildConfig) -> HnswGraph {
+        let m0 = cfg.m * 2;
+        let ml = cfg.ml.unwrap_or(1.0 / (cfg.m as f64).ln());
+        let mut rng = Pcg32::new(cfg.seed);
+        let mut graph = HnswGraph::empty(cfg.m, m0);
+        if data.is_empty() {
+            graph.freeze();
+            return graph;
+        }
+        let mut visited = VisitedSet::new(data.len());
+        for i in 0..data.len() {
+            let level = rng.hnsw_level(ml, cfg.max_level);
+            let q = data.row(i);
+            if graph.is_empty() {
+                graph.add_node(level);
+                continue;
+            }
+            let prev_max = graph.max_level();
+            let prev_ep = graph.entry_point();
+            let node = graph.add_node(level);
+            let mut ep = vec![(l2_sq(q, data.row(prev_ep as usize)), prev_ep)];
+            let mut l = prev_max;
+            while l > level {
+                ep = search_layer(&graph, data, q, &ep, 1, l, &mut visited);
+                l -= 1;
+            }
+            let top = level.min(prev_max);
+            for lvl in (0..=top).rev() {
+                let found =
+                    search_layer(&graph, data, q, &ep, cfg.ef_construction, lvl, &mut visited);
+                let m_here = graph.capacity(lvl);
+                let selected = select_neighbors_heuristic(data, q, found.clone(), m_here);
+                graph.set_neighbors(node, lvl, selected.iter().map(|&(_, id)| id).collect());
+                for (_, nb) in selected {
+                    graph.push_neighbor(nb, lvl, node);
+                    // Legacy trim: recompute every distance.
+                    let cap = graph.capacity(lvl);
+                    if graph.neighbors(nb, lvl).len() > cap {
+                        let qn = data.row(nb as usize);
+                        let cands: Vec<(f32, u32)> = graph
+                            .neighbors(nb, lvl)
+                            .iter()
+                            .map(|&x| (l2_sq(qn, data.row(x as usize)), x))
+                            .collect();
+                        let kept = select_neighbors_heuristic(data, qn, cands, cap);
+                        graph.set_neighbors(nb, lvl, kept.into_iter().map(|(_, id)| id).collect());
+                    }
+                }
+                ep = found;
+            }
+        }
+        graph.freeze();
+        graph
+    }
+
+    #[test]
+    fn cached_distance_shrink_matches_recompute_reference_bitwise() {
+        // The distance cache must not change construction at all: cached
+        // values are bitwise what l2_sq would recompute (the kernel is
+        // symmetric in its arguments), so both builders emit the same
+        // graph edge for edge.
+        let cfg = SyntheticConfig { n_base: 900, n_queries: 1, ..SyntheticConfig::tiny() };
+        let (base, _) = generate(&cfg);
+        let bc = BuildConfig { m: 6, ef_construction: 48, ..Default::default() };
+        let fast = build(&base, &bc);
+        let reference = build_recompute_reference(&base, &bc);
+        assert_eq!(fast.entry_point(), reference.entry_point());
+        for n in 0..fast.len() as u32 {
+            assert_eq!(fast.level(n), reference.level(n));
+            for l in 0..=fast.level(n) {
+                assert_eq!(
+                    fast.neighbors(n, l),
+                    reference.neighbors(n, l),
+                    "node {n} level {l} diverged"
+                );
+            }
+        }
     }
 }

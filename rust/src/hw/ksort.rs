@@ -100,7 +100,7 @@ mod tests {
                 let v: Vec<f32> = (0..n).map(|_| rng.f32() * 100.0).collect();
                 let got = ksort_topk(&v, k);
                 let mut want: Vec<(f32, u32)> = v.iter().copied().zip(0u32..).collect();
-                want.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+                want.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
                 want.truncate(k.min(n));
                 assert_eq!(got, want, "n={n} k={k}");
             }

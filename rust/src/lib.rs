@@ -25,6 +25,10 @@
 //!   can run through the same kernels the paper's ASIC implements.
 //! * **Serving** — [`coordinator`] wraps everything in a query server with a
 //!   dynamic batcher and per-engine routing.
+//! * **Scale** — [`segment`] shards a corpus into independently built HNSW
+//!   segments (parallel construction, shared PCA), fans queries across
+//!   shards, and merges per-shard top-k into global results; sharded
+//!   indices round-trip through the same `.phnsw` artifact.
 //!
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
@@ -45,6 +49,7 @@ pub mod rng;
 pub mod reports;
 pub mod runtime;
 pub mod search;
+pub mod segment;
 pub mod store;
 pub mod workbench;
 

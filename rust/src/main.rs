@@ -81,6 +81,17 @@ fn wb_opts() -> Vec<OptSpec> {
     ]
 }
 
+/// The build options that select (and are only consumed by) the
+/// segmented builder.
+const SEGMENT_OPTS: [&str; 4] = ["shards", "build-threads", "assignment", "min-recall"];
+
+/// The `--seed` option, hex with or without `0x` (shared by every
+/// subcommand; a malformed value falls back to the default).
+fn seed_from(args: &Args) -> u64 {
+    u64::from_str_radix(args.get_or("seed", "5EED0001").trim_start_matches("0x"), 16)
+        .unwrap_or(0x5EED_0001)
+}
+
 fn workbench_from(args: &Args) -> Result<Workbench> {
     let cfg = WorkbenchConfig {
         n_base: args.get_parsed_or("n", 10_000usize)?,
@@ -88,8 +99,7 @@ fn workbench_from(args: &Args) -> Result<Workbench> {
         m: args.get_parsed_or("m", phnsw::params::M)?,
         ef_construction: args.get_parsed_or("efc", 128usize)?,
         dim_low: args.get_parsed_or("dim-low", phnsw::params::DIM_LOW)?,
-        seed: u64::from_str_radix(args.get_or("seed", "5EED0001").trim_start_matches("0x"), 16)
-            .unwrap_or(0x5EED_0001),
+        seed: seed_from(args),
         k_gt: 10,
     };
     Workbench::assemble(cfg)
@@ -140,8 +150,39 @@ fn cmd_build(args: &Args) -> Result<()> {
             default: None,
             is_flag: false,
         });
+        o.push(OptSpec {
+            name: "shards",
+            help: "segmented build: number of shards S",
+            default: Some("1".into()),
+            is_flag: false,
+        });
+        o.push(OptSpec {
+            name: "build-threads",
+            help: "concurrently building shards",
+            default: Some("= shards".into()),
+            is_flag: false,
+        });
+        o.push(OptSpec {
+            name: "assignment",
+            help: "shard assignment: rr | contig",
+            default: Some("rr".into()),
+            is_flag: false,
+        });
+        o.push(OptSpec {
+            name: "min-recall",
+            help: "fail unless recall@10 vs exact GT reaches this floor",
+            default: None,
+            is_flag: false,
+        });
         println!("{}", usage("phnsw build", "build + cache index, PCA, ground truth", &o));
         return Ok(());
+    }
+    // Any segmented-only option routes to the segmented builder (S
+    // defaults to 1 there), so none of them can be silently ignored —
+    // `flag()` also catches a value-less `--min-recall`, which the
+    // segmented path then rejects instead of dropping the gate.
+    if SEGMENT_OPTS.iter().any(|k| args.flag(k)) {
+        return cmd_build_segmented(args);
     }
     let w = workbench_from(args)?;
     println!(
@@ -162,6 +203,85 @@ fn cmd_build(args: &Args) -> Result<()> {
         println!(
             "bundle: wrote {out} ({} bytes — graph + PCA + sq8 low store + f32 high store)",
             std::fs::metadata(out)?.len()
+        );
+    }
+    Ok(())
+}
+
+/// Segmented build: split the corpus into `--shards` segments, build
+/// their graphs on `--build-threads` scoped threads, optionally verify a
+/// recall floor against exact ground truth, and optionally write the
+/// sharded `.phnsw` bundle. Emits one machine-readable JSON line so the
+/// build-speedup trajectory can be scraped like the hot-path benches.
+fn cmd_build_segmented(args: &Args) -> Result<()> {
+    use phnsw::dataset::synthetic::{generate, SyntheticConfig};
+    use phnsw::graph::build::BuildConfig;
+    use phnsw::segment::{build_segmented, SegmentSpec, ShardAssignment};
+
+    for k in SEGMENT_OPTS {
+        if args.flag(k) && args.get(k).is_none() {
+            anyhow::bail!("--{k} needs a value (e.g. --{k} 4)");
+        }
+    }
+    let shards: usize = args.get_parsed_or("shards", 1usize)?;
+    anyhow::ensure!(shards >= 1, "--shards must be >= 1");
+    let threads: usize = args.get_parsed_or("build-threads", shards)?;
+    let assignment = ShardAssignment::parse(&args.get_or("assignment", "rr"))?;
+    let n = args.get_parsed_or("n", 10_000usize)?;
+    let nq = args.get_parsed_or("queries", 200usize)?;
+    let seed = seed_from(args);
+    let dim_low = args.get_parsed_or("dim-low", phnsw::params::DIM_LOW)?;
+    let bc = BuildConfig {
+        m: args.get_parsed_or("m", phnsw::params::M)?,
+        ef_construction: args.get_parsed_or("efc", 128usize)?,
+        ..Default::default()
+    };
+
+    let (base, queries) = generate(&SyntheticConfig {
+        n_base: n,
+        n_queries: nq,
+        seed,
+        ..SyntheticConfig::default()
+    });
+    let spec = SegmentSpec { n_shards: shards, build_threads: threads, assignment };
+    let t0 = std::time::Instant::now();
+    let idx = build_segmented(&base, &bc, dim_low, seed, &spec);
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "{{\"bench\":\"segmented_build\",\"shards\":{shards},\"threads\":{threads},\"n\":{n},\"ms\":{ms:.1}}}"
+    );
+    for (s, seg) in idx.segments.iter().enumerate() {
+        println!(
+            "shard {s}: {} nodes, max level {}, mean degree L0 {:.1}",
+            seg.graph.len(),
+            seg.graph.max_level(),
+            seg.graph.mean_degree(0)
+        );
+    }
+    println!(
+        "segmented build: {n} rows over {shards} shard(s) ({}) in {:.1} ms with {threads} thread(s)",
+        assignment.label(),
+        ms
+    );
+
+    if let Some(raw) = args.get("min-recall") {
+        let floor: f64 = raw.parse().map_err(|e| anyhow::anyhow!("invalid --min-recall: {e}"))?;
+        let gt = phnsw::dataset::ground_truth(&base, &queries, 10);
+        let engine = idx.engine(phnsw_params(args)?);
+        let results: Vec<Vec<u32>> = queries
+            .iter()
+            .map(|q| engine.search(q).into_iter().map(|nb| nb.id).take(10).collect())
+            .collect();
+        let r = phnsw::metrics::recall_at_k(&results, &gt, 10);
+        println!("recall@10 over {nq} queries: {r:.3} (floor {floor})");
+        anyhow::ensure!(r >= floor, "recall {r:.3} below required floor {floor}");
+    }
+    if let Some(out) = args.get("bundle-out") {
+        phnsw::runtime::save_segmented(out, &idx)?;
+        println!(
+            "bundle: wrote {out} ({} bytes, {} segment(s))",
+            std::fs::metadata(out)?.len(),
+            idx.n_segments()
         );
     }
     Ok(())
@@ -221,30 +341,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ..Default::default()
     };
     let (server, queries) = if let Some(bundle_path) = args.get("bundle") {
-        // Single-artifact boot: the engine comes out of the .phnsw file.
-        // Deliberately NO workbench here — assembling one would refit
-        // PCA, re-project the corpus, and rebuild the graph, which is
-        // exactly the startup cost the bundle eliminates. The demo load
-        // only needs query vectors, drawn fresh from the synthetic
-        // mixture at the bundle's dimensionality.
-        let bundle = phnsw::runtime::IndexBundle::open(bundle_path)?;
+        // Single-artifact boot: the engine comes out of the .phnsw file —
+        // a monolithic searcher or a segmented fan-out engine, whichever
+        // the bundle holds. Deliberately NO workbench here — assembling
+        // one would refit PCA, re-project the corpus, and rebuild the
+        // graph, which is exactly the startup cost the bundle eliminates.
+        // The demo load only needs query vectors, drawn fresh from the
+        // synthetic mixture at the bundle's dimensionality.
+        let any = phnsw::runtime::open_bundle(bundle_path)?;
         use phnsw::dataset::synthetic::{generate, SyntheticConfig};
         let syn = SyntheticConfig {
             n_base: 1,
             n_queries: args.get_parsed_or("queries", 200usize)?,
-            dim: bundle.high.dim(),
-            dominant_dims: 24.min(bundle.high.dim()),
-            seed: u64::from_str_radix(args.get_or("seed", "5EED0001").trim_start_matches("0x"), 16)
-                .unwrap_or(0x5EED_0001),
+            dim: any.dim(),
+            dominant_dims: 24.min(any.dim()),
+            seed: seed_from(args),
             ..SyntheticConfig::default()
         };
         let (_, queries) = generate(&syn);
         println!(
-            "booting from {bundle_path}: {} vectors, low codec {}",
-            bundle.high.len(),
-            bundle.low.codec().label()
+            "booting from {bundle_path}: {} vectors in {} segment(s), low codec {}",
+            any.len(),
+            any.n_segments(),
+            any.low_codec_label()
         );
-        (Server::start_from_bundle(cfg, &bundle, phnsw_params(args)?), queries)
+        let engine = any.engine(phnsw_params(args)?);
+        (Server::start_with_engine(cfg, "phnsw", engine), queries)
     } else {
         let w = workbench_from(args)?;
         let engine_name = args.get_or("engine", "phnsw");

@@ -81,7 +81,7 @@ impl LatencyStats {
 
     fn ensure_sorted(&mut self) {
         if !self.sorted {
-            self.samples_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.samples_us.sort_by(|a, b| a.total_cmp(b));
             self.sorted = true;
         }
     }

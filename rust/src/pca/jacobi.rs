@@ -142,7 +142,7 @@ mod tests {
         let a = vec![3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, -2.0];
         let e = jacobi_eigen(&a, 3);
         let mut vals = e.values.clone();
-        vals.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        vals.sort_by(|x, y| x.total_cmp(y));
         assert!((vals[0] + 2.0).abs() < 1e-12);
         assert!((vals[1] - 1.0).abs() < 1e-12);
         assert!((vals[2] - 3.0).abs() < 1e-12);
@@ -154,7 +154,7 @@ mod tests {
         let a = vec![2.0, 1.0, 1.0, 2.0];
         let e = jacobi_eigen(&a, 2);
         let mut vals = e.values.clone();
-        vals.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        vals.sort_by(|x, y| x.total_cmp(y));
         assert!((vals[0] - 1.0).abs() < 1e-12);
         assert!((vals[1] - 3.0).abs() < 1e-12);
     }

@@ -94,7 +94,17 @@ impl PcaModel {
         // Eigen-decomposition; take the top-k eigenpairs.
         let eig = jacobi_eigen(&cov, dim);
         let mut order: Vec<usize> = (0..dim).collect();
-        order.sort_by(|&a, &b| eig.values[b].partial_cmp(&eig.values[a]).unwrap());
+        // NaN eigenvalues (degenerate covariance, e.g. a NaN corpus row)
+        // must never be *selected*: order real values descending with the
+        // NaN-status key first (plain descending total_cmp would rank
+        // +NaN above +inf), index order breaking ties deterministically.
+        order.sort_by(|&a, &b| {
+            eig.values[a]
+                .is_nan()
+                .cmp(&eig.values[b].is_nan())
+                .then(eig.values[b].total_cmp(&eig.values[a]))
+                .then_with(|| a.cmp(&b))
+        });
 
         let mut components = vec![0f32; k * dim];
         let mut eigenvalues = Vec::with_capacity(k);

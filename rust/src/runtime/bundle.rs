@@ -9,11 +9,12 @@
 //! ## Format
 //!
 //! ```text
-//!   magic "PHNB"  u32 version (=1)  u32 n_sections
+//!   magic "PHNB"  u32 version (1 = single-segment, 2 = segmented)
+//!   u32 n_sections
 //!   per section: [4-byte tag][u64 len][len payload bytes]
 //! ```
 //!
-//! Sections (any order; unknown tags are skipped for forward compat):
+//! Sections (unknown tags are skipped for forward compat):
 //!
 //! | tag    | payload |
 //! |--------|---------|
@@ -21,15 +22,32 @@
 //! | `PCAM` | [`PcaModel::to_bytes`] |
 //! | `LOWQ` | low-dim [`VectorStore`] blob (`store::store_from_bytes`) |
 //! | `HIGH` | high-dim f32 table: `[u32 dim][u64 n][n × dim × f32-le]` |
+//! | `SEGD` | shard directory: `[u32 n_shards][u8 assignment][u64 n]` |
+//!
+//! A **single-segment** bundle is exactly the PR-2 layout — version 1,
+//! one `GRPH`/`PCAM`/`LOWQ`/`HIGH` each, no `SEGD` — and those files
+//! keep loading byte-for-byte. A **segmented** bundle
+//! ([`save_segmented`]) is version 2: a `SEGD` directory and the shared
+//! `PCAM`, then one `GRPH`/`LOWQ`/`HIGH` group *per shard* in shard
+//! order; the reader pairs the repeated groups positionally. The
+//! version bump is deliberate — a pre-segmentation reader must reject a
+//! sharded file loudly ("unsupported bundle version 2"), not skip the
+//! unknown `SEGD` tag and silently serve the last shard as if it were
+//! the whole corpus. [`open_bundle`] accepts both versions.
 //!
 //! Every declared length is validated against the remaining file bytes
-//! *before* any allocation sized from it — a corrupt artifact surfaces as
-//! `Err`, never as an OOM abort (same policy as `graph/serialize.rs`).
+//! *before* any allocation sized from it — a corrupt artifact surfaces
+//! as `Err`, never as an OOM abort (same policy as
+//! `graph/serialize.rs`) — and each section is decoded as soon as it is
+//! read, so open never holds more than one raw payload alongside the
+//! decoded index (the streaming profile of the pre-segmentation
+//! reader).
 
 use crate::dataset::VectorSet;
 use crate::graph::{serialize, HnswGraph};
 use crate::pca::PcaModel;
-use crate::search::{PhnswParams, PhnswSearcher};
+use crate::search::{AnnEngine, PhnswParams, PhnswSearcher};
+use crate::segment::{Segment, SegmentedIndex, ShardAssignment, ShardMap};
 use crate::store::{store_from_bytes, VectorStore};
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -37,12 +55,20 @@ use std::path::Path;
 use std::sync::Arc;
 
 const MAGIC: &[u8; 4] = b"PHNB";
-const VERSION: u32 = 1;
+/// Classic single-segment layout (PR-2 compatible).
+const VERSION_SINGLE: u32 = 1;
+/// Segmented layout (`SEGD` + per-shard section groups).
+const VERSION_SEGMENTED: u32 = 2;
 
 const TAG_GRAPH: &[u8; 4] = b"GRPH";
 const TAG_PCA: &[u8; 4] = b"PCAM";
 const TAG_LOW: &[u8; 4] = b"LOWQ";
 const TAG_HIGH: &[u8; 4] = b"HIGH";
+const TAG_SEGDIR: &[u8; 4] = b"SEGD";
+
+/// Upper bound on shards in one bundle (bounds the section count a file
+/// may declare: `2 + 3 × MAX_SHARDS`).
+pub const MAX_SHARDS: usize = 256;
 
 /// An opened `.phnsw` artifact: every component a [`PhnswSearcher`] needs.
 pub struct IndexBundle {
@@ -123,7 +149,7 @@ impl IndexBundle {
         let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
         let mut w = BufWriter::new(f);
         w.write_all(MAGIC)?;
-        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&VERSION_SINGLE.to_le_bytes())?;
         w.write_all(&4u32.to_le_bytes())?;
         // GRPH/PCAM/LOWQ are buffered (a few bytes per edge / component —
         // small next to the corpus); HIGH, the dominant section, streams
@@ -139,70 +165,33 @@ impl IndexBundle {
         Ok(())
     }
 
-    /// Open a `.phnsw` artifact, validating every section against the
-    /// file length and the components against each other.
+    /// Open a single-segment `.phnsw` artifact, validating every section
+    /// against the file length and the components against each other.
+    /// Fails on a segmented file — use [`open_bundle`] to accept both.
     pub fn open(path: impl AsRef<Path>) -> Result<Self> {
         let path = path.as_ref();
-        let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
-        let file_len = f.metadata().with_context(|| format!("stat {}", path.display()))?.len();
-        let mut r = BufReader::new(f);
-
-        let mut head = [0u8; 12];
-        r.read_exact(&mut head).context("bundle header")?;
-        ensure!(&head[0..4] == MAGIC, "bad bundle magic {:?}", &head[0..4]);
-        let version = u32::from_le_bytes(head[4..8].try_into()?);
-        ensure!(version == VERSION, "unsupported bundle version {version}");
-        let n_sections = u32::from_le_bytes(head[8..12].try_into()?);
-        ensure!(n_sections <= 64, "implausible section count {n_sections}");
-
-        let mut consumed = 12u64;
-        let mut graph = None;
-        let mut pca = None;
-        let mut low: Option<Arc<dyn VectorStore>> = None;
-        let mut high = None;
-        for _ in 0..n_sections {
-            let mut tag = [0u8; 4];
-            r.read_exact(&mut tag).context("section tag")?;
-            let mut lenb = [0u8; 8];
-            r.read_exact(&mut lenb).context("section length")?;
-            let len = u64::from_le_bytes(lenb);
-            consumed += 12;
+        // Cheap header sniff: reject a segmented (v2) artifact from the
+        // 8-byte header instead of decoding every shard first. Malformed
+        // headers fall through to read_sections for its error messages.
+        let mut head = [0u8; 8];
+        let mut f =
+            std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+        f.read_exact(&mut head).context("bundle header")?;
+        drop(f);
+        if &head[0..4] == MAGIC {
+            let version = u32::from_le_bytes(head[4..8].try_into()?);
             ensure!(
-                len <= file_len.saturating_sub(consumed),
-                "section {:?} declares {len} bytes but only {} remain",
-                tag,
-                file_len.saturating_sub(consumed)
+                version != VERSION_SEGMENTED,
+                "bundle is a segmented (v{version}) artifact; open it with runtime::open_bundle"
             );
-            let mut payload = vec![0u8; len as usize];
-            r.read_exact(&mut payload)
-                .with_context(|| format!("section {:?} payload", tag))?;
-            consumed += len;
-            match &tag {
-                TAG_GRAPH => {
-                    graph = Some(serialize::read_from(&mut payload.as_slice(), len)?);
-                }
-                TAG_PCA => pca = Some(PcaModel::from_bytes(&payload)?),
-                TAG_LOW => low = Some(store_from_bytes(&payload)?),
-                TAG_HIGH => high = Some(decode_high(&payload)?),
-                // Unknown tags are skipped: newer writers may append
-                // sections old readers do not understand.
-                _ => {}
-            }
         }
-        let (Some(graph), Some(pca), Some(low), Some(high)) = (graph, pca, low, high) else {
-            bail!("bundle is missing a required section (GRPH/PCAM/LOWQ/HIGH)");
-        };
-
-        ensure!(graph.len() == high.len(), "graph/high-dim size mismatch");
-        ensure!(graph.len() == low.len(), "graph/low-dim size mismatch");
-        ensure!(pca.dim() == high.dim(), "PCA input dim != high-dim table dim");
-        ensure!(pca.k() == low.dim(), "PCA output dim != low-dim store dim");
-        Ok(Self {
-            graph: Arc::new(graph),
-            pca: Arc::new(pca),
-            low,
-            high: Arc::new(high),
-        })
+        match open_bundle(path)? {
+            AnyBundle::Single(b) => Ok(b),
+            AnyBundle::Segmented(s) => bail!(
+                "bundle holds {} segments; open it with runtime::open_bundle",
+                s.n_segments()
+            ),
+        }
     }
 
     /// Construct a ready-to-serve searcher from the opened components —
@@ -216,6 +205,279 @@ impl IndexBundle {
             params,
         )
     }
+}
+
+/// One decoded bundle section.
+enum Section {
+    Graph(HnswGraph),
+    Pca(PcaModel),
+    Low(Arc<dyn VectorStore>),
+    High(VectorSet),
+    SegDir(ShardMap),
+}
+
+/// Read, length-validate, and decode every section of a `.phnsw` file.
+/// Each raw payload is decoded (and dropped) before the next section is
+/// read, so peak memory is the decoded index plus one section's bytes.
+fn read_sections(path: &Path) -> Result<(u32, Vec<Section>)> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let file_len = f.metadata().with_context(|| format!("stat {}", path.display()))?.len();
+    let mut r = BufReader::new(f);
+
+    let mut head = [0u8; 12];
+    r.read_exact(&mut head).context("bundle header")?;
+    ensure!(&head[0..4] == MAGIC, "bad bundle magic {:?}", &head[0..4]);
+    let version = u32::from_le_bytes(head[4..8].try_into()?);
+    ensure!(
+        version == VERSION_SINGLE || version == VERSION_SEGMENTED,
+        "unsupported bundle version {version}"
+    );
+    let n_sections = u32::from_le_bytes(head[8..12].try_into()?);
+    ensure!(n_sections as usize <= 2 + 3 * MAX_SHARDS, "implausible section count {n_sections}");
+
+    let mut consumed = 12u64;
+    let mut out = Vec::with_capacity(n_sections as usize);
+    for _ in 0..n_sections {
+        let mut tag = [0u8; 4];
+        r.read_exact(&mut tag).context("section tag")?;
+        let mut lenb = [0u8; 8];
+        r.read_exact(&mut lenb).context("section length")?;
+        let len = u64::from_le_bytes(lenb);
+        consumed += 12;
+        ensure!(
+            len <= file_len.saturating_sub(consumed),
+            "section {:?} declares {len} bytes but only {} remain",
+            tag,
+            file_len.saturating_sub(consumed)
+        );
+        let mut payload = vec![0u8; len as usize];
+        r.read_exact(&mut payload)
+            .with_context(|| format!("section {:?} payload", tag))?;
+        consumed += len;
+        match &tag {
+            TAG_GRAPH => {
+                out.push(Section::Graph(serialize::read_from(&mut payload.as_slice(), len)?))
+            }
+            TAG_PCA => out.push(Section::Pca(PcaModel::from_bytes(&payload)?)),
+            TAG_LOW => out.push(Section::Low(store_from_bytes(&payload)?)),
+            TAG_HIGH => out.push(Section::High(decode_high(&payload)?)),
+            TAG_SEGDIR => out.push(Section::SegDir(decode_segdir(&payload)?)),
+            // Unknown tags are skipped: newer writers may append
+            // sections old readers do not understand.
+            _ => {}
+        }
+    }
+    Ok((version, out))
+}
+
+/// The shard directory (`SEGD` payload): `[u32 n_shards][u8 assignment]
+/// [u64 n_total]`.
+fn encode_segdir(map: &ShardMap) -> Vec<u8> {
+    let mut out = Vec::with_capacity(13);
+    out.extend_from_slice(&(map.n_shards() as u32).to_le_bytes());
+    out.push(map.assignment().code());
+    out.extend_from_slice(&(map.n_total() as u64).to_le_bytes());
+    out
+}
+
+fn decode_segdir(bytes: &[u8]) -> Result<ShardMap> {
+    ensure!(bytes.len() == 13, "SEGD section length {} != 13", bytes.len());
+    let n_shards = u32::from_le_bytes(bytes[0..4].try_into()?) as usize;
+    ensure!(n_shards >= 1 && n_shards <= MAX_SHARDS, "implausible shard count {n_shards}");
+    let assignment = ShardAssignment::from_code(bytes[4])?;
+    let n_total = u64::from_le_bytes(bytes[5..13].try_into()?);
+    ensure!(n_total <= u32::MAX as u64, "implausible corpus size {n_total}");
+    Ok(ShardMap::new(assignment, n_total as usize, n_shards))
+}
+
+/// An opened `.phnsw` file of either flavor.
+pub enum AnyBundle {
+    /// One monolithic index (the PR-2 layout).
+    Single(IndexBundle),
+    /// A sharded index: `SEGD` directory + one section group per shard.
+    Segmented(SegmentedIndex),
+}
+
+impl AnyBundle {
+    /// Total indexed rows.
+    pub fn len(&self) -> usize {
+        match self {
+            AnyBundle::Single(b) => b.high.len(),
+            AnyBundle::Segmented(s) => s.len(),
+        }
+    }
+
+    /// True if the bundle indexes no rows.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// High-dim query dimensionality.
+    pub fn dim(&self) -> usize {
+        match self {
+            AnyBundle::Single(b) => b.high.dim(),
+            AnyBundle::Segmented(s) => s.dim(),
+        }
+    }
+
+    /// Number of segments (1 for a monolithic bundle).
+    pub fn n_segments(&self) -> usize {
+        match self {
+            AnyBundle::Single(_) => 1,
+            AnyBundle::Segmented(s) => s.n_segments(),
+        }
+    }
+
+    /// Low-dim filter codec label (segmented: shard 0's codec).
+    pub fn low_codec_label(&self) -> &'static str {
+        match self {
+            AnyBundle::Single(b) => b.low.codec().label(),
+            AnyBundle::Segmented(s) => {
+                s.segments.first().map(|seg| seg.low.codec().label()).unwrap_or("-")
+            }
+        }
+    }
+
+    /// Ready-to-serve engine over the opened components: a plain
+    /// [`PhnswSearcher`] for a monolithic bundle, a fan-out/merge
+    /// [`crate::segment::SegmentedEngine`] for a sharded one.
+    pub fn engine(&self, params: PhnswParams) -> Arc<dyn AnnEngine> {
+        match self {
+            AnyBundle::Single(b) => Arc::new(b.searcher(params)),
+            AnyBundle::Segmented(s) => Arc::new(s.engine(params)),
+        }
+    }
+}
+
+/// Open a `.phnsw` artifact of either flavor, dispatching on the `SEGD`
+/// directory section.
+pub fn open_bundle(path: impl AsRef<Path>) -> Result<AnyBundle> {
+    let path = path.as_ref();
+    let (version, sections) = read_sections(path)?;
+    let segdir = sections.iter().find_map(|s| match s {
+        Section::SegDir(map) => Some(*map),
+        _ => None,
+    });
+    if version == VERSION_SINGLE {
+        // A v1 file with a directory would be misread by v1-only readers
+        // (they skip the unknown tag); no writer produces one.
+        ensure!(segdir.is_none(), "v1 bundle unexpectedly carries a segment directory");
+        Ok(AnyBundle::Single(assemble_single(sections)?))
+    } else {
+        let Some(map) = segdir else {
+            bail!("segmented (v2) bundle is missing its SEGD directory");
+        };
+        Ok(AnyBundle::Segmented(assemble_segmented(sections, map)?))
+    }
+}
+
+/// Assemble the classic single-segment bundle from its sections.
+fn assemble_single(sections: Vec<Section>) -> Result<IndexBundle> {
+    let mut graph = None;
+    let mut pca = None;
+    let mut low: Option<Arc<dyn VectorStore>> = None;
+    let mut high = None;
+    for section in sections {
+        match section {
+            Section::Graph(g) => graph = Some(g),
+            Section::Pca(p) => pca = Some(p),
+            Section::Low(l) => low = Some(l),
+            Section::High(h) => high = Some(h),
+            Section::SegDir(_) => {}
+        }
+    }
+    let (Some(graph), Some(pca), Some(low), Some(high)) = (graph, pca, low, high) else {
+        bail!("bundle is missing a required section (GRPH/PCAM/LOWQ/HIGH)");
+    };
+    ensure!(graph.len() == high.len(), "graph/high-dim size mismatch");
+    ensure!(graph.len() == low.len(), "graph/low-dim size mismatch");
+    ensure!(pca.dim() == high.dim(), "PCA input dim != high-dim table dim");
+    ensure!(pca.k() == low.dim(), "PCA output dim != low-dim store dim");
+    Ok(IndexBundle {
+        graph: Arc::new(graph),
+        pca: Arc::new(pca),
+        low,
+        high: Arc::new(high),
+    })
+}
+
+/// Assemble a segmented index: pair the repeated `GRPH`/`LOWQ`/`HIGH`
+/// groups positionally (file order is shard order) and validate every
+/// shard against the directory and the shared PCA model.
+fn assemble_segmented(sections: Vec<Section>, map: ShardMap) -> Result<SegmentedIndex> {
+    let mut pca = None;
+    let mut graphs = Vec::new();
+    let mut lows: Vec<Arc<dyn VectorStore>> = Vec::new();
+    let mut highs = Vec::new();
+    for section in sections {
+        match section {
+            Section::Graph(g) => graphs.push(g),
+            Section::Pca(p) => pca = Some(p),
+            Section::Low(l) => lows.push(l),
+            Section::High(h) => highs.push(h),
+            Section::SegDir(_) => {}
+        }
+    }
+    let Some(pca) = pca else {
+        bail!("segmented bundle is missing the PCAM section");
+    };
+    let s = map.n_shards();
+    ensure!(
+        graphs.len() == s && lows.len() == s && highs.len() == s,
+        "segmented bundle declares {s} shards but holds {} GRPH / {} LOWQ / {} HIGH sections",
+        graphs.len(),
+        lows.len(),
+        highs.len()
+    );
+    let pca = Arc::new(pca);
+    let mut segments = Vec::with_capacity(s);
+    for (i, ((graph, low), high)) in graphs.into_iter().zip(lows).zip(highs).enumerate() {
+        ensure!(
+            graph.len() == map.shard_len(i),
+            "shard {i}: graph holds {} nodes, directory says {}",
+            graph.len(),
+            map.shard_len(i)
+        );
+        ensure!(graph.len() == high.len(), "shard {i}: graph/high-dim size mismatch");
+        ensure!(graph.len() == low.len(), "shard {i}: graph/low-dim size mismatch");
+        ensure!(pca.dim() == high.dim(), "shard {i}: PCA input dim != high-dim table dim");
+        ensure!(pca.k() == low.dim(), "shard {i}: PCA output dim != low-dim store dim");
+        segments.push(Segment { graph: Arc::new(graph), high: Arc::new(high), low });
+    }
+    Ok(SegmentedIndex { pca, segments, map })
+}
+
+/// Write a segmented index as one `.phnsw` artifact. An `S = 1` index is
+/// written in the classic single-segment layout (no `SEGD`), so it stays
+/// readable by [`IndexBundle::open`] and byte-compatible with PR-2
+/// writers; `S > 1` leads with the shard directory and the shared PCA,
+/// then one `GRPH`/`LOWQ`/`HIGH` group per shard in shard order.
+pub fn save_segmented(path: impl AsRef<Path>, index: &SegmentedIndex) -> Result<()> {
+    let s = index.n_segments();
+    ensure!(s >= 1, "index holds no segments");
+    ensure!(s <= MAX_SHARDS, "{s} shards exceeds the bundle cap {MAX_SHARDS}");
+    if s == 1 {
+        let seg = &index.segments[0];
+        return IndexBundle::save(path, &seg.graph, &index.pca, seg.low.as_ref(), &seg.high);
+    }
+    let path = path.as_ref();
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION_SEGMENTED.to_le_bytes())?;
+    w.write_all(&((2 + 3 * s) as u32).to_le_bytes())?;
+    write_section(&mut w, TAG_SEGDIR, &encode_segdir(&index.map))?;
+    write_section(&mut w, TAG_PCA, &index.pca.to_bytes())?;
+    for seg in &index.segments {
+        let mut graph_bytes = Vec::new();
+        serialize::write_to(&seg.graph, &mut graph_bytes)?;
+        write_section(&mut w, TAG_GRAPH, &graph_bytes)?;
+        drop(graph_bytes);
+        write_section(&mut w, TAG_LOW, &seg.low.to_bytes())?;
+        write_high_section(&mut w, &seg.high)?;
+    }
+    w.flush()?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -322,6 +584,78 @@ mod tests {
         let p = tmp("mismatch.phnsw");
         IndexBundle::save(&p, &s.graph, &s.pca, &small.low, &s.base).unwrap();
         assert!(IndexBundle::open(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn open_bundle_dispatches_single_vs_segmented() {
+        use crate::segment::{build_segmented, SegmentSpec};
+        // Single-segment file → Single.
+        let s = stack(300);
+        let p = tmp("dispatch_single.phnsw");
+        IndexBundle::save(&p, &s.graph, &s.pca, &s.low, &s.base).unwrap();
+        let any = super::open_bundle(&p).unwrap();
+        assert!(matches!(any, super::AnyBundle::Single(_)));
+        assert_eq!(any.n_segments(), 1);
+        assert_eq!(any.len(), 300);
+        std::fs::remove_file(&p).ok();
+
+        // Segmented file → Segmented, with the directory honored.
+        let cfg = SyntheticConfig { n_base: 400, n_queries: 1, ..SyntheticConfig::tiny() };
+        let (base, _) = generate(&cfg);
+        let bc = BuildConfig { m: 4, ef_construction: 16, ..Default::default() };
+        let idx = build_segmented(&base, &bc, 6, 7, &SegmentSpec::new(3, 2));
+        let p = tmp("dispatch_seg.phnsw");
+        super::save_segmented(&p, &idx).unwrap();
+        // Segmented files must declare version 2 so pre-segmentation
+        // readers reject them loudly instead of serving the last shard.
+        let header = std::fs::read(&p).unwrap();
+        assert_eq!(u32::from_le_bytes(header[4..8].try_into().unwrap()), 2);
+        let any = super::open_bundle(&p).unwrap();
+        assert_eq!(any.n_segments(), 3);
+        assert_eq!(any.len(), 400);
+        assert_eq!(any.low_codec_label(), "sq8");
+        // The single-segment opener refuses segmented files loudly (from
+        // the header alone, before any shard decodes).
+        let err = IndexBundle::open(&p).unwrap_err();
+        assert!(err.to_string().contains("segmented"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn save_segmented_with_one_shard_writes_the_classic_layout() {
+        use crate::segment::{build_segmented, SegmentSpec};
+        let cfg = SyntheticConfig { n_base: 250, n_queries: 1, ..SyntheticConfig::tiny() };
+        let (base, _) = generate(&cfg);
+        let bc = BuildConfig { m: 4, ef_construction: 16, ..Default::default() };
+        let idx = build_segmented(&base, &bc, 6, 7, &SegmentSpec::new(1, 1));
+        let p = tmp("seg_as_classic.phnsw");
+        super::save_segmented(&p, &idx).unwrap();
+        // Readable by the classic single-segment opener: no SEGD section.
+        let b = IndexBundle::open(&p).unwrap();
+        assert_eq!(b.high.len(), 250);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn segmented_open_rejects_directory_mismatch() {
+        use crate::segment::{build_segmented, SegmentSpec};
+        let cfg = SyntheticConfig { n_base: 300, n_queries: 1, ..SyntheticConfig::tiny() };
+        let (base, _) = generate(&cfg);
+        let bc = BuildConfig { m: 4, ef_construction: 16, ..Default::default() };
+        let idx = build_segmented(&base, &bc, 6, 7, &SegmentSpec::new(3, 2));
+        let p = tmp("seg_badder.phnsw");
+        super::save_segmented(&p, &idx).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        // Corrupt the SEGD shard count (first section payload, offset
+        // 12-byte file header + 12-byte section header).
+        let mut bad = bytes.clone();
+        bad[24..28].copy_from_slice(&9u32.to_le_bytes());
+        std::fs::write(&p, &bad).unwrap();
+        assert!(super::open_bundle(&p).is_err(), "shard-count mismatch must be rejected");
+        // Truncation mid-shard is rejected too.
+        std::fs::write(&p, &bytes[..bytes.len() * 2 / 3]).unwrap();
+        assert!(super::open_bundle(&p).is_err());
         std::fs::remove_file(&p).ok();
     }
 }

@@ -18,5 +18,5 @@ pub mod bundle;
 pub mod engine;
 
 pub use artifacts::{ArtifactRegistry, Executable};
-pub use bundle::IndexBundle;
+pub use bundle::{open_bundle, save_segmented, AnyBundle, IndexBundle};
 pub use engine::XlaRerankEngine;

@@ -1,0 +1,218 @@
+//! Parallel shard construction.
+//!
+//! Each shard's graph is built by the existing single-shard builder
+//! ([`crate::graph::build::build`]) over that shard's rows only, so a
+//! segment is exactly as deterministic as a monolithic build: shard `s`
+//! draws its levels from a seed derived from `(cfg.seed, s)` and never
+//! observes another shard's state. Shards are distributed over at most
+//! `build_threads` scoped worker threads pulling from a shared counter —
+//! the *schedule* varies with the thread count, the *artifacts* do not
+//! (pinned by tests).
+
+use super::{SegmentSpec, ShardMap};
+use crate::dataset::VectorSet;
+use crate::graph::build::{build, BuildConfig};
+use crate::graph::HnswGraph;
+use crate::pca::PcaModel;
+use crate::search::PhnswParams;
+use crate::store::{Sq8Store, VectorStore};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+
+/// One shard of a segmented index: the graph plus both vector tables,
+/// all speaking shard-local ids.
+pub struct Segment {
+    /// Frozen per-shard HNSW graph.
+    pub graph: Arc<HnswGraph>,
+    /// Shard rows in the original high-dim space (rerank table).
+    pub high: Arc<VectorSet>,
+    /// SQ8-quantized low-dim filter store (per-shard quantization grid).
+    pub low: Arc<dyn VectorStore>,
+}
+
+/// A fully built segmented index: `S` independent segments plus the one
+/// PCA model they share and the id mapping that stitches them together.
+pub struct SegmentedIndex {
+    /// PCA fitted on the full corpus (shared by every shard's searcher).
+    pub pca: Arc<PcaModel>,
+    /// The shards, indexed by shard id.
+    pub segments: Vec<Segment>,
+    /// Global ↔ (shard, local) id mapping.
+    pub map: ShardMap,
+}
+
+impl SegmentedIndex {
+    /// Total rows across all segments.
+    pub fn len(&self) -> usize {
+        self.map.n_total()
+    }
+
+    /// True if the index holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Number of segments.
+    pub fn n_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// High-dim dimensionality (from the shared PCA model).
+    pub fn dim(&self) -> usize {
+        self.pca.dim()
+    }
+
+    /// Construct the fan-out/merge serving engine over this index.
+    pub fn engine(&self, params: PhnswParams) -> super::SegmentedEngine {
+        super::SegmentedEngine::new(self, params)
+    }
+}
+
+/// Seed for shard `s`'s level draws. Shard 0 keeps the configured seed,
+/// so an `S = 1` segmented build is bitwise identical to the monolithic
+/// builder; higher shards step by the 64-bit golden ratio.
+pub(crate) fn shard_seed(seed: u64, shard: usize) -> u64 {
+    seed.wrapping_add((shard as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Copy shard `s`'s rows out of the corpus, in local-id order.
+fn shard_rows(data: &VectorSet, map: &ShardMap, s: usize) -> VectorSet {
+    let mut out = VectorSet::new(data.dim());
+    out.reserve_rows(map.shard_len(s));
+    for local in 0..map.shard_len(s) as u32 {
+        out.push(data.row(map.global_of(s, local) as usize));
+    }
+    out
+}
+
+/// Split `data` into `spec.n_shards` segments and build each shard's
+/// HNSW graph in parallel, fitting PCA on the full corpus first.
+pub fn build_segmented(
+    data: &VectorSet,
+    bc: &BuildConfig,
+    dim_low: usize,
+    pca_seed: u64,
+    spec: &SegmentSpec,
+) -> SegmentedIndex {
+    let pca = Arc::new(PcaModel::fit(data, dim_low, pca_seed));
+    build_segmented_with_pca(data, bc, pca, spec)
+}
+
+/// [`build_segmented`] with an already-fitted PCA model (the workbench
+/// path, which shares its model between the monolithic and segmented
+/// stacks).
+pub fn build_segmented_with_pca(
+    data: &VectorSet,
+    bc: &BuildConfig,
+    pca: Arc<PcaModel>,
+    spec: &SegmentSpec,
+) -> SegmentedIndex {
+    assert!(spec.n_shards >= 1, "need at least one shard");
+    assert_eq!(pca.dim(), data.dim(), "PCA input dim mismatch");
+    let map = ShardMap::new(spec.assignment, data.len(), spec.n_shards);
+    let s_total = spec.n_shards;
+    let workers = spec.build_threads.clamp(1, s_total);
+
+    // Dynamic shard queue: workers pull the next shard index from a
+    // shared counter and report finished segments over a channel. The
+    // schedule depends on the thread count; the segments do not — each
+    // is a pure function of (data, bc, pca, shard id).
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, Segment)>();
+    let mut slots: Vec<Option<Segment>> = Vec::with_capacity(s_total);
+    slots.resize_with(s_total, || None);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let next = &next;
+            let pca = &pca;
+            let map = &map;
+            scope.spawn(move || loop {
+                let s = next.fetch_add(1, Ordering::Relaxed);
+                if s >= s_total {
+                    break;
+                }
+                let high = shard_rows(data, map, s);
+                let cfg = BuildConfig { seed: shard_seed(bc.seed, s), ..bc.clone() };
+                let graph = build(&high, &cfg);
+                let low: Arc<dyn VectorStore> =
+                    Arc::new(Sq8Store::from_set(&pca.project_set(&high)));
+                let seg = Segment { graph: Arc::new(graph), high: Arc::new(high), low };
+                if tx.send((s, seg)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        for (s, seg) in rx {
+            slots[s] = Some(seg);
+        }
+    });
+    let segments: Vec<Segment> =
+        slots.into_iter().map(|s| s.expect("worker built every shard")).collect();
+    SegmentedIndex { pca, segments, map }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic::{generate, SyntheticConfig};
+    use crate::segment::ShardAssignment;
+
+    fn corpus(n: usize) -> VectorSet {
+        let cfg = SyntheticConfig { n_base: n, n_queries: 1, ..SyntheticConfig::tiny() };
+        generate(&cfg).0
+    }
+
+    fn spec(s: usize, t: usize) -> SegmentSpec {
+        SegmentSpec { n_shards: s, build_threads: t, assignment: ShardAssignment::RoundRobin }
+    }
+
+    #[test]
+    fn builds_every_shard_with_its_rows() {
+        let data = corpus(500);
+        let bc = BuildConfig { m: 4, ef_construction: 16, ..Default::default() };
+        let idx = build_segmented(&data, &bc, 4, 7, &spec(3, 2));
+        assert_eq!(idx.n_segments(), 3);
+        assert_eq!(idx.len(), 500);
+        for (s, seg) in idx.segments.iter().enumerate() {
+            assert_eq!(seg.graph.len(), idx.map.shard_len(s));
+            assert_eq!(seg.high.len(), seg.graph.len());
+            assert_eq!(seg.low.len(), seg.graph.len());
+            assert!(seg.graph.is_frozen());
+            assert!(seg.graph.check_invariants().is_empty());
+            // Shard rows are the mapped corpus rows, verbatim.
+            for local in [0u32, seg.high.len() as u32 / 2] {
+                let g = idx.map.global_of(s, local) as usize;
+                assert_eq!(seg.high.row(local as usize), data.row(g));
+            }
+        }
+    }
+
+    #[test]
+    fn shard_zero_matches_monolithic_build_when_s_is_one() {
+        let data = corpus(400);
+        let bc = BuildConfig { m: 6, ef_construction: 24, ..Default::default() };
+        let mono = build(&data, &bc);
+        let idx = build_segmented(&data, &bc, 4, 7, &spec(1, 1));
+        let seg = &idx.segments[0].graph;
+        assert_eq!(seg.entry_point(), mono.entry_point());
+        for n in 0..mono.len() as u32 {
+            assert_eq!(seg.level(n), mono.level(n));
+            for l in 0..=mono.level(n) {
+                assert_eq!(seg.neighbors(n, l), mono.neighbors(n, l));
+            }
+        }
+    }
+
+    #[test]
+    fn more_shards_than_rows_leaves_empty_segments() {
+        let data = corpus(3);
+        let bc = BuildConfig { m: 4, ef_construction: 8, ..Default::default() };
+        let idx = build_segmented(&data, &bc, 2, 1, &spec(5, 4));
+        assert_eq!(idx.n_segments(), 5);
+        assert_eq!(idx.len(), 3);
+        assert!(idx.segments[4].graph.is_empty());
+        assert_eq!(idx.segments[0].graph.len(), 1);
+    }
+}

@@ -1,0 +1,223 @@
+//! Fan-out/merge serving over a [`SegmentedIndex`].
+//!
+//! Every shard holds an independent pHNSW stack (graph + SQ8 filter
+//! store + f32 rerank table) sharing one PCA model. A query runs against
+//! every shard and the per-shard top-k lists — already sorted ascending
+//! with `total_cmp` tie-broken by id — are remapped to global ids and
+//! merged into one list truncated to the layer-0 beam width, so a
+//! segmented engine answers with exactly the shape a monolithic
+//! [`PhnswSearcher`] does. With `S = 1` the merge is the identity and
+//! results are bitwise identical to the plain searcher (pinned by
+//! tests).
+
+use super::{SegmentedIndex, ShardMap};
+use crate::search::{AnnEngine, Neighbor, PhnswParams, PhnswSearcher, SearchStats};
+
+/// Below this many rows in the largest shard, a per-query scoped-thread
+/// fan costs more in spawn/join than it saves in overlapped search —
+/// single queries fan serially instead (results are identical either
+/// way; only the schedule differs).
+const PARALLEL_FAN_MIN_ROWS: usize = 4096;
+
+/// Multi-shard pHNSW engine: one [`PhnswSearcher`] per segment plus the
+/// id remap + merge at the result boundary.
+pub struct SegmentedEngine {
+    searchers: Vec<PhnswSearcher>,
+    map: ShardMap,
+    /// Merged-result length: the layer-0 beam width, for parity with the
+    /// monolithic searcher's result shape.
+    out_len: usize,
+    /// Whether single-query fans pay for scoped threads (big shards).
+    parallel_fan: bool,
+}
+
+impl SegmentedEngine {
+    /// Build per-shard searchers over `index` with shared `params`.
+    pub fn new(index: &SegmentedIndex, params: PhnswParams) -> Self {
+        let searchers: Vec<PhnswSearcher> = index
+            .segments
+            .iter()
+            .map(|seg| {
+                PhnswSearcher::with_store(
+                    seg.graph.clone(),
+                    seg.high.clone(),
+                    seg.low.clone(),
+                    index.pca.clone(),
+                    params.clone(),
+                )
+            })
+            .collect();
+        let biggest = index.segments.iter().map(|seg| seg.high.len()).max().unwrap_or(0);
+        Self {
+            searchers,
+            map: index.map,
+            out_len: params.search.ef_l0,
+            parallel_fan: biggest >= PARALLEL_FAN_MIN_ROWS,
+        }
+    }
+
+    /// Number of shards the engine fans over.
+    pub fn n_shards(&self) -> usize {
+        self.searchers.len()
+    }
+
+    /// Run `run` once per shard, in shard order. Large shards get one
+    /// scoped thread each so their latencies overlap; small shards (or a
+    /// single one) run inline, where thread spawn would dominate.
+    fn fan<T: Send>(&self, run: impl Fn(&PhnswSearcher) -> T + Sync) -> Vec<T> {
+        if !self.parallel_fan || self.searchers.len() == 1 {
+            return self.searchers.iter().map(run).collect();
+        }
+        let mut out: Vec<Option<T>> = Vec::new();
+        out.resize_with(self.searchers.len(), || None);
+        std::thread::scope(|scope| {
+            for (searcher, slot) in self.searchers.iter().zip(out.iter_mut()) {
+                let run = &run;
+                scope.spawn(move || *slot = Some(run(searcher)));
+            }
+        });
+        out.into_iter().map(|t| t.expect("fan worker filled its slot")).collect()
+    }
+
+    /// Remap shard-local result ids to global ids and merge the per-shard
+    /// lists into one ascending list of at most `out_len` neighbors.
+    /// Ordering is `total_cmp` on distance, ties broken by global id —
+    /// the same comparator every per-shard list is already sorted by, so
+    /// the merge is deterministic even with NaN distances.
+    fn merge(&self, per_shard: Vec<Vec<Neighbor>>) -> Vec<Neighbor> {
+        let total: usize = per_shard.iter().map(|r| r.len()).sum();
+        let mut all = Vec::with_capacity(total);
+        for (s, res) in per_shard.into_iter().enumerate() {
+            for n in res {
+                all.push(Neighbor { id: self.map.global_of(s, n.id), dist: n.dist });
+            }
+        }
+        all.sort_by(|a, b| a.dist.total_cmp(&b.dist).then_with(|| a.id.cmp(&b.id)));
+        all.truncate(self.out_len);
+        all
+    }
+}
+
+impl AnnEngine for SegmentedEngine {
+    fn name(&self) -> &str {
+        "phnsw-seg"
+    }
+
+    /// Fan one query across all shards (overlapped when shards are large
+    /// enough to amortize a thread spawn) and merge.
+    fn search(&self, query: &[f32]) -> Vec<Neighbor> {
+        let per_shard = self.fan(|s| s.search(query));
+        self.merge(per_shard)
+    }
+
+    /// Per-shard stats are element-wise summed: the aggregate counts the
+    /// total work the query cost across the whole segmented index. Fans
+    /// exactly like [`Self::search`], so measured and served latency
+    /// profiles match.
+    fn search_with_stats(&self, query: &[f32]) -> (Vec<Neighbor>, SearchStats) {
+        let pairs = self.fan(|s| s.search_with_stats(query));
+        let mut agg = SearchStats::default();
+        let mut per_shard = Vec::with_capacity(pairs.len());
+        for (res, stats) in pairs {
+            agg.add(&stats);
+            per_shard.push(res);
+        }
+        (self.merge(per_shard), agg)
+    }
+
+    /// Whole-batch fan: each shard sees the *entire* batch through its
+    /// own data-parallel `search_batch` override, then results merge per
+    /// query. Bitwise identical to sequential `search` calls (both sides
+    /// of the fan are, and the merge is deterministic).
+    fn search_batch(&self, queries: &[&[f32]]) -> Vec<Vec<Neighbor>> {
+        if self.searchers.len() == 1 {
+            let shard = self.searchers[0].search_batch(queries);
+            return shard.into_iter().map(|r| self.merge(vec![r])).collect();
+        }
+        // Transpose by draining one per-shard iterator per query: results
+        // move straight into the merge, no clones.
+        let mut per_shard: Vec<std::vec::IntoIter<Vec<Neighbor>>> = self
+            .searchers
+            .iter()
+            .map(|s| s.search_batch(queries).into_iter())
+            .collect();
+        (0..queries.len())
+            .map(|_| {
+                self.merge(
+                    per_shard
+                        .iter_mut()
+                        .map(|shard| shard.next().expect("search_batch is 1:1 with queries"))
+                        .collect(),
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic::{generate, SyntheticConfig};
+    use crate::graph::build::BuildConfig;
+    use crate::segment::{build_segmented, SegmentSpec, ShardAssignment};
+
+    fn engine(n: usize, shards: usize) -> (SegmentedEngine, crate::dataset::VectorSet) {
+        let cfg = SyntheticConfig { n_base: n, n_queries: 30, ..SyntheticConfig::tiny() };
+        let (base, queries) = generate(&cfg);
+        let bc = BuildConfig { m: 8, ef_construction: 48, ..Default::default() };
+        let spec = SegmentSpec {
+            n_shards: shards,
+            build_threads: 2,
+            assignment: ShardAssignment::RoundRobin,
+        };
+        let idx = build_segmented(&base, &bc, 8, 7, &spec);
+        (idx.engine(PhnswParams::default()), queries)
+    }
+
+    #[test]
+    fn results_sorted_unique_and_global() {
+        let (e, queries) = engine(1200, 3);
+        assert_eq!(e.n_shards(), 3);
+        for q in queries.iter().take(10) {
+            let res = e.search(q);
+            assert!(!res.is_empty());
+            for w in res.windows(2) {
+                assert!(w[0].dist <= w[1].dist);
+            }
+            let ids: std::collections::HashSet<_> = res.iter().map(|n| n.id).collect();
+            assert_eq!(ids.len(), res.len(), "global ids must be unique after remap");
+            assert!(res.iter().all(|n| (n.id as usize) < 1200), "ids are corpus-global");
+        }
+    }
+
+    #[test]
+    fn search_batch_matches_sequential_bitwise() {
+        let (e, queries) = engine(900, 4);
+        let qrefs: Vec<&[f32]> = (0..20).map(|i| queries.row(i)).collect();
+        let sequential: Vec<Vec<Neighbor>> = qrefs.iter().map(|q| e.search(q)).collect();
+        assert_eq!(e.search_batch(&qrefs), sequential);
+    }
+
+    #[test]
+    fn stats_aggregate_across_shards() {
+        let (e, queries) = engine(900, 3);
+        let q = queries.row(0);
+        let (res, agg) = e.search_with_stats(q);
+        assert_eq!(res, e.search(q));
+        // The aggregate is the sum of per-shard runs.
+        let mut manual = SearchStats::default();
+        for s in &e.searchers {
+            manual.add(&s.search_with_stats(q).1);
+        }
+        assert_eq!(agg, manual);
+        assert!(agg.hops > 0);
+    }
+
+    #[test]
+    fn merge_truncates_to_layer0_beam_width() {
+        let (e, queries) = engine(1200, 4);
+        // 4 shards × ef_l0 results each must still merge to ef_l0.
+        let res = e.search(queries.row(0));
+        assert_eq!(res.len(), PhnswParams::default().search.ef_l0);
+    }
+}

@@ -1,0 +1,268 @@
+//! Segmented index layer — the unit of horizontal scale.
+//!
+//! One monolithic HNSW graph caps both build throughput (the builder is
+//! inherently serial per graph) and dataset size (one memory arena, one
+//! core). This layer splits a corpus into `S` shards by a deterministic
+//! [`ShardMap`], builds an independent HNSW segment per shard **in
+//! parallel** ([`build`] — each segment reuses the single-shard builder,
+//! so per-shard results stay deterministic regardless of thread count),
+//! and serves them through a [`SegmentedEngine`] that fans every query
+//! (and whole batches) across shards and merges the per-shard top-k into
+//! one global result — the partition-and-merge scheme SmartANNS-style
+//! systems use to scale graph ANN beyond one core.
+//!
+//! All segments share a single [`crate::pca::PcaModel`] fitted on the
+//! full corpus, so the filter space is globally consistent; quantization
+//! (SQ8) is per-shard, matching the future per-shard codec-choice axis.
+//!
+//! Shard-local ids are what each segment's graph and stores speak;
+//! [`ShardMap::global_of`] remaps them to corpus ids at the merge
+//! boundary, so callers never observe shard-local numbering.
+
+pub mod build;
+pub mod engine;
+
+pub use build::{build_segmented, build_segmented_with_pca, Segment, SegmentedIndex};
+pub use engine::SegmentedEngine;
+
+/// How global row ids are distributed over shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardAssignment {
+    /// Row `i` goes to shard `i % S` (default: spreads clustered inserts
+    /// evenly regardless of corpus order).
+    RoundRobin,
+    /// Balanced contiguous ranges: the first `n % S` shards get
+    /// `⌈n/S⌉` rows, the rest `⌊n/S⌋`.
+    Contiguous,
+}
+
+impl ShardAssignment {
+    /// Stable on-disk code (bundle `SEGD` section).
+    pub fn code(&self) -> u8 {
+        match self {
+            ShardAssignment::RoundRobin => 0,
+            ShardAssignment::Contiguous => 1,
+        }
+    }
+
+    /// Inverse of [`Self::code`].
+    pub fn from_code(c: u8) -> crate::Result<Self> {
+        match c {
+            0 => Ok(ShardAssignment::RoundRobin),
+            1 => Ok(ShardAssignment::Contiguous),
+            other => anyhow::bail!("unknown shard assignment code {other}"),
+        }
+    }
+
+    /// Short display label (also the CLI spelling).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShardAssignment::RoundRobin => "rr",
+            ShardAssignment::Contiguous => "contig",
+        }
+    }
+
+    /// Parse the CLI spelling.
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "rr" | "round-robin" => Ok(ShardAssignment::RoundRobin),
+            "contig" | "contiguous" => Ok(ShardAssignment::Contiguous),
+            other => anyhow::bail!("unknown shard assignment {other:?} (rr | contig)"),
+        }
+    }
+}
+
+/// Deterministic bijection between global row ids and (shard, local id)
+/// pairs. Pure arithmetic — no lookup tables — so the mapping costs
+/// nothing to store in a bundle and nothing to evaluate at merge time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardMap {
+    assignment: ShardAssignment,
+    n_total: usize,
+    n_shards: usize,
+}
+
+impl ShardMap {
+    /// Create a mapping of `n_total` rows onto `n_shards` shards.
+    pub fn new(assignment: ShardAssignment, n_total: usize, n_shards: usize) -> Self {
+        assert!(n_shards >= 1, "need at least one shard");
+        Self { assignment, n_total, n_shards }
+    }
+
+    /// Number of shards.
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Total rows across all shards.
+    pub fn n_total(&self) -> usize {
+        self.n_total
+    }
+
+    /// The assignment scheme.
+    pub fn assignment(&self) -> ShardAssignment {
+        self.assignment
+    }
+
+    /// First global id of contiguous shard `s`.
+    fn contiguous_start(&self, s: usize) -> usize {
+        let base = self.n_total / self.n_shards;
+        let rem = self.n_total % self.n_shards;
+        s * base + s.min(rem)
+    }
+
+    /// Number of rows assigned to shard `s`.
+    pub fn shard_len(&self, s: usize) -> usize {
+        assert!(s < self.n_shards, "shard {s} out of range");
+        match self.assignment {
+            ShardAssignment::RoundRobin => (self.n_total + self.n_shards - 1 - s) / self.n_shards,
+            ShardAssignment::Contiguous => {
+                self.contiguous_start(s + 1).min(self.n_total) - self.contiguous_start(s)
+            }
+        }
+    }
+
+    /// Global id of local row `local` in shard `shard`.
+    #[inline]
+    pub fn global_of(&self, shard: usize, local: u32) -> u32 {
+        debug_assert!(shard < self.n_shards);
+        debug_assert!((local as usize) < self.shard_len(shard));
+        match self.assignment {
+            ShardAssignment::RoundRobin => local * self.n_shards as u32 + shard as u32,
+            ShardAssignment::Contiguous => self.contiguous_start(shard) as u32 + local,
+        }
+    }
+
+    /// Inverse of [`Self::global_of`]: which shard holds `global`, and at
+    /// which local index.
+    #[inline]
+    pub fn shard_of(&self, global: u32) -> (usize, u32) {
+        debug_assert!((global as usize) < self.n_total);
+        match self.assignment {
+            ShardAssignment::RoundRobin => (
+                (global as usize) % self.n_shards,
+                global / self.n_shards as u32,
+            ),
+            ShardAssignment::Contiguous => {
+                let base = self.n_total / self.n_shards;
+                let rem = self.n_total % self.n_shards;
+                let g = global as usize;
+                // Rows below rem*(base+1) live in the wide shards.
+                let s = if g < rem * (base + 1) {
+                    g / (base + 1)
+                } else if base == 0 {
+                    // n < S: every row landed in a wide shard above.
+                    unreachable!("global {g} beyond populated shards")
+                } else {
+                    rem + (g - rem * (base + 1)) / base
+                };
+                (s, (g - self.contiguous_start(s)) as u32)
+            }
+        }
+    }
+}
+
+/// How to segment a corpus: shard count, assignment scheme, and the
+/// builder-thread budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SegmentSpec {
+    /// Number of shards `S`.
+    pub n_shards: usize,
+    /// Global-id → shard mapping scheme.
+    pub assignment: ShardAssignment,
+    /// Max concurrently building shards (clamped to `n_shards`).
+    pub build_threads: usize,
+}
+
+impl Default for SegmentSpec {
+    fn default() -> Self {
+        Self { n_shards: 1, assignment: ShardAssignment::RoundRobin, build_threads: 1 }
+    }
+}
+
+impl SegmentSpec {
+    /// Spec with `n_shards` shards built by `build_threads` threads.
+    pub fn new(n_shards: usize, build_threads: usize) -> Self {
+        Self { n_shards, build_threads, ..Self::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn maps(n: usize, s: usize) -> [ShardMap; 2] {
+        [
+            ShardMap::new(ShardAssignment::RoundRobin, n, s),
+            ShardMap::new(ShardAssignment::Contiguous, n, s),
+        ]
+    }
+
+    #[test]
+    fn shard_lens_partition_the_corpus() {
+        for (n, s) in [(10, 3), (7, 7), (3, 5), (0, 4), (1000, 16), (13, 1)] {
+            for m in maps(n, s) {
+                let total: usize = (0..s).map(|i| m.shard_len(i)).sum();
+                assert_eq!(total, n, "{m:?}");
+                // Balanced within one row.
+                let lens: Vec<usize> = (0..s).map(|i| m.shard_len(i)).collect();
+                let (mn, mx) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                assert!(mx - mn <= 1, "{m:?}: {lens:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn global_of_is_a_bijection() {
+        for (n, s) in [(10, 3), (3, 5), (100, 7), (16, 16)] {
+            for m in maps(n, s) {
+                let mut seen = vec![false; n];
+                for shard in 0..s {
+                    for local in 0..m.shard_len(shard) as u32 {
+                        let g = m.global_of(shard, local) as usize;
+                        assert!(g < n, "{m:?}");
+                        assert!(!seen[g], "{m:?}: duplicate global {g}");
+                        seen[g] = true;
+                    }
+                }
+                assert!(seen.iter().all(|&x| x), "{m:?}: unmapped globals");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_of_inverts_global_of() {
+        for (n, s) in [(10, 3), (3, 5), (101, 8), (64, 1)] {
+            for m in maps(n, s) {
+                for g in 0..n as u32 {
+                    let (shard, local) = m.shard_of(g);
+                    assert_eq!(m.global_of(shard, local), g, "{m:?} global {g}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_interleaves_and_contiguous_ranges() {
+        let rr = ShardMap::new(ShardAssignment::RoundRobin, 10, 3);
+        assert_eq!(rr.global_of(0, 0), 0);
+        assert_eq!(rr.global_of(1, 0), 1);
+        assert_eq!(rr.global_of(0, 1), 3);
+        let c = ShardMap::new(ShardAssignment::Contiguous, 10, 3);
+        // 10 over 3 → lens 4, 3, 3; starts 0, 4, 7.
+        assert_eq!(c.shard_len(0), 4);
+        assert_eq!(c.shard_len(1), 3);
+        assert_eq!(c.global_of(1, 0), 4);
+        assert_eq!(c.global_of(2, 2), 9);
+    }
+
+    #[test]
+    fn assignment_codes_roundtrip() {
+        for a in [ShardAssignment::RoundRobin, ShardAssignment::Contiguous] {
+            assert_eq!(ShardAssignment::from_code(a.code()).unwrap(), a);
+            assert_eq!(ShardAssignment::parse(a.label()).unwrap(), a);
+        }
+        assert!(ShardAssignment::from_code(9).is_err());
+        assert!(ShardAssignment::parse("zig").is_err());
+    }
+}

@@ -233,6 +233,19 @@ impl Workbench {
         IndexBundle::save(path, &self.graph, &self.pca, &low, &self.base)
     }
 
+    /// Build a segmented index over the workbench corpus, sharing the
+    /// workbench's fitted PCA model — so the monolithic and segmented
+    /// stacks filter in the *same* low-dim space and recall deltas are
+    /// attributable to sharding alone.
+    pub fn segmented(&self, spec: &crate::segment::SegmentSpec) -> crate::segment::SegmentedIndex {
+        let bc = BuildConfig {
+            m: self.cfg.m,
+            ef_construction: self.cfg.ef_construction,
+            ..Default::default()
+        };
+        crate::segment::build_segmented_with_pca(&self.base, &bc, self.pca.clone(), spec)
+    }
+
     /// Run the processor simulation for one Table III cell.
     pub fn simulate(
         &self,

@@ -68,7 +68,7 @@ fn prop_ksort_equals_stable_argsort() {
             let k = v.len().min(16);
             let got = ksort_topk(v, k);
             let mut want: Vec<(f32, u32)> = v.iter().copied().zip(0u32..).collect();
-            want.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            want.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
             want.truncate(k);
             got == want
         },
@@ -131,7 +131,7 @@ fn prop_topk_heap_keeps_k_smallest() {
             }
             let got: Vec<f32> = t.into_sorted().into_iter().map(|(d, _)| d).collect();
             let mut want = v.to_vec();
-            want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            want.sort_by(|a, b| a.total_cmp(b));
             want.truncate(k);
             got == want
         },

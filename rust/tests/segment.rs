@@ -1,0 +1,185 @@
+//! Integration tests for the segmented index layer: S=1 parity with the
+//! monolithic searcher, S>1 recall, bundle round-trips, and parallel
+//! build determinism across thread counts.
+
+use phnsw::dataset::synthetic::{generate, SyntheticConfig};
+use phnsw::dataset::{ground_truth, VectorSet};
+use phnsw::graph::build::{build, BuildConfig};
+use phnsw::graph::HnswGraph;
+use phnsw::metrics::recall_at_k;
+use phnsw::pca::PcaModel;
+use phnsw::search::{AnnEngine, PhnswParams, PhnswSearcher, SearchParams};
+use phnsw::segment::{
+    build_segmented, build_segmented_with_pca, SegmentSpec, SegmentedIndex, ShardAssignment,
+};
+use std::sync::Arc;
+
+const DIM_LOW: usize = 8;
+const PCA_SEED: u64 = 7;
+
+struct Fixture {
+    base: Arc<VectorSet>,
+    queries: VectorSet,
+    gt: Vec<Vec<u32>>,
+    bc: BuildConfig,
+}
+
+fn fixture(n: usize, nq: usize) -> Fixture {
+    let cfg = SyntheticConfig { n_base: n, n_queries: nq, ..SyntheticConfig::tiny() };
+    let (base, queries) = generate(&cfg);
+    let gt = ground_truth(&base, &queries, 10);
+    let bc = BuildConfig { m: 8, ef_construction: 100, ..Default::default() };
+    Fixture { base: Arc::new(base), queries, gt, bc }
+}
+
+fn spec(s: usize, t: usize) -> SegmentSpec {
+    SegmentSpec { n_shards: s, build_threads: t, assignment: ShardAssignment::RoundRobin }
+}
+
+fn assert_graphs_equal(a: &HnswGraph, b: &HnswGraph, label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: node count");
+    assert_eq!(a.entry_point(), b.entry_point(), "{label}: entry point");
+    for n in 0..a.len() as u32 {
+        assert_eq!(a.level(n), b.level(n), "{label}: node {n} level");
+        for l in 0..=a.level(n) {
+            assert_eq!(a.neighbors(n, l), b.neighbors(n, l), "{label}: node {n} level {l}");
+        }
+    }
+}
+
+#[test]
+fn single_shard_engine_is_bitwise_identical_to_plain_searcher() {
+    let f = fixture(1500, 40);
+    // Monolithic stack.
+    let graph = Arc::new(build(&f.base, &f.bc));
+    let params = PhnswParams::default();
+    let mono = PhnswSearcher::build_from(
+        graph.clone(),
+        f.base.clone(),
+        DIM_LOW,
+        params.clone(),
+        PCA_SEED,
+    );
+    // Segmented stack with S = 1: same PCA seed, same builder seed for
+    // shard 0, same SQ8 grid (trained on the full corpus either way).
+    let idx = build_segmented(&f.base, &f.bc, DIM_LOW, PCA_SEED, &spec(1, 1));
+    let seg = idx.engine(params);
+    for q in f.queries.iter() {
+        assert_eq!(
+            seg.search(q),
+            mono.search(q),
+            "S=1 segmented engine must be bitwise identical to the plain searcher"
+        );
+    }
+    // The batch path too.
+    let qrefs: Vec<&[f32]> = f.queries.iter().collect();
+    assert_eq!(seg.search_batch(&qrefs), mono.search_batch(&qrefs));
+}
+
+#[test]
+fn multi_shard_recall_tracks_monolithic() {
+    let f = fixture(3000, 60);
+    // Shared PCA so the only variable is sharding.
+    let pca = Arc::new(PcaModel::fit(&f.base, DIM_LOW, PCA_SEED));
+    let params = PhnswParams {
+        search: SearchParams { ef_upper: 1, ef_l0: 16 },
+        ..PhnswParams::default()
+    };
+    let graph = Arc::new(build(&f.base, &f.bc));
+    let low = Arc::new(phnsw::store::Sq8Store::from_set(&pca.project_set(&f.base)));
+    let mono = PhnswSearcher::with_store(graph, f.base.clone(), low, pca.clone(), params.clone());
+    let idx = build_segmented_with_pca(&f.base, &f.bc, pca, &spec(4, 4));
+    let seg = idx.engine(params);
+
+    let collect = |e: &dyn AnnEngine| -> Vec<Vec<u32>> {
+        f.queries
+            .iter()
+            .map(|q| e.search(q).into_iter().map(|n| n.id).take(10).collect())
+            .collect()
+    };
+    let r_mono = recall_at_k(&collect(&mono), &f.gt, 10);
+    let r_seg = recall_at_k(&collect(&seg), &f.gt, 10);
+    assert!(r_mono > 0.8, "monolithic recall {r_mono} suspiciously low");
+    assert!(
+        r_seg >= r_mono - 0.01,
+        "S=4 recall {r_seg} more than 0.01 below monolithic {r_mono}"
+    );
+}
+
+#[test]
+fn segmented_bundle_roundtrip_preserves_search_bitwise() {
+    let f = fixture(1200, 30);
+    let idx = build_segmented(&f.base, &f.bc, DIM_LOW, PCA_SEED, &spec(3, 2));
+    let params = PhnswParams::default();
+    let before = idx.engine(params.clone());
+
+    let path = std::env::temp_dir()
+        .join(format!("phnsw_segtest_{}.phnsw", std::process::id()));
+    phnsw::runtime::save_segmented(&path, &idx).unwrap();
+    let booted = match phnsw::runtime::open_bundle(&path).unwrap() {
+        phnsw::runtime::AnyBundle::Segmented(opened) => opened,
+        phnsw::runtime::AnyBundle::Single(_) => panic!("expected a segmented bundle"),
+    };
+    assert_eq!(booted.n_segments(), 3);
+    let after = booted.engine(params);
+    for q in f.queries.iter() {
+        assert_eq!(
+            before.search(q),
+            after.search(q),
+            "bundle round-trip must preserve results bitwise"
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn parallel_build_is_deterministic_across_thread_counts() {
+    let f = fixture(1600, 1);
+    for assignment in [ShardAssignment::RoundRobin, ShardAssignment::Contiguous] {
+        let mk = |threads: usize| -> SegmentedIndex {
+            build_segmented(
+                &f.base,
+                &f.bc,
+                DIM_LOW,
+                PCA_SEED,
+                &SegmentSpec { n_shards: 4, build_threads: threads, assignment },
+            )
+        };
+        let t1 = mk(1);
+        let t4 = mk(4);
+        let t3 = mk(3); // worker count that doesn't divide the shard count
+        for s in 0..4 {
+            let label = format!("{assignment:?} shard {s}");
+            assert_graphs_equal(&t1.segments[s].graph, &t4.segments[s].graph, &label);
+            assert_graphs_equal(&t1.segments[s].graph, &t3.segments[s].graph, &label);
+            assert_eq!(
+                t1.segments[s].low.to_bytes(),
+                t4.segments[s].low.to_bytes(),
+                "{label}: quantized store"
+            );
+            assert_eq!(t1.segments[s].high.flat(), t4.segments[s].high.flat(), "{label}: rows");
+        }
+    }
+}
+
+#[test]
+fn segmented_engine_serves_through_the_coordinator() {
+    use phnsw::coordinator::{Query, Server, ServerConfig};
+    let f = fixture(1000, 20);
+    let idx = build_segmented(&f.base, &f.bc, DIM_LOW, PCA_SEED, &spec(4, 2));
+    let engine: Arc<dyn AnnEngine> = Arc::new(idx.engine(PhnswParams::default()));
+    let direct = idx.engine(PhnswParams::default());
+    let server = Server::start_with_engine(
+        ServerConfig { workers: 2, ..Default::default() },
+        "phnsw-seg",
+        engine,
+    );
+    let handle = server.handle();
+    for qi in 0..f.queries.len() {
+        let res = handle.query_blocking(Query::new(f.queries.row(qi).to_vec())).unwrap();
+        assert_eq!(res.engine, "phnsw-seg");
+        let want: Vec<_> = direct.search(f.queries.row(qi)).into_iter().take(10).collect();
+        assert_eq!(res.neighbors, want, "query {qi} served through the coordinator");
+    }
+    server.shutdown();
+}
