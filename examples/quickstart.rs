@@ -6,9 +6,10 @@
 //! Run: `cargo run --release --example quickstart`
 
 use phnsw::runtime::IndexBundle;
-use phnsw::search::{AnnEngine, PhnswParams, SearchParams};
+use phnsw::search::{AnnEngine, IdFilter, PhnswParams, SearchParams, SearchRequest};
 use phnsw::store::VectorStore;
 use phnsw::workbench::{Workbench, WorkbenchConfig};
+use std::sync::Arc;
 
 fn main() -> phnsw::Result<()> {
     // 1. Assemble the stack: corpus → PCA(128→15) → HNSW graph.
@@ -55,7 +56,21 @@ fn main() -> phnsw::Result<()> {
         he.recall, pe.recall, he.qps, pe.qps
     );
 
-    // 5. One-file index artifact: graph + PCA + SQ8 filter store + f32
+    // 5. Request-scoped search: per-request topk and a metadata filter
+    //    (here: only even ids, selectivity 0.5). The filter applies
+    //    inside the beam — disallowed nodes still route the walk but
+    //    never surface — and the layer-0 beam widens with selectivity.
+    let evens = Arc::new(IdFilter::from_fn(w.base.len(), |id| id % 2 == 0));
+    let filtered = phnsw.search_req(
+        &SearchRequest::new(q).with_topk(5).with_filter(evens.clone()),
+    );
+    assert!(filtered.iter().all(|n| n.id % 2 == 0) && filtered.len() <= 5);
+    println!(
+        "\nfiltered top-5 (even ids only): {:?}",
+        filtered.iter().map(|n| n.id).collect::<Vec<_>>()
+    );
+
+    // 6. One-file index artifact: graph + PCA + SQ8 filter store + f32
     //    rerank table. A server opens this instead of refitting anything,
     //    and gets bitwise-identical results.
     let path = std::env::temp_dir().join(format!("phnsw_quickstart_{}.phnsw", std::process::id()));

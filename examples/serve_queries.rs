@@ -3,10 +3,16 @@
 //! registered and round-robin A/B routing — the deployment shape the
 //! paper's processor would slot into as a lookaside accelerator.
 //!
+//! Clients here are *heterogeneous*, exercising the request-scoped
+//! search path: per-request `topk`, a high-recall ef-override tier, and
+//! metadata-filtered queries (an [`IdFilter`] over corpus ids) all ride
+//! through `submit → batcher → dispatch_batch` and are honored inside
+//! the engines' beam search.
+//!
 //! Run: `cargo run --release --example serve_queries`
 
 use phnsw::coordinator::{Query, RoutePolicy, Router, Server, ServerConfig};
-use phnsw::search::{AnnEngine, PhnswParams, SearchParams};
+use phnsw::search::{AnnEngine, IdFilter, PhnswParams, SearchParams};
 use phnsw::workbench::{Workbench, WorkbenchConfig};
 use std::sync::Arc;
 
@@ -25,7 +31,18 @@ fn main() -> phnsw::Result<()> {
     let server = Server::start(ServerConfig { workers: 4, ..Default::default() }, Arc::new(router));
     let handle = server.handle();
 
-    // 8 concurrent clients, 500 requests each.
+    // One "tenant" filter shared by every filtered request: a random 10%
+    // slice of the corpus.
+    let tenant = Arc::new(IdFilter::random(w.base.len(), 0.1, 0xF117));
+    println!(
+        "tenant filter: {} of {} ids allowed (selectivity {:.2})",
+        tenant.n_allowed(),
+        tenant.n_total(),
+        tenant.selectivity()
+    );
+
+    // 8 concurrent clients, 500 requests each, cycling through three
+    // request shapes: small-topk, high-recall tier, tenant-filtered.
     const CLIENTS: usize = 8;
     const PER_CLIENT: usize = 500;
     let t0 = std::time::Instant::now();
@@ -33,13 +50,30 @@ fn main() -> phnsw::Result<()> {
         for c in 0..CLIENTS {
             let h = handle.clone();
             let w = w.clone();
+            let tenant = tenant.clone();
             s.spawn(move || {
                 for i in 0..PER_CLIENT {
                     let qi = (c * PER_CLIENT + i) % w.queries.len();
-                    let mut q = Query::new(w.queries.row(qi).to_vec());
-                    q.topk = 10;
+                    let base = Query::new(w.queries.row(qi).to_vec());
+                    let q = match i % 3 {
+                        // A latency-sensitive client: 5 neighbors suffice.
+                        0 => base.with_topk(5),
+                        // A quality tier: wider layer-0 beam, 20 results.
+                        1 => base
+                            .with_topk(20)
+                            .with_ef(SearchParams { ef_l0: 32, ..SearchParams::default() }),
+                        // A tenant-scoped (filtered) query.
+                        _ => base.with_topk(10).with_filter(tenant.clone()),
+                    };
+                    let want_filter = q.filter.clone();
                     let res = h.query_blocking(q).expect("query failed");
-                    assert_eq!(res.neighbors.len(), 10);
+                    assert!(!res.neighbors.is_empty());
+                    if let Some(f) = want_filter {
+                        assert!(
+                            res.neighbors.iter().all(|n| f.allows(n.id)),
+                            "filtered request leaked a disallowed id"
+                        );
+                    }
                 }
             });
         }

@@ -64,7 +64,7 @@ fn main() {
         let mut report = run_open_loop(
             &server.handle(),
             &wb.queries,
-            &LoadConfig { rate_qps: rate, total: 400, seed: 42, engine: None },
+            &LoadConfig { rate_qps: rate, total: 400, seed: 42, ..Default::default() },
         );
         let (p50, p95, p99) = report.latency.summary();
         println!(

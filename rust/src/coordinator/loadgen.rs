@@ -1,13 +1,120 @@
 //! Open-loop load generator: Poisson arrivals at a configured offered
 //! rate, driving the server the way external clients would — latency
 //! under load (queueing included), not just closed-loop throughput.
+//!
+//! Requests are not uniform: a [`RequestMix`] samples per-request `topk`,
+//! layer-0 ef override, and filter selectivity from configurable
+//! distributions, so a load test exercises the request-scoped search
+//! path (filtered ANN, quality tiers) rather than only the default-knob
+//! fast path.
 
 use super::{Query, QueryResult, ServerHandle};
 use crate::dataset::VectorSet;
 use crate::metrics::LatencyStats;
 use crate::rng::Pcg32;
+use crate::search::{IdFilter, SearchParams};
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Per-request knob distributions. Each knob is drawn uniformly from its
+/// choice list per request — a weighted distribution is expressed by
+/// repeating entries. The default mix is the legacy workload: topk 10,
+/// no ef override, no filter.
+#[derive(Debug, Clone)]
+pub struct RequestMix {
+    /// Per-request `topk` choices.
+    pub topk: Vec<usize>,
+    /// Layer-0 ef override choices; `None` entries keep the engine
+    /// default.
+    pub ef_l0: Vec<Option<usize>>,
+    /// Filter selectivity choices; entries `>= 1.0` mean unfiltered.
+    pub selectivity: Vec<f64>,
+    /// The engine's configured beam widths: an `ef_l0` override is
+    /// resolved against these (so `ef_upper` — and anything else the
+    /// engine was tuned with — survives the override). Engines replace
+    /// their params wholesale with `ef_override`, so the generator must
+    /// know the base it is perturbing.
+    pub base_ef: SearchParams,
+}
+
+impl Default for RequestMix {
+    fn default() -> Self {
+        Self {
+            topk: vec![10],
+            ef_l0: vec![None],
+            selectivity: vec![1.0],
+            base_ef: SearchParams::default(),
+        }
+    }
+}
+
+impl RequestMix {
+    /// A serving-realistic mix: three result sizes, an occasional
+    /// high-recall tier, and filtered queries at moderate and low
+    /// selectivity alongside unfiltered ones.
+    pub fn serving() -> Self {
+        Self {
+            topk: vec![5, 10, 20],
+            ef_l0: vec![None, None, Some(24)],
+            selectivity: vec![1.0, 1.0, 0.5, 0.1],
+            ..Self::default()
+        }
+    }
+
+    /// Materialize the mix against a corpus of `n` rows: one shared
+    /// [`IdFilter`] is built per sub-1.0 selectivity entry (seeded from
+    /// `seed`), so sampling a request is O(1) — no per-request corpus
+    /// scan.
+    pub fn prepare(&self, corpus_n: usize, seed: u64) -> PreparedMix {
+        assert!(!self.topk.is_empty() && !self.ef_l0.is_empty() && !self.selectivity.is_empty());
+        let filters = self
+            .selectivity
+            .iter()
+            .enumerate()
+            .map(|(i, &sel)| {
+                if sel >= 1.0 || corpus_n == 0 {
+                    None
+                } else {
+                    Some(Arc::new(IdFilter::random(
+                        corpus_n,
+                        sel,
+                        seed.wrapping_add(i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    )))
+                }
+            })
+            .collect();
+        PreparedMix {
+            topk: self.topk.clone(),
+            ef_l0: self.ef_l0.clone(),
+            base_ef: self.base_ef.clone(),
+            filters,
+        }
+    }
+}
+
+/// A [`RequestMix`] with its filters materialized for one corpus.
+#[derive(Debug, Clone)]
+pub struct PreparedMix {
+    topk: Vec<usize>,
+    ef_l0: Vec<Option<usize>>,
+    base_ef: SearchParams,
+    filters: Vec<Option<Arc<IdFilter>>>,
+}
+
+impl PreparedMix {
+    /// Draw one request's knobs and apply them to a query.
+    pub fn sample(&self, rng: &mut Pcg32, mut q: Query) -> Query {
+        q.topk = self.topk[rng.range(0, self.topk.len())];
+        if let Some(ef_l0) = self.ef_l0[rng.range(0, self.ef_l0.len())] {
+            q.ef_override = Some(SearchParams { ef_l0, ..self.base_ef.clone() });
+        }
+        if let Some(f) = &self.filters[rng.range(0, self.filters.len())] {
+            q.filter = Some(f.clone());
+        }
+        q
+    }
+}
 
 /// Load-test configuration.
 #[derive(Debug, Clone)]
@@ -16,10 +123,28 @@ pub struct LoadConfig {
     pub rate_qps: f64,
     /// Total queries to offer.
     pub total: usize,
-    /// RNG seed for arrival jitter + query choice.
+    /// RNG seed for arrival jitter + query choice + knob sampling.
     pub seed: u64,
     /// Engine override (None = router policy).
     pub engine: Option<String>,
+    /// Per-request knob distributions.
+    pub mix: RequestMix,
+    /// Corpus size the filters span; 0 disables filtered requests even
+    /// if the mix asks for them (the generator cannot size a filter).
+    pub corpus_n: usize,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        Self {
+            rate_qps: 1_000.0,
+            total: 100,
+            seed: 1,
+            engine: None,
+            mix: RequestMix::default(),
+            corpus_n: 0,
+        }
+    }
 }
 
 /// Result of an open-loop run.
@@ -31,6 +156,8 @@ pub struct LoadReport {
     pub completed: usize,
     /// Queries rejected by backpressure.
     pub rejected: usize,
+    /// How many offered queries carried an id filter.
+    pub filtered: usize,
     /// Wall time of the run.
     pub elapsed: Duration,
     /// Achieved goodput (completed / elapsed).
@@ -40,13 +167,16 @@ pub struct LoadReport {
 }
 
 /// Drive `handle` at `cfg.rate_qps` with Poisson arrivals, drawing query
-/// vectors uniformly from `queries`. Blocks until all responses arrive
-/// (or their channels close).
+/// vectors uniformly from `queries` and per-request knobs from
+/// `cfg.mix`. Blocks until all responses arrive (or their channels
+/// close).
 pub fn run_open_loop(handle: &ServerHandle, queries: &VectorSet, cfg: &LoadConfig) -> LoadReport {
     assert!(cfg.rate_qps > 0.0 && cfg.total > 0 && !queries.is_empty());
     let mut rng = Pcg32::new(cfg.seed);
+    let mix = cfg.mix.prepare(cfg.corpus_n, cfg.seed ^ 0x4D49_5846); // "MIXF"
     let mut inflight: Vec<(Instant, mpsc::Receiver<QueryResult>)> = Vec::with_capacity(cfg.total);
     let mut rejected = 0usize;
+    let mut filtered = 0usize;
 
     let start = Instant::now();
     let mut next_arrival = start;
@@ -59,8 +189,9 @@ pub fn run_open_loop(handle: &ServerHandle, queries: &VectorSet, cfg: &LoadConfi
             std::thread::sleep(next_arrival - now);
         }
         let qi = rng.range(0, queries.len());
-        let mut q = Query::new(queries.row(qi).to_vec());
+        let mut q = mix.sample(&mut rng, Query::new(queries.row(qi).to_vec()));
         q.engine = cfg.engine.clone();
+        filtered += q.filter.is_some() as usize;
         match handle.submit(q) {
             Ok(rx) => inflight.push((Instant::now(), rx)),
             Err(_) => rejected += 1,
@@ -80,6 +211,7 @@ pub fn run_open_loop(handle: &ServerHandle, queries: &VectorSet, cfg: &LoadConfi
         offered: cfg.total,
         completed,
         rejected,
+        filtered,
         elapsed,
         goodput_qps: completed as f64 / elapsed.as_secs_f64(),
         latency,
@@ -90,20 +222,24 @@ pub fn run_open_loop(handle: &ServerHandle, queries: &VectorSet, cfg: &LoadConfi
 mod tests {
     use super::*;
     use crate::coordinator::{RoutePolicy, Router, Server, ServerConfig};
-    use crate::search::{AnnEngine, Neighbor, SearchStats};
+    use crate::search::{AnnEngine, Neighbor, SearchRequest, SearchStats};
     use std::sync::Arc;
 
-    /// Cheap deterministic engine for load tests.
+    /// Cheap deterministic engine for load tests; knobs apply through
+    /// the fallback `finish` path.
     struct Fast;
     impl AnnEngine for Fast {
         fn name(&self) -> &str {
             "fast"
         }
-        fn search(&self, q: &[f32]) -> Vec<Neighbor> {
-            vec![Neighbor { id: q[0] as u32, dist: 0.0 }; 10]
+        fn search_req(&self, req: &SearchRequest) -> Vec<Neighbor> {
+            let raw = (0..32)
+                .map(|i| Neighbor { id: (req.vector[0] as u32 + i) % 32, dist: i as f32 })
+                .collect();
+            req.finish(raw)
         }
-        fn search_with_stats(&self, q: &[f32]) -> (Vec<Neighbor>, SearchStats) {
-            (self.search(q), SearchStats::default())
+        fn search_req_with_stats(&self, req: &SearchRequest) -> (Vec<Neighbor>, SearchStats) {
+            (self.search_req(req), SearchStats::default())
         }
     }
 
@@ -127,10 +263,11 @@ mod tests {
         let report = run_open_loop(
             &s.handle(),
             &queries(),
-            &LoadConfig { rate_qps: 2_000.0, total: 200, seed: 1, engine: None },
+            &LoadConfig { rate_qps: 2_000.0, total: 200, seed: 1, ..Default::default() },
         );
         assert_eq!(report.completed, 200);
         assert_eq!(report.rejected, 0);
+        assert_eq!(report.filtered, 0, "default mix offers no filtered queries");
         assert!(report.goodput_qps > 500.0, "goodput {}", report.goodput_qps);
         s.shutdown();
     }
@@ -141,7 +278,7 @@ mod tests {
         let mut report = run_open_loop(
             &s.handle(),
             &queries(),
-            &LoadConfig { rate_qps: 1_000.0, total: 100, seed: 2, engine: None },
+            &LoadConfig { rate_qps: 1_000.0, total: 100, seed: 2, ..Default::default() },
         );
         let (p50, p95, p99) = report.latency.summary();
         assert!(p50 > 0.0 && p95 >= p50 && p99 >= p95);
@@ -154,11 +291,60 @@ mod tests {
         let report = run_open_loop(
             &s.handle(),
             &queries(),
-            &LoadConfig { rate_qps: 500.0, total: 100, seed: 3, engine: None },
+            &LoadConfig { rate_qps: 500.0, total: 100, seed: 3, ..Default::default() },
         );
         // 100 arrivals at 500/s ≈ 200 ms expected; allow generous slack.
         let secs = report.elapsed.as_secs_f64();
         assert!((0.1..2.0).contains(&secs), "elapsed {secs}s");
         s.shutdown();
+    }
+
+    #[test]
+    fn serving_mix_offers_filtered_and_varied_topk() {
+        let s = server();
+        let report = run_open_loop(
+            &s.handle(),
+            &queries(),
+            &LoadConfig {
+                rate_qps: 4_000.0,
+                total: 200,
+                seed: 4,
+                mix: RequestMix::serving(),
+                corpus_n: 32,
+                ..Default::default()
+            },
+        );
+        assert_eq!(report.completed, 200);
+        // selectivity mix is {1.0, 1.0, 0.5, 0.1}: about half the load
+        // should carry a filter.
+        assert!(
+            (50..=150).contains(&report.filtered),
+            "filtered count {} far from the configured mix",
+            report.filtered
+        );
+        s.shutdown();
+    }
+
+    #[test]
+    fn prepared_mix_sampling_is_deterministic_and_in_range() {
+        let mix = RequestMix::serving().prepare(100, 9);
+        let sample_all = |seed: u64| -> Vec<(usize, Option<usize>, bool)> {
+            let mut rng = Pcg32::new(seed);
+            (0..50)
+                .map(|_| {
+                    let q = mix.sample(&mut rng, Query::new(vec![0.0]));
+                    (q.topk, q.ef_override.as_ref().map(|p| p.ef_l0), q.filter.is_some())
+                })
+                .collect()
+        };
+        assert_eq!(sample_all(7), sample_all(7), "same seed, same knob stream");
+        for (topk, ef, _) in sample_all(7) {
+            assert!([5, 10, 20].contains(&topk));
+            assert!(ef.is_none() || ef == Some(24));
+        }
+        // All three knobs vary across the stream.
+        let drawn = sample_all(7);
+        assert!(drawn.iter().map(|d| d.0).collect::<std::collections::HashSet<_>>().len() > 1);
+        assert!(drawn.iter().any(|d| d.2) && drawn.iter().any(|d| !d.2));
     }
 }

@@ -5,10 +5,13 @@
 //! deadline-triggered), a [`router`] picks the engine (CPU HNSW, CPU
 //! pHNSW, or the XLA-backed rerank path), and a [`server`] worker pool
 //! drains batches, dispatches each batch *whole* through
-//! [`crate::search::AnnEngine::search_batch`] (grouped by resolved
-//! engine, so the engines' data-parallel overrides see the full batch),
-//! and returns results through per-request channels while [`stats`]
-//! aggregates QPS/latency.
+//! [`crate::search::AnnEngine::search_batch_req`] (grouped by resolved
+//! engine, so the engines' data-parallel overrides see the full batch
+//! and every per-request knob — topk, ef override, id filter — rides
+//! inside the requests), and returns results through per-request
+//! channels while [`stats`] aggregates QPS and queue/exec-split
+//! latency. [`loadgen`] drives it open-loop with a configurable
+//! per-request knob mix.
 //!
 //! Everything is `std::thread` + `mpsc` (tokio is not in the offline
 //! registry — DESIGN.md §5); the architecture mirrors vLLM's router:
@@ -22,26 +25,65 @@ pub mod stats;
 pub mod xla_engine;
 
 pub use batcher::{Batcher, BatcherConfig};
+pub use loadgen::{run_open_loop, LoadConfig, LoadReport, PreparedMix, RequestMix};
 pub use router::{Router, RoutePolicy};
 pub use server::{Server, ServerConfig, ServerHandle};
 pub use stats::ServeStats;
 pub use xla_engine::XlaPhnswEngine;
 
-/// A search request: the query vector plus the number of neighbors wanted.
+/// A client-side search request: an owned query vector plus the
+/// per-request knobs, a thin wrapper over
+/// [`crate::search::SearchRequest`] (which borrows the vector). Filters
+/// and ef overrides ride through `submit → batcher → dispatch_batch`
+/// untouched and are honored natively by the engines.
 #[derive(Debug, Clone)]
 pub struct Query {
     /// Query vector (original high-dim space).
     pub vector: Vec<f32>,
     /// Number of neighbors requested.
     pub topk: usize,
+    /// Per-request beam-width override (quality/latency tier).
+    pub ef_override: Option<crate::search::SearchParams>,
+    /// Result-side id filter (filtered ANN).
+    pub filter: Option<std::sync::Arc<crate::search::IdFilter>>,
     /// Optional engine override (router falls back to its policy).
     pub engine: Option<String>,
 }
 
 impl Query {
-    /// Convenience constructor with the default top-k of 10 (Recall@10).
+    /// Convenience constructor with the default top-k of 10 (Recall@10)
+    /// and no filter or override.
     pub fn new(vector: Vec<f32>) -> Self {
-        Self { vector, topk: 10, engine: None }
+        Self { vector, topk: 10, ef_override: None, filter: None, engine: None }
+    }
+
+    /// Set the per-request result count.
+    pub fn with_topk(mut self, k: usize) -> Self {
+        self.topk = k;
+        self
+    }
+
+    /// Set per-request beam widths.
+    pub fn with_ef(mut self, params: crate::search::SearchParams) -> Self {
+        self.ef_override = Some(params);
+        self
+    }
+
+    /// Attach an id filter.
+    pub fn with_filter(mut self, filter: std::sync::Arc<crate::search::IdFilter>) -> Self {
+        self.filter = Some(filter);
+        self
+    }
+
+    /// The engine-facing view of this query: borrows the vector, clones
+    /// the (Arc-cheap) knobs.
+    pub fn request(&self) -> crate::search::SearchRequest<'_> {
+        crate::search::SearchRequest {
+            vector: &self.vector,
+            topk: Some(self.topk),
+            ef_override: self.ef_override.clone(),
+            filter: self.filter.clone(),
+        }
     }
 }
 
@@ -54,4 +96,8 @@ pub struct QueryResult {
     pub engine: String,
     /// Serve-side latency (queue + execution).
     pub latency: std::time::Duration,
+    /// Time spent queued before its batch started executing.
+    pub queue_wait: std::time::Duration,
+    /// Execution time of the batch that served it.
+    pub exec: std::time::Duration,
 }

@@ -79,11 +79,14 @@ mod tests {
         fn name(&self) -> &str {
             self.0
         }
-        fn search(&self, _q: &[f32]) -> Vec<Neighbor> {
+        fn search_req(&self, _req: &crate::search::SearchRequest) -> Vec<Neighbor> {
             vec![Neighbor { id: 0, dist: 0.0 }]
         }
-        fn search_with_stats(&self, q: &[f32]) -> (Vec<Neighbor>, SearchStats) {
-            (self.search(q), SearchStats::default())
+        fn search_req_with_stats(
+            &self,
+            req: &crate::search::SearchRequest,
+        ) -> (Vec<Neighbor>, SearchStats) {
+            (self.search_req(req), SearchStats::default())
         }
     }
 

@@ -11,7 +11,7 @@ use super::batcher::{Batcher, BatcherConfig, Pending};
 use super::router::Router;
 use super::stats::ServeStats;
 use super::{Query, QueryResult};
-use crate::search::AnnEngine;
+use crate::search::{AnnEngine, SearchRequest};
 use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -150,7 +150,10 @@ fn worker_loop(batcher: Arc<Batcher>, router: Arc<Router>, stats: Arc<ServeStats
 /// Route a drained batch as a whole: resolve each query's engine (so
 /// per-query overrides and round-robin policies behave exactly as under
 /// per-query dispatch), group the queries by engine, run each group
-/// through one `search_batch` call, and deliver per-request results.
+/// through one `search_batch_req` call, and deliver per-request results.
+/// Per-request knobs (`topk`, ef override, filter) ride inside the
+/// [`SearchRequest`]s and are honored by the engines natively — no
+/// post-hoc truncation here.
 fn dispatch_batch(batch: Vec<Pending>, router: &Router, stats: &ServeStats) {
     let mut pending: Vec<Option<Pending>> = batch.into_iter().map(Some).collect();
     let mut groups: BTreeMap<String, (Arc<dyn AnnEngine>, Vec<usize>)> = BTreeMap::new();
@@ -168,18 +171,27 @@ fn dispatch_batch(batch: Vec<Pending>, router: &Router, stats: &ServeStats) {
         }
     }
     for (name, (engine, idxs)) in groups {
-        let queries: Vec<&[f32]> = idxs
+        let reqs: Vec<SearchRequest> = idxs
             .iter()
-            .map(|&i| pending[i].as_ref().unwrap().query.vector.as_slice())
+            .map(|&i| pending[i].as_ref().unwrap().query.request())
             .collect();
-        let results = engine.search_batch(&queries);
-        debug_assert_eq!(results.len(), idxs.len(), "search_batch must be 1:1 with queries");
-        for (&i, mut neighbors) in idxs.iter().zip(results) {
-            let Pending { query, reply, arrived } = pending[i].take().unwrap();
-            neighbors.truncate(query.topk);
+        let exec_start = Instant::now();
+        let results = engine.search_batch_req(&reqs);
+        let exec = exec_start.elapsed();
+        debug_assert_eq!(results.len(), idxs.len(), "search_batch_req must be 1:1 with requests");
+        drop(reqs); // releases the borrows of `pending`
+        for (&i, neighbors) in idxs.iter().zip(results) {
+            let Pending { query: _, reply, arrived } = pending[i].take().unwrap();
+            let queue_wait = exec_start.saturating_duration_since(arrived);
+            stats.record(&name, queue_wait, exec);
             let latency = arrived.elapsed();
-            stats.record(&name, latency);
-            let _ = reply.send(QueryResult { neighbors, engine: name.clone(), latency });
+            let _ = reply.send(QueryResult {
+                neighbors,
+                engine: name.clone(),
+                latency,
+                queue_wait,
+                exec,
+            });
         }
     }
 }
@@ -190,17 +202,21 @@ mod tests {
     use crate::coordinator::router::RoutePolicy;
     use crate::search::{AnnEngine, Neighbor, SearchStats};
 
-    /// Engine stub that returns its input rounded as an id.
+    /// Engine stub that returns its input rounded as an id; knobs apply
+    /// through the fallback `finish` path.
     struct Echo;
     impl AnnEngine for Echo {
         fn name(&self) -> &str {
             "echo"
         }
-        fn search(&self, q: &[f32]) -> Vec<Neighbor> {
-            (0..20).map(|i| Neighbor { id: q[0] as u32 + i, dist: i as f32 }).collect()
+        fn search_req(&self, req: &SearchRequest) -> Vec<Neighbor> {
+            let raw = (0..20)
+                .map(|i| Neighbor { id: req.vector[0] as u32 + i, dist: i as f32 })
+                .collect();
+            req.finish(raw)
         }
-        fn search_with_stats(&self, q: &[f32]) -> (Vec<Neighbor>, SearchStats) {
-            (self.search(q), SearchStats::default())
+        fn search_req_with_stats(&self, req: &SearchRequest) -> (Vec<Neighbor>, SearchStats) {
+            (self.search_req(req), SearchStats::default())
         }
     }
 
@@ -232,6 +248,22 @@ mod tests {
         q.topk = 3;
         let res = h.query_blocking(q).unwrap();
         assert_eq!(res.neighbors.len(), 3);
+        s.shutdown();
+    }
+
+    #[test]
+    fn filters_and_topk_ride_through_dispatch() {
+        let s = server();
+        let h = s.handle();
+        let allow = std::sync::Arc::new(crate::search::IdFilter::from_ids(200, [43u32, 45, 47]));
+        let q = Query::new(vec![42.0]).with_topk(2).with_filter(allow);
+        let res = h.query_blocking(q).unwrap();
+        assert_eq!(
+            res.neighbors.iter().map(|n| n.id).collect::<Vec<_>>(),
+            vec![43, 45],
+            "filter then topk must apply inside the engine, not the server"
+        );
+        assert!(res.queue_wait <= res.latency && res.exec <= res.latency);
         s.shutdown();
     }
 
@@ -270,7 +302,7 @@ mod tests {
     }
 
     /// Engine stub that counts how often the server goes through the
-    /// batch entry point (vs. per-query `search`).
+    /// batch entry point (vs. per-request `search_req`).
     struct BatchProbe {
         batch_calls: std::sync::atomic::AtomicUsize,
     }
@@ -278,15 +310,15 @@ mod tests {
         fn name(&self) -> &str {
             "probe"
         }
-        fn search(&self, q: &[f32]) -> Vec<Neighbor> {
-            vec![Neighbor { id: q[0] as u32, dist: 0.0 }]
+        fn search_req(&self, req: &SearchRequest) -> Vec<Neighbor> {
+            req.finish(vec![Neighbor { id: req.vector[0] as u32, dist: 0.0 }])
         }
-        fn search_with_stats(&self, q: &[f32]) -> (Vec<Neighbor>, SearchStats) {
-            (self.search(q), SearchStats::default())
+        fn search_req_with_stats(&self, req: &SearchRequest) -> (Vec<Neighbor>, SearchStats) {
+            (self.search_req(req), SearchStats::default())
         }
-        fn search_batch(&self, queries: &[&[f32]]) -> Vec<Vec<Neighbor>> {
+        fn search_batch_req(&self, reqs: &[SearchRequest]) -> Vec<Vec<Neighbor>> {
             self.batch_calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-            queries.iter().map(|q| self.search(q)).collect()
+            reqs.iter().map(|r| self.search_req(r)).collect()
         }
     }
 
@@ -327,11 +359,11 @@ mod tests {
             fn name(&self) -> &str {
                 "tagged"
             }
-            fn search(&self, _q: &[f32]) -> Vec<Neighbor> {
+            fn search_req(&self, _req: &SearchRequest) -> Vec<Neighbor> {
                 vec![Neighbor { id: self.0, dist: 0.0 }]
             }
-            fn search_with_stats(&self, q: &[f32]) -> (Vec<Neighbor>, SearchStats) {
-                (self.search(q), SearchStats::default())
+            fn search_req_with_stats(&self, req: &SearchRequest) -> (Vec<Neighbor>, SearchStats) {
+                (self.search_req(req), SearchStats::default())
             }
         }
         let mut r = Router::new(RoutePolicy::Default("a".into()));

@@ -1,5 +1,6 @@
 //! Serve-side statistics: request counters, per-engine tallies, latency
-//! percentiles, and wall-clock QPS.
+//! percentiles (total, split into queue-wait vs execution), and
+//! wall-clock QPS.
 
 use crate::metrics::LatencyStats;
 use std::collections::BTreeMap;
@@ -12,7 +13,12 @@ struct Inner {
     errors: u64,
     rejected: u64,
     by_engine: BTreeMap<String, u64>,
+    /// End-to-end serve latency (queue + execution).
     latency: LatencyStats,
+    /// Time a request sat in the batcher before its batch started.
+    queue_wait: LatencyStats,
+    /// Execution time of the batch that served the request.
+    exec: LatencyStats,
 }
 
 /// Thread-safe serve statistics.
@@ -37,16 +43,22 @@ impl ServeStats {
                 rejected: 0,
                 by_engine: BTreeMap::new(),
                 latency: LatencyStats::new(),
+                queue_wait: LatencyStats::new(),
+                exec: LatencyStats::new(),
             }),
         }
     }
 
-    /// Record a served query.
-    pub fn record(&self, engine: &str, latency: Duration) {
+    /// Record a served query as its two phases: `queue_wait` (arrival →
+    /// batch execution start) and `exec` (the batch's execution time).
+    /// Total latency is their sum.
+    pub fn record(&self, engine: &str, queue_wait: Duration, exec: Duration) {
         let mut g = self.inner.lock().unwrap();
         g.served += 1;
         *g.by_engine.entry(engine.to_string()).or_insert(0) += 1;
-        g.latency.record(latency);
+        g.latency.record(queue_wait + exec);
+        g.queue_wait.record(queue_wait);
+        g.exec.record(exec);
     }
 
     /// Record a failed query.
@@ -90,17 +102,33 @@ impl ServeStats {
         }
     }
 
-    /// (p50, p95, p99) latency in µs.
+    /// (p50, p95, p99) total serve latency in µs.
     pub fn latency_summary(&self) -> (f64, f64, f64) {
         self.inner.lock().unwrap().latency.summary()
     }
 
-    /// Render a one-page report.
+    /// (p50, p95, p99) queue-wait in µs.
+    pub fn queue_summary(&self) -> (f64, f64, f64) {
+        self.inner.lock().unwrap().queue_wait.summary()
+    }
+
+    /// (p50, p95, p99) execution time in µs.
+    pub fn exec_summary(&self) -> (f64, f64, f64) {
+        self.inner.lock().unwrap().exec.summary()
+    }
+
+    /// Render a one-page report: total latency plus the queue/exec
+    /// split, so a saturated batcher (queue-dominated) reads differently
+    /// from a slow engine (exec-dominated).
     pub fn render(&self) -> String {
         let (p50, p95, p99) = self.latency_summary();
+        let (q50, q95, q99) = self.queue_summary();
+        let (x50, x95, x99) = self.exec_summary();
         let g = self.inner.lock().unwrap();
         let mut s = format!(
-            "served={} errors={} rejected={} p50={p50:.1}µs p95={p95:.1}µs p99={p99:.1}µs\n",
+            "served={} errors={} rejected={} p50={p50:.1}µs p95={p95:.1}µs p99={p99:.1}µs\n\
+             \x20 queue: p50={q50:.1}µs p95={q95:.1}µs p99={q99:.1}µs\n\
+             \x20 exec:  p50={x50:.1}µs p95={x95:.1}µs p99={x99:.1}µs\n",
             g.served, g.errors, g.rejected
         );
         for (name, n) in &g.by_engine {
@@ -117,9 +145,9 @@ mod tests {
     #[test]
     fn records_and_reports() {
         let s = ServeStats::new();
-        s.record("phnsw", Duration::from_micros(100));
-        s.record("phnsw", Duration::from_micros(300));
-        s.record("hnsw", Duration::from_micros(200));
+        s.record("phnsw", Duration::from_micros(40), Duration::from_micros(60));
+        s.record("phnsw", Duration::from_micros(100), Duration::from_micros(200));
+        s.record("hnsw", Duration::from_micros(50), Duration::from_micros(150));
         s.record_error();
         s.record_rejected();
         assert_eq!(s.served(), 3);
@@ -131,13 +159,27 @@ mod tests {
         assert!(p99 >= p50);
         let r = s.render();
         assert!(r.contains("served=3"));
+        assert!(r.contains("queue:"));
+        assert!(r.contains("exec:"));
         assert!(r.contains("engine phnsw: 2"));
+    }
+
+    #[test]
+    fn queue_and_exec_split_sums_to_total() {
+        let s = ServeStats::new();
+        s.record("e", Duration::from_micros(30), Duration::from_micros(70));
+        let (p50, _, _) = s.latency_summary();
+        let (q50, _, _) = s.queue_summary();
+        let (x50, _, _) = s.exec_summary();
+        assert!((q50 - 30.0).abs() < 1.0, "queue p50 {q50}");
+        assert!((x50 - 70.0).abs() < 1.0, "exec p50 {x50}");
+        assert!((p50 - 100.0).abs() < 1.0, "total p50 {p50}");
     }
 
     #[test]
     fn qps_positive_after_serving() {
         let s = ServeStats::new();
-        s.record("e", Duration::from_micros(10));
+        s.record("e", Duration::from_micros(5), Duration::from_micros(5));
         std::thread::sleep(Duration::from_millis(2));
         assert!(s.qps() > 0.0);
     }
@@ -150,7 +192,7 @@ mod tests {
             let s = s.clone();
             handles.push(std::thread::spawn(move || {
                 for _ in 0..250 {
-                    s.record("e", Duration::from_micros(50));
+                    s.record("e", Duration::from_micros(20), Duration::from_micros(30));
                 }
             }));
         }

@@ -11,7 +11,7 @@
 
 use crate::dataset::VectorSet;
 use crate::runtime::XlaRerankEngine;
-use crate::search::{AnnEngine, Neighbor, PhnswSearcher, SearchStats};
+use crate::search::{AnnEngine, Neighbor, PhnswSearcher, SearchRequest, SearchStats};
 use std::sync::Arc;
 
 /// pHNSW searcher whose final distances come from the XLA artifact.
@@ -63,8 +63,14 @@ impl XlaPhnswEngine {
     }
 
     /// Rerank one native result through the artifact, falling back to the
-    /// native ordering on any XLA-side failure.
+    /// native ordering on any XLA-side failure — or when the request
+    /// produced more candidates than the fixed rerank tile holds (a wide
+    /// per-request `topk`/ef override), where truncating to the tile
+    /// would silently drop results the client asked for.
     fn rerank_or_native(&self, query: &[f32], native: Vec<Neighbor>) -> Vec<Neighbor> {
+        if native.len() > self.k {
+            return native;
+        }
         let ids: Vec<u32> = native.iter().map(|n| n.id).collect();
         match self.xla_rerank(query, &ids) {
             Ok(reranked) if !reranked.is_empty() => reranked,
@@ -78,27 +84,31 @@ impl AnnEngine for XlaPhnswEngine {
         "phnsw-xla"
     }
 
-    fn search(&self, query: &[f32]) -> Vec<Neighbor> {
-        let native = self.searcher.search(query);
-        self.rerank_or_native(query, native)
+    /// Requests forward to the native searcher untouched (which honors
+    /// `topk`, ef overrides, and the id filter inside the beam); the XLA
+    /// rerank then re-scores exactly the ids the request admitted, so
+    /// filtered results stay filtered and `topk` stays honored.
+    fn search_req(&self, req: &SearchRequest) -> Vec<Neighbor> {
+        let native = self.searcher.search_req(req);
+        self.rerank_or_native(req.vector, native)
     }
 
-    fn search_with_stats(&self, query: &[f32]) -> (Vec<Neighbor>, SearchStats) {
-        let (native, stats) = self.searcher.search_with_stats(query);
-        let res = self.rerank_or_native(query, native);
+    fn search_req_with_stats(&self, req: &SearchRequest) -> (Vec<Neighbor>, SearchStats) {
+        let (native, stats) = self.searcher.search_req_with_stats(req);
+        let res = self.rerank_or_native(req.vector, native);
         (res, stats)
     }
 
-    fn search_batch(&self, queries: &[&[f32]]) -> Vec<Vec<Neighbor>> {
+    fn search_batch_req(&self, reqs: &[SearchRequest]) -> Vec<Vec<Neighbor>> {
         // Traversal + PCA filtering fan out across the searcher's
         // data-parallel batch path; the rerank stays sequential because
         // the PJRT executable is owned by a single worker thread and
         // serializes jobs anyway.
-        let native = self.searcher.search_batch(queries);
+        let native = self.searcher.search_batch_req(reqs);
         native
             .into_iter()
-            .zip(queries)
-            .map(|(nat, &q)| self.rerank_or_native(q, nat))
+            .zip(reqs)
+            .map(|(nat, req)| self.rerank_or_native(req.vector, nat))
             .collect()
     }
 }

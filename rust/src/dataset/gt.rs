@@ -108,6 +108,55 @@ fn exact_topk(base: &VectorSet, q: &[f32], k: usize) -> Vec<u32> {
     top.into_sorted().into_iter().map(|(_, id)| id).collect()
 }
 
+/// Exact top-`k` over an explicit id stream with indirect row access —
+/// the one filtered ground-truth kernel, shared by the in-memory
+/// [`exact_topk_filtered`] and callers that read rows out of an index
+/// artifact (e.g. the serve CLI's `--mix` recall gate), so tie-breaking
+/// and distance handling cannot diverge between them. May return fewer
+/// than `k` ids when the stream is shorter than `k`.
+pub fn exact_topk_rows<'a>(
+    ids: impl IntoIterator<Item = u32>,
+    row: impl Fn(u32) -> &'a [f32],
+    q: &[f32],
+    k: usize,
+) -> Vec<u32> {
+    let mut top = TopK::new(k);
+    for id in ids {
+        top.offer(l2_sq(q, row(id)), id);
+    }
+    top.into_sorted().into_iter().map(|(_, id)| id).collect()
+}
+
+/// Exact top-`k` ids for one query restricted to the ids `allow` admits
+/// — the ground truth filtered ANN recall is measured against. May
+/// return fewer than `k` ids when the allowed subset is smaller than `k`.
+pub fn exact_topk_filtered(
+    base: &VectorSet,
+    q: &[f32],
+    k: usize,
+    mut allow: impl FnMut(u32) -> bool,
+) -> Vec<u32> {
+    exact_topk_rows(
+        (0..base.len() as u32).filter(move |&id| allow(id)),
+        |id| base.row(id as usize),
+        q,
+        k,
+    )
+}
+
+/// Exact top-`k` neighbor ids for every query, restricted to the ids
+/// `allow` admits (brute force, single-threaded — filtered test corpora
+/// are small).
+pub fn ground_truth_filtered(
+    base: &VectorSet,
+    queries: &VectorSet,
+    k: usize,
+    allow: impl Fn(u32) -> bool,
+) -> Vec<Vec<u32>> {
+    assert_eq!(base.dim(), queries.dim(), "base/query dimensionality mismatch");
+    queries.iter().map(|q| exact_topk_filtered(base, q, k, &allow)).collect()
+}
+
 /// Exact top-`k` neighbor ids for every query, single-threaded — the
 /// reference path the parallel driver is pinned against.
 pub fn ground_truth_serial(base: &VectorSet, queries: &VectorSet, k: usize) -> Vec<Vec<u32>> {

@@ -11,7 +11,10 @@ pub mod gt;
 pub mod io;
 pub mod synthetic;
 
-pub use gt::{ground_truth, ground_truth_serial};
+pub use gt::{
+    exact_topk_filtered, exact_topk_rows, ground_truth, ground_truth_filtered,
+    ground_truth_serial,
+};
 pub use synthetic::{SyntheticConfig, generate};
 
 /// A dense, row-major matrix of `n` vectors × `dim` f32 components.

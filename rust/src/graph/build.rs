@@ -8,7 +8,7 @@
 use super::HnswGraph;
 use crate::dataset::VectorSet;
 use crate::rng::Pcg32;
-use crate::search::beam::{beam_search_layer, HighDimScorer};
+use crate::search::beam::{beam_search_layer, BeamSpec, HighDimScorer};
 use crate::search::dist::l2_sq;
 use crate::search::visited::VisitedSet;
 
@@ -53,7 +53,7 @@ fn search_layer(
     visited: &mut VisitedSet,
 ) -> Vec<(f32, u32)> {
     let mut scorer = HighDimScorer::new(q, data);
-    beam_search_layer(graph, &mut scorer, entry, ef, level, visited, None)
+    beam_search_layer(graph, &mut scorer, entry, BeamSpec::unfiltered(ef), level, visited, None)
 }
 
 /// Heuristic neighbor selection (Algorithm 4 of [2]): prefer candidates

@@ -333,6 +333,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
             default: None,
             is_flag: false,
         });
+        o.push(OptSpec {
+            name: "mix",
+            help: "sample per-request topk / ef override / id filter (serving mix)",
+            default: None,
+            is_flag: true,
+        });
+        o.push(OptSpec {
+            name: "min-filtered-recall",
+            help: "with --mix: fail unless filtered recall reaches this floor",
+            default: None,
+            is_flag: false,
+        });
         println!("{}", usage("phnsw serve", "query server demo: batcher + router + workers", &o));
         return Ok(());
     }
@@ -340,6 +352,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
         workers: args.get_parsed_or("workers", 4usize)?,
         ..Default::default()
     };
+    let mix_on = args.flag("mix") || args.flag("min-filtered-recall");
+    // With --mix we need row access to the indexed corpus to grade
+    // filtered requests against exact ground truth restricted to each
+    // request's filter — without duplicating the vectors: the bundle's
+    // own rerank table (or the workbench's base set) is read in place.
+    enum MixCorpus {
+        Mem(Arc<phnsw::dataset::VectorSet>),
+        Bundle(phnsw::runtime::AnyBundle),
+    }
+    impl MixCorpus {
+        fn len(&self) -> usize {
+            match self {
+                MixCorpus::Mem(v) => v.len(),
+                MixCorpus::Bundle(b) => b.len(),
+            }
+        }
+        fn row(&self, g: usize) -> &[f32] {
+            match self {
+                MixCorpus::Mem(v) => v.row(g),
+                MixCorpus::Bundle(b) => b.high_row(g),
+            }
+        }
+    }
+    let mut corpus: Option<MixCorpus> = None;
     let (server, queries) = if let Some(bundle_path) = args.get("bundle") {
         // Single-artifact boot: the engine comes out of the .phnsw file —
         // a monolithic searcher or a segmented fan-out engine, whichever
@@ -366,6 +402,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             any.low_codec_label()
         );
         let engine = any.engine(phnsw_params(args)?);
+        if mix_on {
+            corpus = Some(MixCorpus::Bundle(any));
+        }
         (Server::start_with_engine(cfg, "phnsw", engine), queries)
     } else {
         let w = workbench_from(args)?;
@@ -386,25 +425,61 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 Arc::new(phnsw::coordinator::XlaPhnswEngine::new(searcher, xla, w.base.clone(), 16)),
             );
         }
+        if mix_on {
+            corpus = Some(MixCorpus::Mem(w.base.clone()));
+        }
         (Server::start(cfg, Arc::new(router)), w.queries.clone())
     };
     let handle = server.handle();
     let clients: usize = args.get_parsed_or("clients", 4usize)?;
     let total: usize = args.get_parsed_or("requests", 2_000usize)?;
     let per_client = total / clients.max(1);
+    let seed = seed_from(args);
+    // With --mix each client samples per-request topk / ef override /
+    // filter from the serving mix; one shared filter per configured
+    // selectivity, built once over the corpus. Overrides perturb the
+    // engine's configured beam widths (--ef), not the global defaults.
+    let prepared = if mix_on {
+        let mut mix = phnsw::coordinator::RequestMix::serving();
+        mix.base_ef = phnsw_params(args)?.search;
+        Some(mix.prepare(corpus.as_ref().map_or(0, |c| c.len()), seed ^ 0x4D49_5846))
+    } else {
+        None
+    };
 
+    // Filtered requests keep (query index, filter, topk, served ids) so
+    // filtered recall can be graded after the run.
+    type FilteredEval = (usize, Arc<phnsw::search::IdFilter>, usize, Vec<u32>);
+    let mut filtered_evals: Vec<FilteredEval> = Vec::new();
     let t0 = std::time::Instant::now();
     std::thread::scope(|s| {
+        let mut joins = Vec::new();
         for c in 0..clients {
             let h = handle.clone();
             let queries = &queries;
-            s.spawn(move || {
+            let prepared = prepared.as_ref();
+            joins.push(s.spawn(move || {
+                let mut rng = phnsw::rng::Pcg32::new(
+                    seed.wrapping_add((c as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+                );
+                let mut local: Vec<FilteredEval> = Vec::new();
                 for i in 0..per_client {
                     let qi = (c * per_client + i) % queries.len();
-                    let q = Query::new(queries.row(qi).to_vec());
-                    let _ = h.query_blocking(q);
+                    let mut q = Query::new(queries.row(qi).to_vec());
+                    if let Some(p) = prepared {
+                        q = p.sample(&mut rng, q);
+                    }
+                    let (topk, filter) = (q.topk, q.filter.clone());
+                    let Ok(res) = h.query_blocking(q) else { continue };
+                    if let Some(f) = filter {
+                        local.push((qi, f, topk, res.neighbors.iter().map(|n| n.id).collect()));
+                    }
                 }
-            });
+                local
+            }));
+        }
+        for j in joins {
+            filtered_evals.extend(j.join().expect("client thread"));
         }
     });
     let elapsed = t0.elapsed();
@@ -416,6 +491,48 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     println!("{}", server.stats().render());
     server.shutdown();
+
+    if mix_on {
+        let corpus = corpus.expect("mix mode keeps corpus row access");
+        let mut hits = 0usize;
+        let mut wanted = 0usize;
+        for (qi, filter, topk, got) in &filtered_evals {
+            anyhow::ensure!(
+                got.iter().all(|&id| filter.allows(id)),
+                "filtered query {qi} returned a disallowed id"
+            );
+            // Exact filtered top-k straight off the corpus rows (only
+            // the allowed ids are ever touched), via the shared kernel.
+            let k = (*topk).min(10);
+            let gt = phnsw::dataset::exact_topk_rows(
+                filter.iter_allowed(),
+                |id| corpus.row(id as usize),
+                queries.row(*qi),
+                k,
+            );
+            let gtset: std::collections::HashSet<u32> = gt.iter().copied().collect();
+            wanted += gt.len();
+            hits += got.iter().take(k).filter(|&&id| gtset.contains(&id)).count();
+        }
+        let recall = if wanted == 0 { 1.0 } else { hits as f64 / wanted as f64 };
+        println!(
+            "{{\"bench\":\"serve_mix\",\"requests\":{},\"filtered\":{},\"filtered_recall\":{recall:.3}}}",
+            per_client * clients,
+            filtered_evals.len()
+        );
+        if let Some(raw) = args.get("min-filtered-recall") {
+            let floor: f64 =
+                raw.parse().map_err(|e| anyhow::anyhow!("invalid --min-filtered-recall: {e}"))?;
+            anyhow::ensure!(
+                !filtered_evals.is_empty(),
+                "no filtered requests were served; cannot gate on filtered recall"
+            );
+            anyhow::ensure!(
+                recall >= floor,
+                "filtered recall {recall:.3} below required floor {floor}"
+            );
+        }
+    }
     Ok(())
 }
 

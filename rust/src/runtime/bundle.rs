@@ -338,6 +338,21 @@ impl AnyBundle {
         }
     }
 
+    /// Row `global` of the high-dim corpus the bundle indexes (the f32
+    /// rerank table). For a segmented bundle the global id is remapped
+    /// through the shard directory. Lets callers compute exact ground
+    /// truth against a bundle — e.g. the serve CLI's filtered-recall
+    /// gate — without re-generating the corpus.
+    pub fn high_row(&self, global: usize) -> &[f32] {
+        match self {
+            AnyBundle::Single(b) => b.high.row(global),
+            AnyBundle::Segmented(s) => {
+                let (shard, local) = s.map.shard_of(global as u32);
+                s.segments[shard].high.row(local as usize)
+            }
+        }
+    }
+
     /// Ready-to-serve engine over the opened components: a plain
     /// [`PhnswSearcher`] for a monolithic bundle, a fan-out/merge
     /// [`crate::segment::SegmentedEngine`] for a sharded one.

@@ -14,6 +14,7 @@
 //! engine-specific scoring. The graph builder reuses the same core with
 //! the plain scorer and no trace, so the loop exists exactly once.
 
+use super::request::IdFilter;
 use super::stats::{HopEvent, SearchTrace};
 use super::visited::VisitedSet;
 use crate::dataset::gt::TopK;
@@ -59,39 +60,68 @@ pub(crate) struct HopCounters {
 }
 
 /// The C (candidate heap) + F (result list) pair of the beam loop, with
-/// the per-hop insert/removal counters the trace records.
-pub(crate) struct BeamState {
+/// the per-hop insert/removal counters the trace records and the
+/// request's optional result-side id predicate.
+pub(crate) struct BeamState<'f> {
     candidates: BinaryHeap<MinDist>,
     found: TopK,
     ef: usize,
+    /// Result-side predicate: disallowed nodes still traverse (enter C)
+    /// but never enter F — the standard filtered-HNSW semantics.
+    filter: Option<&'f IdFilter>,
     inserts: u32,
     removals: u32,
 }
 
-impl BeamState {
-    fn new(ef: usize) -> Self {
+impl<'f> BeamState<'f> {
+    fn new(ef: usize, filter: Option<&'f IdFilter>) -> Self {
         Self {
             candidates: BinaryHeap::new(),
             found: TopK::new(ef),
             ef,
+            filter,
             inserts: 0,
             removals: 0,
         }
     }
 
+    /// Whether `id` may enter the result list F. With no filter every id
+    /// may — that path is bitwise identical to the pre-filter beam.
+    #[inline]
+    fn allowed(&self, id: u32) -> bool {
+        self.filter.is_none_or(|f| f.allows(id))
+    }
+
+    /// Seed an entry point: it always joins C (entry points route the
+    /// walk) and joins F only if the filter allows it.
+    #[inline]
+    fn seed(&mut self, dist: f32, id: u32) {
+        self.candidates.push(MinDist(dist, id));
+        if self.allowed(id) {
+            self.found.offer(dist, id);
+        }
+    }
+
     /// The admission rule shared by every engine (lines 18–23 of
     /// Algorithm 1, and the inner update of Algorithm 2): a scored
-    /// neighbor enters C and F iff it improves the current worst of F or
-    /// F is not yet full. Returns whether the neighbor was admitted.
+    /// neighbor enters C iff it improves the current worst of F or F is
+    /// not yet full; it also enters F unless the request's filter
+    /// excludes it (a filtered-out node keeps routing the traversal but
+    /// never surfaces as a result). Returns whether the neighbor was
+    /// admitted into C. The insert/removal counters track *F* traffic
+    /// only — they feed the hardware model's sort-insert counts, so a
+    /// disallowed node that merely routes must not inflate them.
     #[inline]
     pub fn admit(&mut self, dist: f32, id: u32) -> bool {
         if dist < self.found.threshold() || self.found.len() < self.ef {
             self.candidates.push(MinDist(dist, id));
-            if self.found.len() == self.ef {
-                self.removals += 1; // RMF: worst of F evicted
+            if self.allowed(id) {
+                if self.found.len() == self.ef {
+                    self.removals += 1; // RMF: worst of F evicted
+                }
+                self.found.offer(dist, id);
+                self.inserts += 1;
             }
-            self.found.offer(dist, id);
-            self.inserts += 1;
             true
         } else {
             false
@@ -110,28 +140,46 @@ pub(crate) trait NeighborScorer {
         &mut self,
         nbrs: &[u32],
         visited: &mut VisitedSet,
-        beam: &mut BeamState,
+        beam: &mut BeamState<'_>,
     ) -> HopCounters;
 }
 
+/// Per-layer beam knobs, resolved per request by the searchers: the beam
+/// width and the optional result-side id predicate.
+#[derive(Clone, Copy, Default)]
+pub(crate) struct BeamSpec<'f> {
+    /// Result-list width (ef).
+    pub ef: usize,
+    /// Result-side predicate; `None` searches unfiltered.
+    pub filter: Option<&'f IdFilter>,
+}
+
+impl<'f> BeamSpec<'f> {
+    /// Unfiltered beam of width `ef` (builder + upper search layers).
+    pub fn unfiltered(ef: usize) -> Self {
+        Self { ef, filter: None }
+    }
+}
+
 /// Beam search at one layer. `entry` carries (high-dim dist, id) pairs,
-/// ascending; returns up to `ef` nearest by high-dim distance, ascending.
+/// ascending; returns up to `spec.ef` nearest by high-dim distance,
+/// ascending — admitting only `spec.filter`-allowed ids when a filter is
+/// set (disallowed nodes still traverse).
 pub(crate) fn beam_search_layer<S: NeighborScorer>(
     graph: &HnswGraph,
     scorer: &mut S,
     entry: &[(f32, u32)],
-    ef: usize,
+    spec: BeamSpec<'_>,
     layer: usize,
     visited: &mut VisitedSet,
     mut trace: Option<&mut SearchTrace>,
 ) -> Vec<(f32, u32)> {
     visited.clear();
     scorer.begin_layer();
-    let mut beam = BeamState::new(ef);
+    let mut beam = BeamState::new(spec.ef, spec.filter);
     for &(d, id) in entry {
         visited.insert(id);
-        beam.candidates.push(MinDist(d, id));
-        beam.found.offer(d, id);
+        beam.seed(d, id);
     }
     while let Some(MinDist(d, c)) = beam.candidates.pop() {
         // Stop when the nearest remaining candidate cannot improve F
@@ -180,7 +228,7 @@ impl NeighborScorer for HighDimScorer<'_> {
         &mut self,
         nbrs: &[u32],
         visited: &mut VisitedSet,
-        beam: &mut BeamState,
+        beam: &mut BeamState<'_>,
     ) -> HopCounters {
         let mut highdim = 0u32;
         for &nb in nbrs {
@@ -233,7 +281,7 @@ mod tests {
 
     #[test]
     fn admit_respects_ef_and_counts_evictions() {
-        let mut beam = BeamState::new(2);
+        let mut beam = BeamState::new(2, None);
         assert!(beam.admit(5.0, 0));
         assert!(beam.admit(3.0, 1));
         assert_eq!(beam.inserts, 2);
@@ -245,5 +293,32 @@ mod tests {
         assert_eq!(beam.removals, 1);
         let sorted = beam.found.into_sorted();
         assert_eq!(sorted.iter().map(|p| p.1).collect::<Vec<_>>(), vec![3, 1]);
+    }
+
+    #[test]
+    fn filtered_admit_traverses_but_never_surfaces_disallowed_ids() {
+        // Odd ids only: even ids must still enter C (routing) but not F.
+        let filter = IdFilter::from_fn(10, |id| id % 2 == 1);
+        let mut beam = BeamState::new(2, Some(&filter));
+        assert!(beam.admit(1.0, 0), "disallowed id still joins C");
+        assert!(beam.admit(2.0, 1));
+        assert!(beam.admit(3.0, 3));
+        // F holds only the allowed ids; C saw all three.
+        assert_eq!(beam.candidates.len(), 3);
+        assert_eq!(beam.inserts, 2, "only F entries count toward the insert counter");
+        assert_eq!(beam.removals, 0, "disallowed ids never evict from F");
+        let sorted = beam.found.into_sorted();
+        assert_eq!(sorted.iter().map(|p| p.1).collect::<Vec<_>>(), vec![1, 3]);
+    }
+
+    #[test]
+    fn seed_respects_filter_but_routes() {
+        let filter = IdFilter::from_ids(10, [7u32]);
+        let mut beam = BeamState::new(4, Some(&filter));
+        beam.seed(0.5, 2); // disallowed entry point
+        beam.seed(1.5, 7);
+        assert_eq!(beam.candidates.len(), 2, "both entries route");
+        let sorted = beam.found.into_sorted();
+        assert_eq!(sorted, vec![(1.5, 7)], "only the allowed entry is a result");
     }
 }

@@ -3,9 +3,10 @@
 //! one *high-dimensional* distance computation and one high-dim raw-data
 //! fetch: exactly the traffic pHNSW's low-dim filter removes.
 
-use super::beam::{beam_search_layer, HighDimScorer};
+use super::beam::{beam_search_layer, BeamSpec, HighDimScorer};
 use super::config::SearchParams;
 use super::dist::l2_sq;
+use super::request::SearchRequest;
 use super::stats::{SearchStats, SearchTrace};
 use super::visited::VisitedSet;
 use super::{AnnEngine, Neighbor};
@@ -51,26 +52,54 @@ impl HnswSearcher {
     }
 
     /// Beam search at one layer; `entry` must be sorted ascending.
-    /// Returns up to `ef` nearest, ascending. Delegates to the shared
-    /// beam core with the plain high-dim scorer.
+    /// Returns up to `spec.ef` nearest, ascending. Delegates to the
+    /// shared beam core with the plain high-dim scorer.
     fn search_layer(
         &self,
         q: &[f32],
         entry: &[(f32, u32)],
-        ef: usize,
+        spec: BeamSpec<'_>,
         layer: usize,
         visited: &mut VisitedSet,
         trace: Option<&mut SearchTrace>,
     ) -> Vec<(f32, u32)> {
         let mut scorer = HighDimScorer::new(q, &self.data);
-        beam_search_layer(&self.graph, &mut scorer, entry, ef, layer, visited, trace)
+        beam_search_layer(&self.graph, &mut scorer, entry, spec, layer, visited, trace)
     }
 
-    /// Full multi-layer search, optionally tracing.
-    pub fn search_traced(&self, q: &[f32], mut trace: Option<&mut SearchTrace>) -> Vec<Neighbor> {
+    /// Full multi-layer search for one request, optionally tracing.
+    /// Per-request beam widths resolve via
+    /// [`SearchRequest::effective_search`]; the filter applies at layer 0
+    /// only (upper layers just produce entry points). Default knobs are
+    /// bitwise identical to the pre-request search path.
+    pub fn search_request_traced(
+        &self,
+        req: &SearchRequest<'_>,
+        mut trace: Option<&mut SearchTrace>,
+    ) -> Vec<Neighbor> {
+        let q = req.vector;
         assert_eq!(q.len(), self.data.dim(), "query dimensionality mismatch");
         if self.graph.is_empty() {
             return Vec::new();
+        }
+        let filter = req.filter.as_deref();
+        let mut eff = req.effective_search(&self.params);
+        // Upper clamp (shared rationale with pHNSW): client-supplied
+        // widths must not size allocations beyond the corpus.
+        let n = self.data.len().max(1);
+        eff.ef_upper = eff.ef_upper.min(n);
+        eff.ef_l0 = eff.ef_l0.min(n);
+        // Degenerate filters short-circuit before the walk (shared with
+        // pHNSW — see `search::filtered_shortcut`).
+        if let Some(out) = super::filtered_shortcut(
+            filter,
+            &self.data,
+            q,
+            eff.ef(0),
+            req.topk,
+            trace.as_deref_mut(),
+        ) {
+            return out;
         }
         let mut scratch = self.take_scratch();
         let ep = self.graph.entry_point();
@@ -79,7 +108,7 @@ impl HnswSearcher {
             entry = self.search_layer(
                 q,
                 &entry,
-                self.params.ef(layer),
+                BeamSpec::unfiltered(eff.ef(layer)),
                 layer,
                 &mut scratch.visited,
                 trace.as_deref_mut(),
@@ -88,13 +117,23 @@ impl HnswSearcher {
         let found = self.search_layer(
             q,
             &entry,
-            self.params.ef(0),
+            BeamSpec { ef: eff.ef(0), filter },
             0,
             &mut scratch.visited,
             trace.as_deref_mut(),
         );
         self.put_scratch(scratch);
-        found.into_iter().map(|(dist, id)| Neighbor { id, dist }).collect()
+        let mut out: Vec<Neighbor> =
+            found.into_iter().map(|(dist, id)| Neighbor { id, dist }).collect();
+        if let Some(k) = req.topk {
+            out.truncate(k);
+        }
+        out
+    }
+
+    /// Full multi-layer search with default knobs, optionally tracing.
+    pub fn search_traced(&self, q: &[f32], trace: Option<&mut SearchTrace>) -> Vec<Neighbor> {
+        self.search_request_traced(&SearchRequest::new(q), trace)
     }
 
     /// Search and return the trace (used by the hw simulator).
@@ -110,17 +149,18 @@ impl AnnEngine for HnswSearcher {
         "hnsw"
     }
 
-    fn search(&self, query: &[f32]) -> Vec<Neighbor> {
-        self.search_traced(query, None)
+    fn search_req(&self, req: &SearchRequest) -> Vec<Neighbor> {
+        self.search_request_traced(req, None)
     }
 
-    fn search_with_stats(&self, query: &[f32]) -> (Vec<Neighbor>, SearchStats) {
-        let (r, t) = self.search_full_trace(query);
+    fn search_req_with_stats(&self, req: &SearchRequest) -> (Vec<Neighbor>, SearchStats) {
+        let mut t = SearchTrace::new();
+        let r = self.search_request_traced(req, Some(&mut t));
         (r, t.stats())
     }
 
-    fn search_batch(&self, queries: &[&[f32]]) -> Vec<Vec<Neighbor>> {
-        super::parallel_search_batch(self, queries)
+    fn search_batch_req(&self, reqs: &[SearchRequest]) -> Vec<Vec<Neighbor>> {
+        super::parallel_search_batch_req(self, reqs)
     }
 }
 

@@ -9,6 +9,9 @@
 //!   (and the graph builder) delegate to, parameterized over a
 //!   neighbor-scoring strategy; tracing and C/F bookkeeping live there
 //!   exactly once.
+//! * [`request`] — the request-scoped surface: [`SearchRequest`]
+//!   (per-request top-k, beam-width override, id filter) and
+//!   [`IdFilter`], honored natively by every engine.
 //!
 //! Both engines produce a [`stats::SearchStats`] (and optionally a full
 //! [`stats::SearchTrace`]) so the hardware timing/energy simulator can
@@ -19,12 +22,14 @@ pub mod config;
 pub mod dist;
 pub mod hnsw;
 pub mod phnsw;
+pub mod request;
 pub mod stats;
 pub mod visited;
 
 pub use config::{PhnswParams, SearchParams};
 pub use hnsw::HnswSearcher;
 pub use phnsw::PhnswSearcher;
+pub use request::{IdFilter, SearchRequest, MAX_EF_BOOST};
 pub use stats::{HopEvent, SearchStats, SearchTrace};
 
 /// A search result: base-vector id plus its (squared) distance to the query.
@@ -36,60 +41,201 @@ pub struct Neighbor {
     pub dist: f32,
 }
 
-/// Common engine interface implemented by both searchers — the coordinator
-/// routes requests through this trait.
+/// Common engine interface implemented by every searcher — the
+/// coordinator routes requests through this trait.
+///
+/// The *request* methods are the primary surface: every engine must
+/// serve a [`SearchRequest`] (per-request `topk`, beam-width override,
+/// id filter). The vector-only methods are convenience wrappers that
+/// build a default-knob request, which engines must treat as bitwise
+/// identical to their pre-request-API behavior.
 pub trait AnnEngine: Send + Sync {
     /// Human-readable engine name (used in reports and routing).
     fn name(&self) -> &str;
-    /// Return the `ef` nearest neighbors of `query` (sorted ascending).
-    fn search(&self, query: &[f32]) -> Vec<Neighbor>;
-    /// Like [`Self::search`] but also returns instruction/traffic statistics.
-    fn search_with_stats(&self, query: &[f32]) -> (Vec<Neighbor>, SearchStats);
-    /// Search a whole batch, one result vector per query, in order.
+    /// Serve one request (sorted ascending; only filter-allowed ids; at
+    /// most `topk` results when set).
+    fn search_req(&self, req: &SearchRequest) -> Vec<Neighbor>;
+    /// Like [`Self::search_req`] but also returns instruction/traffic
+    /// statistics.
+    fn search_req_with_stats(&self, req: &SearchRequest) -> (Vec<Neighbor>, SearchStats);
+    /// Serve a whole batch of requests, one result vector per request,
+    /// in order.
     ///
-    /// The default runs the queries sequentially. Engines override it
+    /// The default runs the requests sequentially. Engines override it
     /// with data-parallel execution; every override must return results
-    /// bitwise identical to sequential [`Self::search`] calls — the
+    /// bitwise identical to sequential [`Self::search_req`] calls — the
     /// coordinator's batch dispatch relies on that equivalence.
-    fn search_batch(&self, queries: &[&[f32]]) -> Vec<Vec<Neighbor>> {
-        queries.iter().map(|q| self.search(q)).collect()
+    fn search_batch_req(&self, reqs: &[SearchRequest]) -> Vec<Vec<Neighbor>> {
+        reqs.iter().map(|r| self.search_req(r)).collect()
     }
+    /// Return the `ef` nearest neighbors of `query` (sorted ascending) —
+    /// a default-knob request.
+    fn search(&self, query: &[f32]) -> Vec<Neighbor> {
+        self.search_req(&SearchRequest::new(query))
+    }
+    /// Like [`Self::search`] but also returns instruction/traffic statistics.
+    fn search_with_stats(&self, query: &[f32]) -> (Vec<Neighbor>, SearchStats) {
+        self.search_req_with_stats(&SearchRequest::new(query))
+    }
+    /// Search a whole batch of default-knob queries, in order.
+    fn search_batch(&self, queries: &[&[f32]]) -> Vec<Vec<Neighbor>> {
+        let reqs: Vec<SearchRequest> = queries.iter().map(|&q| SearchRequest::new(q)).collect();
+        self.search_batch_req(&reqs)
+    }
+}
+
+/// Should a filtered request skip the graph walk and score the allowed
+/// subset exactly? Two regimes:
+///
+/// * `n_allowed ≤ ef`: F could never fill, so the beam's stop rule
+///   would never fire and the walk degenerates — brute force is both
+///   cheaper and exact.
+/// * Cost balance: a walk touches roughly `ef / selectivity` =
+///   `ef·n_total / n_allowed` nodes before F fills with allowed ids, vs
+///   `n_allowed` distances for the exact scan — brute-force wins when
+///   `n_allowed² ≤ ef·n_total`. This closes the latency cliff for small
+///   scattered filters just above `ef` (e.g. 300 allowed in a 1M-row
+///   corpus), where the capped ef boost cannot protect the walk.
+pub(crate) fn filter_prefers_brute_force(n_allowed: usize, ef_l0: usize, n_total: usize) -> bool {
+    n_allowed <= ef_l0
+        || (n_allowed as u128).pow(2) <= ef_l0 as u128 * n_total as u128
+}
+
+/// Exact scoring of a filter's allowed subset — the degenerate-filter
+/// fallback shared by both searchers (see
+/// [`filter_prefers_brute_force`] for when it fires): at most
+/// `n_allowed` high-dimensional distances, *exact* results, truncated
+/// to `limit` (the request's `topk`, or the effective layer-0 beam
+/// width when no `topk` is set — the same shape the beam path
+/// returns, so the fallback never widens a result). One synthetic
+/// layer-0 hop records the rerank work so per-request accounting stays
+/// honest.
+pub(crate) fn brute_force_allowed(
+    q: &[f32],
+    filter: &IdFilter,
+    data: &crate::dataset::VectorSet,
+    limit: usize,
+    trace: Option<&mut SearchTrace>,
+) -> Vec<Neighbor> {
+    let mut out: Vec<Neighbor> = filter
+        .iter_allowed()
+        .map(|id| Neighbor { id, dist: dist::l2_sq(q, data.row(id as usize)) })
+        .collect();
+    out.sort_by(|a, b| a.dist.total_cmp(&b.dist).then_with(|| a.id.cmp(&b.id)));
+    out.truncate(limit);
+    if let Some(t) = trace {
+        t.push(HopEvent {
+            layer: 0,
+            node: out.first().map_or(0, |n| n.id),
+            n_neighbors: 0,
+            n_lowdim_dists: 0,
+            n_ksort: 0,
+            n_highdim_dists: filter.n_allowed() as u32,
+            n_visited_checks: filter.n_allowed() as u32,
+            n_f_inserts: out.len() as u32,
+            n_f_removals: 0,
+        });
+    }
+    out
+}
+
+/// The shared degenerate-filter preamble both searchers run before a
+/// graph walk. Returns `Some(result)` when the request short-circuits:
+/// a filter sized for a different corpus degrades to empty (debug
+/// builds assert), an empty filter returns empty, and a small allowed
+/// subset is scored exactly via [`brute_force_allowed`]. Returns `None`
+/// when the beam search should proceed.
+pub(crate) fn filtered_shortcut(
+    filter: Option<&IdFilter>,
+    data: &crate::dataset::VectorSet,
+    q: &[f32],
+    ef_l0: usize,
+    topk: Option<usize>,
+    trace: Option<&mut SearchTrace>,
+) -> Option<Vec<Neighbor>> {
+    let f = filter?;
+    if f.n_total() != data.len() {
+        debug_assert_eq!(f.n_total(), data.len(), "filter/corpus size mismatch");
+        return Some(Vec::new());
+    }
+    if f.n_allowed() == 0 {
+        return Some(Vec::new());
+    }
+    if filter_prefers_brute_force(f.n_allowed(), ef_l0, data.len()) {
+        return Some(brute_force_allowed(q, f, data, topk.unwrap_or(ef_l0), trace));
+    }
+    None
 }
 
 /// Scratch-pooled data-parallel batch execution shared by the engine
 /// overrides: shard the batch over `std::thread::scope` workers (the
 /// offline registry has no tokio/rayon — DESIGN.md §5) and let each
-/// worker run plain `search`, which draws per-query scratch from the
-/// engine's pool. Search is deterministic per query, so sharding cannot
-/// change results.
-pub(crate) fn parallel_search_batch<E>(engine: &E, queries: &[&[f32]]) -> Vec<Vec<Neighbor>>
+/// worker run plain `search_req`, which draws per-query scratch from the
+/// engine's pool. Search is deterministic per request, so sharding
+/// cannot change results.
+pub(crate) fn parallel_search_batch_req<E>(
+    engine: &E,
+    reqs: &[SearchRequest],
+) -> Vec<Vec<Neighbor>>
+where
+    E: AnnEngine + ?Sized,
+{
+    parallel_search_batch_req_capped(engine, reqs, usize::MAX)
+}
+
+/// [`parallel_search_batch_req`] with an explicit worker-count ceiling:
+/// the segmented engine fans several of these pools concurrently (one
+/// per shard) and splits the core budget across them.
+pub(crate) fn parallel_search_batch_req_capped<E>(
+    engine: &E,
+    reqs: &[SearchRequest],
+    max_workers: usize,
+) -> Vec<Vec<Neighbor>>
 where
     E: AnnEngine + ?Sized,
 {
     // Scoped threads are spawned per batch, so tiny batches are cheaper
     // run inline, and large ones get at most one worker per
-    // MIN_QUERIES_PER_WORKER queries — several server workers may be
+    // MIN_QUERIES_PER_WORKER requests — several server workers may be
     // dispatching concurrently, and unbounded fan-out would oversubscribe
     // the cores they share.
     const MIN_QUERIES_PER_WORKER: usize = 4;
-    if queries.len() < 2 * MIN_QUERIES_PER_WORKER {
-        return queries.iter().map(|q| engine.search(q)).collect();
+    if max_workers <= 1 || reqs.len() < 2 * MIN_QUERIES_PER_WORKER {
+        return reqs.iter().map(|r| engine.search_req(r)).collect();
     }
     let workers = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(4)
-        .min(queries.len() / MIN_QUERIES_PER_WORKER);
-    let chunk = queries.len().div_ceil(workers);
+        .min(max_workers)
+        .min(reqs.len() / MIN_QUERIES_PER_WORKER);
+    let chunk = reqs.len().div_ceil(workers);
     let mut out: Vec<Vec<Neighbor>> = Vec::new();
-    out.resize_with(queries.len(), Vec::new);
+    out.resize_with(reqs.len(), Vec::new);
     std::thread::scope(|s| {
-        for (qs, slots) in queries.chunks(chunk).zip(out.chunks_mut(chunk)) {
+        for (rs, slots) in reqs.chunks(chunk).zip(out.chunks_mut(chunk)) {
             s.spawn(move || {
-                for (q, slot) in qs.iter().zip(slots.iter_mut()) {
-                    *slot = engine.search(q);
+                for (r, slot) in rs.iter().zip(slots.iter_mut()) {
+                    *slot = engine.search_req(r);
                 }
             });
         }
     });
     out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn brute_force_heuristic_regimes() {
+        // Subset smaller than the beam: F could never fill.
+        assert!(filter_prefers_brute_force(50, 160, 1_000_000));
+        // Small scattered subset above ef: walk would visit ~ef/selectivity
+        // nodes, far more than the 300-distance scan.
+        assert!(filter_prefers_brute_force(300, 160, 1_000_000));
+        // Large subsets walk the graph.
+        assert!(!filter_prefers_brute_force(50_000, 160, 1_000_000));
+        assert!(!filter_prefers_brute_force(1_500, 20, 3_000));
+    }
 }

@@ -29,9 +29,10 @@
 //!   faithful behaviour and is what the hardware's dataflow (§IV-C step 5)
 //!   implements.
 
-use super::beam::{beam_search_layer, BeamState, HopCounters, NeighborScorer};
+use super::beam::{beam_search_layer, BeamSpec, BeamState, HopCounters, NeighborScorer};
 use super::config::PhnswParams;
 use super::dist::l2_sq;
+use super::request::SearchRequest;
 use super::stats::{SearchStats, SearchTrace};
 use super::visited::VisitedSet;
 use super::{AnnEngine, Neighbor};
@@ -97,7 +98,7 @@ impl NeighborScorer for PcaFilterScorer<'_> {
         &mut self,
         nbrs: &[u32],
         visited: &mut VisitedSet,
-        beam: &mut BeamState,
+        beam: &mut BeamState<'_>,
     ) -> HopCounters {
         // Step 2 (lines 9–13): low-dim filter over all neighbors — one
         // gather + one batched kernel pass for the whole adjacency list.
@@ -237,11 +238,46 @@ impl PhnswSearcher {
         self.pool.lock().unwrap().push(s);
     }
 
-    /// Full multi-layer pHNSW search, optionally tracing.
-    pub fn search_traced(&self, q: &[f32], mut trace: Option<&mut SearchTrace>) -> Vec<Neighbor> {
+    /// Full multi-layer pHNSW search for one request, optionally tracing.
+    ///
+    /// Per-request knobs resolve here: beam widths come from
+    /// [`SearchRequest::effective_search`] over the engine's configured
+    /// params (so `topk` floors the layer-0 beam and a filter's
+    /// selectivity boosts it), and the filter rides into the layer-0 beam
+    /// as a result-side predicate. Upper layers search unfiltered — they
+    /// only produce entry points, and starving the descent at `ef_upper`
+    /// = 1 would strand the walk. A default-knob request is bitwise
+    /// identical to the pre-request search path.
+    pub fn search_request_traced(
+        &self,
+        req: &SearchRequest<'_>,
+        mut trace: Option<&mut SearchTrace>,
+    ) -> Vec<Neighbor> {
+        let q = req.vector;
         assert_eq!(q.len(), self.data_high.dim(), "query dimensionality mismatch");
         if self.graph.is_empty() {
             return Vec::new();
+        }
+        let filter = req.filter.as_deref();
+        let mut eff = req.effective_search(&self.params.search);
+        // Upper clamp: beam widths beyond the corpus size cannot improve
+        // results but would size the result heap from a client-supplied
+        // number — a hostile topk/ef override must not drive allocation.
+        let n = self.data_high.len().max(1);
+        eff.ef_upper = eff.ef_upper.min(n);
+        eff.ef_l0 = eff.ef_l0.min(n);
+        // Degenerate filters short-circuit before the walk: mismatched
+        // or empty filters degrade to empty results, small allowed
+        // subsets are scored exactly (see `search::filtered_shortcut`).
+        if let Some(out) = super::filtered_shortcut(
+            filter,
+            &self.data_high,
+            q,
+            eff.ef(0),
+            req.topk,
+            trace.as_deref_mut(),
+        ) {
+            return out;
         }
         let mut scratch = self.take_scratch();
         // Step 1 (Fig. 1(c)): project the query once, then transform it
@@ -270,7 +306,7 @@ impl PhnswSearcher {
                 &self.graph,
                 &mut scorer,
                 &entry,
-                self.params.search.ef(layer),
+                BeamSpec::unfiltered(eff.ef(layer)),
                 layer,
                 &mut scratch.visited,
                 trace.as_deref_mut(),
@@ -281,7 +317,7 @@ impl PhnswSearcher {
             &self.graph,
             &mut scorer,
             &entry,
-            self.params.search.ef(0),
+            BeamSpec { ef: eff.ef(0), filter },
             0,
             &mut scratch.visited,
             trace.as_deref_mut(),
@@ -290,14 +326,44 @@ impl PhnswSearcher {
         scratch.store = store_scratch;
         scratch.dists = dists;
         self.put_scratch(scratch);
-        found.into_iter().map(|(dist, id)| Neighbor { id, dist }).collect()
+        let mut out: Vec<Neighbor> =
+            found.into_iter().map(|(dist, id)| Neighbor { id, dist }).collect();
+        if let Some(k) = req.topk {
+            out.truncate(k);
+        }
+        out
     }
 
-    /// Search and return the trace (consumed by the hw simulator).
-    pub fn search_full_trace(&self, q: &[f32]) -> (Vec<Neighbor>, SearchTrace) {
+    /// Full multi-layer pHNSW search with default knobs, optionally
+    /// tracing.
+    pub fn search_traced(&self, q: &[f32], trace: Option<&mut SearchTrace>) -> Vec<Neighbor> {
+        self.search_request_traced(&SearchRequest::new(q), trace)
+    }
+
+    /// Search one request and return the trace (consumed by the hw
+    /// simulator).
+    pub fn search_request_full_trace(&self, req: &SearchRequest<'_>) -> (Vec<Neighbor>, SearchTrace) {
         let mut t = SearchTrace::new();
-        let r = self.search_traced(q, Some(&mut t));
+        let r = self.search_request_traced(req, Some(&mut t));
         (r, t)
+    }
+
+    /// Search and return the trace (default knobs).
+    pub fn search_full_trace(&self, q: &[f32]) -> (Vec<Neighbor>, SearchTrace) {
+        self.search_request_full_trace(&SearchRequest::new(q))
+    }
+
+    /// Data-parallel batch with an explicit worker ceiling — used by the
+    /// segmented engine to split the core budget across concurrently
+    /// fanning shards. Results are bitwise identical to
+    /// [`AnnEngine::search_batch_req`] (chunking never affects per-query
+    /// determinism).
+    pub(crate) fn search_batch_req_capped(
+        &self,
+        reqs: &[SearchRequest],
+        max_workers: usize,
+    ) -> Vec<Vec<Neighbor>> {
+        super::parallel_search_batch_req_capped(self, reqs, max_workers)
     }
 }
 
@@ -306,17 +372,17 @@ impl AnnEngine for PhnswSearcher {
         "phnsw"
     }
 
-    fn search(&self, query: &[f32]) -> Vec<Neighbor> {
-        self.search_traced(query, None)
+    fn search_req(&self, req: &SearchRequest) -> Vec<Neighbor> {
+        self.search_request_traced(req, None)
     }
 
-    fn search_with_stats(&self, query: &[f32]) -> (Vec<Neighbor>, SearchStats) {
-        let (r, t) = self.search_full_trace(query);
+    fn search_req_with_stats(&self, req: &SearchRequest) -> (Vec<Neighbor>, SearchStats) {
+        let (r, t) = self.search_request_full_trace(req);
         (r, t.stats())
     }
 
-    fn search_batch(&self, queries: &[&[f32]]) -> Vec<Vec<Neighbor>> {
-        super::parallel_search_batch(self, queries)
+    fn search_batch_req(&self, reqs: &[SearchRequest]) -> Vec<Vec<Neighbor>> {
+        super::parallel_search_batch_req(self, reqs)
     }
 }
 

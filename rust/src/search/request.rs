@@ -1,0 +1,318 @@
+//! Request-scoped search: the per-query knobs real ANN services live on.
+//!
+//! The offline-benchmark API (`search(&[f32])`) bakes every quality knob
+//! into the engine at construction time. A serving system needs them *per
+//! request*: a client asking for 5 neighbors at relaxed recall and a
+//! client asking for 100 at high recall hit the same index, and
+//! metadata-filtered queries ("only ids in this tenant's subset") are a
+//! first-class workload. [`SearchRequest`] carries those knobs through
+//! every layer — searcher, segmented fan-out, XLA rerank, coordinator —
+//! and [`IdFilter`] is the id-predicate the beam core applies on the
+//! *result* side (filtered-out nodes are still traversed, they just never
+//! enter the result list F — standard filtered-HNSW semantics).
+//!
+//! A request with default knobs (`SearchRequest::new(q)` or `q.into()`)
+//! is bitwise identical to the knob-free `search` path at every layer;
+//! the regression tests pin this.
+
+use super::config::SearchParams;
+use super::Neighbor;
+use crate::rng::Pcg32;
+use std::sync::Arc;
+
+/// Cap on the selectivity-driven layer-0 ef boost: a filter keeping
+/// 1/16th of the corpus (or less) widens the beam at most 16×, bounding
+/// worst-case latency while holding recall at moderate selectivities.
+pub const MAX_EF_BOOST: usize = 16;
+
+/// A bitset predicate over corpus ids: `allows(id)` answers in O(1).
+///
+/// Semantics are *result-side*: the beam search still traverses
+/// disallowed nodes (they route the walk exactly as in an unfiltered
+/// search) but never admits them into the result list. Build one per
+/// logical filter and share it across requests via `Arc` — the searchers
+/// never mutate it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IdFilter {
+    bits: Vec<u64>,
+    n_total: usize,
+    n_allowed: usize,
+}
+
+impl IdFilter {
+    /// Filter over `n_total` ids allowing exactly those where `pred` holds.
+    pub fn from_fn(n_total: usize, mut pred: impl FnMut(u32) -> bool) -> Self {
+        let mut bits = vec![0u64; n_total.div_ceil(64)];
+        let mut n_allowed = 0usize;
+        for id in 0..n_total as u32 {
+            if pred(id) {
+                bits[(id / 64) as usize] |= 1u64 << (id % 64);
+                n_allowed += 1;
+            }
+        }
+        Self { bits, n_total, n_allowed }
+    }
+
+    /// Filter over `n_total` ids allowing exactly `ids` (out-of-range ids
+    /// are ignored; duplicates are counted once).
+    pub fn from_ids(n_total: usize, ids: impl IntoIterator<Item = u32>) -> Self {
+        let mut bits = vec![0u64; n_total.div_ceil(64)];
+        let mut n_allowed = 0usize;
+        for id in ids {
+            if (id as usize) < n_total {
+                let w = &mut bits[(id / 64) as usize];
+                let mask = 1u64 << (id % 64);
+                if *w & mask == 0 {
+                    *w |= mask;
+                    n_allowed += 1;
+                }
+            }
+        }
+        Self { bits, n_total, n_allowed }
+    }
+
+    /// Deterministic Bernoulli filter: each id is allowed independently
+    /// with probability `selectivity` (clamped to [0, 1]) under `seed`.
+    /// The workhorse of load tests and property tests.
+    pub fn random(n_total: usize, selectivity: f64, seed: u64) -> Self {
+        let p = selectivity.clamp(0.0, 1.0);
+        let mut rng = Pcg32::new(seed);
+        Self::from_fn(n_total, |_| rng.f64() < p)
+    }
+
+    /// Does the filter admit `id` into result lists? Ids at or beyond
+    /// `n_total` are never allowed.
+    #[inline]
+    pub fn allows(&self, id: u32) -> bool {
+        let w = (id / 64) as usize;
+        w < self.bits.len() && (self.bits[w] >> (id % 64)) & 1 == 1
+    }
+
+    /// Total ids the filter spans (the corpus size it was built for).
+    pub fn n_total(&self) -> usize {
+        self.n_total
+    }
+
+    /// Number of allowed ids.
+    pub fn n_allowed(&self) -> usize {
+        self.n_allowed
+    }
+
+    /// Fraction of the corpus the filter admits, in [0, 1]. An empty
+    /// corpus reports 1.0 (nothing is excluded).
+    pub fn selectivity(&self) -> f64 {
+        if self.n_total == 0 {
+            1.0
+        } else {
+            self.n_allowed as f64 / self.n_total as f64
+        }
+    }
+
+    /// Allowed ids, ascending. Walks set bits word-wise (skipping empty
+    /// words), so sparse filters iterate in O(words + allowed), not
+    /// O(n_total) probes.
+    pub fn iter_allowed(&self) -> impl Iterator<Item = u32> + '_ {
+        self.bits.iter().enumerate().flat_map(|(w, &word)| {
+            let mut rest = word;
+            std::iter::from_fn(move || {
+                if rest == 0 {
+                    None
+                } else {
+                    let bit = rest.trailing_zeros();
+                    rest &= rest - 1;
+                    Some(w as u32 * 64 + bit)
+                }
+            })
+        })
+    }
+}
+
+/// One search request: the query vector plus per-request knobs.
+///
+/// `SearchRequest::new(q)` / `q.into()` leaves every knob at its default,
+/// which is defined to be **bitwise identical** to the knob-free
+/// `AnnEngine::search` path — existing call sites stay one-liners and
+/// nothing regresses while the API widens.
+#[derive(Debug, Clone)]
+pub struct SearchRequest<'a> {
+    /// Query vector, original high-dim space.
+    pub vector: &'a [f32],
+    /// Number of neighbors wanted. `None` returns the engine's full
+    /// layer-0 beam (the legacy shape); `Some(k)` guarantees at most `k`
+    /// results and widens the beam to at least `k` so the engine can
+    /// honor it natively (no post-hoc truncation of a too-narrow list).
+    pub topk: Option<usize>,
+    /// Per-request beam widths overriding the engine's configured
+    /// [`SearchParams`] (the recall/latency tier knob).
+    pub ef_override: Option<SearchParams>,
+    /// Result-side id predicate (filtered ANN). Shared, immutable.
+    pub filter: Option<Arc<IdFilter>>,
+}
+
+impl<'a> SearchRequest<'a> {
+    /// Request with default knobs — equivalent to the plain `search` path.
+    pub fn new(vector: &'a [f32]) -> Self {
+        Self { vector, topk: None, ef_override: None, filter: None }
+    }
+
+    /// Set the per-request result count.
+    pub fn with_topk(mut self, k: usize) -> Self {
+        self.topk = Some(k);
+        self
+    }
+
+    /// Set per-request beam widths.
+    pub fn with_ef(mut self, params: SearchParams) -> Self {
+        self.ef_override = Some(params);
+        self
+    }
+
+    /// Attach an id filter.
+    pub fn with_filter(mut self, filter: Arc<IdFilter>) -> Self {
+        self.filter = Some(filter);
+        self
+    }
+
+    /// Resolve the beam widths this request searches with, starting from
+    /// the engine's configured `base`:
+    ///
+    /// 1. `ef_override` replaces `base` wholesale when present (each
+    ///    width clamped to ≥ 1, so a malformed client override degrades
+    ///    instead of panicking a server worker).
+    /// 2. `topk` floors the layer-0 beam (`ef_l0 ≥ topk`), so a request
+    ///    for more neighbors than the engine default is honored natively.
+    /// 3. A filter with selectivity `s < 1` scales the layer-0 beam to
+    ///    `⌈ef_l0 / s⌉`, capped at [`MAX_EF_BOOST`]`× ef_l0` — at low
+    ///    selectivity most traversed nodes never enter F, so the beam
+    ///    must widen for recall over the allowed subset to hold.
+    ///
+    /// A default-knob request resolves to exactly `base` — the bitwise
+    /// identity the regression tests pin.
+    pub fn effective_search(&self, base: &SearchParams) -> SearchParams {
+        let mut p = self.ef_override.clone().unwrap_or_else(|| base.clone());
+        p.ef_upper = p.ef_upper.max(1);
+        p.ef_l0 = p.ef_l0.max(1);
+        if let Some(k) = self.topk {
+            p.ef_l0 = p.ef_l0.max(k);
+        }
+        if let Some(f) = &self.filter {
+            let sel = f.selectivity();
+            if sel > 0.0 && sel < 1.0 {
+                let boosted = (p.ef_l0 as f64 / sel).ceil() as usize;
+                p.ef_l0 = boosted.min(p.ef_l0.saturating_mul(MAX_EF_BOOST));
+            }
+        }
+        p
+    }
+
+    /// Fallback post-processing for engines without a native request
+    /// path (test stubs, wrappers over opaque result lists): drop
+    /// disallowed ids, then truncate to `topk`. Native engines instead
+    /// filter inside the beam and size it via [`Self::effective_search`].
+    pub fn finish(&self, mut results: Vec<Neighbor>) -> Vec<Neighbor> {
+        if let Some(f) = &self.filter {
+            results.retain(|n| f.allows(n.id));
+        }
+        if let Some(k) = self.topk {
+            results.truncate(k);
+        }
+        results
+    }
+}
+
+impl<'a> From<&'a [f32]> for SearchRequest<'a> {
+    fn from(vector: &'a [f32]) -> Self {
+        Self::new(vector)
+    }
+}
+
+impl<'a> From<&'a Vec<f32>> for SearchRequest<'a> {
+    fn from(vector: &'a Vec<f32>) -> Self {
+        Self::new(vector)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn id_filter_from_fn_and_allows() {
+        let f = IdFilter::from_fn(130, |id| id % 3 == 0);
+        assert!(f.allows(0) && f.allows(129));
+        assert!(!f.allows(1));
+        assert!(!f.allows(200), "out-of-range ids are never allowed");
+        assert_eq!(f.n_allowed(), 44);
+        assert_eq!(f.iter_allowed().count(), 44);
+        assert!(f.iter_allowed().all(|id| id % 3 == 0));
+    }
+
+    #[test]
+    fn id_filter_from_ids_dedups_and_bounds() {
+        let f = IdFilter::from_ids(10, [3u32, 3, 7, 99]);
+        assert_eq!(f.n_allowed(), 2, "duplicate and out-of-range ids ignored");
+        assert!(f.allows(3) && f.allows(7) && !f.allows(99));
+    }
+
+    #[test]
+    fn random_filter_tracks_selectivity_and_is_deterministic() {
+        let a = IdFilter::random(10_000, 0.1, 42);
+        let b = IdFilter::random(10_000, 0.1, 42);
+        assert_eq!(a, b, "same seed must give the same filter");
+        assert!((a.selectivity() - 0.1).abs() < 0.02, "selectivity {}", a.selectivity());
+        assert_ne!(a, IdFilter::random(10_000, 0.1, 43));
+    }
+
+    #[test]
+    fn default_request_resolves_to_base_params() {
+        let base = SearchParams { ef_upper: 1, ef_l0: 10 };
+        let q = [0.0f32; 4];
+        let req = SearchRequest::new(&q);
+        assert_eq!(req.effective_search(&base), base, "default knobs are the identity");
+    }
+
+    #[test]
+    fn topk_floors_layer0_beam() {
+        let base = SearchParams { ef_upper: 1, ef_l0: 10 };
+        let q = [0.0f32; 4];
+        assert_eq!(SearchRequest::new(&q).with_topk(5).effective_search(&base).ef_l0, 10);
+        assert_eq!(SearchRequest::new(&q).with_topk(40).effective_search(&base).ef_l0, 40);
+    }
+
+    #[test]
+    fn filter_boost_scales_and_caps() {
+        let base = SearchParams { ef_upper: 1, ef_l0: 10 };
+        let q = [0.0f32; 4];
+        let half = Arc::new(IdFilter::from_fn(1000, |id| id % 2 == 0));
+        let eff = SearchRequest::new(&q).with_filter(half).effective_search(&base);
+        assert_eq!(eff.ef_l0, 20, "selectivity 0.5 doubles ef_l0");
+        let tiny = Arc::new(IdFilter::from_ids(1000, [1u32]));
+        let eff = SearchRequest::new(&q).with_filter(tiny).effective_search(&base);
+        assert_eq!(eff.ef_l0, 10 * MAX_EF_BOOST, "boost is capped");
+        let all = Arc::new(IdFilter::from_fn(100, |_| true));
+        let eff = SearchRequest::new(&q).with_filter(all).effective_search(&base);
+        assert_eq!(eff.ef_l0, 10, "selectivity 1.0 never boosts");
+    }
+
+    #[test]
+    fn degenerate_ef_override_is_clamped() {
+        let base = SearchParams { ef_upper: 1, ef_l0: 10 };
+        let q = [0.0f32; 4];
+        let eff = SearchRequest::new(&q)
+            .with_ef(SearchParams { ef_upper: 0, ef_l0: 0 })
+            .effective_search(&base);
+        assert_eq!(eff.ef_upper, 1, "zero widths clamp instead of panicking the beam");
+        assert_eq!(eff.ef_l0, 1);
+    }
+
+    #[test]
+    fn finish_filters_then_truncates() {
+        let q = [0.0f32; 2];
+        let f = Arc::new(IdFilter::from_ids(10, [1u32, 3, 5, 7]));
+        let raw: Vec<Neighbor> =
+            (0..10).map(|i| Neighbor { id: i, dist: i as f32 }).collect();
+        let req = SearchRequest::new(&q).with_filter(f).with_topk(3);
+        let out = req.finish(raw);
+        assert_eq!(out.iter().map(|n| n.id).collect::<Vec<_>>(), vec![1, 3, 5]);
+    }
+}

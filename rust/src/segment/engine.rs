@@ -1,17 +1,27 @@
 //! Fan-out/merge serving over a [`SegmentedIndex`].
 //!
 //! Every shard holds an independent pHNSW stack (graph + SQ8 filter
-//! store + f32 rerank table) sharing one PCA model. A query runs against
-//! every shard and the per-shard top-k lists — already sorted ascending
-//! with `total_cmp` tie-broken by id — are remapped to global ids and
-//! merged into one list truncated to the layer-0 beam width, so a
-//! segmented engine answers with exactly the shape a monolithic
-//! [`PhnswSearcher`] does. With `S = 1` the merge is the identity and
-//! results are bitwise identical to the plain searcher (pinned by
-//! tests).
+//! store + f32 rerank table) sharing one PCA model. A request runs
+//! against every shard and the per-shard top-k lists — already sorted
+//! ascending with `total_cmp` tie-broken by id — are remapped to global
+//! ids and merged into one list, so a segmented engine answers with
+//! exactly the shape a monolithic [`PhnswSearcher`] does. With `S = 1`
+//! the merge is the identity and results are bitwise identical to the
+//! plain searcher (pinned by tests).
+//!
+//! Request knobs fan with the query: `topk` and `ef_override` ride to
+//! every shard verbatim, and a global-id [`IdFilter`] is translated to
+//! one shard-local filter per shard through the [`ShardMap`] (each
+//! shard's searcher then boosts its own beam from its *local*
+//! selectivity). The merged list is cut at the request's effective
+//! layer-0 beam width — `max(topk, boosted ef_l0)` — instead of a fixed
+//! engine-construction-time length, then truncated to `topk`.
 
 use super::{SegmentedIndex, ShardMap};
-use crate::search::{AnnEngine, Neighbor, PhnswParams, PhnswSearcher, SearchStats};
+use crate::search::{
+    AnnEngine, IdFilter, Neighbor, PhnswParams, PhnswSearcher, SearchRequest, SearchStats,
+};
+use std::sync::Arc;
 
 /// Below this many rows in the largest shard, a per-query scoped-thread
 /// fan costs more in spawn/join than it saves in overlapped search —
@@ -19,16 +29,27 @@ use crate::search::{AnnEngine, Neighbor, PhnswParams, PhnswSearcher, SearchStats
 /// way; only the schedule differs).
 const PARALLEL_FAN_MIN_ROWS: usize = 4096;
 
+/// Entries kept in the engine's filter-translation memo. Small: serving
+/// workloads reuse a handful of live tenant filters.
+const TRANSLATION_CACHE_CAP: usize = 8;
+
 /// Multi-shard pHNSW engine: one [`PhnswSearcher`] per segment plus the
 /// id remap + merge at the result boundary.
 pub struct SegmentedEngine {
     searchers: Vec<PhnswSearcher>,
     map: ShardMap,
-    /// Merged-result length: the layer-0 beam width, for parity with the
-    /// monolithic searcher's result shape.
-    out_len: usize,
+    /// Engine-level default parameters; per-request knobs resolve
+    /// against `params.search` exactly as a monolithic searcher would.
+    params: PhnswParams,
     /// Whether single-query fans pay for scoped threads (big shards).
     parallel_fan: bool,
+    /// Memo of global-filter → shard-local-filter translations, MRU at
+    /// the back, keyed by `Arc` identity. Holding a strong ref to each
+    /// key pins the allocation, so a pointer can never be reused by a
+    /// different filter while its entry lives (no ABA); requests
+    /// sharing a long-lived tenant filter pay the O(allowed) scan once,
+    /// not once per request.
+    translations: std::sync::Mutex<Vec<(Arc<IdFilter>, Vec<Arc<IdFilter>>)>>,
 }
 
 impl SegmentedEngine {
@@ -51,8 +72,9 @@ impl SegmentedEngine {
         Self {
             searchers,
             map: index.map,
-            out_len: params.search.ef_l0,
+            params,
             parallel_fan: biggest >= PARALLEL_FAN_MIN_ROWS,
+            translations: std::sync::Mutex::new(Vec::new()),
         }
     }
 
@@ -61,30 +83,119 @@ impl SegmentedEngine {
         self.searchers.len()
     }
 
-    /// Run `run` once per shard, in shard order. Large shards get one
-    /// scoped thread each so their latencies overlap; small shards (or a
-    /// single one) run inline, where thread spawn would dominate.
-    fn fan<T: Send>(&self, run: impl Fn(&PhnswSearcher) -> T + Sync) -> Vec<T> {
+    /// Run `run` once per shard. Large shards get one scoped thread each
+    /// so their latencies overlap; small shards (or a single one) run
+    /// inline, where thread spawn would dominate. The closure receives
+    /// the shard index so callers can feed shard-specific inputs (e.g.
+    /// the shard-local request).
+    fn fan<T: Send>(&self, run: impl Fn(usize, &PhnswSearcher) -> T + Sync) -> Vec<T> {
         if !self.parallel_fan || self.searchers.len() == 1 {
-            return self.searchers.iter().map(run).collect();
+            return self.searchers.iter().enumerate().map(|(s, e)| run(s, e)).collect();
         }
         let mut out: Vec<Option<T>> = Vec::new();
         out.resize_with(self.searchers.len(), || None);
         std::thread::scope(|scope| {
-            for (searcher, slot) in self.searchers.iter().zip(out.iter_mut()) {
+            for (s, (searcher, slot)) in self.searchers.iter().zip(out.iter_mut()).enumerate() {
                 let run = &run;
-                scope.spawn(move || *slot = Some(run(searcher)));
+                scope.spawn(move || *slot = Some(run(s, searcher)));
             }
         });
         out.into_iter().map(|t| t.expect("fan worker filled its slot")).collect()
     }
 
-    /// Remap shard-local result ids to global ids and merge the per-shard
-    /// lists into one ascending list of at most `out_len` neighbors.
-    /// Ordering is `total_cmp` on distance, ties broken by global id —
-    /// the same comparator every per-shard list is already sorted by, so
-    /// the merge is deterministic even with NaN distances.
-    fn merge(&self, per_shard: Vec<Vec<Neighbor>>) -> Vec<Neighbor> {
+    /// Translate a corpus-global id filter into one shard-local filter
+    /// per shard: each allowed global id sets the bit of its
+    /// `(shard, local)` image under the [`ShardMap`].
+    fn shard_filters(&self, filter: &IdFilter) -> Vec<Arc<IdFilter>> {
+        let mut allowed: Vec<Vec<u32>> = (0..self.n_shards()).map(|_| Vec::new()).collect();
+        for g in filter.iter_allowed() {
+            let (s, local) = self.map.shard_of(g);
+            allowed[s].push(local);
+        }
+        allowed
+            .into_iter()
+            .enumerate()
+            .map(|(s, ids)| Arc::new(IdFilter::from_ids(self.map.shard_len(s), ids)))
+            .collect()
+    }
+
+    /// Translate `filter` through the engine's memo: a hit clones the
+    /// cached per-shard filters (Arc-cheap); a miss pays
+    /// [`Self::shard_filters`] once and is remembered (MRU at the back,
+    /// bounded at [`TRANSLATION_CACHE_CAP`] entries).
+    fn shard_filters_memo(&self, filter: &Arc<IdFilter>) -> Vec<Arc<IdFilter>> {
+        let mut cache = self.translations.lock().unwrap();
+        if let Some(pos) = cache.iter().position(|(k, _)| Arc::ptr_eq(k, filter)) {
+            let hit = cache.remove(pos);
+            let locals = hit.1.clone();
+            cache.push(hit); // refresh MRU position
+            return locals;
+        }
+        drop(cache); // don't hold the lock across the O(allowed) scan
+        let locals = self.shard_filters(filter);
+        let mut cache = self.translations.lock().unwrap();
+        if !cache.iter().any(|(k, _)| Arc::ptr_eq(k, filter)) {
+            if cache.len() >= TRANSLATION_CACHE_CAP {
+                cache.remove(0); // evict LRU
+            }
+            cache.push((filter.clone(), locals.clone()));
+        }
+        locals
+    }
+
+    /// The per-shard images of `req`: same vector, `topk`, and
+    /// `ef_override`; the filter (when present) swapped for each shard's
+    /// local translation (memoized by `Arc` identity — requests commonly
+    /// share one long-lived filter, and the O(allowed) scan + per-shard
+    /// bitsets should be paid once per distinct filter, not once per
+    /// request).
+    fn shard_requests<'a>(&self, req: &SearchRequest<'a>) -> Vec<SearchRequest<'a>> {
+        match req.filter.as_ref() {
+            None => vec![req.clone(); self.n_shards()],
+            Some(f) => {
+                // A filter sized for a different corpus cannot be
+                // translated; fan empty local filters so every shard
+                // short-circuits to an empty result (debug builds
+                // assert) instead of panicking a server worker.
+                if f.n_total() != self.map.n_total() {
+                    debug_assert_eq!(f.n_total(), self.map.n_total(), "filter/corpus size mismatch");
+                    return (0..self.n_shards())
+                        .map(|s| SearchRequest {
+                            filter: Some(Arc::new(IdFilter::from_ids(
+                                self.map.shard_len(s),
+                                std::iter::empty(),
+                            ))),
+                            ..req.clone()
+                        })
+                        .collect();
+                }
+                self.shard_filters_memo(f)
+                    .into_iter()
+                    .map(|local| SearchRequest { filter: Some(local), ..req.clone() })
+                    .collect()
+            }
+        }
+    }
+
+    /// Merged-result length for `req`: the request's effective layer-0
+    /// beam width (≥ `topk`, boosted by filter selectivity), for parity
+    /// with the monolithic searcher's result shape.
+    fn merge_len(&self, req: &SearchRequest<'_>) -> usize {
+        req.effective_search(&self.params.search).ef_l0
+    }
+
+    /// Remap shard-local result ids to global ids and merge the
+    /// per-shard lists into one ascending list of at most `merge_len`
+    /// neighbors, then truncate to the request's `topk`. Ordering is
+    /// `total_cmp` on distance, ties broken by global id — the same
+    /// comparator every per-shard list is already sorted by, so the
+    /// merge is deterministic even with NaN distances.
+    fn merge(
+        &self,
+        per_shard: Vec<Vec<Neighbor>>,
+        merge_len: usize,
+        topk: Option<usize>,
+    ) -> Vec<Neighbor> {
         let total: usize = per_shard.iter().map(|r| r.len()).sum();
         let mut all = Vec::with_capacity(total);
         for (s, res) in per_shard.into_iter().enumerate() {
@@ -93,7 +204,7 @@ impl SegmentedEngine {
             }
         }
         all.sort_by(|a, b| a.dist.total_cmp(&b.dist).then_with(|| a.id.cmp(&b.id)));
-        all.truncate(self.out_len);
+        all.truncate(topk.unwrap_or(merge_len).min(merge_len));
         all
     }
 }
@@ -103,52 +214,82 @@ impl AnnEngine for SegmentedEngine {
         "phnsw-seg"
     }
 
-    /// Fan one query across all shards (overlapped when shards are large
-    /// enough to amortize a thread spawn) and merge.
-    fn search(&self, query: &[f32]) -> Vec<Neighbor> {
-        let per_shard = self.fan(|s| s.search(query));
-        self.merge(per_shard)
+    /// Fan one request across all shards (overlapped when shards are
+    /// large enough to amortize a thread spawn) and merge.
+    fn search_req(&self, req: &SearchRequest) -> Vec<Neighbor> {
+        let sub = self.shard_requests(req);
+        let per_shard = self.fan(|s, e| e.search_req(&sub[s]));
+        self.merge(per_shard, self.merge_len(req), req.topk)
     }
 
     /// Per-shard stats are element-wise summed: the aggregate counts the
-    /// total work the query cost across the whole segmented index. Fans
-    /// exactly like [`Self::search`], so measured and served latency
-    /// profiles match.
-    fn search_with_stats(&self, query: &[f32]) -> (Vec<Neighbor>, SearchStats) {
-        let pairs = self.fan(|s| s.search_with_stats(query));
+    /// total work the request cost across the whole segmented index.
+    /// Fans exactly like [`Self::search_req`], so measured and served
+    /// latency profiles match.
+    fn search_req_with_stats(&self, req: &SearchRequest) -> (Vec<Neighbor>, SearchStats) {
+        let sub = self.shard_requests(req);
+        let pairs = self.fan(|s, e| e.search_req_with_stats(&sub[s]));
         let mut agg = SearchStats::default();
         let mut per_shard = Vec::with_capacity(pairs.len());
         for (res, stats) in pairs {
             agg.add(&stats);
             per_shard.push(res);
         }
-        (self.merge(per_shard), agg)
+        (self.merge(per_shard, self.merge_len(req), req.topk), agg)
     }
 
     /// Whole-batch fan: each shard sees the *entire* batch through its
-    /// own data-parallel `search_batch` override, then results merge per
-    /// query. Bitwise identical to sequential `search` calls (both sides
-    /// of the fan are, and the merge is deterministic).
-    fn search_batch(&self, queries: &[&[f32]]) -> Vec<Vec<Neighbor>> {
+    /// own data-parallel `search_batch_req` override, shards overlapped
+    /// on scoped threads exactly like the single-query fan, then results
+    /// merge per request. Bitwise identical to sequential `search_req`
+    /// calls (both sides of the fan are, and the merge is deterministic).
+    fn search_batch_req(&self, reqs: &[SearchRequest]) -> Vec<Vec<Neighbor>> {
         if self.searchers.len() == 1 {
-            let shard = self.searchers[0].search_batch(queries);
-            return shard.into_iter().map(|r| self.merge(vec![r])).collect();
+            let shard = self.searchers[0].search_batch_req(reqs);
+            return shard
+                .into_iter()
+                .zip(reqs)
+                .map(|(r, req)| self.merge(vec![r], self.merge_len(req), req.topk))
+                .collect();
         }
-        // Transpose by draining one per-shard iterator per query: results
-        // move straight into the merge, no clones.
+        // Per-shard request images, one vector per shard (column s of
+        // the per-request translation; filter translations hit the
+        // engine's memo after the first request with a given filter).
+        let mut sub: Vec<Vec<SearchRequest>> =
+            (0..self.n_shards()).map(|_| Vec::with_capacity(reqs.len())).collect();
+        for req in reqs {
+            for (s, sr) in self.shard_requests(req).into_iter().enumerate() {
+                sub[s].push(sr);
+            }
+        }
+        // Fan shards on scoped threads (the batch analog of `fan()`);
+        // each worker runs its shard's whole batch through the
+        // data-parallel searcher path. When the shards actually overlap,
+        // the inner worker-pool budget is split across them so the fan
+        // does not oversubscribe the cores by a factor of `n_shards`;
+        // when `fan()` runs shards sequentially (small shards), each
+        // shard keeps the full budget.
+        let shard_budget = if self.parallel_fan {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .div_ceil(self.n_shards())
+                .max(1)
+        } else {
+            usize::MAX
+        };
         let mut per_shard: Vec<std::vec::IntoIter<Vec<Neighbor>>> = self
-            .searchers
-            .iter()
-            .map(|s| s.search_batch(queries).into_iter())
+            .fan(|s, e| e.search_batch_req_capped(&sub[s], shard_budget))
+            .into_iter()
+            .map(|v| v.into_iter())
             .collect();
-        (0..queries.len())
-            .map(|_| {
-                self.merge(
-                    per_shard
-                        .iter_mut()
-                        .map(|shard| shard.next().expect("search_batch is 1:1 with queries"))
-                        .collect(),
-                )
+        reqs.iter()
+            .map(|req| {
+                let lists = per_shard
+                    .iter_mut()
+                    .map(|shard| shard.next().expect("search_batch_req is 1:1 with requests"))
+                    .collect();
+                self.merge(lists, self.merge_len(req), req.topk)
             })
             .collect()
     }
@@ -199,6 +340,21 @@ mod tests {
     }
 
     #[test]
+    fn filtered_batch_matches_sequential_bitwise() {
+        let (e, queries) = engine(900, 4);
+        let filter = Arc::new(IdFilter::random(900, 0.3, 11));
+        let reqs: Vec<SearchRequest> = (0..20)
+            .map(|i| SearchRequest::new(queries.row(i)).with_filter(filter.clone()).with_topk(5))
+            .collect();
+        let sequential: Vec<Vec<Neighbor>> = reqs.iter().map(|r| e.search_req(r)).collect();
+        assert_eq!(e.search_batch_req(&reqs), sequential);
+        for res in &sequential {
+            assert!(res.len() <= 5);
+            assert!(res.iter().all(|n| filter.allows(n.id)), "only allowed ids survive");
+        }
+    }
+
+    #[test]
     fn stats_aggregate_across_shards() {
         let (e, queries) = engine(900, 3);
         let q = queries.row(0);
@@ -219,5 +375,31 @@ mod tests {
         // 4 shards × ef_l0 results each must still merge to ef_l0.
         let res = e.search(queries.row(0));
         assert_eq!(res.len(), PhnswParams::default().search.ef_l0);
+    }
+
+    #[test]
+    fn per_request_topk_widens_the_merge() {
+        let (e, queries) = engine(1200, 4);
+        let req = SearchRequest::new(queries.row(0)).with_topk(25);
+        let res = e.search_req(&req);
+        assert_eq!(res.len(), 25, "topk beyond ef_l0 is honored natively");
+        for w in res.windows(2) {
+            assert!(w[0].dist <= w[1].dist);
+        }
+    }
+
+    #[test]
+    fn shard_filters_partition_the_global_filter() {
+        let (e, _) = engine(1000, 3);
+        let global = IdFilter::random(1000, 0.2, 5);
+        let locals = e.shard_filters(&global);
+        let total: usize = locals.iter().map(|f| f.n_allowed()).sum();
+        assert_eq!(total, global.n_allowed(), "translation preserves the allowed count");
+        for (s, local) in locals.iter().enumerate() {
+            assert_eq!(local.n_total(), e.map.shard_len(s));
+            for l in local.iter_allowed() {
+                assert!(global.allows(e.map.global_of(s, l)), "local bit maps to allowed global");
+            }
+        }
     }
 }

@@ -1,0 +1,280 @@
+//! Integration tests for request-scoped search: the filtered-ANN
+//! contract (results ⊆ allowed ids, recall floors over the allowed
+//! subset), per-request topk/ef semantics, the unfiltered-default
+//! bitwise regression pin at every layer, and a coordinator round-trip
+//! carrying a filter end to end.
+
+use phnsw::coordinator::{Query, Server, ServerConfig};
+use phnsw::dataset::synthetic::{generate, SyntheticConfig};
+use phnsw::dataset::{ground_truth_filtered, VectorSet};
+use phnsw::graph::build::{build, BuildConfig};
+use phnsw::metrics::recall_at_k;
+use phnsw::search::{
+    AnnEngine, HnswSearcher, IdFilter, PhnswParams, PhnswSearcher, SearchParams, SearchRequest,
+};
+use phnsw::segment::{build_segmented, SegmentSpec, ShardAssignment};
+use std::sync::Arc;
+
+const DIM_LOW: usize = 8;
+const PCA_SEED: u64 = 7;
+
+struct Fixture {
+    base: Arc<VectorSet>,
+    queries: VectorSet,
+    bc: BuildConfig,
+}
+
+fn fixture(n: usize, nq: usize) -> Fixture {
+    let cfg = SyntheticConfig { n_base: n, n_queries: nq, ..SyntheticConfig::tiny() };
+    let (base, queries) = generate(&cfg);
+    let bc = BuildConfig { m: 8, ef_construction: 100, ..Default::default() };
+    Fixture { base: Arc::new(base), queries, bc }
+}
+
+fn phnsw(f: &Fixture) -> PhnswSearcher {
+    let graph = Arc::new(build(&f.base, &f.bc));
+    PhnswSearcher::build_from(graph, f.base.clone(), DIM_LOW, PhnswParams::default(), PCA_SEED)
+}
+
+fn hnsw(f: &Fixture) -> HnswSearcher {
+    let graph = Arc::new(build(&f.base, &f.bc));
+    HnswSearcher::new(graph, f.base.clone(), SearchParams::default())
+}
+
+/// Recall@10 of `engine` under `filter`, against exact ground truth
+/// restricted to the allowed subset.
+fn filtered_recall(
+    engine: &dyn AnnEngine,
+    f: &Fixture,
+    filter: &Arc<IdFilter>,
+) -> f64 {
+    let gt = ground_truth_filtered(&f.base, &f.queries, 10, |id| filter.allows(id));
+    let results: Vec<Vec<u32>> = f
+        .queries
+        .iter()
+        .map(|q| {
+            let req = SearchRequest::new(q).with_topk(10).with_filter(filter.clone());
+            let res = engine.search_req(&req);
+            assert!(
+                res.iter().all(|n| filter.allows(n.id)),
+                "engine {} leaked a disallowed id",
+                engine.name()
+            );
+            res.into_iter().map(|n| n.id).collect()
+        })
+        .collect();
+    recall_at_k(&results, &gt, 10)
+}
+
+#[test]
+fn results_only_ever_contain_allowed_ids() {
+    // Property sweep: random filters across selectivities and seeds, all
+    // three engine shapes; every returned id must be allowed.
+    let f = fixture(1500, 12);
+    let mono = phnsw(&f);
+    let plain = hnsw(&f);
+    let idx = build_segmented(
+        &f.base,
+        &f.bc,
+        DIM_LOW,
+        PCA_SEED,
+        &SegmentSpec { n_shards: 3, build_threads: 2, assignment: ShardAssignment::RoundRobin },
+    );
+    let seg = idx.engine(PhnswParams::default());
+    let engines: [&dyn AnnEngine; 3] = [&mono, &plain, &seg];
+    for (i, &sel) in [0.5, 0.1, 0.02].iter().enumerate() {
+        let filter = Arc::new(IdFilter::random(f.base.len(), sel, 100 + i as u64));
+        for engine in engines {
+            for q in f.queries.iter() {
+                let res = engine
+                    .search_req(&SearchRequest::new(q).with_topk(10).with_filter(filter.clone()));
+                assert!(
+                    res.iter().all(|n| filter.allows(n.id)),
+                    "{} returned a disallowed id at selectivity {sel}",
+                    engine.name()
+                );
+                let ids: std::collections::HashSet<_> = res.iter().map(|n| n.id).collect();
+                assert_eq!(ids.len(), res.len(), "duplicate ids from {}", engine.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn unfiltered_default_request_is_bitwise_identical_to_search() {
+    // The tentpole's regression pin at the searcher layer: a request
+    // with default knobs — and explicit knobs that *equal* the defaults —
+    // must reproduce the knob-free path bit for bit.
+    let f = fixture(1500, 25);
+    let s = phnsw(&f);
+    let h = hnsw(&f);
+    for q in f.queries.iter() {
+        let legacy = s.search(q);
+        assert_eq!(s.search_req(&SearchRequest::new(q)), legacy);
+        assert_eq!(
+            s.search_req(&SearchRequest::new(q).with_ef(SearchParams::default())),
+            legacy,
+            "an ef override equal to the engine default must be the identity"
+        );
+        assert_eq!(
+            s.search_req(&SearchRequest::new(q).with_topk(SearchParams::default().ef_l0)),
+            legacy,
+            "topk == ef_l0 must be the identity"
+        );
+        let legacy_h = h.search(q);
+        assert_eq!(h.search_req(&SearchRequest::new(q)), legacy_h);
+        // topk below ef_l0 is plain truncation of the same list.
+        assert_eq!(
+            s.search_req(&SearchRequest::new(q).with_topk(3)),
+            legacy[..3.min(legacy.len())].to_vec()
+        );
+    }
+}
+
+#[test]
+fn unfiltered_default_request_is_bitwise_identical_for_segmented_and_batch() {
+    let f = fixture(1200, 20);
+    let idx = build_segmented(
+        &f.base,
+        &f.bc,
+        DIM_LOW,
+        PCA_SEED,
+        &SegmentSpec { n_shards: 4, build_threads: 2, assignment: ShardAssignment::RoundRobin },
+    );
+    let seg = idx.engine(PhnswParams::default());
+    let reqs: Vec<SearchRequest> = f.queries.iter().map(SearchRequest::new).collect();
+    let legacy: Vec<_> = f.queries.iter().map(|q| seg.search(q)).collect();
+    for (req, want) in reqs.iter().zip(&legacy) {
+        assert_eq!(&seg.search_req(req), want);
+    }
+    assert_eq!(seg.search_batch_req(&reqs), legacy, "batch request path matches too");
+}
+
+#[test]
+fn filtered_recall_floors_monolithic() {
+    let f = fixture(3000, 50);
+    let s = phnsw(&f);
+    for (sel, seed) in [(0.5, 21u64), (0.1, 22u64)] {
+        let filter = Arc::new(IdFilter::random(f.base.len(), sel, seed));
+        let r = filtered_recall(&s, &f, &filter);
+        assert!(
+            r >= 0.85,
+            "monolithic filtered recall@10 = {r:.3} below floor at selectivity {sel}"
+        );
+    }
+}
+
+#[test]
+fn filtered_recall_floor_segmented() {
+    let f = fixture(3000, 50);
+    let idx = build_segmented(
+        &f.base,
+        &f.bc,
+        DIM_LOW,
+        PCA_SEED,
+        &SegmentSpec { n_shards: 4, build_threads: 4, assignment: ShardAssignment::RoundRobin },
+    );
+    let seg = idx.engine(PhnswParams::default());
+    let filter = Arc::new(IdFilter::random(f.base.len(), 0.1, 22));
+    let r = filtered_recall(&seg, &f, &filter);
+    assert!(r >= 0.85, "segmented filtered recall@10 = {r:.3} below floor at selectivity 0.1");
+}
+
+#[test]
+fn segmented_filtered_parity_s1_vs_s4() {
+    let f = fixture(2000, 40);
+    let mk = |shards: usize| {
+        build_segmented(
+            &f.base,
+            &f.bc,
+            DIM_LOW,
+            PCA_SEED,
+            &SegmentSpec {
+                n_shards: shards,
+                build_threads: 2,
+                assignment: ShardAssignment::RoundRobin,
+            },
+        )
+    };
+    let s1 = mk(1).engine(PhnswParams::default());
+    let s4 = mk(4).engine(PhnswParams::default());
+    let mono = phnsw(&f);
+    let filter = Arc::new(IdFilter::random(f.base.len(), 0.2, 33));
+
+    // S=1 is bitwise the monolithic searcher, filtered requests included.
+    for q in f.queries.iter() {
+        let req = SearchRequest::new(q).with_topk(10).with_filter(filter.clone());
+        assert_eq!(
+            s1.search_req(&req),
+            mono.search_req(&req),
+            "S=1 filtered search must be bitwise identical to the monolithic searcher"
+        );
+    }
+    // S=4 sees the same allowed subset through shard-local filters and
+    // must hold recall parity with S=1 (merge + per-shard boost differ
+    // only in schedule, not in quality).
+    let r1 = filtered_recall(&s1, &f, &filter);
+    let r4 = filtered_recall(&s4, &f, &filter);
+    assert!(r1 > 0.85, "S=1 filtered recall {r1:.3} suspiciously low");
+    assert!(
+        r4 >= r1 - 0.02,
+        "S=4 filtered recall {r4:.3} more than 0.02 below S=1 {r1:.3}"
+    );
+}
+
+#[test]
+fn empty_and_tiny_filters_degrade_gracefully() {
+    let f = fixture(800, 5);
+    let s = phnsw(&f);
+    let none = Arc::new(IdFilter::from_ids(f.base.len(), std::iter::empty()));
+    let one = Arc::new(IdFilter::from_ids(f.base.len(), [17u32]));
+    // A subset smaller than the beam takes the exact brute-force
+    // fallback, so tiny tenants get exact answers, not a graph walk.
+    let few = Arc::new(IdFilter::from_ids(f.base.len(), [3u32, 90, 200, 555]));
+    for q in f.queries.iter() {
+        assert!(s.search_req(&SearchRequest::new(q).with_filter(none.clone())).is_empty());
+        let res = s.search_req(&SearchRequest::new(q).with_topk(10).with_filter(one.clone()));
+        assert_eq!(res.len(), 1, "singleton filter answers exactly");
+        assert_eq!(res[0].id, 17);
+        let res = s.search_req(&SearchRequest::new(q).with_topk(2).with_filter(few.clone()));
+        let gt = phnsw::dataset::exact_topk_filtered(&f.base, q, 2, |id| few.allows(id));
+        assert_eq!(res.iter().map(|n| n.id).collect::<Vec<_>>(), gt, "tiny filters are exact");
+    }
+}
+
+#[test]
+fn coordinator_round_trip_carries_filter_end_to_end() {
+    let f = fixture(1500, 20);
+    let engine: Arc<dyn AnnEngine> = Arc::new(phnsw(&f));
+    let direct = phnsw(&f);
+    let server = Server::start_with_engine(
+        ServerConfig { workers: 2, ..Default::default() },
+        "phnsw",
+        engine,
+    );
+    let h = server.handle();
+    let filter = Arc::new(IdFilter::random(f.base.len(), 0.25, 44));
+    for qi in 0..f.queries.len() {
+        let q = Query::new(f.queries.row(qi).to_vec())
+            .with_topk(5)
+            .with_ef(SearchParams { ef_l0: 16, ..SearchParams::default() })
+            .with_filter(filter.clone());
+        let res = h.query_blocking(q).unwrap();
+        assert!(res.neighbors.len() <= 5);
+        assert!(
+            res.neighbors.iter().all(|n| filter.allows(n.id)),
+            "served filtered query leaked a disallowed id"
+        );
+        // The served result equals a direct engine call with the same
+        // request — the batch dispatch changes nothing.
+        let want = direct.search_req(
+            &SearchRequest::new(f.queries.row(qi))
+                .with_topk(5)
+                .with_ef(SearchParams { ef_l0: 16, ..SearchParams::default() })
+                .with_filter(filter.clone()),
+        );
+        assert_eq!(res.neighbors, want, "query {qi} diverged through the coordinator");
+        assert!(res.queue_wait + res.exec <= res.latency + std::time::Duration::from_millis(5));
+    }
+    server.shutdown();
+}
