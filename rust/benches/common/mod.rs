@@ -6,6 +6,13 @@
 //!   PHNSW_BENCH_N        base corpus size   (default 20000)
 //!   PHNSW_BENCH_QUERIES  query count        (default 200)
 //!   PHNSW_BENCH_TRACES   traced queries     (default 100)
+//!   PHNSW_BENCH_QUICK    non-empty/≠0 → CI quick mode (iters ÷ 25)
+//!   PHNSW_BENCH_OUT      snapshot output path (default BENCH_<bench>.json)
+//!
+//! Besides per-line JSON (`time_it_json`), a bench can collect its
+//! headline numbers into a [`Snapshot`] and write a consolidated
+//! `BENCH_<name>.json` at the repo root — the recorded perf trajectory
+//! (one committed snapshot per perf PR, compared by CI's bench gate).
 
 #![allow(dead_code)]
 use phnsw::workbench::{Workbench, WorkbenchConfig};
@@ -15,10 +22,25 @@ pub fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// CI quick mode: trade precision for wall-clock (PHNSW_BENCH_QUICK).
+pub fn quick_mode() -> bool {
+    std::env::var("PHNSW_BENCH_QUICK").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
+/// Scale an iteration count down for quick mode (÷ 25, floor 1).
+pub fn scaled_iters(iters: usize) -> usize {
+    if quick_mode() {
+        (iters / 25).max(1)
+    } else {
+        iters
+    }
+}
+
 /// Assemble the bench workbench at the env-configured scale.
 pub fn bench_workbench() -> Workbench {
+    let default_n = if quick_mode() { 4_000 } else { 20_000 };
     let cfg = WorkbenchConfig {
-        n_base: env_usize("PHNSW_BENCH_N", 20_000),
+        n_base: env_usize("PHNSW_BENCH_N", default_n),
         n_queries: env_usize("PHNSW_BENCH_QUERIES", 200),
         ..WorkbenchConfig::default()
     };
@@ -57,4 +79,103 @@ pub fn time_it<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
     let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
     println!("  {label:<44} {ns:>12.1} ns/iter");
     ns
+}
+
+/// Short git commit hash of HEAD, or `"unknown"` outside a repo.
+pub fn git_sha() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .unwrap_or_else(|| "unknown".into())
+}
+
+/// Today's UTC date as `YYYY-MM-DD` (no chrono in the offline registry;
+/// civil-from-days per Howard Hinnant's calendrical algorithms).
+pub fn iso_utc_date() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let z = (secs / 86_400) as i64 + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1_460 + doe / 36_524 - doe / 146_096) / 365;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = yoe + era * 400 + i64::from(m <= 2);
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+/// Consolidated perf snapshot: named scalar results plus run metadata,
+/// serialized as `BENCH_<name>.json` for the committed perf trajectory.
+pub struct Snapshot {
+    bench: String,
+    kernel_variant: String,
+    entries: Vec<(String, f64)>,
+}
+
+impl Snapshot {
+    /// Start a snapshot for bench `bench`, noting which kernel set the
+    /// run dispatched to (the trajectory is only comparable within a
+    /// variant).
+    pub fn new(bench: &str, kernel_variant: &str) -> Self {
+        Self { bench: bench.into(), kernel_variant: kernel_variant.into(), entries: Vec::new() }
+    }
+
+    /// Record (or overwrite) one named scalar result.
+    pub fn record(&mut self, name: &str, value: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|(n, _)| n == name) {
+            e.1 = value;
+        } else {
+            self.entries.push((name.into(), value));
+        }
+    }
+
+    /// A previously recorded value, if any.
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.entries.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+
+    /// [`time_it`] + [`Self::record`] in one call: time `f` under
+    /// `label`, store the ns/iter as entry `name`, and return it.
+    pub fn time<F: FnMut()>(&mut self, name: &str, label: &str, iters: usize, f: F) -> f64 {
+        let ns = time_it_json(label, iters, f);
+        self.record(name, ns);
+        ns
+    }
+
+    /// Serialize to the snapshot JSON document.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n");
+        s.push_str(&format!("  \"bench\": \"{}\",\n", self.bench));
+        s.push_str(&format!("  \"git_sha\": \"{}\",\n", git_sha()));
+        s.push_str(&format!("  \"date\": \"{}\",\n", iso_utc_date()));
+        s.push_str(&format!("  \"kernel_variant\": \"{}\",\n", self.kernel_variant));
+        s.push_str(&format!("  \"quick\": {},\n", quick_mode()));
+        s.push_str("  \"entries\": {\n");
+        for (i, (name, v)) in self.entries.iter().enumerate() {
+            let v = if v.is_finite() { *v } else { 0.0 };
+            let comma = if i + 1 < self.entries.len() { "," } else { "" };
+            s.push_str(&format!("    \"{name}\": {v:.3}{comma}\n"));
+        }
+        s.push_str("  }\n}\n");
+        s
+    }
+
+    /// Write the snapshot to `PHNSW_BENCH_OUT` (default
+    /// `BENCH_<bench>.json` in the working directory — the repo root
+    /// under `cargo bench`). Returns the path written.
+    pub fn write(&self) -> String {
+        let path = std::env::var("PHNSW_BENCH_OUT")
+            .unwrap_or_else(|_| format!("BENCH_{}.json", self.bench));
+        std::fs::write(&path, self.to_json()).expect("write bench snapshot");
+        eprintln!("[bench] snapshot written to {path}");
+        path
+    }
 }

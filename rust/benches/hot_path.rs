@@ -1,9 +1,13 @@
 //! Bench: hot-path micro-benchmarks for the §Perf optimization loop —
-//! distance kernels, the visited set, the comparator sort, the PCA
-//! projection, and a full pHNSW search. These are the numbers tracked in
-//! EXPERIMENTS.md §Perf (before/after each optimization).
+//! distance kernels (scalar baseline vs the dispatched SIMD set), the
+//! visited set (word-packed vs legacy u16-mark), the filter path, and a
+//! full pHNSW search. These are the numbers tracked in EXPERIMENTS.md
+//! §Perf, and the headline results are consolidated into
+//! `BENCH_hot_path.json` (see README §Perf trajectory) — the committed
+//! snapshot CI's bench gate compares against.
 //!
-//! Run: `cargo bench --bench hot_path`.
+//! Run: `cargo bench --bench hot_path`. Quick CI pass:
+//! `PHNSW_BENCH_QUICK=1 cargo bench --bench hot_path`.
 
 mod common;
 
@@ -12,12 +16,18 @@ use phnsw::graph::build::{select_neighbors_heuristic, BuildConfig};
 use phnsw::pca::PcaModel;
 use phnsw::rng::Pcg32;
 use phnsw::search::dist::{l2_sq, l2_sq_batch, l2_sq_batch_sq8};
-use phnsw::search::visited::VisitedSet;
+use phnsw::search::kernels;
+use phnsw::search::visited::{VisitedSet, WideVisitedSet};
 use phnsw::search::{AnnEngine, PhnswParams, SearchParams};
 use phnsw::segment::{build_segmented, SegmentSpec};
 use phnsw::store::{F32Store, Sq8Store, StoreScratch, VectorStore};
 
 fn main() {
+    let it = common::scaled_iters;
+    let scalar = kernels::scalar_set();
+    let active = kernels::active();
+    let mut snap = common::Snapshot::new("hot_path", active.name);
+
     let mut rng = Pcg32::new(1);
     let a: Vec<f32> = (0..128).map(|_| rng.gaussian()).collect();
     let b: Vec<f32> = (0..128).map(|_| rng.gaussian()).collect();
@@ -25,55 +35,118 @@ fn main() {
     let block: Vec<f32> = (0..32 * 15).map(|_| rng.gaussian()).collect();
     let mut out = vec![0f32; 32];
 
-    println!("distance kernels:");
-    common::time_it("l2_sq 128-dim (unrolled)", 1_000_000, || {
+    println!("distance kernels (dispatch = {}):", active.name);
+    // Each kernel is measured twice — the portable scalar set and the
+    // runtime-dispatched set — so the snapshot carries its own baseline
+    // and the speedup entries stay machine-portable ratios.
+    let ns = snap.time("kernel_l2_sq_128_scalar_ns", "kernel l2_sq 128d scalar", it(1_000_000), || {
+        std::hint::black_box((scalar.l2_sq)(std::hint::black_box(&a), std::hint::black_box(&b)));
+    });
+    let ns_d = snap.time("kernel_l2_sq_128_ns", "kernel l2_sq 128d dispatched", it(1_000_000), || {
         std::hint::black_box(l2_sq(std::hint::black_box(&a), std::hint::black_box(&b)));
     });
-    common::time_it("l2_sq_scalar 128-dim (reference)", 1_000_000, || {
+    snap.record("speedup_l2_sq_128", ns / ns_d);
+    common::time_it("l2_sq_scalar 128-dim (naive reference)", it(1_000_000), || {
         std::hint::black_box(l2_sq_scalar(std::hint::black_box(&a), std::hint::black_box(&b)));
     });
-    common::time_it("l2_sq_batch 32×15 (Dist.L shape)", 500_000, || {
+    common::time_it("l2_sq_batch 32×15 (Dist.L shape)", it(500_000), || {
         l2_sq_batch(std::hint::black_box(&q15), std::hint::black_box(&block), 15, &mut out);
         std::hint::black_box(&out);
     });
 
-    // SQ8 vs f32 kernel at the padded Dist.L shape (32 rows × 16 dims).
+    // f32 and SQ8 batch kernels at the padded Dist.L shape (32 rows ×
+    // 16 dims), scalar vs dispatched.
     let q16: Vec<f32> = (0..16).map(|_| rng.gaussian()).collect();
     let block16: Vec<f32> = (0..32 * 16).map(|_| rng.gaussian()).collect();
     let codes16: Vec<u8> = (0..32 * 16).map(|_| (rng.f32() * 255.0) as u8).collect();
     let weight16: Vec<f32> = (0..16).map(|_| 0.01 + rng.f32()).collect();
-    common::time_it_json("kernel f32 l2_sq_batch 32x16", 500_000, || {
-        l2_sq_batch(std::hint::black_box(&q16), std::hint::black_box(&block16), 16, &mut out);
-        std::hint::black_box(&out);
-    });
-    common::time_it_json("kernel sq8 l2_sq_batch_sq8 32x16", 500_000, || {
-        l2_sq_batch_sq8(
-            std::hint::black_box(&q16),
-            std::hint::black_box(&codes16),
-            16,
-            std::hint::black_box(&weight16),
-            &mut out,
-        );
-        std::hint::black_box(&out);
-    });
+    let ns = snap.time(
+        "kernel_f32_batch_32x16_scalar_ns",
+        "kernel f32 l2_sq_batch 32x16 scalar",
+        it(500_000),
+        || {
+            (scalar.l2_sq_batch)(
+                std::hint::black_box(&q16),
+                std::hint::black_box(&block16),
+                16,
+                &mut out,
+            );
+            std::hint::black_box(&out);
+        },
+    );
+    let ns_d = snap.time(
+        "kernel_f32_batch_32x16_ns",
+        "kernel f32 l2_sq_batch 32x16 dispatched",
+        it(500_000),
+        || {
+            l2_sq_batch(std::hint::black_box(&q16), std::hint::black_box(&block16), 16, &mut out);
+            std::hint::black_box(&out);
+        },
+    );
+    snap.record("speedup_f32_batch_32x16", ns / ns_d);
+    let ns = snap.time(
+        "kernel_sq8_batch_32x16_scalar_ns",
+        "kernel sq8 l2_sq_batch_sq8 32x16 scalar",
+        it(500_000),
+        || {
+            (scalar.l2_sq_batch_sq8)(
+                std::hint::black_box(&q16),
+                std::hint::black_box(&codes16),
+                16,
+                std::hint::black_box(&weight16),
+                &mut out,
+            );
+            std::hint::black_box(&out);
+        },
+    );
+    let ns_d = snap.time(
+        "kernel_sq8_batch_32x16_ns",
+        "kernel sq8 l2_sq_batch_sq8 32x16 dispatched",
+        it(500_000),
+        || {
+            l2_sq_batch_sq8(
+                std::hint::black_box(&q16),
+                std::hint::black_box(&codes16),
+                16,
+                std::hint::black_box(&weight16),
+                &mut out,
+            );
+            std::hint::black_box(&out);
+        },
+    );
+    snap.record("speedup_sq8_batch_32x16", ns / ns_d);
 
-    println!("visited set:");
+    println!("visited set (word-packed u64 bitmap vs legacy u16-mark):");
     let mut vs = VisitedSet::new(1_000_000);
-    common::time_it("clear (epoch bump, 1M slots)", 1_000_000, || {
+    let ns = common::time_it("clear (epoch bump, 1M slots)", it(1_000_000), || {
         vs.clear();
     });
+    snap.record("visited_clear_packed_ns", ns);
     let mut i = 0u32;
-    common::time_it("insert+contains", 1_000_000, || {
+    let ns = snap.time("visited_insert_packed_ns", "insert+contains (packed)", it(1_000_000), || {
         i = i.wrapping_add(2_654_435_761) % 1_000_000;
         std::hint::black_box(vs.insert(i));
     });
+    let mut wide = WideVisitedSet::new(1_000_000);
+    let mut i = 0u32;
+    let ns_w =
+        snap.time("visited_insert_wide_ns", "insert+contains (wide legacy)", it(1_000_000), || {
+            i = i.wrapping_add(2_654_435_761) % 1_000_000;
+            std::hint::black_box(wide.insert(i));
+        });
+    println!(
+        "  (resident: {} B packed vs {} B wide; insert ratio {:.2})",
+        vs.resident_bytes(),
+        wide.resident_bytes(),
+        ns_w / ns
+    );
 
     println!("full-stack (small workbench):");
     let w = common::bench_workbench();
     let pca = PcaModel::fit(&w.base, 15, 3);
     let qhigh = w.queries.row(0).to_vec();
     let mut proj = vec![0f32; 15];
-    common::time_it("pca project 128→15", 200_000, || {
+    common::time_it("pca project 128→15", it(200_000), || {
         pca.project(std::hint::black_box(&qhigh), &mut proj);
         std::hint::black_box(&proj);
     });
@@ -82,14 +155,17 @@ fn main() {
     let phnsw = w.phnsw(PhnswParams::default());
     let nq = w.queries.len();
     let mut qi = 0usize;
-    common::time_it("hnsw.search (ef=10)", 2_000, || {
+    let ns = snap.time("hnsw_search_ns", "hnsw.search (ef=10)", it(2_000).max(200), || {
         qi = (qi + 1) % nq;
         std::hint::black_box(hnsw.search(w.queries.row(qi)));
     });
-    common::time_it("phnsw.search (paper k-schedule)", 2_000, || {
-        qi = (qi + 1) % nq;
-        std::hint::black_box(phnsw.search(w.queries.row(qi)));
-    });
+    snap.record("hnsw_qps", 1e9 / ns);
+    let ns =
+        snap.time("phnsw_search_ns", "phnsw.search (paper k-schedule)", it(2_000).max(200), || {
+            qi = (qi + 1) % nq;
+            std::hint::black_box(phnsw.search(w.queries.row(qi)));
+        });
+    snap.record("phnsw_qps", 1e9 / ns);
 
     println!("graph adjacency (neighbor fetch, pseudo-random node order):");
     let g = w.graph.as_ref();
@@ -102,14 +178,14 @@ fn main() {
     let n_nodes = g.len() as u32;
     let mut acc = 0u64;
     let mut i = 0u32;
-    common::time_it("neighbors(node, 0) — CSR (frozen)", 2_000_000, || {
+    common::time_it("neighbors(node, 0) — CSR (frozen)", it(2_000_000), || {
         i = i.wrapping_mul(1_664_525).wrapping_add(1_013_904_223);
         let node = i % n_nodes;
         let nbrs = g.neighbors(std::hint::black_box(node), 0);
         acc = acc.wrapping_add(nbrs.iter().map(|&x| x as u64).sum::<u64>());
     });
     i = 0;
-    common::time_it("neighbors(node, 0) — nested Vec (legacy)", 2_000_000, || {
+    common::time_it("neighbors(node, 0) — nested Vec (legacy)", it(2_000_000), || {
         i = i.wrapping_mul(1_664_525).wrapping_add(1_013_904_223);
         let node = i % n_nodes;
         let lists = &nested[std::hint::black_box(node) as usize];
@@ -119,8 +195,9 @@ fn main() {
     std::hint::black_box(acc);
 
     println!("store codecs (filter scoring, one 32-neighbor adjacency list):");
-    // Gathered-block batch scoring (what PcaFilterScorer::expand now
-    // does) vs the per-row row()+l2_sq loop it replaced, on both codecs.
+    // Gathered-block batch scoring (what PcaFilterScorer::expand does)
+    // vs the per-row row()+l2_sq loop it replaced, on both codecs — the
+    // filter-path ns/hop numbers of the snapshot.
     let low_f32 = F32Store::from_set(&w.base_low);
     let low_sq8 = Sq8Store::from_set(&w.base_low);
     let n_low = w.base_low.len() as u32;
@@ -141,12 +218,12 @@ fn main() {
     let mut scratch = StoreScratch::new();
     let mut dists = vec![0f32; 32];
     low_f32.prepare_query(&qlow, &mut scratch);
-    common::time_it_json("filter f32 gathered block 32 nbrs", 200_000, || {
+    snap.time("filter_f32_block32_ns", "filter f32 gathered block 32 nbrs", it(200_000), || {
         let ids = next_ids();
         low_f32.score_block(&mut scratch, std::hint::black_box(&ids), &mut dists);
         std::hint::black_box(&dists);
     });
-    common::time_it_json("filter f32 per-row (legacy path) 32 nbrs", 200_000, || {
+    common::time_it_json("filter f32 per-row (legacy path) 32 nbrs", it(200_000), || {
         let ids = next_ids();
         for (lane, &id) in ids.iter().enumerate() {
             dists[lane] = l2_sq(std::hint::black_box(&qlow), w.base_low.row(id as usize));
@@ -154,7 +231,7 @@ fn main() {
         std::hint::black_box(&dists);
     });
     low_sq8.prepare_query(&qlow, &mut scratch);
-    common::time_it_json("filter sq8 gathered block 32 nbrs", 200_000, || {
+    snap.time("filter_sq8_block32_ns", "filter sq8 gathered block 32 nbrs", it(200_000), || {
         let ids = next_ids();
         low_sq8.score_block(&mut scratch, std::hint::black_box(&ids), &mut dists);
         std::hint::black_box(&dists);
@@ -167,12 +244,12 @@ fn main() {
 
     println!("batch engine API:");
     let qrefs: Vec<&[f32]> = (0..64).map(|j| w.queries.row(j % nq)).collect();
-    common::time_it("phnsw.search ×64 (sequential)", 30, || {
+    common::time_it("phnsw.search ×64 (sequential)", it(30).max(5), || {
         for q in &qrefs {
             std::hint::black_box(phnsw.search(q));
         }
     });
-    common::time_it("phnsw.search_batch 64q (scoped threads)", 30, || {
+    common::time_it("phnsw.search_batch 64q (scoped threads)", it(30).max(5), || {
         std::hint::black_box(phnsw.search_batch(&qrefs));
     });
 
@@ -189,11 +266,11 @@ fn main() {
         .iter()
         .map(|&id| (l2_sq(trim_q, w.base.row(id as usize)), id))
         .collect();
-    common::time_it_json("shrink trim 33 nbrs cached dists", 50_000, || {
+    common::time_it_json("shrink trim 33 nbrs cached dists", it(50_000), || {
         let kept = select_neighbors_heuristic(&w.base, trim_q, cached.clone(), 32);
         std::hint::black_box(kept);
     });
-    common::time_it_json("shrink trim 33 nbrs recompute dists (legacy)", 50_000, || {
+    common::time_it_json("shrink trim 33 nbrs recompute dists (legacy)", it(50_000), || {
         let cands: Vec<(f32, u32)> = trim_ids
             .iter()
             .map(|&id| (l2_sq(std::hint::black_box(trim_q), w.base.row(id as usize)), id))
@@ -206,7 +283,8 @@ fn main() {
     // Wall-clock index build, monolithic vs 4 shards on 4 threads — the
     // acceptance series for the segment layer (ms, not ns/iter: one full
     // build per measurement).
-    let seg_n = common::env_usize("PHNSW_BENCH_BUILD_N", 8_000);
+    let seg_default = if common::quick_mode() { 3_000 } else { 8_000 };
+    let seg_n = common::env_usize("PHNSW_BENCH_BUILD_N", seg_default);
     let seg_base = {
         use phnsw::dataset::synthetic::{generate, SyntheticConfig};
         let cfg = SyntheticConfig { n_base: seg_n, n_queries: 1, ..SyntheticConfig::default() };
@@ -226,4 +304,6 @@ fn main() {
         "{{\"bench\":\"segmented build S=4 T=4 n={seg_n}\",\"ms\":{ms_s4:.1},\"speedup_vs_s1\":{:.2}}}",
         ms_s1 / ms_s4
     );
+
+    snap.write();
 }

@@ -160,6 +160,25 @@ impl HnswGraph {
         }
     }
 
+    /// Hint the adjacency row of `node` at `level` into cache (see
+    /// [`crate::prefetch`]). The beam core calls this for the *next*
+    /// candidate while the current one's neighbors are being scored, so
+    /// the CSR row is warm when the walk reaches it. CSR-only: staging
+    /// adjacency is build-time (nested `Vec`s, no stable layout to warm)
+    /// and out-of-range nodes are ignored.
+    #[inline]
+    pub fn prefetch_neighbors(&self, node: u32, level: usize) {
+        if let Adjacency::Csr(levels) = &self.adjacency {
+            if let Some(lv) = levels.get(level) {
+                let i = node as usize;
+                if i + 1 < lv.offsets.len() {
+                    let (s, e) = (lv.offsets[i] as usize, lv.offsets[i + 1] as usize);
+                    crate::prefetch::prefetch_slice(&lv.neighbors[s..e]);
+                }
+            }
+        }
+    }
+
     /// The raw `(offsets, neighbors)` arrays of one frozen level, or
     /// `None` when the graph is still in staging form (or the level does
     /// not exist). Lets the serializer write the CSR image directly

@@ -44,6 +44,7 @@ pub mod graph;
 pub mod hw;
 pub mod metrics;
 pub mod pca;
+pub mod prefetch;
 pub mod proptest_lite;
 pub mod rng;
 pub mod reports;

@@ -188,6 +188,13 @@ pub(crate) fn beam_search_layer<S: NeighborScorer>(
             break;
         }
         let nbrs = graph.neighbors(c, layer);
+        // While this hop's neighbors are scored, warm the adjacency row
+        // of the best remaining candidate — the likely next expansion.
+        // Pop order is data-dependent, so the hardware prefetcher cannot
+        // anticipate the CSR row on its own.
+        if let Some(MinDist(_, nxt)) = beam.candidates.peek() {
+            graph.prefetch_neighbors(*nxt, layer);
+        }
         beam.inserts = 0;
         beam.removals = 0;
         let counters = scorer.expand(nbrs, visited, &mut beam);
@@ -231,7 +238,13 @@ impl NeighborScorer for HighDimScorer<'_> {
         beam: &mut BeamState<'_>,
     ) -> HopCounters {
         let mut highdim = 0u32;
-        for &nb in nbrs {
+        for (i, &nb) in nbrs.iter().enumerate() {
+            // Warm the next neighbor's row while this one is scored: the
+            // gather is id-indexed, so consecutive rows share no locality
+            // the hardware could exploit.
+            if let Some(&nxt) = nbrs.get(i + 1) {
+                crate::prefetch::prefetch_slice(self.data.row(nxt as usize));
+            }
             if visited.insert(nb) {
                 let dn = l2_sq(self.q, self.data.row(nb as usize));
                 highdim += 1;

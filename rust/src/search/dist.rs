@@ -1,94 +1,36 @@
-//! Distance kernels for the rust hot path.
+//! Distance kernels for the rust hot path — the dispatch wrappers.
 //!
-//! `l2_sq` is the workhorse: 8-wide unrolled squared-L2 with four
-//! independent accumulators so the compiler can keep FMA pipes busy and
-//! auto-vectorize. The scalar reference lives in
-//! [`crate::dataset::l2_sq_scalar`]; equivalence is tested below and
-//! property-tested in `rust/tests/properties.rs`.
+//! The implementations live in [`super::kernels`]: a portable
+//! lane-coherent scalar set (the bitwise reference) plus explicit
+//! AVX2+FMA and NEON sets, one of which is selected per process at first
+//! use (`PHNSW_KERNEL` env override, feature detection otherwise). The
+//! wrappers here are what the rest of the crate calls; they cost one
+//! predictable indirect call through the resolved [`kernels::KernelSet`].
+//!
+//! Contract: every variant is bitwise identical to the scalar set on
+//! finite inputs (same FMA usage, same reduction tree, same tail order),
+//! and agrees up to NaN identity on non-finite inputs — pinned by
+//! `rust/tests/kernels.rs`. The scalar reference for *values* remains
+//! [`crate::dataset::l2_sq_scalar`], property-tested in
+//! `rust/tests/properties.rs`.
 
-/// Squared Euclidean distance.
-///
-/// Lane-coherent 8-wide accumulator: each SIMD lane keeps its own partial
-/// sum (`acc[j] += d[j]²`), which LLVM maps 1:1 onto AVX2/AVX-512 FMA
-/// lanes (a cross-lane pattern like `s0 += d0² + d4²` defeats the
-/// vectorizer — measured 7× slower, see EXPERIMENTS.md §Perf).
+use super::kernels;
+use super::kernels::scalar::hsum8;
+
+/// Squared Euclidean distance (dispatched: scalar / AVX2+FMA / NEON).
 #[inline]
 pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0f32; 8];
-    let ac = a.chunks_exact(8);
-    let bc = b.chunks_exact(8);
-    let (atail, btail) = (ac.remainder(), bc.remainder());
-    for (ca, cb) in ac.zip(bc) {
-        for j in 0..8 {
-            let d = ca[j] - cb[j];
-            acc[j] = d.mul_add(d, acc[j]);
-        }
-    }
-    let mut tail = 0f32;
-    for (x, y) in atail.iter().zip(btail) {
-        let d = x - y;
-        tail += d * d;
-    }
-    hsum8(&acc) + tail
-}
-
-/// The exact lane reduction `l2_sq` uses — every batched kernel must
-/// reduce identically so batch results stay bitwise equal to per-row
-/// calls (tests pin this).
-#[inline]
-fn hsum8(acc: &[f32; 8]) -> f32 {
-    ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]))
+    (kernels::active().l2_sq)(a, b)
 }
 
 /// Batched distances: query against `k` contiguous rows of `block`
 /// (row-major `k × dim`). Mirrors the 16-lane `Dist.L` unit: the caller
 /// hands one packed neighbor block (DB layout ③, [`crate::store`]'s
-/// gather path) and receives all lane distances in `out[..k]`.
-///
-/// Lane-coherent: rows are processed two at a time, each with its own
-/// 8-wide accumulator bank, so the FMA pipes see two independent
-/// dependency chains per SIMD lane instead of one serial chain per row.
-/// Per-row results are bitwise identical to [`l2_sq`] (same accumulation
-/// and reduction order).
+/// gather path) and receives all lane distances in `out[..k]`. Per-row
+/// results are bitwise identical to [`l2_sq`]; an empty block is a no-op.
 #[inline]
 pub fn l2_sq_batch(query: &[f32], block: &[f32], dim: usize, out: &mut [f32]) {
-    debug_assert!(dim > 0);
-    debug_assert_eq!(block.len() % dim, 0);
-    let k = block.len() / dim;
-    debug_assert!(out.len() >= k);
-    let mut lane = 0;
-    while lane + 2 <= k {
-        let r0 = &block[lane * dim..(lane + 1) * dim];
-        let r1 = &block[(lane + 1) * dim..(lane + 2) * dim];
-        let mut acc0 = [0f32; 8];
-        let mut acc1 = [0f32; 8];
-        let qc = query.chunks_exact(8);
-        let c0 = r0.chunks_exact(8);
-        let c1 = r1.chunks_exact(8);
-        let (qt, t0, t1) = (qc.remainder(), c0.remainder(), c1.remainder());
-        for ((cq, ca), cb) in qc.zip(c0).zip(c1) {
-            for j in 0..8 {
-                let d0 = cq[j] - ca[j];
-                acc0[j] = d0.mul_add(d0, acc0[j]);
-                let d1 = cq[j] - cb[j];
-                acc1[j] = d1.mul_add(d1, acc1[j]);
-            }
-        }
-        let (mut tail0, mut tail1) = (0f32, 0f32);
-        for j in 0..qt.len() {
-            let d0 = qt[j] - t0[j];
-            tail0 += d0 * d0;
-            let d1 = qt[j] - t1[j];
-            tail1 += d1 * d1;
-        }
-        out[lane] = hsum8(&acc0) + tail0;
-        out[lane + 1] = hsum8(&acc1) + tail1;
-        lane += 2;
-    }
-    if lane < k {
-        out[lane] = l2_sq(query, &block[lane * dim..(lane + 1) * dim]);
-    }
+    (kernels::active().l2_sq_batch)(query, block, dim, out)
 }
 
 /// Int8 sibling of [`l2_sq_batch`] for the SQ8 codec: the query arrives
@@ -105,53 +47,52 @@ pub fn l2_sq_batch_sq8(
     weight: &[f32],
     out: &mut [f32],
 ) {
-    debug_assert!(dim > 0);
-    debug_assert_eq!(codes.len() % dim, 0);
-    debug_assert_eq!(query_codes.len(), dim);
-    debug_assert_eq!(weight.len(), dim);
-    let k = codes.len() / dim;
-    debug_assert!(out.len() >= k);
-    for (lane, row) in codes.chunks_exact(dim).enumerate() {
-        let mut acc = [0f32; 8];
-        let qc = query_codes.chunks_exact(8);
-        let wc = weight.chunks_exact(8);
-        let rc = row.chunks_exact(8);
-        let (qt, wt, rt) = (qc.remainder(), wc.remainder(), rc.remainder());
-        for ((cq, cw), cr) in qc.zip(wc).zip(rc) {
-            for j in 0..8 {
-                let d = cq[j] - cr[j] as f32;
-                acc[j] = (cw[j] * d).mul_add(d, acc[j]);
-            }
-        }
-        let mut tail = 0f32;
-        for j in 0..qt.len() {
-            let d = qt[j] - rt[j] as f32;
-            tail += wt[j] * d * d;
-        }
-        out[lane] = hsum8(&acc) + tail;
-    }
+    (kernels::active().l2_sq_batch_sq8)(query_codes, codes, dim, weight, out)
 }
 
 /// Inner-product form of squared L2: `‖a‖² + ‖b‖² − 2·a·b`. This is the
 /// MXU-friendly decomposition the Pallas `dist_h` kernel uses for large
-/// candidate tiles; exposed here so tests can check both formulations agree.
+/// candidate tiles; exposed here so tests can check both formulations
+/// agree. The dot product runs the same 8-wide accumulator-bank pattern
+/// as the scalar `l2_sq`, so comparing the two formulations measures the
+/// decomposition — not a deliberately slow serial loop.
 #[inline]
 pub fn l2_sq_via_dot(a: &[f32], b: &[f32], norm_a_sq: f32, norm_b_sq: f32) -> f32 {
-    let mut dot = 0f32;
-    for i in 0..a.len() {
-        dot += a[i] * b[i];
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0f32; 8];
+    let ac = a.chunks_exact(8);
+    let bc = b.chunks_exact(8);
+    let (atail, btail) = (ac.remainder(), bc.remainder());
+    for (ca, cb) in ac.zip(bc) {
+        for j in 0..8 {
+            acc[j] = ca[j].mul_add(cb[j], acc[j]);
+        }
     }
+    let mut tail = 0f32;
+    for (x, y) in atail.iter().zip(btail) {
+        tail += x * y;
+    }
+    let dot = hsum8(&acc) + tail;
     (norm_a_sq + norm_b_sq - 2.0 * dot).max(0.0)
 }
 
-/// Squared norm helper for the dot formulation.
+/// Squared norm helper for the dot formulation — same accumulator-bank
+/// pattern as [`l2_sq_via_dot`].
 #[inline]
 pub fn norm_sq(a: &[f32]) -> f32 {
-    let mut s = 0f32;
-    for &x in a {
-        s += x * x;
+    let mut acc = [0f32; 8];
+    let ac = a.chunks_exact(8);
+    let atail = ac.remainder();
+    for ca in ac {
+        for j in 0..8 {
+            acc[j] = ca[j].mul_add(ca[j], acc[j]);
+        }
     }
-    s
+    let mut tail = 0f32;
+    for &x in atail {
+        tail += x * x;
+    }
+    hsum8(&acc) + tail
 }
 
 #[cfg(test)]
@@ -176,6 +117,15 @@ mod tests {
     }
 
     #[test]
+    fn wrapper_matches_active_kernel_bitwise() {
+        let mut rng = Pcg32::new(9);
+        let a: Vec<f32> = (0..96).map(|_| rng.gaussian()).collect();
+        let b: Vec<f32> = (0..96).map(|_| rng.gaussian()).collect();
+        let ks = kernels::active();
+        assert_eq!(l2_sq(&a, &b).to_bits(), (ks.l2_sq)(&a, &b).to_bits());
+    }
+
+    #[test]
     fn batch_matches_individual() {
         let mut rng = Pcg32::new(2);
         // Odd/even row counts and tail/no-tail dims all go through the
@@ -190,6 +140,19 @@ mod tests {
                 assert_eq!(out[lane], l2_sq(&q, row), "dim={dim} k={k} lane={lane}");
             }
         }
+    }
+
+    #[test]
+    fn batch_with_empty_block_is_a_noop() {
+        // k == 0 used to be guarded only by debug_asserts; it must leave
+        // `out` untouched on every kernel variant.
+        let q = [1.0f32; 16];
+        let mut out = [f32::NAN; 4];
+        l2_sq_batch(&q, &[], 16, &mut out);
+        assert!(out.iter().all(|x| x.is_nan()), "out must be untouched");
+        let w = [1.0f32; 16];
+        l2_sq_batch_sq8(&q, &[], 16, &w, &mut out);
+        assert!(out.iter().all(|x| x.is_nan()), "out must be untouched");
     }
 
     #[test]
@@ -256,8 +219,28 @@ mod tests {
     }
 
     #[test]
+    fn dot_formulation_handles_tails_and_short_vectors() {
+        // The accumulator-bank rewrite must stay correct for dims below,
+        // at, and just past the 8-lane chunk boundary.
+        let mut rng = Pcg32::new(13);
+        for n in [1usize, 3, 7, 8, 9, 15, 16, 17] {
+            let a: Vec<f32> = (0..n).map(|_| rng.gaussian()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.gaussian()).collect();
+            let direct = l2_sq(&a, &b);
+            let viadot = l2_sq_via_dot(&a, &b, norm_sq(&a), norm_sq(&b));
+            assert!(
+                (direct - viadot).abs() <= 1e-3 * direct.max(1.0),
+                "n={n}: {direct} vs {viadot}"
+            );
+            let brute: f32 = a.iter().map(|x| x * x).sum();
+            assert!((norm_sq(&a) - brute).abs() <= 1e-4 * brute.max(1.0), "n={n}");
+        }
+    }
+
+    #[test]
     fn zero_length_distance_is_zero() {
         assert_eq!(l2_sq(&[], &[]), 0.0);
+        assert_eq!(norm_sq(&[]), 0.0);
     }
 
     #[test]

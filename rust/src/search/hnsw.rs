@@ -103,6 +103,9 @@ impl HnswSearcher {
         }
         let mut scratch = self.take_scratch();
         let ep = self.graph.entry_point();
+        // Warm the entry point's top-layer adjacency while its seed
+        // distance computes — the walk's very first pointer chase.
+        self.graph.prefetch_neighbors(ep, self.graph.max_level());
         let mut entry = vec![(l2_sq(q, self.data.row(ep as usize)), ep)];
         for layer in (1..=self.graph.max_level()).rev() {
             entry = self.search_layer(

@@ -1,0 +1,683 @@
+//! Runtime-dispatched SIMD distance kernels.
+//!
+//! Three implementations of the hot-path kernel triple (`l2_sq`,
+//! `l2_sq_batch`, `l2_sq_batch_sq8`):
+//!
+//! * [`scalar`] — the lane-coherent portable code (the bitwise
+//!   *reference*; always compiled, always available).
+//! * [`avx2`] — explicit AVX2+FMA intrinsics (x86_64, selected when the
+//!   host reports both features at startup).
+//! * [`neon`] — explicit NEON intrinsics (aarch64 baseline feature, so no
+//!   runtime detection is needed there).
+//!
+//! One [`KernelSet`] is resolved per process via [`active`]: the
+//! `PHNSW_KERNEL` env var (`scalar` | `avx2` | `neon` | `auto`) wins if
+//! set and available, otherwise feature detection picks the best set.
+//! The choice is cached in a `OnceLock` — changing the env var after the
+//! first distance computation has no effect.
+//!
+//! ## The bitwise-parity contract
+//!
+//! Every SIMD variant must produce results **bitwise identical** to
+//! [`scalar`] on finite inputs. This is not best-effort: the engines'
+//! determinism tests (`search_batch_matches_sequential_bitwise`, the
+//! segmented-merge equivalence) compare full result vectors with `==`,
+//! so a kernel swap that reassociates even one addition would look like
+//! an engine bug. The contract is achievable because the scalar code is
+//! already lane-coherent:
+//!
+//! * 8 independent lane accumulators updated with `f32::mul_add` map 1:1
+//!   onto one 8-lane FMA vector register (`_mm256_fmadd_ps`, paired
+//!   `vfmaq_f32`);
+//! * the reduction tree is fixed as
+//!   `((a0+a4)+(a1+a5)) + ((a2+a6)+(a3+a7))` ([`scalar::hsum8`]) and
+//!   each SIMD variant replicates exactly that association;
+//! * scalar tails (`dim % 8` lanes) are executed with the same
+//!   *non-fused* `d*d` / `w*d*d` expressions in every variant.
+//!
+//! Non-finite inputs agree up to NaN *identity* (a NaN result is NaN in
+//! every variant, but payload bits may differ between a libm `fmaf`
+//! fallback and hardware FMA). `rust/tests/kernels.rs` pins all of this
+//! across dims, row counts, and variants.
+
+use std::sync::OnceLock;
+
+/// One complete set of distance kernels. The three signatures mirror the
+/// public wrappers in [`super::dist`]; callers go through the wrappers,
+/// which cost one indirect call through the process-wide table.
+#[derive(Clone, Copy)]
+pub struct KernelSet {
+    /// Variant label: `"scalar"` | `"avx2"` | `"neon"`.
+    pub name: &'static str,
+    /// Squared L2 between two equal-length vectors.
+    pub l2_sq: fn(&[f32], &[f32]) -> f32,
+    /// Batched squared L2 of one query against `k` contiguous rows.
+    pub l2_sq_batch: fn(&[f32], &[f32], usize, &mut [f32]),
+    /// SQ8 sibling: weighted squared L2 against u8 code rows.
+    pub l2_sq_batch_sq8: fn(&[f32], &[u8], usize, &[f32], &mut [f32]),
+}
+
+/// The portable lane-coherent implementation — always available, and the
+/// bitwise reference every other set is tested against.
+pub static SCALAR: KernelSet = KernelSet {
+    name: "scalar",
+    l2_sq: scalar::l2_sq,
+    l2_sq_batch: scalar::l2_sq_batch,
+    l2_sq_batch_sq8: scalar::l2_sq_batch_sq8,
+};
+
+/// Explicit AVX2+FMA kernels (guard with [`avx2::available`]).
+#[cfg(target_arch = "x86_64")]
+pub static AVX2: KernelSet = KernelSet {
+    name: "avx2",
+    l2_sq: avx2::l2_sq,
+    l2_sq_batch: avx2::l2_sq_batch,
+    l2_sq_batch_sq8: avx2::l2_sq_batch_sq8,
+};
+
+/// Explicit NEON kernels (baseline feature on aarch64).
+#[cfg(target_arch = "aarch64")]
+pub static NEON: KernelSet = KernelSet {
+    name: "neon",
+    l2_sq: neon::l2_sq,
+    l2_sq_batch: neon::l2_sq_batch,
+    l2_sq_batch_sq8: neon::l2_sq_batch_sq8,
+};
+
+/// The process-wide kernel set: resolved once from `PHNSW_KERNEL`
+/// (or feature detection when unset), then cached for the process
+/// lifetime. See [`select`] for the resolution rules.
+pub fn active() -> &'static KernelSet {
+    static ACTIVE: OnceLock<&'static KernelSet> = OnceLock::new();
+    ACTIVE.get_or_init(|| select(std::env::var("PHNSW_KERNEL").ok().as_deref()))
+}
+
+/// The scalar reference set (for parity tests and scalar-vs-SIMD
+/// benchmarking regardless of what [`active`] resolved to).
+pub fn scalar_set() -> &'static KernelSet {
+    &SCALAR
+}
+
+/// The set auto-detection picks on this host: AVX2+FMA when the CPU
+/// reports both, NEON on aarch64, scalar otherwise.
+#[allow(unreachable_code)] // the trailing scalar fallback is dead on aarch64
+pub fn best_available() -> &'static KernelSet {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2::available() {
+            return &AVX2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return &NEON;
+    }
+    &SCALAR
+}
+
+/// Look up a variant by name, returning it only when it is both compiled
+/// for this architecture *and* supported by the running host.
+pub fn by_name(name: &str) -> Option<&'static KernelSet> {
+    match name {
+        "scalar" => Some(&SCALAR),
+        #[cfg(target_arch = "x86_64")]
+        "avx2" if avx2::available() => Some(&AVX2),
+        #[cfg(target_arch = "aarch64")]
+        "neon" => Some(&NEON),
+        _ => None,
+    }
+}
+
+/// Resolve a kernel request (the `PHNSW_KERNEL` env value) to a set:
+/// `None`/`"auto"`/`""` pick [`best_available`]; a known, host-supported
+/// name picks that set; anything else falls back to scalar with a
+/// warning — a debug knob must degrade, never abort a server.
+pub fn select(request: Option<&str>) -> &'static KernelSet {
+    let Some(req) = request else {
+        return best_available();
+    };
+    match req {
+        "" | "auto" => best_available(),
+        name => by_name(name).unwrap_or_else(|| {
+            log::warn!("PHNSW_KERNEL={name}: unknown or unsupported on this host; using scalar");
+            &SCALAR
+        }),
+    }
+}
+
+/// Every kernel set usable on this host, scalar first — the parity tests
+/// sweep this list so the same test binary covers whatever hardware it
+/// runs on.
+pub fn all_available() -> Vec<&'static KernelSet> {
+    let mut v: Vec<&'static KernelSet> = vec![&SCALAR];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2::available() {
+            v.push(&AVX2);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        v.push(&NEON);
+    }
+    v
+}
+
+pub mod scalar {
+    //! Portable lane-coherent kernels — the bitwise reference.
+    //!
+    //! Each SIMD lane keeps its own partial sum (`acc[j] += d[j]²` via
+    //! `f32::mul_add`), which LLVM maps 1:1 onto AVX2/AVX-512 FMA lanes
+    //! even without explicit intrinsics (a cross-lane pattern like
+    //! `s0 += d0² + d4²` defeats the vectorizer — measured 7× slower,
+    //! see EXPERIMENTS.md §Perf). The explicit variants exist because
+    //! autovectorization still leaves the reduction and the SQ8 u8→f32
+    //! widening on the table.
+
+    /// The exact lane reduction every kernel variant must use — batch
+    /// results stay bitwise equal to per-row calls, and SIMD results
+    /// bitwise equal to scalar, only because this association is fixed.
+    #[inline]
+    pub(crate) fn hsum8(acc: &[f32; 8]) -> f32 {
+        ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]))
+    }
+
+    /// One row's accumulation, shared by [`l2_sq`] and the batch kernel's
+    /// odd-row remainder so a batched lane is bitwise identical to a
+    /// per-row call without re-entering the dispatch table.
+    #[inline]
+    fn l2_sq_row(a: &[f32], b: &[f32]) -> f32 {
+        let mut acc = [0f32; 8];
+        let ac = a.chunks_exact(8);
+        let bc = b.chunks_exact(8);
+        let (atail, btail) = (ac.remainder(), bc.remainder());
+        for (ca, cb) in ac.zip(bc) {
+            for j in 0..8 {
+                let d = ca[j] - cb[j];
+                acc[j] = d.mul_add(d, acc[j]);
+            }
+        }
+        let mut tail = 0f32;
+        for (x, y) in atail.iter().zip(btail) {
+            let d = x - y;
+            tail += d * d;
+        }
+        hsum8(&acc) + tail
+    }
+
+    /// Squared Euclidean distance (8-wide accumulator bank).
+    #[inline]
+    pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        l2_sq_row(a, b)
+    }
+
+    /// Batched distances: query against `k` contiguous rows of `block`
+    /// (row-major `k × dim`). Rows are processed two at a time, each with
+    /// its own 8-wide accumulator bank, so the FMA pipes see two
+    /// independent dependency chains per lane. An empty block (`k == 0`)
+    /// is a no-op; the remainder row reuses the per-row accumulation, not
+    /// the dispatch table.
+    pub fn l2_sq_batch(query: &[f32], block: &[f32], dim: usize, out: &mut [f32]) {
+        if block.is_empty() {
+            return;
+        }
+        debug_assert!(dim > 0);
+        debug_assert_eq!(query.len(), dim);
+        debug_assert_eq!(block.len() % dim, 0);
+        let k = block.len() / dim;
+        debug_assert!(out.len() >= k);
+        let mut lane = 0;
+        while lane + 2 <= k {
+            let r0 = &block[lane * dim..(lane + 1) * dim];
+            let r1 = &block[(lane + 1) * dim..(lane + 2) * dim];
+            let mut acc0 = [0f32; 8];
+            let mut acc1 = [0f32; 8];
+            let qc = query.chunks_exact(8);
+            let c0 = r0.chunks_exact(8);
+            let c1 = r1.chunks_exact(8);
+            let (qt, t0, t1) = (qc.remainder(), c0.remainder(), c1.remainder());
+            for ((cq, ca), cb) in qc.zip(c0).zip(c1) {
+                for j in 0..8 {
+                    let d0 = cq[j] - ca[j];
+                    acc0[j] = d0.mul_add(d0, acc0[j]);
+                    let d1 = cq[j] - cb[j];
+                    acc1[j] = d1.mul_add(d1, acc1[j]);
+                }
+            }
+            let (mut tail0, mut tail1) = (0f32, 0f32);
+            for j in 0..qt.len() {
+                let d0 = qt[j] - t0[j];
+                tail0 += d0 * d0;
+                let d1 = qt[j] - t1[j];
+                tail1 += d1 * d1;
+            }
+            out[lane] = hsum8(&acc0) + tail0;
+            out[lane + 1] = hsum8(&acc1) + tail1;
+            lane += 2;
+        }
+        if lane < k {
+            out[lane] = l2_sq_row(query, &block[lane * dim..(lane + 1) * dim]);
+        }
+    }
+
+    /// SQ8 batch kernel: `out[lane] = Σ_d weight_d · (q̃_d − code_d)²`
+    /// over `k` contiguous u8 rows. Padded dimensions carry `weight = 0`
+    /// and contribute nothing. An empty block is a no-op.
+    pub fn l2_sq_batch_sq8(
+        query_codes: &[f32],
+        codes: &[u8],
+        dim: usize,
+        weight: &[f32],
+        out: &mut [f32],
+    ) {
+        if codes.is_empty() {
+            return;
+        }
+        debug_assert!(dim > 0);
+        debug_assert_eq!(codes.len() % dim, 0);
+        debug_assert_eq!(query_codes.len(), dim);
+        debug_assert_eq!(weight.len(), dim);
+        let k = codes.len() / dim;
+        debug_assert!(out.len() >= k);
+        for (lane, row) in codes.chunks_exact(dim).enumerate() {
+            let mut acc = [0f32; 8];
+            let qc = query_codes.chunks_exact(8);
+            let wc = weight.chunks_exact(8);
+            let rc = row.chunks_exact(8);
+            let (qt, wt, rt) = (qc.remainder(), wc.remainder(), rc.remainder());
+            for ((cq, cw), cr) in qc.zip(wc).zip(rc) {
+                for j in 0..8 {
+                    let d = cq[j] - cr[j] as f32;
+                    acc[j] = (cw[j] * d).mul_add(d, acc[j]);
+                }
+            }
+            let mut tail = 0f32;
+            for j in 0..qt.len() {
+                let d = qt[j] - rt[j] as f32;
+                tail += wt[j] * d * d;
+            }
+            out[lane] = hsum8(&acc) + tail;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2 {
+    //! Explicit AVX2+FMA kernels, bitwise identical to [`super::scalar`]
+    //! on finite inputs: one `_mm256_fmadd_ps` per 8-lane chunk matches
+    //! the scalar bank's per-lane `mul_add` sequence, [`hsum8`] replays
+    //! the scalar reduction tree, and tails use the same non-fused scalar
+    //! expressions.
+
+    use core::arch::x86_64::{
+        __m128i, __m256, _mm256_castps256_ps128, _mm256_cvtepi32_ps, _mm256_cvtepu8_epi32,
+        _mm256_extractf128_ps, _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_mul_ps,
+        _mm256_setzero_ps, _mm256_sub_ps, _mm_add_ps, _mm_cvtss_f32, _mm_hadd_ps,
+        _mm_loadl_epi64,
+    };
+
+    /// True when the running host supports this module's kernels.
+    pub fn available() -> bool {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+
+    /// Exactly [`super::scalar::hsum8`]'s association:
+    /// `((a0+a4)+(a1+a5)) + ((a2+a6)+(a3+a7))`.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum8(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        // [a0+a4, a1+a5, a2+a6, a3+a7]
+        let s = _mm_add_ps(lo, hi);
+        // [(a0+a4)+(a1+a5), (a2+a6)+(a3+a7), …]
+        let s = _mm_hadd_ps(s, s);
+        // lane 0: ((a0+a4)+(a1+a5)) + ((a2+a6)+(a3+a7))
+        let s = _mm_hadd_ps(s, s);
+        _mm_cvtss_f32(s)
+    }
+
+    /// Squared Euclidean distance.
+    pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        debug_assert!(available(), "avx2 kernel dispatched without avx2+fma");
+        // SAFETY: the dispatch table only hands out this set when
+        // `available()` holds (debug-asserted above).
+        unsafe { l2_sq_impl(a, b) }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn l2_sq_impl(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / 8;
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let va = _mm256_loadu_ps(pa.add(c * 8));
+            let vb = _mm256_loadu_ps(pb.add(c * 8));
+            let d = _mm256_sub_ps(va, vb);
+            acc = _mm256_fmadd_ps(d, d, acc);
+        }
+        let mut tail = 0f32;
+        for j in chunks * 8..n {
+            let d = a[j] - b[j];
+            tail += d * d;
+        }
+        hsum8(acc) + tail
+    }
+
+    /// Batched distances, same contract as [`super::scalar::l2_sq_batch`].
+    pub fn l2_sq_batch(query: &[f32], block: &[f32], dim: usize, out: &mut [f32]) {
+        if block.is_empty() {
+            return;
+        }
+        debug_assert!(dim > 0);
+        debug_assert_eq!(query.len(), dim);
+        debug_assert_eq!(block.len() % dim, 0);
+        debug_assert!(out.len() >= block.len() / dim);
+        // SAFETY: see `l2_sq`.
+        unsafe { l2_sq_batch_impl(query, block, dim, out) }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn l2_sq_batch_impl(query: &[f32], block: &[f32], dim: usize, out: &mut [f32]) {
+        let k = block.len() / dim;
+        let chunks = dim / 8;
+        let q = query.as_ptr();
+        let mut lane = 0;
+        while lane + 2 <= k {
+            let r0 = block.as_ptr().add(lane * dim);
+            let r1 = block.as_ptr().add((lane + 1) * dim);
+            let mut acc0 = _mm256_setzero_ps();
+            let mut acc1 = _mm256_setzero_ps();
+            for c in 0..chunks {
+                let vq = _mm256_loadu_ps(q.add(c * 8));
+                let d0 = _mm256_sub_ps(vq, _mm256_loadu_ps(r0.add(c * 8)));
+                acc0 = _mm256_fmadd_ps(d0, d0, acc0);
+                let d1 = _mm256_sub_ps(vq, _mm256_loadu_ps(r1.add(c * 8)));
+                acc1 = _mm256_fmadd_ps(d1, d1, acc1);
+            }
+            let (mut tail0, mut tail1) = (0f32, 0f32);
+            for j in chunks * 8..dim {
+                let d0 = query[j] - *r0.add(j);
+                tail0 += d0 * d0;
+                let d1 = query[j] - *r1.add(j);
+                tail1 += d1 * d1;
+            }
+            out[lane] = hsum8(acc0) + tail0;
+            out[lane + 1] = hsum8(acc1) + tail1;
+            lane += 2;
+        }
+        if lane < k {
+            out[lane] = l2_sq_impl(query, &block[lane * dim..(lane + 1) * dim]);
+        }
+    }
+
+    /// SQ8 batch kernel, same contract as
+    /// [`super::scalar::l2_sq_batch_sq8`]. u8 codes widen through
+    /// `_mm256_cvtepu8_epi32` + `_mm256_cvtepi32_ps` (exact for 0..=255),
+    /// and `(w·d)·d + acc` fuses exactly like the scalar
+    /// `(cw[j] * d).mul_add(d, acc[j])`.
+    pub fn l2_sq_batch_sq8(
+        query_codes: &[f32],
+        codes: &[u8],
+        dim: usize,
+        weight: &[f32],
+        out: &mut [f32],
+    ) {
+        if codes.is_empty() {
+            return;
+        }
+        debug_assert!(dim > 0);
+        debug_assert_eq!(codes.len() % dim, 0);
+        debug_assert_eq!(query_codes.len(), dim);
+        debug_assert_eq!(weight.len(), dim);
+        debug_assert!(out.len() >= codes.len() / dim);
+        // SAFETY: see `l2_sq`.
+        unsafe { l2_sq_batch_sq8_impl(query_codes, codes, dim, weight, out) }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn l2_sq_batch_sq8_impl(
+        query_codes: &[f32],
+        codes: &[u8],
+        dim: usize,
+        weight: &[f32],
+        out: &mut [f32],
+    ) {
+        let k = codes.len() / dim;
+        let chunks = dim / 8;
+        let q = query_codes.as_ptr();
+        let w = weight.as_ptr();
+        for lane in 0..k {
+            let row = codes.as_ptr().add(lane * dim);
+            let mut acc = _mm256_setzero_ps();
+            for c in 0..chunks {
+                let vq = _mm256_loadu_ps(q.add(c * 8));
+                let vw = _mm256_loadu_ps(w.add(c * 8));
+                let raw = _mm_loadl_epi64(row.add(c * 8) as *const __m128i);
+                let vr = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(raw));
+                let d = _mm256_sub_ps(vq, vr);
+                let wd = _mm256_mul_ps(vw, d);
+                acc = _mm256_fmadd_ps(wd, d, acc);
+            }
+            let mut tail = 0f32;
+            for j in chunks * 8..dim {
+                let d = query_codes[j] - *row.add(j) as f32;
+                tail += weight[j] * d * d;
+            }
+            out[lane] = hsum8(acc) + tail;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon {
+    //! Explicit NEON kernels (aarch64 baseline — no runtime detection),
+    //! bitwise identical to [`super::scalar`] on finite inputs: the
+    //! 8-lane scalar bank splits across two `float32x4_t` accumulators
+    //! (lanes 0–3 and 4–7), `vfmaq_f32` matches the per-lane `mul_add`
+    //! sequence, and [`hsum8`] replays the scalar reduction tree.
+
+    use core::arch::aarch64::{
+        float32x4_t, vaddq_f32, vcvtq_f32_u32, vdupq_n_f32, vfmaq_f32, vget_high_u16,
+        vget_low_u16, vgetq_lane_f32, vld1_u8, vld1q_f32, vmovl_u16, vmovl_u8, vmulq_f32,
+        vpaddq_f32, vsubq_f32,
+    };
+
+    /// Exactly [`super::scalar::hsum8`]'s association, with `lo` holding
+    /// lanes 0–3 and `hi` lanes 4–7 of the scalar bank.
+    #[inline]
+    unsafe fn hsum8(lo: float32x4_t, hi: float32x4_t) -> f32 {
+        // [a0+a4, a1+a5, a2+a6, a3+a7]
+        let s = vaddq_f32(lo, hi);
+        // [(a0+a4)+(a1+a5), (a2+a6)+(a3+a7), …]
+        let p = vpaddq_f32(s, s);
+        // ((a0+a4)+(a1+a5)) + ((a2+a6)+(a3+a7))
+        vgetq_lane_f32::<0>(p) + vgetq_lane_f32::<1>(p)
+    }
+
+    /// Squared Euclidean distance.
+    pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        // SAFETY: NEON is a baseline feature of every aarch64 target.
+        unsafe { l2_sq_impl(a, b) }
+    }
+
+    unsafe fn l2_sq_impl(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / 8;
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc_lo = vdupq_n_f32(0.0);
+        let mut acc_hi = vdupq_n_f32(0.0);
+        for c in 0..chunks {
+            let d_lo = vsubq_f32(vld1q_f32(pa.add(c * 8)), vld1q_f32(pb.add(c * 8)));
+            acc_lo = vfmaq_f32(acc_lo, d_lo, d_lo);
+            let d_hi = vsubq_f32(vld1q_f32(pa.add(c * 8 + 4)), vld1q_f32(pb.add(c * 8 + 4)));
+            acc_hi = vfmaq_f32(acc_hi, d_hi, d_hi);
+        }
+        let mut tail = 0f32;
+        for j in chunks * 8..n {
+            let d = a[j] - b[j];
+            tail += d * d;
+        }
+        hsum8(acc_lo, acc_hi) + tail
+    }
+
+    /// Batched distances, same contract as [`super::scalar::l2_sq_batch`].
+    pub fn l2_sq_batch(query: &[f32], block: &[f32], dim: usize, out: &mut [f32]) {
+        if block.is_empty() {
+            return;
+        }
+        debug_assert!(dim > 0);
+        debug_assert_eq!(query.len(), dim);
+        debug_assert_eq!(block.len() % dim, 0);
+        debug_assert!(out.len() >= block.len() / dim);
+        // SAFETY: NEON is a baseline feature of every aarch64 target.
+        unsafe { l2_sq_batch_impl(query, block, dim, out) }
+    }
+
+    unsafe fn l2_sq_batch_impl(query: &[f32], block: &[f32], dim: usize, out: &mut [f32]) {
+        let k = block.len() / dim;
+        let chunks = dim / 8;
+        let q = query.as_ptr();
+        let mut lane = 0;
+        while lane + 2 <= k {
+            let r0 = block.as_ptr().add(lane * dim);
+            let r1 = block.as_ptr().add((lane + 1) * dim);
+            let mut a0_lo = vdupq_n_f32(0.0);
+            let mut a0_hi = vdupq_n_f32(0.0);
+            let mut a1_lo = vdupq_n_f32(0.0);
+            let mut a1_hi = vdupq_n_f32(0.0);
+            for c in 0..chunks {
+                let q_lo = vld1q_f32(q.add(c * 8));
+                let q_hi = vld1q_f32(q.add(c * 8 + 4));
+                let d0_lo = vsubq_f32(q_lo, vld1q_f32(r0.add(c * 8)));
+                a0_lo = vfmaq_f32(a0_lo, d0_lo, d0_lo);
+                let d0_hi = vsubq_f32(q_hi, vld1q_f32(r0.add(c * 8 + 4)));
+                a0_hi = vfmaq_f32(a0_hi, d0_hi, d0_hi);
+                let d1_lo = vsubq_f32(q_lo, vld1q_f32(r1.add(c * 8)));
+                a1_lo = vfmaq_f32(a1_lo, d1_lo, d1_lo);
+                let d1_hi = vsubq_f32(q_hi, vld1q_f32(r1.add(c * 8 + 4)));
+                a1_hi = vfmaq_f32(a1_hi, d1_hi, d1_hi);
+            }
+            let (mut tail0, mut tail1) = (0f32, 0f32);
+            for j in chunks * 8..dim {
+                let d0 = query[j] - *r0.add(j);
+                tail0 += d0 * d0;
+                let d1 = query[j] - *r1.add(j);
+                tail1 += d1 * d1;
+            }
+            out[lane] = hsum8(a0_lo, a0_hi) + tail0;
+            out[lane + 1] = hsum8(a1_lo, a1_hi) + tail1;
+            lane += 2;
+        }
+        if lane < k {
+            out[lane] = l2_sq_impl(query, &block[lane * dim..(lane + 1) * dim]);
+        }
+    }
+
+    /// SQ8 batch kernel, same contract as
+    /// [`super::scalar::l2_sq_batch_sq8`]. u8 codes widen through
+    /// `vmovl_u8` → `vmovl_u16` → `vcvtq_f32_u32` (exact for 0..=255).
+    pub fn l2_sq_batch_sq8(
+        query_codes: &[f32],
+        codes: &[u8],
+        dim: usize,
+        weight: &[f32],
+        out: &mut [f32],
+    ) {
+        if codes.is_empty() {
+            return;
+        }
+        debug_assert!(dim > 0);
+        debug_assert_eq!(codes.len() % dim, 0);
+        debug_assert_eq!(query_codes.len(), dim);
+        debug_assert_eq!(weight.len(), dim);
+        debug_assert!(out.len() >= codes.len() / dim);
+        // SAFETY: NEON is a baseline feature of every aarch64 target.
+        unsafe { l2_sq_batch_sq8_impl(query_codes, codes, dim, weight, out) }
+    }
+
+    unsafe fn l2_sq_batch_sq8_impl(
+        query_codes: &[f32],
+        codes: &[u8],
+        dim: usize,
+        weight: &[f32],
+        out: &mut [f32],
+    ) {
+        let k = codes.len() / dim;
+        let chunks = dim / 8;
+        let q = query_codes.as_ptr();
+        let w = weight.as_ptr();
+        for lane in 0..k {
+            let row = codes.as_ptr().add(lane * dim);
+            let mut acc_lo = vdupq_n_f32(0.0);
+            let mut acc_hi = vdupq_n_f32(0.0);
+            for c in 0..chunks {
+                let wide = vmovl_u8(vld1_u8(row.add(c * 8)));
+                let r_lo = vcvtq_f32_u32(vmovl_u16(vget_low_u16(wide)));
+                let r_hi = vcvtq_f32_u32(vmovl_u16(vget_high_u16(wide)));
+                let d_lo = vsubq_f32(vld1q_f32(q.add(c * 8)), r_lo);
+                let wd_lo = vmulq_f32(vld1q_f32(w.add(c * 8)), d_lo);
+                acc_lo = vfmaq_f32(acc_lo, wd_lo, d_lo);
+                let d_hi = vsubq_f32(vld1q_f32(q.add(c * 8 + 4)), r_hi);
+                let wd_hi = vmulq_f32(vld1q_f32(w.add(c * 8 + 4)), d_hi);
+                acc_hi = vfmaq_f32(acc_hi, wd_hi, d_hi);
+            }
+            let mut tail = 0f32;
+            for j in chunks * 8..dim {
+                let d = query_codes[j] - *row.add(j) as f32;
+                tail += weight[j] * d * d;
+            }
+            out[lane] = hsum8(acc_lo, acc_hi) + tail;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn select_resolves_names_and_falls_back() {
+        assert_eq!(select(Some("scalar")).name, "scalar");
+        assert_eq!(select(None).name, best_available().name);
+        assert_eq!(select(Some("auto")).name, best_available().name);
+        assert_eq!(select(Some("")).name, best_available().name);
+        // Unknown / other-arch names degrade to scalar, never panic.
+        assert_eq!(select(Some("avx512-unicorn")).name, "scalar");
+    }
+
+    #[test]
+    fn active_is_one_of_the_available_sets() {
+        let name = active().name;
+        assert!(
+            all_available().iter().any(|k| k.name == name),
+            "active kernel {name} not in the available list"
+        );
+    }
+
+    #[test]
+    fn all_available_starts_with_scalar() {
+        let names: Vec<&str> = all_available().iter().map(|k| k.name).collect();
+        assert_eq!(names[0], "scalar");
+        let mut uniq = names.clone();
+        uniq.dedup();
+        assert_eq!(uniq, names, "no duplicate kernel sets");
+    }
+
+    #[test]
+    fn every_available_set_agrees_on_a_smoke_vector() {
+        let a: Vec<f32> = (0..37).map(|i| i as f32 * 0.25 - 3.0).collect();
+        let b: Vec<f32> = (0..37).map(|i| 5.0 - i as f32 * 0.5).collect();
+        let want = (SCALAR.l2_sq)(&a, &b);
+        for ks in all_available() {
+            let got = (ks.l2_sq)(&a, &b);
+            assert_eq!(got.to_bits(), want.to_bits(), "{} vs scalar", ks.name);
+        }
+    }
+}

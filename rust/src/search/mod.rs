@@ -12,6 +12,9 @@
 //! * [`request`] — the request-scoped surface: [`SearchRequest`]
 //!   (per-request top-k, beam-width override, id filter) and
 //!   [`IdFilter`], honored natively by every engine.
+//! * [`kernels`] — runtime-dispatched SIMD distance kernels (scalar /
+//!   AVX2+FMA / NEON behind one process-wide dispatch table); [`dist`]
+//!   holds the thin wrappers the engines call.
 //!
 //! Both engines produce a [`stats::SearchStats`] (and optionally a full
 //! [`stats::SearchTrace`]) so the hardware timing/energy simulator can
@@ -21,6 +24,7 @@ pub(crate) mod beam;
 pub mod config;
 pub mod dist;
 pub mod hnsw;
+pub mod kernels;
 pub mod phnsw;
 pub mod request;
 pub mod stats;

@@ -114,6 +114,12 @@ impl NeighborScorer for PcaFilterScorer<'_> {
             }
         }
         let survivors = cpca.into_sorted();
+        // The ≤ k survivor rows are id-scattered across the high-dim
+        // table; hint them now so the rerank loop's gathers land warm
+        // (the hardware prefetcher sees no pattern in filter output).
+        for &(_, m) in &survivors {
+            crate::prefetch::prefetch_slice(self.data_high.row(m as usize));
+        }
 
         // Step 3 (lines 14–23): high-dim rerank of the ≤ k survivors.
         // Survivors arrive ascending by d_low, so the last *admitted* one
@@ -299,6 +305,9 @@ impl PhnswSearcher {
             f_pca: f32::INFINITY,
         };
         let ep = self.graph.entry_point();
+        // Warm the entry point's top-layer adjacency while its seed
+        // distance computes — the walk's very first pointer chase.
+        self.graph.prefetch_neighbors(ep, self.graph.max_level());
         let mut entry = vec![(l2_sq(q, self.data_high.row(ep as usize)), ep)];
         for layer in (1..=self.graph.max_level()).rev() {
             scorer.k = self.params.k(layer);

@@ -1,0 +1,208 @@
+//! Cache-line-aligned growable buffers for the gather blocks.
+//!
+//! The batched kernels stream the gathered neighbor block with unaligned
+//! SIMD loads (`loadu`), which run at full speed *within* a cache line
+//! but split into two line accesses whenever a 32-byte vector straddles
+//! a boundary. A plain `Vec<f32>` starts at whatever alignment the
+//! allocator hands out, so with 128-dim (512 B) rows every row can
+//! straddle. Backing the block with 64-byte-aligned storage pins row 0
+//! to a line start; rows are already padded to the 8-lane SIMD width
+//! ([`super::pad_dim`]), so for power-of-two padded dims every
+//! subsequent row starts line-aligned too.
+//!
+//! The buffers expose only the `clear` / `reserve` / `extend_from_slice`
+//! / `as_slice` subset of `Vec` that the gather paths use; capacity is
+//! managed in whole 64-byte lines and is never returned to the
+//! allocator on `clear` (the blocks are pooled per-query scratch).
+
+/// One 64-byte line of bytes; its alignment is what the buffers inherit.
+#[derive(Debug, Clone, Copy)]
+#[repr(C, align(64))]
+struct LineU8([u8; 64]);
+
+/// One 64-byte line of f32 lanes.
+#[derive(Debug, Clone, Copy)]
+#[repr(C, align(64))]
+struct LineF32([f32; 16]);
+
+/// Growable `u8` buffer whose storage always starts on a 64-byte
+/// boundary (SQ8 gather block).
+#[derive(Debug, Clone, Default)]
+pub struct AlignedBytes {
+    buf: Vec<LineU8>,
+    len: usize,
+}
+
+impl AlignedBytes {
+    /// Empty buffer (no allocation until first use).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Logical length in bytes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no bytes are stored.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Logically empty the buffer, keeping capacity.
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    /// Ensure capacity for `additional` more bytes. Backing lines are
+    /// zero-filled, so every byte under capacity is initialized.
+    pub fn reserve(&mut self, additional: usize) {
+        let lines = (self.len + additional).div_ceil(64);
+        if lines > self.buf.len() {
+            self.buf.resize(lines, LineU8([0; 64]));
+        }
+    }
+
+    /// Append `src` to the buffer.
+    pub fn extend_from_slice(&mut self, src: &[u8]) {
+        self.reserve(src.len());
+        // SAFETY: `reserve` zero-initialized at least `len + src.len()`
+        // bytes of contiguous `LineU8` storage; u8 has no invalid bit
+        // patterns and alignment 1 ≤ 64.
+        let cap = self.buf.len() * 64;
+        let dst = unsafe { std::slice::from_raw_parts_mut(self.buf.as_mut_ptr() as *mut u8, cap) };
+        dst[self.len..self.len + src.len()].copy_from_slice(src);
+        self.len += src.len();
+    }
+
+    /// The stored bytes, starting on a 64-byte boundary.
+    pub fn as_slice(&self) -> &[u8] {
+        // SAFETY: the first `len` bytes were written by
+        // `extend_from_slice` over zero-initialized line storage.
+        unsafe { std::slice::from_raw_parts(self.buf.as_ptr() as *const u8, self.len) }
+    }
+}
+
+/// Growable `f32` buffer whose storage always starts on a 64-byte
+/// boundary (f32 gather block).
+#[derive(Debug, Clone, Default)]
+pub struct AlignedF32 {
+    buf: Vec<LineF32>,
+    len: usize,
+}
+
+impl AlignedF32 {
+    /// Empty buffer (no allocation until first use).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Logical length in f32 lanes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no lanes are stored.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Logically empty the buffer, keeping capacity.
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    /// Ensure capacity for `additional` more lanes (zero-filled lines).
+    pub fn reserve(&mut self, additional: usize) {
+        let lines = (self.len + additional).div_ceil(16);
+        if lines > self.buf.len() {
+            self.buf.resize(lines, LineF32([0.0; 16]));
+        }
+    }
+
+    /// Append `src` to the buffer.
+    pub fn extend_from_slice(&mut self, src: &[f32]) {
+        self.reserve(src.len());
+        // SAFETY: `reserve` zero-initialized at least `len + src.len()`
+        // lanes of contiguous `LineF32` storage; `LineF32` is exactly 16
+        // f32s with alignment 64 ≥ 4.
+        let cap = self.buf.len() * 16;
+        let dst =
+            unsafe { std::slice::from_raw_parts_mut(self.buf.as_mut_ptr() as *mut f32, cap) };
+        dst[self.len..self.len + src.len()].copy_from_slice(src);
+        self.len += src.len();
+    }
+
+    /// The stored lanes, starting on a 64-byte boundary.
+    pub fn as_slice(&self) -> &[f32] {
+        // SAFETY: the first `len` lanes were written by
+        // `extend_from_slice` over zero-initialized line storage.
+        unsafe { std::slice::from_raw_parts(self.buf.as_ptr() as *const f32, self.len) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_roundtrip_and_stay_aligned() {
+        let mut b = AlignedBytes::new();
+        assert!(b.is_empty());
+        b.extend_from_slice(&[1, 2, 3]);
+        b.extend_from_slice(&(0..200u16).map(|x| x as u8).collect::<Vec<_>>());
+        assert_eq!(b.len(), 203);
+        assert_eq!(b.as_slice()[0..3], [1, 2, 3]);
+        assert_eq!(b.as_slice()[3], 0);
+        assert_eq!(b.as_slice()[202], 199);
+        assert_eq!(b.as_slice().as_ptr() as usize % 64, 0, "storage must be line-aligned");
+        b.clear();
+        assert!(b.is_empty());
+        b.extend_from_slice(&[9]);
+        assert_eq!(b.as_slice(), &[9]);
+    }
+
+    #[test]
+    fn f32_roundtrip_and_stay_aligned() {
+        let mut f = AlignedF32::new();
+        let row: Vec<f32> = (0..23).map(|x| x as f32).collect();
+        f.extend_from_slice(&row);
+        f.extend_from_slice(&row);
+        assert_eq!(f.len(), 46);
+        assert_eq!(f.as_slice()[..23], row[..]);
+        assert_eq!(f.as_slice()[23..46], row[..]);
+        assert_eq!(f.as_slice().as_ptr() as usize % 64, 0, "storage must be line-aligned");
+        f.clear();
+        assert!(f.is_empty());
+        assert_eq!(f.as_slice().len(), 0);
+    }
+
+    #[test]
+    fn growth_across_many_lines_preserves_content() {
+        let mut f = AlignedF32::new();
+        let mut want = Vec::new();
+        for chunk in 0..50 {
+            let vals: Vec<f32> = (0..13).map(|j| (chunk * 13 + j) as f32).collect();
+            f.extend_from_slice(&vals);
+            want.extend_from_slice(&vals);
+        }
+        assert_eq!(f.as_slice(), &want[..]);
+    }
+
+    #[test]
+    fn clone_is_independent() {
+        let mut a = AlignedBytes::new();
+        a.extend_from_slice(&[5, 6, 7]);
+        let c = a.clone();
+        a.clear();
+        a.extend_from_slice(&[1]);
+        assert_eq!(c.as_slice(), &[5, 6, 7]);
+        assert_eq!(a.as_slice(), &[1]);
+    }
+
+    #[test]
+    fn empty_buffers_yield_empty_slices() {
+        assert_eq!(AlignedBytes::new().as_slice().len(), 0);
+        assert_eq!(AlignedF32::new().as_slice().len(), 0);
+    }
+}

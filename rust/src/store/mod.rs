@@ -24,8 +24,10 @@
 //! Filtering through SQ8 cuts low-dim bandwidth 4×; recall is guarded by
 //! the unchanged f32 rerank (paper Algorithm 1 step 3).
 
+pub mod aligned;
 pub mod sq8;
 
+pub use aligned::{AlignedBytes, AlignedF32};
 pub use sq8::Sq8Store;
 
 use crate::dataset::VectorSet;
@@ -74,10 +76,11 @@ pub struct StoreScratch {
     /// Query transformed into the store's scoring domain, zero-padded to
     /// the store's padded width.
     pub(crate) query: Vec<f32>,
-    /// Gathered f32 rows (F32 codec path).
-    pub(crate) block_f32: Vec<f32>,
-    /// Gathered u8 code rows (SQ8 codec path).
-    pub(crate) block_u8: Vec<u8>,
+    /// Gathered f32 rows (F32 codec path), cache-line aligned so the
+    /// batched kernel's vector loads never straddle lines.
+    pub(crate) block_f32: AlignedF32,
+    /// Gathered u8 code rows (SQ8 codec path), cache-line aligned.
+    pub(crate) block_u8: AlignedBytes,
 }
 
 impl StoreScratch {
@@ -229,11 +232,18 @@ impl VectorStore for F32Store {
         let StoreScratch { query, block_f32, .. } = scratch;
         block_f32.clear();
         block_f32.reserve(ids.len() * self.padded);
-        for &id in ids {
+        for (lane, &id) in ids.iter().enumerate() {
+            // Warm the next row while this one copies: the ids are
+            // graph-ordered, not address-ordered, so the hardware
+            // prefetcher cannot chase them.
+            if let Some(&nxt) = ids.get(lane + 1) {
+                let j = nxt as usize;
+                crate::prefetch::prefetch_slice(&self.data[j * self.padded..(j + 1) * self.padded]);
+            }
             let i = id as usize;
             block_f32.extend_from_slice(&self.data[i * self.padded..(i + 1) * self.padded]);
         }
-        l2_sq_batch(query, block_f32, self.padded, out);
+        l2_sq_batch(query, block_f32.as_slice(), self.padded, out);
     }
 
     fn to_bytes(&self) -> Vec<u8> {

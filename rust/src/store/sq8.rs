@@ -181,11 +181,18 @@ impl VectorStore for Sq8Store {
         let StoreScratch { query, block_u8, .. } = scratch;
         block_u8.clear();
         block_u8.reserve(ids.len() * self.padded);
-        for &id in ids {
+        for (lane, &id) in ids.iter().enumerate() {
+            // Warm the next code row while this one copies (same
+            // rationale as the f32 gather: id order defeats the
+            // hardware prefetcher).
+            if let Some(&nxt) = ids.get(lane + 1) {
+                let j = nxt as usize;
+                crate::prefetch::prefetch_slice(&self.codes[j * self.padded..(j + 1) * self.padded]);
+            }
             let i = id as usize;
             block_u8.extend_from_slice(&self.codes[i * self.padded..(i + 1) * self.padded]);
         }
-        l2_sq_batch_sq8(query, block_u8, self.padded, &self.weight, out);
+        l2_sq_batch_sq8(query, block_u8.as_slice(), self.padded, &self.weight, out);
     }
 
     fn to_bytes(&self) -> Vec<u8> {

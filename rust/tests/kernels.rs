@@ -1,0 +1,236 @@
+//! Kernel-parity sweep: every compiled distance-kernel set (scalar,
+//! AVX2+FMA, NEON) and the dispatch wrappers must agree with the scalar
+//! reference *bitwise* on finite inputs — same FMA usage, same reduction
+//! tree, same tail handling (see `search::kernels`'s module doc for the
+//! contract). The single documented relaxation: on non-finite inputs the
+//! results must be bitwise equal **or both NaN** — NaN *payloads* may
+//! differ between libm `mul_add` and hardware FMA, which is invisible to
+//! every consumer (comparisons, `total_cmp` ordering).
+//!
+//! Also pins dispatch resolution: `PHNSW_KERNEL=scalar` must force the
+//! portable fallback (CI runs the whole suite once in that mode).
+
+use phnsw::proptest_lite::{self, Config};
+use phnsw::rng::Pcg32;
+use phnsw::search::dist;
+use phnsw::search::kernels;
+
+/// Dims spanning below/at/past every lane boundary the kernels care
+/// about (8-lane chunks, 2-row pairing, the paper's 15/16/128 shapes).
+const DIMS: &[usize] = &[1, 7, 8, 9, 15, 16, 17, 31, 96, 128, 250];
+
+/// Row counts: empty, single, odd (remainder row), even, past one pair.
+const KS: &[usize] = &[0, 1, 2, 3, 5, 32];
+
+/// Bitwise equality with NaN identity (the documented relaxation).
+fn bits_eq(a: f32, b: f32) -> bool {
+    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+}
+
+fn gaussian_vec(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.gaussian()).collect()
+}
+
+#[test]
+fn l2_sq_parity_across_dims() {
+    let sets = kernels::all_available();
+    assert!(!sets.is_empty());
+    let mut rng = Pcg32::new(11);
+    for &dim in DIMS {
+        let a = gaussian_vec(&mut rng, dim);
+        let b = gaussian_vec(&mut rng, dim);
+        let want = (kernels::scalar_set().l2_sq)(&a, &b);
+        for set in &sets {
+            let got = (set.l2_sq)(&a, &b);
+            assert!(
+                got.to_bits() == want.to_bits(),
+                "l2_sq dim={dim} set={}: {got} ({:#010x}) vs scalar {want} ({:#010x})",
+                set.name,
+                got.to_bits(),
+                want.to_bits()
+            );
+        }
+        // The dispatch wrapper routes through one of those sets.
+        assert_eq!(dist::l2_sq(&a, &b).to_bits(), (kernels::active().l2_sq)(&a, &b).to_bits());
+    }
+}
+
+#[test]
+fn batch_parity_across_dims_and_k() {
+    let sets = kernels::all_available();
+    let mut rng = Pcg32::new(22);
+    for &dim in DIMS {
+        for &k in KS {
+            let q = gaussian_vec(&mut rng, dim);
+            let block = gaussian_vec(&mut rng, k * dim);
+            let mut want = vec![f32::NAN; k.max(1)];
+            (kernels::scalar_set().l2_sq_batch)(&q, &block, dim, &mut want);
+            for set in &sets {
+                let mut got = vec![f32::NAN; k.max(1)];
+                (set.l2_sq_batch)(&q, &block, dim, &mut got);
+                for lane in 0..k {
+                    assert!(
+                        got[lane].to_bits() == want[lane].to_bits(),
+                        "batch dim={dim} k={k} lane={lane} set={}: {} vs {}",
+                        set.name,
+                        got[lane],
+                        want[lane]
+                    );
+                }
+            }
+            // Batch rows must also equal the single-vector kernel bitwise
+            // (the remainder row shares the paired path's tail handling).
+            for lane in 0..k {
+                let row = &block[lane * dim..(lane + 1) * dim];
+                assert_eq!(
+                    want[lane].to_bits(),
+                    (kernels::scalar_set().l2_sq)(&q, row).to_bits(),
+                    "dim={dim} k={k} lane={lane}: batch row diverged from l2_sq"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sq8_batch_parity_across_dims_and_k() {
+    let sets = kernels::all_available();
+    let mut rng = Pcg32::new(33);
+    for &dim in DIMS {
+        for &k in KS {
+            let q: Vec<f32> = (0..dim).map(|_| rng.f32() * 255.0).collect();
+            let codes: Vec<u8> = (0..k * dim).map(|_| (rng.f32() * 255.0) as u8).collect();
+            let weight: Vec<f32> = (0..dim).map(|_| 0.01 + rng.f32()).collect();
+            let mut want = vec![f32::NAN; k.max(1)];
+            (kernels::scalar_set().l2_sq_batch_sq8)(&q, &codes, dim, &weight, &mut want);
+            for set in &sets {
+                let mut got = vec![f32::NAN; k.max(1)];
+                (set.l2_sq_batch_sq8)(&q, &codes, dim, &weight, &mut got);
+                for lane in 0..k {
+                    assert!(
+                        got[lane].to_bits() == want[lane].to_bits(),
+                        "sq8 dim={dim} k={k} lane={lane} set={}: {} vs {}",
+                        set.name,
+                        got[lane],
+                        want[lane]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn nonfinite_inputs_agree_up_to_nan_identity() {
+    // NaN and ±Inf must flow through every variant the same way: the
+    // result is bitwise equal, or both sides are NaN (payloads may
+    // differ between libm fused ops and hardware FMA — the one
+    // documented relaxation of the parity contract).
+    let sets = kernels::all_available();
+    let specials = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, f32::MAX, -0.0];
+    let mut rng = Pcg32::new(44);
+    for &dim in &[1usize, 8, 9, 16, 17, 96] {
+        for (si, &special) in specials.iter().enumerate() {
+            let mut a = gaussian_vec(&mut rng, dim);
+            let b = gaussian_vec(&mut rng, dim);
+            a[(si * 7) % dim] = special;
+            let want = (kernels::scalar_set().l2_sq)(&a, &b);
+            for set in &sets {
+                let got = (set.l2_sq)(&a, &b);
+                assert!(
+                    bits_eq(got, want),
+                    "l2_sq dim={dim} special={special} set={}: {got} vs {want}",
+                    set.name
+                );
+            }
+            // Batch path, k=3 (one pair + remainder row).
+            let block: Vec<f32> = (0..3).flat_map(|_| b.clone()).collect();
+            let mut want3 = vec![0f32; 3];
+            (kernels::scalar_set().l2_sq_batch)(&a, &block, dim, &mut want3);
+            for set in &sets {
+                let mut got3 = vec![0f32; 3];
+                (set.l2_sq_batch)(&a, &block, dim, &mut got3);
+                for lane in 0..3 {
+                    assert!(
+                        bits_eq(got3[lane], want3[lane]),
+                        "batch dim={dim} special={special} lane={lane} set={}",
+                        set.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn empty_block_is_a_noop_on_every_set() {
+    // k == 0 must leave `out` untouched on every variant (previously
+    // only guarded by debug_asserts).
+    let q = [1.5f32; 16];
+    let w = [1.0f32; 16];
+    for set in kernels::all_available() {
+        let mut out = [f32::NAN; 4];
+        (set.l2_sq_batch)(&q, &[], 16, &mut out);
+        assert!(out.iter().all(|x| x.is_nan()), "{}: f32 k=0 wrote to out", set.name);
+        (set.l2_sq_batch_sq8)(&q, &[], 16, &w, &mut out);
+        assert!(out.iter().all(|x| x.is_nan()), "{}: sq8 k=0 wrote to out", set.name);
+    }
+}
+
+#[test]
+fn random_sweep_batch_parity() {
+    // proptest-style randomized sweep over (dim, k, data) — seeds are
+    // reported on failure for replay.
+    let sets = kernels::all_available();
+    proptest_lite::run(
+        &Config { cases: 128, seed: 0xC0FF_EE11 },
+        |rng| {
+            let dim = DIMS[rng.below(DIMS.len() as u32) as usize];
+            let k = KS[rng.below(KS.len() as u32) as usize];
+            let q = gaussian_vec(rng, dim);
+            let block = gaussian_vec(rng, k * dim);
+            (dim, k, q, block)
+        },
+        |case| {
+            let (dim, k, q, block) = case;
+            let mut want = vec![f32::NAN; (*k).max(1)];
+            (kernels::scalar_set().l2_sq_batch)(q.as_slice(), block.as_slice(), *dim, &mut want);
+            sets.iter().all(|set| {
+                let mut got = vec![f32::NAN; (*k).max(1)];
+                (set.l2_sq_batch)(q.as_slice(), block.as_slice(), *dim, &mut got);
+                (0..*k).all(|lane| got[lane].to_bits() == want[lane].to_bits())
+            })
+        },
+    );
+}
+
+#[test]
+fn dispatch_resolution() {
+    // Explicit names resolve to themselves when compiled in; unknown
+    // names and "scalar" fall back to the portable set; None/auto pick
+    // the best available.
+    assert_eq!(kernels::select(Some("scalar")).name, "scalar");
+    assert_eq!(kernels::select(Some("definitely-not-a-kernel")).name, "scalar");
+    assert_eq!(kernels::select(None).name, kernels::best_available().name);
+    assert_eq!(kernels::select(Some("auto")).name, kernels::best_available().name);
+    assert_eq!(kernels::select(Some("")).name, kernels::best_available().name);
+    let sets = kernels::all_available();
+    assert_eq!(sets[0].name, "scalar", "scalar set must always be available");
+    for set in &sets {
+        assert_eq!(kernels::select(Some(set.name)).name, set.name);
+    }
+}
+
+#[test]
+fn env_override_forces_scalar_fallback() {
+    // `active()` latches the PHNSW_KERNEL env var once per process, so
+    // this asserts only when the override is actually set — CI exercises
+    // it by running the whole suite under PHNSW_KERNEL=scalar.
+    if std::env::var("PHNSW_KERNEL").as_deref() == Ok("scalar") {
+        assert_eq!(kernels::active().name, "scalar");
+        let mut rng = Pcg32::new(55);
+        let a = gaussian_vec(&mut rng, 128);
+        let b = gaussian_vec(&mut rng, 128);
+        assert_eq!(dist::l2_sq(&a, &b).to_bits(), (kernels::scalar_set().l2_sq)(&a, &b).to_bits());
+    }
+}

@@ -1,0 +1,81 @@
+#!/usr/bin/env python3
+"""Gate a fresh hot_path bench snapshot against the committed trajectory.
+
+Usage: bench_regression.py COMMITTED.json FRESH.json
+
+Compares the `speedup_*` entries (dispatched-vs-scalar ratios measured
+within one run on one machine) rather than absolute ns/op, so the gate
+is portable across CI hosts of different speeds. A kernel microbench
+"regresses" when its fresh speedup falls below 75% of the committed
+speedup AND below the 1.5x acceptance floor — the first clause catches
+erosion relative to the recorded trajectory, the second keeps noisy
+runs that still clear the paper-reproduction floor from flaking CI.
+
+The gate is skipped entirely when the fresh run dispatched to the
+scalar set (a host without AVX2/NEON measures every speedup at ~1.0 by
+construction).
+"""
+
+import json
+import sys
+
+RETENTION = 0.75  # fresh speedup must keep >= 75% of the committed one
+FLOOR = 1.5  # ... unless it still clears the absolute acceptance floor
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    if "entries" not in doc:
+        sys.exit(f"error: {path} has no 'entries' object")
+    return doc
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(__doc__)
+    committed = load(sys.argv[1])
+    fresh = load(sys.argv[2])
+
+    variant = fresh.get("kernel_variant", "unknown")
+    if variant == "scalar":
+        print(
+            "bench gate: fresh run dispatched to the scalar set "
+            "(no SIMD on this host) — speedup gate skipped"
+        )
+        return
+
+    failures = []
+    checked = 0
+    for name, committed_v in committed["entries"].items():
+        if not name.startswith("speedup_"):
+            continue
+        fresh_v = fresh["entries"].get(name)
+        if fresh_v is None:
+            failures.append(f"{name}: missing from fresh snapshot")
+            continue
+        checked += 1
+        ok = fresh_v >= RETENTION * committed_v or fresh_v >= FLOOR
+        status = "ok" if ok else "REGRESSED"
+        print(
+            f"  {name:<32} committed {committed_v:6.2f}x   "
+            f"fresh {fresh_v:6.2f}x   {status}"
+        )
+        if not ok:
+            failures.append(
+                f"{name}: fresh {fresh_v:.2f}x < "
+                f"{RETENTION:.0%} of committed {committed_v:.2f}x "
+                f"and below the {FLOOR}x floor"
+            )
+    if checked == 0:
+        sys.exit("error: committed snapshot has no speedup_* entries to gate on")
+    if failures:
+        print(f"\nbench gate FAILED ({len(failures)} regression(s)):")
+        for f in failures:
+            print(f"  - {f}")
+        sys.exit(1)
+    print(f"bench gate passed: {checked} speedup entries within bounds (variant {variant})")
+
+
+if __name__ == "__main__":
+    main()
