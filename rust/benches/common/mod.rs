@@ -81,6 +81,15 @@ pub fn time_it<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
     ns
 }
 
+/// Resident-set size of this process in bytes (linux: field 2 of
+/// `/proc/self/statm`, in pages). `None` where procfs is unavailable —
+/// callers report deltas only when both ends resolved.
+pub fn resident_bytes() -> Option<u64> {
+    let statm = std::fs::read_to_string("/proc/self/statm").ok()?;
+    let pages: u64 = statm.split_whitespace().nth(1)?.parse().ok()?;
+    Some(pages * 4096)
+}
+
 /// Short git commit hash of HEAD, or `"unknown"` outside a repo.
 pub fn git_sha() -> String {
     std::process::Command::new("git")

@@ -305,5 +305,69 @@ fn main() {
         ms_s1 / ms_s4
     );
 
+    println!("bundle cold start (v2 owned decode vs v3 zero-copy mmap):");
+    // The same monolithic index written in both layouts; opens are
+    // repeated (page cache warm) so the numbers isolate deserialization
+    // cost, which is exactly what the v3 layout deletes.
+    {
+        use phnsw::runtime::{open_bundle_with, save_segmented, save_v3, OpenOptions};
+        let idx = build_segmented(&seg_base, &bc, 15, 3, &SegmentSpec::new(1, 1));
+        let dir = std::env::temp_dir();
+        let p2 = dir.join(format!("phnsw_bench_{}_v2.phnsw", std::process::id()));
+        let p3 = dir.join(format!("phnsw_bench_{}_v3.phnsw", std::process::id()));
+        save_segmented(&p2, &idx).expect("write v2 bench bundle");
+        save_v3(&p3, &idx).expect("write v3 bench bundle");
+        let iters = if common::quick_mode() { 3 } else { 10 };
+        let mut time_open = |name: &str, label: &str, path: &std::path::Path, mmap: bool| {
+            let mut best = f64::INFINITY;
+            for _ in 0..iters {
+                let t0 = std::time::Instant::now();
+                std::hint::black_box(
+                    open_bundle_with(path, OpenOptions { mmap }).expect("open bench bundle"),
+                );
+                best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+            }
+            println!("{{\"bench\":\"{label}\",\"ms\":{best:.3}}}");
+            snap.record(name, best);
+            best
+        };
+        let ms_owned = time_open("bundle_open_ms_owned", "bundle open v2 owned decode", &p2, false);
+        let ms_v3 = time_open("bundle_open_ms_v3_owned", "bundle open v3 owned decode", &p3, false);
+        let ms_mmap = time_open("bundle_open_ms_mmap", "bundle open v3 mmap", &p3, true);
+        snap.record("speedup_bundle_open", ms_owned / ms_mmap);
+        println!(
+            "  open: v2 owned {ms_owned:.3} ms, v3 owned {ms_v3:.3} ms, v3 mmap {ms_mmap:.3} ms ({:.1}x vs v2)",
+            ms_owned / ms_mmap
+        );
+
+        // The demand-paged side of the trade: the first query after a
+        // zero-copy open faults its pages in; warm queries match the
+        // owned engine. Resident-set delta shows what the open itself
+        // did NOT touch.
+        let rss0 = common::resident_bytes();
+        let any = open_bundle_with(&p3, OpenOptions { mmap: true }).expect("open bench bundle");
+        if let (Some(a), Some(b)) = (rss0, common::resident_bytes()) {
+            let delta = b.saturating_sub(a);
+            println!("{{\"bench\":\"bundle mmap open resident delta\",\"bytes\":{delta}}}");
+            snap.record("mmap_open_resident_delta_bytes", delta as f64);
+        }
+        let engine = any.engine(PhnswParams::default());
+        let t0 = std::time::Instant::now();
+        std::hint::black_box(engine.search(w.queries.row(0)));
+        let first_ms = t0.elapsed().as_secs_f64() * 1e3;
+        snap.record("mmap_first_query_ms", first_ms);
+        let warm_ns =
+            common::time_it("phnsw.search via mmap bundle (warm)", it(2_000).max(200), || {
+                qi = (qi + 1) % nq;
+                std::hint::black_box(engine.search(w.queries.row(qi)));
+            });
+        snap.record("mmap_warm_search_ns", warm_ns);
+        println!(
+            "  first query {first_ms:.3} ms (page-fault warm-up), then {warm_ns:.0} ns/query warm"
+        );
+        std::fs::remove_file(&p2).ok();
+        std::fs::remove_file(&p3).ok();
+    }
+
     snap.write();
 }

@@ -73,6 +73,21 @@ impl Server {
         Self::start_with_engine(cfg, "phnsw", Arc::new(bundle.searcher(params)))
     }
 
+    /// Boot a server straight from a `.phnsw` file on disk, honoring the
+    /// open options — `OpenOptions { mmap: true }` serves a v3 bundle
+    /// zero-copy from its memory mapping (demand-paged rerank table).
+    /// Whichever flavor the file holds (monolithic or segmented) is
+    /// registered as the default `"phnsw"` route.
+    pub fn start_from_bundle_path(
+        cfg: ServerConfig,
+        path: impl AsRef<std::path::Path>,
+        opts: crate::runtime::OpenOptions,
+        params: crate::search::PhnswParams,
+    ) -> crate::Result<Self> {
+        let any = crate::runtime::open_bundle_with(path, opts)?;
+        Ok(Self::start_with_engine(cfg, "phnsw", any.engine(params)))
+    }
+
     /// Start the worker pool over a router.
     pub fn start(cfg: ServerConfig, router: Arc<Router>) -> Self {
         assert!(cfg.workers >= 1, "need at least one worker");

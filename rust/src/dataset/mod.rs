@@ -17,27 +17,42 @@ pub use gt::{
 };
 pub use synthetic::{SyntheticConfig, generate};
 
+use crate::mmap::CowSlice;
+
 /// A dense, row-major matrix of `n` vectors × `dim` f32 components.
 ///
 /// This is the canonical in-memory vector container for the whole crate:
 /// the graph builder, the PCA trainer, the DB layout packers and the
 /// search engines all borrow rows out of one `VectorSet`.
+///
+/// The backing rows are a [`CowSlice`]: heap-owned on the build path,
+/// or a borrowed view into a memory-mapped `.phnsw` bundle on the
+/// zero-copy serve path (mutators panic on a mapped backing — serving
+/// is read-only by construction).
 #[derive(Debug, Clone, PartialEq)]
 pub struct VectorSet {
     dim: usize,
-    data: Vec<f32>,
+    data: CowSlice<f32>,
 }
 
 impl VectorSet {
     /// Create an empty set with the given dimensionality.
     pub fn new(dim: usize) -> Self {
         assert!(dim > 0, "dimension must be positive");
-        Self { dim, data: Vec::new() }
+        Self { dim, data: CowSlice::Owned(Vec::new()) }
     }
 
     /// Build from a flat row-major buffer. `data.len()` must be a multiple
     /// of `dim`.
     pub fn from_flat(dim: usize, data: Vec<f32>) -> Self {
+        assert!(dim > 0, "dimension must be positive");
+        assert_eq!(data.len() % dim, 0, "flat length {} not divisible by dim {dim}", data.len());
+        Self { dim, data: data.into() }
+    }
+
+    /// Build from an already-validated Cow backing (the v3 bundle
+    /// reader hands rerank rows straight out of the mapping).
+    pub(crate) fn from_cow(dim: usize, data: CowSlice<f32>) -> Self {
         assert!(dim > 0, "dimension must be positive");
         assert_eq!(data.len() % dim, 0, "flat length {} not divisible by dim {dim}", data.len());
         Self { dim, data }
@@ -67,23 +82,25 @@ impl VectorSet {
         &self.data[i * self.dim..(i + 1) * self.dim]
     }
 
-    /// Mutably borrow vector `i`.
+    /// Mutably borrow vector `i` (build path; panics on a mapped backing).
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
-        &mut self.data[i * self.dim..(i + 1) * self.dim]
+        let dim = self.dim;
+        &mut self.data.owned_mut()[i * dim..(i + 1) * dim]
     }
 
-    /// Append one vector (must match `dim`).
+    /// Append one vector (must match `dim`; panics on a mapped backing).
     pub fn push(&mut self, v: &[f32]) {
         assert_eq!(v.len(), self.dim, "vector length mismatch");
-        self.data.extend_from_slice(v);
+        self.data.owned_mut().extend_from_slice(v);
     }
 
     /// Pre-reserve capacity for `n` additional rows. File readers size
     /// this from the file length so a SIFT1M-scale load does one
     /// allocation instead of doubling-realloc churn.
     pub fn reserve_rows(&mut self, n: usize) {
-        self.data.reserve(n.saturating_mul(self.dim));
+        let dim = self.dim;
+        self.data.owned_mut().reserve(n.saturating_mul(dim));
     }
 
     /// The flat row-major backing buffer.

@@ -25,17 +25,21 @@ pub mod serialize;
 
 pub use build::{build, BuildConfig};
 
+use crate::mmap::CowSlice;
+
 /// Maximum representable layer (the paper's SIFT1M graph has 6).
 pub const MAX_LEVEL: usize = 15;
 
 /// One frozen level: classic CSR. `offsets` has `n + 1` entries indexed
 /// by node id; node `v`'s neighbors at this level are
 /// `neighbors[offsets[v]..offsets[v + 1]]` (an empty range for nodes that
-/// do not reach the level).
+/// do not reach the level). The arrays are [`CowSlice`]s: heap-owned
+/// when built/decoded, or direct views into a memory-mapped v3 bundle
+/// on the zero-copy serve path — the accessors are identical either way.
 #[derive(Debug, Clone)]
 struct CsrLevel {
-    offsets: Vec<u32>,
-    neighbors: Vec<u32>,
+    offsets: CowSlice<u32>,
+    neighbors: CowSlice<u32>,
 }
 
 /// Adjacency storage: builder-mutable staging vs. frozen CSR.
@@ -282,24 +286,26 @@ impl HnswGraph {
             }
             level_nodes[l] = self.levels.iter().filter(|&&x| x as usize >= l).count();
             level_edges[l] = neighbors.len();
-            csr.push(CsrLevel { offsets, neighbors });
+            csr.push(CsrLevel { offsets: offsets.into(), neighbors: neighbors.into() });
         }
         self.adjacency = Adjacency::Csr(csr);
         self.level_nodes = level_nodes;
         self.level_edges = level_edges;
     }
 
-    /// Assemble a frozen graph directly from per-level CSR arrays (the v2
-    /// serialization path). Validates structural well-formedness of the
-    /// arrays; semantic checks (id ranges, capacities) are
-    /// [`Self::check_invariants`]'s job.
-    pub(crate) fn from_csr_parts(
+    /// Assemble a frozen graph directly from per-level CSR arrays (the
+    /// v2/v3 serialization paths — `P` is `Vec<u32>` for the owned
+    /// decode and `CowSlice<u32>` for zero-copy views into a mapping).
+    /// Validates structural well-formedness of the arrays; semantic
+    /// checks (id ranges, capacities) are [`Self::check_invariants`]'s
+    /// job.
+    pub(crate) fn from_csr_parts<P: Into<CowSlice<u32>>>(
         m: usize,
         m0: usize,
         entry_point: u32,
         max_level: usize,
         levels: Vec<u8>,
-        parts: Vec<(Vec<u32>, Vec<u32>)>,
+        parts: Vec<(P, P)>,
     ) -> crate::Result<Self> {
         let n = levels.len();
         let expected_levels = if n == 0 { 0 } else { max_level + 1 };
@@ -320,6 +326,8 @@ impl HnswGraph {
         let mut level_nodes = vec![0usize; parts.len()];
         let mut level_edges = vec![0usize; parts.len()];
         for (l, (offsets, neighbors)) in parts.into_iter().enumerate() {
+            let (offsets, neighbors): (CowSlice<u32>, CowSlice<u32>) =
+                (offsets.into(), neighbors.into());
             anyhow::ensure!(
                 offsets.len() == n + 1,
                 "level {l}: {} offsets for {n} nodes",

@@ -16,6 +16,25 @@
 //!     (n + 1) × u32 offset
 //! ```
 //!
+//! ## v3 zero-copy image (magic `HNS3`, bundle-embedded only)
+//!
+//! The image embedded in page-aligned v3 `.phnsw` sections: identical
+//! information to v2, but every array is 64-byte aligned *within* the
+//! image and written offsets-before-neighbors so a reader can serve the
+//! CSR arrays directly out of a memory mapping with zero decode:
+//! ```text
+//!   magic "HNS3"  u32 m  u32 m0  u32 entry  u32 max_level  u64 n
+//!   u32 n_levels                      (0 for the empty graph)
+//!   n × u8 level                      → pad to 64
+//!   per level 0..n_levels:
+//!     u64 n_edges                     → pad to 64
+//!     (n + 1) × u32 offset            → pad to 64
+//!     n_edges × u32 neighbor          → pad to 64
+//! ```
+//! All integers are fixed-width little-endian; [`from_v3_section`]
+//! reinterprets the mapped bytes in place (or copies them, for the
+//! owned fallback) and refuses anything misaligned or out of bounds.
+//!
 //! ## v1 (legacy, magic `HNS1`)
 //!
 //! Per-node, per-level framed lists; still readable (and frozen into CSR
@@ -27,9 +46,11 @@
 //! ```
 
 use super::HnswGraph;
+use crate::mmap::{align_up, take_cow, Mmap};
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
+use std::sync::Arc;
 
 fn write_u32(w: &mut impl Write, v: u32) -> std::io::Result<()> {
     w.write_all(&v.to_le_bytes())
@@ -249,6 +270,133 @@ fn finish_load(graph: HnswGraph, entry: u32, max_level: usize) -> Result<HnswGra
     ensure!(graph.max_level() == max_level, "max level mismatch");
     ensure!(graph.level(entry) == max_level, "stored entry point not on top level");
     Ok(graph)
+}
+
+// ---- v3 zero-copy image ---------------------------------------------
+
+/// Byte length of the fixed HNS3 header (magic through `n_levels`).
+const V3_HEADER: usize = 4 + 4 * 4 + 8 + 4;
+
+fn pad64(buf: &mut Vec<u8>) {
+    buf.resize(align_up(buf.len(), 64), 0);
+}
+
+/// Render `graph` as an `HNS3` image (see the module docs) — the bytes
+/// a v3 bundle embeds as a page-aligned GRPH section. Works on both the
+/// staging and the frozen form.
+pub fn to_v3_bytes(graph: &HnswGraph) -> Result<Vec<u8>> {
+    let n = graph.len();
+    let n_levels = if graph.is_empty() { 0 } else { graph.max_level() + 1 };
+    let mut buf = Vec::new();
+    buf.extend_from_slice(b"HNS3");
+    buf.extend_from_slice(&(graph.m() as u32).to_le_bytes());
+    buf.extend_from_slice(&(graph.m0() as u32).to_le_bytes());
+    buf.extend_from_slice(&graph.entry_point().to_le_bytes());
+    buf.extend_from_slice(&(graph.max_level() as u32).to_le_bytes());
+    buf.extend_from_slice(&(n as u64).to_le_bytes());
+    buf.extend_from_slice(&(n_levels as u32).to_le_bytes());
+    for node in 0..n as u32 {
+        buf.push(graph.level(node) as u8);
+    }
+    pad64(&mut buf);
+    let mut write_level = |offsets: &[u32], neighbors: &[u32], buf: &mut Vec<u8>| {
+        buf.extend_from_slice(&(neighbors.len() as u64).to_le_bytes());
+        pad64(buf);
+        for &off in offsets {
+            buf.extend_from_slice(&off.to_le_bytes());
+        }
+        pad64(buf);
+        for &nb in neighbors {
+            buf.extend_from_slice(&nb.to_le_bytes());
+        }
+        pad64(buf);
+    };
+    for l in 0..n_levels {
+        if let Some((offsets, neighbors)) = graph.csr_level(l) {
+            write_level(offsets, neighbors, &mut buf);
+        } else {
+            let mut offsets = Vec::with_capacity(n + 1);
+            offsets.push(0u32);
+            let mut flat: Vec<u32> = Vec::new();
+            for node in 0..n as u32 {
+                flat.extend_from_slice(graph.neighbors(node, l));
+                offsets.push(flat.len() as u32);
+            }
+            write_level(&offsets, &flat, &mut buf);
+        }
+    }
+    Ok(buf)
+}
+
+/// Reconstruct a graph from an `HNS3` image living at
+/// `byte_off..byte_off + byte_len` of `map`. With `mapped` the CSR
+/// arrays stay views into the mapping (zero copy); otherwise they are
+/// copied out into owned storage — one parser, two residency modes.
+///
+/// Every count is bound-checked against the section length before any
+/// view is constructed, and misalignment is a named error (never UB):
+/// the corruption contract of the v3 bundle reader.
+pub fn from_v3_section(
+    map: &Arc<Mmap>,
+    byte_off: usize,
+    byte_len: usize,
+    mapped: bool,
+) -> Result<HnswGraph> {
+    let end = byte_off
+        .checked_add(byte_len)
+        .filter(|&e| e <= map.len())
+        .context("GRPH v3 section exceeds the mapping")?;
+    let sec = &map.as_slice()[byte_off..end];
+    ensure!(sec.len() >= V3_HEADER, "GRPH v3 section truncated before header");
+    ensure!(&sec[..4] == b"HNS3", "bad v3 graph magic {:?}", &sec[..4]);
+    let u32_at = |o: usize| u32::from_le_bytes(sec[o..o + 4].try_into().unwrap());
+    let m = u32_at(4) as usize;
+    let m0 = u32_at(8) as usize;
+    let entry = u32_at(12);
+    let max_level = u32_at(16) as usize;
+    let n = u64::from_le_bytes(sec[20..28].try_into().unwrap());
+    let n_levels = u32_at(28) as usize;
+    ensure!(n < u32::MAX as u64, "graph too large");
+    ensure!(n <= byte_len as u64, "corrupt v3 graph: {n} nodes cannot fit in {byte_len} bytes");
+    let n = n as usize;
+    ensure!(max_level <= super::MAX_LEVEL, "implausible max level {max_level}");
+    ensure!(m >= 1 && m0 >= 1, "corrupt v3 graph: zero neighbor budget");
+    ensure!(m <= 1 << 16 && m0 <= 1 << 16, "implausible neighbor budget m={m} m0={m0}");
+    let expected = if n == 0 { 0 } else { max_level + 1 };
+    ensure!(n_levels == expected, "v3: {n_levels} CSR levels for max level {max_level}");
+
+    let mut cur = V3_HEADER;
+    ensure!(cur + n <= sec.len(), "GRPH v3 section truncated in level table");
+    let levels = sec[cur..cur + n].to_vec();
+    cur = align_up(cur + n, 64);
+    let mut parts = Vec::with_capacity(n_levels);
+    for l in 0..n_levels {
+        ensure!(cur + 8 <= sec.len(), "GRPH v3 section truncated at level {l}");
+        let n_edges = u64::from_le_bytes(sec[cur..cur + 8].try_into().unwrap());
+        ensure!(
+            n_edges <= n as u64 * (m0 as u64 + 1) && n_edges * 4 <= byte_len as u64,
+            "v3 level {l}: implausible edge count {n_edges}"
+        );
+        let n_edges = n_edges as usize;
+        cur = align_up(cur + 8, 64);
+        let off_bytes = (n + 1) * 4;
+        ensure!(
+            cur + off_bytes <= sec.len(),
+            "GRPH v3 section truncated in level {l} offsets"
+        );
+        let offsets = take_cow::<u32>(map, byte_off + cur, n + 1, mapped)?;
+        cur = align_up(cur + off_bytes, 64);
+        ensure!(
+            cur + n_edges * 4 <= sec.len(),
+            "GRPH v3 section truncated in level {l} neighbors"
+        );
+        let neighbors = take_cow::<u32>(map, byte_off + cur, n_edges, mapped)?;
+        cur = align_up(cur + n_edges * 4, 64);
+        parts.push((offsets, neighbors));
+    }
+    ensure!(cur == sec.len(), "GRPH v3 section has {} trailing bytes", sec.len() - cur);
+    let graph = HnswGraph::from_csr_parts(m, m0, entry, max_level, levels, parts)?;
+    finish_load(graph, entry, max_level)
 }
 
 #[cfg(test)]

@@ -43,6 +43,7 @@ pub mod energy;
 pub mod graph;
 pub mod hw;
 pub mod metrics;
+pub mod mmap;
 pub mod pca;
 pub mod prefetch;
 pub mod proptest_lite;

@@ -8,6 +8,7 @@
 //! phnsw sim      --engine phnsw --dram hbm --traces 100
 //! phnsw report   --what table3|fig2|fig4|fig5|ksort|db   (paper artifacts)
 //! phnsw check    --n 10000                                (graph invariants)
+//! phnsw inspect  --bundle index.phnsw                     (section directory)
 //! ```
 //!
 //! Every subcommand is driven by the same [`phnsw::workbench`] pipeline the
@@ -39,6 +40,7 @@ fn main() {
         "sim" => cmd_sim(&parsed),
         "report" => cmd_report(&parsed),
         "check" => cmd_check(&parsed),
+        "inspect" => cmd_inspect(&parsed),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -65,7 +67,8 @@ fn print_usage() {
          \x20 serve   run the query server demo (batcher + workers)\n\
          \x20 sim     run the pHNSW processor simulation\n\
          \x20 report  regenerate a paper table/figure\n\
-         \x20 check   verify graph invariants\n\n\
+         \x20 check   verify graph invariants\n\
+         \x20 inspect print a .phnsw bundle's section directory\n\n\
          run `phnsw <cmd> --help` for options"
     );
 }
@@ -90,6 +93,16 @@ const SEGMENT_OPTS: [&str; 4] = ["shards", "build-threads", "assignment", "min-r
 fn seed_from(args: &Args) -> u64 {
     u64::from_str_radix(args.get_or("seed", "5EED0001").trim_start_matches("0x"), 16)
         .unwrap_or(0x5EED_0001)
+}
+
+/// `--bundle-format`: `false` = v2 streamed frames (default), `true` =
+/// v3 page-aligned (servable with `phnsw serve --mmap`).
+fn bundle_format_v3(args: &Args) -> Result<bool> {
+    match args.get_or("bundle-format", "v2").as_str() {
+        "v2" => Ok(false),
+        "v3" => Ok(true),
+        other => anyhow::bail!("unknown --bundle-format {other:?} (expected v2 or v3)"),
+    }
 }
 
 fn workbench_from(args: &Args) -> Result<Workbench> {
@@ -151,6 +164,12 @@ fn cmd_build(args: &Args) -> Result<()> {
             is_flag: false,
         });
         o.push(OptSpec {
+            name: "bundle-format",
+            help: "bundle layout: v2 (streamed) | v3 (page-aligned, mmap-servable)",
+            default: Some("v2".into()),
+            is_flag: false,
+        });
+        o.push(OptSpec {
             name: "shards",
             help: "segmented build: number of shards S",
             default: Some("1".into()),
@@ -199,10 +218,16 @@ fn cmd_build(args: &Args) -> Result<()> {
     );
     println!("{}", reports::db_footprints(&w));
     if let Some(out) = args.get("bundle-out") {
-        w.save_bundle(out)?;
+        let v3 = bundle_format_v3(args)?;
+        if v3 {
+            w.save_bundle_v3(&out)?;
+        } else {
+            w.save_bundle(&out)?;
+        }
         println!(
-            "bundle: wrote {out} ({} bytes — graph + PCA + sq8 low store + f32 high store)",
-            std::fs::metadata(out)?.len()
+            "bundle: wrote {out} ({} bytes, {} — graph + PCA + sq8 low store + f32 high store)",
+            std::fs::metadata(&out)?.len(),
+            if v3 { "v3 page-aligned" } else { "v2 streamed" }
         );
     }
     Ok(())
@@ -277,11 +302,17 @@ fn cmd_build_segmented(args: &Args) -> Result<()> {
         anyhow::ensure!(r >= floor, "recall {r:.3} below required floor {floor}");
     }
     if let Some(out) = args.get("bundle-out") {
-        phnsw::runtime::save_segmented(out, &idx)?;
+        let v3 = bundle_format_v3(args)?;
+        if v3 {
+            phnsw::runtime::save_v3(&out, &idx)?;
+        } else {
+            phnsw::runtime::save_segmented(&out, &idx)?;
+        }
         println!(
-            "bundle: wrote {out} ({} bytes, {} segment(s))",
-            std::fs::metadata(out)?.len(),
-            idx.n_segments()
+            "bundle: wrote {out} ({} bytes, {} segment(s), {})",
+            std::fs::metadata(&out)?.len(),
+            idx.n_segments(),
+            if v3 { "v3 page-aligned" } else { "v2 streamed" }
         );
     }
     Ok(())
@@ -334,6 +365,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             is_flag: false,
         });
         o.push(OptSpec {
+            name: "mmap",
+            help: "with --bundle: serve zero-copy from a memory mapping (v3 bundles only)",
+            default: None,
+            is_flag: true,
+        });
+        o.push(OptSpec {
             name: "mix",
             help: "sample per-request topk / ef override / id filter (serving mix)",
             default: None,
@@ -375,6 +412,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
         }
     }
+    anyhow::ensure!(
+        !args.flag("mmap") || args.get("bundle").is_some(),
+        "--mmap only applies when booting from a bundle (pass --bundle <path>)"
+    );
     let mut corpus: Option<MixCorpus> = None;
     let (server, queries) = if let Some(bundle_path) = args.get("bundle") {
         // Single-artifact boot: the engine comes out of the .phnsw file —
@@ -384,7 +425,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // graph, which is exactly the startup cost the bundle eliminates.
         // The demo load only needs query vectors, drawn fresh from the
         // synthetic mixture at the bundle's dimensionality.
-        let any = phnsw::runtime::open_bundle(bundle_path)?;
+        let mmap = args.flag("mmap");
+        let topen = std::time::Instant::now();
+        let any = phnsw::runtime::open_bundle_with(
+            &bundle_path,
+            phnsw::runtime::OpenOptions { mmap },
+        )?;
+        let open_ms = topen.elapsed().as_secs_f64() * 1e3;
+        // Machine-readable cold-start line: CI asserts the mmap open is
+        // cheaper than the owned decode of the same file.
+        println!(
+            "{{\"bench\":\"bundle_open\",\"mode\":\"{}\",\"ms\":{open_ms:.3}}}",
+            if mmap { "mmap" } else { "owned" }
+        );
         use phnsw::dataset::synthetic::{generate, SyntheticConfig};
         let syn = SyntheticConfig {
             n_base: 1,
@@ -619,6 +672,46 @@ fn cmd_report(args: &Args) -> Result<()> {
             println!("{}", reports::db_footprints(&w));
         }
         other => anyhow::bail!("unknown report {other:?}"),
+    }
+    Ok(())
+}
+
+/// `phnsw inspect --bundle x.phnsw`: print the bundle's section
+/// directory without decoding any payload — version, flavor, shard
+/// count, and per-section offset/length/alignment. Works on every
+/// on-disk version (v1/v2 framed, v3 page-aligned).
+fn cmd_inspect(args: &Args) -> Result<()> {
+    if args.flag("help") {
+        let o = vec![OptSpec {
+            name: "bundle",
+            help: ".phnsw file to inspect",
+            default: None,
+            is_flag: false,
+        }];
+        println!("{}", usage("phnsw inspect", "print a .phnsw bundle's section directory", &o));
+        return Ok(());
+    }
+    let path = args
+        .get("bundle")
+        .ok_or_else(|| anyhow::anyhow!("--bundle <path> is required (see phnsw inspect --help)"))?;
+    let info = phnsw::runtime::inspect_bundle(&path)?;
+    println!(
+        "{path}: version {} ({}), {} shard(s), {} bytes, {} section(s)",
+        info.version,
+        info.flavor,
+        info.n_shards,
+        info.file_len,
+        info.sections.len()
+    );
+    println!("{:<6} {:>12} {:>14} {:>8}", "tag", "offset", "len", "aligned");
+    for s in &info.sections {
+        println!(
+            "{:<6} {:>12} {:>14} {:>8}",
+            s.tag,
+            s.offset,
+            s.len,
+            if s.page_aligned { "page" } else { "-" }
+        );
     }
     Ok(())
 }

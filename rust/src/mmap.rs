@@ -1,0 +1,491 @@
+//! Minimal read-only memory mapping — the substrate of the zero-copy v3
+//! bundle path (`runtime::open_bundle_with`).
+//!
+//! The offline registry has no `memmap2`, so the mapping syscalls are
+//! declared directly against the C library Rust already links on unix
+//! (`mmap` / `munmap` / `madvise`); non-unix targets fall back to an
+//! owned read of the file, which keeps every caller correct (just not
+//! zero-copy). Three layers:
+//!
+//! * [`Mmap`] — an `Arc`-shared, read-only mapping of one file, with
+//!   best-effort [`Mmap::advise`] paging hints (`Random` for the
+//!   demand-paged rerank table, `WillNeed` for the hot graph/filter
+//!   sections).
+//! * [`MappedSlice<T>`] — a typed `&[T]` view into a mapping, validated
+//!   for bounds *and* alignment at construction (a misaligned section is
+//!   a named error, never UB). Holding the `Arc<Mmap>` pins the mapping
+//!   for the slice's lifetime.
+//! * [`CowSlice<T>`] — `Owned(Vec<T>)` or `Mapped(MappedSlice<T>)`
+//!   behind one `Deref<Target = [T]>`, so the CSR adjacency, the SQ8
+//!   code table, and the f32 rerank rows can be backed by either heap
+//!   memory or the page cache without the search path knowing.
+//!
+//! Reinterpreting mapped bytes as `u32`/`f32` assumes the host is
+//! little-endian (the v3 on-disk layout is fixed-width LE); the v3
+//! reader refuses to open on big-endian hosts rather than serve
+//! byte-swapped data.
+
+use anyhow::{ensure, Context, Result};
+use std::marker::PhantomData;
+use std::ops::Deref;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Paging-pattern hints forwarded to `madvise` (no-ops on non-unix
+/// targets and on owned fallback buffers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Advice {
+    /// Expect random access; don't read ahead (the HIGH rerank table).
+    Random,
+    /// Expect imminent use; read ahead asynchronously (GRPH / LOWQ).
+    WillNeed,
+}
+
+#[cfg(unix)]
+mod sys {
+    use std::ffi::c_void;
+
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+    // Same numeric values on Linux and the BSDs (macOS included).
+    pub const MADV_RANDOM: i32 = 1;
+    pub const MADV_WILLNEED: i32 = 3;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+        pub fn madvise(addr: *mut c_void, len: usize, advice: i32) -> i32;
+    }
+}
+
+enum Backing {
+    /// A live `mmap(2)` region (unmapped on drop).
+    #[cfg(unix)]
+    Mapped { ptr: *const u8, len: usize },
+    /// Owned fallback: the whole file read into memory (non-unix
+    /// targets, and zero-length files — `mmap` rejects `len == 0`).
+    Owned(Vec<u8>),
+}
+
+/// A read-only mapping of one file, shared via `Arc` by every typed view
+/// carved out of it.
+pub struct Mmap {
+    backing: Backing,
+}
+
+// SAFETY: the region is mapped PROT_READ and never written through; a
+// shared `&[u8]` over it is as thread-safe as any other shared slice.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `path` read-only. Falls back to an owned read on non-unix
+    /// targets and for empty files.
+    pub fn map(path: impl AsRef<Path>) -> Result<Arc<Self>> {
+        let path = path.as_ref();
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            let f = std::fs::File::open(path)
+                .with_context(|| format!("open {}", path.display()))?;
+            let len = f
+                .metadata()
+                .with_context(|| format!("stat {}", path.display()))?
+                .len() as usize;
+            if len > 0 {
+                let ptr = unsafe {
+                    sys::mmap(
+                        std::ptr::null_mut(),
+                        len,
+                        sys::PROT_READ,
+                        sys::MAP_PRIVATE,
+                        f.as_raw_fd(),
+                        0,
+                    )
+                };
+                ensure!(
+                    ptr as isize != -1,
+                    "mmap({}) failed: {}",
+                    path.display(),
+                    std::io::Error::last_os_error()
+                );
+                return Ok(Arc::new(Self {
+                    backing: Backing::Mapped { ptr: ptr as *const u8, len },
+                }));
+            }
+        }
+        let buf =
+            std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+        Ok(Arc::new(Self { backing: Backing::Owned(buf) }))
+    }
+
+    /// The mapped bytes.
+    #[inline]
+    pub fn as_slice(&self) -> &[u8] {
+        match &self.backing {
+            #[cfg(unix)]
+            // SAFETY: ptr/len come from a successful mmap that lives
+            // until drop; the region is never written.
+            Backing::Mapped { ptr, len } => unsafe {
+                std::slice::from_raw_parts(*ptr, *len)
+            },
+            Backing::Owned(v) => v,
+        }
+    }
+
+    /// Mapping length in bytes.
+    #[inline]
+    pub fn len(&self) -> usize {
+        match &self.backing {
+            #[cfg(unix)]
+            Backing::Mapped { len, .. } => *len,
+            Backing::Owned(v) => v.len(),
+        }
+    }
+
+    /// True for an empty mapping.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True when the bytes are served by the page cache (a live mmap)
+    /// rather than an owned buffer.
+    pub fn is_mapped(&self) -> bool {
+        match &self.backing {
+            #[cfg(unix)]
+            Backing::Mapped { .. } => true,
+            Backing::Owned(_) => false,
+        }
+    }
+
+    /// Best-effort paging hint for `byte_off..byte_off + byte_len`. The
+    /// range is clamped to the mapping; errors are ignored (`madvise` is
+    /// advisory — a host with an unusual page size simply skips the
+    /// hint). No-op on owned backings.
+    pub fn advise(&self, byte_off: usize, byte_len: usize, advice: Advice) {
+        #[cfg(unix)]
+        if let Backing::Mapped { ptr, len } = &self.backing {
+            let start = byte_off.min(*len);
+            let end = byte_off.saturating_add(byte_len).min(*len);
+            if start >= end {
+                return;
+            }
+            let code = match advice {
+                Advice::Random => sys::MADV_RANDOM,
+                Advice::WillNeed => sys::MADV_WILLNEED,
+            };
+            // madvise wants a page-aligned start: v3 sections are
+            // page-aligned by layout, and a clamped/odd range just makes
+            // the hint a no-op, never an error path.
+            unsafe {
+                let _ = sys::madvise((*ptr as *mut u8).add(start).cast(), end - start, code);
+            }
+        }
+        #[cfg(not(unix))]
+        let _ = (byte_off, byte_len, advice);
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Backing::Mapped { ptr, len } = &self.backing {
+            // SAFETY: exact region returned by mmap; dropped once.
+            unsafe {
+                let _ = sys::munmap((*ptr as *mut u8).cast(), *len);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mmap")
+            .field("len", &self.len())
+            .field("mapped", &self.is_mapped())
+            .finish()
+    }
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for u8 {}
+    impl Sealed for u32 {}
+    impl Sealed for f32 {}
+}
+
+/// Element types a mapping may be reinterpreted as: fixed-width, no
+/// padding, any bit pattern valid. Sealed — the v3 layout only carries
+/// these three.
+pub trait Pod: sealed::Sealed + Copy + Send + Sync + 'static {}
+impl Pod for u8 {}
+impl Pod for u32 {}
+impl Pod for f32 {}
+
+/// A typed `&[T]` view into an [`Mmap`], bounds- and alignment-checked
+/// at construction. Cloning shares the mapping (an `Arc` bump).
+pub struct MappedSlice<T: Pod> {
+    map: Arc<Mmap>,
+    byte_off: usize,
+    /// Element count.
+    len: usize,
+    _marker: PhantomData<T>,
+}
+
+impl<T: Pod> MappedSlice<T> {
+    /// View `len` elements of `T` at `byte_off` into `map`. Rejects
+    /// out-of-bounds ranges and misaligned offsets with named errors —
+    /// the corruption-hardening contract of the v3 reader.
+    pub fn new(map: Arc<Mmap>, byte_off: usize, len: usize) -> Result<Self> {
+        let elem = std::mem::size_of::<T>();
+        let bytes = len
+            .checked_mul(elem)
+            .and_then(|b| b.checked_add(byte_off))
+            .context("mapped slice extent overflows")?;
+        ensure!(
+            bytes <= map.len(),
+            "mapped slice [{byte_off}..{bytes}) exceeds the {}-byte mapping",
+            map.len()
+        );
+        let addr = map.as_slice().as_ptr() as usize + byte_off;
+        ensure!(
+            addr % std::mem::align_of::<T>() == 0,
+            "mapped slice at byte offset {byte_off} is not {}-byte aligned for {}",
+            std::mem::align_of::<T>(),
+            std::any::type_name::<T>()
+        );
+        Ok(Self { map, byte_off, len, _marker: PhantomData })
+    }
+
+    /// The viewed elements.
+    #[inline]
+    pub fn as_slice(&self) -> &[T] {
+        // SAFETY: bounds and alignment were validated in `new`; T is Pod
+        // (any bit pattern valid); the Arc pins the mapping.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.map.as_slice().as_ptr().add(self.byte_off) as *const T,
+                self.len,
+            )
+        }
+    }
+
+    /// Element count.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the view holds no elements.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl<T: Pod> Clone for MappedSlice<T> {
+    fn clone(&self) -> Self {
+        Self {
+            map: self.map.clone(),
+            byte_off: self.byte_off,
+            len: self.len,
+            _marker: PhantomData,
+        }
+    }
+}
+
+impl<T: Pod> Deref for MappedSlice<T> {
+    type Target = [T];
+    #[inline]
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Pod> std::fmt::Debug for MappedSlice<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "MappedSlice<{}>(off={}, len={})",
+            std::any::type_name::<T>(),
+            self.byte_off,
+            self.len
+        )
+    }
+}
+
+/// Heap- or mapping-backed storage behind one `&[T]` — the Cow the
+/// graph/store/dataset layers hold so the owned build path and the
+/// zero-copy serve path share every accessor.
+#[derive(Debug, Clone)]
+pub enum CowSlice<T: Pod> {
+    /// Heap storage (the build path and the owned bundle decode).
+    Owned(Vec<T>),
+    /// A view into a `.phnsw` mapping (the `serve --mmap` path).
+    Mapped(MappedSlice<T>),
+}
+
+impl<T: Pod> CowSlice<T> {
+    /// The stored elements.
+    #[inline]
+    pub fn as_slice(&self) -> &[T] {
+        match self {
+            CowSlice::Owned(v) => v,
+            CowSlice::Mapped(m) => m.as_slice(),
+        }
+    }
+
+    /// Mutable access to the owned backing. Panics on a mapped backing —
+    /// mapped structures are serve-time artifacts; only builders mutate.
+    #[inline]
+    pub fn owned_mut(&mut self) -> &mut Vec<T> {
+        match self {
+            CowSlice::Owned(v) => v,
+            CowSlice::Mapped(_) => {
+                panic!("storage is memory-mapped (read-only); mutation is build-path only")
+            }
+        }
+    }
+
+    /// True when backed by a mapping rather than the heap.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, CowSlice::Mapped(_))
+    }
+}
+
+impl<T: Pod> Deref for CowSlice<T> {
+    type Target = [T];
+    #[inline]
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Pod> From<Vec<T>> for CowSlice<T> {
+    fn from(v: Vec<T>) -> Self {
+        CowSlice::Owned(v)
+    }
+}
+
+impl<T: Pod + PartialEq> PartialEq for CowSlice<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Pod> Default for CowSlice<T> {
+    fn default() -> Self {
+        CowSlice::Owned(Vec::new())
+    }
+}
+
+/// Round `x` up to the next multiple of `a` (a power of two). The v3
+/// on-disk layout aligns every array to 64 bytes within its
+/// page-aligned section, so mapped views keep the absolute 64-byte
+/// alignment the SIMD gather kernels were tuned for.
+#[inline]
+pub const fn align_up(x: usize, a: usize) -> usize {
+    (x + a - 1) & !(a - 1)
+}
+
+/// Carve a [`CowSlice`] out of a mapping: a live view when `mapped`,
+/// else an owned copy of the same bytes (the v3 owned-decode path — one
+/// parser, two residency modes).
+pub fn take_cow<T: Pod>(
+    map: &Arc<Mmap>,
+    byte_off: usize,
+    len: usize,
+    mapped: bool,
+) -> Result<CowSlice<T>> {
+    let view = MappedSlice::<T>::new(map.clone(), byte_off, len)?;
+    Ok(if mapped {
+        CowSlice::Mapped(view)
+    } else {
+        CowSlice::Owned(view.as_slice().to_vec())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("phnsw_mmap_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn map_reads_file_bytes() {
+        let p = tmp("basic.bin");
+        let payload: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        std::fs::write(&p, &payload).unwrap();
+        let m = Mmap::map(&p).unwrap();
+        assert_eq!(m.len(), payload.len());
+        assert_eq!(m.as_slice(), &payload[..]);
+        // Hints must be accepted (best-effort) anywhere in the range.
+        m.advise(0, m.len(), Advice::WillNeed);
+        m.advise(4096, 4096, Advice::Random);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn empty_file_maps_as_owned() {
+        let p = tmp("empty.bin");
+        std::fs::write(&p, b"").unwrap();
+        let m = Mmap::map(&p).unwrap();
+        assert!(m.is_empty());
+        assert!(!m.is_mapped());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn typed_views_check_bounds_and_alignment() {
+        let p = tmp("typed.bin");
+        let mut bytes = Vec::new();
+        for v in [1u32, 2, 3, 4] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&p, &bytes).unwrap();
+        let m = Mmap::map(&p).unwrap();
+        let s = MappedSlice::<u32>::new(m.clone(), 0, 4).unwrap();
+        assert_eq!(&*s, &[1, 2, 3, 4]);
+        // Past the end → error, not UB.
+        assert!(MappedSlice::<u32>::new(m.clone(), 0, 5).is_err());
+        // Misaligned → a named error.
+        let err = MappedSlice::<u32>::new(m.clone(), 2, 1).unwrap_err();
+        assert!(err.to_string().contains("aligned"), "{err}");
+        // Owned copy equals the view.
+        let cow = take_cow::<u32>(&m, 4, 2, false).unwrap();
+        assert!(!cow.is_mapped());
+        assert_eq!(&*cow, &[2, 3]);
+        let cow = take_cow::<u32>(&m, 4, 2, true).unwrap();
+        assert_eq!(cow.is_mapped(), m.is_mapped());
+        assert_eq!(&*cow, &[2, 3]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "memory-mapped")]
+    fn mapped_cow_rejects_mutation() {
+        let p = tmp("romut.bin");
+        std::fs::write(&p, [0u8; 64]).unwrap();
+        let m = Mmap::map(&p).unwrap();
+        let mut cow = take_cow::<u8>(&m, 0, 64, true).unwrap();
+        std::fs::remove_file(&p).ok();
+        if !cow.is_mapped() {
+            // Non-unix fallback is owned; surface the expected panic
+            // message anyway so the test is meaningful everywhere.
+            panic!("storage is memory-mapped (read-only)");
+        }
+        cow.owned_mut().push(1);
+    }
+}

@@ -35,6 +35,13 @@
 //! unknown `SEGD` tag and silently serve the last shard as if it were
 //! the whole corpus. [`open_bundle`] accepts both versions.
 //!
+//! **Version 3** (`super::v3`) replaces the sequential frames with an
+//! up-front section directory and page-aligned payloads, so the whole
+//! file can be served straight from an `mmap` with zero deserialization
+//! — see the `v3` module docs for the layout. [`open_bundle_with`]
+//! dispatches all three versions; requesting `mmap` on a v1/v2 file is
+//! a loud error rather than a silent owned fallback.
+//!
 //! Every declared length is validated against the remaining file bytes
 //! *before* any allocation sized from it — a corrupt artifact surfaces
 //! as `Err`, never as an OOM abort (same policy as
@@ -54,17 +61,19 @@ use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 use std::sync::Arc;
 
-const MAGIC: &[u8; 4] = b"PHNB";
+pub(crate) const MAGIC: &[u8; 4] = b"PHNB";
 /// Classic single-segment layout (PR-2 compatible).
-const VERSION_SINGLE: u32 = 1;
+pub(crate) const VERSION_SINGLE: u32 = 1;
 /// Segmented layout (`SEGD` + per-shard section groups).
-const VERSION_SEGMENTED: u32 = 2;
+pub(crate) const VERSION_SEGMENTED: u32 = 2;
+/// Page-aligned zero-copy layout (`super::v3`), servable via mmap.
+pub(crate) const VERSION_V3: u32 = 3;
 
-const TAG_GRAPH: &[u8; 4] = b"GRPH";
-const TAG_PCA: &[u8; 4] = b"PCAM";
-const TAG_LOW: &[u8; 4] = b"LOWQ";
-const TAG_HIGH: &[u8; 4] = b"HIGH";
-const TAG_SEGDIR: &[u8; 4] = b"SEGD";
+pub(crate) const TAG_GRAPH: &[u8; 4] = b"GRPH";
+pub(crate) const TAG_PCA: &[u8; 4] = b"PCAM";
+pub(crate) const TAG_LOW: &[u8; 4] = b"LOWQ";
+pub(crate) const TAG_HIGH: &[u8; 4] = b"HIGH";
+pub(crate) const TAG_SEGDIR: &[u8; 4] = b"SEGD";
 
 /// Upper bound on shards in one bundle (bounds the section count a file
 /// may declare: `2 + 3 × MAX_SHARDS`).
@@ -207,8 +216,9 @@ impl IndexBundle {
     }
 }
 
-/// One decoded bundle section.
-enum Section {
+/// One decoded bundle section (shared by the v1/v2 streaming reader and
+/// the v3 mapped reader in `super::v3`).
+pub(crate) enum Section {
     Graph(HnswGraph),
     Pca(PcaModel),
     Low(Arc<dyn VectorStore>),
@@ -272,7 +282,7 @@ fn read_sections(path: &Path) -> Result<(u32, Vec<Section>)> {
 
 /// The shard directory (`SEGD` payload): `[u32 n_shards][u8 assignment]
 /// [u64 n_total]`.
-fn encode_segdir(map: &ShardMap) -> Vec<u8> {
+pub(crate) fn encode_segdir(map: &ShardMap) -> Vec<u8> {
     let mut out = Vec::with_capacity(13);
     out.extend_from_slice(&(map.n_shards() as u32).to_le_bytes());
     out.push(map.assignment().code());
@@ -280,7 +290,7 @@ fn encode_segdir(map: &ShardMap) -> Vec<u8> {
     out
 }
 
-fn decode_segdir(bytes: &[u8]) -> Result<ShardMap> {
+pub(crate) fn decode_segdir(bytes: &[u8]) -> Result<ShardMap> {
     ensure!(bytes.len() == 13, "SEGD section length {} != 13", bytes.len());
     let n_shards = u32::from_le_bytes(bytes[0..4].try_into()?) as usize;
     ensure!(n_shards >= 1 && n_shards <= MAX_SHARDS, "implausible shard count {n_shards}");
@@ -364,10 +374,42 @@ impl AnyBundle {
     }
 }
 
-/// Open a `.phnsw` artifact of either flavor, dispatching on the `SEGD`
-/// directory section.
+/// How to open a `.phnsw` artifact.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OpenOptions {
+    /// Serve GRPH/LOWQ/HIGH directly from a memory mapping of the file
+    /// (v3 layouts only): O(header) cold start, the f32 rerank table
+    /// demand-paged from disk. Requesting this on a v1/v2 file is a
+    /// loud error — rebuild with `phnsw build --bundle-format v3`.
+    pub mmap: bool,
+}
+
+/// Open a `.phnsw` artifact of any version (1, 2, or 3), dispatching on
+/// the `SEGD` directory section. Equivalent to [`open_bundle_with`] with
+/// default options (owned decode).
 pub fn open_bundle(path: impl AsRef<Path>) -> Result<AnyBundle> {
+    open_bundle_with(path, OpenOptions::default())
+}
+
+/// Open a `.phnsw` artifact with explicit residency options. A v3 file
+/// opens through the page-aligned directory (zero-copy when
+/// `opts.mmap`); v1/v2 files decode through the owned streaming path.
+pub fn open_bundle_with(path: impl AsRef<Path>, opts: OpenOptions) -> Result<AnyBundle> {
     let path = path.as_ref();
+    // Version sniff from the 8-byte prefix; malformed headers fall
+    // through to the legacy reader for its error messages.
+    let version = sniff_version(path);
+    if version == Some(VERSION_V3) {
+        return super::v3::open_v3(path, opts.mmap);
+    }
+    if opts.mmap {
+        let v = version.map_or_else(|| "unrecognized".to_string(), |v| format!("v{v}"));
+        bail!(
+            "--mmap serving requires a v3 page-aligned bundle, but {} is {v}; \
+             rebuild it with `phnsw build --bundle-format v3`",
+            path.display()
+        );
+    }
     let (version, sections) = read_sections(path)?;
     let segdir = sections.iter().find_map(|s| match s {
         Section::SegDir(map) => Some(*map),
@@ -386,8 +428,17 @@ pub fn open_bundle(path: impl AsRef<Path>) -> Result<AnyBundle> {
     }
 }
 
+/// Best-effort version sniff from the 8-byte file prefix; `None` when
+/// the file is unreadable or does not carry the bundle magic.
+fn sniff_version(path: &Path) -> Option<u32> {
+    let mut head = [0u8; 8];
+    let mut f = std::fs::File::open(path).ok()?;
+    f.read_exact(&mut head).ok()?;
+    (&head[0..4] == MAGIC).then(|| u32::from_le_bytes(head[4..8].try_into().unwrap()))
+}
+
 /// Assemble the classic single-segment bundle from its sections.
-fn assemble_single(sections: Vec<Section>) -> Result<IndexBundle> {
+pub(crate) fn assemble_single(sections: Vec<Section>) -> Result<IndexBundle> {
     let mut graph = None;
     let mut pca = None;
     let mut low: Option<Arc<dyn VectorStore>> = None;
@@ -419,7 +470,7 @@ fn assemble_single(sections: Vec<Section>) -> Result<IndexBundle> {
 /// Assemble a segmented index: pair the repeated `GRPH`/`LOWQ`/`HIGH`
 /// groups positionally (file order is shard order) and validate every
 /// shard against the directory and the shared PCA model.
-fn assemble_segmented(sections: Vec<Section>, map: ShardMap) -> Result<SegmentedIndex> {
+pub(crate) fn assemble_segmented(sections: Vec<Section>, map: ShardMap) -> Result<SegmentedIndex> {
     let mut pca = None;
     let mut graphs = Vec::new();
     let mut lows: Vec<Arc<dyn VectorStore>> = Vec::new();
@@ -460,6 +511,99 @@ fn assemble_segmented(sections: Vec<Section>, map: ShardMap) -> Result<Segmented
         segments.push(Segment { graph: Arc::new(graph), high: Arc::new(high), low });
     }
     Ok(SegmentedIndex { pca, segments, map })
+}
+
+/// One section row of [`BundleInfo`] — where a section's payload lives
+/// in the file, for `phnsw inspect`.
+#[derive(Debug, Clone)]
+pub struct SectionInfo {
+    /// Four-character section tag (e.g. `GRPH`).
+    pub tag: String,
+    /// Absolute byte offset of the payload in the file.
+    pub offset: u64,
+    /// Payload length in bytes.
+    pub len: u64,
+    /// True when the payload starts on a page (4096-byte) boundary —
+    /// the zero-copy requirement; always false for v1/v2 framed files.
+    pub page_aligned: bool,
+}
+
+/// What `phnsw inspect --bundle` prints: the section directory of a
+/// `.phnsw` file of any version, read without decoding any payload
+/// (only the 13-byte `SEGD` directory is parsed, for the shard count).
+#[derive(Debug, Clone)]
+pub struct BundleInfo {
+    /// Bundle format version (1, 2, or 3).
+    pub version: u32,
+    /// `"single"` or `"segmented"`.
+    pub flavor: &'static str,
+    /// Shard count (1 for a single-segment bundle).
+    pub n_shards: usize,
+    /// Total file length in bytes.
+    pub file_len: u64,
+    /// Every section in file order (unknown tags included).
+    pub sections: Vec<SectionInfo>,
+}
+
+/// Read a `.phnsw` file's section directory without decoding payloads —
+/// the `phnsw inspect` entry point and a loud v3-vs-v1/v2 discriminator.
+pub fn inspect_bundle(path: impl AsRef<Path>) -> Result<BundleInfo> {
+    use std::io::{Seek, SeekFrom};
+    let path = path.as_ref();
+    if sniff_version(path) == Some(VERSION_V3) {
+        return super::v3::inspect_v3(path);
+    }
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let file_len = f.metadata().with_context(|| format!("stat {}", path.display()))?.len();
+    let mut r = BufReader::new(f);
+    let mut head = [0u8; 12];
+    r.read_exact(&mut head).context("bundle header")?;
+    ensure!(&head[0..4] == MAGIC, "bad bundle magic {:?}", &head[0..4]);
+    let version = u32::from_le_bytes(head[4..8].try_into()?);
+    ensure!(
+        version == VERSION_SINGLE || version == VERSION_SEGMENTED,
+        "unsupported bundle version {version}"
+    );
+    let n_sections = u32::from_le_bytes(head[8..12].try_into()?);
+    ensure!(n_sections as usize <= 2 + 3 * MAX_SHARDS, "implausible section count {n_sections}");
+    let mut consumed = 12u64;
+    let mut sections = Vec::with_capacity(n_sections as usize);
+    let mut n_shards = 1usize;
+    for _ in 0..n_sections {
+        let mut tag = [0u8; 4];
+        r.read_exact(&mut tag).context("section tag")?;
+        let mut lenb = [0u8; 8];
+        r.read_exact(&mut lenb).context("section length")?;
+        let len = u64::from_le_bytes(lenb);
+        consumed += 12;
+        ensure!(
+            len <= file_len.saturating_sub(consumed),
+            "section {:?} declares {len} bytes but only {} remain",
+            tag,
+            file_len.saturating_sub(consumed)
+        );
+        if &tag == TAG_SEGDIR {
+            let mut payload = vec![0u8; len as usize];
+            r.read_exact(&mut payload).context("SEGD payload")?;
+            n_shards = decode_segdir(&payload)?.n_shards();
+        } else {
+            r.seek(SeekFrom::Current(len as i64)).context("skip section payload")?;
+        }
+        sections.push(SectionInfo {
+            tag: String::from_utf8_lossy(&tag).into_owned(),
+            offset: consumed,
+            len,
+            page_aligned: consumed % 4096 == 0,
+        });
+        consumed += len;
+    }
+    Ok(BundleInfo {
+        version,
+        flavor: if version == VERSION_SEGMENTED { "segmented" } else { "single" },
+        n_shards,
+        file_len,
+        sections,
+    })
 }
 
 /// Write a segmented index as one `.phnsw` artifact. An `S = 1` index is

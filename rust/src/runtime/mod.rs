@@ -16,7 +16,12 @@
 pub mod artifacts;
 pub mod bundle;
 pub mod engine;
+pub mod v3;
 
 pub use artifacts::{ArtifactRegistry, Executable};
-pub use bundle::{open_bundle, save_segmented, AnyBundle, IndexBundle};
+pub use bundle::{
+    inspect_bundle, open_bundle, open_bundle_with, save_segmented, AnyBundle, BundleInfo,
+    IndexBundle, OpenOptions, SectionInfo,
+};
 pub use engine::XlaRerankEngine;
+pub use v3::{save_v3, save_v3_single};

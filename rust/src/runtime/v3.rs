@@ -1,0 +1,368 @@
+//! The v3 `.phnsw` layout: page-aligned sections behind an up-front
+//! directory, servable straight from a memory mapping.
+//!
+//! ## Layout
+//!
+//! ```text
+//!   header (16 B):  magic "PHNB"  u32 version = 3  u32 n_sections  u32 reserved
+//!   directory:      n_sections × 24 B entries
+//!                   [4-byte tag][u32 reserved][u64 abs_offset][u64 len]
+//!   payloads:       each at a 4096-aligned absolute offset, gaps zero-padded
+//! ```
+//!
+//! Section tags are the v1/v2 set; the payload *encodings* differ where
+//! zero-copy needs them to:
+//!
+//! | tag    | v3 payload |
+//! |--------|------------|
+//! | `SEGD` | shard directory (same 13-byte encoding as v2; segmented flavor only) |
+//! | `PCAM` | [`PcaModel::to_bytes`] (small; always decoded owned) |
+//! | `GRPH` | `HNS3` image — CSR arrays 64-byte aligned in place (`graph::serialize`) |
+//! | `LOWQ` | `F32P`/`SQ8P` — SIMD-padded rows, 64-byte-aligned payload (`store`) |
+//! | `HIGH` | `[u32 dim][u32 reserved][u64 n]` → pad 64 → `n × dim × f32-le` |
+//!
+//! The **single** flavor is `PCAM, GRPH, LOWQ, HIGH`; the **segmented**
+//! flavor leads with `SEGD, PCAM` then one `GRPH, LOWQ, HIGH` group per
+//! shard in shard order (flavor is decided by `SEGD`'s presence, as in
+//! v2). All integers are fixed-width little-endian, every array a
+//! reader hands to the kernels is 64-byte aligned absolutely
+//! (page-aligned section + 64-aligned internal offset), and section
+//! lengths are exact — padding lives *between* sections.
+//!
+//! [`open_v3`] is one parser with two residency modes: with `mmap` the
+//! GRPH/LOWQ/HIGH arrays stay views into the mapping (cold start is
+//! O(header): map, validate the directory and CSR offsets, go — the
+//! dominant HIGH section is hinted `madvise(Random)` and faulted in on
+//! demand by the rerank, while GRPH/LOWQ get `WillNeed` readahead);
+//! without it the same views are copied into owned storage. Either way
+//! the search results are bitwise identical to a v2 decode of the same
+//! index, pinned by `tests/bundle_v3.rs`.
+
+use super::bundle::{
+    assemble_segmented, assemble_single, decode_segdir, encode_segdir, AnyBundle, BundleInfo,
+    Section, SectionInfo, MAGIC, MAX_SHARDS, TAG_GRAPH, TAG_HIGH, TAG_LOW, TAG_PCA, TAG_SEGDIR,
+    VERSION_V3,
+};
+use crate::dataset::VectorSet;
+use crate::graph::{serialize, HnswGraph};
+use crate::mmap::{align_up, take_cow, Advice, Mmap};
+use crate::pca::PcaModel;
+use crate::segment::SegmentedIndex;
+use crate::store::{store_from_v3_section, VectorStore};
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{BufWriter, Seek, SeekFrom, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Section payload alignment: one page. Sections start on page
+/// boundaries so `madvise` ranges are exact and mapped views inherit
+/// every smaller power-of-two alignment the kernels need.
+pub(crate) const PAGE: usize = 4096;
+
+/// Byte length of one directory entry.
+const DIR_ENTRY: usize = 24;
+
+/// Byte length of the fixed file header.
+const HEADER: usize = 16;
+
+/// Offset of the f32 rows inside a v3 `HIGH` payload (header padded to
+/// one cache line).
+const HIGH3_DATA_OFF: usize = 64;
+
+/// Staging-buffer size for the streamed `HIGH` rows.
+const CHUNK: usize = 64 * 1024;
+
+// ---- writer ----------------------------------------------------------
+
+/// Incremental v3 writer: header + zeroed directory up front, payloads
+/// page-padded as they stream, the real directory patched in at the end
+/// (the file is written once and seeked once).
+struct V3Writer {
+    w: BufWriter<std::fs::File>,
+    entries: Vec<([u8; 4], u64, u64)>,
+    n_sections: usize,
+    pos: u64,
+}
+
+impl V3Writer {
+    fn create(path: &Path, n_sections: usize) -> Result<Self> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION_V3.to_le_bytes())?;
+        w.write_all(&(n_sections as u32).to_le_bytes())?;
+        w.write_all(&0u32.to_le_bytes())?;
+        let dir_bytes = DIR_ENTRY * n_sections;
+        w.write_all(&vec![0u8; dir_bytes])?;
+        Ok(Self { w, entries: Vec::with_capacity(n_sections), n_sections, pos: (HEADER + dir_bytes) as u64 })
+    }
+
+    fn pad_to_page(&mut self) -> Result<()> {
+        let target = align_up(self.pos as usize, PAGE) as u64;
+        if target > self.pos {
+            self.w.write_all(&vec![0u8; (target - self.pos) as usize])?;
+            self.pos = target;
+        }
+        Ok(())
+    }
+
+    /// Write one buffered payload at the next page boundary.
+    fn section(&mut self, tag: &[u8; 4], payload: &[u8]) -> Result<()> {
+        self.pad_to_page()?;
+        self.entries.push((*tag, self.pos, payload.len() as u64));
+        self.w.write_all(payload)?;
+        self.pos += payload.len() as u64;
+        Ok(())
+    }
+
+    /// Stream the dominant `HIGH` section without materializing a second
+    /// copy of the corpus (same policy as the v1/v2 writer).
+    fn section_high(&mut self, high: &VectorSet) -> Result<()> {
+        self.pad_to_page()?;
+        let len = HIGH3_DATA_OFF as u64 + high.flat().len() as u64 * 4;
+        self.entries.push((*TAG_HIGH, self.pos, len));
+        let mut head = Vec::with_capacity(HIGH3_DATA_OFF);
+        head.extend_from_slice(&(high.dim() as u32).to_le_bytes());
+        head.extend_from_slice(&0u32.to_le_bytes());
+        head.extend_from_slice(&(high.len() as u64).to_le_bytes());
+        head.resize(HIGH3_DATA_OFF, 0);
+        self.w.write_all(&head)?;
+        let mut chunk: Vec<u8> = Vec::with_capacity(CHUNK);
+        for &x in high.flat() {
+            chunk.extend_from_slice(&x.to_le_bytes());
+            if chunk.len() >= CHUNK {
+                self.w.write_all(&chunk)?;
+                chunk.clear();
+            }
+        }
+        self.w.write_all(&chunk)?;
+        self.pos += len;
+        Ok(())
+    }
+
+    /// Patch the directory over its placeholder and flush.
+    fn finish(self) -> Result<()> {
+        ensure!(
+            self.entries.len() == self.n_sections,
+            "v3 writer: {} sections written, {} declared",
+            self.entries.len(),
+            self.n_sections
+        );
+        let mut f = self
+            .w
+            .into_inner()
+            .map_err(|e| anyhow::anyhow!("flush v3 bundle: {e}"))?;
+        f.seek(SeekFrom::Start(HEADER as u64))?;
+        let mut dir = Vec::with_capacity(DIR_ENTRY * self.entries.len());
+        for (tag, off, len) in &self.entries {
+            dir.extend_from_slice(tag);
+            dir.extend_from_slice(&0u32.to_le_bytes());
+            dir.extend_from_slice(&off.to_le_bytes());
+            dir.extend_from_slice(&len.to_le_bytes());
+        }
+        f.write_all(&dir)?;
+        Ok(())
+    }
+}
+
+/// Write one monolithic index in the v3 page-aligned layout.
+pub fn save_v3_single(
+    path: impl AsRef<Path>,
+    graph: &HnswGraph,
+    pca: &PcaModel,
+    low: &dyn VectorStore,
+    high: &VectorSet,
+) -> Result<()> {
+    let mut w = V3Writer::create(path.as_ref(), 4)?;
+    w.section(TAG_PCA, &pca.to_bytes())?;
+    w.section(TAG_GRAPH, &serialize::to_v3_bytes(graph)?)?;
+    w.section(TAG_LOW, &low.to_bytes_v3())?;
+    w.section_high(high)?;
+    w.finish()
+}
+
+/// Write a segmented index in the v3 page-aligned layout. As with the
+/// v2 writer, an `S = 1` index is written in the single flavor (no
+/// `SEGD`), so flavor detection stays uniform across versions.
+pub fn save_v3(path: impl AsRef<Path>, index: &SegmentedIndex) -> Result<()> {
+    let s = index.n_segments();
+    ensure!(s >= 1, "index holds no segments");
+    ensure!(s <= MAX_SHARDS, "{s} shards exceeds the bundle cap {MAX_SHARDS}");
+    if s == 1 {
+        let seg = &index.segments[0];
+        return save_v3_single(path, &seg.graph, &index.pca, seg.low.as_ref(), &seg.high);
+    }
+    let mut w = V3Writer::create(path.as_ref(), 2 + 3 * s)?;
+    w.section(TAG_SEGDIR, &encode_segdir(&index.map))?;
+    w.section(TAG_PCA, &index.pca.to_bytes())?;
+    for seg in &index.segments {
+        w.section(TAG_GRAPH, &serialize::to_v3_bytes(&seg.graph)?)?;
+        w.section(TAG_LOW, &seg.low.to_bytes_v3())?;
+        w.section_high(&seg.high)?;
+    }
+    w.finish()
+}
+
+// ---- reader ----------------------------------------------------------
+
+struct DirEntry {
+    tag: [u8; 4],
+    offset: u64,
+    len: u64,
+}
+
+/// Parse and bound-check the v3 section directory. Every entry is
+/// validated against the file length *here*, before any payload view is
+/// constructed; page alignment is reported but enforced by the open
+/// path (so `inspect` can still display a misaligned file's directory).
+fn read_directory(map: &Mmap, path: &Path) -> Result<Vec<DirEntry>> {
+    let bytes = map.as_slice();
+    ensure!(bytes.len() >= HEADER, "{}: v3 bundle truncated before header", path.display());
+    ensure!(&bytes[0..4] == MAGIC, "bad bundle magic {:?}", &bytes[0..4]);
+    let version = u32::from_le_bytes(bytes[4..8].try_into()?);
+    ensure!(version == VERSION_V3, "expected a v3 bundle, found version {version}");
+    let n_sections = u32::from_le_bytes(bytes[8..12].try_into()?) as usize;
+    ensure!(n_sections <= 2 + 3 * MAX_SHARDS, "implausible section count {n_sections}");
+    let dir_end = HEADER + n_sections * DIR_ENTRY;
+    ensure!(
+        dir_end <= bytes.len(),
+        "{}: v3 bundle truncated in the section directory",
+        path.display()
+    );
+    let mut entries = Vec::with_capacity(n_sections);
+    for i in 0..n_sections {
+        let e = HEADER + i * DIR_ENTRY;
+        let tag: [u8; 4] = bytes[e..e + 4].try_into().unwrap();
+        let offset = u64::from_le_bytes(bytes[e + 8..e + 16].try_into()?);
+        let len = u64::from_le_bytes(bytes[e + 16..e + 24].try_into()?);
+        let end = offset
+            .checked_add(len)
+            .with_context(|| format!("section {tag:?}: offset + length overflows"))?;
+        ensure!(
+            end <= bytes.len() as u64,
+            "section {:?} [{offset}..{end}) exceeds the {}-byte file",
+            tag,
+            bytes.len()
+        );
+        entries.push(DirEntry { tag, offset, len });
+    }
+    Ok(entries)
+}
+
+/// Open a v3 bundle. With `mapped`, GRPH/LOWQ/HIGH stay views into the
+/// mapping (zero-copy, demand-paged); otherwise their bytes are copied
+/// into owned storage through the same parser.
+pub(crate) fn open_v3(path: &Path, mapped: bool) -> Result<AnyBundle> {
+    if cfg!(target_endian = "big") {
+        bail!(
+            "v3 bundles are little-endian zero-copy images and cannot be served \
+             on a big-endian host; rebuild the index here or use a v2 bundle"
+        );
+    }
+    let map = Mmap::map(path)?;
+    let entries = read_directory(&map, path)?;
+    for e in &entries {
+        // The zero-copy contract: a payload off the page grid would make
+        // every derived view misaligned. Reject it by name, never UB.
+        ensure!(
+            e.offset % PAGE as u64 == 0,
+            "section {:?} payload at offset {} is not page-aligned",
+            e.tag,
+            e.offset
+        );
+        if mapped {
+            // The hot/cold split of the paper, in paging-hint form: the
+            // bulky rerank table is random-access cold data; the graph
+            // and filter codes are the hot path and get readahead.
+            let (off, len) = (e.offset as usize, e.len as usize);
+            match &e.tag {
+                TAG_HIGH => map.advise(off, len, Advice::Random),
+                TAG_GRAPH | TAG_LOW => map.advise(off, len, Advice::WillNeed),
+                _ => {}
+            }
+        }
+    }
+    let mut sections = Vec::with_capacity(entries.len());
+    for e in &entries {
+        let (off, len) = (e.offset as usize, e.len as usize);
+        match &e.tag {
+            TAG_GRAPH => {
+                sections.push(Section::Graph(serialize::from_v3_section(&map, off, len, mapped)?))
+            }
+            TAG_PCA => sections
+                .push(Section::Pca(PcaModel::from_bytes(&map.as_slice()[off..off + len])?)),
+            TAG_LOW => sections.push(Section::Low(store_from_v3_section(&map, off, len, mapped)?)),
+            TAG_HIGH => sections.push(Section::High(decode_high_v3(&map, off, len, mapped)?)),
+            TAG_SEGDIR => {
+                sections.push(Section::SegDir(decode_segdir(&map.as_slice()[off..off + len])?))
+            }
+            // Unknown tags are skipped: newer writers may append
+            // sections old readers do not understand.
+            _ => {}
+        }
+    }
+    let segdir = sections.iter().find_map(|s| match s {
+        Section::SegDir(m) => Some(*m),
+        _ => None,
+    });
+    match segdir {
+        None => Ok(AnyBundle::Single(assemble_single(sections)?)),
+        Some(shard_map) => Ok(AnyBundle::Segmented(assemble_segmented(sections, shard_map)?)),
+    }
+}
+
+/// Decode a v3 `HIGH` payload: the rerank rows stay a view into the
+/// mapping when `mapped` (demand-paged by the rerank stage).
+fn decode_high_v3(map: &Arc<Mmap>, byte_off: usize, byte_len: usize, mapped: bool) -> Result<VectorSet> {
+    let end = byte_off
+        .checked_add(byte_len)
+        .filter(|&e| e <= map.len())
+        .context("HIGH v3 section exceeds the mapping")?;
+    let sec = &map.as_slice()[byte_off..end];
+    ensure!(sec.len() >= HIGH3_DATA_OFF, "HIGH v3 section too short");
+    let dim = u32::from_le_bytes(sec[0..4].try_into()?) as usize;
+    let n = u64::from_le_bytes(sec[8..16].try_into()?);
+    ensure!(dim >= 1 && dim <= 1 << 20, "implausible HIGH section dim {dim}");
+    // Checked arithmetic: a crafted n must fail validation, not wrap.
+    let want = n
+        .checked_mul(dim as u64 * 4)
+        .and_then(|p| p.checked_add(HIGH3_DATA_OFF as u64))
+        .unwrap_or(u64::MAX);
+    ensure!(byte_len as u64 == want, "HIGH v3 section length {byte_len} != expected {want}");
+    let data = take_cow::<f32>(map, byte_off + HIGH3_DATA_OFF, n as usize * dim, mapped)?;
+    Ok(VectorSet::from_cow(dim, data))
+}
+
+/// `phnsw inspect` for v3 files: the directory as stored, payloads
+/// untouched (only `SEGD`'s 13 bytes are parsed, for the shard count).
+/// Misaligned sections are *displayed* (with `page_aligned: false`), not
+/// rejected — inspect is the debugging aid for exactly that corruption.
+pub(crate) fn inspect_v3(path: &Path) -> Result<BundleInfo> {
+    let map = Mmap::map(path)?;
+    let entries = read_directory(&map, path)?;
+    let mut n_shards = 1usize;
+    let mut segmented = false;
+    for e in &entries {
+        if &e.tag == TAG_SEGDIR {
+            let (off, len) = (e.offset as usize, e.len as usize);
+            n_shards = decode_segdir(&map.as_slice()[off..off + len])?.n_shards();
+            segmented = true;
+        }
+    }
+    Ok(BundleInfo {
+        version: VERSION_V3,
+        flavor: if segmented { "segmented" } else { "single" },
+        n_shards,
+        file_len: map.len() as u64,
+        sections: entries
+            .iter()
+            .map(|e| SectionInfo {
+                tag: String::from_utf8_lossy(&e.tag).into_owned(),
+                offset: e.offset,
+                len: e.len,
+                page_aligned: e.offset % PAGE as u64 == 0,
+            })
+            .collect(),
+    })
+}

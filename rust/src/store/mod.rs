@@ -31,7 +31,9 @@ pub use aligned::{AlignedBytes, AlignedF32};
 pub use sq8::Sq8Store;
 
 use crate::dataset::VectorSet;
+use crate::mmap::{align_up, take_cow, CowSlice, Mmap};
 use crate::search::dist::l2_sq_batch;
+use std::sync::Arc;
 
 /// Storage codec identifier.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -136,6 +138,12 @@ pub trait VectorStore: Send + Sync {
     /// Serialize to a self-describing binary blob (see each codec's
     /// format note). Round-trips bitwise through [`store_from_bytes`].
     fn to_bytes(&self) -> Vec<u8>;
+
+    /// Serialize to the v3 zero-copy blob (`F32P` / `SQ8P`): rows stored
+    /// at the SIMD-padded width with the payload 64-byte aligned within
+    /// the blob, so a page-aligned mmap section can be served in place
+    /// by [`store_from_v3_section`] with no re-padding pass.
+    fn to_bytes_v3(&self) -> Vec<u8>;
 }
 
 /// The f32 codec: today's [`VectorSet`] semantics with rows pre-padded to
@@ -143,12 +151,17 @@ pub trait VectorStore: Send + Sync {
 ///
 /// Blob format (`F32S`):
 /// `[magic "F32S"][u32 dim][u64 n][n × dim × f32-le]` (unpadded rows).
+///
+/// v3 blob format (`F32P`, zero-copy servable):
+/// `[magic "F32P"][u32 dim][u32 padded][u64 n]` → pad to 64 →
+/// `n × padded × f32-le` (rows stored at the SIMD-padded width).
 #[derive(Debug, Clone)]
 pub struct F32Store {
     dim: usize,
     padded: usize,
-    /// Row-major `n × padded`, pad lanes zero.
-    data: Vec<f32>,
+    /// Row-major `n × padded`, pad lanes zero. Heap-owned, or a view
+    /// into a memory-mapped v3 bundle on the zero-copy serve path.
+    data: CowSlice<f32>,
 }
 
 impl F32Store {
@@ -160,7 +173,7 @@ impl F32Store {
         for (i, row) in vs.iter().enumerate() {
             data[i * padded..i * padded + dim].copy_from_slice(row);
         }
-        Self { dim, padded, data }
+        Self { dim, padded, data: data.into() }
     }
 
     /// Deserialize a blob written by [`VectorStore::to_bytes`].
@@ -189,6 +202,40 @@ impl F32Store {
                 data[i * padded + d] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
             }
         }
+        Ok(Self { dim, padded, data: data.into() })
+    }
+
+    /// Reconstruct from an `F32P` image living at
+    /// `byte_off..byte_off + byte_len` of `map`. With `mapped` the
+    /// padded rows stay a view into the mapping (zero copy); otherwise
+    /// they are copied out. Every count is bound-checked against the
+    /// section length before any view is constructed.
+    pub(crate) fn from_v3_section(
+        map: &Arc<Mmap>,
+        byte_off: usize,
+        byte_len: usize,
+        mapped: bool,
+    ) -> crate::Result<Self> {
+        use anyhow::{ensure, Context};
+        let end = byte_off
+            .checked_add(byte_len)
+            .filter(|&e| e <= map.len())
+            .context("F32P section exceeds the mapping")?;
+        let sec = &map.as_slice()[byte_off..end];
+        ensure!(sec.len() >= 20, "F32P blob too short");
+        ensure!(&sec[0..4] == b"F32P", "bad F32P magic {:?}", &sec[0..4]);
+        let dim = u32::from_le_bytes(sec[4..8].try_into()?) as usize;
+        let padded = u32::from_le_bytes(sec[8..12].try_into()?) as usize;
+        let n = u64::from_le_bytes(sec[12..20].try_into()?);
+        ensure!(dim >= 1 && dim <= 1 << 20, "implausible F32P dim {dim}");
+        ensure!(padded == pad_dim(dim), "F32P padded width {padded} != pad_dim({dim})");
+        let data_off = align_up(20, 64);
+        let want = n
+            .checked_mul(padded as u64 * 4)
+            .and_then(|p| p.checked_add(data_off as u64))
+            .unwrap_or(u64::MAX);
+        ensure!(byte_len as u64 == want, "F32P blob length {byte_len} != expected {want}");
+        let data = take_cow::<f32>(map, byte_off + data_off, n as usize * padded, mapped)?;
         Ok(Self { dim, padded, data })
     }
 
@@ -259,6 +306,21 @@ impl VectorStore for F32Store {
         }
         out
     }
+
+    fn to_bytes_v3(&self) -> Vec<u8> {
+        let n = self.len();
+        let data_off = align_up(20, 64);
+        let mut out = Vec::with_capacity(data_off + n * self.padded * 4);
+        out.extend_from_slice(b"F32P");
+        out.extend_from_slice(&(self.dim as u32).to_le_bytes());
+        out.extend_from_slice(&(self.padded as u32).to_le_bytes());
+        out.extend_from_slice(&(n as u64).to_le_bytes());
+        out.resize(data_off, 0);
+        for &x in self.data.as_slice() {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
 }
 
 /// Deserialize any codec's blob (dispatching on the magic) into a boxed
@@ -272,6 +334,29 @@ pub fn store_from_bytes(bytes: &[u8]) -> crate::Result<std::sync::Arc<dyn Vector
         b"F32S" => Ok(std::sync::Arc::new(F32Store::from_bytes(bytes)?)),
         b"SQ81" => Ok(std::sync::Arc::new(Sq8Store::from_bytes(bytes)?)),
         other => bail!("unknown vector store magic {other:?}"),
+    }
+}
+
+/// Reconstruct any codec's v3 zero-copy blob (dispatching on the magic)
+/// from a section of `map` — the v3 bundle reader's entry point. With
+/// `mapped` the row payload stays a view into the mapping.
+pub fn store_from_v3_section(
+    map: &Arc<Mmap>,
+    byte_off: usize,
+    byte_len: usize,
+    mapped: bool,
+) -> crate::Result<Arc<dyn VectorStore>> {
+    use anyhow::{bail, ensure};
+    ensure!(
+        byte_off.checked_add(byte_len).is_some_and(|e| e <= map.len()),
+        "v3 store section exceeds the mapping"
+    );
+    ensure!(byte_len >= 4, "v3 store section too short");
+    let magic = &map.as_slice()[byte_off..byte_off + 4];
+    match magic {
+        b"F32P" => Ok(Arc::new(F32Store::from_v3_section(map, byte_off, byte_len, mapped)?)),
+        b"SQ8P" => Ok(Arc::new(Sq8Store::from_v3_section(map, byte_off, byte_len, mapped)?)),
+        other => bail!("unknown v3 vector store magic {other:?}"),
     }
 }
 

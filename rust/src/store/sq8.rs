@@ -15,19 +15,26 @@
 
 use super::{pad_dim, Codec, StoreScratch, VectorStore};
 use crate::dataset::VectorSet;
+use crate::mmap::{align_up, take_cow, CowSlice, Mmap};
 use crate::search::dist::l2_sq_batch_sq8;
+use std::sync::Arc;
 
 /// Scalar-quantized (u8) vector store with per-dimension affine params.
 ///
 /// Blob format (`SQ81`):
 /// `[magic "SQ81"][u32 dim][u64 n][dim × f32 min][dim × f32 scale][n × dim × u8 codes]`
 /// (unpadded codes; the SIMD padding is rebuilt on load).
+///
+/// v3 blob format (`SQ8P`, zero-copy servable):
+/// `[magic "SQ8P"][u32 dim][u32 padded][u64 n][dim × f32 min][dim × f32 scale]`
+/// → pad to 64 → `n × padded × u8` codes (stored at the SIMD-padded width).
 #[derive(Debug, Clone)]
 pub struct Sq8Store {
     dim: usize,
     padded: usize,
-    /// Row-major `n × padded` codes, pad lanes 0.
-    codes: Vec<u8>,
+    /// Row-major `n × padded` codes, pad lanes 0. Heap-owned, or a view
+    /// into a memory-mapped v3 bundle on the zero-copy serve path.
+    codes: CowSlice<u8>,
     /// Per-dimension dequant offset (length `dim`).
     min: Vec<f32>,
     /// Per-dimension dequant step (length `dim`, strictly positive).
@@ -69,20 +76,21 @@ impl Sq8Store {
                 }
             })
             .collect();
-        let mut s = Self::from_params(dim, min, scale, Vec::new());
-        s.codes = vec![0u8; vs.len() * s.padded];
+        let padded = pad_dim(dim);
+        let inv_scale: Vec<f32> = scale.iter().map(|&s| 1.0 / s).collect();
+        let mut codes = vec![0u8; vs.len() * padded];
         for (i, row) in vs.iter().enumerate() {
-            let base = i * s.padded;
+            let base = i * padded;
             for d in 0..dim {
-                let c = ((row[d] - s.min[d]) * s.inv_scale[d]).round();
-                s.codes[base + d] = c.clamp(0.0, 255.0) as u8;
+                let c = ((row[d] - min[d]) * inv_scale[d]).round();
+                codes[base + d] = c.clamp(0.0, 255.0) as u8;
             }
         }
-        s
+        Self::from_params(dim, min, scale, codes.into())
     }
 
     /// Assemble from explicit params + pre-padded codes (internal).
-    fn from_params(dim: usize, min: Vec<f32>, scale: Vec<f32>, codes: Vec<u8>) -> Self {
+    fn from_params(dim: usize, min: Vec<f32>, scale: Vec<f32>, codes: CowSlice<u8>) -> Self {
         assert!(dim > 0, "dimension must be positive");
         assert_eq!(min.len(), dim);
         assert_eq!(scale.len(), dim);
@@ -126,13 +134,60 @@ impl Sq8Store {
             scale.iter().all(|&s| s > 0.0 && s.is_finite()),
             "SQ8 store scale must be positive and finite"
         );
-        let mut s = Self::from_params(dim, min, scale, Vec::new());
-        s.codes = vec![0u8; n * s.padded];
+        let padded = pad_dim(dim);
+        let mut codes = vec![0u8; n * padded];
         let payload = &bytes[16 + 8 * dim..];
         for (i, row) in payload.chunks_exact(dim).enumerate() {
-            s.codes[i * s.padded..i * s.padded + dim].copy_from_slice(row);
+            codes[i * padded..i * padded + dim].copy_from_slice(row);
         }
-        Ok(s)
+        Ok(Self::from_params(dim, min, scale, codes.into()))
+    }
+
+    /// Reconstruct from an `SQ8P` image living at
+    /// `byte_off..byte_off + byte_len` of `map`. With `mapped` the code
+    /// table stays a view into the mapping (zero copy); the small
+    /// per-dimension affine params are always decoded owned. Every count
+    /// is bound-checked against the section length before any view is
+    /// constructed.
+    pub(crate) fn from_v3_section(
+        map: &Arc<Mmap>,
+        byte_off: usize,
+        byte_len: usize,
+        mapped: bool,
+    ) -> crate::Result<Self> {
+        use anyhow::{ensure, Context};
+        let end = byte_off
+            .checked_add(byte_len)
+            .filter(|&e| e <= map.len())
+            .context("SQ8P section exceeds the mapping")?;
+        let sec = &map.as_slice()[byte_off..end];
+        ensure!(sec.len() >= 20, "SQ8P blob too short");
+        ensure!(&sec[0..4] == b"SQ8P", "bad SQ8P magic {:?}", &sec[0..4]);
+        let dim = u32::from_le_bytes(sec[4..8].try_into()?) as usize;
+        let padded = u32::from_le_bytes(sec[8..12].try_into()?) as usize;
+        let n = u64::from_le_bytes(sec[12..20].try_into()?);
+        ensure!(dim >= 1 && dim <= 1 << 20, "implausible SQ8P dim {dim}");
+        ensure!(padded == pad_dim(dim), "SQ8P padded width {padded} != pad_dim({dim})");
+        let codes_off = align_up(20 + 8 * dim, 64);
+        let want = n
+            .checked_mul(padded as u64)
+            .and_then(|p| p.checked_add(codes_off as u64))
+            .unwrap_or(u64::MAX);
+        ensure!(byte_len as u64 == want, "SQ8P blob length {byte_len} != expected {want}");
+        let f32s = |off: usize| -> Vec<f32> {
+            sec[off..off + 4 * dim]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        };
+        let min = f32s(20);
+        let scale = f32s(20 + 4 * dim);
+        ensure!(
+            scale.iter().all(|&s| s > 0.0 && s.is_finite()),
+            "SQ8P store scale must be positive and finite"
+        );
+        let codes = take_cow::<u8>(map, byte_off + codes_off, n as usize * padded, mapped)?;
+        Ok(Self::from_params(dim, min, scale, codes))
     }
 
     /// Per-dimension dequant offsets.
@@ -210,6 +265,25 @@ impl VectorStore for Sq8Store {
         for i in 0..n {
             out.extend_from_slice(&self.codes[i * self.padded..i * self.padded + self.dim]);
         }
+        out
+    }
+
+    fn to_bytes_v3(&self) -> Vec<u8> {
+        let n = self.len();
+        let codes_off = align_up(20 + 8 * self.dim, 64);
+        let mut out = Vec::with_capacity(codes_off + n * self.padded);
+        out.extend_from_slice(b"SQ8P");
+        out.extend_from_slice(&(self.dim as u32).to_le_bytes());
+        out.extend_from_slice(&(self.padded as u32).to_le_bytes());
+        out.extend_from_slice(&(n as u64).to_le_bytes());
+        for &m in &self.min {
+            out.extend_from_slice(&m.to_le_bytes());
+        }
+        for &s in &self.scale {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+        out.resize(codes_off, 0);
+        out.extend_from_slice(self.codes.as_slice());
         out
     }
 }

@@ -233,6 +233,15 @@ impl Workbench {
         IndexBundle::save(path, &self.graph, &self.pca, &low, &self.base)
     }
 
+    /// Save the assembled index in the v3 page-aligned `.phnsw` layout —
+    /// the same sections as [`Workbench::save_bundle`], re-encoded so a
+    /// server can serve them zero-copy from a memory mapping
+    /// (`phnsw serve --mmap`).
+    pub fn save_bundle_v3(&self, path: impl AsRef<std::path::Path>) -> crate::Result<()> {
+        let low = Sq8Store::from_set(&self.base_low);
+        crate::runtime::save_v3_single(path, &self.graph, &self.pca, &low, &self.base)
+    }
+
     /// Build a segmented index over the workbench corpus, sharing the
     /// workbench's fitted PCA model — so the monolithic and segmented
     /// stacks filter in the *same* low-dim space and recall deltas are

@@ -1,0 +1,266 @@
+//! Integration tests for the v3 page-aligned `.phnsw` layout: round
+//! trips in both residency modes (owned decode and zero-copy mmap),
+//! bitwise parity between them and against the pre-save engine,
+//! backward compatibility with v1/v2 files, the `--mmap`-on-legacy
+//! error, the corruption matrix, and `inspect` output.
+
+use phnsw::dataset::synthetic::{generate, SyntheticConfig};
+use phnsw::dataset::{ground_truth, VectorSet};
+use phnsw::graph::build::BuildConfig;
+use phnsw::metrics::recall_at_k;
+use phnsw::runtime::{
+    inspect_bundle, open_bundle, open_bundle_with, save_segmented, save_v3, AnyBundle, OpenOptions,
+};
+use phnsw::search::{AnnEngine, PhnswParams};
+use phnsw::segment::{build_segmented, SegmentSpec, SegmentedIndex, ShardAssignment};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const DIM_LOW: usize = 8;
+const PCA_SEED: u64 = 7;
+
+struct Fixture {
+    base: Arc<VectorSet>,
+    queries: VectorSet,
+    gt: Vec<Vec<u32>>,
+}
+
+fn fixture(n: usize, nq: usize) -> Fixture {
+    let cfg = SyntheticConfig { n_base: n, n_queries: nq, ..SyntheticConfig::tiny() };
+    let (base, queries) = generate(&cfg);
+    let gt = ground_truth(&base, &queries, 10);
+    Fixture { base: Arc::new(base), queries, gt }
+}
+
+fn build_index(f: &Fixture, shards: usize) -> SegmentedIndex {
+    let bc = BuildConfig { m: 8, ef_construction: 100, ..Default::default() };
+    let spec = SegmentSpec {
+        n_shards: shards,
+        build_threads: shards.min(2),
+        assignment: ShardAssignment::RoundRobin,
+    };
+    build_segmented(&f.base, &bc, DIM_LOW, PCA_SEED, &spec)
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("phnsw_v3test_{}_{name}.phnsw", std::process::id()))
+}
+
+fn open_owned(path: &std::path::Path) -> AnyBundle {
+    open_bundle_with(path, OpenOptions { mmap: false }).unwrap()
+}
+
+fn open_mmap(path: &std::path::Path) -> AnyBundle {
+    open_bundle_with(path, OpenOptions { mmap: true }).unwrap()
+}
+
+fn results(engine: &dyn AnnEngine, queries: &VectorSet) -> Vec<Vec<phnsw::search::Neighbor>> {
+    queries.iter().map(|q| engine.search(q)).collect()
+}
+
+// ---- round trips + parity -------------------------------------------
+
+#[test]
+fn v3_monolithic_owned_and_mmap_match_pre_save_bitwise() {
+    let f = fixture(1200, 30);
+    let idx = build_index(&f, 1);
+    let params = PhnswParams::default();
+    let pre = idx.engine(params.clone());
+    let before = results(&pre, &f.queries);
+
+    let path = tmp("mono");
+    save_v3(&path, &idx).unwrap();
+
+    for (label, any) in [("owned", open_owned(&path)), ("mmap", open_mmap(&path))] {
+        assert_eq!(any.n_segments(), 1, "{label}: S=1 writes the single flavor");
+        let after = results(any.engine(params.clone()).as_ref(), &f.queries);
+        assert_eq!(before, after, "{label} v3 round-trip must be bitwise identical");
+        // The demand-paged rerank table serves the same bytes.
+        for g in [0usize, 1, f.base.len() / 2, f.base.len() - 1] {
+            assert_eq!(any.high_row(g), f.base.row(g), "{label}: HIGH row {g}");
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn v3_segmented_owned_and_mmap_match_pre_save_bitwise() {
+    let f = fixture(1600, 30);
+    let idx = build_index(&f, 4);
+    let params = PhnswParams::default();
+    let pre = idx.engine(params.clone());
+    let before = results(&pre, &f.queries);
+
+    let path = tmp("seg4");
+    save_v3(&path, &idx).unwrap();
+
+    let owned = open_owned(&path);
+    let mapped = open_mmap(&path);
+    for (label, any) in [("owned", &owned), ("mmap", &mapped)] {
+        assert_eq!(any.n_segments(), 4, "{label}: shard count");
+        assert_eq!(any.len(), f.base.len(), "{label}: row count");
+        let after = results(any.engine(params.clone()).as_ref(), &f.queries);
+        assert_eq!(before, after, "{label} segmented v3 round-trip must be bitwise identical");
+    }
+    // And sanity: results are actually good, not just self-consistent.
+    let got: Vec<Vec<u32>> = before
+        .iter()
+        .map(|r| r.iter().map(|n| n.id).take(10).collect())
+        .collect();
+    let r = recall_at_k(&got, &f.gt, 10);
+    assert!(r > 0.8, "recall {r} suspiciously low for the parity fixture");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn v3_mmap_mode_really_maps_and_owned_mode_really_copies() {
+    let f = fixture(800, 5);
+    let idx = build_index(&f, 1);
+    let path = tmp("residency");
+    save_v3(&path, &idx).unwrap();
+
+    // Deleting the file after an owned open must not matter; the mapped
+    // open keeps serving from the (still-referenced) mapping on unix.
+    let owned = open_owned(&path);
+    let mapped = open_mmap(&path);
+    std::fs::remove_file(&path).unwrap();
+    let params = PhnswParams::default();
+    assert_eq!(
+        results(owned.engine(params.clone()).as_ref(), &f.queries),
+        results(mapped.engine(params).as_ref(), &f.queries),
+        "both residency modes serve identical results after unlink"
+    );
+}
+
+// ---- backward + forward compatibility --------------------------------
+
+#[test]
+fn v1_and_v2_bundles_still_open_and_mmap_on_them_fails_loudly() {
+    let f = fixture(1200, 20);
+    let idx = build_index(&f, 3);
+    let params = PhnswParams::default();
+    let pre = idx.engine(params.clone());
+    let before = results(&pre, &f.queries);
+
+    let path = tmp("legacy");
+    save_segmented(&path, &idx).unwrap();
+
+    // v2 opens as before (open_bundle and the explicit owned option).
+    let after = results(open_bundle(&path).unwrap().engine(params).as_ref(), &f.queries);
+    assert_eq!(before, after, "v2 read path must be unchanged");
+    let _ = open_owned(&path);
+
+    // ...but --mmap on a legacy file is a named error, not a silent
+    // owned fallback, and it tells the user how to rebuild.
+    let err = open_bundle_with(&path, OpenOptions { mmap: true }).unwrap_err().to_string();
+    assert!(
+        err.contains("requires a v3 page-aligned bundle"),
+        "unexpected mmap-on-v2 error: {err}"
+    );
+    assert!(err.contains("--bundle-format v3"), "error must name the rebuild flag: {err}");
+    std::fs::remove_file(&path).ok();
+}
+
+// ---- corruption matrix ----------------------------------------------
+
+/// Write a v3 file once, hand corrupted copies to each case.
+fn v3_bytes() -> Vec<u8> {
+    let f = fixture(600, 2);
+    let idx = build_index(&f, 1);
+    let path = tmp("corrupt_src");
+    save_v3(&path, &idx).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    bytes
+}
+
+fn open_raw(name: &str, bytes: &[u8]) -> anyhow::Error {
+    let path = tmp(name);
+    std::fs::write(&path, bytes).unwrap();
+    let err = open_bundle_with(&path, OpenOptions { mmap: true }).unwrap_err();
+    std::fs::remove_file(&path).ok();
+    err
+}
+
+#[test]
+fn v3_corruption_is_rejected_with_named_errors() {
+    let good = v3_bytes();
+
+    // Truncated before the fixed header.
+    let err = open_raw("trunc_head", &good[..8]).to_string();
+    assert!(err.contains("truncated"), "truncated-header error: {err}");
+
+    // Truncated mid-directory.
+    let err = open_raw("trunc_dir", &good[..20]).to_string();
+    assert!(err.contains("directory"), "truncated-directory error: {err}");
+
+    // Truncated payload: the last section's [off, off+len) now exceeds
+    // the file, caught at directory validation before any view exists.
+    let err = open_raw("trunc_high", &good[..good.len() - 4096]).to_string();
+    assert!(err.contains("exceeds"), "truncated-payload error: {err}");
+
+    // Bad magic: the version sniff no longer recognizes the file, so the
+    // mmap request reports the unrecognized layout and the owned path
+    // reports the magic itself.
+    let mut bad = good.clone();
+    bad[0..4].copy_from_slice(b"NOPE");
+    let err = open_raw("magic_mmap", &bad).to_string();
+    assert!(err.contains("unrecognized"), "bad-magic mmap error: {err}");
+    let path = tmp("magic_owned");
+    std::fs::write(&path, &bad).unwrap();
+    let err = open_bundle_with(&path, OpenOptions { mmap: false }).unwrap_err().to_string();
+    std::fs::remove_file(&path).ok();
+    assert!(err.contains("magic"), "bad-magic owned error: {err}");
+
+    // Misaligned section: patch the *last* directory entry's offset off
+    // the page grid (still 64-aligned, still in bounds) — the zero-copy
+    // contract check must reject it by name.
+    let n_sections = u32::from_le_bytes(good[8..12].try_into().unwrap()) as usize;
+    assert_eq!(n_sections, 4, "single-flavor v3 holds PCAM,GRPH,LOWQ,HIGH");
+    let e = 16 + (n_sections - 1) * 24;
+    let mut bad = good.clone();
+    let off = u64::from_le_bytes(bad[e + 8..e + 16].try_into().unwrap());
+    bad[e + 8..e + 16].copy_from_slice(&(off - 64).to_le_bytes());
+    let err = open_raw("misaligned", &bad).to_string();
+    assert!(err.contains("not page-aligned"), "misalignment error: {err}");
+}
+
+// ---- inspect ---------------------------------------------------------
+
+#[test]
+fn inspect_reports_v3_and_legacy_directories() {
+    let f = fixture(900, 2);
+
+    let seg = build_index(&f, 3);
+    let p3 = tmp("inspect_v3");
+    save_v3(&p3, &seg).unwrap();
+    let info = inspect_bundle(&p3).unwrap();
+    assert_eq!(info.version, 3);
+    assert_eq!(info.flavor, "segmented");
+    assert_eq!(info.n_shards, 3);
+    assert_eq!(info.file_len, std::fs::metadata(&p3).unwrap().len());
+    assert_eq!(info.sections.len(), 2 + 3 * 3, "SEGD + PCAM + 3×(GRPH,LOWQ,HIGH)");
+    assert_eq!(info.sections[0].tag, "SEGD");
+    for s in &info.sections {
+        assert!(s.page_aligned, "v3 section {} at {} must be page-aligned", s.tag, s.offset);
+        assert!(s.offset + s.len <= info.file_len, "section {} in bounds", s.tag);
+    }
+    std::fs::remove_file(&p3).ok();
+
+    let p2 = tmp("inspect_v2");
+    save_segmented(&p2, &seg).unwrap();
+    let info = inspect_bundle(&p2).unwrap();
+    assert_eq!(info.version, 2);
+    assert_eq!(info.flavor, "segmented");
+    assert_eq!(info.n_shards, 3);
+    assert_eq!(info.sections.len(), 2 + 3 * 3);
+    std::fs::remove_file(&p2).ok();
+
+    let mono = build_index(&f, 1);
+    let p1 = tmp("inspect_mono");
+    save_v3(&p1, &mono).unwrap();
+    let info = inspect_bundle(&p1).unwrap();
+    assert_eq!((info.version, info.flavor, info.n_shards), (3, "single", 1));
+    assert_eq!(info.sections.len(), 4);
+    std::fs::remove_file(&p1).ok();
+}

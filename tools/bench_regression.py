@@ -37,6 +37,21 @@ def main():
     committed = load(sys.argv[1])
     fresh = load(sys.argv[2])
 
+    # Bundle cold-start entries are required in both snapshots regardless
+    # of the kernel variant: the zero-copy open path must stay measured
+    # even on hosts where the SIMD speedup gate is skipped.
+    required = ("bundle_open_ms_owned", "bundle_open_ms_mmap")
+    missing = [
+        f"{which} snapshot is missing {name}"
+        for which, doc in (("committed", committed), ("fresh", fresh))
+        for name in required
+        if name not in doc["entries"]
+    ]
+    if missing:
+        for m in missing:
+            print(f"  - {m}")
+        sys.exit("error: bundle cold-start entries missing from bench snapshot")
+
     variant = fresh.get("kernel_variant", "unknown")
     if variant == "scalar":
         print(
