@@ -51,7 +51,8 @@ fn main() -> phnsw::Result<()> {
     let bundle_path =
         std::env::temp_dir().join(format!("phnsw_e2e_{}.phnsw", std::process::id()));
     w.save_bundle(&bundle_path)?;
-    let bundle = phnsw::runtime::IndexBundle::open(&bundle_path)?;
+    let bundle = phnsw::runtime::Bundle::open(&bundle_path, phnsw::runtime::OpenOptions::default())?
+        .into_single()?;
     let booted = bundle.searcher(PhnswParams::default());
     let native = w.phnsw(PhnswParams::default());
     for qi in 0..5.min(nq) {
@@ -89,7 +90,10 @@ fn main() -> phnsw::Result<()> {
     );
 
     // --- serve the full query set through the coordinator -------------
-    let server = Server::start(ServerConfig { workers: 4, ..Default::default() }, Arc::new(router));
+    let server = Server::builder()
+        .config(ServerConfig { workers: 4, ..Default::default() })
+        .router(Arc::new(router))
+        .start()?;
     let handle = server.handle();
     println!("[3] serving {} queries × 3 engines through the coordinator...", nq);
     let mut results: std::collections::BTreeMap<&str, Vec<Vec<u32>>> = Default::default();

@@ -5,7 +5,7 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use phnsw::runtime::IndexBundle;
+use phnsw::runtime::{Bundle, OpenOptions};
 use phnsw::search::{AnnEngine, IdFilter, PhnswParams, SearchParams, SearchRequest};
 use phnsw::store::VectorStore;
 use phnsw::workbench::{Workbench, WorkbenchConfig};
@@ -75,7 +75,7 @@ fn main() -> phnsw::Result<()> {
     //    and gets bitwise-identical results.
     let path = std::env::temp_dir().join(format!("phnsw_quickstart_{}.phnsw", std::process::id()));
     w.save_bundle(&path)?;
-    let bundle = IndexBundle::open(&path)?;
+    let bundle = Bundle::open(&path, OpenOptions::default())?.into_single()?;
     let booted = bundle.searcher(PhnswParams::default());
     assert_eq!(booted.search(q), phnsw.search(q), "bundle boot must be bitwise identical");
     println!(

@@ -28,7 +28,10 @@ fn main() -> phnsw::Result<()> {
     router.register("hnsw", Arc::new(w.hnsw(SearchParams::default())) as Arc<dyn AnnEngine>);
     router.register("phnsw", Arc::new(w.phnsw(PhnswParams::default())) as Arc<dyn AnnEngine>);
 
-    let server = Server::start(ServerConfig { workers: 4, ..Default::default() }, Arc::new(router));
+    let server = Server::builder()
+        .config(ServerConfig { workers: 4, ..Default::default() })
+        .router(Arc::new(router))
+        .start()?;
     let handle = server.handle();
 
     // One "tenant" filter shared by every filtered request: a random 10%
@@ -65,7 +68,7 @@ fn main() -> phnsw::Result<()> {
                         // A tenant-scoped (filtered) query.
                         _ => base.with_topk(10).with_filter(tenant.clone()),
                     };
-                    let want_filter = q.filter.clone();
+                    let want_filter = q.core.filter.clone();
                     let res = h.query_blocking(q).expect("query failed");
                     assert!(!res.neighbors.is_empty());
                     if let Some(f) = want_filter {

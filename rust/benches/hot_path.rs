@@ -310,7 +310,7 @@ fn main() {
     // repeated (page cache warm) so the numbers isolate deserialization
     // cost, which is exactly what the v3 layout deletes.
     {
-        use phnsw::runtime::{open_bundle_with, save_segmented, save_v3, OpenOptions};
+        use phnsw::runtime::{save_segmented, save_v3, Bundle, OpenOptions};
         let idx = build_segmented(&seg_base, &bc, 15, 3, &SegmentSpec::new(1, 1));
         let dir = std::env::temp_dir();
         let p2 = dir.join(format!("phnsw_bench_{}_v2.phnsw", std::process::id()));
@@ -323,7 +323,7 @@ fn main() {
             for _ in 0..iters {
                 let t0 = std::time::Instant::now();
                 std::hint::black_box(
-                    open_bundle_with(path, OpenOptions { mmap }).expect("open bench bundle"),
+                    Bundle::open(path, OpenOptions::new().mmap(mmap)).expect("open bench bundle"),
                 );
                 best = best.min(t0.elapsed().as_secs_f64() * 1e3);
             }
@@ -345,7 +345,7 @@ fn main() {
         // owned engine. Resident-set delta shows what the open itself
         // did NOT touch.
         let rss0 = common::resident_bytes();
-        let any = open_bundle_with(&p3, OpenOptions { mmap: true }).expect("open bench bundle");
+        let any = Bundle::open(&p3, OpenOptions::new().mmap(true)).expect("open bench bundle");
         if let (Some(a), Some(b)) = (rss0, common::resident_bytes()) {
             let delta = b.saturating_sub(a);
             println!("{{\"bench\":\"bundle mmap open resident delta\",\"bytes\":{delta}}}");

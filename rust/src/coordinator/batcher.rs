@@ -1,8 +1,10 @@
-//! Dynamic batcher: queries accumulate until either `max_batch` is
-//! reached or the oldest enqueued query has waited `max_wait` — the
+//! Dynamic batcher: operations accumulate until either `max_batch` is
+//! reached or the oldest enqueued op has waited `max_wait` — the
 //! standard latency/throughput trade-off knob of serving systems.
+//! Searches and ingest ops share one queue, so their relative order is
+//! the arrival order.
 
-use super::{Query, QueryResult};
+use super::{Op, QueryResult};
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -25,10 +27,10 @@ impl Default for BatcherConfig {
     }
 }
 
-/// One enqueued query plus its response channel and arrival time.
+/// One enqueued operation plus its response channel and arrival time.
 pub struct Pending {
-    /// The request.
-    pub query: Query,
+    /// The operation (search or ingest).
+    pub op: Op,
     /// Where the worker sends the result.
     pub reply: std::sync::mpsc::Sender<QueryResult>,
     /// Arrival timestamp (latency accounting).
@@ -58,8 +60,8 @@ impl Batcher {
         &self.cfg
     }
 
-    /// Enqueue a query; fails when the queue is full (backpressure) or the
-    /// batcher is shut down.
+    /// Enqueue an operation; fails when the queue is full (backpressure)
+    /// or the batcher is shut down.
     pub fn enqueue(&self, p: Pending) -> Result<(), Pending> {
         let mut g = self.inner.lock().unwrap();
         if g.closed || g.queue.len() >= self.cfg.queue_cap {
@@ -121,7 +123,11 @@ mod tests {
     fn pending(v: f32) -> (Pending, mpsc::Receiver<QueryResult>) {
         let (tx, rx) = mpsc::channel();
         (
-            Pending { query: Query::new(vec![v]), reply: tx, arrived: Instant::now() },
+            Pending {
+                op: Op::Search(crate::coordinator::Query::new(vec![v])),
+                reply: tx,
+                arrived: Instant::now(),
+            },
             rx,
         )
     }
@@ -187,7 +193,8 @@ mod tests {
             b.enqueue(pending(i as f32).0).map_err(|_| ()).unwrap();
         }
         let batch = b.next_batch().unwrap();
-        let vals: Vec<f32> = batch.iter().map(|p| p.query.vector[0]).collect();
+        let vals: Vec<f32> =
+            batch.iter().map(|p| p.op.as_search().unwrap().core.vector[0]).collect();
         assert_eq!(vals, vec![0.0, 1.0, 2.0]);
     }
 }

@@ -105,15 +105,38 @@ pub struct PreparedMix {
 impl PreparedMix {
     /// Draw one request's knobs and apply them to a query.
     pub fn sample(&self, rng: &mut Pcg32, mut q: Query) -> Query {
-        q.topk = self.topk[rng.range(0, self.topk.len())];
+        q.core.topk = Some(self.topk[rng.range(0, self.topk.len())]);
         if let Some(ef_l0) = self.ef_l0[rng.range(0, self.ef_l0.len())] {
-            q.ef_override = Some(SearchParams { ef_l0, ..self.base_ef.clone() });
+            q.core.ef_override = Some(SearchParams { ef_l0, ..self.base_ef.clone() });
         }
         if let Some(f) = &self.filters[rng.range(0, self.filters.len())] {
-            q.filter = Some(f.clone());
+            q.core.filter = Some(f.clone());
         }
         q
     }
+}
+
+/// The streaming-ingest leg of a load run: alongside the open-loop
+/// searches, a fraction of offered ops are *blocking* inserts (vectors
+/// drawn sequentially from `corpus`) and deletes of previously inserted
+/// ids. Requires the served handle to carry a live tier. Inserts block
+/// for their ack — the measured ack latency *is* the insert-visibility
+/// lag, since a live-tier row is guaranteed searchable once its insert
+/// op has applied.
+#[derive(Debug, Clone)]
+pub struct IngestLeg {
+    /// Vector source for inserts. Row `i % len` feeds the `i`-th insert,
+    /// so a caller can replay the id → row mapping when grading recall
+    /// on the surviving corpus.
+    pub corpus: Arc<VectorSet>,
+    /// Probability an offered op is an insert, in [0, 1].
+    pub insert_fraction: f64,
+    /// Probability an offered op is a delete of a random not-yet-deleted
+    /// inserted id, in [0, 1] (evaluated after `insert_fraction`).
+    pub delete_fraction: f64,
+    /// Probe every `probe_every`-th acked insert with a blocking
+    /// self-query (top-1 must be the inserted id); 0 disables probes.
+    pub probe_every: usize,
 }
 
 /// Load-test configuration.
@@ -121,7 +144,7 @@ impl PreparedMix {
 pub struct LoadConfig {
     /// Offered rate (queries/second).
     pub rate_qps: f64,
-    /// Total queries to offer.
+    /// Total operations to offer (searches + ingest ops).
     pub total: usize,
     /// RNG seed for arrival jitter + query choice + knob sampling.
     pub seed: u64,
@@ -132,6 +155,8 @@ pub struct LoadConfig {
     /// Corpus size the filters span; 0 disables filtered requests even
     /// if the mix asks for them (the generator cannot size a filter).
     pub corpus_n: usize,
+    /// Streaming-ingest leg (None = search-only, the legacy workload).
+    pub ingest: Option<IngestLeg>,
 }
 
 impl Default for LoadConfig {
@@ -143,6 +168,7 @@ impl Default for LoadConfig {
             engine: None,
             mix: RequestMix::default(),
             corpus_n: 0,
+            ingest: None,
         }
     }
 }
@@ -150,20 +176,33 @@ impl Default for LoadConfig {
 /// Result of an open-loop run.
 #[derive(Debug)]
 pub struct LoadReport {
-    /// Queries offered.
+    /// Operations offered (searches + ingest ops).
     pub offered: usize,
-    /// Queries completed.
+    /// Searches completed.
     pub completed: usize,
-    /// Queries rejected by backpressure.
+    /// Operations rejected by backpressure (or failed ingest).
     pub rejected: usize,
     /// How many offered queries carried an id filter.
     pub filtered: usize,
     /// Wall time of the run.
     pub elapsed: Duration,
-    /// Achieved goodput (completed / elapsed).
+    /// Achieved goodput (completed searches / elapsed).
     pub goodput_qps: f64,
-    /// End-to-end latency stats (µs percentiles via `summary()`).
+    /// End-to-end search latency stats (µs percentiles via `summary()`).
     pub latency: LatencyStats,
+    /// Inserts acked by the live tier (ingest leg; insert `i` carried
+    /// corpus row `i % corpus.len()`).
+    pub inserted: usize,
+    /// Ids deleted by the ingest leg, in delete order (each id at most
+    /// once — the generator never offers a double delete).
+    pub deleted_ids: Vec<u32>,
+    /// Insert-visibility lag: submit → ack, after which the row is
+    /// guaranteed searchable.
+    pub insert_lag: LatencyStats,
+    /// Self-query probes issued after acked inserts...
+    pub probes: usize,
+    /// ...and how many returned the freshly inserted id at rank 0.
+    pub probe_hits: usize,
 }
 
 /// Drive `handle` at `cfg.rate_qps` with Poisson arrivals, drawing query
@@ -172,11 +211,21 @@ pub struct LoadReport {
 /// close).
 pub fn run_open_loop(handle: &ServerHandle, queries: &VectorSet, cfg: &LoadConfig) -> LoadReport {
     assert!(cfg.rate_qps > 0.0 && cfg.total > 0 && !queries.is_empty());
+    if let Some(leg) = &cfg.ingest {
+        assert!(!leg.corpus.is_empty(), "ingest leg needs a non-empty corpus");
+        assert!(leg.insert_fraction + leg.delete_fraction <= 1.0, "ingest fractions exceed 1");
+    }
     let mut rng = Pcg32::new(cfg.seed);
     let mix = cfg.mix.prepare(cfg.corpus_n, cfg.seed ^ 0x4D49_5846); // "MIXF"
     let mut inflight: Vec<(Instant, mpsc::Receiver<QueryResult>)> = Vec::with_capacity(cfg.total);
     let mut rejected = 0usize;
     let mut filtered = 0usize;
+    let mut live_ids: Vec<u32> = Vec::new();
+    let mut deleted_ids: Vec<u32> = Vec::new();
+    let mut inserted = 0usize;
+    let mut insert_lag = LatencyStats::new();
+    let mut probes = 0usize;
+    let mut probe_hits = 0usize;
 
     let start = Instant::now();
     let mut next_arrival = start;
@@ -188,10 +237,47 @@ pub fn run_open_loop(handle: &ServerHandle, queries: &VectorSet, cfg: &LoadConfi
         if next_arrival > now {
             std::thread::sleep(next_arrival - now);
         }
+        // The ingest leg claims its share of offered ops first; the
+        // remainder stays the open-loop search workload.
+        if let Some(leg) = &cfg.ingest {
+            let roll = rng.f64();
+            if roll < leg.insert_fraction {
+                let row = leg.corpus.row(inserted % leg.corpus.len()).to_vec();
+                let sent = Instant::now();
+                match handle.insert(row.clone()) {
+                    Ok(id) => {
+                        insert_lag.record(sent.elapsed());
+                        inserted += 1;
+                        live_ids.push(id);
+                        if leg.probe_every > 0 && inserted % leg.probe_every == 0 {
+                            probes += 1;
+                            let probe = Query::new(row).with_topk(1);
+                            if let Ok(res) = handle.query_blocking(probe) {
+                                if res.neighbors.first().map(|n| n.id) == Some(id) {
+                                    probe_hits += 1;
+                                }
+                            }
+                        }
+                    }
+                    Err(_) => rejected += 1,
+                }
+                continue;
+            }
+            if roll < leg.insert_fraction + leg.delete_fraction {
+                if !live_ids.is_empty() {
+                    let id = live_ids.swap_remove(rng.range(0, live_ids.len()));
+                    match handle.delete(id) {
+                        Ok(_) => deleted_ids.push(id),
+                        Err(_) => rejected += 1,
+                    }
+                }
+                continue;
+            }
+        }
         let qi = rng.range(0, queries.len());
         let mut q = mix.sample(&mut rng, Query::new(queries.row(qi).to_vec()));
         q.engine = cfg.engine.clone();
-        filtered += q.filter.is_some() as usize;
+        filtered += q.core.filter.is_some() as usize;
         match handle.submit(q) {
             Ok(rx) => inflight.push((Instant::now(), rx)),
             Err(_) => rejected += 1,
@@ -215,6 +301,11 @@ pub fn run_open_loop(handle: &ServerHandle, queries: &VectorSet, cfg: &LoadConfi
         elapsed,
         goodput_qps: completed as f64 / elapsed.as_secs_f64(),
         latency,
+        inserted,
+        deleted_ids,
+        insert_lag,
+        probes,
+        probe_hits,
     }
 }
 
@@ -326,6 +417,54 @@ mod tests {
     }
 
     #[test]
+    fn ingest_leg_streams_inserts_and_deletes_with_visible_results() {
+        use crate::dataset::synthetic::{generate, SyntheticConfig};
+        use crate::pca::PcaModel;
+        use crate::segment::{LiveConfig, LiveEngine};
+        let cfg = SyntheticConfig { n_base: 256, n_queries: 16, ..SyntheticConfig::tiny() };
+        let (base, queries) = generate(&cfg);
+        let pca = Arc::new(PcaModel::fit(&base, 8, 7));
+        let live = LiveEngine::new(pca, LiveConfig { background: false, ..Default::default() });
+        let s = Server::builder().live(live).start().unwrap();
+        let mut report = run_open_loop(
+            &s.handle(),
+            &queries,
+            &LoadConfig {
+                rate_qps: 4_000.0,
+                total: 200,
+                seed: 11,
+                ingest: Some(IngestLeg {
+                    corpus: Arc::new(base),
+                    insert_fraction: 0.5,
+                    delete_fraction: 0.1,
+                    probe_every: 4,
+                }),
+                ..Default::default()
+            },
+        );
+        assert!(report.inserted >= 60, "insert leg underfed: {}", report.inserted);
+        assert!(!report.deleted_ids.is_empty(), "delete leg never fired");
+        let unique: std::collections::HashSet<_> = report.deleted_ids.iter().collect();
+        assert_eq!(unique.len(), report.deleted_ids.len(), "an id was offered for double delete");
+        assert!(
+            report.probes > 0 && report.probe_hits == report.probes,
+            "self-query probe misses: {}/{} — acked inserts must be searchable",
+            report.probe_hits,
+            report.probes
+        );
+        assert_eq!(report.rejected, 0, "nothing should bounce at this rate");
+        assert!(report.insert_lag.summary().0 > 0.0, "insert-visibility lag must be recorded");
+        // Every offered op is an insert, a delete, a search, or a delete
+        // skipped because nothing was live yet.
+        assert!(
+            report.completed + report.inserted + report.deleted_ids.len() <= report.offered,
+            "op accounting overflow"
+        );
+        assert!(report.completed > 0, "search leg starved");
+        s.shutdown();
+    }
+
+    #[test]
     fn prepared_mix_sampling_is_deterministic_and_in_range() {
         let mix = RequestMix::serving().prepare(100, 9);
         let sample_all = |seed: u64| -> Vec<(usize, Option<usize>, bool)> {
@@ -333,7 +472,11 @@ mod tests {
             (0..50)
                 .map(|_| {
                     let q = mix.sample(&mut rng, Query::new(vec![0.0]));
-                    (q.topk, q.ef_override.as_ref().map(|p| p.ef_l0), q.filter.is_some())
+                    (
+                        q.core.topk.expect("mix always draws a topk"),
+                        q.core.ef_override.as_ref().map(|p| p.ef_l0),
+                        q.core.filter.is_some(),
+                    )
                 })
                 .collect()
         };

@@ -25,27 +25,22 @@ pub mod stats;
 pub mod xla_engine;
 
 pub use batcher::{Batcher, BatcherConfig};
-pub use loadgen::{run_open_loop, LoadConfig, LoadReport, PreparedMix, RequestMix};
+pub use loadgen::{run_open_loop, IngestLeg, LoadConfig, LoadReport, PreparedMix, RequestMix};
 pub use router::{Router, RoutePolicy};
-pub use server::{Server, ServerConfig, ServerHandle};
+pub use server::{Server, ServerBuilder, ServerConfig, ServerHandle};
 pub use stats::ServeStats;
 pub use xla_engine::XlaPhnswEngine;
 
-/// A client-side search request: an owned query vector plus the
-/// per-request knobs, a thin wrapper over
-/// [`crate::search::SearchRequest`] (which borrows the vector). Filters
-/// and ef overrides ride through `submit → batcher → dispatch_batch`
-/// untouched and are honored natively by the engines.
+/// A client-side search request: the shared per-request knob set
+/// ([`crate::search::RequestCore`] — owned vector, topk, ef override,
+/// filter) plus the one coordinator-only knob, the engine route. The
+/// knobs ride through `submit → batcher → dispatch_batch` untouched and
+/// are honored natively by the engines; there is no second definition
+/// of "a request" at this layer.
 #[derive(Debug, Clone)]
 pub struct Query {
-    /// Query vector (original high-dim space).
-    pub vector: Vec<f32>,
-    /// Number of neighbors requested.
-    pub topk: usize,
-    /// Per-request beam-width override (quality/latency tier).
-    pub ef_override: Option<crate::search::SearchParams>,
-    /// Result-side id filter (filtered ANN).
-    pub filter: Option<std::sync::Arc<crate::search::IdFilter>>,
+    /// The engine-facing request: vector + topk + ef override + filter.
+    pub core: crate::search::RequestCore,
     /// Optional engine override (router falls back to its policy).
     pub engine: Option<String>,
 }
@@ -54,45 +49,95 @@ impl Query {
     /// Convenience constructor with the default top-k of 10 (Recall@10)
     /// and no filter or override.
     pub fn new(vector: Vec<f32>) -> Self {
-        Self { vector, topk: 10, ef_override: None, filter: None, engine: None }
+        Self { core: crate::search::RequestCore::new(vector).with_topk(10), engine: None }
     }
 
     /// Set the per-request result count.
     pub fn with_topk(mut self, k: usize) -> Self {
-        self.topk = k;
+        self.core.topk = Some(k);
         self
     }
 
     /// Set per-request beam widths.
     pub fn with_ef(mut self, params: crate::search::SearchParams) -> Self {
-        self.ef_override = Some(params);
+        self.core.ef_override = Some(params);
         self
     }
 
     /// Attach an id filter.
     pub fn with_filter(mut self, filter: std::sync::Arc<crate::search::IdFilter>) -> Self {
-        self.filter = Some(filter);
+        self.core.filter = Some(filter);
+        self
+    }
+
+    /// Route to a named engine instead of the router's policy.
+    pub fn with_engine(mut self, engine: impl Into<String>) -> Self {
+        self.engine = Some(engine.into());
         self
     }
 
     /// The engine-facing view of this query: borrows the vector, clones
     /// the (Arc-cheap) knobs.
     pub fn request(&self) -> crate::search::SearchRequest<'_> {
-        crate::search::SearchRequest {
-            vector: &self.vector,
-            topk: Some(self.topk),
-            ef_override: self.ef_override.clone(),
-            filter: self.filter.clone(),
+        self.core.as_request()
+    }
+}
+
+impl From<crate::search::RequestCore> for Query {
+    fn from(core: crate::search::RequestCore) -> Self {
+        Self { core, engine: None }
+    }
+}
+
+/// One operation flowing through the coordinator queue. Searches batch
+/// and fan out by engine; ingest operations ([`Op::Insert`],
+/// [`Op::Delete`], [`Op::Flush`]) apply to the server's live tier in
+/// arrival order — both kinds ride the same batcher, so ingest
+/// visibility lag is the same queue the searches wait in.
+#[derive(Debug, Clone)]
+pub enum Op {
+    /// A search request (vector + knobs + engine route).
+    Search(Query),
+    /// Append one vector to the live tier; acked with its assigned id.
+    Insert(Vec<f32>),
+    /// Tombstone a previously-assigned id in the live tier.
+    Delete(u32),
+    /// Force-seal the live memtable (flush to an immutable shard).
+    Flush,
+}
+
+impl Op {
+    /// The query, when this op is a search.
+    pub fn as_search(&self) -> Option<&Query> {
+        match self {
+            Op::Search(q) => Some(q),
+            _ => None,
         }
     }
 }
 
-/// A completed search.
+/// Acknowledgement of an ingest [`Op`], delivered through the same
+/// result channel searches use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IngestAck {
+    /// The corpus id assigned to an inserted vector.
+    Inserted(u32),
+    /// Whether the delete tombstoned a live id (`false` = unknown id or
+    /// already deleted).
+    Deleted(bool),
+    /// Whether the flush sealed a non-empty memtable.
+    Flushed(bool),
+}
+
+/// A completed operation: neighbors for searches, an [`IngestAck`] for
+/// ingest ops (whose `neighbors` list is empty).
 #[derive(Debug, Clone)]
 pub struct QueryResult {
-    /// Neighbors, ascending by distance.
+    /// Neighbors, ascending by distance (empty for ingest ops).
     pub neighbors: Vec<crate::search::Neighbor>,
-    /// Which engine served it.
+    /// Set iff the op was an ingest operation.
+    pub ingest: Option<IngestAck>,
+    /// Which engine served it (`"live"` for ingest ops).
     pub engine: String,
     /// Serve-side latency (queue + execution).
     pub latency: std::time::Duration,

@@ -6,12 +6,19 @@
 //! call, so the engines' data-parallel overrides see whole batches
 //! instead of a per-query loop. Results are bitwise identical to
 //! sequential dispatch (the `search_batch` contract).
+//!
+//! Ingest ops ([`Op::Insert`] / [`Op::Delete`] / [`Op::Flush`]) ride the
+//! same queue and apply to the server's live tier (attached via
+//! [`ServerBuilder::live`]) in arrival order, before the batch's
+//! searches execute. [`Server::builder`] is the one way to start a
+//! server — engine, router, bundle path, or live tier.
 
 use super::batcher::{Batcher, BatcherConfig, Pending};
 use super::router::Router;
 use super::stats::ServeStats;
-use super::{Query, QueryResult};
+use super::{IngestAck, Op, Query, QueryResult};
 use crate::search::{AnnEngine, SearchRequest};
+use crate::segment::LiveEngine;
 use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -36,6 +43,7 @@ impl Default for ServerConfig {
 pub struct Server {
     batcher: Arc<Batcher>,
     stats: Arc<ServeStats>,
+    live: Option<Arc<LiveEngine>>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -44,52 +52,194 @@ pub struct Server {
 pub struct ServerHandle {
     batcher: Arc<Batcher>,
     stats: Arc<ServeStats>,
+    live: Option<Arc<LiveEngine>>,
+}
+
+/// What the server serves from: exactly one source, picked through
+/// [`ServerBuilder`].
+enum EngineSource {
+    /// Nothing static — valid only with a live tier (empty-start
+    /// streaming ingest).
+    None,
+    /// A pre-built engine registered under a name as the default route.
+    Engine(String, Arc<dyn AnnEngine>),
+    /// A caller-assembled router (multi-engine setups).
+    Router(Arc<Router>),
+    /// A `.phnsw` file opened with the given options at start.
+    BundlePath(std::path::PathBuf, crate::runtime::OpenOptions),
+}
+
+/// The one way to start a server: pick an engine source (pre-built
+/// engine, router, or bundle path), optionally attach a live tier, and
+/// `start()`.
+///
+/// ```no_run
+/// # use phnsw::coordinator::{Server, ServerConfig};
+/// # use phnsw::runtime::OpenOptions;
+/// # use phnsw::search::PhnswParams;
+/// let server = Server::builder()
+///     .config(ServerConfig::default())
+///     .bundle_path("index.phnsw", OpenOptions::new().mmap(true))
+///     .params(PhnswParams::default())
+///     .start()?;
+/// # Ok::<(), anyhow::Error>(())
+/// ```
+pub struct ServerBuilder {
+    cfg: ServerConfig,
+    params: crate::search::PhnswParams,
+    source: EngineSource,
+    live: Option<Arc<LiveEngine>>,
+}
+
+impl ServerBuilder {
+    /// Server tuning (workers, batcher).
+    pub fn config(mut self, cfg: ServerConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Search params used when the source is a bundle (ignored for
+    /// pre-built engines, which carry their own).
+    pub fn params(mut self, params: crate::search::PhnswParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    /// Serve a single pre-built engine registered as the default route —
+    /// the path both bundle flavors (monolithic searcher, segmented
+    /// fan-out engine) boot through.
+    pub fn engine(mut self, name: impl Into<String>, engine: Arc<dyn AnnEngine>) -> Self {
+        self.source = EngineSource::Engine(name.into(), engine);
+        self
+    }
+
+    /// Serve a caller-assembled router (multi-engine setups). A live
+    /// tier attached alongside a router handles ingest ops but is *not*
+    /// auto-registered as a route — register it yourself if it should
+    /// also serve searches.
+    pub fn router(mut self, router: Arc<Router>) -> Self {
+        self.source = EngineSource::Router(router);
+        self
+    }
+
+    /// Serve a `.phnsw` file straight from disk, honoring the open
+    /// options — `OpenOptions::new().mmap(true)` serves a v3 bundle
+    /// zero-copy from its memory mapping (demand-paged rerank table).
+    /// Whichever flavor the file holds (monolithic or segmented) is
+    /// registered as the default `"phnsw"` route.
+    pub fn bundle_path(
+        mut self,
+        path: impl Into<std::path::PathBuf>,
+        opts: crate::runtime::OpenOptions,
+    ) -> Self {
+        self.source = EngineSource::BundlePath(path.into(), opts);
+        self
+    }
+
+    /// Attach a live (mutable) tier: ingest ops route to it, and it is
+    /// registered as the `"live"` search route (default route when no
+    /// other source is configured).
+    pub fn live(mut self, live: Arc<LiveEngine>) -> Self {
+        self.live = Some(live);
+        self
+    }
+
+    /// Resolve the source and start the worker pool.
+    pub fn start(self) -> crate::Result<Server> {
+        let live = self.live;
+        let router: Arc<Router> = match self.source {
+            EngineSource::Router(r) => r,
+            EngineSource::Engine(name, engine) => {
+                let mut r = Router::new(super::router::RoutePolicy::Default(name.clone()));
+                r.register(name, engine);
+                if let Some(live) = &live {
+                    r.register("live", live.clone() as Arc<dyn AnnEngine>);
+                }
+                Arc::new(r)
+            }
+            EngineSource::BundlePath(path, opts) => {
+                let any = crate::runtime::Bundle::open(&path, opts)?;
+                let mut r = Router::new(super::router::RoutePolicy::Default("phnsw".into()));
+                r.register("phnsw", any.engine(self.params));
+                if let Some(live) = &live {
+                    r.register("live", live.clone() as Arc<dyn AnnEngine>);
+                }
+                Arc::new(r)
+            }
+            EngineSource::None => {
+                let Some(live) = &live else {
+                    anyhow::bail!(
+                        "server needs a source: .engine(), .router(), .bundle_path(), or .live()"
+                    );
+                };
+                let mut r = Router::new(super::router::RoutePolicy::Default("live".into()));
+                r.register("live", live.clone() as Arc<dyn AnnEngine>);
+                Arc::new(r)
+            }
+        };
+        Ok(Server::start_inner(self.cfg, router, live))
+    }
 }
 
 impl Server {
-    /// Boot a server over a single pre-built engine registered as the
-    /// default route — the path both bundle flavors (monolithic
-    /// searcher, segmented fan-out engine) boot through.
+    /// The one entry point: a [`ServerBuilder`] with default config and
+    /// no source yet.
+    pub fn builder() -> ServerBuilder {
+        ServerBuilder {
+            cfg: ServerConfig::default(),
+            params: crate::search::PhnswParams::default(),
+            source: EngineSource::None,
+            live: None,
+        }
+    }
+
+    /// Boot a server over a single pre-built engine.
+    #[deprecated(note = "use Server::builder().engine(name, engine).start()")]
     pub fn start_with_engine(
         cfg: ServerConfig,
         name: impl Into<String>,
         engine: Arc<dyn AnnEngine>,
     ) -> Self {
-        let name = name.into();
-        let mut router = Router::new(super::router::RoutePolicy::Default(name.clone()));
-        router.register(name, engine);
-        Self::start(cfg, Arc::new(router))
+        Self::builder()
+            .config(cfg)
+            .engine(name, engine)
+            .start()
+            .expect("engine source is infallible")
     }
 
-    /// Boot a server straight from a `.phnsw` index artifact: the pHNSW
-    /// engine is constructed from the bundle's components (graph + PCA +
-    /// quantized stores) and registered as the default route — no PCA
-    /// refit or corpus re-projection at startup.
+    /// Boot a server straight from an opened `.phnsw` index artifact.
+    #[deprecated(note = "use Server::builder().engine() over Arc::new(bundle.searcher(params))")]
     pub fn start_from_bundle(
         cfg: ServerConfig,
         bundle: &crate::runtime::IndexBundle,
         params: crate::search::PhnswParams,
     ) -> Self {
-        Self::start_with_engine(cfg, "phnsw", Arc::new(bundle.searcher(params)))
+        let engine: Arc<dyn AnnEngine> = Arc::new(bundle.searcher(params));
+        Self::builder()
+            .config(cfg)
+            .engine("phnsw", engine)
+            .start()
+            .expect("engine source is infallible")
     }
 
-    /// Boot a server straight from a `.phnsw` file on disk, honoring the
-    /// open options — `OpenOptions { mmap: true }` serves a v3 bundle
-    /// zero-copy from its memory mapping (demand-paged rerank table).
-    /// Whichever flavor the file holds (monolithic or segmented) is
-    /// registered as the default `"phnsw"` route.
+    /// Boot a server straight from a `.phnsw` file on disk.
+    #[deprecated(note = "use Server::builder().bundle_path(path, opts).params(params).start()")]
     pub fn start_from_bundle_path(
         cfg: ServerConfig,
         path: impl AsRef<std::path::Path>,
         opts: crate::runtime::OpenOptions,
         params: crate::search::PhnswParams,
     ) -> crate::Result<Self> {
-        let any = crate::runtime::open_bundle_with(path, opts)?;
-        Ok(Self::start_with_engine(cfg, "phnsw", any.engine(params)))
+        Self::builder().config(cfg).bundle_path(path.as_ref(), opts).params(params).start()
     }
 
-    /// Start the worker pool over a router.
+    /// Start the worker pool over a router (the low-level primitive the
+    /// builder's `.router()` path resolves to; no live tier).
     pub fn start(cfg: ServerConfig, router: Arc<Router>) -> Self {
+        Self::start_inner(cfg, router, None)
+    }
+
+    fn start_inner(cfg: ServerConfig, router: Arc<Router>, live: Option<Arc<LiveEngine>>) -> Self {
         assert!(cfg.workers >= 1, "need at least one worker");
         let batcher = Arc::new(Batcher::new(cfg.batcher.clone()));
         let stats = Arc::new(ServeStats::new());
@@ -98,19 +248,29 @@ impl Server {
             let batcher = batcher.clone();
             let stats = stats.clone();
             let router = router.clone();
+            let live = live.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("phnsw-worker-{w}"))
-                    .spawn(move || worker_loop(batcher, router, stats))
+                    .spawn(move || worker_loop(batcher, router, live, stats))
                     .expect("spawn worker"),
             );
         }
-        Self { batcher, stats, workers }
+        Self { batcher, stats, live, workers }
+    }
+
+    /// The live (mutable) tier, when one is attached.
+    pub fn live(&self) -> Option<&Arc<LiveEngine>> {
+        self.live.as_ref()
     }
 
     /// Submission handle (cloneable across client threads).
     pub fn handle(&self) -> ServerHandle {
-        ServerHandle { batcher: self.batcher.clone(), stats: self.stats.clone() }
+        ServerHandle {
+            batcher: self.batcher.clone(),
+            stats: self.stats.clone(),
+            live: self.live.clone(),
+        }
     }
 
     /// Serve statistics.
@@ -128,18 +288,27 @@ impl Server {
 }
 
 impl ServerHandle {
-    /// Submit a query; returns the channel the result arrives on, or the
-    /// query back on backpressure rejection.
-    pub fn submit(&self, query: Query) -> Result<mpsc::Receiver<QueryResult>, Query> {
+    /// Submit an operation; returns the channel the result arrives on,
+    /// or the op back on backpressure rejection.
+    pub fn submit_op(&self, op: Op) -> Result<mpsc::Receiver<QueryResult>, Op> {
         let (tx, rx) = mpsc::channel();
-        let pending = Pending { query, reply: tx, arrived: Instant::now() };
+        let pending = Pending { op, reply: tx, arrived: Instant::now() };
         match self.batcher.enqueue(pending) {
             Ok(()) => Ok(rx),
             Err(p) => {
                 self.stats.record_rejected();
-                Err(p.query)
+                Err(p.op)
             }
         }
+    }
+
+    /// Submit a query; returns the channel the result arrives on, or the
+    /// query back on backpressure rejection.
+    pub fn submit(&self, query: Query) -> Result<mpsc::Receiver<QueryResult>, Query> {
+        self.submit_op(Op::Search(query)).map_err(|op| match op {
+            Op::Search(q) => q,
+            _ => unreachable!("submitted a search"),
+        })
     }
 
     /// Submit and block for the result.
@@ -150,15 +319,57 @@ impl ServerHandle {
         rx.recv().map_err(|_| anyhow::anyhow!("server dropped the request"))
     }
 
+    fn ingest_blocking(&self, op: Op) -> crate::Result<IngestAck> {
+        anyhow::ensure!(
+            self.live.is_some(),
+            "server has no live tier (start it with Server::builder().live(...))"
+        );
+        let rx = self
+            .submit_op(op)
+            .map_err(|_| anyhow::anyhow!("server queue full (backpressure)"))?;
+        let res = rx.recv().map_err(|_| anyhow::anyhow!("server dropped the request"))?;
+        res.ingest.ok_or_else(|| anyhow::anyhow!("ingest op answered without an ack"))
+    }
+
+    /// Insert one vector into the live tier through the coordinator
+    /// queue; blocks for the assigned corpus id.
+    pub fn insert(&self, vector: Vec<f32>) -> crate::Result<u32> {
+        match self.ingest_blocking(Op::Insert(vector))? {
+            IngestAck::Inserted(id) => Ok(id),
+            other => anyhow::bail!("insert acked as {other:?}"),
+        }
+    }
+
+    /// Tombstone an id in the live tier; `Ok(true)` iff it was live.
+    pub fn delete(&self, id: u32) -> crate::Result<bool> {
+        match self.ingest_blocking(Op::Delete(id))? {
+            IngestAck::Deleted(hit) => Ok(hit),
+            other => anyhow::bail!("delete acked as {other:?}"),
+        }
+    }
+
+    /// Force-seal the live memtable; `Ok(true)` iff it was non-empty.
+    pub fn flush(&self) -> crate::Result<bool> {
+        match self.ingest_blocking(Op::Flush)? {
+            IngestAck::Flushed(sealed) => Ok(sealed),
+            other => anyhow::bail!("flush acked as {other:?}"),
+        }
+    }
+
     /// Current queue depth (observability).
     pub fn queue_depth(&self) -> usize {
         self.batcher.depth()
     }
 }
 
-fn worker_loop(batcher: Arc<Batcher>, router: Arc<Router>, stats: Arc<ServeStats>) {
+fn worker_loop(
+    batcher: Arc<Batcher>,
+    router: Arc<Router>,
+    live: Option<Arc<LiveEngine>>,
+    stats: Arc<ServeStats>,
+) {
     while let Some(batch) = batcher.next_batch() {
-        dispatch_batch(batch, &router, &stats);
+        dispatch_batch(batch, &router, live.as_ref(), &stats);
     }
 }
 
@@ -169,11 +380,21 @@ fn worker_loop(batcher: Arc<Batcher>, router: Arc<Router>, stats: Arc<ServeStats
 /// Per-request knobs (`topk`, ef override, filter) ride inside the
 /// [`SearchRequest`]s and are honored by the engines natively — no
 /// post-hoc truncation here.
-fn dispatch_batch(batch: Vec<Pending>, router: &Router, stats: &ServeStats) {
+fn dispatch_batch(
+    batch: Vec<Pending>,
+    router: &Router,
+    live: Option<&Arc<LiveEngine>>,
+    stats: &ServeStats,
+) {
     let mut pending: Vec<Option<Pending>> = batch.into_iter().map(Some).collect();
     let mut groups: BTreeMap<String, (Arc<dyn AnnEngine>, Vec<usize>)> = BTreeMap::new();
+    let mut ingest: Vec<usize> = Vec::new();
     for (i, slot) in pending.iter_mut().enumerate() {
-        let requested = slot.as_ref().unwrap().query.engine.clone();
+        let Some(query) = slot.as_ref().unwrap().op.as_search() else {
+            ingest.push(i);
+            continue;
+        };
+        let requested = query.engine.clone();
         match router.route(requested.as_deref()) {
             Ok((name, engine)) => {
                 groups.entry(name).or_insert_with(|| (engine, Vec::new())).1.push(i);
@@ -185,10 +406,39 @@ fn dispatch_batch(batch: Vec<Pending>, router: &Router, stats: &ServeStats) {
             }
         }
     }
+    // Ingest ops apply before the batch's searches execute, in arrival
+    // order — a search enqueued after an insert in the same batch sees
+    // that insert.
+    for i in ingest {
+        let Pending { op, reply, arrived } = pending[i].take().unwrap();
+        let Some(live) = live else {
+            // No live tier: dropping `reply` signals the error.
+            stats.record_error();
+            continue;
+        };
+        let exec_start = Instant::now();
+        let ack = match op {
+            Op::Insert(v) => IngestAck::Inserted(live.insert(&v)),
+            Op::Delete(id) => IngestAck::Deleted(live.delete(id)),
+            Op::Flush => IngestAck::Flushed(live.flush()),
+            Op::Search(_) => unreachable!("searches were routed above"),
+        };
+        let exec = exec_start.elapsed();
+        let queue_wait = exec_start.saturating_duration_since(arrived);
+        stats.record("ingest", queue_wait, exec);
+        let _ = reply.send(QueryResult {
+            neighbors: Vec::new(),
+            ingest: Some(ack),
+            engine: "live".into(),
+            latency: arrived.elapsed(),
+            queue_wait,
+            exec,
+        });
+    }
     for (name, (engine, idxs)) in groups {
         let reqs: Vec<SearchRequest> = idxs
             .iter()
-            .map(|&i| pending[i].as_ref().unwrap().query.request())
+            .map(|&i| pending[i].as_ref().unwrap().op.as_search().unwrap().request())
             .collect();
         let exec_start = Instant::now();
         let results = engine.search_batch_req(&reqs);
@@ -196,12 +446,13 @@ fn dispatch_batch(batch: Vec<Pending>, router: &Router, stats: &ServeStats) {
         debug_assert_eq!(results.len(), idxs.len(), "search_batch_req must be 1:1 with requests");
         drop(reqs); // releases the borrows of `pending`
         for (&i, neighbors) in idxs.iter().zip(results) {
-            let Pending { query: _, reply, arrived } = pending[i].take().unwrap();
+            let Pending { op: _, reply, arrived } = pending[i].take().unwrap();
             let queue_wait = exec_start.saturating_duration_since(arrived);
             stats.record(&name, queue_wait, exec);
             let latency = arrived.elapsed();
             let _ = reply.send(QueryResult {
                 neighbors,
+                ingest: None,
                 engine: name.clone(),
                 latency,
                 queue_wait,
@@ -260,7 +511,7 @@ mod tests {
         let s = server();
         let h = s.handle();
         let mut q = Query::new(vec![1.0]);
-        q.topk = 3;
+        q.core.topk = Some(3);
         let res = h.query_blocking(q).unwrap();
         assert_eq!(res.neighbors.len(), 3);
         s.shutdown();
@@ -425,6 +676,59 @@ mod tests {
         let rx_ok = h.submit(Query::new(vec![7.0])).unwrap();
         assert!(rx_bad.recv().is_err(), "bad query's channel drops");
         assert_eq!(rx_ok.recv().unwrap().neighbors[0].id, 7, "good query still served");
+        s.shutdown();
+    }
+
+    #[test]
+    fn builder_without_source_errors() {
+        let err = Server::builder().start().unwrap_err().to_string();
+        assert!(err.contains("needs a source"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn ingest_without_live_tier_errors() {
+        let s = server();
+        let h = s.handle();
+        let err = h.insert(vec![1.0]).unwrap_err().to_string();
+        assert!(err.contains("no live tier"), "unexpected error: {err}");
+        assert!(h.delete(0).is_err() && h.flush().is_err());
+        s.shutdown();
+    }
+
+    #[test]
+    fn builder_live_tier_serves_ingest_and_search() {
+        use crate::dataset::synthetic::{generate, SyntheticConfig};
+        use crate::pca::PcaModel;
+        use crate::segment::LiveConfig;
+        let cfg = SyntheticConfig { n_base: 200, n_queries: 1, ..SyntheticConfig::tiny() };
+        let (base, _) = generate(&cfg);
+        let pca = Arc::new(PcaModel::fit(&base, 8, 7));
+        let live = crate::segment::LiveEngine::new(
+            pca,
+            LiveConfig { background: false, ..Default::default() },
+        );
+        let s = Server::builder().live(live).start().unwrap();
+        let h = s.handle();
+        assert_eq!(h.insert(base.row(0).to_vec()).unwrap(), 0, "first insert gets id 0");
+        for i in 1..60 {
+            assert_eq!(h.insert(base.row(i).to_vec()).unwrap(), i as u32);
+        }
+        let res = h.query_blocking(Query::new(base.row(3).to_vec()).with_topk(1)).unwrap();
+        assert_eq!(res.engine, "live", "empty-source server defaults to the live route");
+        assert_eq!(res.neighbors[0].id, 3, "insert must be visible to a later search");
+        assert!(res.ingest.is_none(), "searches carry no ingest ack");
+
+        assert!(h.delete(3).unwrap(), "first delete of a live id hits");
+        assert!(!h.delete(3).unwrap(), "second delete is a no-op");
+        assert!(!h.delete(9999).unwrap(), "unallocated id never hits");
+        let res = h.query_blocking(Query::new(base.row(3).to_vec()).with_topk(1)).unwrap();
+        assert_ne!(res.neighbors[0].id, 3, "deleted id must not be served");
+
+        assert!(h.flush().unwrap(), "non-empty memtable seals");
+        assert!(!h.flush().unwrap(), "empty memtable does not");
+        let res = h.query_blocking(Query::new(base.row(7).to_vec()).with_topk(1)).unwrap();
+        assert_eq!(res.neighbors[0].id, 7, "sealed rows stay searchable");
+        assert!(s.live().is_some() && s.stats().by_engine()["ingest"] >= 60);
         s.shutdown();
     }
 

@@ -106,7 +106,7 @@ pub fn select_neighbors_heuristic(
 /// neighbor at `level`. Every distance in it was already computed by the
 /// construction beam search or a previous selection pass, so re-pruning
 /// never pays the `O(cap · dim)` recomputation it used to.
-type DistCache = Vec<Vec<Vec<f32>>>;
+pub(crate) type DistCache = Vec<Vec<Vec<f32>>>;
 
 /// Re-prune `node`'s neighbor list at `level` down to capacity after a new
 /// back-edge pushed it over, reusing the cached candidate distances.
@@ -130,6 +130,65 @@ fn shrink_neighbors(
     cache[node as usize][level] = kept.into_iter().map(|(d, _)| d).collect();
 }
 
+/// Insert the next row of `data` into a staging `graph` at the given
+/// `level` (Algorithm 1 of [2], one iteration). The new node's id is
+/// `graph.len()` and its vector is `data.row(graph.len())` — `data` must
+/// already contain that row. `cache` gains a slot for the node and stays
+/// parallel to the adjacency through the back-edge trims.
+///
+/// This is the exact per-row body of [`build`], factored out so the live
+/// memtable can run the same incremental construction online; the bulk
+/// builder loops over it, and its bitwise-determinism tests pin both.
+pub(crate) fn insert_node(
+    graph: &mut HnswGraph,
+    cache: &mut DistCache,
+    data: &VectorSet,
+    level: usize,
+    ef_construction: usize,
+    visited: &mut VisitedSet,
+) -> u32 {
+    let i = graph.len();
+    let q = data.row(i);
+
+    if graph.is_empty() {
+        let node = graph.add_node(level);
+        cache.push(vec![Vec::new(); level + 1]);
+        return node;
+    }
+
+    let prev_max = graph.max_level();
+    let prev_ep = graph.entry_point();
+    let node = graph.add_node(level);
+    cache.push(vec![Vec::new(); level + 1]);
+
+    // Greedy descent from the old entry point down to level+1.
+    let mut ep = vec![(l2_sq(q, data.row(prev_ep as usize)), prev_ep)];
+    let mut l = prev_max;
+    while l > level {
+        ep = search_layer(graph, data, q, &ep, 1, l, visited);
+        l -= 1;
+    }
+
+    // Insert at each level from min(level, prev_max) down to 0.
+    let top = level.min(prev_max);
+    for lvl in (0..=top).rev() {
+        let found = search_layer(graph, data, q, &ep, ef_construction, lvl, visited);
+        let m_here = graph.capacity(lvl);
+        let selected = select_neighbors_heuristic(data, q, found.clone(), m_here);
+        graph.set_neighbors(node, lvl, selected.iter().map(|&(_, id)| id).collect());
+        cache[node as usize][lvl] = selected.iter().map(|&(d, _)| d).collect();
+        for (d, nb) in selected {
+            graph.push_neighbor(nb, lvl, node);
+            // The back edge nb → node has the same distance the beam
+            // search just measured for node → nb.
+            cache[nb as usize][lvl].push(d);
+            shrink_neighbors(graph, cache, data, nb, lvl);
+        }
+        ep = found;
+    }
+    node
+}
+
 /// Build an HNSW index over `data`.
 pub fn build(data: &VectorSet, cfg: &BuildConfig) -> HnswGraph {
     assert!(cfg.m >= 2, "M must be >= 2");
@@ -148,46 +207,9 @@ pub fn build(data: &VectorSet, cfg: &BuildConfig) -> HnswGraph {
     // is bitwise symmetric in its arguments).
     let mut cache: DistCache = Vec::with_capacity(data.len());
 
-    for i in 0..data.len() {
+    for _ in 0..data.len() {
         let level = rng.hnsw_level(ml, cfg.max_level);
-        let q = data.row(i);
-
-        if graph.is_empty() {
-            graph.add_node(level);
-            cache.push(vec![Vec::new(); level + 1]);
-            continue;
-        }
-
-        let prev_max = graph.max_level();
-        let prev_ep = graph.entry_point();
-        let node = graph.add_node(level);
-        cache.push(vec![Vec::new(); level + 1]);
-
-        // Greedy descent from the old entry point down to level+1.
-        let mut ep = vec![(l2_sq(q, data.row(prev_ep as usize)), prev_ep)];
-        let mut l = prev_max;
-        while l > level {
-            ep = search_layer(&graph, data, q, &ep, 1, l, &mut visited);
-            l -= 1;
-        }
-
-        // Insert at each level from min(level, prev_max) down to 0.
-        let top = level.min(prev_max);
-        for lvl in (0..=top).rev() {
-            let found = search_layer(&graph, data, q, &ep, cfg.ef_construction, lvl, &mut visited);
-            let m_here = graph.capacity(lvl);
-            let selected = select_neighbors_heuristic(data, q, found.clone(), m_here);
-            graph.set_neighbors(node, lvl, selected.iter().map(|&(_, id)| id).collect());
-            cache[node as usize][lvl] = selected.iter().map(|&(d, _)| d).collect();
-            for (d, nb) in selected {
-                graph.push_neighbor(nb, lvl, node);
-                // The back edge nb → node has the same distance the beam
-                // search just measured for node → nb.
-                cache[nb as usize][lvl].push(d);
-                shrink_neighbors(&mut graph, &mut cache, data, nb, lvl);
-            }
-            ep = found;
-        }
+        insert_node(&mut graph, &mut cache, data, level, cfg.ef_construction, &mut visited);
     }
     // Compact the staging adjacency into the cache-linear CSR form the
     // search path runs on.

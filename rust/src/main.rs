@@ -382,6 +382,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
             default: None,
             is_flag: false,
         });
+        o.push(OptSpec {
+            name: "live",
+            help: "boot an EMPTY live server and stream inserts/deletes/searches at it",
+            default: None,
+            is_flag: true,
+        });
+        o.push(OptSpec {
+            name: "seal-threshold",
+            help: "with --live: memtable rows that trigger a seal",
+            default: Some("4096".into()),
+            is_flag: false,
+        });
+        o.push(OptSpec {
+            name: "min-live-recall",
+            help: "with --live: fail unless recall@10 on the surviving corpus reaches this floor",
+            default: None,
+            is_flag: false,
+        });
         println!("{}", usage("phnsw serve", "query server demo: batcher + router + workers", &o));
         return Ok(());
     }
@@ -389,6 +407,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         workers: args.get_parsed_or("workers", 4usize)?,
         ..Default::default()
     };
+    if args.flag("live") {
+        return cmd_serve_live(args, cfg);
+    }
     let mix_on = args.flag("mix") || args.flag("min-filtered-recall");
     // With --mix we need row access to the indexed corpus to grade
     // filtered requests against exact ground truth restricted to each
@@ -396,7 +417,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // own rerank table (or the workbench's base set) is read in place.
     enum MixCorpus {
         Mem(Arc<phnsw::dataset::VectorSet>),
-        Bundle(phnsw::runtime::AnyBundle),
+        Bundle(phnsw::runtime::Bundle),
     }
     impl MixCorpus {
         fn len(&self) -> usize {
@@ -427,9 +448,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // synthetic mixture at the bundle's dimensionality.
         let mmap = args.flag("mmap");
         let topen = std::time::Instant::now();
-        let any = phnsw::runtime::open_bundle_with(
+        let any = phnsw::runtime::Bundle::open(
             &bundle_path,
-            phnsw::runtime::OpenOptions { mmap },
+            phnsw::runtime::OpenOptions::new().mmap(mmap),
         )?;
         let open_ms = topen.elapsed().as_secs_f64() * 1e3;
         // Machine-readable cold-start line: CI asserts the mmap open is
@@ -458,7 +479,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if mix_on {
             corpus = Some(MixCorpus::Bundle(any));
         }
-        (Server::start_with_engine(cfg, "phnsw", engine), queries)
+        (
+            Server::builder()
+                .config(cfg)
+                .engine("phnsw", engine)
+                .start()
+                .expect("engine source is infallible"),
+            queries,
+        )
     } else {
         let w = workbench_from(args)?;
         let engine_name = args.get_or("engine", "phnsw");
@@ -481,7 +509,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if mix_on {
             corpus = Some(MixCorpus::Mem(w.base.clone()));
         }
-        (Server::start(cfg, Arc::new(router)), w.queries.clone())
+        (Server::builder().config(cfg).router(Arc::new(router)).start()?, w.queries.clone())
     };
     let handle = server.handle();
     let clients: usize = args.get_parsed_or("clients", 4usize)?;
@@ -522,7 +550,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     if let Some(p) = prepared {
                         q = p.sample(&mut rng, q);
                     }
-                    let (topk, filter) = (q.topk, q.filter.clone());
+                    let (topk, filter) = (q.core.topk.unwrap_or(10), q.core.filter.clone());
                     let Ok(res) = h.query_blocking(q) else { continue };
                     if let Some(f) = filter {
                         local.push((qi, f, topk, res.neighbors.iter().map(|n| n.id).collect()));
@@ -585,6 +613,156 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 "filtered recall {recall:.3} below required floor {floor}"
             );
         }
+    }
+    Ok(())
+}
+
+/// `phnsw serve --live`: boot an *empty* live server (no bundle, no
+/// workbench build), stream inserts + tombstone deletes + searches at it
+/// open-loop, seal the tail memtable, compact, then grade recall@10 on
+/// the surviving corpus against an exact scan. Deleted ids must never
+/// appear in any result; self-query probes verify acked inserts are
+/// immediately searchable.
+fn cmd_serve_live(args: &Args, cfg: ServerConfig) -> Result<()> {
+    use phnsw::coordinator::{run_open_loop, IngestLeg, LoadConfig};
+    use phnsw::dataset::synthetic::{generate, SyntheticConfig};
+    use phnsw::graph::build::BuildConfig;
+    use phnsw::pca::PcaModel;
+    use phnsw::segment::{LiveConfig, LiveEngine};
+
+    let n: usize = args.get_parsed_or("n", 10_000usize)?;
+    // Ingest mix: 3/4 inserts, 1/20 deletes (~6.7% of inserts), the
+    // rest searches. Total offered ops sized so expected inserts ≈ --n.
+    const INSERT_FRACTION: f64 = 0.75;
+    const DELETE_FRACTION: f64 = 0.05;
+    let total = match args.get("requests") {
+        Some(raw) => raw.parse().map_err(|e| anyhow::anyhow!("invalid --requests: {e}"))?,
+        None => (n as f64 / INSERT_FRACTION).ceil() as usize,
+    };
+    let seed = seed_from(args);
+    let syn = SyntheticConfig {
+        // One corpus row per offered op: insert `i` always carries row
+        // `i`, so ids map 1:1 to rows and grading needs no replay log.
+        n_base: total,
+        n_queries: args.get_parsed_or("queries", 200usize)?,
+        seed,
+        ..SyntheticConfig::default()
+    };
+    let (base, queries) = generate(&syn);
+    // The PCA model is frozen before streaming begins (fit on a
+    // bootstrap sample); every insert is projected + quantized against
+    // it — the live tier never refits.
+    let mut sample = phnsw::dataset::VectorSet::new(base.dim());
+    for i in 0..base.len().min(2_048) {
+        sample.push(base.row(i));
+    }
+    let dim_low = args.get_parsed_or("dim-low", phnsw::params::DIM_LOW)?;
+    let pca = Arc::new(PcaModel::fit(&sample, dim_low, seed));
+    let live = LiveEngine::new(
+        pca,
+        LiveConfig {
+            seal_threshold: args.get_parsed_or("seal-threshold", 4_096usize)?,
+            build: BuildConfig {
+                m: args.get_parsed_or("m", phnsw::params::M)?,
+                ef_construction: args.get_parsed_or("efc", 128usize)?,
+                ..Default::default()
+            },
+            params: phnsw_params(args)?,
+            ..Default::default()
+        },
+    );
+    let server = Server::builder().config(cfg).live(live).start()?;
+    let handle = server.handle();
+
+    let base = Arc::new(base);
+    let t0 = std::time::Instant::now();
+    let mut report = run_open_loop(
+        &handle,
+        &queries,
+        &LoadConfig {
+            rate_qps: 50_000.0, // effectively "as fast as acks allow"
+            total,
+            seed,
+            ingest: Some(IngestLeg {
+                corpus: base.clone(),
+                insert_fraction: INSERT_FRACTION,
+                delete_fraction: DELETE_FRACTION,
+                probe_every: 64,
+            }),
+            ..Default::default()
+        },
+    );
+    // Seal the tail memtable, then fold small shards and drop
+    // tombstoned rows — the server keeps answering across both.
+    handle.flush()?;
+    let engine = server.live().expect("--live server has a live tier").clone();
+    engine.compact();
+    let stats = engine.stats();
+    println!(
+        "live ingest: {} inserts / {} deletes / {} searches in {:.2?} — \
+         {} seals, {} compactions, epoch {}",
+        report.inserted,
+        report.deleted_ids.len(),
+        report.completed,
+        t0.elapsed(),
+        stats.seals,
+        stats.compactions,
+        stats.epoch,
+    );
+
+    // Grade against exact ground truth on the surviving corpus.
+    let deleted: std::collections::HashSet<u32> = report.deleted_ids.iter().copied().collect();
+    let surviving: Vec<u32> =
+        (0..report.inserted as u32).filter(|id| !deleted.contains(id)).collect();
+    anyhow::ensure!(!surviving.is_empty(), "nothing survived the ingest run");
+    let (mut hits, mut wanted, mut leaks) = (0usize, 0usize, 0usize);
+    for qi in 0..queries.len() {
+        let qv = queries.row(qi);
+        let res = handle.query_blocking(Query::new(qv.to_vec()).with_topk(10))?;
+        leaks += res.neighbors.iter().filter(|nb| deleted.contains(&nb.id)).count();
+        let gt = phnsw::dataset::exact_topk_rows(
+            surviving.iter().copied(),
+            |id| base.row(id as usize),
+            qv,
+            10,
+        );
+        let gtset: std::collections::HashSet<u32> = gt.iter().copied().collect();
+        wanted += gt.len();
+        hits += res.neighbors.iter().take(10).filter(|nb| gtset.contains(&nb.id)).count();
+    }
+    let recall = if wanted == 0 { 1.0 } else { hits as f64 / wanted as f64 };
+    let (lag_p50, _, lag_p99) = report.insert_lag.summary();
+    println!(
+        "{{\"bench\":\"live_serve\",\"inserted\":{},\"deleted\":{},\"searches\":{},\
+         \"sealed_shards\":{},\"probes\":{},\"probe_hits\":{},\"leaks\":{leaks},\
+         \"recall10\":{recall:.3},\"insert_lag_p50_us\":{lag_p50:.1},\
+         \"insert_lag_p99_us\":{lag_p99:.1}}}",
+        report.inserted,
+        report.deleted_ids.len(),
+        report.completed,
+        stats.sealed_shards,
+        report.probes,
+        report.probe_hits,
+    );
+    println!("{}", server.stats().render());
+    server.shutdown();
+    anyhow::ensure!(leaks == 0, "{leaks} tombstoned ids leaked into search results");
+    anyhow::ensure!(
+        report.probe_hits == report.probes,
+        "insert-visibility probes missed: {}/{}",
+        report.probe_hits,
+        report.probes
+    );
+    anyhow::ensure!(
+        report.deleted_ids.len() * 20 >= report.inserted,
+        "delete leg too thin: {} deletes for {} inserts",
+        report.deleted_ids.len(),
+        report.inserted
+    );
+    if let Some(raw) = args.get("min-live-recall") {
+        let floor: f64 =
+            raw.parse().map_err(|e| anyhow::anyhow!("invalid --min-live-recall: {e}"))?;
+        anyhow::ensure!(recall >= floor, "live recall@10 {recall:.3} below floor {floor}");
     }
     Ok(())
 }

@@ -1,5 +1,5 @@
 //! Minimal read-only memory mapping — the substrate of the zero-copy v3
-//! bundle path (`runtime::open_bundle_with`).
+//! bundle path (`runtime::Bundle::open`).
 //!
 //! The offline registry has no `memmap2`, so the mapping syscalls are
 //! declared directly against the C library Rust already links on unix

@@ -1,7 +1,7 @@
 //! The `.phnsw` index artifact — one self-contained file bundling
 //! everything a server needs to answer queries: the frozen CSR graph, the
 //! trained [`PcaModel`], the SQ8-quantized low-dim filter store, and the
-//! f32 high-dim rerank table. A process boots by [`IndexBundle::open`]
+//! f32 high-dim rerank table. A process boots by [`Bundle::open`]
 //! instead of re-fitting PCA and re-projecting the corpus at startup, and
 //! the reconstructed searcher is bitwise identical to the one the bundle
 //! was saved from (tests pin this).
@@ -33,14 +33,15 @@
 //! version bump is deliberate — a pre-segmentation reader must reject a
 //! sharded file loudly ("unsupported bundle version 2"), not skip the
 //! unknown `SEGD` tag and silently serve the last shard as if it were
-//! the whole corpus. [`open_bundle`] accepts both versions.
+//! the whole corpus.
 //!
 //! **Version 3** (`super::v3`) replaces the sequential frames with an
 //! up-front section directory and page-aligned payloads, so the whole
 //! file can be served straight from an `mmap` with zero deserialization
-//! — see the `v3` module docs for the layout. [`open_bundle_with`]
-//! dispatches all three versions; requesting `mmap` on a v1/v2 file is
-//! a loud error rather than a silent owned fallback.
+//! — see the `v3` module docs for the layout. [`Bundle::open`]
+//! dispatches all three versions; requesting `mmap` (via
+//! [`OpenOptions`]) on a v1/v2 file is a loud error rather than a
+//! silent owned fallback.
 //!
 //! Every declared length is validated against the remaining file bytes
 //! *before* any allocation sized from it — a corrupt artifact surfaces
@@ -176,7 +177,8 @@ impl IndexBundle {
 
     /// Open a single-segment `.phnsw` artifact, validating every section
     /// against the file length and the components against each other.
-    /// Fails on a segmented file — use [`open_bundle`] to accept both.
+    /// Fails on a segmented file.
+    #[deprecated(note = "use Bundle::open(path, OpenOptions::default())?.into_single()")]
     pub fn open(path: impl AsRef<Path>) -> Result<Self> {
         let path = path.as_ref();
         // Cheap header sniff: reject a segmented (v2) artifact from the
@@ -191,16 +193,10 @@ impl IndexBundle {
             let version = u32::from_le_bytes(head[4..8].try_into()?);
             ensure!(
                 version != VERSION_SEGMENTED,
-                "bundle is a segmented (v{version}) artifact; open it with runtime::open_bundle"
+                "bundle is a segmented (v{version}) artifact; open it with Bundle::open"
             );
         }
-        match open_bundle(path)? {
-            AnyBundle::Single(b) => Ok(b),
-            AnyBundle::Segmented(s) => bail!(
-                "bundle holds {} segments; open it with runtime::open_bundle",
-                s.n_segments()
-            ),
-        }
+        Bundle::open(path, OpenOptions::default())?.into_single()
     }
 
     /// Construct a ready-to-serve searcher from the opened components —
@@ -300,20 +296,78 @@ pub(crate) fn decode_segdir(bytes: &[u8]) -> Result<ShardMap> {
     Ok(ShardMap::new(assignment, n_total as usize, n_shards))
 }
 
-/// An opened `.phnsw` file of either flavor.
-pub enum AnyBundle {
+/// An opened `.phnsw` file of either flavor. [`Bundle::open`] is *the*
+/// way to open an artifact — one entry point, every version (1/2/3),
+/// residency chosen by [`OpenOptions`].
+pub enum Bundle {
     /// One monolithic index (the PR-2 layout).
     Single(IndexBundle),
     /// A sharded index: `SEGD` directory + one section group per shard.
     Segmented(SegmentedIndex),
 }
 
-impl AnyBundle {
+/// Deprecated name of [`Bundle`].
+#[deprecated(note = "renamed to Bundle")]
+pub type AnyBundle = Bundle;
+
+impl Bundle {
+    /// Open a `.phnsw` artifact of any version (1, 2, or 3). A v3 file
+    /// opens through the page-aligned directory (zero-copy when
+    /// `opts` requests mmap); v1/v2 files decode through the owned
+    /// streaming path. Single vs segmented is dispatched on the `SEGD`
+    /// directory section.
+    pub fn open(path: impl AsRef<Path>, opts: OpenOptions) -> Result<Self> {
+        let path = path.as_ref();
+        // Version sniff from the 8-byte prefix; malformed headers fall
+        // through to the legacy reader for its error messages.
+        let version = sniff_version(path);
+        if version == Some(VERSION_V3) {
+            return super::v3::open_v3(path, opts.mmap);
+        }
+        if opts.mmap {
+            let v = version.map_or_else(|| "unrecognized".to_string(), |v| format!("v{v}"));
+            bail!(
+                "--mmap serving requires a v3 page-aligned bundle, but {} is {v}; \
+                 rebuild it with `phnsw build --bundle-format v3`",
+                path.display()
+            );
+        }
+        let (version, sections) = read_sections(path)?;
+        let segdir = sections.iter().find_map(|s| match s {
+            Section::SegDir(map) => Some(*map),
+            _ => None,
+        });
+        if version == VERSION_SINGLE {
+            // A v1 file with a directory would be misread by v1-only readers
+            // (they skip the unknown tag); no writer produces one.
+            ensure!(segdir.is_none(), "v1 bundle unexpectedly carries a segment directory");
+            Ok(Bundle::Single(assemble_single(sections)?))
+        } else {
+            let Some(map) = segdir else {
+                bail!("segmented (v2) bundle is missing its SEGD directory");
+            };
+            Ok(Bundle::Segmented(assemble_segmented(sections, map)?))
+        }
+    }
+
+    /// Unwrap a monolithic bundle; fails loudly on a segmented one (its
+    /// shards have no single graph/store to hand out — serve it through
+    /// [`Bundle::engine`] instead).
+    pub fn into_single(self) -> Result<IndexBundle> {
+        match self {
+            Bundle::Single(b) => Ok(b),
+            Bundle::Segmented(s) => bail!(
+                "bundle is segmented ({} shards); serve it through Bundle::engine",
+                s.n_segments()
+            ),
+        }
+    }
+
     /// Total indexed rows.
     pub fn len(&self) -> usize {
         match self {
-            AnyBundle::Single(b) => b.high.len(),
-            AnyBundle::Segmented(s) => s.len(),
+            Bundle::Single(b) => b.high.len(),
+            Bundle::Segmented(s) => s.len(),
         }
     }
 
@@ -325,24 +379,24 @@ impl AnyBundle {
     /// High-dim query dimensionality.
     pub fn dim(&self) -> usize {
         match self {
-            AnyBundle::Single(b) => b.high.dim(),
-            AnyBundle::Segmented(s) => s.dim(),
+            Bundle::Single(b) => b.high.dim(),
+            Bundle::Segmented(s) => s.dim(),
         }
     }
 
     /// Number of segments (1 for a monolithic bundle).
     pub fn n_segments(&self) -> usize {
         match self {
-            AnyBundle::Single(_) => 1,
-            AnyBundle::Segmented(s) => s.n_segments(),
+            Bundle::Single(_) => 1,
+            Bundle::Segmented(s) => s.n_segments(),
         }
     }
 
     /// Low-dim filter codec label (segmented: shard 0's codec).
     pub fn low_codec_label(&self) -> &'static str {
         match self {
-            AnyBundle::Single(b) => b.low.codec().label(),
-            AnyBundle::Segmented(s) => {
+            Bundle::Single(b) => b.low.codec().label(),
+            Bundle::Segmented(s) => {
                 s.segments.first().map(|seg| seg.low.codec().label()).unwrap_or("-")
             }
         }
@@ -355,8 +409,8 @@ impl AnyBundle {
     /// gate — without re-generating the corpus.
     pub fn high_row(&self, global: usize) -> &[f32] {
         match self {
-            AnyBundle::Single(b) => b.high.row(global),
-            AnyBundle::Segmented(s) => {
+            Bundle::Single(b) => b.high.row(global),
+            Bundle::Segmented(s) => {
                 let (shard, local) = s.map.shard_of(global as u32);
                 s.segments[shard].high.row(local as usize)
             }
@@ -368,13 +422,20 @@ impl AnyBundle {
     /// [`crate::segment::SegmentedEngine`] for a sharded one.
     pub fn engine(&self, params: PhnswParams) -> Arc<dyn AnnEngine> {
         match self {
-            AnyBundle::Single(b) => Arc::new(b.searcher(params)),
-            AnyBundle::Segmented(s) => Arc::new(s.engine(params)),
+            Bundle::Single(b) => Arc::new(b.searcher(params)),
+            Bundle::Segmented(s) => Arc::new(s.engine(params)),
         }
     }
 }
 
-/// How to open a `.phnsw` artifact.
+/// How to open a `.phnsw` artifact. `Default` is the owned in-RAM
+/// decode; builder methods opt into alternatives:
+///
+/// ```no_run
+/// # use phnsw::runtime::{Bundle, OpenOptions};
+/// let b = Bundle::open("index.phnsw", OpenOptions::new().mmap(true))?;
+/// # anyhow::Ok(())
+/// ```
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct OpenOptions {
     /// Serve GRPH/LOWQ/HIGH directly from a memory mapping of the file
@@ -384,48 +445,29 @@ pub struct OpenOptions {
     pub mmap: bool,
 }
 
-/// Open a `.phnsw` artifact of any version (1, 2, or 3), dispatching on
-/// the `SEGD` directory section. Equivalent to [`open_bundle_with`] with
-/// default options (owned decode).
-pub fn open_bundle(path: impl AsRef<Path>) -> Result<AnyBundle> {
-    open_bundle_with(path, OpenOptions::default())
+impl OpenOptions {
+    /// Default options (owned in-RAM decode).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request zero-copy mmap serving (v3 bundles only).
+    pub fn mmap(mut self, mmap: bool) -> Self {
+        self.mmap = mmap;
+        self
+    }
 }
 
-/// Open a `.phnsw` artifact with explicit residency options. A v3 file
-/// opens through the page-aligned directory (zero-copy when
-/// `opts.mmap`); v1/v2 files decode through the owned streaming path.
-pub fn open_bundle_with(path: impl AsRef<Path>, opts: OpenOptions) -> Result<AnyBundle> {
-    let path = path.as_ref();
-    // Version sniff from the 8-byte prefix; malformed headers fall
-    // through to the legacy reader for its error messages.
-    let version = sniff_version(path);
-    if version == Some(VERSION_V3) {
-        return super::v3::open_v3(path, opts.mmap);
-    }
-    if opts.mmap {
-        let v = version.map_or_else(|| "unrecognized".to_string(), |v| format!("v{v}"));
-        bail!(
-            "--mmap serving requires a v3 page-aligned bundle, but {} is {v}; \
-             rebuild it with `phnsw build --bundle-format v3`",
-            path.display()
-        );
-    }
-    let (version, sections) = read_sections(path)?;
-    let segdir = sections.iter().find_map(|s| match s {
-        Section::SegDir(map) => Some(*map),
-        _ => None,
-    });
-    if version == VERSION_SINGLE {
-        // A v1 file with a directory would be misread by v1-only readers
-        // (they skip the unknown tag); no writer produces one.
-        ensure!(segdir.is_none(), "v1 bundle unexpectedly carries a segment directory");
-        Ok(AnyBundle::Single(assemble_single(sections)?))
-    } else {
-        let Some(map) = segdir else {
-            bail!("segmented (v2) bundle is missing its SEGD directory");
-        };
-        Ok(AnyBundle::Segmented(assemble_segmented(sections, map)?))
-    }
+/// Deprecated alias for [`Bundle::open`] with default options.
+#[deprecated(note = "use Bundle::open(path, OpenOptions::default())")]
+pub fn open_bundle(path: impl AsRef<Path>) -> Result<Bundle> {
+    Bundle::open(path, OpenOptions::default())
+}
+
+/// Deprecated alias for [`Bundle::open`].
+#[deprecated(note = "use Bundle::open")]
+pub fn open_bundle_with(path: impl AsRef<Path>, opts: OpenOptions) -> Result<Bundle> {
+    Bundle::open(path, opts)
 }
 
 /// Best-effort version sniff from the 8-byte file prefix; `None` when
@@ -608,7 +650,7 @@ pub fn inspect_bundle(path: impl AsRef<Path>) -> Result<BundleInfo> {
 
 /// Write a segmented index as one `.phnsw` artifact. An `S = 1` index is
 /// written in the classic single-segment layout (no `SEGD`), so it stays
-/// readable by [`IndexBundle::open`] and byte-compatible with PR-2
+/// readable by [`Bundle::into_single`] and byte-compatible with PR-2
 /// writers; `S > 1` leads with the shard directory and the shared PCA,
 /// then one `GRPH`/`LOWQ`/`HIGH` group per shard in shard order.
 pub fn save_segmented(path: impl AsRef<Path>, index: &SegmentedIndex) -> Result<()> {
@@ -653,6 +695,11 @@ mod tests {
         p
     }
 
+    /// The one-way-to-open path, unwrapped to a single-segment bundle.
+    fn open_single(p: &std::path::Path) -> Result<IndexBundle> {
+        Bundle::open(p, OpenOptions::default())?.into_single()
+    }
+
     struct Stack {
         base: VectorSet,
         queries: VectorSet,
@@ -675,7 +722,7 @@ mod tests {
         let s = stack(800);
         let p = tmp("roundtrip.phnsw");
         IndexBundle::save(&p, &s.graph, &s.pca, &s.low, &s.base).unwrap();
-        let b = IndexBundle::open(&p).unwrap();
+        let b = open_single(&p).unwrap();
 
         let native = PhnswSearcher::with_store(
             Arc::new(s.graph.clone()),
@@ -700,13 +747,13 @@ mod tests {
 
         // Truncated mid-section.
         std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
-        assert!(IndexBundle::open(&p).is_err(), "truncated bundle must fail");
+        assert!(open_single(&p).is_err(), "truncated bundle must fail");
 
         // Bad magic.
         let mut bad = bytes.clone();
         bad[0..4].copy_from_slice(b"XXXX");
         std::fs::write(&p, &bad).unwrap();
-        assert!(IndexBundle::open(&p).is_err());
+        assert!(open_single(&p).is_err());
 
         // Section length blown up far past the file: must be rejected by
         // the remaining-bytes bound, not attempted as an allocation.
@@ -714,7 +761,7 @@ mod tests {
         // First section header sits right after the 12-byte file header.
         bad[16..24].copy_from_slice(&(u64::MAX / 2).to_le_bytes());
         std::fs::write(&p, &bad).unwrap();
-        assert!(IndexBundle::open(&p).is_err());
+        assert!(open_single(&p).is_err());
 
         std::fs::remove_file(&p).ok();
     }
@@ -729,7 +776,7 @@ mod tests {
         bytes.extend_from_slice(&1u32.to_le_bytes());
         bytes.extend_from_slice(&0u32.to_le_bytes());
         std::fs::write(&p, &bytes).unwrap();
-        let err = IndexBundle::open(&p).unwrap_err();
+        let err = open_single(&p).unwrap_err();
         assert!(err.to_string().contains("missing"), "{err}");
         std::fs::remove_file(&p).ok();
     }
@@ -742,7 +789,7 @@ mod tests {
         let small = stack(100);
         let p = tmp("mismatch.phnsw");
         IndexBundle::save(&p, &s.graph, &s.pca, &small.low, &s.base).unwrap();
-        assert!(IndexBundle::open(&p).is_err());
+        assert!(open_single(&p).is_err());
         std::fs::remove_file(&p).ok();
     }
 
@@ -753,8 +800,8 @@ mod tests {
         let s = stack(300);
         let p = tmp("dispatch_single.phnsw");
         IndexBundle::save(&p, &s.graph, &s.pca, &s.low, &s.base).unwrap();
-        let any = super::open_bundle(&p).unwrap();
-        assert!(matches!(any, super::AnyBundle::Single(_)));
+        let any = Bundle::open(&p, OpenOptions::default()).unwrap();
+        assert!(matches!(any, Bundle::Single(_)));
         assert_eq!(any.n_segments(), 1);
         assert_eq!(any.len(), 300);
         std::fs::remove_file(&p).ok();
@@ -770,13 +817,16 @@ mod tests {
         // readers reject them loudly instead of serving the last shard.
         let header = std::fs::read(&p).unwrap();
         assert_eq!(u32::from_le_bytes(header[4..8].try_into().unwrap()), 2);
-        let any = super::open_bundle(&p).unwrap();
+        let any = Bundle::open(&p, OpenOptions::default()).unwrap();
         assert_eq!(any.n_segments(), 3);
         assert_eq!(any.len(), 400);
         assert_eq!(any.low_codec_label(), "sq8");
-        // The single-segment opener refuses segmented files loudly (from
-        // the header alone, before any shard decodes).
-        let err = IndexBundle::open(&p).unwrap_err();
+        // Unwrapping to a single-segment bundle refuses segmented files
+        // loudly.
+        let err = Bundle::open(&p, OpenOptions::default())
+            .unwrap()
+            .into_single()
+            .unwrap_err();
         assert!(err.to_string().contains("segmented"), "{err}");
         std::fs::remove_file(&p).ok();
     }
@@ -791,8 +841,22 @@ mod tests {
         let p = tmp("seg_as_classic.phnsw");
         super::save_segmented(&p, &idx).unwrap();
         // Readable by the classic single-segment opener: no SEGD section.
-        let b = IndexBundle::open(&p).unwrap();
+        let b = open_single(&p).unwrap();
         assert_eq!(b.high.len(), 250);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_wrappers_still_open() {
+        // The pre-redesign entry points must stay functional until their
+        // removal — they are one-line shims over Bundle::open.
+        let s = stack(200);
+        let p = tmp("legacy.phnsw");
+        IndexBundle::save(&p, &s.graph, &s.pca, &s.low, &s.base).unwrap();
+        assert_eq!(super::open_bundle(&p).unwrap().len(), 200);
+        assert_eq!(super::open_bundle_with(&p, OpenOptions::default()).unwrap().len(), 200);
+        assert_eq!(IndexBundle::open(&p).unwrap().high.len(), 200);
         std::fs::remove_file(&p).ok();
     }
 
@@ -811,10 +875,13 @@ mod tests {
         let mut bad = bytes.clone();
         bad[24..28].copy_from_slice(&9u32.to_le_bytes());
         std::fs::write(&p, &bad).unwrap();
-        assert!(super::open_bundle(&p).is_err(), "shard-count mismatch must be rejected");
+        assert!(
+            Bundle::open(&p, OpenOptions::default()).is_err(),
+            "shard-count mismatch must be rejected"
+        );
         // Truncation mid-shard is rejected too.
         std::fs::write(&p, &bytes[..bytes.len() * 2 / 3]).unwrap();
-        assert!(super::open_bundle(&p).is_err());
+        assert!(Bundle::open(&p, OpenOptions::default()).is_err());
         std::fs::remove_file(&p).ok();
     }
 }

@@ -39,7 +39,7 @@
 //! index, pinned by `tests/bundle_v3.rs`.
 
 use super::bundle::{
-    assemble_segmented, assemble_single, decode_segdir, encode_segdir, AnyBundle, BundleInfo,
+    assemble_segmented, assemble_single, decode_segdir, encode_segdir, Bundle, BundleInfo,
     Section, SectionInfo, MAGIC, MAX_SHARDS, TAG_GRAPH, TAG_HIGH, TAG_LOW, TAG_PCA, TAG_SEGDIR,
     VERSION_V3,
 };
@@ -253,7 +253,7 @@ fn read_directory(map: &Mmap, path: &Path) -> Result<Vec<DirEntry>> {
 /// Open a v3 bundle. With `mapped`, GRPH/LOWQ/HIGH stay views into the
 /// mapping (zero-copy, demand-paged); otherwise their bytes are copied
 /// into owned storage through the same parser.
-pub(crate) fn open_v3(path: &Path, mapped: bool) -> Result<AnyBundle> {
+pub(crate) fn open_v3(path: &Path, mapped: bool) -> Result<Bundle> {
     if cfg!(target_endian = "big") {
         bail!(
             "v3 bundles are little-endian zero-copy images and cannot be served \
@@ -307,8 +307,8 @@ pub(crate) fn open_v3(path: &Path, mapped: bool) -> Result<AnyBundle> {
         _ => None,
     });
     match segdir {
-        None => Ok(AnyBundle::Single(assemble_single(sections)?)),
-        Some(shard_map) => Ok(AnyBundle::Segmented(assemble_segmented(sections, shard_map)?)),
+        None => Ok(Bundle::Single(assemble_single(sections)?)),
+        Some(shard_map) => Ok(Bundle::Segmented(assemble_segmented(sections, shard_map)?)),
     }
 }
 

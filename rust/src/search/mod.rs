@@ -33,7 +33,7 @@ pub mod visited;
 pub use config::{PhnswParams, SearchParams};
 pub use hnsw::HnswSearcher;
 pub use phnsw::PhnswSearcher;
-pub use request::{IdFilter, SearchRequest, MAX_EF_BOOST};
+pub use request::{IdFilter, RequestCore, SearchRequest, MAX_EF_BOOST};
 pub use stats::{HopEvent, SearchStats, SearchTrace};
 
 /// A search result: base-vector id plus its (squared) distance to the query.

@@ -71,22 +71,26 @@ pub struct PhnswSearcher {
 /// gathered-block kernel call, top-k selection (kSort.L), then high-dim
 /// rerank of the ≤ k survivors (Dist.H, lines 14–23). The visited check
 /// happens *after* the filter (line 16), exactly as listed.
-struct PcaFilterScorer<'a> {
+///
+/// Crate-visible so the live memtable can run the genuine Algorithm 1
+/// loop over its staging graph under a read lock (it cannot use
+/// [`PhnswSearcher`], whose `Arc`-owned stores assume frozen data).
+pub(crate) struct PcaFilterScorer<'a> {
     /// Query, original space.
-    q: &'a [f32],
-    data_high: &'a VectorSet,
+    pub(crate) q: &'a [f32],
+    pub(crate) data_high: &'a VectorSet,
     /// Low-dim filter store (scored via its batched kernel).
-    low: &'a dyn VectorStore,
+    pub(crate) low: &'a dyn VectorStore,
     /// Codec-domain query + gather block, prepared once per search.
-    store_scratch: &'a mut StoreScratch,
+    pub(crate) store_scratch: &'a mut StoreScratch,
     /// Batched filter distances for the current hop.
-    dists: &'a mut Vec<f32>,
+    pub(crate) dists: &'a mut Vec<f32>,
     /// Filter size at the current layer (set per layer by the caller).
-    k: usize,
+    pub(crate) k: usize,
     /// f_pca prune threshold (line 5): the furthest low-dim distance among
     /// the survivors the high-dim check admitted during the previous hop.
     /// ∞ when no survivor was admitted (no pruning), which is safe.
-    f_pca: f32,
+    pub(crate) f_pca: f32,
 }
 
 impl NeighborScorer for PcaFilterScorer<'_> {

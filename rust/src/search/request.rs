@@ -226,6 +226,71 @@ impl<'a> From<&'a [f32]> for SearchRequest<'a> {
     }
 }
 
+/// The owned counterpart of [`SearchRequest`]: the same per-request
+/// knobs around an owned query vector, for contexts that outlive the
+/// caller's borrow (client handles, queues, the coordinator).
+///
+/// There is exactly one definition of "the per-request knobs" — this
+/// struct and [`SearchRequest`] share it field-for-field, and
+/// [`RequestCore::as_request`] is the lossless bridge to the borrowed
+/// engine-facing view.
+#[derive(Debug, Clone)]
+pub struct RequestCore {
+    /// Query vector, original high-dim space (owned).
+    pub vector: Vec<f32>,
+    /// Number of neighbors wanted; `None` keeps the engine's full
+    /// layer-0 beam (see [`SearchRequest::topk`]).
+    pub topk: Option<usize>,
+    /// Per-request beam widths overriding the engine's configured
+    /// [`SearchParams`].
+    pub ef_override: Option<SearchParams>,
+    /// Result-side id predicate (filtered ANN). Shared, immutable.
+    pub filter: Option<Arc<IdFilter>>,
+}
+
+impl RequestCore {
+    /// Core with default knobs — the owned analogue of
+    /// [`SearchRequest::new`].
+    pub fn new(vector: Vec<f32>) -> Self {
+        Self { vector, topk: None, ef_override: None, filter: None }
+    }
+
+    /// Set the per-request result count.
+    pub fn with_topk(mut self, k: usize) -> Self {
+        self.topk = Some(k);
+        self
+    }
+
+    /// Set per-request beam widths.
+    pub fn with_ef(mut self, params: SearchParams) -> Self {
+        self.ef_override = Some(params);
+        self
+    }
+
+    /// Attach an id filter.
+    pub fn with_filter(mut self, filter: Arc<IdFilter>) -> Self {
+        self.filter = Some(filter);
+        self
+    }
+
+    /// The engine-facing view: borrows the vector, clones the
+    /// (Arc-cheap) knobs.
+    pub fn as_request(&self) -> SearchRequest<'_> {
+        SearchRequest {
+            vector: &self.vector,
+            topk: self.topk,
+            ef_override: self.ef_override.clone(),
+            filter: self.filter.clone(),
+        }
+    }
+}
+
+impl From<Vec<f32>> for RequestCore {
+    fn from(vector: Vec<f32>) -> Self {
+        Self::new(vector)
+    }
+}
+
 impl<'a> From<&'a Vec<f32>> for SearchRequest<'a> {
     fn from(vector: &'a Vec<f32>) -> Self {
         Self::new(vector)
@@ -303,6 +368,24 @@ mod tests {
             .effective_search(&base);
         assert_eq!(eff.ef_upper, 1, "zero widths clamp instead of panicking the beam");
         assert_eq!(eff.ef_l0, 1);
+    }
+
+    #[test]
+    fn request_core_bridges_losslessly() {
+        let filter = Arc::new(IdFilter::from_ids(10, [2u32]));
+        let core = RequestCore::new(vec![1.0, 2.0])
+            .with_topk(7)
+            .with_ef(SearchParams { ef_upper: 3, ef_l0: 9 })
+            .with_filter(filter.clone());
+        let req = core.as_request();
+        assert_eq!(req.vector, &[1.0, 2.0]);
+        assert_eq!(req.topk, Some(7));
+        assert_eq!(req.ef_override, Some(SearchParams { ef_upper: 3, ef_l0: 9 }));
+        assert!(Arc::ptr_eq(req.filter.as_ref().unwrap(), &filter), "filter shared, not copied");
+        // A default core is the identity, like SearchRequest::new.
+        let base = SearchParams { ef_upper: 1, ef_l0: 10 };
+        let plain = RequestCore::from(vec![0.0f32; 4]);
+        assert_eq!(plain.as_request().effective_search(&base), base);
     }
 
     #[test]

@@ -1,0 +1,828 @@
+//! The live index tier: streaming inserts, tombstone deletes, and
+//! background sealing/compaction over the segmented serving stack.
+//!
+//! The shape is a small LSM tree specialized for graphs:
+//!
+//! * **memtable** — one mutable [`MemSegment`] accepts inserts and serves
+//!   them immediately (insert-to-visible is one RwLock handoff).
+//! * **seal** — past `seal_threshold` rows (or on `flush`), the sealer
+//!   freezes the memtable into an immutable sealed shard: the staging
+//!   graph compacts to CSR *preserving neighbor order*, so a search
+//!   answered by the sealed shard is bitwise the search the memtable
+//!   would have answered. When a data directory is configured the shard
+//!   is also persisted as a v3 `.phnsw` bundle (+ a `.ids` sidecar
+//!   mapping shard-local rows to global ids).
+//! * **tombstones** — deletes set a bit in a shared [`TombSet`]; every
+//!   search composes it into the result-side filter (PR 5 semantics:
+//!   tombstoned nodes still route the walk, they just never enter
+//!   results), so a delete is visible to the very next search with no
+//!   graph surgery.
+//! * **compact** — small sealed shards are rebuilt into one, dropping
+//!   tombstoned rows for real. Row levels are preserved from the source
+//!   shards, so compaction is deterministic (no RNG) and recall-neutral.
+//!
+//! ## Epoch snapshots
+//!
+//! Searches never lock the index: they clone an `Arc<ShardView>` — an
+//! immutable snapshot of (sealed shards, memtable, id base) — and run
+//! against it. Seal and compact build a *new* view and publish it behind
+//! a mutex (the std-only stand-in for an `ArcSwap`); in-flight searches
+//! keep their old view alive through their `Arc`, so a swap can never
+//! pull data out from under a walk. Structural mutations (seal, compact)
+//! additionally serialize on `seal_lock`, making view publication
+//! single-writer.
+
+use super::build::shard_seed;
+use super::memtable::{affine_from_pca, MemSegment};
+use crate::dataset::VectorSet;
+use crate::graph::build::{insert_node, BuildConfig, DistCache};
+use crate::graph::HnswGraph;
+use crate::pca::PcaModel;
+use crate::search::visited::VisitedSet;
+use crate::search::{
+    AnnEngine, IdFilter, Neighbor, PhnswParams, PhnswSearcher, SearchRequest, SearchStats,
+    SearchTrace,
+};
+use crate::store::{Sq8Store, VectorStore};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock, Weak};
+use std::time::Duration;
+
+/// Configuration for a [`LiveEngine`].
+#[derive(Debug, Clone)]
+pub struct LiveConfig {
+    /// Memtable rows that trigger a seal. Also the "small shard" bound:
+    /// sealed shards below it are compaction candidates.
+    pub seal_threshold: usize,
+    /// Max small shards folded into one compaction.
+    pub compact_fanin: usize,
+    /// Graph-construction parameters for memtables and compactions.
+    pub build: BuildConfig,
+    /// Search parameters every tier serves with.
+    pub params: PhnswParams,
+    /// Directory for persisted v3 shard files (+ `.ids` sidecars).
+    /// `None` keeps the live tier memory-only.
+    pub dir: Option<PathBuf>,
+    /// Spawn the background sealer thread. `false` seals inline on the
+    /// inserting thread when the threshold is crossed (deterministic —
+    /// what the tests use).
+    pub background: bool,
+}
+
+impl Default for LiveConfig {
+    fn default() -> Self {
+        Self {
+            seal_threshold: 4096,
+            compact_fanin: 4,
+            build: BuildConfig::default(),
+            params: PhnswParams::default(),
+            dir: None,
+            background: true,
+        }
+    }
+}
+
+/// An immutable sealed shard: frozen graph + stores wrapped in a ready
+/// searcher, plus the local→global id map.
+struct SealedShard {
+    /// `ids[local] = global` for every row in the shard, insert order.
+    ids: Vec<u32>,
+    /// Kept alongside the searcher: compaction needs per-row levels and
+    /// high-dim rows, which the searcher does not re-expose.
+    graph: Arc<HnswGraph>,
+    high: Arc<VectorSet>,
+    searcher: PhnswSearcher,
+    /// Where the shard was persisted, when a data dir is configured.
+    path: Option<PathBuf>,
+}
+
+/// One epoch's consistent snapshot of the live index. Immutable once
+/// published; searches hold it via `Arc` across their whole run.
+struct ShardView {
+    epoch: u64,
+    sealed: Vec<Arc<SealedShard>>,
+    mem: Arc<MemSegment>,
+    /// Global id of the memtable's local row 0. Global ids are allocated
+    /// contiguously in insert order and never reused.
+    mem_base: u32,
+}
+
+/// Growable tombstone bitset over global ids.
+#[derive(Default)]
+struct TombSet {
+    bits: Vec<u64>,
+    count: usize,
+}
+
+impl TombSet {
+    /// Mark `id`; returns true when newly set.
+    fn insert(&mut self, id: u32) -> bool {
+        let w = (id / 64) as usize;
+        if w >= self.bits.len() {
+            self.bits.resize(w + 1, 0);
+        }
+        let mask = 1u64 << (id % 64);
+        if self.bits[w] & mask != 0 {
+            return false;
+        }
+        self.bits[w] |= mask;
+        self.count += 1;
+        true
+    }
+}
+
+/// Bounds-safe probe into a tombstone bit snapshot.
+#[inline]
+fn tombed(bits: &[u64], id: u32) -> bool {
+    let w = (id / 64) as usize;
+    w < bits.len() && (bits[w] >> (id % 64)) & 1 == 1
+}
+
+/// Point-in-time counters of a [`LiveEngine`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LiveStats {
+    /// Rows ever inserted (global ids handed out).
+    pub inserts: u64,
+    /// Distinct ids tombstoned.
+    pub deletes: u64,
+    /// Memtables sealed.
+    pub seals: u64,
+    /// Compactions run.
+    pub compactions: u64,
+    /// Sealed shards currently serving.
+    pub sealed_shards: usize,
+    /// Rows across sealed shards (tombstoned rows included until
+    /// compaction drops them).
+    pub sealed_rows: usize,
+    /// Rows in the current memtable.
+    pub mem_rows: usize,
+    /// Live tombstones.
+    pub tombstones: usize,
+    /// Current view epoch (bumped by every seal/compact publish).
+    pub epoch: u64,
+}
+
+/// A live, mutable ANN index: `insert`/`delete`/`flush` next to the
+/// [`AnnEngine`] search surface. Cheap to share (`Arc`); all methods take
+/// `&self`.
+pub struct LiveEngine {
+    cfg: LiveConfig,
+    pca: Arc<PcaModel>,
+    /// Current view; `lock + clone` to read, publish under [`Self::seal_lock`].
+    view: Mutex<Arc<ShardView>>,
+    tombs: RwLock<TombSet>,
+    /// Serializes structural mutation (seal, compact) — the single-writer
+    /// side of the view swap.
+    seal_lock: Mutex<()>,
+    inserts: AtomicU64,
+    deletes: AtomicU64,
+    seals: AtomicU64,
+    compactions: AtomicU64,
+    /// Sealer wake-up: flag + condvar, notified when a memtable crosses
+    /// the threshold.
+    signal: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl LiveEngine {
+    /// Empty live index over a frozen PCA model. Spawns the background
+    /// sealer unless `cfg.background` is false.
+    pub fn new(pca: Arc<PcaModel>, cfg: LiveConfig) -> Arc<Self> {
+        assert!(cfg.seal_threshold >= 1, "seal threshold must be >= 1");
+        assert!(cfg.compact_fanin >= 2, "compaction folds at least 2 shards");
+        cfg.params.validate().expect("invalid pHNSW params");
+        let mem = Arc::new(MemSegment::new(
+            pca.clone(),
+            cfg.params.clone(),
+            cfg.build.clone(),
+            shard_seed(cfg.build.seed, 0),
+        ));
+        let view = ShardView { epoch: 0, sealed: Vec::new(), mem, mem_base: 0 };
+        let engine = Arc::new(Self {
+            cfg,
+            pca,
+            view: Mutex::new(Arc::new(view)),
+            tombs: RwLock::new(TombSet::default()),
+            seal_lock: Mutex::new(()),
+            inserts: AtomicU64::new(0),
+            deletes: AtomicU64::new(0),
+            seals: AtomicU64::new(0),
+            compactions: AtomicU64::new(0),
+            signal: Arc::new((Mutex::new(false), Condvar::new())),
+        });
+        if engine.cfg.background {
+            let weak: Weak<LiveEngine> = Arc::downgrade(&engine);
+            let signal = engine.signal.clone();
+            std::thread::Builder::new()
+                .name("phnsw-sealer".into())
+                .spawn(move || sealer_loop(weak, signal))
+                .expect("spawn sealer thread");
+        }
+        engine
+    }
+
+    fn current_view(&self) -> Arc<ShardView> {
+        self.view.lock().unwrap().clone()
+    }
+
+    /// Insert one vector; returns its global id. Visible to searches as
+    /// soon as this returns. Races with a concurrent seal by retrying
+    /// against the freshly published memtable.
+    pub fn insert(&self, v: &[f32]) -> u32 {
+        loop {
+            let view = self.current_view();
+            match view.mem.insert(v) {
+                Ok(local) => {
+                    self.inserts.fetch_add(1, Ordering::Relaxed);
+                    if (local as usize + 1) >= self.cfg.seal_threshold {
+                        if self.cfg.background {
+                            let (flag, cvar) = &*self.signal;
+                            *flag.lock().unwrap() = true;
+                            cvar.notify_one();
+                        } else {
+                            self.seal();
+                        }
+                    }
+                    return view.mem_base + local;
+                }
+                // Lost the race against a seal: the published view has a
+                // fresh memtable; reload and retry.
+                Err(_) => std::thread::yield_now(),
+            }
+        }
+    }
+
+    /// Tombstone `id`. Returns false when the id was never allocated or
+    /// is already deleted. Visible to the very next search.
+    pub fn delete(&self, id: u32) -> bool {
+        let view = self.current_view();
+        let allocated = (id as usize) < view.mem_base as usize + view.mem.len();
+        if !allocated {
+            return false;
+        }
+        let newly = self.tombs.write().unwrap().insert(id);
+        if newly {
+            self.deletes.fetch_add(1, Ordering::Relaxed);
+        }
+        newly
+    }
+
+    /// Synchronously seal the current memtable (below-threshold seals are
+    /// allowed; an empty memtable is a no-op). Returns whether a shard
+    /// was produced.
+    pub fn flush(&self) -> bool {
+        self.seal()
+    }
+
+    /// Point-in-time counters.
+    pub fn stats(&self) -> LiveStats {
+        let view = self.current_view();
+        LiveStats {
+            inserts: self.inserts.load(Ordering::Relaxed),
+            deletes: self.deletes.load(Ordering::Relaxed),
+            seals: self.seals.load(Ordering::Relaxed),
+            compactions: self.compactions.load(Ordering::Relaxed),
+            sealed_shards: view.sealed.len(),
+            sealed_rows: view.sealed.iter().map(|s| s.ids.len()).sum(),
+            mem_rows: view.mem.len(),
+            tombstones: self.tombs.read().unwrap().count,
+            epoch: view.epoch,
+        }
+    }
+
+    /// Rows currently searchable (tombstoned rows still count until
+    /// compaction drops them).
+    pub fn len(&self) -> usize {
+        let view = self.current_view();
+        view.mem_base as usize + view.mem.len()
+    }
+
+    /// True when nothing has been inserted yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Seal the current memtable into a sealed shard and publish the next
+    /// view, then fold small shards. Serialized on `seal_lock`.
+    fn seal(&self) -> bool {
+        let _writer = self.seal_lock.lock().unwrap();
+        let view = self.current_view();
+        let Some(parts) = view.mem.seal() else {
+            // Empty memtable: nothing to publish, but stale small shards
+            // may still be foldable.
+            self.compact_locked(&view, self.cfg.compact_fanin);
+            return false;
+        };
+        let n = parts.high.len() as u32;
+        let ids: Vec<u32> = (view.mem_base..view.mem_base + n).collect();
+        let path = self.persist_shard(view.epoch, &parts.graph, &parts.low, &parts.high, &ids);
+        let graph = Arc::new(parts.graph);
+        let high = Arc::new(parts.high);
+        let searcher = PhnswSearcher::with_store(
+            graph.clone(),
+            high.clone(),
+            Arc::new(parts.low),
+            self.pca.clone(),
+            self.cfg.params.clone(),
+        );
+        let shard = Arc::new(SealedShard { ids, graph, high, searcher, path });
+        let mem = Arc::new(MemSegment::new(
+            self.pca.clone(),
+            self.cfg.params.clone(),
+            self.cfg.build.clone(),
+            shard_seed(self.cfg.build.seed, view.epoch as usize + 1),
+        ));
+        let mut sealed = view.sealed.clone();
+        sealed.push(shard);
+        let next = Arc::new(ShardView {
+            epoch: view.epoch + 1,
+            sealed,
+            mem,
+            mem_base: view.mem_base + n,
+        });
+        *self.view.lock().unwrap() = next.clone();
+        self.seals.fetch_add(1, Ordering::Relaxed);
+        self.compact_locked(&next, self.cfg.compact_fanin);
+        true
+    }
+
+    /// Force a compaction pass now: fold any ≥ 2 small sealed shards
+    /// (the automatic pass after a seal waits for `compact_fanin` of
+    /// them, amortizing rebuild cost). Returns whether shards were
+    /// folded.
+    pub fn compact(&self) -> bool {
+        let _writer = self.seal_lock.lock().unwrap();
+        let view = self.current_view();
+        let before = self.compactions.load(Ordering::Relaxed);
+        self.compact_locked(&view, 2);
+        self.compactions.load(Ordering::Relaxed) > before
+    }
+
+    /// Persist a sealed shard as a v3 bundle plus a `.ids` sidecar
+    /// (u32-LE local→global map). Failures are logged, not fatal — the
+    /// in-memory shard serves either way.
+    fn persist_shard(
+        &self,
+        epoch: u64,
+        graph: &HnswGraph,
+        low: &dyn VectorStore,
+        high: &VectorSet,
+        ids: &[u32],
+    ) -> Option<PathBuf> {
+        let dir = self.cfg.dir.as_ref()?;
+        let path = dir.join(format!("shard-{epoch:05}.phnsw"));
+        if let Err(e) = crate::runtime::save_v3_single(&path, graph, &self.pca, low, high) {
+            log::warn!("failed to persist sealed shard {}: {e:#}", path.display());
+            return None;
+        }
+        let mut buf = Vec::with_capacity(ids.len() * 4);
+        for &g in ids {
+            buf.extend_from_slice(&g.to_le_bytes());
+        }
+        if let Err(e) = std::fs::write(path.with_extension("ids"), &buf) {
+            log::warn!("failed to persist id sidecar for {}: {e:#}", path.display());
+        }
+        Some(path)
+    }
+
+    /// Fold up to `compact_fanin` small sealed shards into one, dropping
+    /// tombstoned rows — but only once at least `min_inputs` of them have
+    /// accumulated. Caller holds `seal_lock`; `view` is the latest
+    /// published view.
+    fn compact_locked(&self, view: &Arc<ShardView>, min_inputs: usize) {
+        let small: Vec<usize> = view
+            .sealed
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.ids.len() < self.cfg.seal_threshold)
+            .map(|(i, _)| i)
+            .take(self.cfg.compact_fanin)
+            .collect();
+        if small.len() < min_inputs.max(2) {
+            return;
+        }
+        // Snapshot tombstones: rows deleted after this point survive the
+        // compaction physically but stay filtered logically — exactly the
+        // pre-compaction behavior.
+        let tombs: Vec<u64> = self.tombs.read().unwrap().bits.clone();
+        let mut high = VectorSet::new(self.pca.dim());
+        let mut ids: Vec<u32> = Vec::new();
+        let mut levels: Vec<usize> = Vec::new();
+        for &si in &small {
+            let s = &view.sealed[si];
+            for (local, &g) in s.ids.iter().enumerate() {
+                if !tombed(&tombs, g) {
+                    high.push(s.high.row(local));
+                    ids.push(g);
+                    levels.push(s.graph.level(local as u32));
+                }
+            }
+        }
+        let compacted = if high.is_empty() {
+            None // every row tombstoned: the inputs simply vanish
+        } else {
+            // Rebuild the graph with *preserved* levels — no RNG, so
+            // compaction is a pure function of (rows, levels, tombstones).
+            let mut graph = HnswGraph::empty(self.cfg.build.m, self.cfg.build.m * 2);
+            let mut cache = DistCache::new();
+            let mut visited = VisitedSet::new(high.len());
+            for &level in &levels {
+                insert_node(
+                    &mut graph,
+                    &mut cache,
+                    &high,
+                    level,
+                    self.cfg.build.ef_construction,
+                    &mut visited,
+                );
+            }
+            graph.freeze();
+            let (min, scale) = affine_from_pca(&self.pca);
+            let mut low = Sq8Store::with_affine(self.pca.k(), min, scale);
+            let mut buf = vec![0f32; self.pca.k()];
+            for row in high.iter() {
+                self.pca.project(row, &mut buf);
+                low.push_row(&buf);
+            }
+            let path = self.persist_shard(view.epoch + 1_000_000, &graph, &low, &high, &ids);
+            let graph = Arc::new(graph);
+            let high = Arc::new(high);
+            let searcher = PhnswSearcher::with_store(
+                graph.clone(),
+                high.clone(),
+                Arc::new(low),
+                self.pca.clone(),
+                self.cfg.params.clone(),
+            );
+            Some(Arc::new(SealedShard { ids, graph, high, searcher, path }))
+        };
+        let mut sealed: Vec<Arc<SealedShard>> = view
+            .sealed
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !small.contains(i))
+            .map(|(_, s)| s.clone())
+            .collect();
+        sealed.extend(compacted);
+        let next = Arc::new(ShardView {
+            epoch: view.epoch + 1,
+            sealed,
+            mem: view.mem.clone(),
+            mem_base: view.mem_base,
+        });
+        *self.view.lock().unwrap() = next;
+        self.compactions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Serve one request against a consistent view snapshot, composing
+    /// tombstones (and the request's own filter) into every tier, then
+    /// merging the per-tier lists exactly like the segmented engine:
+    /// ascending by distance with id tiebreak, truncated to the request's
+    /// effective result length.
+    fn search_view(
+        &self,
+        req: &SearchRequest<'_>,
+        mut stats: Option<&mut SearchStats>,
+    ) -> Vec<Neighbor> {
+        let view = self.current_view();
+        // Point-in-time tombstone snapshot: one search sees one delete
+        // set, even while concurrent deletes land.
+        let (tombs, n_tombs) = {
+            let t = self.tombs.read().unwrap();
+            (t.bits.clone(), t.count)
+        };
+        let need_filter = n_tombs > 0 || req.filter.is_some();
+        let merge_len = req.effective_search(&self.cfg.params.search).ef_l0;
+        let mut merged: Vec<Neighbor> = Vec::new();
+        for shard in &view.sealed {
+            // Translate the global predicate (tombstones ∧ user filter)
+            // into shard-local ids. `IdFilter::allows` is bounds-safe, so
+            // a user filter sized for a smaller corpus simply excludes
+            // newer ids. The unfiltered case stays filter-free — the
+            // bitwise-identical fast path.
+            let local_filter = need_filter.then(|| {
+                Arc::new(IdFilter::from_fn(shard.ids.len(), |l| {
+                    let g = shard.ids[l as usize];
+                    !tombed(&tombs, g) && req.filter.as_ref().is_none_or(|f| f.allows(g))
+                }))
+            });
+            let sub = SearchRequest {
+                vector: req.vector,
+                topk: req.topk,
+                ef_override: req.ef_override.clone(),
+                filter: local_filter,
+            };
+            let found = match stats.as_deref_mut() {
+                Some(agg) => {
+                    let (r, s) = shard.searcher.search_req_with_stats(&sub);
+                    agg.add(&s);
+                    r
+                }
+                None => shard.searcher.search_req(&sub),
+            };
+            merged.extend(
+                found
+                    .into_iter()
+                    .map(|nb| Neighbor { id: shard.ids[nb.id as usize], dist: nb.dist }),
+            );
+        }
+        let mem_base = view.mem_base;
+        let pred = |local: u32| -> bool {
+            let g = mem_base + local;
+            !tombed(&tombs, g) && req.filter.as_ref().is_none_or(|f| f.allows(g))
+        };
+        let mem_filter: Option<&dyn Fn(u32) -> bool> =
+            if need_filter { Some(&pred) } else { None };
+        let mut trace = stats.as_ref().map(|_| SearchTrace::new());
+        let found =
+            view.mem.search(
+                req.vector,
+                req.topk,
+                req.ef_override.as_ref(),
+                mem_filter,
+                trace.as_mut(),
+            );
+        if let (Some(agg), Some(t)) = (stats, trace) {
+            agg.add(&t.stats());
+        }
+        merged.extend(found.into_iter().map(|nb| Neighbor { id: mem_base + nb.id, dist: nb.dist }));
+        merged.sort_by(|a, b| a.dist.total_cmp(&b.dist).then_with(|| a.id.cmp(&b.id)));
+        merged.truncate(req.topk.unwrap_or(merge_len).min(merge_len));
+        merged
+    }
+}
+
+impl AnnEngine for LiveEngine {
+    fn name(&self) -> &str {
+        "live"
+    }
+
+    fn search_req(&self, req: &SearchRequest) -> Vec<Neighbor> {
+        self.search_view(req, None)
+    }
+
+    fn search_req_with_stats(&self, req: &SearchRequest) -> (Vec<Neighbor>, SearchStats) {
+        let mut stats = SearchStats::default();
+        let r = self.search_view(req, Some(&mut stats));
+        (r, stats)
+    }
+
+    fn search_batch_req(&self, reqs: &[SearchRequest]) -> Vec<Vec<Neighbor>> {
+        crate::search::parallel_search_batch_req(self, reqs)
+    }
+}
+
+/// Background sealer: wakes on the threshold signal (or every 200 ms as
+/// a sweep), seals when due, and exits when the engine is dropped.
+fn sealer_loop(weak: Weak<LiveEngine>, signal: Arc<(Mutex<bool>, Condvar)>) {
+    let (flag, cvar) = &*signal;
+    loop {
+        let due = {
+            let guard = flag.lock().unwrap();
+            let (mut guard, _) = cvar.wait_timeout(guard, Duration::from_millis(200)).unwrap();
+            std::mem::take(&mut *guard)
+        };
+        let Some(engine) = weak.upgrade() else {
+            return; // engine dropped; shut down
+        };
+        let over = {
+            let view = engine.current_view();
+            view.mem.len() >= engine.cfg.seal_threshold
+        };
+        if due || over {
+            engine.seal();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic::{generate, SyntheticConfig};
+
+    fn fixture(n: usize) -> (VectorSet, VectorSet, Arc<PcaModel>) {
+        let cfg = SyntheticConfig { n_base: n, n_queries: 30, ..SyntheticConfig::tiny() };
+        let (base, queries) = generate(&cfg);
+        let pca = Arc::new(PcaModel::fit(&base, 8, 7));
+        (base, queries, pca)
+    }
+
+    fn test_cfg(seal_threshold: usize) -> LiveConfig {
+        LiveConfig {
+            seal_threshold,
+            background: false,
+            build: BuildConfig { m: 8, ef_construction: 48, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn insert_then_search_is_immediately_visible() {
+        let (base, _, pca) = fixture(300);
+        let live = LiveEngine::new(pca, test_cfg(10_000));
+        for (i, row) in base.iter().enumerate() {
+            let id = live.insert(row);
+            assert_eq!(id as usize, i, "global ids are contiguous");
+            let hits = live.search_req(&SearchRequest::new(row).with_topk(1));
+            assert_eq!(hits[0].id, id, "row {i} not visible right after insert");
+            assert_eq!(hits[0].dist, 0.0);
+        }
+    }
+
+    #[test]
+    fn delete_excludes_across_memtable_and_sealed_shards() {
+        let (base, queries, pca) = fixture(400);
+        let live = LiveEngine::new(pca, test_cfg(150)); // several seals
+        for row in base.iter() {
+            live.insert(row);
+        }
+        let banned: Vec<u32> = (0..base.len() as u32).step_by(7).collect();
+        for &id in &banned {
+            assert!(live.delete(id));
+            assert!(!live.delete(id), "double delete reports false");
+        }
+        assert!(live.stats().sealed_shards > 0, "test must span sealed shards");
+        let banned_set: std::collections::HashSet<u32> = banned.iter().copied().collect();
+        for q in queries.iter() {
+            let hits = live.search_req(&SearchRequest::new(q).with_topk(10));
+            for h in &hits {
+                assert!(!banned_set.contains(&h.id), "tombstoned id {} leaked", h.id);
+            }
+        }
+        // A deleted base row must not match itself.
+        let hits = live.search_req(&SearchRequest::new(base.row(7)).with_topk(1));
+        assert_ne!(hits[0].id, 7);
+    }
+
+    #[test]
+    fn seal_is_bitwise_stable_for_searches() {
+        let (base, queries, pca) = fixture(500);
+        let live = LiveEngine::new(pca, test_cfg(10_000));
+        for row in base.iter() {
+            live.insert(row);
+        }
+        let before: Vec<Vec<Neighbor>> = queries
+            .iter()
+            .map(|q| live.search_req(&SearchRequest::new(q).with_topk(10)))
+            .collect();
+        assert!(live.flush(), "flush seals the memtable");
+        assert_eq!(live.stats().sealed_shards, 1);
+        assert_eq!(live.stats().mem_rows, 0);
+        for (q, want) in queries.iter().zip(&before) {
+            let got = live.search_req(&SearchRequest::new(q).with_topk(10));
+            assert_eq!(&got, want, "sealing changed a search result");
+        }
+    }
+
+    #[test]
+    fn compaction_folds_small_shards_and_drops_tombstones() {
+        let (base, queries, pca) = fixture(600);
+        let mut cfg = test_cfg(10_000);
+        cfg.compact_fanin = 8;
+        let live = LiveEngine::new(pca, cfg);
+        // Three small sealed shards via explicit flushes.
+        for (i, row) in base.iter().enumerate() {
+            live.insert(row);
+            if (i + 1) % 200 == 0 {
+                live.flush();
+            }
+        }
+        for id in (0..600u32).step_by(5) {
+            live.delete(id);
+        }
+        let pre = live.stats();
+        assert_eq!(pre.sealed_shards, 3, "3 small shards below the auto-compact fan-in");
+        assert!(live.compact(), "explicit compaction folds them");
+        let post = live.stats();
+        assert!(post.compactions > pre.compactions);
+        assert_eq!(post.sealed_shards, 1, "small shards folded into one");
+        assert_eq!(
+            post.sealed_rows,
+            600 - 120,
+            "tombstoned rows physically dropped"
+        );
+        for q in queries.iter() {
+            let hits = live.search_req(&SearchRequest::new(q).with_topk(10));
+            for h in &hits {
+                assert_ne!(h.id % 5, 0, "tombstoned id {} resurfaced after compaction", h.id);
+            }
+            let ids: std::collections::HashSet<u32> = hits.iter().map(|n| n.id).collect();
+            assert_eq!(ids.len(), hits.len(), "duplicate ids after compaction");
+        }
+    }
+
+    #[test]
+    fn concurrent_searches_during_seal_and_compact_stay_consistent() {
+        let (base, queries, pca) = fixture(800);
+        let live = LiveEngine::new(pca, test_cfg(10_000));
+        for row in base.iter().take(400) {
+            live.insert(row);
+        }
+        let stop = std::sync::atomic::AtomicBool::new(false);
+        std::thread::scope(|s| {
+            for t in 0..3 {
+                let live = &live;
+                let stop = &stop;
+                let queries = &queries;
+                s.spawn(move || {
+                    let mut i = t;
+                    while !stop.load(Ordering::Relaxed) {
+                        let q = queries.row(i % queries.len());
+                        let hits = live.search_req(&SearchRequest::new(q).with_topk(10));
+                        let ids: std::collections::HashSet<u32> =
+                            hits.iter().map(|n| n.id).collect();
+                        assert_eq!(ids.len(), hits.len(), "duplicate ids under swap");
+                        for w in hits.windows(2) {
+                            assert!(w[0].dist <= w[1].dist, "unsorted under swap");
+                        }
+                        i += 1;
+                    }
+                });
+            }
+            // Mutator: inserts, deletes, seals, compactions racing the readers.
+            for (i, row) in base.iter().enumerate().skip(400) {
+                live.insert(row);
+                if i % 3 == 0 {
+                    live.delete((i / 2) as u32);
+                }
+                if (i + 1) % 100 == 0 {
+                    live.flush();
+                }
+            }
+            live.flush();
+            stop.store(true, Ordering::Relaxed);
+        });
+        assert!(live.stats().seals >= 4);
+    }
+
+    #[test]
+    fn background_sealer_seals_past_threshold() {
+        let (base, _, pca) = fixture(300);
+        let cfg = LiveConfig {
+            seal_threshold: 100,
+            background: true,
+            build: BuildConfig { m: 8, ef_construction: 48, ..Default::default() },
+            ..Default::default()
+        };
+        let live = LiveEngine::new(pca, cfg);
+        for row in base.iter() {
+            live.insert(row);
+        }
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while live.stats().seals == 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(live.stats().seals >= 1, "background sealer never fired");
+        // Every inserted row is still searchable across the sealed/mem split.
+        let hits = live.search_req(&SearchRequest::new(base.row(0)).with_topk(1));
+        assert_eq!(hits[0].id, 0);
+    }
+
+    #[test]
+    fn delete_of_unallocated_id_is_rejected() {
+        let (base, _, pca) = fixture(50);
+        let live = LiveEngine::new(pca, test_cfg(1000));
+        assert!(!live.delete(0), "nothing allocated yet");
+        live.insert(base.row(0));
+        assert!(live.delete(0));
+        assert!(!live.delete(1), "id 1 never allocated");
+    }
+
+    #[test]
+    fn sealed_shards_persist_v3_bundles_with_id_sidecars() {
+        let (base, _, pca) = fixture(300);
+        let dir = std::env::temp_dir().join(format!("phnsw_live_persist_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut cfg = test_cfg(100);
+        cfg.dir = Some(dir.clone());
+        let live = LiveEngine::new(pca, cfg);
+        for row in base.iter() {
+            live.insert(row);
+        }
+        live.flush();
+        assert!(live.stats().sealed_shards >= 3);
+        // Every sealed shard wrote a v3 bundle plus its u32-LE id
+        // sidecar, and the sidecars together cover exactly the inserted
+        // ids.
+        let mut all_ids: Vec<u32> = Vec::new();
+        let mut bundles = 0;
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let p = entry.unwrap().path();
+            if p.extension().and_then(|e| e.to_str()) != Some("phnsw") {
+                continue;
+            }
+            bundles += 1;
+            let b =
+                crate::runtime::Bundle::open(&p, crate::runtime::OpenOptions::default()).unwrap();
+            let sidecar = std::fs::read(p.with_extension("ids")).unwrap();
+            assert_eq!(sidecar.len(), b.len() * 4, "sidecar rows match bundle rows");
+            all_ids.extend(
+                sidecar.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())),
+            );
+        }
+        assert!(bundles >= 3, "each seal persists one bundle");
+        all_ids.sort_unstable();
+        assert_eq!(all_ids, (0..300u32).collect::<Vec<_>>(), "sidecars cover every inserted id");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,413 @@
+//! The live tier's mutable segment: an in-memory HNSW graph that accepts
+//! online inserts and serves genuine pHNSW (Algorithm 1) searches while
+//! it grows.
+//!
+//! A [`MemSegment`] is the hot half of the LSM discipline the live index
+//! runs: rows stream in one at a time through the *same* incremental
+//! insertion the bulk builder uses ([`crate::graph::build::insert_node`]
+//! — Malkov & Yashunin Alg. 1, with the cached-distance
+//! `shrink_neighbors` back-edge trims), against the staging adjacency
+//! form. At insert time each vector is projected through the index's
+//! **frozen** [`PcaModel`] and SQ8-encoded into a growable filter store,
+//! so memtable searches run the identical filter→top-k→rerank hop loop
+//! the sealed shards run — not a brute-force stand-in.
+//!
+//! ## SQ8 without a corpus scan
+//!
+//! The bulk SQ8 trainer scans the corpus for per-dimension `[min, max]`;
+//! a memtable has no corpus yet. Instead the affine params are derived
+//! once from the PCA model itself: component `d` of a projected vector
+//! is zero-mean with variance `eigenvalue_d`, so a `±4σ_d` code range
+//! covers it essentially always (a Gaussian tail beyond 4σ is ~6e-5).
+//! Out-of-range values clamp — which perturbs only the *filter
+//! ordering*; the f32 rerank recomputes true distances, the same
+//! tolerance argument the paper makes for quantization error. Because
+//! the params depend only on the (shared, frozen) PCA model, every
+//! memtable and every compacted shard encodes identically — sealing is
+//! a bitwise-stable snapshot, never a re-quantization.
+//!
+//! ## Locking
+//!
+//! One `RwLock` guards the whole inner state. Inserts take the write
+//! lock (construction is inherently serial per graph — same reason the
+//! bulk builder is single-threaded per shard); searches share the read
+//! lock and carry their own scratch, so concurrent readers never
+//! contend. Sealing marks the segment and takes the data out under the
+//! write lock; a loser of the seal race gets [`SealedError`] and retries
+//! against the fresh memtable the sealer publishes.
+
+use crate::dataset::VectorSet;
+use crate::graph::build::{insert_node, BuildConfig, DistCache};
+use crate::graph::HnswGraph;
+use crate::pca::PcaModel;
+use crate::rng::Pcg32;
+use crate::search::beam::{beam_search_layer, BeamSpec};
+use crate::search::dist::l2_sq;
+use crate::search::phnsw::PcaFilterScorer;
+use crate::search::stats::SearchTrace;
+use crate::search::visited::VisitedSet;
+use crate::search::{IdFilter, Neighbor, PhnswParams, SearchParams, SearchRequest};
+use crate::store::{Sq8Store, StoreScratch, VectorStore};
+use std::sync::{Arc, RwLock};
+
+/// Insert rejected because the memtable was sealed. The caller must
+/// reload the live view and retry against the fresh memtable the sealer
+/// published (the [`super::LiveEngine`] insert loop does exactly that).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SealedError;
+
+impl std::fmt::Display for SealedError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "memtable is sealed; reload the live view and retry")
+    }
+}
+
+impl std::error::Error for SealedError {}
+
+/// Derive the memtable's per-dimension SQ8 affine params from the frozen
+/// PCA model: `min_d = -4σ_d`, `scale_d = 8σ_d / 255` with
+/// `σ_d = sqrt(eigenvalue_d)`. A degenerate component (zero or
+/// non-finite variance) gets a unit step, mirroring the bulk trainer's
+/// constant-dimension fallback.
+pub(crate) fn affine_from_pca(pca: &PcaModel) -> (Vec<f32>, Vec<f32>) {
+    let k = pca.k();
+    let mut min = Vec::with_capacity(k);
+    let mut scale = Vec::with_capacity(k);
+    for d in 0..k {
+        let sigma = pca.eigenvalues().get(d).copied().unwrap_or(0.0).max(0.0).sqrt() as f32;
+        if sigma.is_finite() && sigma > 0.0 {
+            min.push(-4.0 * sigma);
+            scale.push(8.0 * sigma / 255.0);
+        } else {
+            min.push(0.0);
+            scale.push(1.0);
+        }
+    }
+    (min, scale)
+}
+
+/// The contents of a sealed memtable, handed to the sealer: the frozen
+/// CSR graph plus the exact high/low stores the memtable was serving.
+/// Freezing preserves neighbor order, so a search against these parts is
+/// bitwise identical to one against the staging form they came from.
+pub(crate) struct SealedParts {
+    pub graph: HnswGraph,
+    pub high: VectorSet,
+    pub low: Sq8Store,
+}
+
+struct MemInner {
+    /// Staging-form HNSW graph (the beam core reads both forms).
+    graph: HnswGraph,
+    /// Original-space rows (rerank table).
+    high: VectorSet,
+    /// SQ8-encoded PCA projections (filter table), frozen affine params.
+    low: Sq8Store,
+    /// Builder distance cache, parallel to the staging adjacency.
+    cache: DistCache,
+    /// Builder-side visited set (insert runs under the write lock, so
+    /// one shared instance suffices; searches carry their own).
+    visited: VisitedSet,
+    /// Level draws for incoming rows.
+    rng: Pcg32,
+    /// Set once by [`MemSegment::seal`]; inserts fail afterwards.
+    sealed: bool,
+}
+
+/// A mutable in-memory pHNSW segment: online HNSW inserts + lock-shared
+/// pHNSW searches, until the sealer freezes it into an immutable shard.
+pub struct MemSegment {
+    pca: Arc<PcaModel>,
+    params: PhnswParams,
+    build: BuildConfig,
+    /// Level-assignment temperature (resolved from `build.ml`).
+    ml: f64,
+    inner: RwLock<MemInner>,
+}
+
+impl MemSegment {
+    /// Empty memtable. `seed` feeds the level-draw RNG — the live engine
+    /// derives a distinct seed per memtable generation so successive
+    /// memtables don't repeat level sequences, deterministically.
+    pub fn new(pca: Arc<PcaModel>, params: PhnswParams, build: BuildConfig, seed: u64) -> Self {
+        assert!(build.m >= 2, "M must be >= 2");
+        params.validate().expect("invalid pHNSW params");
+        let ml = build.ml.unwrap_or(1.0 / (build.m as f64).ln());
+        let (min, scale) = affine_from_pca(&pca);
+        let inner = MemInner {
+            graph: HnswGraph::empty(build.m, build.m * 2),
+            high: VectorSet::new(pca.dim()),
+            low: Sq8Store::with_affine(pca.k(), min, scale),
+            cache: DistCache::new(),
+            visited: VisitedSet::new(0),
+            rng: Pcg32::new(seed),
+            sealed: false,
+        };
+        Self { pca, params, build, ml, inner: RwLock::new(inner) }
+    }
+
+    /// Rows currently in the memtable.
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().high.len()
+    }
+
+    /// True when no row has been inserted yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Insert one vector; returns its memtable-local id (sequential from
+    /// 0). Fails with [`SealedError`] once the segment is sealed.
+    pub fn insert(&self, v: &[f32]) -> Result<u32, SealedError> {
+        assert_eq!(v.len(), self.pca.dim(), "insert dimensionality mismatch");
+        let mut guard = self.inner.write().unwrap();
+        if guard.sealed {
+            return Err(SealedError);
+        }
+        let mut q_pca = vec![0f32; self.pca.k()];
+        self.pca.project(v, &mut q_pca);
+        let inner = &mut *guard;
+        inner.high.push(v);
+        inner.low.push_row(&q_pca);
+        inner.visited.grow(inner.high.len());
+        let level = inner.rng.hnsw_level(self.ml, self.build.max_level);
+        let MemInner { graph, high, cache, visited, .. } = inner;
+        let node = insert_node(graph, cache, high, level, self.build.ef_construction, visited);
+        Ok(node)
+    }
+
+    /// pHNSW search over the current contents (Algorithm 1, staging
+    /// adjacency). Runs under the read lock with per-call scratch, so any
+    /// number of searches proceed concurrently with each other.
+    ///
+    /// `local_filter` is evaluated against *memtable-local* ids inside
+    /// the lock — the live engine composes tombstones and the request's
+    /// global filter into it — so the filter is sized to the exact
+    /// snapshot the walk sees (no grow race). Mirrors
+    /// [`crate::search::PhnswSearcher::search_request_traced`] knob for
+    /// knob, including the degenerate-filter shortcut, so a sealed
+    /// snapshot of this memtable answers identically.
+    pub(crate) fn search(
+        &self,
+        vector: &[f32],
+        topk: Option<usize>,
+        ef_override: Option<&SearchParams>,
+        local_filter: Option<&dyn Fn(u32) -> bool>,
+        mut trace: Option<&mut SearchTrace>,
+    ) -> Vec<Neighbor> {
+        assert_eq!(vector.len(), self.pca.dim(), "query dimensionality mismatch");
+        let inner = self.inner.read().unwrap();
+        if inner.graph.is_empty() {
+            return Vec::new();
+        }
+        let n = inner.high.len();
+        let filter = local_filter.map(|pred| Arc::new(IdFilter::from_fn(n, |id| pred(id))));
+        let req = SearchRequest {
+            vector,
+            topk,
+            ef_override: ef_override.cloned(),
+            filter: filter.clone(),
+        };
+        let mut eff = req.effective_search(&self.params.search);
+        eff.ef_upper = eff.ef_upper.min(n);
+        eff.ef_l0 = eff.ef_l0.min(n);
+        if let Some(out) = crate::search::filtered_shortcut(
+            filter.as_deref(),
+            &inner.high,
+            vector,
+            eff.ef(0),
+            topk,
+            trace.as_deref_mut(),
+        ) {
+            return out;
+        }
+        let mut visited = VisitedSet::new(n);
+        let mut q_pca = vec![0f32; self.pca.k()];
+        self.pca.project(vector, &mut q_pca);
+        let mut store_scratch = StoreScratch::new();
+        inner.low.prepare_query(&q_pca, &mut store_scratch);
+        let mut dists = vec![0f32; inner.graph.m0() + 1];
+        let mut scorer = PcaFilterScorer {
+            q: vector,
+            data_high: &inner.high,
+            low: &inner.low,
+            store_scratch: &mut store_scratch,
+            dists: &mut dists,
+            k: self.params.k(0),
+            f_pca: f32::INFINITY,
+        };
+        let ep = inner.graph.entry_point();
+        let mut entry = vec![(l2_sq(vector, inner.high.row(ep as usize)), ep)];
+        for layer in (1..=inner.graph.max_level()).rev() {
+            scorer.k = self.params.k(layer);
+            entry = beam_search_layer(
+                &inner.graph,
+                &mut scorer,
+                &entry,
+                BeamSpec::unfiltered(eff.ef(layer)),
+                layer,
+                &mut visited,
+                trace.as_deref_mut(),
+            );
+        }
+        scorer.k = self.params.k(0);
+        let found = beam_search_layer(
+            &inner.graph,
+            &mut scorer,
+            &entry,
+            BeamSpec { ef: eff.ef(0), filter: filter.as_deref() },
+            0,
+            &mut visited,
+            trace.as_deref_mut(),
+        );
+        let mut out: Vec<Neighbor> =
+            found.into_iter().map(|(dist, id)| Neighbor { id, dist }).collect();
+        if let Some(k) = topk {
+            out.truncate(k);
+        }
+        out
+    }
+
+    /// Seal the memtable: mark it immutable and take its contents out,
+    /// freezing the graph into CSR form. Returns `None` — and leaves the
+    /// segment *unsealed* — when empty, so an idle flush never wedges the
+    /// insert path behind a view swap that isn't coming.
+    pub(crate) fn seal(&self) -> Option<SealedParts> {
+        let mut guard = self.inner.write().unwrap();
+        if guard.graph.is_empty() {
+            return None;
+        }
+        guard.sealed = true;
+        let (min, scale) = affine_from_pca(&self.pca);
+        let inner = &mut *guard;
+        let mut graph =
+            std::mem::replace(&mut inner.graph, HnswGraph::empty(self.build.m, self.build.m * 2));
+        let high = std::mem::replace(&mut inner.high, VectorSet::new(self.pca.dim()));
+        let fresh_low = Sq8Store::with_affine(self.pca.k(), min, scale);
+        let low = std::mem::replace(&mut inner.low, fresh_low);
+        inner.cache.clear();
+        // Freeze preserves per-node neighbor order, so searches against
+        // the sealed CSR form are bitwise what the staging form answered.
+        graph.freeze();
+        Some(SealedParts { graph, high, low })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic::{generate, SyntheticConfig};
+    use crate::graph::build::build;
+    use crate::search::{AnnEngine, PhnswSearcher};
+
+    fn fixture(n: usize) -> (VectorSet, Arc<PcaModel>, BuildConfig) {
+        let cfg = SyntheticConfig { n_base: n, n_queries: 20, ..SyntheticConfig::tiny() };
+        let (base, _) = generate(&cfg);
+        let pca = Arc::new(PcaModel::fit(&base, 8, 7));
+        let bc = BuildConfig { m: 8, ef_construction: 48, ..Default::default() };
+        (base, pca, bc)
+    }
+
+    #[test]
+    fn online_graph_matches_bulk_build_bitwise() {
+        // Streaming rows through insert() must grow exactly the graph the
+        // bulk builder produces for the same data + seed: insert_node is
+        // the shared body and the level-draw RNG stream is identical.
+        let (base, pca, bc) = fixture(600);
+        let mem = MemSegment::new(pca, PhnswParams::default(), bc.clone(), bc.seed);
+        for row in base.iter() {
+            mem.insert(row).unwrap();
+        }
+        let bulk = build(&base, &bc);
+        let parts = mem.seal().unwrap();
+        assert_eq!(parts.graph.entry_point(), bulk.entry_point());
+        for node in 0..bulk.len() as u32 {
+            assert_eq!(parts.graph.level(node), bulk.level(node));
+            for l in 0..=bulk.level(node) {
+                assert_eq!(
+                    parts.graph.neighbors(node, l),
+                    bulk.neighbors(node, l),
+                    "node {node} level {l} diverged from bulk build"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn memtable_search_matches_sealed_searcher_bitwise() {
+        let (base, pca, bc) = fixture(800);
+        let cfg = SyntheticConfig { n_base: 1, n_queries: 25, ..SyntheticConfig::tiny() };
+        let (_, queries) = generate(&cfg);
+        let params = PhnswParams::default();
+        let mem = MemSegment::new(pca.clone(), params.clone(), bc.clone(), 99);
+        for row in base.iter() {
+            mem.insert(row).unwrap();
+        }
+        let live: Vec<Vec<Neighbor>> =
+            queries.iter().map(|q| mem.search(q, Some(10), None, None, None)).collect();
+        let parts = mem.seal().unwrap();
+        let searcher = PhnswSearcher::with_store(
+            Arc::new(parts.graph),
+            Arc::new(parts.high),
+            Arc::new(parts.low),
+            pca,
+            params,
+        );
+        for (q, want) in queries.iter().zip(&live) {
+            let got = searcher.search_req(&SearchRequest::new(q).with_topk(10));
+            assert_eq!(&got, want, "sealing changed a search result");
+        }
+    }
+
+    #[test]
+    fn sealed_memtable_rejects_inserts_and_empty_seal_is_none() {
+        let (base, pca, bc) = fixture(10);
+        let mem = MemSegment::new(pca, PhnswParams::default(), bc, 1);
+        assert!(mem.seal().is_none(), "empty seal yields nothing");
+        mem.insert(base.row(0)).unwrap();
+        assert!(mem.seal().is_some());
+        assert_eq!(mem.insert(base.row(1)), Err(SealedError));
+        assert!(mem.is_empty(), "seal takes the contents");
+    }
+
+    #[test]
+    fn local_filter_excludes_ids() {
+        let (base, pca, bc) = fixture(400);
+        let mem = MemSegment::new(pca, PhnswParams::default(), bc, 5);
+        for row in base.iter() {
+            mem.insert(row).unwrap();
+        }
+        // Query with a base row so its own id is the top hit, then ban it.
+        let q = base.row(7);
+        let unfiltered = mem.search(q, Some(5), None, None, None);
+        assert_eq!(unfiltered[0].id, 7);
+        let banned: &dyn Fn(u32) -> bool = &|id| id != 7;
+        let filtered = mem.search(q, Some(5), None, Some(banned), None);
+        assert!(filtered.iter().all(|n| n.id != 7), "banned id leaked: {filtered:?}");
+        assert!(!filtered.is_empty());
+    }
+
+    #[test]
+    fn affine_params_cover_projected_corpus() {
+        // ±4σ from the eigenvalues must cover essentially every projected
+        // component, so clamping stays a tail event.
+        let (base, pca, _) = fixture(1000);
+        let (min, scale) = affine_from_pca(&pca);
+        let projected = pca.project_set(&base);
+        let mut clamped = 0usize;
+        let mut total = 0usize;
+        for row in projected.iter() {
+            for d in 0..row.len() {
+                total += 1;
+                let hi = min[d] + 255.0 * scale[d];
+                if row[d] < min[d] || row[d] > hi {
+                    clamped += 1;
+                }
+            }
+        }
+        assert!(
+            (clamped as f64) < 0.001 * total as f64,
+            "{clamped}/{total} projected components outside the SQ8 range"
+        );
+    }
+}

@@ -21,9 +21,13 @@
 
 pub mod build;
 pub mod engine;
+pub mod live;
+pub mod memtable;
 
 pub use build::{build_segmented, build_segmented_with_pca, Segment, SegmentedIndex};
 pub use engine::SegmentedEngine;
+pub use live::{LiveConfig, LiveEngine, LiveStats};
+pub use memtable::MemSegment;
 
 /// How global row ids are distributed over shards.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

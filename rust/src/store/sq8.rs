@@ -190,6 +190,36 @@ impl Sq8Store {
         Ok(Self::from_params(dim, min, scale, codes))
     }
 
+    /// Empty store with fixed (pre-trained) per-dimension affine params,
+    /// ready for online appends via [`Self::push_row`]. The live
+    /// memtable cannot scan a corpus for `[min, max]` — rows arrive one
+    /// at a time — so its params are derived up front (from the frozen
+    /// PCA model's per-component variances) and never retrained.
+    pub(crate) fn with_affine(dim: usize, min: Vec<f32>, scale: Vec<f32>) -> Self {
+        assert!(
+            scale.iter().all(|&s| s > 0.0 && s.is_finite()),
+            "SQ8 scale must be positive and finite"
+        );
+        Self::from_params(dim, min, scale, Vec::new().into())
+    }
+
+    /// Encode one row under the store's frozen affine params and append
+    /// it. Components outside the trained range clamp to the code range —
+    /// a perturbation of the *filter ordering* only, corrected by the f32
+    /// rerank like any other quantization error. Panics on a mapped
+    /// (zero-copy) backing; only heap-owned stores are appendable.
+    pub(crate) fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.dim);
+        let (dim, padded) = (self.dim, self.padded);
+        let codes = self.codes.owned_mut();
+        let base = codes.len();
+        codes.resize(base + padded, 0);
+        for d in 0..dim {
+            let c = ((row[d] - self.min[d]) * self.inv_scale[d]).round();
+            codes[base + d] = c.clamp(0.0, 255.0) as u8;
+        }
+    }
+
     /// Per-dimension dequant offsets.
     pub fn min(&self) -> &[f32] {
         &self.min
@@ -417,6 +447,23 @@ mod tests {
             assert_eq!(dec[0], 42.0, "constant dim must decode exactly");
             assert_eq!(dec[2], -1.0);
         }
+    }
+
+    #[test]
+    fn push_row_matches_bulk_encoding_bitwise() {
+        // Online appends under fixed affine params must encode exactly
+        // what the bulk trainer would, row for row — the seal swap relies
+        // on the sealed store being bitwise the memtable's.
+        let vs = random_set(40, 15, 8);
+        let bulk = Sq8Store::from_set(&vs);
+        let mut online = Sq8Store::with_affine(15, bulk.min().to_vec(), bulk.scale().to_vec());
+        assert_eq!(online.len(), 0);
+        for row in vs.iter() {
+            online.push_row(row);
+        }
+        assert_eq!(online.len(), 40);
+        assert_eq!(bulk.codes, online.codes);
+        assert_eq!(bulk.weight, online.weight);
     }
 
     #[test]

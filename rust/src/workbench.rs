@@ -227,7 +227,7 @@ impl Workbench {
 
     /// Save the assembled index as a single `.phnsw` artifact (CSR graph
     /// + PCA + SQ8 low store + f32 high store). A server boots from this
-    /// file via [`IndexBundle::open`] without refitting anything.
+    /// file via [`crate::runtime::Bundle::open`] without refitting anything.
     pub fn save_bundle(&self, path: impl AsRef<std::path::Path>) -> crate::Result<()> {
         let low = Sq8Store::from_set(&self.base_low);
         IndexBundle::save(path, &self.graph, &self.pca, &low, &self.base)

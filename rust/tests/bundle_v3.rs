@@ -8,9 +8,7 @@ use phnsw::dataset::synthetic::{generate, SyntheticConfig};
 use phnsw::dataset::{ground_truth, VectorSet};
 use phnsw::graph::build::BuildConfig;
 use phnsw::metrics::recall_at_k;
-use phnsw::runtime::{
-    inspect_bundle, open_bundle, open_bundle_with, save_segmented, save_v3, AnyBundle, OpenOptions,
-};
+use phnsw::runtime::{inspect_bundle, save_segmented, save_v3, Bundle, OpenOptions};
 use phnsw::search::{AnnEngine, PhnswParams};
 use phnsw::segment::{build_segmented, SegmentSpec, SegmentedIndex, ShardAssignment};
 use std::path::PathBuf;
@@ -46,12 +44,12 @@ fn tmp(name: &str) -> PathBuf {
     std::env::temp_dir().join(format!("phnsw_v3test_{}_{name}.phnsw", std::process::id()))
 }
 
-fn open_owned(path: &std::path::Path) -> AnyBundle {
-    open_bundle_with(path, OpenOptions { mmap: false }).unwrap()
+fn open_owned(path: &std::path::Path) -> Bundle {
+    Bundle::open(path, OpenOptions::new().mmap(false)).unwrap()
 }
 
-fn open_mmap(path: &std::path::Path) -> AnyBundle {
-    open_bundle_with(path, OpenOptions { mmap: true }).unwrap()
+fn open_mmap(path: &std::path::Path) -> Bundle {
+    Bundle::open(path, OpenOptions::new().mmap(true)).unwrap()
 }
 
 fn results(engine: &dyn AnnEngine, queries: &VectorSet) -> Vec<Vec<phnsw::search::Neighbor>> {
@@ -145,14 +143,15 @@ fn v1_and_v2_bundles_still_open_and_mmap_on_them_fails_loudly() {
     let path = tmp("legacy");
     save_segmented(&path, &idx).unwrap();
 
-    // v2 opens as before (open_bundle and the explicit owned option).
-    let after = results(open_bundle(&path).unwrap().engine(params).as_ref(), &f.queries);
+    // v2 opens as before (default options and the explicit owned option).
+    let reopened = Bundle::open(&path, OpenOptions::default()).unwrap();
+    let after = results(reopened.engine(params).as_ref(), &f.queries);
     assert_eq!(before, after, "v2 read path must be unchanged");
     let _ = open_owned(&path);
 
     // ...but --mmap on a legacy file is a named error, not a silent
     // owned fallback, and it tells the user how to rebuild.
-    let err = open_bundle_with(&path, OpenOptions { mmap: true }).unwrap_err().to_string();
+    let err = Bundle::open(&path, OpenOptions::new().mmap(true)).unwrap_err().to_string();
     assert!(
         err.contains("requires a v3 page-aligned bundle"),
         "unexpected mmap-on-v2 error: {err}"
@@ -177,7 +176,7 @@ fn v3_bytes() -> Vec<u8> {
 fn open_raw(name: &str, bytes: &[u8]) -> anyhow::Error {
     let path = tmp(name);
     std::fs::write(&path, bytes).unwrap();
-    let err = open_bundle_with(&path, OpenOptions { mmap: true }).unwrap_err();
+    let err = Bundle::open(&path, OpenOptions::new().mmap(true)).unwrap_err();
     std::fs::remove_file(&path).ok();
     err
 }
@@ -208,7 +207,7 @@ fn v3_corruption_is_rejected_with_named_errors() {
     assert!(err.contains("unrecognized"), "bad-magic mmap error: {err}");
     let path = tmp("magic_owned");
     std::fs::write(&path, &bad).unwrap();
-    let err = open_bundle_with(&path, OpenOptions { mmap: false }).unwrap_err().to_string();
+    let err = Bundle::open(&path, OpenOptions::new().mmap(false)).unwrap_err().to_string();
     std::fs::remove_file(&path).ok();
     assert!(err.contains("magic"), "bad-magic owned error: {err}");
 

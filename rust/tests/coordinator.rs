@@ -213,12 +213,15 @@ fn server_boots_from_phnsw_bundle() {
     let path = std::env::temp_dir()
         .join(format!("phnsw_coord_boot_{}.phnsw", std::process::id()));
     w.save_bundle(&path).unwrap();
-    let bundle = phnsw::runtime::IndexBundle::open(&path).unwrap();
-    let server = Server::start_from_bundle(
-        ServerConfig { workers: 2, ..Default::default() },
-        &bundle,
-        PhnswParams::default(),
-    );
+    let bundle = phnsw::runtime::Bundle::open(&path, phnsw::runtime::OpenOptions::default())
+        .unwrap()
+        .into_single()
+        .unwrap();
+    let server = Server::builder()
+        .config(ServerConfig { workers: 2, ..Default::default() })
+        .engine("phnsw", Arc::new(bundle.searcher(PhnswParams::default())))
+        .start()
+        .unwrap();
     let h = server.handle();
     let direct = w.phnsw(PhnswParams::default());
     for qi in 0..10 {

@@ -247,11 +247,11 @@ fn coordinator_round_trip_carries_filter_end_to_end() {
     let f = fixture(1500, 20);
     let engine: Arc<dyn AnnEngine> = Arc::new(phnsw(&f));
     let direct = phnsw(&f);
-    let server = Server::start_with_engine(
-        ServerConfig { workers: 2, ..Default::default() },
-        "phnsw",
-        engine,
-    );
+    let server = Server::builder()
+        .config(ServerConfig { workers: 2, ..Default::default() })
+        .engine("phnsw", engine)
+        .start()
+        .unwrap();
     let h = server.handle();
     let filter = Arc::new(IdFilter::random(f.base.len(), 0.25, 44));
     for qi in 0..f.queries.len() {

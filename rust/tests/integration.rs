@@ -55,7 +55,10 @@ fn phnsw_bundle_roundtrips_to_bitwise_identical_results() {
     let path = std::env::temp_dir()
         .join(format!("phnsw_integration_{}.phnsw", std::process::id()));
     w.save_bundle(&path).unwrap();
-    let bundle = phnsw::runtime::IndexBundle::open(&path).unwrap();
+    let bundle = phnsw::runtime::Bundle::open(&path, phnsw::runtime::OpenOptions::default())
+        .unwrap()
+        .into_single()
+        .unwrap();
     let native = w.phnsw(PhnswParams::default());
     let booted = bundle.searcher(PhnswParams::default());
     for (qi, q) in w.queries.iter().enumerate() {

@@ -1,0 +1,182 @@
+//! Live-tier acceptance tests: an EMPTY server streams inserts and
+//! tombstone deletes through the coordinator queue, seals memtables into
+//! immutable shards, compacts, and keeps serving — graded on recall@10
+//! against exact ground truth over the surviving corpus, with zero
+//! tombstone leaks, while concurrent searches stay consistent across
+//! seal/compact epoch flips.
+
+use phnsw::coordinator::{Query, Server, ServerConfig};
+use phnsw::dataset::exact_topk_rows;
+use phnsw::dataset::synthetic::{generate, SyntheticConfig};
+use phnsw::dataset::VectorSet;
+use phnsw::graph::BuildConfig;
+use phnsw::pca::PcaModel;
+use phnsw::segment::{LiveConfig, LiveEngine};
+use std::collections::HashSet;
+use std::sync::Arc;
+
+fn corpus(n: usize, n_queries: usize, seed: u64) -> (VectorSet, VectorSet) {
+    generate(&SyntheticConfig { n_base: n, n_queries, seed, ..SyntheticConfig::default() })
+}
+
+/// Freeze a PCA model on a bootstrap sample, the way a deployment fits
+/// offline before streaming begins.
+fn fit_pca(base: &VectorSet, k: usize) -> Arc<PcaModel> {
+    let mut sample = VectorSet::new(base.dim());
+    for i in 0..base.len().min(1_024) {
+        sample.push(base.row(i));
+    }
+    Arc::new(PcaModel::fit(&sample, k, 7))
+}
+
+/// Cheap build params so debug-mode graph construction stays fast.
+fn test_cfg(seal_threshold: usize, background: bool) -> LiveConfig {
+    LiveConfig {
+        seal_threshold,
+        background,
+        build: BuildConfig { m: 8, ef_construction: 64, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn empty_server_ingest_seal_compact_meets_recall_floor_with_zero_leaks() {
+    let n = 2_500usize;
+    let (base, queries) = corpus(n, 60, 0xACCE_5501);
+    let live = LiveEngine::new(fit_pca(&base, 15), test_cfg(512, false));
+    let server = Server::builder()
+        .config(ServerConfig { workers: 2, ..Default::default() })
+        .live(live)
+        .start()
+        .unwrap();
+    let h = server.handle();
+
+    // Stream the corpus through the coordinator queue; ids come back
+    // sequential because ingest ops apply in arrival order.
+    for i in 0..n {
+        assert_eq!(h.insert(base.row(i).to_vec()).unwrap() as usize, i);
+    }
+    // Tombstone ~7.7% (every 13th id) — above the 5% acceptance floor.
+    let deleted: HashSet<u32> = (0..n as u32).step_by(13).collect();
+    for &id in &deleted {
+        assert!(h.delete(id).unwrap(), "id {id} was live");
+    }
+    assert!(deleted.len() * 20 >= n, "delete leg below the 5% floor");
+    // Seal the tail memtable, then fold small shards and physically drop
+    // tombstoned rows.
+    assert!(h.flush().unwrap(), "tail memtable was non-empty");
+    let engine = server.live().unwrap().clone();
+    engine.compact();
+    let stats = engine.stats();
+    assert!(stats.seals >= 4, "seal threshold never tripped: {stats:?}");
+    assert!(stats.compactions >= 1, "compaction never ran: {stats:?}");
+    assert_eq!(stats.inserts as usize, n);
+    assert_eq!(stats.deletes as usize, deleted.len());
+
+    let surviving: Vec<u32> = (0..n as u32).filter(|id| !deleted.contains(id)).collect();
+    let (mut hits, mut wanted) = (0usize, 0usize);
+    for qi in 0..queries.len() {
+        let qv = queries.row(qi);
+        let res = h.query_blocking(Query::new(qv.to_vec()).with_topk(10)).unwrap();
+        for nb in &res.neighbors {
+            assert!(!deleted.contains(&nb.id), "tombstoned id {} served to query {qi}", nb.id);
+            assert!((nb.id as usize) < n, "id {} was never inserted", nb.id);
+        }
+        let gt = exact_topk_rows(surviving.iter().copied(), |id| base.row(id as usize), qv, 10);
+        let gtset: HashSet<u32> = gt.iter().copied().collect();
+        wanted += gt.len();
+        hits += res.neighbors.iter().take(10).filter(|nb| gtset.contains(&nb.id)).count();
+    }
+    let recall = hits as f64 / wanted as f64;
+    assert!(recall >= 0.85, "recall@10 on the surviving corpus: {recall:.3}");
+    server.shutdown();
+}
+
+#[test]
+fn acked_insert_is_searchable_across_every_seal_boundary() {
+    let n = 200usize;
+    let (base, _) = corpus(n, 1, 0xACCE_5502);
+    let live = LiveEngine::new(fit_pca(&base, 15), test_cfg(64, false));
+    let server = Server::builder().live(live).start().unwrap();
+    let h = server.handle();
+    for i in 0..n {
+        let id = h.insert(base.row(i).to_vec()).unwrap();
+        // The ack is the visibility barrier: an immediate self-query must
+        // find the row — including right after an inline seal swapped the
+        // memtable out underneath it.
+        let res = h.query_blocking(Query::new(base.row(i).to_vec()).with_topk(1)).unwrap();
+        assert_eq!(res.neighbors[0].id, id, "insert {i} invisible after ack");
+    }
+    let stats = server.live().unwrap().stats();
+    assert!(stats.seals >= 2, "the stream must cross seal boundaries: {stats:?}");
+    server.shutdown();
+}
+
+#[test]
+fn searches_stay_consistent_across_concurrent_seal_and_compact() {
+    let n = 1_500usize;
+    let (base, queries) = corpus(n, 20, 0xACCE_5503);
+    // Background sealer ON: seals and compactions race the searches.
+    let live = LiveEngine::new(fit_pca(&base, 15), test_cfg(256, true));
+    let server = Server::builder()
+        .config(ServerConfig { workers: 4, ..Default::default() })
+        .live(live)
+        .start()
+        .unwrap();
+    let h = server.handle();
+    let base = Arc::new(base);
+
+    std::thread::scope(|s| {
+        let hw = h.clone();
+        let wbase = base.clone();
+        s.spawn(move || {
+            for i in 0..n {
+                let id = hw.insert(wbase.row(i).to_vec()).unwrap();
+                if id % 16 == 0 {
+                    assert!(hw.delete(id).unwrap(), "freshly acked id {id} must be live");
+                }
+            }
+        });
+        // Readers hammer the server while memtables seal underneath
+        // them; every result must be well-formed regardless of which
+        // epoch snapshot served it.
+        for t in 0..3usize {
+            let hr = h.clone();
+            let queries = &queries;
+            s.spawn(move || {
+                for i in 0..150 {
+                    let qv = queries.row((t * 150 + i) % queries.len());
+                    let res = hr.query_blocking(Query::new(qv.to_vec()).with_topk(10)).unwrap();
+                    assert!(res.neighbors.len() <= 10);
+                    for w in res.neighbors.windows(2) {
+                        assert!(w[0].dist <= w[1].dist, "results out of order mid-seal");
+                    }
+                    for nb in &res.neighbors {
+                        assert!((nb.id as usize) < n, "id {} was never inserted", nb.id);
+                    }
+                }
+            });
+        }
+    });
+
+    // Quiesce: seal the tail, compact, and run the strict checks that
+    // are racy while the writer is live.
+    h.flush().unwrap();
+    let engine = server.live().unwrap().clone();
+    engine.compact();
+    let deleted: HashSet<u32> = (0..n as u32).step_by(16).collect();
+    for qi in 0..queries.len() {
+        let res = h.query_blocking(Query::new(queries.row(qi).to_vec()).with_topk(10)).unwrap();
+        for nb in &res.neighbors {
+            assert!(!deleted.contains(&nb.id), "tombstoned id {} served after quiesce", nb.id);
+        }
+    }
+    // Surviving rows spot-check: self-queries land on their own id.
+    for i in [1usize, 333, 777, 1_499] {
+        let res = h.query_blocking(Query::new(base.row(i).to_vec()).with_topk(1)).unwrap();
+        assert_eq!(res.neighbors[0].id as usize, i, "surviving row {i} lost");
+    }
+    let stats = server.live().unwrap().stats();
+    assert!(stats.seals >= 4 && stats.epoch >= 4, "concurrency never exercised: {stats:?}");
+    server.shutdown();
+}

@@ -116,9 +116,11 @@ fn segmented_bundle_roundtrip_preserves_search_bitwise() {
     let path = std::env::temp_dir()
         .join(format!("phnsw_segtest_{}.phnsw", std::process::id()));
     phnsw::runtime::save_segmented(&path, &idx).unwrap();
-    let booted = match phnsw::runtime::open_bundle(&path).unwrap() {
-        phnsw::runtime::AnyBundle::Segmented(opened) => opened,
-        phnsw::runtime::AnyBundle::Single(_) => panic!("expected a segmented bundle"),
+    let booted = match phnsw::runtime::Bundle::open(&path, phnsw::runtime::OpenOptions::default())
+        .unwrap()
+    {
+        phnsw::runtime::Bundle::Segmented(opened) => opened,
+        phnsw::runtime::Bundle::Single(_) => panic!("expected a segmented bundle"),
     };
     assert_eq!(booted.n_segments(), 3);
     let after = booted.engine(params);
@@ -169,11 +171,11 @@ fn segmented_engine_serves_through_the_coordinator() {
     let idx = build_segmented(&f.base, &f.bc, DIM_LOW, PCA_SEED, &spec(4, 2));
     let engine: Arc<dyn AnnEngine> = Arc::new(idx.engine(PhnswParams::default()));
     let direct = idx.engine(PhnswParams::default());
-    let server = Server::start_with_engine(
-        ServerConfig { workers: 2, ..Default::default() },
-        "phnsw-seg",
-        engine,
-    );
+    let server = Server::builder()
+        .config(ServerConfig { workers: 2, ..Default::default() })
+        .engine("phnsw-seg", engine)
+        .start()
+        .unwrap();
     let handle = server.handle();
     for qi in 0..f.queries.len() {
         let res = handle.query_blocking(Query::new(f.queries.row(qi).to_vec())).unwrap();
