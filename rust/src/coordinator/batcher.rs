@@ -1,8 +1,9 @@
 //! Dynamic batcher: operations accumulate until either `max_batch` is
 //! reached or the oldest enqueued op has waited `max_wait` — the
 //! standard latency/throughput trade-off knob of serving systems.
-//! Searches and ingest ops share one queue, so their relative order is
-//! the arrival order.
+//! The server runs two instances: one feeding the multi-worker search
+//! pool and one feeding the single ingest worker, which keeps ingest
+//! ops in submission order across batches.
 
 use super::{Op, QueryResult};
 use std::collections::VecDeque;

@@ -251,7 +251,11 @@ pub fn run_open_loop(handle: &ServerHandle, queries: &VectorSet, cfg: &LoadConfi
                         live_ids.push(id);
                         if leg.probe_every > 0 && inserted % leg.probe_every == 0 {
                             probes += 1;
-                            let probe = Query::new(row).with_topk(1);
+                            // Probe the tier the insert landed in, not the
+                            // search leg's default route — on a mixed
+                            // bundle+live server the default engine never
+                            // sees freshly inserted rows.
+                            let probe = Query::new(row).with_topk(1).with_engine("live");
                             if let Ok(res) = handle.query_blocking(probe) {
                                 if res.neighbors.first().map(|n| n.id) == Some(id) {
                                     probe_hits += 1;

@@ -90,10 +90,12 @@ impl From<crate::search::RequestCore> for Query {
 }
 
 /// One operation flowing through the coordinator queue. Searches batch
-/// and fan out by engine; ingest operations ([`Op::Insert`],
-/// [`Op::Delete`], [`Op::Flush`]) apply to the server's live tier in
-/// arrival order — both kinds ride the same batcher, so ingest
-/// visibility lag is the same queue the searches wait in.
+/// and fan out by engine on the multi-worker pool; ingest operations
+/// ([`Op::Insert`], [`Op::Delete`], [`Op::Flush`]) ride a dedicated
+/// single-worker queue, so they apply to the server's live tier in
+/// submission order even across batches. Relative ordering between a
+/// search and an ingest op is only defined when the caller blocks on
+/// the ingest ack before searching.
 #[derive(Debug, Clone)]
 pub enum Op {
     /// A search request (vector + knobs + engine route).

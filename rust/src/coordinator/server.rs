@@ -7,11 +7,17 @@
 //! instead of a per-query loop. Results are bitwise identical to
 //! sequential dispatch (the `search_batch` contract).
 //!
-//! Ingest ops ([`Op::Insert`] / [`Op::Delete`] / [`Op::Flush`]) ride the
-//! same queue and apply to the server's live tier (attached via
-//! [`ServerBuilder::live`]) in arrival order, before the batch's
-//! searches execute. [`Server::builder`] is the one way to start a
-//! server — engine, router, bundle path, or live tier.
+//! Ingest ops ([`Op::Insert`] / [`Op::Delete`] / [`Op::Flush`]) go to a
+//! **dedicated single-worker queue** that applies them to the server's
+//! live tier (attached via [`ServerBuilder::live`]) strictly in
+//! submission order — one FIFO drained by one thread, so pipelined ops
+//! cannot reorder across batches the way they would on the multi-worker
+//! search pool (a delete submitted right after its insert always lands
+//! after it). Search/ingest *relative* ordering is only defined through
+//! acks: block on an ingest ack (as the `insert`/`delete`/`flush`
+//! helpers do) and every later search observes it. [`Server::builder`]
+//! is the one way to start a server — engine, router, bundle path, or
+//! live tier.
 
 use super::batcher::{Batcher, BatcherConfig, Pending};
 use super::router::Router;
@@ -42,6 +48,10 @@ impl Default for ServerConfig {
 /// A running server (workers live until [`ServerHandle::shutdown`]).
 pub struct Server {
     batcher: Arc<Batcher>,
+    /// Dedicated FIFO for ingest ops, present iff a live tier is
+    /// attached; drained by a single worker so ops apply in submission
+    /// order even when pipelined across batches.
+    ingest_batcher: Option<Arc<Batcher>>,
     stats: Arc<ServeStats>,
     live: Option<Arc<LiveEngine>>,
     workers: Vec<std::thread::JoinHandle<()>>,
@@ -51,6 +61,7 @@ pub struct Server {
 #[derive(Clone)]
 pub struct ServerHandle {
     batcher: Arc<Batcher>,
+    ingest_batcher: Option<Arc<Batcher>>,
     stats: Arc<ServeStats>,
     live: Option<Arc<LiveEngine>>,
 }
@@ -243,7 +254,24 @@ impl Server {
         assert!(cfg.workers >= 1, "need at least one worker");
         let batcher = Arc::new(Batcher::new(cfg.batcher.clone()));
         let stats = Arc::new(ServeStats::new());
-        let mut workers = Vec::with_capacity(cfg.workers);
+        let mut workers = Vec::with_capacity(cfg.workers + 1);
+        // Ingest gets its own single-worker FIFO: with cfg.workers > 1,
+        // consecutive batches of the shared queue execute concurrently,
+        // so pipelined ingest ops could reorder (a delete overtaking the
+        // insert that allocates its id). One thread draining one queue
+        // makes "applies in submission order" hold unconditionally,
+        // while searches keep the whole multi-worker pool.
+        let ingest_batcher = live.as_ref().map(|live| {
+            let b = Arc::new(Batcher::new(cfg.batcher.clone()));
+            let (batcher, live, stats) = (b.clone(), live.clone(), stats.clone());
+            workers.push(
+                std::thread::Builder::new()
+                    .name("phnsw-ingest".into())
+                    .spawn(move || ingest_loop(batcher, live, stats))
+                    .expect("spawn ingest worker"),
+            );
+            b
+        });
         for w in 0..cfg.workers {
             let batcher = batcher.clone();
             let stats = stats.clone();
@@ -256,7 +284,7 @@ impl Server {
                     .expect("spawn worker"),
             );
         }
-        Self { batcher, stats, live, workers }
+        Self { batcher, ingest_batcher, stats, live, workers }
     }
 
     /// The live (mutable) tier, when one is attached.
@@ -268,6 +296,7 @@ impl Server {
     pub fn handle(&self) -> ServerHandle {
         ServerHandle {
             batcher: self.batcher.clone(),
+            ingest_batcher: self.ingest_batcher.clone(),
             stats: self.stats.clone(),
             live: self.live.clone(),
         }
@@ -281,6 +310,9 @@ impl Server {
     /// Drain and stop. Queued queries still complete.
     pub fn shutdown(self) {
         self.batcher.close();
+        if let Some(b) = &self.ingest_batcher {
+            b.close();
+        }
         for w in self.workers {
             let _ = w.join();
         }
@@ -289,11 +321,18 @@ impl Server {
 
 impl ServerHandle {
     /// Submit an operation; returns the channel the result arrives on,
-    /// or the op back on backpressure rejection.
+    /// or the op back on backpressure rejection. Ingest ops route to the
+    /// dedicated single-worker ingest queue (total submission-order
+    /// application); searches to the batching worker pool. With no live
+    /// tier attached, ingest rides the search queue and errors there.
     pub fn submit_op(&self, op: Op) -> Result<mpsc::Receiver<QueryResult>, Op> {
         let (tx, rx) = mpsc::channel();
         let pending = Pending { op, reply: tx, arrived: Instant::now() };
-        match self.batcher.enqueue(pending) {
+        let target = match (&pending.op, &self.ingest_batcher) {
+            (Op::Search(_), _) | (_, None) => &self.batcher,
+            (_, Some(ingest)) => ingest,
+        };
+        match target.enqueue(pending) {
             Ok(()) => Ok(rx),
             Err(p) => {
                 self.stats.record_rejected();
@@ -356,9 +395,10 @@ impl ServerHandle {
         }
     }
 
-    /// Current queue depth (observability).
+    /// Current queue depth across the search and ingest queues
+    /// (observability).
     pub fn queue_depth(&self) -> usize {
-        self.batcher.depth()
+        self.batcher.depth() + self.ingest_batcher.as_ref().map_or(0, |b| b.depth())
     }
 }
 
@@ -371,6 +411,47 @@ fn worker_loop(
     while let Some(batch) = batcher.next_batch() {
         dispatch_batch(batch, &router, live.as_ref(), &stats);
     }
+}
+
+/// The dedicated ingest worker: drains its queue FIFO on one thread, so
+/// ops apply in submission order even when pipelined across batches —
+/// an insert's id assignment and a trailing delete of that id can never
+/// swap.
+fn ingest_loop(batcher: Arc<Batcher>, live: Arc<LiveEngine>, stats: Arc<ServeStats>) {
+    while let Some(batch) = batcher.next_batch() {
+        for p in batch {
+            apply_ingest(p, Some(&live), &stats);
+        }
+    }
+}
+
+/// Apply one ingest op to the live tier and ack it through the op's
+/// reply channel; with no live tier, dropping the reply signals the
+/// error.
+fn apply_ingest(p: Pending, live: Option<&Arc<LiveEngine>>, stats: &ServeStats) {
+    let Pending { op, reply, arrived } = p;
+    let Some(live) = live else {
+        stats.record_error();
+        return;
+    };
+    let exec_start = Instant::now();
+    let ack = match op {
+        Op::Insert(v) => IngestAck::Inserted(live.insert(&v)),
+        Op::Delete(id) => IngestAck::Deleted(live.delete(id)),
+        Op::Flush => IngestAck::Flushed(live.flush()),
+        Op::Search(_) => unreachable!("searches route through the search workers"),
+    };
+    let exec = exec_start.elapsed();
+    let queue_wait = exec_start.saturating_duration_since(arrived);
+    stats.record("ingest", queue_wait, exec);
+    let _ = reply.send(QueryResult {
+        neighbors: Vec::new(),
+        ingest: Some(ack),
+        engine: "live".into(),
+        latency: arrived.elapsed(),
+        queue_wait,
+        exec,
+    });
 }
 
 /// Route a drained batch as a whole: resolve each query's engine (so
@@ -406,34 +487,12 @@ fn dispatch_batch(
             }
         }
     }
-    // Ingest ops apply before the batch's searches execute, in arrival
-    // order — a search enqueued after an insert in the same batch sees
-    // that insert.
+    // Ingest ops normally never reach this pool (the handle routes them
+    // to the dedicated ingest queue); they land here only on a server
+    // without a live tier, where they error, or when a caller drives
+    // `dispatch_batch` directly.
     for i in ingest {
-        let Pending { op, reply, arrived } = pending[i].take().unwrap();
-        let Some(live) = live else {
-            // No live tier: dropping `reply` signals the error.
-            stats.record_error();
-            continue;
-        };
-        let exec_start = Instant::now();
-        let ack = match op {
-            Op::Insert(v) => IngestAck::Inserted(live.insert(&v)),
-            Op::Delete(id) => IngestAck::Deleted(live.delete(id)),
-            Op::Flush => IngestAck::Flushed(live.flush()),
-            Op::Search(_) => unreachable!("searches were routed above"),
-        };
-        let exec = exec_start.elapsed();
-        let queue_wait = exec_start.saturating_duration_since(arrived);
-        stats.record("ingest", queue_wait, exec);
-        let _ = reply.send(QueryResult {
-            neighbors: Vec::new(),
-            ingest: Some(ack),
-            engine: "live".into(),
-            latency: arrived.elapsed(),
-            queue_wait,
-            exec,
-        });
+        apply_ingest(pending[i].take().unwrap(), live, stats);
     }
     for (name, (engine, idxs)) in groups {
         let reqs: Vec<SearchRequest> = idxs
@@ -729,6 +788,63 @@ mod tests {
         let res = h.query_blocking(Query::new(base.row(7).to_vec()).with_topk(1)).unwrap();
         assert_eq!(res.neighbors[0].id, 7, "sealed rows stay searchable");
         assert!(s.live().is_some() && s.stats().by_engine()["ingest"] >= 60);
+        s.shutdown();
+    }
+
+    #[test]
+    fn pipelined_ingest_applies_in_submission_order_across_batches() {
+        use crate::dataset::synthetic::{generate, SyntheticConfig};
+        use crate::pca::PcaModel;
+        use crate::segment::LiveConfig;
+        let cfg = SyntheticConfig { n_base: 128, n_queries: 1, ..SyntheticConfig::tiny() };
+        let (base, _) = generate(&cfg);
+        let pca = Arc::new(PcaModel::fit(&base, 8, 7));
+        let live = crate::segment::LiveEngine::new(
+            pca,
+            LiveConfig { background: false, ..Default::default() },
+        );
+        // Many workers + a tiny batch size: without the dedicated ingest
+        // queue, consecutive batches would execute concurrently and
+        // pipelined ops could reorder.
+        let s = Server::builder()
+            .config(ServerConfig {
+                workers: 4,
+                batcher: BatcherConfig {
+                    max_batch: 2,
+                    max_wait: std::time::Duration::from_micros(50),
+                    queue_cap: 4096,
+                },
+            })
+            .live(live)
+            .start()
+            .unwrap();
+        let h = s.handle();
+        // Pipeline (no blocking between submissions): each insert i is
+        // chased immediately by a delete of the id it *will* be
+        // assigned. In-order application means ids come back sequential
+        // and every delete finds its row live.
+        let mut inserts = Vec::new();
+        let mut deletes = Vec::new();
+        for i in 0..100u32 {
+            inserts.push(h.submit_op(Op::Insert(base.row(i as usize % 128).to_vec())).unwrap());
+            deletes.push(h.submit_op(Op::Delete(i)).unwrap());
+        }
+        for (i, rx) in inserts.into_iter().enumerate() {
+            let ack = rx.recv().unwrap().ingest.unwrap();
+            assert_eq!(
+                ack,
+                IngestAck::Inserted(i as u32),
+                "insert {i} acked out of submission order"
+            );
+        }
+        for (i, rx) in deletes.into_iter().enumerate() {
+            let ack = rx.recv().unwrap().ingest.unwrap();
+            assert_eq!(
+                ack,
+                IngestAck::Deleted(true),
+                "delete {i} overtook the insert that allocates its id"
+            );
+        }
         s.shutdown();
     }
 

@@ -6,20 +6,30 @@
 //! * **memtable** — one mutable [`MemSegment`] accepts inserts and serves
 //!   them immediately (insert-to-visible is one RwLock handoff).
 //! * **seal** — past `seal_threshold` rows (or on `flush`), the sealer
-//!   freezes the memtable into an immutable sealed shard: the staging
-//!   graph compacts to CSR *preserving neighbor order*, so a search
-//!   answered by the sealed shard is bitwise the search the memtable
-//!   would have answered. When a data directory is configured the shard
-//!   is also persisted as a v3 `.phnsw` bundle (+ a `.ids` sidecar
-//!   mapping shard-local rows to global ids).
+//!   freezes a *copy-on-write snapshot* of the memtable into an
+//!   immutable sealed shard: the snapshot's staging graph compacts to
+//!   CSR *preserving neighbor order*, so a search answered by the sealed
+//!   shard is bitwise the search the memtable would have answered. The
+//!   memtable itself is never drained — views published before the swap
+//!   keep serving its rows, so an acked insert is searchable at every
+//!   instant of the seal. When a data directory is configured the shard
+//!   is also persisted (after the swap, so file I/O never delays
+//!   visibility) as a v3 `.phnsw` bundle (+ a `.ids` sidecar mapping
+//!   shard-local rows to global ids), and a `MANIFEST` file tracks the
+//!   current shard set.
 //! * **tombstones** — deletes set a bit in a shared [`TombSet`]; every
 //!   search composes it into the result-side filter (PR 5 semantics:
 //!   tombstoned nodes still route the walk, they just never enter
 //!   results), so a delete is visible to the very next search with no
-//!   graph surgery.
+//!   graph surgery. The shard-local translation of the tombstone set is
+//!   cached per (shard, delete-epoch) and rebuilt only when a delete
+//!   lands, and compaction *clears* the tombstones of the rows it
+//!   drops — a fully-compacted index is back on the filter-free path.
 //! * **compact** — small sealed shards are rebuilt into one, dropping
 //!   tombstoned rows for real. Row levels are preserved from the source
 //!   shards, so compaction is deterministic (no RNG) and recall-neutral.
+//!   The folded inputs' files are unlinked once the compacted view is
+//!   published.
 //!
 //! ## Epoch snapshots
 //!
@@ -28,9 +38,11 @@
 //! against it. Seal and compact build a *new* view and publish it behind
 //! a mutex (the std-only stand-in for an `ArcSwap`); in-flight searches
 //! keep their old view alive through their `Arc`, so a swap can never
-//! pull data out from under a walk. Structural mutations (seal, compact)
-//! additionally serialize on `seal_lock`, making view publication
-//! single-writer.
+//! pull data out from under a walk — and because sealing snapshots
+//! rather than drains the memtable, the pre-swap view stays complete
+//! until the instant the post-swap view replaces it. Structural
+//! mutations (seal, compact) additionally serialize on `seal_lock`,
+//! making view publication single-writer.
 
 use super::build::shard_seed;
 use super::memtable::{affine_from_pca, MemSegment};
@@ -89,12 +101,42 @@ struct SealedShard {
     /// `ids[local] = global` for every row in the shard, insert order.
     ids: Vec<u32>,
     /// Kept alongside the searcher: compaction needs per-row levels and
-    /// high-dim rows, which the searcher does not re-expose.
+    /// high-dim rows, which the searcher does not re-expose, and
+    /// persistence (which runs *after* publish) needs the filter store.
     graph: Arc<HnswGraph>,
     high: Arc<VectorSet>,
+    low: Arc<dyn VectorStore>,
     searcher: PhnswSearcher,
-    /// Where the shard was persisted, when a data dir is configured.
+    /// Where the shard is persisted, when a data dir is configured.
     path: Option<PathBuf>,
+    /// Cached tombstone admission filter for this shard, keyed by the
+    /// [`TombSet`] epoch it was built at. `Some((e, None))` records "no
+    /// tombstone touches this shard as of epoch e", so deletes that land
+    /// elsewhere never knock this shard off the unfiltered fast path —
+    /// and a query pays the O(rows) translation once per delete epoch,
+    /// not once per search.
+    tomb_cache: Mutex<Option<(u64, Option<Arc<IdFilter>>)>>,
+}
+
+impl SealedShard {
+    /// The shard-local tombstone filter at tombstone-epoch `epoch`
+    /// (whose bit snapshot is `bits`), built at most once per epoch.
+    /// `None` means no tombstone touches this shard — search it
+    /// unfiltered.
+    fn tomb_filter(&self, epoch: u64, bits: &[u64]) -> Option<Arc<IdFilter>> {
+        let mut cache = self.tomb_cache.lock().unwrap();
+        if let Some((e, f)) = cache.as_ref() {
+            if *e == epoch {
+                return f.clone();
+            }
+        }
+        let touched = self.ids.iter().any(|&g| tombed(bits, g));
+        let filter = touched.then(|| {
+            Arc::new(IdFilter::from_fn(self.ids.len(), |l| !tombed(bits, self.ids[l as usize])))
+        });
+        *cache = Some((epoch, filter.clone()));
+        filter
+    }
 }
 
 /// One epoch's consistent snapshot of the live index. Immutable once
@@ -113,6 +155,10 @@ struct ShardView {
 struct TombSet {
     bits: Vec<u64>,
     count: usize,
+    /// Bumped on every mutation (delete, or compaction clearing the bits
+    /// of physically dropped rows); keys the per-shard admission-filter
+    /// caches.
+    epoch: u64,
 }
 
 impl TombSet {
@@ -128,6 +174,22 @@ impl TombSet {
         }
         self.bits[w] |= mask;
         self.count += 1;
+        self.epoch += 1;
+        true
+    }
+
+    /// Clear `id` — its row was physically dropped by a compaction, so
+    /// the tombstone has nothing left to mask. Returns true when the bit
+    /// was set.
+    fn remove(&mut self, id: u32) -> bool {
+        let w = (id / 64) as usize;
+        let mask = 1u64 << (id % 64);
+        if w >= self.bits.len() || self.bits[w] & mask == 0 {
+            return false;
+        }
+        self.bits[w] &= !mask;
+        self.count -= 1;
+        self.epoch += 1;
         true
     }
 }
@@ -137,6 +199,34 @@ impl TombSet {
 fn tombed(bits: &[u64], id: u32) -> bool {
     let w = (id / 64) as usize;
     w < bits.len() && (bits[w] >> (id % 64)) & 1 == 1
+}
+
+/// Does any tombstone fall in the global-id range `[start, start+len)`?
+/// Word-wise scan of the snapshot, so the memtable's admission check is
+/// O(len/64) rather than per-row.
+fn range_has_tombs(bits: &[u64], start: u32, len: usize) -> bool {
+    if len == 0 {
+        return false;
+    }
+    let end = start as u64 + len as u64; // exclusive
+    let first_w = (start / 64) as usize;
+    let last_w = ((end - 1) / 64) as usize;
+    for w in first_w..=last_w {
+        if w >= bits.len() {
+            break;
+        }
+        let mut word = bits[w];
+        if w == first_w {
+            word &= !0u64 << (start % 64);
+        }
+        if w == last_w && end % 64 != 0 {
+            word &= !0u64 >> (64 - end % 64);
+        }
+        if word != 0 {
+            return true;
+        }
+    }
+    false
 }
 
 /// Point-in-time counters of a [`LiveEngine`].
@@ -157,7 +247,8 @@ pub struct LiveStats {
     pub sealed_rows: usize,
     /// Rows in the current memtable.
     pub mem_rows: usize,
-    /// Live tombstones.
+    /// Live tombstones — ids deleted but not yet physically dropped
+    /// (compaction clears the tombstones of the rows it drops).
     pub tombstones: usize,
     /// Current view epoch (bumped by every seal/compact publish).
     pub epoch: u64,
@@ -304,6 +395,16 @@ impl LiveEngine {
 
     /// Seal the current memtable into a sealed shard and publish the next
     /// view, then fold small shards. Serialized on `seal_lock`.
+    ///
+    /// Sealing is copy-on-write with respect to readers: `mem.seal()`
+    /// snapshots the memtable *without draining it*, so every view
+    /// published before the swap keeps serving the rows out of the old
+    /// memtable while the frozen snapshot is prepared. The swap itself
+    /// is one atomic pointer store — a search sees either (old shards +
+    /// full memtable) or (old shards + sealed snapshot + fresh
+    /// memtable), never a state with the acked rows missing. Disk
+    /// persistence runs *after* the publish so file I/O can never hold
+    /// visibility hostage.
     fn seal(&self) -> bool {
         let _writer = self.seal_lock.lock().unwrap();
         let view = self.current_view();
@@ -315,17 +416,26 @@ impl LiveEngine {
         };
         let n = parts.high.len() as u32;
         let ids: Vec<u32> = (view.mem_base..view.mem_base + n).collect();
-        let path = self.persist_shard(view.epoch, &parts.graph, &parts.low, &parts.high, &ids);
+        let path = self.shard_path("shard", view.epoch);
         let graph = Arc::new(parts.graph);
         let high = Arc::new(parts.high);
+        let low: Arc<dyn VectorStore> = Arc::new(parts.low);
         let searcher = PhnswSearcher::with_store(
             graph.clone(),
             high.clone(),
-            Arc::new(parts.low),
+            low.clone(),
             self.pca.clone(),
             self.cfg.params.clone(),
         );
-        let shard = Arc::new(SealedShard { ids, graph, high, searcher, path });
+        let shard = Arc::new(SealedShard {
+            ids,
+            graph,
+            high,
+            low,
+            searcher,
+            path,
+            tomb_cache: Mutex::new(None),
+        });
         let mem = Arc::new(MemSegment::new(
             self.pca.clone(),
             self.cfg.params.clone(),
@@ -333,7 +443,7 @@ impl LiveEngine {
             shard_seed(self.cfg.build.seed, view.epoch as usize + 1),
         ));
         let mut sealed = view.sealed.clone();
-        sealed.push(shard);
+        sealed.push(shard.clone());
         let next = Arc::new(ShardView {
             epoch: view.epoch + 1,
             sealed,
@@ -342,6 +452,10 @@ impl LiveEngine {
         });
         *self.view.lock().unwrap() = next.clone();
         self.seals.fetch_add(1, Ordering::Relaxed);
+        if let Some(p) = &shard.path {
+            self.persist_shard(p, &shard.graph, shard.low.as_ref(), &shard.high, &shard.ids);
+        }
+        self.write_manifest(&next);
         self.compact_locked(&next, self.cfg.compact_fanin);
         true
     }
@@ -358,22 +472,29 @@ impl LiveEngine {
         self.compactions.load(Ordering::Relaxed) > before
     }
 
+    /// Planned on-disk path for a shard produced at `epoch`, or `None`
+    /// when the live tier is memory-only. Every view publish consumes
+    /// one epoch under `seal_lock`, so `prefix-epoch` names are unique;
+    /// seals use the `shard-` prefix, compactions `compact-`, which
+    /// keeps the two streams from ever colliding in the data dir.
+    fn shard_path(&self, prefix: &str, epoch: u64) -> Option<PathBuf> {
+        self.cfg.dir.as_ref().map(|d| d.join(format!("{prefix}-{epoch:05}.phnsw")))
+    }
+
     /// Persist a sealed shard as a v3 bundle plus a `.ids` sidecar
-    /// (u32-LE local→global map). Failures are logged, not fatal — the
-    /// in-memory shard serves either way.
+    /// (u32-LE local→global map) at `path`. Failures are logged, not
+    /// fatal — the in-memory shard serves either way.
     fn persist_shard(
         &self,
-        epoch: u64,
+        path: &std::path::Path,
         graph: &HnswGraph,
         low: &dyn VectorStore,
         high: &VectorSet,
         ids: &[u32],
-    ) -> Option<PathBuf> {
-        let dir = self.cfg.dir.as_ref()?;
-        let path = dir.join(format!("shard-{epoch:05}.phnsw"));
-        if let Err(e) = crate::runtime::save_v3_single(&path, graph, &self.pca, low, high) {
+    ) {
+        if let Err(e) = crate::runtime::save_v3_single(path, graph, &self.pca, low, high) {
             log::warn!("failed to persist sealed shard {}: {e:#}", path.display());
-            return None;
+            return;
         }
         let mut buf = Vec::with_capacity(ids.len() * 4);
         for &g in ids {
@@ -382,7 +503,27 @@ impl LiveEngine {
         if let Err(e) = std::fs::write(path.with_extension("ids"), &buf) {
             log::warn!("failed to persist id sidecar for {}: {e:#}", path.display());
         }
-        Some(path)
+    }
+
+    /// Rewrite the data dir's `MANIFEST` to list `view`'s live shard
+    /// files (one filename per line, in shard order) via tmp + rename,
+    /// so a reader never sees a torn list and can tell current shards
+    /// from ones a crashed compaction failed to unlink.
+    fn write_manifest(&self, view: &ShardView) {
+        let Some(dir) = self.cfg.dir.as_ref() else { return };
+        let mut body = String::new();
+        for s in &view.sealed {
+            if let Some(name) = s.path.as_ref().and_then(|p| p.file_name()).and_then(|n| n.to_str())
+            {
+                body.push_str(name);
+                body.push('\n');
+            }
+        }
+        let tmp = dir.join("MANIFEST.tmp");
+        let dst = dir.join("MANIFEST");
+        if let Err(e) = std::fs::write(&tmp, body).and_then(|()| std::fs::rename(&tmp, &dst)) {
+            log::warn!("failed to write shard manifest {}: {e:#}", dst.display());
+        }
     }
 
     /// Fold up to `compact_fanin` small sealed shards into one, dropping
@@ -408,10 +549,13 @@ impl LiveEngine {
         let mut high = VectorSet::new(self.pca.dim());
         let mut ids: Vec<u32> = Vec::new();
         let mut levels: Vec<usize> = Vec::new();
+        let mut dropped: Vec<u32> = Vec::new();
         for &si in &small {
             let s = &view.sealed[si];
             for (local, &g) in s.ids.iter().enumerate() {
-                if !tombed(&tombs, g) {
+                if tombed(&tombs, g) {
+                    dropped.push(g);
+                } else {
                     high.push(s.high.row(local));
                     ids.push(g);
                     levels.push(s.graph.level(local as u32));
@@ -444,18 +588,28 @@ impl LiveEngine {
                 self.pca.project(row, &mut buf);
                 low.push_row(&buf);
             }
-            let path = self.persist_shard(view.epoch + 1_000_000, &graph, &low, &high, &ids);
+            let path = self.shard_path("compact", view.epoch);
             let graph = Arc::new(graph);
             let high = Arc::new(high);
+            let low: Arc<dyn VectorStore> = Arc::new(low);
             let searcher = PhnswSearcher::with_store(
                 graph.clone(),
                 high.clone(),
-                Arc::new(low),
+                low.clone(),
                 self.pca.clone(),
                 self.cfg.params.clone(),
             );
-            Some(Arc::new(SealedShard { ids, graph, high, searcher, path }))
+            Some(Arc::new(SealedShard {
+                ids,
+                graph,
+                high,
+                low,
+                searcher,
+                path,
+                tomb_cache: Mutex::new(None),
+            }))
         };
+        let folded: Vec<Arc<SealedShard>> = small.iter().map(|&i| view.sealed[i].clone()).collect();
         let mut sealed: Vec<Arc<SealedShard>> = view
             .sealed
             .iter()
@@ -463,15 +617,41 @@ impl LiveEngine {
             .filter(|(i, _)| !small.contains(i))
             .map(|(_, s)| s.clone())
             .collect();
-        sealed.extend(compacted);
+        sealed.extend(compacted.iter().cloned());
         let next = Arc::new(ShardView {
             epoch: view.epoch + 1,
             sealed,
             mem: view.mem.clone(),
             mem_base: view.mem_base,
         });
-        *self.view.lock().unwrap() = next;
+        *self.view.lock().unwrap() = next.clone();
         self.compactions.fetch_add(1, Ordering::Relaxed);
+        // The dropped rows are physically gone from every shard, so
+        // their tombstones have nothing left to mask: clear them so a
+        // fully-compacted index returns to the filter-free fast path.
+        if !dropped.is_empty() {
+            let mut t = self.tombs.write().unwrap();
+            for &g in &dropped {
+                t.remove(g);
+            }
+        }
+        // Persist the compacted output, then retire the folded inputs'
+        // files — no published view references them anymore.
+        if let Some(shard) = &compacted {
+            if let Some(p) = &shard.path {
+                self.persist_shard(p, &shard.graph, shard.low.as_ref(), &shard.high, &shard.ids);
+            }
+        }
+        for s in &folded {
+            if let Some(p) = &s.path {
+                for f in [p.clone(), p.with_extension("ids")] {
+                    if let Err(e) = std::fs::remove_file(&f) {
+                        log::debug!("could not remove folded shard file {}: {e}", f.display());
+                    }
+                }
+            }
+        }
+        self.write_manifest(&next);
     }
 
     /// Serve one request against a consistent view snapshot, composing
@@ -486,26 +666,33 @@ impl LiveEngine {
     ) -> Vec<Neighbor> {
         let view = self.current_view();
         // Point-in-time tombstone snapshot: one search sees one delete
-        // set, even while concurrent deletes land.
-        let (tombs, n_tombs) = {
+        // set, even while concurrent deletes land. The epoch keys the
+        // per-shard filter caches.
+        let (tombs, n_tombs, tomb_epoch) = {
             let t = self.tombs.read().unwrap();
-            (t.bits.clone(), t.count)
+            (t.bits.clone(), t.count, t.epoch)
         };
-        let need_filter = n_tombs > 0 || req.filter.is_some();
         let merge_len = req.effective_search(&self.cfg.params.search).ef_l0;
         let mut merged: Vec<Neighbor> = Vec::new();
         for shard in &view.sealed {
             // Translate the global predicate (tombstones ∧ user filter)
-            // into shard-local ids. `IdFilter::allows` is bounds-safe, so
-            // a user filter sized for a smaller corpus simply excludes
-            // newer ids. The unfiltered case stays filter-free — the
-            // bitwise-identical fast path.
-            let local_filter = need_filter.then(|| {
-                Arc::new(IdFilter::from_fn(shard.ids.len(), |l| {
-                    let g = shard.ids[l as usize];
-                    !tombed(&tombs, g) && req.filter.as_ref().is_none_or(|f| f.allows(g))
-                }))
-            });
+            // into shard-local ids. The tombstone leg is cached per
+            // (shard, tombstone-epoch) — untouched shards stay on the
+            // filter-free fast path, and touched ones pay the O(rows)
+            // translation once per delete, not once per query. A user
+            // filter (rare on this tier) composes per request;
+            // `IdFilter::allows` is bounds-safe, so a user filter sized
+            // for a smaller corpus simply excludes newer ids.
+            let tomb_f =
+                if n_tombs > 0 { shard.tomb_filter(tomb_epoch, &tombs) } else { None };
+            let local_filter = if let Some(uf) = &req.filter {
+                Some(Arc::new(IdFilter::from_fn(shard.ids.len(), |l| {
+                    tomb_f.as_ref().is_none_or(|t| t.allows(l))
+                        && uf.allows(shard.ids[l as usize])
+                })))
+            } else {
+                tomb_f
+            };
             let sub = SearchRequest {
                 vector: req.vector,
                 topk: req.topk,
@@ -527,12 +714,17 @@ impl LiveEngine {
             );
         }
         let mem_base = view.mem_base;
+        // The memtable is mutable, so its admission predicate is not
+        // cacheable — but a word-wise range probe keeps it off the
+        // filtered path entirely unless a tombstone actually falls in
+        // the memtable's id range (or the request carries a filter).
+        let mem_tombed = n_tombs > 0 && range_has_tombs(&tombs, mem_base, view.mem.len());
         let pred = |local: u32| -> bool {
             let g = mem_base + local;
             !tombed(&tombs, g) && req.filter.as_ref().is_none_or(|f| f.allows(g))
         };
         let mem_filter: Option<&dyn Fn(u32) -> bool> =
-            if need_filter { Some(&pred) } else { None };
+            if mem_tombed || req.filter.is_some() { Some(&pred) } else { None };
         let mut trace = stats.as_ref().map(|_| SearchTrace::new());
         let found =
             view.mem.search(
@@ -692,6 +884,7 @@ mod tests {
         }
         let pre = live.stats();
         assert_eq!(pre.sealed_shards, 3, "3 small shards below the auto-compact fan-in");
+        assert_eq!(pre.tombstones, 120);
         assert!(live.compact(), "explicit compaction folds them");
         let post = live.stats();
         assert!(post.compactions > pre.compactions);
@@ -700,6 +893,10 @@ mod tests {
             post.sealed_rows,
             600 - 120,
             "tombstoned rows physically dropped"
+        );
+        assert_eq!(
+            post.tombstones, 0,
+            "tombstones of dropped rows must be cleared so the index returns to the fast path"
         );
         for q in queries.iter() {
             let hits = live.search_req(&SearchRequest::new(q).with_topk(10));
@@ -823,6 +1020,101 @@ mod tests {
         assert!(bundles >= 3, "each seal persists one bundle");
         all_ids.sort_unstable();
         assert_eq!(all_ids, (0..300u32).collect::<Vec<_>>(), "sidecars cover every inserted id");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn range_has_tombs_handles_word_boundaries() {
+        let mut t = TombSet::default();
+        assert!(t.insert(64));
+        assert!(!range_has_tombs(&t.bits, 0, 64));
+        assert!(range_has_tombs(&t.bits, 64, 1));
+        assert!(range_has_tombs(&t.bits, 0, 65));
+        assert!(!range_has_tombs(&t.bits, 65, 200));
+        assert!(!range_has_tombs(&t.bits, 64, 0));
+        assert!(t.insert(191));
+        assert!(range_has_tombs(&t.bits, 128, 64));
+        assert!(!range_has_tombs(&t.bits, 128, 63));
+        assert!(t.remove(191), "clearing a set bit reports true");
+        assert!(!t.remove(191), "double clear reports false");
+        assert!(!range_has_tombs(&t.bits, 128, 64));
+        assert_eq!(t.count, 1);
+    }
+
+    #[test]
+    fn tombstone_filter_cache_keys_on_delete_epoch() {
+        let (base, _, pca) = fixture(300);
+        let live = LiveEngine::new(pca, test_cfg(150)); // two inline seals
+        for row in base.iter() {
+            live.insert(row);
+        }
+        assert_eq!(live.stats().sealed_shards, 2);
+        live.delete(3);
+        let q = base.row(0);
+        let cached_epochs = |live: &LiveEngine| -> Vec<Option<u64>> {
+            live.current_view()
+                .sealed
+                .iter()
+                .map(|s| s.tomb_cache.lock().unwrap().as_ref().map(|(e, _)| *e))
+                .collect()
+        };
+        let _ = live.search_req(&SearchRequest::new(q).with_topk(5));
+        let first = cached_epochs(&live);
+        assert!(
+            first.iter().all(|e| e.is_some()),
+            "every sealed shard caches its tombstone translation: {first:?}"
+        );
+        let _ = live.search_req(&SearchRequest::new(q).with_topk(5));
+        assert_eq!(cached_epochs(&live), first, "no delete landed, so no rebuild");
+        live.delete(5);
+        let _ = live.search_req(&SearchRequest::new(q).with_topk(5));
+        assert_ne!(cached_epochs(&live), first, "a delete must invalidate the cached epoch");
+        // The untouched shard caches "no filter needed" and stays on the
+        // unfiltered fast path even while deletes exist elsewhere.
+        let view = live.current_view();
+        let untouched = view.sealed.iter().find(|s| !s.ids.contains(&3)).unwrap();
+        let entry = untouched.tomb_cache.lock().unwrap().clone();
+        assert!(matches!(entry, Some((_, None))), "untouched shard must skip filtering");
+    }
+
+    #[test]
+    fn compaction_retires_folded_shard_files_and_updates_manifest() {
+        let (base, _, pca) = fixture(300);
+        let dir = std::env::temp_dir().join(format!("phnsw_live_compact_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut cfg = test_cfg(10_000);
+        cfg.compact_fanin = 8;
+        cfg.dir = Some(dir.clone());
+        let live = LiveEngine::new(pca, cfg);
+        for (i, row) in base.iter().enumerate() {
+            live.insert(row);
+            if (i + 1) % 100 == 0 {
+                live.flush();
+            }
+        }
+        let names = |prefix: &str| -> Vec<String> {
+            let mut v: Vec<String> = std::fs::read_dir(&dir)
+                .unwrap()
+                .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+                .filter(|n| n.starts_with(prefix) && n.ends_with(".phnsw"))
+                .collect();
+            v.sort();
+            v
+        };
+        assert_eq!(names("shard-").len(), 3, "three sealed shard files before compaction");
+        live.delete(0);
+        assert!(live.compact());
+        assert!(names("shard-").is_empty(), "folded inputs' files must be unlinked");
+        let compacted = names("compact-");
+        assert_eq!(compacted.len(), 1, "one compacted output file");
+        assert!(dir.join(&compacted[0]).with_extension("ids").exists(), "compacted id sidecar");
+        let manifest = std::fs::read_to_string(dir.join("MANIFEST")).unwrap();
+        assert_eq!(
+            manifest.lines().collect::<Vec<_>>(),
+            vec![compacted[0].as_str()],
+            "manifest lists exactly the live shard set"
+        );
+        assert_eq!(live.stats().tombstones, 0, "dropped row's tombstone cleared");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

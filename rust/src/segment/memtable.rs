@@ -32,9 +32,11 @@
 //! lock (construction is inherently serial per graph — same reason the
 //! bulk builder is single-threaded per shard); searches share the read
 //! lock and carry their own scratch, so concurrent readers never
-//! contend. Sealing marks the segment and takes the data out under the
-//! write lock; a loser of the seal race gets [`SealedError`] and retries
-//! against the fresh memtable the sealer publishes.
+//! contend. Sealing marks the segment immutable and *snapshots* the data
+//! under the write lock (copy-on-write — the rows stay in place, so
+//! views that still reference this memtable keep serving them); a loser
+//! of the seal race gets [`SealedError`] and retries against the fresh
+//! memtable the sealer publishes.
 
 use crate::dataset::VectorSet;
 use crate::graph::build::{insert_node, BuildConfig, DistCache};
@@ -268,24 +270,25 @@ impl MemSegment {
         out
     }
 
-    /// Seal the memtable: mark it immutable and take its contents out,
-    /// freezing the graph into CSR form. Returns `None` — and leaves the
-    /// segment *unsealed* — when empty, so an idle flush never wedges the
-    /// insert path behind a view swap that isn't coming.
+    /// Seal the memtable **copy-on-write**: mark it immutable and
+    /// *snapshot* its contents, freezing the snapshot's graph into CSR
+    /// form. The memtable keeps its rows, so views published before the
+    /// seal keep serving them with no visibility gap — the sealer
+    /// publishes the frozen snapshot plus a fresh memtable in one view
+    /// swap, and this segment is simply dropped once the last pre-seal
+    /// view lets go of it. Returns `None` — and leaves the segment
+    /// *unsealed* — when empty, so an idle flush never wedges the insert
+    /// path behind a view swap that isn't coming.
     pub(crate) fn seal(&self) -> Option<SealedParts> {
         let mut guard = self.inner.write().unwrap();
         if guard.graph.is_empty() {
             return None;
         }
         guard.sealed = true;
-        let (min, scale) = affine_from_pca(&self.pca);
-        let inner = &mut *guard;
-        let mut graph =
-            std::mem::replace(&mut inner.graph, HnswGraph::empty(self.build.m, self.build.m * 2));
-        let high = std::mem::replace(&mut inner.high, VectorSet::new(self.pca.dim()));
-        let fresh_low = Sq8Store::with_affine(self.pca.k(), min, scale);
-        let low = std::mem::replace(&mut inner.low, fresh_low);
-        inner.cache.clear();
+        let mut graph = guard.graph.clone();
+        let high = guard.high.clone();
+        let low = guard.low.clone();
+        drop(guard);
         // Freeze preserves per-node neighbor order, so searches against
         // the sealed CSR form are bitwise what the staging form answered.
         graph.freeze();
@@ -367,7 +370,11 @@ mod tests {
         mem.insert(base.row(0)).unwrap();
         assert!(mem.seal().is_some());
         assert_eq!(mem.insert(base.row(1)), Err(SealedError));
-        assert!(mem.is_empty(), "seal takes the contents");
+        // Copy-on-write: the rows stay in place so pre-seal views keep
+        // serving them; the segment is retired by dropping it.
+        assert_eq!(mem.len(), 1, "seal must not drain the serving rows");
+        let hit = mem.search(base.row(0), Some(1), None, None, None);
+        assert_eq!(hit[0].id, 0, "sealed memtable keeps serving searches");
     }
 
     #[test]
