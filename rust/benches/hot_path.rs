@@ -369,5 +369,61 @@ fn main() {
         std::fs::remove_file(&p3).ok();
     }
 
+    println!("rerank cascade (SQ8 mid stage over high-dim rows):");
+    // Exact vs staged tier over the same mid-stage engine: search time
+    // plus the per-stage row bill. f32 rows touched is the page-fault
+    // proxy under mmap serving — the number the cascade exists to cut;
+    // CI gates the recorded reduction ratio at ≥ 2×.
+    {
+        use phnsw::search::{QualityTier, SearchRequest, SearchStats};
+        let mid = w.phnsw_mid(PhnswParams::default());
+        let staged = QualityTier::staged_default();
+        let mut ci = 0usize;
+        let ns_exact = snap.time(
+            "cascade_exact_search_ns",
+            "cascade search exact tier",
+            it(2_000).max(200),
+            || {
+                ci = (ci + 1) % nq;
+                std::hint::black_box(
+                    mid.search_req(&SearchRequest::new(w.queries.row(ci)).with_topk(10)),
+                );
+            },
+        );
+        let ns_staged = snap.time(
+            "cascade_staged_search_ns",
+            "cascade search staged tier (frac 0.25)",
+            it(2_000).max(200),
+            || {
+                ci = (ci + 1) % nq;
+                std::hint::black_box(mid.search_req(
+                    &SearchRequest::new(w.queries.row(ci)).with_topk(10).with_tier(staged),
+                ));
+            },
+        );
+        snap.record("cascade_staged_speedup", ns_exact / ns_staged);
+        let rows = |tier: QualityTier| -> SearchStats {
+            let mut agg = SearchStats::default();
+            for j in 0..nq {
+                let (_, st) = mid.search_req_with_stats(
+                    &SearchRequest::new(w.queries.row(j)).with_topk(10).with_tier(tier),
+                );
+                agg.add(&st);
+            }
+            agg
+        };
+        let ex = rows(QualityTier::Exact);
+        let st = rows(staged);
+        let reduction = ex.f32_rows_touched as f64 / st.f32_rows_touched.max(1) as f64;
+        snap.record("cascade_f32_rows_exact", ex.f32_rows_touched as f64);
+        snap.record("cascade_f32_rows_staged", st.f32_rows_touched as f64);
+        snap.record("cascade_mid_rows_staged", st.mid_rows_touched as f64);
+        snap.record("cascade_f32_rows_reduction", reduction);
+        println!(
+            "  f32 rows over {nq} queries: exact {} vs staged {} ({reduction:.2}x fewer, {} mid rows paid)",
+            ex.f32_rows_touched, st.f32_rows_touched, st.mid_rows_touched
+        );
+    }
+
     snap.write();
 }

@@ -70,6 +70,12 @@ impl Query {
         self
     }
 
+    /// Set the cascade quality tier (rerank depth).
+    pub fn with_tier(mut self, tier: crate::search::QualityTier) -> Self {
+        self.core.tier = tier;
+        self
+    }
+
     /// Route to a named engine instead of the router's policy.
     pub fn with_engine(mut self, engine: impl Into<String>) -> Self {
         self.engine = Some(engine.into());

@@ -2,10 +2,12 @@
 //! execute searches, and deliver results through per-request channels.
 //!
 //! Dispatch is *batch-first*: a drained batch is grouped by resolved
-//! engine and each group goes through [`AnnEngine::search_batch`] in one
-//! call, so the engines' data-parallel overrides see whole batches
-//! instead of a per-query loop. Results are bitwise identical to
-//! sequential dispatch (the `search_batch` contract).
+//! engine and each group goes through
+//! [`AnnEngine::search_batch_req_with_stats`] in one call, so the
+//! engines' data-parallel overrides see whole batches instead of a
+//! per-query loop, and the aggregated per-stage rerank row counts feed
+//! the serve counters. Results are bitwise identical to sequential
+//! dispatch (the batch contract).
 //!
 //! Ingest ops ([`Op::Insert`] / [`Op::Delete`] / [`Op::Flush`]) go to a
 //! **dedicated single-worker queue** that applies them to the server's
@@ -202,46 +204,6 @@ impl Server {
             source: EngineSource::None,
             live: None,
         }
-    }
-
-    /// Boot a server over a single pre-built engine.
-    #[deprecated(note = "use Server::builder().engine(name, engine).start()")]
-    pub fn start_with_engine(
-        cfg: ServerConfig,
-        name: impl Into<String>,
-        engine: Arc<dyn AnnEngine>,
-    ) -> Self {
-        Self::builder()
-            .config(cfg)
-            .engine(name, engine)
-            .start()
-            .expect("engine source is infallible")
-    }
-
-    /// Boot a server straight from an opened `.phnsw` index artifact.
-    #[deprecated(note = "use Server::builder().engine() over Arc::new(bundle.searcher(params))")]
-    pub fn start_from_bundle(
-        cfg: ServerConfig,
-        bundle: &crate::runtime::IndexBundle,
-        params: crate::search::PhnswParams,
-    ) -> Self {
-        let engine: Arc<dyn AnnEngine> = Arc::new(bundle.searcher(params));
-        Self::builder()
-            .config(cfg)
-            .engine("phnsw", engine)
-            .start()
-            .expect("engine source is infallible")
-    }
-
-    /// Boot a server straight from a `.phnsw` file on disk.
-    #[deprecated(note = "use Server::builder().bundle_path(path, opts).params(params).start()")]
-    pub fn start_from_bundle_path(
-        cfg: ServerConfig,
-        path: impl AsRef<std::path::Path>,
-        opts: crate::runtime::OpenOptions,
-        params: crate::search::PhnswParams,
-    ) -> crate::Result<Self> {
-        Self::builder().config(cfg).bundle_path(path.as_ref(), opts).params(params).start()
     }
 
     /// Start the worker pool over a router (the low-level primitive the
@@ -457,7 +419,9 @@ fn apply_ingest(p: Pending, live: Option<&Arc<LiveEngine>>, stats: &ServeStats) 
 /// Route a drained batch as a whole: resolve each query's engine (so
 /// per-query overrides and round-robin policies behave exactly as under
 /// per-query dispatch), group the queries by engine, run each group
-/// through one `search_batch_req` call, and deliver per-request results.
+/// through one `search_batch_req_with_stats` call (its aggregated stats
+/// feed the rows-touched serve counters), and deliver per-request
+/// results.
 /// Per-request knobs (`topk`, ef override, filter) ride inside the
 /// [`SearchRequest`]s and are honored by the engines natively — no
 /// post-hoc truncation here.
@@ -500,8 +464,9 @@ fn dispatch_batch(
             .map(|&i| pending[i].as_ref().unwrap().op.as_search().unwrap().request())
             .collect();
         let exec_start = Instant::now();
-        let results = engine.search_batch_req(&reqs);
+        let (results, agg) = engine.search_batch_req_with_stats(&reqs);
         let exec = exec_start.elapsed();
+        stats.record_rows(agg.mid_rows_touched, agg.f32_rows_touched);
         debug_assert_eq!(results.len(), idxs.len(), "search_batch_req must be 1:1 with requests");
         drop(reqs); // releases the borrows of `pending`
         for (&i, neighbors) in idxs.iter().zip(results) {
@@ -641,9 +606,12 @@ mod tests {
         fn search_req_with_stats(&self, req: &SearchRequest) -> (Vec<Neighbor>, SearchStats) {
             (self.search_req(req), SearchStats::default())
         }
-        fn search_batch_req(&self, reqs: &[SearchRequest]) -> Vec<Vec<Neighbor>> {
+        fn search_batch_req_with_stats(
+            &self,
+            reqs: &[SearchRequest],
+        ) -> (Vec<Vec<Neighbor>>, SearchStats) {
             self.batch_calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-            reqs.iter().map(|r| self.search_req(r)).collect()
+            (reqs.iter().map(|r| self.search_req(r)).collect(), SearchStats::default())
         }
     }
 

@@ -19,6 +19,11 @@ struct Inner {
     queue_wait: LatencyStats,
     /// Execution time of the batch that served the request.
     exec: LatencyStats,
+    /// Mid-stage (MIDQ) rows scored across all served searches.
+    mid_rows_touched: u64,
+    /// f32 high-dim rows reranked across all served searches — the
+    /// page-fault proxy the staged cascade exists to shrink.
+    f32_rows_touched: u64,
 }
 
 /// Thread-safe serve statistics.
@@ -45,6 +50,8 @@ impl ServeStats {
                 latency: LatencyStats::new(),
                 queue_wait: LatencyStats::new(),
                 exec: LatencyStats::new(),
+                mid_rows_touched: 0,
+                f32_rows_touched: 0,
             }),
         }
     }
@@ -59,6 +66,16 @@ impl ServeStats {
         g.latency.record(queue_wait + exec);
         g.queue_wait.record(queue_wait);
         g.exec.record(exec);
+    }
+
+    /// Fold one dispatched batch's per-stage rerank row counts into the
+    /// running totals (from the engines' aggregated [`SearchStats`]).
+    ///
+    /// [`SearchStats`]: crate::search::SearchStats
+    pub fn record_rows(&self, mid_rows: u64, f32_rows: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.mid_rows_touched += mid_rows;
+        g.f32_rows_touched += f32_rows;
     }
 
     /// Record a failed query.
@@ -89,6 +106,16 @@ impl ServeStats {
     /// Per-engine served counts.
     pub fn by_engine(&self) -> BTreeMap<String, u64> {
         self.inner.lock().unwrap().by_engine.clone()
+    }
+
+    /// Total mid-stage (MIDQ) rows scored across served searches.
+    pub fn mid_rows_touched(&self) -> u64 {
+        self.inner.lock().unwrap().mid_rows_touched
+    }
+
+    /// Total f32 high-dim rows reranked across served searches.
+    pub fn f32_rows_touched(&self) -> u64 {
+        self.inner.lock().unwrap().f32_rows_touched
     }
 
     /// Wall-clock QPS since construction.
@@ -128,8 +155,13 @@ impl ServeStats {
         let mut s = format!(
             "served={} errors={} rejected={} p50={p50:.1}µs p95={p95:.1}µs p99={p99:.1}µs\n\
              \x20 queue: p50={q50:.1}µs p95={q95:.1}µs p99={q99:.1}µs\n\
-             \x20 exec:  p50={x50:.1}µs p95={x95:.1}µs p99={x99:.1}µs\n",
-            g.served, g.errors, g.rejected
+             \x20 exec:  p50={x50:.1}µs p95={x95:.1}µs p99={x99:.1}µs\n\
+             \x20 rerank rows: mid={} f32={}\n",
+            g.served,
+            g.errors,
+            g.rejected,
+            g.mid_rows_touched,
+            g.f32_rows_touched
         );
         for (name, n) in &g.by_engine {
             s.push_str(&format!("  engine {name}: {n}\n"));
@@ -162,6 +194,16 @@ mod tests {
         assert!(r.contains("queue:"));
         assert!(r.contains("exec:"));
         assert!(r.contains("engine phnsw: 2"));
+    }
+
+    #[test]
+    fn rows_touched_accumulate_and_render() {
+        let s = ServeStats::new();
+        s.record_rows(120, 30);
+        s.record_rows(80, 10);
+        assert_eq!(s.mid_rows_touched(), 200);
+        assert_eq!(s.f32_rows_touched(), 40);
+        assert!(s.render().contains("rerank rows: mid=200 f32=40"));
     }
 
     #[test]

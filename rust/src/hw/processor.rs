@@ -344,6 +344,7 @@ mod tests {
             n_lowdim_dists: nn,
             n_ksort: 1,
             n_highdim_dists: k,
+            n_mid_dists: 0,
             n_visited_checks: k,
             n_f_inserts: k / 2,
             n_f_removals: k / 4,
@@ -358,6 +359,7 @@ mod tests {
             n_lowdim_dists: 0,
             n_ksort: 0,
             n_highdim_dists: unvisited,
+            n_mid_dists: 0,
             n_visited_checks: nn,
             n_f_inserts: unvisited / 2,
             n_f_removals: unvisited / 4,

@@ -18,7 +18,7 @@ use phnsw::cli::{usage, Args, OptSpec};
 use phnsw::coordinator::{Query, RoutePolicy, Router, Server, ServerConfig};
 use phnsw::dram::DramConfig;
 use phnsw::hw::EngineKind;
-use phnsw::search::{AnnEngine, PhnswParams, SearchParams};
+use phnsw::search::{AnnEngine, PhnswParams, QualityTier, SearchParams, SearchRequest};
 use phnsw::store::VectorStore;
 use phnsw::workbench::{Workbench, WorkbenchConfig};
 use phnsw::{reports, Result};
@@ -193,6 +193,18 @@ fn cmd_build(args: &Args) -> Result<()> {
             default: None,
             is_flag: false,
         });
+        o.push(OptSpec {
+            name: "mid-stage",
+            help: "quantize the high-dim rows into a MIDQ cascade section (v3 bundles only)",
+            default: None,
+            is_flag: true,
+        });
+        o.push(OptSpec {
+            name: "tier",
+            help: "quality tier for the --min-recall evaluation: exact | staged | staged:<frac>",
+            default: Some("exact".into()),
+            is_flag: false,
+        });
         println!("{}", usage("phnsw build", "build + cache index, PCA, ground truth", &o));
         return Ok(());
     }
@@ -219,15 +231,22 @@ fn cmd_build(args: &Args) -> Result<()> {
     println!("{}", reports::db_footprints(&w));
     if let Some(out) = args.get("bundle-out") {
         let v3 = bundle_format_v3(args)?;
+        let mid_stage = args.flag("mid-stage");
+        anyhow::ensure!(
+            !mid_stage || v3,
+            "--mid-stage writes a MIDQ section, which only the v3 layout carries \
+             (add --bundle-format v3)"
+        );
         if v3 {
-            w.save_bundle_v3(&out)?;
+            w.save_bundle_v3(&out, mid_stage)?;
         } else {
             w.save_bundle(&out)?;
         }
         println!(
-            "bundle: wrote {out} ({} bytes, {} — graph + PCA + sq8 low store + f32 high store)",
+            "bundle: wrote {out} ({} bytes, {} — graph + PCA + sq8 low store{} + f32 high store)",
             std::fs::metadata(&out)?.len(),
-            if v3 { "v3 page-aligned" } else { "v2 streamed" }
+            if v3 { "v3 page-aligned" } else { "v2 streamed" },
+            if mid_stage { " + sq8 mid store" } else { "" }
         );
     }
     Ok(())
@@ -268,7 +287,8 @@ fn cmd_build_segmented(args: &Args) -> Result<()> {
         seed,
         ..SyntheticConfig::default()
     });
-    let spec = SegmentSpec { n_shards: shards, build_threads: threads, assignment };
+    let mid_stage = args.flag("mid-stage");
+    let spec = SegmentSpec { n_shards: shards, build_threads: threads, assignment, mid_stage };
     let t0 = std::time::Instant::now();
     let idx = build_segmented(&base, &bc, dim_low, seed, &spec);
     let ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -291,28 +311,38 @@ fn cmd_build_segmented(args: &Args) -> Result<()> {
 
     if let Some(raw) = args.get("min-recall") {
         let floor: f64 = raw.parse().map_err(|e| anyhow::anyhow!("invalid --min-recall: {e}"))?;
+        let tier = QualityTier::parse(&args.get_or("tier", "exact"))?;
         let gt = phnsw::dataset::ground_truth(&base, &queries, 10);
         let engine = idx.engine(phnsw_params(args)?);
         let results: Vec<Vec<u32>> = queries
             .iter()
-            .map(|q| engine.search(q).into_iter().map(|nb| nb.id).take(10).collect())
+            .map(|q| {
+                let req = SearchRequest::new(q).with_topk(10).with_tier(tier);
+                engine.search_req(&req).into_iter().map(|nb| nb.id).collect()
+            })
             .collect();
         let r = phnsw::metrics::recall_at_k(&results, &gt, 10);
-        println!("recall@10 over {nq} queries: {r:.3} (floor {floor})");
+        println!("recall@10 over {nq} queries at tier {}: {r:.3} (floor {floor})", tier.label());
         anyhow::ensure!(r >= floor, "recall {r:.3} below required floor {floor}");
     }
     if let Some(out) = args.get("bundle-out") {
         let v3 = bundle_format_v3(args)?;
+        anyhow::ensure!(
+            !mid_stage || v3,
+            "--mid-stage writes MIDQ sections, which only the v3 layout carries \
+             (add --bundle-format v3)"
+        );
         if v3 {
             phnsw::runtime::save_v3(&out, &idx)?;
         } else {
             phnsw::runtime::save_segmented(&out, &idx)?;
         }
         println!(
-            "bundle: wrote {out} ({} bytes, {} segment(s), {})",
+            "bundle: wrote {out} ({} bytes, {} segment(s), {}{})",
             std::fs::metadata(&out)?.len(),
             idx.n_segments(),
-            if v3 { "v3 page-aligned" } else { "v2 streamed" }
+            if v3 { "v3 page-aligned" } else { "v2 streamed" },
+            if mid_stage { ", mid stage" } else { "" }
         );
     }
     Ok(())
@@ -371,6 +401,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             is_flag: true,
         });
         o.push(OptSpec {
+            name: "tier",
+            help: "cascade quality tier: exact | staged | staged:<frac> \
+                   (engines without a MIDQ table serve staged as exact)",
+            default: Some("staged".into()),
+            is_flag: false,
+        });
+        o.push(OptSpec {
             name: "mix",
             help: "sample per-request topk / ef override / id filter (serving mix)",
             default: None,
@@ -407,8 +444,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         workers: args.get_parsed_or("workers", 4usize)?,
         ..Default::default()
     };
+    // Staged is the serving default: bundles carrying a MIDQ section get
+    // the three-stage cascade out of the box, everything else silently
+    // serves the bitwise-pinned exact path.
+    let tier = QualityTier::parse(&args.get_or("tier", "staged"))?;
     if args.flag("live") {
-        return cmd_serve_live(args, cfg);
+        return cmd_serve_live(args, cfg, tier);
     }
     let mix_on = args.flag("mix") || args.flag("min-filtered-recall");
     // With --mix we need row access to the indexed corpus to grade
@@ -546,7 +587,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 let mut local: Vec<FilteredEval> = Vec::new();
                 for i in 0..per_client {
                     let qi = (c * per_client + i) % queries.len();
-                    let mut q = Query::new(queries.row(qi).to_vec());
+                    let mut q = Query::new(queries.row(qi).to_vec()).with_tier(tier);
                     if let Some(p) = prepared {
                         q = p.sample(&mut rng, q);
                     }
@@ -569,6 +610,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         per_client * clients,
         elapsed,
         (per_client * clients) as f64 / elapsed.as_secs_f64()
+    );
+    // Machine-readable rows-touched line: the cascade CI smoke compares
+    // this across tiers to assert the staged f32-touch reduction.
+    println!(
+        "{{\"bench\":\"serve_rows\",\"tier\":\"{}\",\"mid_rows_touched\":{},\"f32_rows_touched\":{}}}",
+        tier.label(),
+        server.stats().mid_rows_touched(),
+        server.stats().f32_rows_touched()
     );
     println!("{}", server.stats().render());
     server.shutdown();
@@ -623,7 +672,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// the surviving corpus against an exact scan. Deleted ids must never
 /// appear in any result; self-query probes verify acked inserts are
 /// immediately searchable.
-fn cmd_serve_live(args: &Args, cfg: ServerConfig) -> Result<()> {
+fn cmd_serve_live(args: &Args, cfg: ServerConfig, tier: QualityTier) -> Result<()> {
     use phnsw::coordinator::{run_open_loop, IngestLeg, LoadConfig};
     use phnsw::dataset::synthetic::{generate, SyntheticConfig};
     use phnsw::graph::build::BuildConfig;
@@ -718,7 +767,7 @@ fn cmd_serve_live(args: &Args, cfg: ServerConfig) -> Result<()> {
     let (mut hits, mut wanted, mut leaks) = (0usize, 0usize, 0usize);
     for qi in 0..queries.len() {
         let qv = queries.row(qi);
-        let res = handle.query_blocking(Query::new(qv.to_vec()).with_topk(10))?;
+        let res = handle.query_blocking(Query::new(qv.to_vec()).with_topk(10).with_tier(tier))?;
         leaks += res.neighbors.iter().filter(|nb| deleted.contains(&nb.id)).count();
         let gt = phnsw::dataset::exact_topk_rows(
             surviving.iter().copied(),

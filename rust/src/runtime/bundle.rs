@@ -73,11 +73,13 @@ pub(crate) const VERSION_V3: u32 = 3;
 pub(crate) const TAG_GRAPH: &[u8; 4] = b"GRPH";
 pub(crate) const TAG_PCA: &[u8; 4] = b"PCAM";
 pub(crate) const TAG_LOW: &[u8; 4] = b"LOWQ";
+/// Mid-stage cascade table (v3 only): SQ8 codes of the *high*-dim rows.
+pub(crate) const TAG_MID: &[u8; 4] = b"MIDQ";
 pub(crate) const TAG_HIGH: &[u8; 4] = b"HIGH";
 pub(crate) const TAG_SEGDIR: &[u8; 4] = b"SEGD";
 
 /// Upper bound on shards in one bundle (bounds the section count a file
-/// may declare: `2 + 3 × MAX_SHARDS`).
+/// may declare: `2 + 4 × MAX_SHARDS`).
 pub const MAX_SHARDS: usize = 256;
 
 /// An opened `.phnsw` artifact: every component a [`PhnswSearcher`] needs.
@@ -88,6 +90,10 @@ pub struct IndexBundle {
     pub pca: Arc<PcaModel>,
     /// Low-dim filter store (codec as saved — SQ8 on the default path).
     pub low: Arc<dyn VectorStore>,
+    /// Mid-stage cascade table (`MIDQ`, v3 mid-stage builds only): SQ8
+    /// quantization of the high-dim rows, scored between the PCA filter
+    /// and the f32 rerank by `Staged`-tier requests.
+    pub mid: Option<Arc<dyn VectorStore>>,
     /// High-dim f32 rerank table.
     pub high: Arc<VectorSet>,
 }
@@ -175,37 +181,15 @@ impl IndexBundle {
         Ok(())
     }
 
-    /// Open a single-segment `.phnsw` artifact, validating every section
-    /// against the file length and the components against each other.
-    /// Fails on a segmented file.
-    #[deprecated(note = "use Bundle::open(path, OpenOptions::default())?.into_single()")]
-    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
-        let path = path.as_ref();
-        // Cheap header sniff: reject a segmented (v2) artifact from the
-        // 8-byte header instead of decoding every shard first. Malformed
-        // headers fall through to read_sections for its error messages.
-        let mut head = [0u8; 8];
-        let mut f =
-            std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
-        f.read_exact(&mut head).context("bundle header")?;
-        drop(f);
-        if &head[0..4] == MAGIC {
-            let version = u32::from_le_bytes(head[4..8].try_into()?);
-            ensure!(
-                version != VERSION_SEGMENTED,
-                "bundle is a segmented (v{version}) artifact; open it with Bundle::open"
-            );
-        }
-        Bundle::open(path, OpenOptions::default())?.into_single()
-    }
-
     /// Construct a ready-to-serve searcher from the opened components —
-    /// no PCA refit, no re-projection, no re-quantization.
+    /// no PCA refit, no re-projection, no re-quantization. A `MIDQ`
+    /// section rides along as the searcher's mid-stage cascade table.
     pub fn searcher(&self, params: PhnswParams) -> PhnswSearcher {
-        PhnswSearcher::with_store(
+        PhnswSearcher::with_stores(
             self.graph.clone(),
             self.high.clone(),
             self.low.clone(),
+            self.mid.clone(),
             self.pca.clone(),
             params,
         )
@@ -218,6 +202,8 @@ pub(crate) enum Section {
     Graph(HnswGraph),
     Pca(PcaModel),
     Low(Arc<dyn VectorStore>),
+    /// Mid-stage cascade table (v3 `MIDQ`; never produced by v1/v2).
+    Mid(Arc<dyn VectorStore>),
     High(VectorSet),
     SegDir(ShardMap),
 }
@@ -239,7 +225,7 @@ fn read_sections(path: &Path) -> Result<(u32, Vec<Section>)> {
         "unsupported bundle version {version}"
     );
     let n_sections = u32::from_le_bytes(head[8..12].try_into()?);
-    ensure!(n_sections as usize <= 2 + 3 * MAX_SHARDS, "implausible section count {n_sections}");
+    ensure!(n_sections as usize <= 2 + 4 * MAX_SHARDS, "implausible section count {n_sections}");
 
     let mut consumed = 12u64;
     let mut out = Vec::with_capacity(n_sections as usize);
@@ -305,10 +291,6 @@ pub enum Bundle {
     /// A sharded index: `SEGD` directory + one section group per shard.
     Segmented(SegmentedIndex),
 }
-
-/// Deprecated name of [`Bundle`].
-#[deprecated(note = "renamed to Bundle")]
-pub type AnyBundle = Bundle;
 
 impl Bundle {
     /// Open a `.phnsw` artifact of any version (1, 2, or 3). A v3 file
@@ -458,18 +440,6 @@ impl OpenOptions {
     }
 }
 
-/// Deprecated alias for [`Bundle::open`] with default options.
-#[deprecated(note = "use Bundle::open(path, OpenOptions::default())")]
-pub fn open_bundle(path: impl AsRef<Path>) -> Result<Bundle> {
-    Bundle::open(path, OpenOptions::default())
-}
-
-/// Deprecated alias for [`Bundle::open`].
-#[deprecated(note = "use Bundle::open")]
-pub fn open_bundle_with(path: impl AsRef<Path>, opts: OpenOptions) -> Result<Bundle> {
-    Bundle::open(path, opts)
-}
-
 /// Best-effort version sniff from the 8-byte file prefix; `None` when
 /// the file is unreadable or does not carry the bundle magic.
 fn sniff_version(path: &Path) -> Option<u32> {
@@ -484,12 +454,14 @@ pub(crate) fn assemble_single(sections: Vec<Section>) -> Result<IndexBundle> {
     let mut graph = None;
     let mut pca = None;
     let mut low: Option<Arc<dyn VectorStore>> = None;
+    let mut mid: Option<Arc<dyn VectorStore>> = None;
     let mut high = None;
     for section in sections {
         match section {
             Section::Graph(g) => graph = Some(g),
             Section::Pca(p) => pca = Some(p),
             Section::Low(l) => low = Some(l),
+            Section::Mid(m) => mid = Some(m),
             Section::High(h) => high = Some(h),
             Section::SegDir(_) => {}
         }
@@ -501,10 +473,15 @@ pub(crate) fn assemble_single(sections: Vec<Section>) -> Result<IndexBundle> {
     ensure!(graph.len() == low.len(), "graph/low-dim size mismatch");
     ensure!(pca.dim() == high.dim(), "PCA input dim != high-dim table dim");
     ensure!(pca.k() == low.dim(), "PCA output dim != low-dim store dim");
+    if let Some(m) = &mid {
+        ensure!(m.len() == high.len(), "mid/high-dim size mismatch");
+        ensure!(m.dim() == high.dim(), "MIDQ dim != high-dim table dim");
+    }
     Ok(IndexBundle {
         graph: Arc::new(graph),
         pca: Arc::new(pca),
         low,
+        mid,
         high: Arc::new(high),
     })
 }
@@ -516,12 +493,14 @@ pub(crate) fn assemble_segmented(sections: Vec<Section>, map: ShardMap) -> Resul
     let mut pca = None;
     let mut graphs = Vec::new();
     let mut lows: Vec<Arc<dyn VectorStore>> = Vec::new();
+    let mut mids: Vec<Arc<dyn VectorStore>> = Vec::new();
     let mut highs = Vec::new();
     for section in sections {
         match section {
             Section::Graph(g) => graphs.push(g),
             Section::Pca(p) => pca = Some(p),
             Section::Low(l) => lows.push(l),
+            Section::Mid(m) => mids.push(m),
             Section::High(h) => highs.push(h),
             Section::SegDir(_) => {}
         }
@@ -537,9 +516,23 @@ pub(crate) fn assemble_segmented(sections: Vec<Section>, map: ShardMap) -> Resul
         lows.len(),
         highs.len()
     );
+    // MIDQ is all-or-nothing: a bundle with mid tables for only some
+    // shards would make the cascade tier shard-dependent.
+    ensure!(
+        mids.is_empty() || mids.len() == s,
+        "segmented bundle holds {} MIDQ sections for {s} shards (must be 0 or {s})",
+        mids.len()
+    );
+    let mids: Vec<Option<Arc<dyn VectorStore>>> = if mids.is_empty() {
+        vec![None; s]
+    } else {
+        mids.into_iter().map(Some).collect()
+    };
     let pca = Arc::new(pca);
     let mut segments = Vec::with_capacity(s);
-    for (i, ((graph, low), high)) in graphs.into_iter().zip(lows).zip(highs).enumerate() {
+    for (i, (((graph, low), mid), high)) in
+        graphs.into_iter().zip(lows).zip(mids).zip(highs).enumerate()
+    {
         ensure!(
             graph.len() == map.shard_len(i),
             "shard {i}: graph holds {} nodes, directory says {}",
@@ -550,7 +543,11 @@ pub(crate) fn assemble_segmented(sections: Vec<Section>, map: ShardMap) -> Resul
         ensure!(graph.len() == low.len(), "shard {i}: graph/low-dim size mismatch");
         ensure!(pca.dim() == high.dim(), "shard {i}: PCA input dim != high-dim table dim");
         ensure!(pca.k() == low.dim(), "shard {i}: PCA output dim != low-dim store dim");
-        segments.push(Segment { graph: Arc::new(graph), high: Arc::new(high), low });
+        if let Some(m) = &mid {
+            ensure!(m.len() == high.len(), "shard {i}: mid/high-dim size mismatch");
+            ensure!(m.dim() == high.dim(), "shard {i}: MIDQ dim != high-dim table dim");
+        }
+        segments.push(Segment { graph: Arc::new(graph), high: Arc::new(high), low, mid });
     }
     Ok(SegmentedIndex { pca, segments, map })
 }
@@ -607,7 +604,7 @@ pub fn inspect_bundle(path: impl AsRef<Path>) -> Result<BundleInfo> {
         "unsupported bundle version {version}"
     );
     let n_sections = u32::from_le_bytes(head[8..12].try_into()?);
-    ensure!(n_sections as usize <= 2 + 3 * MAX_SHARDS, "implausible section count {n_sections}");
+    ensure!(n_sections as usize <= 2 + 4 * MAX_SHARDS, "implausible section count {n_sections}");
     let mut consumed = 12u64;
     let mut sections = Vec::with_capacity(n_sections as usize);
     let mut n_shards = 1usize;
@@ -843,20 +840,6 @@ mod tests {
         // Readable by the classic single-segment opener: no SEGD section.
         let b = open_single(&p).unwrap();
         assert_eq!(b.high.len(), 250);
-        std::fs::remove_file(&p).ok();
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_wrappers_still_open() {
-        // The pre-redesign entry points must stay functional until their
-        // removal — they are one-line shims over Bundle::open.
-        let s = stack(200);
-        let p = tmp("legacy.phnsw");
-        IndexBundle::save(&p, &s.graph, &s.pca, &s.low, &s.base).unwrap();
-        assert_eq!(super::open_bundle(&p).unwrap().len(), 200);
-        assert_eq!(super::open_bundle_with(&p, OpenOptions::default()).unwrap().len(), 200);
-        assert_eq!(IndexBundle::open(&p).unwrap().high.len(), 200);
         std::fs::remove_file(&p).ok();
     }
 

@@ -22,7 +22,5 @@ pub use artifacts::{ArtifactRegistry, Executable};
 pub use bundle::{
     inspect_bundle, save_segmented, Bundle, BundleInfo, IndexBundle, OpenOptions, SectionInfo,
 };
-#[allow(deprecated)]
-pub use bundle::{open_bundle, open_bundle_with, AnyBundle};
 pub use engine::XlaRerankEngine;
 pub use v3::{save_v3, save_v3_single};

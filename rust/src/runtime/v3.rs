@@ -19,29 +19,35 @@
 //! | `PCAM` | [`PcaModel::to_bytes`] (small; always decoded owned) |
 //! | `GRPH` | `HNS3` image — CSR arrays 64-byte aligned in place (`graph::serialize`) |
 //! | `LOWQ` | `F32P`/`SQ8P` — SIMD-padded rows, 64-byte-aligned payload (`store`) |
+//! | `MIDQ` | `SQ8P` — SQ8 codes of the *high*-dim rows (optional; staged-cascade mid stage) |
 //! | `HIGH` | `[u32 dim][u32 reserved][u64 n]` → pad 64 → `n × dim × f32-le` |
 //!
-//! The **single** flavor is `PCAM, GRPH, LOWQ, HIGH`; the **segmented**
-//! flavor leads with `SEGD, PCAM` then one `GRPH, LOWQ, HIGH` group per
-//! shard in shard order (flavor is decided by `SEGD`'s presence, as in
-//! v2). All integers are fixed-width little-endian, every array a
+//! The **single** flavor is `PCAM, GRPH, LOWQ[, MIDQ], HIGH`; the
+//! **segmented** flavor leads with `SEGD, PCAM` then one
+//! `GRPH, LOWQ[, MIDQ], HIGH` group per shard in shard order (flavor is
+//! decided by `SEGD`'s presence, as in v2). `MIDQ` is written
+//! all-or-nothing across shards and only by mid-stage builds; readers
+//! that predate it skip the unknown tag, so the section is purely
+//! additive. All integers are fixed-width little-endian, every array a
 //! reader hands to the kernels is 64-byte aligned absolutely
 //! (page-aligned section + 64-aligned internal offset), and section
 //! lengths are exact — padding lives *between* sections.
 //!
 //! [`open_v3`] is one parser with two residency modes: with `mmap` the
-//! GRPH/LOWQ/HIGH arrays stay views into the mapping (cold start is
-//! O(header): map, validate the directory and CSR offsets, go — the
+//! GRPH/LOWQ/MIDQ/HIGH arrays stay views into the mapping (cold start
+//! is O(header): map, validate the directory and CSR offsets, go — the
 //! dominant HIGH section is hinted `madvise(Random)` and faulted in on
-//! demand by the rerank, while GRPH/LOWQ get `WillNeed` readahead);
+//! demand by the rerank, while GRPH/LOWQ/MIDQ get `WillNeed` readahead
+//! — the mid table is dense sequential cascade input, not cold rerank
+//! data);
 //! without it the same views are copied into owned storage. Either way
 //! the search results are bitwise identical to a v2 decode of the same
 //! index, pinned by `tests/bundle_v3.rs`.
 
 use super::bundle::{
     assemble_segmented, assemble_single, decode_segdir, encode_segdir, Bundle, BundleInfo,
-    Section, SectionInfo, MAGIC, MAX_SHARDS, TAG_GRAPH, TAG_HIGH, TAG_LOW, TAG_PCA, TAG_SEGDIR,
-    VERSION_V3,
+    Section, SectionInfo, MAGIC, MAX_SHARDS, TAG_GRAPH, TAG_HIGH, TAG_LOW, TAG_MID, TAG_PCA,
+    TAG_SEGDIR, VERSION_V3,
 };
 use crate::dataset::VectorSet;
 use crate::graph::{serialize, HnswGraph};
@@ -166,18 +172,24 @@ impl V3Writer {
     }
 }
 
-/// Write one monolithic index in the v3 page-aligned layout.
+/// Write one monolithic index in the v3 page-aligned layout. `mid`
+/// (the SQ8-over-high-dim cascade table) adds an optional `MIDQ`
+/// section between `LOWQ` and `HIGH`.
 pub fn save_v3_single(
     path: impl AsRef<Path>,
     graph: &HnswGraph,
     pca: &PcaModel,
     low: &dyn VectorStore,
+    mid: Option<&dyn VectorStore>,
     high: &VectorSet,
 ) -> Result<()> {
-    let mut w = V3Writer::create(path.as_ref(), 4)?;
+    let mut w = V3Writer::create(path.as_ref(), 4 + usize::from(mid.is_some()))?;
     w.section(TAG_PCA, &pca.to_bytes())?;
     w.section(TAG_GRAPH, &serialize::to_v3_bytes(graph)?)?;
     w.section(TAG_LOW, &low.to_bytes_v3())?;
+    if let Some(m) = mid {
+        w.section(TAG_MID, &m.to_bytes_v3())?;
+    }
     w.section_high(high)?;
     w.finish()
 }
@@ -189,16 +201,24 @@ pub fn save_v3(path: impl AsRef<Path>, index: &SegmentedIndex) -> Result<()> {
     let s = index.n_segments();
     ensure!(s >= 1, "index holds no segments");
     ensure!(s <= MAX_SHARDS, "{s} shards exceeds the bundle cap {MAX_SHARDS}");
+    // MIDQ is all-or-nothing across shards: a partially-mid bundle would
+    // make the cascade tier shard-dependent, so mixed indexes are
+    // written mid-free.
+    let with_mid = index.segments.iter().all(|seg| seg.mid.is_some());
     if s == 1 {
         let seg = &index.segments[0];
-        return save_v3_single(path, &seg.graph, &index.pca, seg.low.as_ref(), &seg.high);
+        let mid = if with_mid { seg.mid.as_deref() } else { None };
+        return save_v3_single(path, &seg.graph, &index.pca, seg.low.as_ref(), mid, &seg.high);
     }
-    let mut w = V3Writer::create(path.as_ref(), 2 + 3 * s)?;
+    let mut w = V3Writer::create(path.as_ref(), 2 + (3 + usize::from(with_mid)) * s)?;
     w.section(TAG_SEGDIR, &encode_segdir(&index.map))?;
     w.section(TAG_PCA, &index.pca.to_bytes())?;
     for seg in &index.segments {
         w.section(TAG_GRAPH, &serialize::to_v3_bytes(&seg.graph)?)?;
         w.section(TAG_LOW, &seg.low.to_bytes_v3())?;
+        if with_mid {
+            w.section(TAG_MID, &seg.mid.as_ref().expect("with_mid checked").to_bytes_v3())?;
+        }
         w.section_high(&seg.high)?;
     }
     w.finish()
@@ -223,7 +243,7 @@ fn read_directory(map: &Mmap, path: &Path) -> Result<Vec<DirEntry>> {
     let version = u32::from_le_bytes(bytes[4..8].try_into()?);
     ensure!(version == VERSION_V3, "expected a v3 bundle, found version {version}");
     let n_sections = u32::from_le_bytes(bytes[8..12].try_into()?) as usize;
-    ensure!(n_sections <= 2 + 3 * MAX_SHARDS, "implausible section count {n_sections}");
+    ensure!(n_sections <= 2 + 4 * MAX_SHARDS, "implausible section count {n_sections}");
     let dir_end = HEADER + n_sections * DIR_ENTRY;
     ensure!(
         dir_end <= bytes.len(),
@@ -278,7 +298,7 @@ pub(crate) fn open_v3(path: &Path, mapped: bool) -> Result<Bundle> {
             let (off, len) = (e.offset as usize, e.len as usize);
             match &e.tag {
                 TAG_HIGH => map.advise(off, len, Advice::Random),
-                TAG_GRAPH | TAG_LOW => map.advise(off, len, Advice::WillNeed),
+                TAG_GRAPH | TAG_LOW | TAG_MID => map.advise(off, len, Advice::WillNeed),
                 _ => {}
             }
         }
@@ -293,6 +313,7 @@ pub(crate) fn open_v3(path: &Path, mapped: bool) -> Result<Bundle> {
             TAG_PCA => sections
                 .push(Section::Pca(PcaModel::from_bytes(&map.as_slice()[off..off + len])?)),
             TAG_LOW => sections.push(Section::Low(store_from_v3_section(&map, off, len, mapped)?)),
+            TAG_MID => sections.push(Section::Mid(store_from_v3_section(&map, off, len, mapped)?)),
             TAG_HIGH => sections.push(Section::High(decode_high_v3(&map, off, len, mapped)?)),
             TAG_SEGDIR => {
                 sections.push(Section::SegDir(decode_segdir(&map.as_slice()[off..off + len])?))

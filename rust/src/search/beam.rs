@@ -55,6 +55,8 @@ pub(crate) struct HopCounters {
     pub ksort: u32,
     /// High-dimensional distance computations.
     pub highdim: u32,
+    /// Mid-stage (MIDQ SQ8-over-high-dim) distance computations.
+    pub mid: u32,
     /// Visited-list lookups performed.
     pub visited_checks: u32,
 }
@@ -206,6 +208,7 @@ pub(crate) fn beam_search_layer<S: NeighborScorer>(
                 n_lowdim_dists: counters.lowdim,
                 n_ksort: counters.ksort,
                 n_highdim_dists: counters.highdim,
+                n_mid_dists: counters.mid,
                 n_visited_checks: counters.visited_checks,
                 n_f_inserts: beam.inserts,
                 n_f_removals: beam.removals,
@@ -251,7 +254,7 @@ impl NeighborScorer for HighDimScorer<'_> {
                 beam.admit(dn, nb);
             }
         }
-        HopCounters { lowdim: 0, ksort: 0, highdim, visited_checks: nbrs.len() as u32 }
+        HopCounters { lowdim: 0, ksort: 0, highdim, mid: 0, visited_checks: nbrs.len() as u32 }
     }
 }
 

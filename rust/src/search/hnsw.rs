@@ -165,6 +165,13 @@ impl AnnEngine for HnswSearcher {
     fn search_batch_req(&self, reqs: &[SearchRequest]) -> Vec<Vec<Neighbor>> {
         super::parallel_search_batch_req(self, reqs)
     }
+
+    fn search_batch_req_with_stats(
+        &self,
+        reqs: &[SearchRequest],
+    ) -> (Vec<Vec<Neighbor>>, SearchStats) {
+        super::parallel_search_batch_req_with_stats(self, reqs)
+    }
 }
 
 #[cfg(test)]

@@ -33,7 +33,9 @@ pub mod visited;
 pub use config::{PhnswParams, SearchParams};
 pub use hnsw::HnswSearcher;
 pub use phnsw::PhnswSearcher;
-pub use request::{IdFilter, RequestCore, SearchRequest, MAX_EF_BOOST};
+pub use request::{
+    IdFilter, QualityTier, RequestCore, SearchRequest, DEFAULT_RERANK_FRAC, MAX_EF_BOOST,
+};
 pub use stats::{HopEvent, SearchStats, SearchTrace};
 
 /// A search result: base-vector id plus its (squared) distance to the query.
@@ -71,6 +73,24 @@ pub trait AnnEngine: Send + Sync {
     /// coordinator's batch dispatch relies on that equivalence.
     fn search_batch_req(&self, reqs: &[SearchRequest]) -> Vec<Vec<Neighbor>> {
         reqs.iter().map(|r| self.search_req(r)).collect()
+    }
+    /// Serve a whole batch and fold every query's statistics into one
+    /// aggregate — the coordinator's dispatch path, which feeds the
+    /// per-stage rows-touched serve counters. Results must be bitwise
+    /// identical to [`Self::search_batch_req`]; the aggregate is an
+    /// element-wise sum, so overrides may execute in any order.
+    fn search_batch_req_with_stats(
+        &self,
+        reqs: &[SearchRequest],
+    ) -> (Vec<Vec<Neighbor>>, SearchStats) {
+        let mut agg = SearchStats::default();
+        let mut out = Vec::with_capacity(reqs.len());
+        for r in reqs {
+            let (res, stats) = self.search_req_with_stats(r);
+            agg.add(&stats);
+            out.push(res);
+        }
+        (out, agg)
     }
     /// Return the `ef` nearest neighbors of `query` (sorted ascending) —
     /// a default-knob request.
@@ -135,6 +155,7 @@ pub(crate) fn brute_force_allowed(
             n_lowdim_dists: 0,
             n_ksort: 0,
             n_highdim_dists: filter.n_allowed() as u32,
+            n_mid_dists: 0,
             n_visited_checks: filter.n_allowed() as u32,
             n_f_inserts: out.len() as u32,
             n_f_removals: 0,
@@ -225,6 +246,58 @@ where
         }
     });
     out
+}
+
+/// Data-parallel counterpart of [`parallel_search_batch_req`] that also
+/// folds per-query statistics into one aggregate. Chunk aggregates are
+/// summed in chunk order and every counter is an integer, so the result
+/// is independent of the worker schedule.
+pub(crate) fn parallel_search_batch_req_with_stats<E>(
+    engine: &E,
+    reqs: &[SearchRequest],
+) -> (Vec<Vec<Neighbor>>, SearchStats)
+where
+    E: AnnEngine + ?Sized,
+{
+    const MIN_QUERIES_PER_WORKER: usize = 4;
+    if reqs.len() < 2 * MIN_QUERIES_PER_WORKER {
+        let mut agg = SearchStats::default();
+        let out = reqs
+            .iter()
+            .map(|r| {
+                let (res, stats) = engine.search_req_with_stats(r);
+                agg.add(&stats);
+                res
+            })
+            .collect();
+        return (out, agg);
+    }
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(reqs.len() / MIN_QUERIES_PER_WORKER);
+    let chunk = reqs.len().div_ceil(workers);
+    let mut out: Vec<Vec<Neighbor>> = Vec::new();
+    out.resize_with(reqs.len(), Vec::new);
+    let mut chunk_stats: Vec<SearchStats> = vec![SearchStats::default(); out.chunks(chunk).len()];
+    std::thread::scope(|s| {
+        for ((rs, slots), agg) in
+            reqs.chunks(chunk).zip(out.chunks_mut(chunk)).zip(chunk_stats.iter_mut())
+        {
+            s.spawn(move || {
+                for (r, slot) in rs.iter().zip(slots.iter_mut()) {
+                    let (res, stats) = engine.search_req_with_stats(r);
+                    agg.add(&stats);
+                    *slot = res;
+                }
+            });
+        }
+    });
+    let mut agg = SearchStats::default();
+    for s in &chunk_stats {
+        agg.add(s);
+    }
+    (out, agg)
 }
 
 #[cfg(test)]

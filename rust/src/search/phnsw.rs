@@ -32,7 +32,7 @@
 use super::beam::{beam_search_layer, BeamSpec, BeamState, HopCounters, NeighborScorer};
 use super::config::PhnswParams;
 use super::dist::l2_sq;
-use super::request::SearchRequest;
+use super::request::{QualityTier, SearchRequest};
 use super::stats::{SearchStats, SearchTrace};
 use super::visited::VisitedSet;
 use super::{AnnEngine, Neighbor};
@@ -50,6 +50,8 @@ struct Scratch {
     q_pca: Vec<f32>,
     /// Store-side scratch: codec-domain query + gather block.
     store: StoreScratch,
+    /// Mid-stage (MIDQ) scratch: high-dim codec query + gather block.
+    mid_store: StoreScratch,
     /// Per-hop batched filter distances (one slot per neighbor).
     dists: Vec<f32>,
 }
@@ -61,6 +63,10 @@ pub struct PhnswSearcher {
     data_high: Arc<VectorSet>,
     /// The low-dim filter table (layout ③/④ payload) behind its codec.
     low: Arc<dyn VectorStore>,
+    /// Optional mid-stage table: SQ8 over the *high*-dimensional vectors
+    /// (the MIDQ bundle section). `None` disables the staged cascade —
+    /// `Staged`-tier requests silently degrade to `Exact`.
+    mid: Option<Arc<dyn VectorStore>>,
     pca: Arc<PcaModel>,
     params: PhnswParams,
     pool: Mutex<Vec<Scratch>>,
@@ -91,6 +97,15 @@ pub(crate) struct PcaFilterScorer<'a> {
     /// the survivors the high-dim check admitted during the previous hop.
     /// ∞ when no survivor was admitted (no pruning), which is safe.
     pub(crate) f_pca: f32,
+    /// Mid-stage (MIDQ) table: SQ8 over the high-dim vectors. `None`
+    /// runs the exact two-stage path, bitwise identical to pre-cascade.
+    pub(crate) mid: Option<&'a dyn VectorStore>,
+    /// Mid-stage scratch (codec-domain high-dim query, prepared once per
+    /// search by the caller when `mid` is set).
+    pub(crate) mid_scratch: &'a mut StoreScratch,
+    /// Fraction of filter survivors promoted to the f32 rerank when the
+    /// mid stage is active; clamped to [0, 1] by the caller.
+    pub(crate) rerank_frac: f32,
 }
 
 impl NeighborScorer for PcaFilterScorer<'_> {
@@ -117,7 +132,36 @@ impl NeighborScorer for PcaFilterScorer<'_> {
                 cpca.offer(d_low, e);
             }
         }
-        let survivors = cpca.into_sorted();
+        let mut survivors = cpca.into_sorted();
+        // Mid stage (Staged tier only): score every survivor against the
+        // SQ8 mid table in one batched pass and promote only the best
+        // `rerank_frac` fraction (minimum one) to the f32 rerank. Kept
+        // survivors stay in ascending-d_low order so the f_pca threshold
+        // semantics below are unchanged — the mid stage only shrinks the
+        // set that pays a full-width f32 row.
+        let mut mid_count = 0u32;
+        if let Some(mid) = self.mid {
+            let n = survivors.len();
+            let keep = ((n as f32 * self.rerank_frac).ceil() as usize).clamp(1, n);
+            if keep < n {
+                mid_count = n as u32;
+                let ids: Vec<u32> = survivors.iter().map(|&(_, m)| m).collect();
+                let mut mid_dists = vec![0f32; n];
+                mid.score_block(self.mid_scratch, &ids, &mut mid_dists);
+                // Rank survivor slots by mid distance (id tie-break keeps
+                // the cascade deterministic), keep the best, then restore
+                // slot order — slots were ascending by d_low.
+                let mut order: Vec<usize> = (0..n).collect();
+                order.sort_unstable_by(|&a, &b| {
+                    mid_dists[a]
+                        .total_cmp(&mid_dists[b])
+                        .then_with(|| survivors[a].1.cmp(&survivors[b].1))
+                });
+                order.truncate(keep);
+                order.sort_unstable();
+                survivors = order.into_iter().map(|i| survivors[i]).collect();
+            }
+        }
         // The ≤ k survivor rows are id-scattered across the high-dim
         // table; hint them now so the rerank loop's gathers land warm
         // (the hardware prefetcher sees no pattern in filter output).
@@ -151,6 +195,7 @@ impl NeighborScorer for PcaFilterScorer<'_> {
             lowdim: nbrs.len() as u32,
             ksort: 1,
             highdim,
+            mid: mid_count,
             visited_checks: survivors.len() as u32,
         }
     }
@@ -169,12 +214,31 @@ impl PhnswSearcher {
         pca: Arc<PcaModel>,
         params: PhnswParams,
     ) -> Self {
+        Self::with_stores(graph, data_high, low, None, pca, params)
+    }
+
+    /// Create a searcher over an explicit low-dim store plus an optional
+    /// mid-stage store (SQ8 quantization of the *high*-dim vectors, the
+    /// MIDQ bundle section). With `mid: None` the staged cascade is
+    /// unavailable and every request runs the exact two-stage path.
+    pub fn with_stores(
+        graph: Arc<HnswGraph>,
+        data_high: Arc<VectorSet>,
+        low: Arc<dyn VectorStore>,
+        mid: Option<Arc<dyn VectorStore>>,
+        pca: Arc<PcaModel>,
+        params: PhnswParams,
+    ) -> Self {
         assert_eq!(graph.len(), data_high.len(), "graph/corpus size mismatch");
         assert_eq!(data_high.len(), low.len(), "high/low corpus size mismatch");
         assert_eq!(pca.dim(), data_high.dim(), "PCA input dim mismatch");
         assert_eq!(pca.k(), low.dim(), "PCA output dim mismatch");
+        if let Some(m) = &mid {
+            assert_eq!(data_high.len(), m.len(), "high/mid corpus size mismatch");
+            assert_eq!(data_high.dim(), m.dim(), "mid store dim mismatch");
+        }
         params.validate().expect("invalid pHNSW params");
-        Self { graph, data_high, low, pca, params, pool: Mutex::new(Vec::new()) }
+        Self { graph, data_high, low, mid, pca, params, pool: Mutex::new(Vec::new()) }
     }
 
     /// Create a searcher from an f32 projection table. `data_low` must be
@@ -235,11 +299,17 @@ impl PhnswSearcher {
         &self.low
     }
 
+    /// The mid-stage store (SQ8 over the high-dim corpus), when present.
+    pub fn mid_store(&self) -> Option<&Arc<dyn VectorStore>> {
+        self.mid.as_ref()
+    }
+
     fn take_scratch(&self) -> Scratch {
         self.pool.lock().unwrap().pop().unwrap_or_else(|| Scratch {
             visited: VisitedSet::new(self.data_high.len()),
             q_pca: vec![0f32; self.pca.k()],
             store: StoreScratch::new(),
+            mid_store: StoreScratch::new(),
             dists: vec![0f32; self.graph.m0() + 1],
         })
     }
@@ -289,6 +359,22 @@ impl PhnswSearcher {
         ) {
             return out;
         }
+        // Resolve the cascade tier: `Staged` engages the mid stage only
+        // when a mid table exists and the fraction actually prunes —
+        // everything else (including a `Staged` request against an
+        // engine without MIDQ) runs the exact path, bitwise identical to
+        // pre-cascade behavior.
+        let (mid_ref, rerank_frac) = match req.tier {
+            QualityTier::Staged { rerank_frac } if self.mid.is_some() => {
+                let f = if rerank_frac.is_finite() { rerank_frac.clamp(0.0, 1.0) } else { 1.0 };
+                if f < 1.0 {
+                    (self.mid.as_deref(), f)
+                } else {
+                    (None, 1.0)
+                }
+            }
+            _ => (None, 1.0),
+        };
         let mut scratch = self.take_scratch();
         // Step 1 (Fig. 1(c)): project the query once, then transform it
         // into the store's codec domain (both transforms are per-query,
@@ -297,6 +383,10 @@ impl PhnswSearcher {
         self.pca.project(q, &mut q_pca);
         let mut store_scratch = std::mem::take(&mut scratch.store);
         self.low.prepare_query(&q_pca, &mut store_scratch);
+        let mut mid_scratch = std::mem::take(&mut scratch.mid_store);
+        if let Some(m) = mid_ref {
+            m.prepare_query(q, &mut mid_scratch);
+        }
         let mut dists = std::mem::take(&mut scratch.dists);
 
         let mut scorer = PcaFilterScorer {
@@ -307,6 +397,9 @@ impl PhnswSearcher {
             dists: &mut dists,
             k: self.params.k(0),
             f_pca: f32::INFINITY,
+            mid: mid_ref,
+            mid_scratch: &mut mid_scratch,
+            rerank_frac,
         };
         let ep = self.graph.entry_point();
         // Warm the entry point's top-layer adjacency while its seed
@@ -337,6 +430,7 @@ impl PhnswSearcher {
         );
         scratch.q_pca = q_pca;
         scratch.store = store_scratch;
+        scratch.mid_store = mid_scratch;
         scratch.dists = dists;
         self.put_scratch(scratch);
         let mut out: Vec<Neighbor> =
@@ -396,6 +490,13 @@ impl AnnEngine for PhnswSearcher {
 
     fn search_batch_req(&self, reqs: &[SearchRequest]) -> Vec<Vec<Neighbor>> {
         super::parallel_search_batch_req(self, reqs)
+    }
+
+    fn search_batch_req_with_stats(
+        &self,
+        reqs: &[SearchRequest],
+    ) -> (Vec<Vec<Neighbor>>, SearchStats) {
+        super::parallel_search_batch_req_with_stats(self, reqs)
     }
 }
 

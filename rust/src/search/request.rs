@@ -25,6 +25,81 @@ use std::sync::Arc;
 /// worst-case latency while holding recall at moderate selectivities.
 pub const MAX_EF_BOOST: usize = 16;
 
+/// Default fraction of PCA-filter survivors the staged cascade promotes
+/// to the f32 rerank — the serving sweet spot the benches pin (≥2× fewer
+/// f32 rows touched at recall@10 ≥ 0.85).
+pub const DEFAULT_RERANK_FRAC: f32 = 0.25;
+
+/// Per-request cascade depth: how many rerank stages a query pays.
+///
+/// `Exact` is today's two-stage path (PCA filter → f32 rerank of every
+/// survivor) and is **bitwise-pinned**: a request at the `Exact` tier is
+/// identical to a pre-cascade request at every layer. `Staged` inserts
+/// the MIDQ stage (SQ8 over the *high*-dimensional vectors): survivors
+/// are scored against the mid table first and only the top `rerank_frac`
+/// fraction proceeds to the f32 HIGH table — the tier serving defaults
+/// to, since fewer f32 rows touched means fewer page faults under mmap.
+/// Engines without a mid table degrade `Staged` to `Exact` silently.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum QualityTier {
+    /// Two-stage cascade: every PCA-filter survivor is reranked in f32.
+    /// The default — bitwise identical to pre-cascade behavior.
+    Exact,
+    /// Three-stage cascade: survivors are scored against the MIDQ table
+    /// and only the best `rerank_frac` fraction (clamped to (0, 1],
+    /// minimum one candidate) pays a full f32 row.
+    Staged {
+        /// Fraction of filter survivors promoted to the f32 rerank.
+        rerank_frac: f32,
+    },
+}
+
+impl QualityTier {
+    /// The serving default: staged at [`DEFAULT_RERANK_FRAC`].
+    pub fn staged_default() -> Self {
+        QualityTier::Staged { rerank_frac: DEFAULT_RERANK_FRAC }
+    }
+
+    /// Parse a CLI tier spec: `exact`, `staged` (at
+    /// [`DEFAULT_RERANK_FRAC`]), or `staged:<frac>` with a fraction in
+    /// (0, 1].
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "exact" => Ok(QualityTier::Exact),
+            "staged" => Ok(Self::staged_default()),
+            other => match other.strip_prefix("staged:") {
+                Some(raw) => {
+                    let f: f32 = raw
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("invalid rerank fraction {raw:?}: {e}"))?;
+                    anyhow::ensure!(
+                        f > 0.0 && f <= 1.0,
+                        "rerank fraction {f} outside (0, 1]"
+                    );
+                    Ok(QualityTier::Staged { rerank_frac: f })
+                }
+                None => anyhow::bail!(
+                    "unknown tier {other:?} (expected exact, staged, or staged:<frac>)"
+                ),
+            },
+        }
+    }
+
+    /// Short label for logs and JSON lines.
+    pub fn label(&self) -> &'static str {
+        match self {
+            QualityTier::Exact => "exact",
+            QualityTier::Staged { .. } => "staged",
+        }
+    }
+}
+
+impl Default for QualityTier {
+    fn default() -> Self {
+        QualityTier::Exact
+    }
+}
+
 /// A bitset predicate over corpus ids: `allows(id)` answers in O(1).
 ///
 /// Semantics are *result-side*: the beam search still traverses
@@ -147,12 +222,16 @@ pub struct SearchRequest<'a> {
     pub ef_override: Option<SearchParams>,
     /// Result-side id predicate (filtered ANN). Shared, immutable.
     pub filter: Option<Arc<IdFilter>>,
+    /// Cascade depth (rerank quality tier). Defaults to
+    /// [`QualityTier::Exact`], preserving the bitwise identity with the
+    /// knob-free path.
+    pub tier: QualityTier,
 }
 
 impl<'a> SearchRequest<'a> {
     /// Request with default knobs — equivalent to the plain `search` path.
     pub fn new(vector: &'a [f32]) -> Self {
-        Self { vector, topk: None, ef_override: None, filter: None }
+        Self { vector, topk: None, ef_override: None, filter: None, tier: QualityTier::Exact }
     }
 
     /// Set the per-request result count.
@@ -170,6 +249,12 @@ impl<'a> SearchRequest<'a> {
     /// Attach an id filter.
     pub fn with_filter(mut self, filter: Arc<IdFilter>) -> Self {
         self.filter = Some(filter);
+        self
+    }
+
+    /// Set the cascade quality tier.
+    pub fn with_tier(mut self, tier: QualityTier) -> Self {
+        self.tier = tier;
         self
     }
 
@@ -246,13 +331,15 @@ pub struct RequestCore {
     pub ef_override: Option<SearchParams>,
     /// Result-side id predicate (filtered ANN). Shared, immutable.
     pub filter: Option<Arc<IdFilter>>,
+    /// Cascade depth (rerank quality tier); defaults to `Exact`.
+    pub tier: QualityTier,
 }
 
 impl RequestCore {
     /// Core with default knobs — the owned analogue of
     /// [`SearchRequest::new`].
     pub fn new(vector: Vec<f32>) -> Self {
-        Self { vector, topk: None, ef_override: None, filter: None }
+        Self { vector, topk: None, ef_override: None, filter: None, tier: QualityTier::Exact }
     }
 
     /// Set the per-request result count.
@@ -273,6 +360,12 @@ impl RequestCore {
         self
     }
 
+    /// Set the cascade quality tier.
+    pub fn with_tier(mut self, tier: QualityTier) -> Self {
+        self.tier = tier;
+        self
+    }
+
     /// The engine-facing view: borrows the vector, clones the
     /// (Arc-cheap) knobs.
     pub fn as_request(&self) -> SearchRequest<'_> {
@@ -281,6 +374,7 @@ impl RequestCore {
             topk: self.topk,
             ef_override: self.ef_override.clone(),
             filter: self.filter.clone(),
+            tier: self.tier,
         }
     }
 }
@@ -386,6 +480,21 @@ mod tests {
         let base = SearchParams { ef_upper: 1, ef_l0: 10 };
         let plain = RequestCore::from(vec![0.0f32; 4]);
         assert_eq!(plain.as_request().effective_search(&base), base);
+    }
+
+    #[test]
+    fn quality_tier_parse_round_trips() {
+        assert_eq!(QualityTier::parse("exact").unwrap(), QualityTier::Exact);
+        assert_eq!(QualityTier::parse("staged").unwrap(), QualityTier::staged_default());
+        assert_eq!(
+            QualityTier::parse("staged:0.1").unwrap(),
+            QualityTier::Staged { rerank_frac: 0.1 }
+        );
+        assert_eq!(QualityTier::parse("staged:1.0").unwrap().label(), "staged");
+        assert_eq!(QualityTier::Exact.label(), "exact");
+        for bad in ["", "Staged", "staged:", "staged:0", "staged:1.5", "staged:x"] {
+            assert!(QualityTier::parse(bad).is_err(), "{bad:?} must not parse");
+        }
     }
 
     #[test]

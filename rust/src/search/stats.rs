@@ -23,6 +23,10 @@ pub struct HopEvent {
     /// High-dimensional distance computations (pHNSW: ≤ k survivors;
     /// HNSW: every unvisited neighbor).
     pub n_highdim_dists: u32,
+    /// Mid-stage (SQ8-over-high-dim) distance computations — the MIDQ
+    /// cascade stage between the PCA filter and the f32 rerank. Zero on
+    /// the `Exact` tier and on engines without a mid table.
+    pub n_mid_dists: u32,
     /// Visited-list lookups performed.
     pub n_visited_checks: u32,
     /// Insertions into the result list F.
@@ -46,6 +50,13 @@ pub struct SearchStats {
     pub ksort_calls: u64,
     /// High-dimensional distance computations.
     pub highdim_dists: u64,
+    /// Mid-stage (MIDQ) rows scored. Each mid distance touches one SQ8
+    /// row of the mid table; on the `Exact` tier this stays zero.
+    pub mid_rows_touched: u64,
+    /// Full-width f32 rows pulled from the HIGH table. Equal to
+    /// `highdim_dists` today, but named for what the cascade optimizes:
+    /// f32 row touches are the page-fault driver under mmap serving.
+    pub f32_rows_touched: u64,
     /// Visited-list lookups.
     pub visited_checks: u64,
     /// Insertions into F.
@@ -65,6 +76,8 @@ impl SearchStats {
         self.lowdim_dists += h.n_lowdim_dists as u64;
         self.ksort_calls += h.n_ksort as u64;
         self.highdim_dists += h.n_highdim_dists as u64;
+        self.mid_rows_touched += h.n_mid_dists as u64;
+        self.f32_rows_touched += h.n_highdim_dists as u64;
         self.visited_checks += h.n_visited_checks as u64;
         self.f_inserts += h.n_f_inserts as u64;
         self.f_removals += h.n_f_removals as u64;
@@ -78,6 +91,8 @@ impl SearchStats {
         self.lowdim_dists += o.lowdim_dists;
         self.ksort_calls += o.ksort_calls;
         self.highdim_dists += o.highdim_dists;
+        self.mid_rows_touched += o.mid_rows_touched;
+        self.f32_rows_touched += o.f32_rows_touched;
         self.visited_checks += o.visited_checks;
         self.f_inserts += o.f_inserts;
         self.f_removals += o.f_removals;
@@ -124,6 +139,7 @@ mod tests {
             n_lowdim_dists: nn,
             n_ksort: 1,
             n_highdim_dists: hd,
+            n_mid_dists: 0,
             n_visited_checks: hd,
             n_f_inserts: hd / 2,
             n_f_removals: hd / 4,

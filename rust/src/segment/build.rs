@@ -28,6 +28,10 @@ pub struct Segment {
     pub high: Arc<VectorSet>,
     /// SQ8-quantized low-dim filter store (per-shard quantization grid).
     pub low: Arc<dyn VectorStore>,
+    /// Mid-stage cascade table: SQ8 over the shard's *high*-dim rows
+    /// (per-shard quantization grid, like `low`). Present only for
+    /// mid-stage builds; `None` disables the staged cascade.
+    pub mid: Option<Arc<dyn VectorStore>>,
 }
 
 /// A fully built segmented index: `S` independent segments plus the one
@@ -112,6 +116,7 @@ pub fn build_segmented_with_pca(
     let map = ShardMap::new(spec.assignment, data.len(), spec.n_shards);
     let s_total = spec.n_shards;
     let workers = spec.build_threads.clamp(1, s_total);
+    let mid_stage = spec.mid_stage;
 
     // Dynamic shard queue: workers pull the next shard index from a
     // shared counter and report finished segments over a channel. The
@@ -137,7 +142,13 @@ pub fn build_segmented_with_pca(
                 let graph = build(&high, &cfg);
                 let low: Arc<dyn VectorStore> =
                     Arc::new(Sq8Store::from_set(&pca.project_set(&high)));
-                let seg = Segment { graph: Arc::new(graph), high: Arc::new(high), low };
+                // Mid stage: quantize the shard's own high-dim rows, so
+                // the affine grid adapts to each shard's density (the
+                // live tier instead derives its grid from the PCA model
+                // for insert-time determinism).
+                let mid: Option<Arc<dyn VectorStore>> =
+                    mid_stage.then(|| Arc::new(Sq8Store::from_set(&high)) as _);
+                let seg = Segment { graph: Arc::new(graph), high: Arc::new(high), low, mid };
                 if tx.send((s, seg)).is_err() {
                     break;
                 }
@@ -165,7 +176,12 @@ mod tests {
     }
 
     fn spec(s: usize, t: usize) -> SegmentSpec {
-        SegmentSpec { n_shards: s, build_threads: t, assignment: ShardAssignment::RoundRobin }
+        SegmentSpec {
+            n_shards: s,
+            build_threads: t,
+            assignment: ShardAssignment::RoundRobin,
+            ..Default::default()
+        }
     }
 
     #[test]

@@ -59,10 +59,11 @@ impl SegmentedEngine {
             .segments
             .iter()
             .map(|seg| {
-                PhnswSearcher::with_store(
+                PhnswSearcher::with_stores(
                     seg.graph.clone(),
                     seg.high.clone(),
                     seg.low.clone(),
+                    seg.mid.clone(),
                     index.pca.clone(),
                     params.clone(),
                 )
@@ -238,6 +239,16 @@ impl AnnEngine for SegmentedEngine {
         (self.merge(per_shard, self.merge_len(req), req.topk), agg)
     }
 
+    /// Batch-with-stats path: queries run in parallel through the
+    /// single-request shard fan (which already sums per-shard stats), so
+    /// the aggregate equals sequential dispatch exactly.
+    fn search_batch_req_with_stats(
+        &self,
+        reqs: &[SearchRequest],
+    ) -> (Vec<Vec<Neighbor>>, SearchStats) {
+        crate::search::parallel_search_batch_req_with_stats(self, reqs)
+    }
+
     /// Whole-batch fan: each shard sees the *entire* batch through its
     /// own data-parallel `search_batch_req` override, shards overlapped
     /// on scoped threads exactly like the single-query fan, then results
@@ -310,6 +321,7 @@ mod tests {
             n_shards: shards,
             build_threads: 2,
             assignment: ShardAssignment::RoundRobin,
+            ..Default::default()
         };
         let idx = build_segmented(&base, &bc, 8, 7, &spec);
         (idx.engine(PhnswParams::default()), queries)

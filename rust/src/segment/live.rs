@@ -45,7 +45,7 @@
 //! making view publication single-writer.
 
 use super::build::shard_seed;
-use super::memtable::{affine_from_pca, MemSegment};
+use super::memtable::{affine_from_pca, high_affine_from_pca, MemSegment};
 use crate::dataset::VectorSet;
 use crate::graph::build::{insert_node, BuildConfig, DistCache};
 use crate::graph::HnswGraph;
@@ -106,6 +106,9 @@ struct SealedShard {
     graph: Arc<HnswGraph>,
     high: Arc<VectorSet>,
     low: Arc<dyn VectorStore>,
+    /// SQ8 mid table over the high-dim rows (MIDQ), persisted with the
+    /// shard so staged-tier searches work across restarts.
+    mid: Arc<dyn VectorStore>,
     searcher: PhnswSearcher,
     /// Where the shard is persisted, when a data dir is configured.
     path: Option<PathBuf>,
@@ -420,10 +423,12 @@ impl LiveEngine {
         let graph = Arc::new(parts.graph);
         let high = Arc::new(parts.high);
         let low: Arc<dyn VectorStore> = Arc::new(parts.low);
-        let searcher = PhnswSearcher::with_store(
+        let mid: Arc<dyn VectorStore> = Arc::new(parts.mid);
+        let searcher = PhnswSearcher::with_stores(
             graph.clone(),
             high.clone(),
             low.clone(),
+            Some(mid.clone()),
             self.pca.clone(),
             self.cfg.params.clone(),
         );
@@ -432,6 +437,7 @@ impl LiveEngine {
             graph,
             high,
             low,
+            mid,
             searcher,
             path,
             tomb_cache: Mutex::new(None),
@@ -453,7 +459,14 @@ impl LiveEngine {
         *self.view.lock().unwrap() = next.clone();
         self.seals.fetch_add(1, Ordering::Relaxed);
         if let Some(p) = &shard.path {
-            self.persist_shard(p, &shard.graph, shard.low.as_ref(), &shard.high, &shard.ids);
+            self.persist_shard(
+                p,
+                &shard.graph,
+                shard.low.as_ref(),
+                shard.mid.as_ref(),
+                &shard.high,
+                &shard.ids,
+            );
         }
         self.write_manifest(&next);
         self.compact_locked(&next, self.cfg.compact_fanin);
@@ -489,10 +502,13 @@ impl LiveEngine {
         path: &std::path::Path,
         graph: &HnswGraph,
         low: &dyn VectorStore,
+        mid: &dyn VectorStore,
         high: &VectorSet,
         ids: &[u32],
     ) {
-        if let Err(e) = crate::runtime::save_v3_single(path, graph, &self.pca, low, high) {
+        if let Err(e) =
+            crate::runtime::save_v3_single(path, graph, &self.pca, low, Some(mid), high)
+        {
             log::warn!("failed to persist sealed shard {}: {e:#}", path.display());
             return;
         }
@@ -583,19 +599,26 @@ impl LiveEngine {
             graph.freeze();
             let (min, scale) = affine_from_pca(&self.pca);
             let mut low = Sq8Store::with_affine(self.pca.k(), min, scale);
+            let (hmin, hscale) = high_affine_from_pca(&self.pca);
+            let mut mid = Sq8Store::with_affine(self.pca.dim(), hmin, hscale);
             let mut buf = vec![0f32; self.pca.k()];
             for row in high.iter() {
                 self.pca.project(row, &mut buf);
                 low.push_row(&buf);
+                // Same frozen PCA-derived affine the memtable encodes
+                // with, so compaction re-encodes rows bitwise identically.
+                mid.push_row(row);
             }
             let path = self.shard_path("compact", view.epoch);
             let graph = Arc::new(graph);
             let high = Arc::new(high);
             let low: Arc<dyn VectorStore> = Arc::new(low);
-            let searcher = PhnswSearcher::with_store(
+            let mid: Arc<dyn VectorStore> = Arc::new(mid);
+            let searcher = PhnswSearcher::with_stores(
                 graph.clone(),
                 high.clone(),
                 low.clone(),
+                Some(mid.clone()),
                 self.pca.clone(),
                 self.cfg.params.clone(),
             );
@@ -604,6 +627,7 @@ impl LiveEngine {
                 graph,
                 high,
                 low,
+                mid,
                 searcher,
                 path,
                 tomb_cache: Mutex::new(None),
@@ -639,7 +663,14 @@ impl LiveEngine {
         // files — no published view references them anymore.
         if let Some(shard) = &compacted {
             if let Some(p) = &shard.path {
-                self.persist_shard(p, &shard.graph, shard.low.as_ref(), &shard.high, &shard.ids);
+                self.persist_shard(
+                    p,
+                    &shard.graph,
+                    shard.low.as_ref(),
+                    shard.mid.as_ref(),
+                    &shard.high,
+                    &shard.ids,
+                );
             }
         }
         for s in &folded {
@@ -698,6 +729,7 @@ impl LiveEngine {
                 topk: req.topk,
                 ef_override: req.ef_override.clone(),
                 filter: local_filter,
+                tier: req.tier,
             };
             let found = match stats.as_deref_mut() {
                 Some(agg) => {
@@ -726,14 +758,14 @@ impl LiveEngine {
         let mem_filter: Option<&dyn Fn(u32) -> bool> =
             if mem_tombed || req.filter.is_some() { Some(&pred) } else { None };
         let mut trace = stats.as_ref().map(|_| SearchTrace::new());
-        let found =
-            view.mem.search(
-                req.vector,
-                req.topk,
-                req.ef_override.as_ref(),
-                mem_filter,
-                trace.as_mut(),
-            );
+        let found = view.mem.search(
+            req.vector,
+            req.topk,
+            req.ef_override.as_ref(),
+            mem_filter,
+            req.tier,
+            trace.as_mut(),
+        );
         if let (Some(agg), Some(t)) = (stats, trace) {
             agg.add(&t.stats());
         }
@@ -761,6 +793,13 @@ impl AnnEngine for LiveEngine {
 
     fn search_batch_req(&self, reqs: &[SearchRequest]) -> Vec<Vec<Neighbor>> {
         crate::search::parallel_search_batch_req(self, reqs)
+    }
+
+    fn search_batch_req_with_stats(
+        &self,
+        reqs: &[SearchRequest],
+    ) -> (Vec<Vec<Neighbor>>, SearchStats) {
+        crate::search::parallel_search_batch_req_with_stats(self, reqs)
     }
 }
 

@@ -48,7 +48,9 @@ use crate::search::dist::l2_sq;
 use crate::search::phnsw::PcaFilterScorer;
 use crate::search::stats::SearchTrace;
 use crate::search::visited::VisitedSet;
-use crate::search::{IdFilter, Neighbor, PhnswParams, SearchParams, SearchRequest};
+use crate::search::{
+    IdFilter, Neighbor, PhnswParams, QualityTier, SearchParams, SearchRequest,
+};
 use crate::store::{Sq8Store, StoreScratch, VectorStore};
 use std::sync::{Arc, RwLock};
 
@@ -88,6 +90,47 @@ pub(crate) fn affine_from_pca(pca: &PcaModel) -> (Vec<f32>, Vec<f32>) {
     (min, scale)
 }
 
+/// Derive the memtable's *high*-dimensional (MIDQ) SQ8 affine params from
+/// the frozen PCA model, so the mid table needs no corpus scan either:
+/// input dimension `d` has mean `mean_d` and variance
+/// `Σ_r λ_r·c_{r,d}² + residual/dim` — the kept components' contribution
+/// plus an isotropic share of the variance PCA discarded — giving the
+/// same `±4σ_d` code range the low-dim derivation uses. Like
+/// [`affine_from_pca`], the params depend only on the shared frozen
+/// model, so memtable inserts, seals, and compaction rebuilds all encode
+/// bitwise identically.
+pub(crate) fn high_affine_from_pca(pca: &PcaModel) -> (Vec<f32>, Vec<f32>) {
+    let dim = pca.dim();
+    let kept: f64 = pca.eigenvalues().iter().map(|&e| e.max(0.0)).sum();
+    let ratio = pca.explained_variance_ratio();
+    let residual = if ratio.is_finite() && ratio > 0.0 && ratio <= 1.0 && dim > 0 {
+        ((kept / ratio - kept) / dim as f64).max(0.0)
+    } else {
+        0.0
+    };
+    let mut min = Vec::with_capacity(dim);
+    let mut scale = Vec::with_capacity(dim);
+    for d in 0..dim {
+        let mut var = residual;
+        for (r, &ev) in pca.eigenvalues().iter().enumerate() {
+            let c = pca.components()[r * dim + d] as f64;
+            var += ev.max(0.0) * c * c;
+        }
+        let sigma = var.sqrt() as f32;
+        let mean = pca.mean()[d];
+        if sigma.is_finite() && sigma > 0.0 {
+            min.push(mean - 4.0 * sigma);
+            scale.push(8.0 * sigma / 255.0);
+        } else {
+            // Degenerate input dimension: constant at its mean — code 0
+            // decodes back to exactly that value.
+            min.push(mean);
+            scale.push(1.0);
+        }
+    }
+    (min, scale)
+}
+
 /// The contents of a sealed memtable, handed to the sealer: the frozen
 /// CSR graph plus the exact high/low stores the memtable was serving.
 /// Freezing preserves neighbor order, so a search against these parts is
@@ -96,6 +139,8 @@ pub(crate) struct SealedParts {
     pub graph: HnswGraph,
     pub high: VectorSet,
     pub low: Sq8Store,
+    /// SQ8 mid table over the high-dim rows (the MIDQ section).
+    pub mid: Sq8Store,
 }
 
 struct MemInner {
@@ -105,6 +150,9 @@ struct MemInner {
     high: VectorSet,
     /// SQ8-encoded PCA projections (filter table), frozen affine params.
     low: Sq8Store,
+    /// SQ8-encoded high-dim rows (mid rerank table), frozen affine
+    /// params derived from the PCA model — the live tier's MIDQ.
+    mid: Sq8Store,
     /// Builder distance cache, parallel to the staging adjacency.
     cache: DistCache,
     /// Builder-side visited set (insert runs under the write lock, so
@@ -136,10 +184,12 @@ impl MemSegment {
         params.validate().expect("invalid pHNSW params");
         let ml = build.ml.unwrap_or(1.0 / (build.m as f64).ln());
         let (min, scale) = affine_from_pca(&pca);
+        let (hmin, hscale) = high_affine_from_pca(&pca);
         let inner = MemInner {
             graph: HnswGraph::empty(build.m, build.m * 2),
             high: VectorSet::new(pca.dim()),
             low: Sq8Store::with_affine(pca.k(), min, scale),
+            mid: Sq8Store::with_affine(pca.dim(), hmin, hscale),
             cache: DistCache::new(),
             visited: VisitedSet::new(0),
             rng: Pcg32::new(seed),
@@ -171,6 +221,7 @@ impl MemSegment {
         let inner = &mut *guard;
         inner.high.push(v);
         inner.low.push_row(&q_pca);
+        inner.mid.push_row(v);
         inner.visited.grow(inner.high.len());
         let level = inner.rng.hnsw_level(self.ml, self.build.max_level);
         let MemInner { graph, high, cache, visited, .. } = inner;
@@ -195,6 +246,7 @@ impl MemSegment {
         topk: Option<usize>,
         ef_override: Option<&SearchParams>,
         local_filter: Option<&dyn Fn(u32) -> bool>,
+        tier: QualityTier,
         mut trace: Option<&mut SearchTrace>,
     ) -> Vec<Neighbor> {
         assert_eq!(vector.len(), self.pca.dim(), "query dimensionality mismatch");
@@ -209,6 +261,7 @@ impl MemSegment {
             topk,
             ef_override: ef_override.cloned(),
             filter: filter.clone(),
+            tier,
         };
         let mut eff = req.effective_search(&self.params.search);
         eff.ef_upper = eff.ef_upper.min(n);
@@ -229,6 +282,23 @@ impl MemSegment {
         let mut store_scratch = StoreScratch::new();
         inner.low.prepare_query(&q_pca, &mut store_scratch);
         let mut dists = vec![0f32; inner.graph.m0() + 1];
+        // Resolve the cascade tier exactly like the sealed searcher does,
+        // so insert→seal answers stay bitwise identical at every tier.
+        let (mid_ref, rerank_frac) = match tier {
+            QualityTier::Staged { rerank_frac } => {
+                let f = if rerank_frac.is_finite() { rerank_frac.clamp(0.0, 1.0) } else { 1.0 };
+                if f < 1.0 {
+                    (Some(&inner.mid as &dyn VectorStore), f)
+                } else {
+                    (None, 1.0)
+                }
+            }
+            QualityTier::Exact => (None, 1.0),
+        };
+        let mut mid_scratch = StoreScratch::new();
+        if let Some(m) = mid_ref {
+            m.prepare_query(vector, &mut mid_scratch);
+        }
         let mut scorer = PcaFilterScorer {
             q: vector,
             data_high: &inner.high,
@@ -237,6 +307,9 @@ impl MemSegment {
             dists: &mut dists,
             k: self.params.k(0),
             f_pca: f32::INFINITY,
+            mid: mid_ref,
+            mid_scratch: &mut mid_scratch,
+            rerank_frac,
         };
         let ep = inner.graph.entry_point();
         let mut entry = vec![(l2_sq(vector, inner.high.row(ep as usize)), ep)];
@@ -288,11 +361,12 @@ impl MemSegment {
         let mut graph = guard.graph.clone();
         let high = guard.high.clone();
         let low = guard.low.clone();
+        let mid = guard.mid.clone();
         drop(guard);
         // Freeze preserves per-node neighbor order, so searches against
         // the sealed CSR form are bitwise what the staging form answered.
         graph.freeze();
-        Some(SealedParts { graph, high, low })
+        Some(SealedParts { graph, high, low, mid })
     }
 }
 
@@ -347,7 +421,7 @@ mod tests {
             mem.insert(row).unwrap();
         }
         let live: Vec<Vec<Neighbor>> =
-            queries.iter().map(|q| mem.search(q, Some(10), None, None, None)).collect();
+            queries.iter().map(|q| mem.search(q, Some(10), None, None, QualityTier::Exact, None)).collect();
         let parts = mem.seal().unwrap();
         let searcher = PhnswSearcher::with_store(
             Arc::new(parts.graph),
@@ -373,7 +447,7 @@ mod tests {
         // Copy-on-write: the rows stay in place so pre-seal views keep
         // serving them; the segment is retired by dropping it.
         assert_eq!(mem.len(), 1, "seal must not drain the serving rows");
-        let hit = mem.search(base.row(0), Some(1), None, None, None);
+        let hit = mem.search(base.row(0), Some(1), None, None, QualityTier::Exact, None);
         assert_eq!(hit[0].id, 0, "sealed memtable keeps serving searches");
     }
 
@@ -386,10 +460,10 @@ mod tests {
         }
         // Query with a base row so its own id is the top hit, then ban it.
         let q = base.row(7);
-        let unfiltered = mem.search(q, Some(5), None, None, None);
+        let unfiltered = mem.search(q, Some(5), None, None, QualityTier::Exact, None);
         assert_eq!(unfiltered[0].id, 7);
         let banned: &dyn Fn(u32) -> bool = &|id| id != 7;
-        let filtered = mem.search(q, Some(5), None, Some(banned), None);
+        let filtered = mem.search(q, Some(5), None, Some(banned), QualityTier::Exact, None);
         assert!(filtered.iter().all(|n| n.id != 7), "banned id leaked: {filtered:?}");
         assert!(!filtered.is_empty());
     }

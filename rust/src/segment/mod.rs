@@ -176,11 +176,21 @@ pub struct SegmentSpec {
     pub assignment: ShardAssignment,
     /// Max concurrently building shards (clamped to `n_shards`).
     pub build_threads: usize,
+    /// Also fit the mid-stage cascade table per shard (SQ8 over the
+    /// shard's *high*-dim rows — the v3 `MIDQ` section), enabling
+    /// `Staged`-tier serving. Off by default: the table costs 1 B per
+    /// high-dim component of bundle size and build-time corpus scans.
+    pub mid_stage: bool,
 }
 
 impl Default for SegmentSpec {
     fn default() -> Self {
-        Self { n_shards: 1, assignment: ShardAssignment::RoundRobin, build_threads: 1 }
+        Self {
+            n_shards: 1,
+            assignment: ShardAssignment::RoundRobin,
+            build_threads: 1,
+            mid_stage: false,
+        }
     }
 }
 

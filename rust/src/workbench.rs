@@ -182,6 +182,23 @@ impl Workbench {
         )
     }
 
+    /// pHNSW searcher with the mid-stage cascade table fitted (SQ8 over
+    /// the high-dim corpus) — `Staged`-tier requests engage the
+    /// three-stage cascade; `Exact` requests stay bitwise identical to
+    /// [`Workbench::phnsw`].
+    pub fn phnsw_mid(&self, params: PhnswParams) -> PhnswSearcher {
+        let low: Arc<dyn VectorStore> = Arc::new(Sq8Store::from_set(&self.base_low));
+        let mid: Arc<dyn VectorStore> = Arc::new(Sq8Store::from_set(&self.base));
+        PhnswSearcher::with_stores(
+            self.graph.clone(),
+            self.base.clone(),
+            low,
+            Some(mid),
+            self.pca.clone(),
+            params,
+        )
+    }
+
     /// Measure recall@k + wall-clock QPS of an engine over the query set.
     pub fn evaluate(&self, engine: &dyn AnnEngine, k: usize) -> EngineEval {
         let t0 = Instant::now();
@@ -236,10 +253,24 @@ impl Workbench {
     /// Save the assembled index in the v3 page-aligned `.phnsw` layout —
     /// the same sections as [`Workbench::save_bundle`], re-encoded so a
     /// server can serve them zero-copy from a memory mapping
-    /// (`phnsw serve --mmap`).
-    pub fn save_bundle_v3(&self, path: impl AsRef<std::path::Path>) -> crate::Result<()> {
+    /// (`phnsw serve --mmap`). With `mid_stage` the bundle also carries
+    /// the `MIDQ` cascade table (SQ8 over the high-dim corpus), enabling
+    /// `Staged`-tier serving.
+    pub fn save_bundle_v3(
+        &self,
+        path: impl AsRef<std::path::Path>,
+        mid_stage: bool,
+    ) -> crate::Result<()> {
         let low = Sq8Store::from_set(&self.base_low);
-        crate::runtime::save_v3_single(path, &self.graph, &self.pca, &low, &self.base)
+        let mid = mid_stage.then(|| Sq8Store::from_set(&self.base));
+        crate::runtime::save_v3_single(
+            path,
+            &self.graph,
+            &self.pca,
+            &low,
+            mid.as_ref().map(|m| m as &dyn VectorStore),
+            &self.base,
+        )
     }
 
     /// Build a segmented index over the workbench corpus, sharing the

@@ -36,6 +36,7 @@ fn build_index(f: &Fixture, shards: usize) -> SegmentedIndex {
         n_shards: shards,
         build_threads: shards.min(2),
         assignment: ShardAssignment::RoundRobin,
+        ..Default::default()
     };
     build_segmented(&f.base, &bc, DIM_LOW, PCA_SEED, &spec)
 }

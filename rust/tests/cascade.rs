@@ -1,0 +1,369 @@
+//! Multi-stage rerank cascade acceptance tests: the `Exact` tier is
+//! bitwise-pinned to pre-cascade behavior (with and without a MIDQ
+//! table, monolithic and segmented, pre- and post-v3-roundtrip), the
+//! `Staged` tier holds the recall@10 floor while cutting f32 rerank
+//! rows, mid-less engines degrade `Staged` silently, the live tier
+//! quantizes at insert time so sealing keeps the cascade available, and
+//! the coordinator carries the tier end to end into the serve counters.
+
+use phnsw::coordinator::{Query, Server, ServerConfig};
+use phnsw::dataset::synthetic::{generate, SyntheticConfig};
+use phnsw::dataset::{ground_truth, VectorSet};
+use phnsw::graph::build::BuildConfig;
+use phnsw::metrics::recall_at_k;
+use phnsw::pca::PcaModel;
+use phnsw::runtime::{inspect_bundle, save_v3, Bundle, OpenOptions};
+use phnsw::search::{
+    AnnEngine, PhnswParams, QualityTier, SearchParams, SearchRequest, SearchStats,
+};
+use phnsw::segment::{
+    build_segmented, LiveConfig, LiveEngine, SegmentSpec, SegmentedIndex, ShardAssignment,
+};
+use phnsw::workbench::{Workbench, WorkbenchConfig};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const DIM_LOW: usize = 8;
+const PCA_SEED: u64 = 7;
+
+fn wb() -> Workbench {
+    Workbench::assemble(WorkbenchConfig {
+        n_base: 4_000,
+        n_queries: 80,
+        m: 8,
+        ef_construction: 64,
+        ..WorkbenchConfig::default()
+    })
+    .expect("workbench")
+}
+
+/// Serving-grade beam for the recall-floor tests; the cascade tier is
+/// the variable under test, not the beam width.
+fn serving_params() -> PhnswParams {
+    PhnswParams { search: SearchParams { ef_upper: 1, ef_l0: 64 }, ..Default::default() }
+}
+
+fn staged(frac: f32) -> QualityTier {
+    QualityTier::Staged { rerank_frac: frac }
+}
+
+/// Sum an engine's per-query stats over the workload at one tier.
+fn rows_at_tier(
+    engine: &dyn AnnEngine,
+    queries: &VectorSet,
+    tier: QualityTier,
+) -> (Vec<Vec<u32>>, SearchStats) {
+    let mut agg = SearchStats::default();
+    let mut ids = Vec::with_capacity(queries.len());
+    for q in queries.iter() {
+        let (res, st) =
+            engine.search_req_with_stats(&SearchRequest::new(q).with_topk(10).with_tier(tier));
+        agg.add(&st);
+        ids.push(res.into_iter().map(|n| n.id).collect());
+    }
+    (ids, agg)
+}
+
+// ---- Exact tier: bitwise-pinned ---------------------------------------
+
+#[test]
+fn exact_tier_bitwise_identical_with_and_without_mid_table() {
+    let w = wb();
+    let params = PhnswParams::default();
+    let plain = w.phnsw(params.clone());
+    let mid = w.phnsw_mid(params);
+    for qi in 0..w.queries.len() {
+        let q = w.queries.row(qi);
+        // The knob-free path never sees the mid table.
+        assert_eq!(plain.search(q), mid.search(q), "query {qi}: plain search diverged");
+        // Default tier IS Exact — pinned explicitly and via default knobs.
+        let dflt = SearchRequest::new(q).with_topk(10);
+        let exact = SearchRequest::new(q).with_topk(10).with_tier(QualityTier::Exact);
+        let want = plain.search_req(&dflt);
+        assert_eq!(mid.search_req(&dflt), want, "query {qi}: default tier diverged");
+        assert_eq!(mid.search_req(&exact), want, "query {qi}: Exact tier diverged");
+    }
+    // Exact never pays a mid-table row, even when the table exists.
+    let (_, st) = rows_at_tier(&mid, &w.queries, QualityTier::Exact);
+    assert_eq!(st.mid_rows_touched, 0, "Exact touched the mid table");
+    assert!(st.f32_rows_touched > 0);
+}
+
+#[test]
+fn staged_degrades_to_exact_without_mid_and_at_unit_fraction() {
+    let w = wb();
+    let params = PhnswParams::default();
+    let plain = w.phnsw(params.clone());
+    let mid = w.phnsw_mid(params);
+    for qi in 0..20 {
+        let q = w.queries.row(qi);
+        let exact = SearchRequest::new(q).with_topk(10);
+        // Mid-less engine: Staged is served, silently, as Exact.
+        assert_eq!(
+            plain.search_req(&exact.clone().with_tier(QualityTier::staged_default())),
+            plain.search_req(&exact),
+            "query {qi}: staged-on-midless must equal exact"
+        );
+        // Fraction 1.0 keeps every survivor — the mid pass is pure cost,
+        // so the engine must skip it and stay bitwise exact.
+        assert_eq!(
+            mid.search_req(&exact.clone().with_tier(staged(1.0))),
+            mid.search_req(&exact),
+            "query {qi}: staged:1.0 must equal exact"
+        );
+    }
+    let (_, st) = rows_at_tier(&plain, &w.queries, QualityTier::staged_default());
+    assert_eq!(st.mid_rows_touched, 0, "mid-less engine counted mid rows");
+    let (_, st) = rows_at_tier(&mid, &w.queries, staged(1.0));
+    assert_eq!(st.mid_rows_touched, 0, "unit fraction must bypass the mid pass");
+}
+
+// ---- Staged tier: recall floor + f32 row reduction --------------------
+
+#[test]
+fn staged_holds_recall_floor_at_quarter_and_tenth_fraction() {
+    let w = wb();
+    let mid = w.phnsw_mid(serving_params());
+    for frac in [0.25f32, 0.1] {
+        let (ids, st) = rows_at_tier(&mid, &w.queries, staged(frac));
+        let r = recall_at_k(&ids, &w.gt, 10);
+        assert!(r >= 0.85, "staged recall@10 at frac {frac}: {r:.3}");
+        assert!(st.mid_rows_touched > 0, "frac {frac} never engaged the mid stage");
+    }
+}
+
+#[test]
+fn staged_cuts_f32_rows_touched_at_least_2x() {
+    let w = wb();
+    let mid = w.phnsw_mid(serving_params());
+    let (_, exact) = rows_at_tier(&mid, &w.queries, QualityTier::Exact);
+    let (_, st) = rows_at_tier(&mid, &w.queries, QualityTier::staged_default());
+    assert!(st.f32_rows_touched > 0);
+    assert!(
+        st.f32_rows_touched * 2 <= exact.f32_rows_touched,
+        "staged f32 rows {} vs exact {} — cascade must cut ≥2×",
+        st.f32_rows_touched,
+        exact.f32_rows_touched
+    );
+    assert!(st.mid_rows_touched > 0);
+    assert_eq!(exact.mid_rows_touched, 0);
+}
+
+// ---- Segmented + v3 bundle roundtrip ----------------------------------
+
+struct Fixture {
+    base: Arc<VectorSet>,
+    queries: VectorSet,
+    gt: Vec<Vec<u32>>,
+}
+
+fn fixture(n: usize, nq: usize) -> Fixture {
+    let cfg = SyntheticConfig { n_base: n, n_queries: nq, ..SyntheticConfig::tiny() };
+    let (base, queries) = generate(&cfg);
+    let gt = ground_truth(&base, &queries, 10);
+    Fixture { base: Arc::new(base), queries, gt }
+}
+
+fn build_index(f: &Fixture, shards: usize, mid_stage: bool) -> SegmentedIndex {
+    let bc = BuildConfig { m: 8, ef_construction: 100, ..Default::default() };
+    let spec = SegmentSpec {
+        n_shards: shards,
+        build_threads: shards.min(2),
+        assignment: ShardAssignment::RoundRobin,
+        mid_stage,
+    };
+    build_segmented(&f.base, &bc, DIM_LOW, PCA_SEED, &spec)
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("phnsw_cascade_{}_{name}.phnsw", std::process::id()))
+}
+
+#[test]
+fn segmented_exact_parity_with_and_without_mid_stage() {
+    let f = fixture(1_200, 20);
+    // Seeded builds are deterministic, so the only difference between the
+    // two indexes is the presence of the MIDQ tables.
+    let with_mid = build_index(&f, 3, true).engine(PhnswParams::default());
+    let without = build_index(&f, 3, false).engine(PhnswParams::default());
+    for qi in 0..f.queries.len() {
+        let q = f.queries.row(qi);
+        let req = SearchRequest::new(q).with_topk(10);
+        assert_eq!(
+            with_mid.search_req(&req),
+            without.search_req(&req),
+            "query {qi}: Exact tier must ignore the mid tables"
+        );
+    }
+    // The fan-out engine sums per-shard stats; staged must engage the mid
+    // stage and shrink the f32 bill across the whole fan.
+    let (_, exact) = rows_at_tier(&with_mid, &f.queries, QualityTier::Exact);
+    let (_, st) = rows_at_tier(&with_mid, &f.queries, QualityTier::staged_default());
+    assert_eq!(exact.mid_rows_touched, 0);
+    assert!(st.mid_rows_touched > 0, "segmented staged never touched MIDQ");
+    assert!(
+        st.f32_rows_touched < exact.f32_rows_touched,
+        "segmented staged f32 rows {} not below exact {}",
+        st.f32_rows_touched,
+        exact.f32_rows_touched
+    );
+}
+
+#[test]
+fn v3_roundtrip_preserves_cascade_in_both_residency_modes() {
+    let f = fixture(1_600, 25);
+    let idx = build_index(&f, 4, true);
+    let params = PhnswParams::default();
+    let pre = idx.engine(params.clone());
+    let (before_exact, _) = rows_at_tier(&pre, &f.queries, QualityTier::Exact);
+    let (before_staged, _) = rows_at_tier(&pre, &f.queries, QualityTier::staged_default());
+
+    let path = tmp("seg4_mid");
+    save_v3(&path, &idx).unwrap();
+
+    // Directory: SEGD + PCAM + 4×(GRPH, LOWQ, MIDQ, HIGH), page-aligned.
+    let info = inspect_bundle(&path).unwrap();
+    assert_eq!(info.sections.len(), 2 + 4 * 4, "mid-stage shard carries 4 sections");
+    assert_eq!(info.sections.iter().filter(|s| s.tag == "MIDQ").count(), 4);
+    for s in &info.sections {
+        assert!(s.page_aligned, "section {} at {} must be page-aligned", s.tag, s.offset);
+    }
+
+    for (label, mmap) in [("owned", false), ("mmap", true)] {
+        let any = Bundle::open(&path, OpenOptions::new().mmap(mmap)).unwrap();
+        let engine = any.engine(params.clone());
+        let (after_exact, _) = rows_at_tier(engine.as_ref(), &f.queries, QualityTier::Exact);
+        let (after_staged, st) =
+            rows_at_tier(engine.as_ref(), &f.queries, QualityTier::staged_default());
+        assert_eq!(before_exact, after_exact, "{label}: Exact diverged across roundtrip");
+        assert_eq!(before_staged, after_staged, "{label}: Staged diverged across roundtrip");
+        assert!(st.mid_rows_touched > 0, "{label}: reopened bundle never engaged MIDQ");
+        let r = recall_at_k(&after_staged, &f.gt, 10);
+        assert!(r >= 0.85, "{label}: staged recall@10 after roundtrip: {r:.3}");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn v3_single_flavor_carries_midq_section() {
+    let f = fixture(800, 5);
+    let idx = build_index(&f, 1, true);
+    let path = tmp("mono_mid");
+    save_v3(&path, &idx).unwrap();
+    let info = inspect_bundle(&path).unwrap();
+    assert_eq!((info.version, info.flavor), (3, "single"));
+    assert_eq!(info.sections.len(), 5, "PCAM,GRPH,LOWQ,MIDQ,HIGH");
+    assert!(info.sections.iter().any(|s| s.tag == "MIDQ"));
+    // A mid-less build of the same corpus stays at 4 sections — the tail
+    // of the format is unchanged when the stage is off.
+    let plain = tmp("mono_plain");
+    save_v3(&plain, &build_index(&f, 1, false)).unwrap();
+    assert_eq!(inspect_bundle(&plain).unwrap().sections.len(), 4);
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&plain).ok();
+}
+
+// ---- Live tier: insert-time quantization survives sealing -------------
+
+#[test]
+fn live_staged_serves_across_insert_and_seal() {
+    let n = 1_500usize;
+    let (base, queries) =
+        generate(&SyntheticConfig { n_base: n, n_queries: 30, seed: 0xCA5C_ADE1, ..Default::default() });
+    let mut sample = VectorSet::new(base.dim());
+    for i in 0..base.len().min(1_024) {
+        sample.push(base.row(i));
+    }
+    let pca = Arc::new(PcaModel::fit(&sample, 15, 7));
+    let live = LiveEngine::new(
+        pca,
+        LiveConfig {
+            seal_threshold: 256,
+            background: false,
+            build: BuildConfig { m: 8, ef_construction: 64, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    let tier = QualityTier::staged_default();
+    for i in 0..n {
+        let id = live.insert(base.row(i));
+        // Staged self-query against the memtable: the row quantizes into
+        // the mid table at insert time, so the cascade must find it
+        // immediately, before any seal.
+        let res = live.search_req(
+            &SearchRequest::new(base.row(i)).with_topk(1).with_tier(tier),
+        );
+        assert_eq!(res[0].id, id, "insert {i} invisible to the staged tier");
+    }
+    assert!(live.flush(), "tail memtable was non-empty");
+    assert!(live.stats().seals >= 5, "stream never crossed seal boundaries");
+
+    // Post-seal: every row now lives in a sealed shard whose MIDQ table
+    // was carried over from the memtable — staged keeps the recall floor
+    // and actually engages the mid stage.
+    let ef = SearchParams { ef_upper: 1, ef_l0: 32 };
+    let gt = ground_truth(&base, &queries, 10);
+    let mut agg_exact = SearchStats::default();
+    let mut agg_staged = SearchStats::default();
+    let mut ids = Vec::with_capacity(queries.len());
+    for q in queries.iter() {
+        let (_, st) = live.search_req_with_stats(
+            &SearchRequest::new(q).with_topk(10).with_ef(ef.clone()),
+        );
+        agg_exact.add(&st);
+        let (res, st) = live.search_req_with_stats(
+            &SearchRequest::new(q).with_topk(10).with_ef(ef.clone()).with_tier(tier),
+        );
+        agg_staged.add(&st);
+        ids.push(res.into_iter().map(|nb| nb.id).collect::<Vec<u32>>());
+    }
+    let r = recall_at_k(&ids, &gt, 10);
+    assert!(r >= 0.85, "live staged recall@10 after sealing: {r:.3}");
+    assert_eq!(agg_exact.mid_rows_touched, 0, "live Exact touched MIDQ");
+    assert!(agg_staged.mid_rows_touched > 0, "sealed shards lost their mid tables");
+    assert!(
+        agg_staged.f32_rows_touched < agg_exact.f32_rows_touched,
+        "live staged f32 rows {} not below exact {}",
+        agg_staged.f32_rows_touched,
+        agg_exact.f32_rows_touched
+    );
+}
+
+// ---- Coordinator: the tier travels end to end -------------------------
+
+#[test]
+fn coordinator_carries_tier_and_counts_rerank_rows() {
+    let w = wb();
+    let params = PhnswParams::default();
+    let server = Server::builder()
+        .config(ServerConfig { workers: 2, ..Default::default() })
+        .engine("phnsw", Arc::new(w.phnsw_mid(params.clone())))
+        .start()
+        .unwrap();
+    let h = server.handle();
+    let direct = w.phnsw_mid(params);
+    for qi in 0..30 {
+        let q = w.queries.row(qi);
+        let res = h
+            .query_blocking(
+                Query::new(q.to_vec()).with_topk(10).with_tier(QualityTier::staged_default()),
+            )
+            .unwrap();
+        let want: Vec<u32> = direct
+            .search_req(
+                &SearchRequest::new(q).with_topk(10).with_tier(QualityTier::staged_default()),
+            )
+            .iter()
+            .map(|nb| nb.id)
+            .collect();
+        let got: Vec<u32> = res.neighbors.iter().map(|nb| nb.id).collect();
+        assert_eq!(got, want, "query {qi}: served staged result diverged from direct");
+    }
+    // The dispatch path folded per-batch SearchStats into the serve
+    // counters — the observability contract of the cascade.
+    let stats = server.stats();
+    assert!(stats.mid_rows_touched() > 0, "serve counters missed the mid stage");
+    assert!(stats.f32_rows_touched() > 0);
+    assert!(stats.render().contains("rerank rows: mid="), "render lost the rows line");
+    server.shutdown();
+}

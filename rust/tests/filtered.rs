@@ -78,7 +78,12 @@ fn results_only_ever_contain_allowed_ids() {
         &f.bc,
         DIM_LOW,
         PCA_SEED,
-        &SegmentSpec { n_shards: 3, build_threads: 2, assignment: ShardAssignment::RoundRobin },
+        &SegmentSpec {
+            n_shards: 3,
+            build_threads: 2,
+            assignment: ShardAssignment::RoundRobin,
+            ..Default::default()
+        },
     );
     let seg = idx.engine(PhnswParams::default());
     let engines: [&dyn AnnEngine; 3] = [&mono, &plain, &seg];
@@ -139,7 +144,12 @@ fn unfiltered_default_request_is_bitwise_identical_for_segmented_and_batch() {
         &f.bc,
         DIM_LOW,
         PCA_SEED,
-        &SegmentSpec { n_shards: 4, build_threads: 2, assignment: ShardAssignment::RoundRobin },
+        &SegmentSpec {
+            n_shards: 4,
+            build_threads: 2,
+            assignment: ShardAssignment::RoundRobin,
+            ..Default::default()
+        },
     );
     let seg = idx.engine(PhnswParams::default());
     let reqs: Vec<SearchRequest> = f.queries.iter().map(SearchRequest::new).collect();
@@ -172,7 +182,12 @@ fn filtered_recall_floor_segmented() {
         &f.bc,
         DIM_LOW,
         PCA_SEED,
-        &SegmentSpec { n_shards: 4, build_threads: 4, assignment: ShardAssignment::RoundRobin },
+        &SegmentSpec {
+            n_shards: 4,
+            build_threads: 4,
+            assignment: ShardAssignment::RoundRobin,
+            ..Default::default()
+        },
     );
     let seg = idx.engine(PhnswParams::default());
     let filter = Arc::new(IdFilter::random(f.base.len(), 0.1, 22));
@@ -193,6 +208,7 @@ fn segmented_filtered_parity_s1_vs_s4() {
                 n_shards: shards,
                 build_threads: 2,
                 assignment: ShardAssignment::RoundRobin,
+                ..Default::default()
             },
         )
     };

@@ -33,7 +33,12 @@ fn fixture(n: usize, nq: usize) -> Fixture {
 }
 
 fn spec(s: usize, t: usize) -> SegmentSpec {
-    SegmentSpec { n_shards: s, build_threads: t, assignment: ShardAssignment::RoundRobin }
+    SegmentSpec {
+        n_shards: s,
+        build_threads: t,
+        assignment: ShardAssignment::RoundRobin,
+        ..Default::default()
+    }
 }
 
 fn assert_graphs_equal(a: &HnswGraph, b: &HnswGraph, label: &str) {
@@ -144,7 +149,7 @@ fn parallel_build_is_deterministic_across_thread_counts() {
                 &f.bc,
                 DIM_LOW,
                 PCA_SEED,
-                &SegmentSpec { n_shards: 4, build_threads: threads, assignment },
+                &SegmentSpec { n_shards: 4, build_threads: threads, assignment, ..Default::default() },
             )
         };
         let t1 = mk(1);

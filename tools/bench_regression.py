@@ -21,6 +21,7 @@ import sys
 
 RETENTION = 0.75  # fresh speedup must keep >= 75% of the committed one
 FLOOR = 1.5  # ... unless it still clears the absolute acceptance floor
+CASCADE_FLOOR = 2.0  # staged tier must cut f32 rerank rows at least 2x
 
 
 def load(path):
@@ -51,6 +52,23 @@ def main():
         for m in missing:
             print(f"  - {m}")
         sys.exit("error: bundle cold-start entries missing from bench snapshot")
+
+    # The cascade reduction is a deterministic row-count ratio, not a
+    # timing, so it gates on every variant — scalar hosts included.
+    for which, doc in (("committed", committed), ("fresh", fresh)):
+        red = doc["entries"].get("cascade_f32_rows_reduction")
+        if red is None:
+            sys.exit(f"error: {which} snapshot is missing cascade_f32_rows_reduction")
+        if red < CASCADE_FLOOR:
+            sys.exit(
+                f"error: {which} cascade_f32_rows_reduction {red:.2f}x "
+                f"below the {CASCADE_FLOOR}x floor"
+            )
+    print(
+        "  cascade_f32_rows_reduction      committed "
+        f"{committed['entries']['cascade_f32_rows_reduction']:6.2f}x   "
+        f"fresh {fresh['entries']['cascade_f32_rows_reduction']:6.2f}x   ok"
+    )
 
     variant = fresh.get("kernel_variant", "unknown")
     if variant == "scalar":
