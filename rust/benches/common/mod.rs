@@ -177,14 +177,49 @@ impl Snapshot {
         s
     }
 
+    /// One-line JSONL form of the snapshot (the history-log record).
+    pub fn to_jsonl_line(&self) -> String {
+        let mut s = format!(
+            "{{\"bench\":\"{}\",\"git_sha\":\"{}\",\"date\":\"{}\",\"kernel_variant\":\"{}\",\"quick\":{},\"entries\":{{",
+            self.bench,
+            git_sha(),
+            iso_utc_date(),
+            self.kernel_variant,
+            quick_mode()
+        );
+        for (i, (name, v)) in self.entries.iter().enumerate() {
+            let v = if v.is_finite() { *v } else { 0.0 };
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("\"{name}\":{v:.3}"));
+        }
+        s.push_str("}}");
+        s
+    }
+
     /// Write the snapshot to `PHNSW_BENCH_OUT` (default
     /// `BENCH_<bench>.json` in the working directory — the repo root
-    /// under `cargo bench`). Returns the path written.
+    /// under `cargo bench`) and append one JSONL record to the sibling
+    /// `<stem>.history.jsonl` — the full measurement log, where the
+    /// snapshot file itself only ever holds the latest run. Returns the
+    /// snapshot path written.
     pub fn write(&self) -> String {
         let path = std::env::var("PHNSW_BENCH_OUT")
             .unwrap_or_else(|_| format!("BENCH_{}.json", self.bench));
         std::fs::write(&path, self.to_json()).expect("write bench snapshot");
-        eprintln!("[bench] snapshot written to {path}");
+        let history = match path.strip_suffix(".json") {
+            Some(stem) => format!("{stem}.history.jsonl"),
+            None => format!("{path}.history.jsonl"),
+        };
+        use std::io::Write as _;
+        std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&history)
+            .and_then(|mut f| writeln!(f, "{}", self.to_jsonl_line()))
+            .expect("append bench history");
+        eprintln!("[bench] snapshot written to {path} (history: {history})");
         path
     }
 }

@@ -425,5 +425,102 @@ fn main() {
         );
     }
 
+    println!("locality reorder (hub-first relabeling vs corpus order):");
+    // The same corpus built twice — corpus-order labels vs the hub-first
+    // relabeling — on identical graph parameters, so every delta below
+    // is pure byte layout. Warm searches measure cache locality of the
+    // owned tables; the mmap first-touch pair measures how many pages
+    // one cold query faults in (HIGH is madvise(Random), so only rows
+    // the rerank actually reads become resident).
+    {
+        use phnsw::graph::ReorderMode;
+        use phnsw::runtime::{save_v3, Bundle, OpenOptions};
+        let spec_hub = SegmentSpec { reorder: ReorderMode::HubBfs, ..SegmentSpec::new(1, 1) };
+        let idx_id = build_segmented(&seg_base, &bc, 15, 3, &SegmentSpec::new(1, 1));
+        let idx_hub = build_segmented(&seg_base, &bc, 15, 3, &spec_hub);
+        let eng_id = idx_id.engine(PhnswParams::default());
+        let eng_hub = idx_hub.engine(PhnswParams::default());
+        // Relabeling must be invisible in the results before it is worth
+        // timing.
+        for j in 0..nq.min(16) {
+            let a: Vec<u32> = eng_id.search(w.queries.row(j)).iter().map(|n| n.id).collect();
+            let b: Vec<u32> = eng_hub.search(w.queries.row(j)).iter().map(|n| n.id).collect();
+            assert_eq!(a, b, "hub-first build served different ids for query {j}");
+        }
+        let mut ri = 0usize;
+        let ns_id = snap.time(
+            "reorder_search_ns_identity",
+            "phnsw.search corpus-order build (warm)",
+            it(2_000).max(200),
+            || {
+                ri = (ri + 1) % nq;
+                std::hint::black_box(eng_id.search(w.queries.row(ri)));
+            },
+        );
+        let ns_hub = snap.time(
+            "reorder_search_ns_hub",
+            "phnsw.search hub-first build (warm)",
+            it(2_000).max(200),
+            || {
+                ri = (ri + 1) % nq;
+                std::hint::black_box(eng_hub.search(w.queries.row(ri)));
+            },
+        );
+        snap.record("reorder_qps_identity", 1e9 / ns_id);
+        snap.record("reorder_qps_hub", 1e9 / ns_hub);
+        snap.record("reorder_warm_speedup", ns_id / ns_hub);
+
+        let dir = std::env::temp_dir();
+        let p_id = dir.join(format!("phnsw_bench_{}_reorder_id.phnsw", std::process::id()));
+        let p_hub = dir.join(format!("phnsw_bench_{}_reorder_hub.phnsw", std::process::id()));
+        save_v3(&p_id, &idx_id).expect("write identity bench bundle");
+        save_v3(&p_hub, &idx_hub).expect("write hub-first bench bundle");
+        let mut first_touch = |label: &str, name_ms: &str, name_bytes: &str,
+                               path: &std::path::Path|
+         -> f64 {
+            let rss0 = common::resident_bytes();
+            let any =
+                Bundle::open(path, OpenOptions::new().mmap(true)).expect("open bench bundle");
+            let engine = any.engine(PhnswParams::default());
+            let t0 = std::time::Instant::now();
+            std::hint::black_box(engine.search(w.queries.row(0)));
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            let bytes = match (rss0, common::resident_bytes()) {
+                (Some(a), Some(b)) => b.saturating_sub(a) as f64,
+                _ => 0.0,
+            };
+            println!(
+                "{{\"bench\":\"{label}\",\"first_query_ms\":{ms:.3},\"first_touch_bytes\":{bytes:.0}}}"
+            );
+            snap.record(name_ms, ms);
+            snap.record(name_bytes, bytes);
+            bytes
+        };
+        let b_id = first_touch(
+            "reorder mmap first touch identity",
+            "reorder_mmap_first_query_ms_identity",
+            "reorder_mmap_first_touch_bytes_identity",
+            &p_id,
+        );
+        let b_hub = first_touch(
+            "reorder mmap first touch hub-bfs",
+            "reorder_mmap_first_query_ms_hub",
+            "reorder_mmap_first_touch_bytes_hub",
+            &p_hub,
+        );
+        let reduction = if b_hub > 0.0 { b_id / b_hub } else { 1.0 };
+        snap.record("reorder_first_touch_reduction", reduction);
+        println!(
+            "  warm: {:.0} ns corpus-order vs {:.0} ns hub-first ({:.2}x); cold first touch {:.0} B vs {:.0} B ({reduction:.2}x fewer faulted bytes)",
+            ns_id,
+            ns_hub,
+            ns_id / ns_hub,
+            b_id,
+            b_hub
+        );
+        std::fs::remove_file(&p_id).ok();
+        std::fs::remove_file(&p_hub).ok();
+    }
+
     snap.write();
 }

@@ -17,6 +17,55 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+/// How the generator picks *which* query vector each request carries.
+///
+/// Production query streams are head-heavy: a few hot queries (and the
+/// graph neighborhoods they walk) dominate. `Zipf` reproduces that
+/// shape, which is what makes locality effects (hub-first reordering,
+/// warm page residency) visible in a load run; `Uniform` is the legacy
+/// every-row-equally-likely workload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum QuerySkew {
+    /// Every query row equally likely.
+    Uniform,
+    /// Query rank `r` (0-based) drawn with probability ∝ `1/(r+1)^s`.
+    Zipf(f64),
+}
+
+impl QuerySkew {
+    /// Parse a CLI value: `uniform` | `zipf` (s = 1) | `zipf:<s>`.
+    pub fn parse(raw: &str) -> crate::Result<Self> {
+        match raw {
+            "uniform" => Ok(Self::Uniform),
+            "zipf" => Ok(Self::Zipf(1.0)),
+            other => match other.strip_prefix("zipf:") {
+                Some(s) => {
+                    let s: f64 = s
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("invalid zipf exponent {s:?}: {e}"))?;
+                    anyhow::ensure!(
+                        s.is_finite() && s > 0.0,
+                        "zipf exponent must be finite and > 0, got {s}"
+                    );
+                    Ok(Self::Zipf(s))
+                }
+                None => anyhow::bail!(
+                    "unknown query skew {other:?} (expected uniform | zipf | zipf:<s>)"
+                ),
+            },
+        }
+    }
+
+    /// Display label (`uniform` | `zipf:<s>`), echoed in the serve JSON
+    /// lines so a logged run records which workload shape produced it.
+    pub fn label(&self) -> String {
+        match self {
+            Self::Uniform => "uniform".into(),
+            Self::Zipf(s) => format!("zipf:{s}"),
+        }
+    }
+}
+
 /// Per-request knob distributions. Each knob is drawn uniformly from its
 /// choice list per request — a weighted distribution is expressed by
 /// repeating entries. The default mix is the legacy workload: topk 10,
@@ -30,6 +79,8 @@ pub struct RequestMix {
     pub ef_l0: Vec<Option<usize>>,
     /// Filter selectivity choices; entries `>= 1.0` mean unfiltered.
     pub selectivity: Vec<f64>,
+    /// Which query vector each request carries.
+    pub query_skew: QuerySkew,
     /// The engine's configured beam widths: an `ef_l0` override is
     /// resolved against these (so `ef_upper` — and anything else the
     /// engine was tuned with — survives the override). Engines replace
@@ -44,6 +95,7 @@ impl Default for RequestMix {
             topk: vec![10],
             ef_l0: vec![None],
             selectivity: vec![1.0],
+            query_skew: QuerySkew::Uniform,
             base_ef: SearchParams::default(),
         }
     }
@@ -62,11 +114,13 @@ impl RequestMix {
         }
     }
 
-    /// Materialize the mix against a corpus of `n` rows: one shared
-    /// [`IdFilter`] is built per sub-1.0 selectivity entry (seeded from
-    /// `seed`), so sampling a request is O(1) — no per-request corpus
-    /// scan.
-    pub fn prepare(&self, corpus_n: usize, seed: u64) -> PreparedMix {
+    /// Materialize the mix against a corpus of `corpus_n` rows and a
+    /// query set of `n_queries` vectors: one shared [`IdFilter`] is
+    /// built per sub-1.0 selectivity entry (seeded from `seed`) and the
+    /// zipf cumulative-weight table is precomputed, so sampling a
+    /// request is O(1) knobs + O(log n) query pick — no per-request
+    /// corpus scan.
+    pub fn prepare(&self, corpus_n: usize, n_queries: usize, seed: u64) -> PreparedMix {
         assert!(!self.topk.is_empty() && !self.ef_l0.is_empty() && !self.selectivity.is_empty());
         let filters = self
             .selectivity
@@ -84,11 +138,25 @@ impl RequestMix {
                 }
             })
             .collect();
+        let query_cdf = match self.query_skew {
+            QuerySkew::Uniform => None,
+            QuerySkew::Zipf(s) => {
+                let mut cdf = Vec::with_capacity(n_queries);
+                let mut total = 0.0f64;
+                for r in 0..n_queries {
+                    total += 1.0 / ((r + 1) as f64).powf(s);
+                    cdf.push(total);
+                }
+                Some(cdf)
+            }
+        };
         PreparedMix {
             topk: self.topk.clone(),
             ef_l0: self.ef_l0.clone(),
             base_ef: self.base_ef.clone(),
             filters,
+            n_queries,
+            query_cdf,
         }
     }
 }
@@ -100,6 +168,11 @@ pub struct PreparedMix {
     ef_l0: Vec<Option<usize>>,
     base_ef: SearchParams,
     filters: Vec<Option<Arc<IdFilter>>>,
+    /// Query-set size the skew table spans.
+    n_queries: usize,
+    /// Zipf cumulative weights (unnormalized, monotone); `None` =
+    /// uniform.
+    query_cdf: Option<Vec<f64>>,
 }
 
 impl PreparedMix {
@@ -113,6 +186,22 @@ impl PreparedMix {
             q.core.filter = Some(f.clone());
         }
         q
+    }
+
+    /// Draw which query-set row the next request carries, honoring the
+    /// mix's [`QuerySkew`]. Panics if the mix was prepared over an empty
+    /// query set.
+    pub fn sample_query_index(&self, rng: &mut Pcg32) -> usize {
+        assert!(self.n_queries > 0, "mix prepared over an empty query set");
+        match &self.query_cdf {
+            None => rng.range(0, self.n_queries),
+            Some(cdf) => {
+                let total = *cdf.last().expect("non-empty cdf");
+                let u = rng.f64() * total;
+                // First rank whose cumulative weight covers the draw.
+                cdf.partition_point(|&c| c < u).min(self.n_queries - 1)
+            }
+        }
     }
 }
 
@@ -216,7 +305,7 @@ pub fn run_open_loop(handle: &ServerHandle, queries: &VectorSet, cfg: &LoadConfi
         assert!(leg.insert_fraction + leg.delete_fraction <= 1.0, "ingest fractions exceed 1");
     }
     let mut rng = Pcg32::new(cfg.seed);
-    let mix = cfg.mix.prepare(cfg.corpus_n, cfg.seed ^ 0x4D49_5846); // "MIXF"
+    let mix = cfg.mix.prepare(cfg.corpus_n, queries.len(), cfg.seed ^ 0x4D49_5846); // "MIXF"
     let mut inflight: Vec<(Instant, mpsc::Receiver<QueryResult>)> = Vec::with_capacity(cfg.total);
     let mut rejected = 0usize;
     let mut filtered = 0usize;
@@ -278,7 +367,7 @@ pub fn run_open_loop(handle: &ServerHandle, queries: &VectorSet, cfg: &LoadConfi
                 continue;
             }
         }
-        let qi = rng.range(0, queries.len());
+        let qi = mix.sample_query_index(&mut rng);
         let mut q = mix.sample(&mut rng, Query::new(queries.row(qi).to_vec()));
         q.engine = cfg.engine.clone();
         filtered += q.core.filter.is_some() as usize;
@@ -469,8 +558,45 @@ mod tests {
     }
 
     #[test]
+    fn query_skew_parses_and_labels() {
+        assert_eq!(QuerySkew::parse("uniform").unwrap(), QuerySkew::Uniform);
+        assert_eq!(QuerySkew::parse("zipf").unwrap(), QuerySkew::Zipf(1.0));
+        assert_eq!(QuerySkew::parse("zipf:1.5").unwrap(), QuerySkew::Zipf(1.5));
+        assert!(QuerySkew::parse("zipf:0").is_err());
+        assert!(QuerySkew::parse("zipf:nope").is_err());
+        assert!(QuerySkew::parse("pareto").is_err());
+        assert_eq!(QuerySkew::Zipf(1.5).label(), "zipf:1.5");
+        assert_eq!(QuerySkew::Uniform.label(), "uniform");
+    }
+
+    #[test]
+    fn zipf_skew_concentrates_on_head_queries_deterministically() {
+        let mix = RequestMix { query_skew: QuerySkew::Zipf(1.2), ..RequestMix::default() }
+            .prepare(0, 64, 5);
+        let draw = |seed: u64| -> Vec<usize> {
+            let mut rng = Pcg32::new(seed);
+            (0..2_000).map(|_| mix.sample_query_index(&mut rng)).collect()
+        };
+        let drawn = draw(3);
+        assert_eq!(drawn, draw(3), "same seed, same query stream");
+        assert!(drawn.iter().all(|&qi| qi < 64));
+        // Rank 0 must far exceed its uniform share (2000/64 ≈ 31) and the
+        // stream must still reach the tail.
+        let head = drawn.iter().filter(|&&qi| qi == 0).count();
+        assert!(head > 150, "head rank drawn only {head}× — not zipf-shaped");
+        let distinct: std::collections::HashSet<_> = drawn.iter().collect();
+        assert!(distinct.len() > 16, "tail never sampled ({} distinct)", distinct.len());
+
+        let uni = RequestMix::default().prepare(0, 64, 5);
+        let mut rng = Pcg32::new(3);
+        let spread: Vec<usize> = (0..2_000).map(|_| uni.sample_query_index(&mut rng)).collect();
+        let head_uni = spread.iter().filter(|&&qi| qi == 0).count();
+        assert!(head_uni < 100, "uniform skew drew rank 0 {head_uni}× of 2000");
+    }
+
+    #[test]
     fn prepared_mix_sampling_is_deterministic_and_in_range() {
-        let mix = RequestMix::serving().prepare(100, 9);
+        let mix = RequestMix::serving().prepare(100, 32, 9);
         let sample_all = |seed: u64| -> Vec<(usize, Option<usize>, bool)> {
             let mut rng = Pcg32::new(seed);
             (0..50)

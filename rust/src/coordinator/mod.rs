@@ -25,7 +25,9 @@ pub mod stats;
 pub mod xla_engine;
 
 pub use batcher::{Batcher, BatcherConfig};
-pub use loadgen::{run_open_loop, IngestLeg, LoadConfig, LoadReport, PreparedMix, RequestMix};
+pub use loadgen::{
+    run_open_loop, IngestLeg, LoadConfig, LoadReport, PreparedMix, QuerySkew, RequestMix,
+};
 pub use router::{Router, RoutePolicy};
 pub use server::{Server, ServerBuilder, ServerConfig, ServerHandle};
 pub use stats::ServeStats;

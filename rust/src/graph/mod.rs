@@ -21,9 +21,11 @@
 //! both forms; only the builder's mutators require the staging form.
 
 pub mod build;
+pub mod reorder;
 pub mod serialize;
 
 pub use build::{build, BuildConfig};
+pub use reorder::{Permutation, ReorderMode};
 
 use crate::mmap::CowSlice;
 

@@ -1,0 +1,404 @@
+//! Locality-preserving node relabeling — the hub-first reordering pass.
+//!
+//! HNSW traversal concentrates on upper-level hub nodes and the
+//! entry-point neighborhood (Malkov & Yashunin, arXiv 1603.09320), but
+//! node ids are corpus-order, so every beam hop gathers adjacency rows
+//! and LOWQ/MIDQ/HIGH rows from effectively random offsets. This module
+//! computes a [`Permutation`] that places nodes hub-first — descending
+//! max level, then BFS order over layer 0 seeded at the entry point —
+//! and applies it *physically*: the CSR arrays, the quantized filter
+//! tables, and the f32 rerank rows are all rewritten so graph-adjacent
+//! nodes are byte-adjacent. The hot working set of a search then lives
+//! on a handful of contiguous cache lines (owned mode) or pages
+//! (`--mmap` mode), instead of being sprayed across the table.
+//!
+//! Reordering changes *labels only*: the graph stays isomorphic and
+//! every distance is computed over the same bytes, so a search on a
+//! reordered index returns identical results once ids are translated
+//! back at the engine boundary. The mapping is:
+//!
+//! * `ext_of[internal] = external` — row `internal` of every reordered
+//!   table holds the vector originally labeled `external`.
+//! * `int_of[external] = internal` — the inverse, used to translate
+//!   incoming `IdFilter`s and ground-truth row probes.
+//!
+//! `ext_of` is what the v3 bundle persists (the `PERM` section); the
+//! inverse is recomputed at load.
+
+use super::HnswGraph;
+use crate::dataset::VectorSet;
+use anyhow::{ensure, Result};
+
+/// How a build (or live seal/compact) relabels nodes before freezing
+/// the shard's tables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReorderMode {
+    /// Keep corpus order (the identity labeling; no `PERM` section).
+    #[default]
+    None,
+    /// Hub-first: descending node level, BFS over layer 0 from the
+    /// entry point as the within-level order.
+    HubBfs,
+}
+
+impl ReorderMode {
+    /// Parse a CLI value (`none` | `hub-bfs`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "none" | "identity" => Ok(Self::None),
+            "hub-bfs" | "hub_bfs" | "hubbfs" => Ok(Self::HubBfs),
+            other => anyhow::bail!("unknown reorder mode {other:?} (expected hub-bfs|none)"),
+        }
+    }
+
+    /// Display label (the `--reorder` CLI spelling).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::HubBfs => "hub-bfs",
+        }
+    }
+}
+
+/// A bijective relabeling of the `n` nodes of one shard, stored in both
+/// directions so either translation is O(1).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Permutation {
+    /// `ext_of[internal] = external` (the persisted direction).
+    ext_of: Vec<u32>,
+    /// `int_of[external] = internal` (derived inverse).
+    int_of: Vec<u32>,
+}
+
+impl Permutation {
+    /// Build from the persisted `ext_of` direction, validating that it
+    /// is a bijection over `0..n`.
+    pub fn from_ext_of(ext_of: Vec<u32>) -> Result<Self> {
+        let n = ext_of.len();
+        let mut int_of = vec![u32::MAX; n];
+        for (internal, &external) in ext_of.iter().enumerate() {
+            ensure!(
+                (external as usize) < n,
+                "permutation entry {external} out of range for {n} nodes"
+            );
+            ensure!(
+                int_of[external as usize] == u32::MAX,
+                "permutation maps external id {external} twice"
+            );
+            int_of[external as usize] = internal as u32;
+        }
+        Ok(Self { ext_of, int_of })
+    }
+
+    /// The identity relabeling over `n` nodes.
+    pub fn identity(n: usize) -> Self {
+        let ext_of: Vec<u32> = (0..n as u32).collect();
+        Self { int_of: ext_of.clone(), ext_of }
+    }
+
+    /// Hub-first order for `graph`: nodes sorted by descending max
+    /// level, breaking ties by BFS rank over layer 0 seeded at the
+    /// entry point (nodes unreachable on layer 0 keep corpus order at
+    /// the tail of their level class). The BFS leg follows neighbor
+    /// lists in stored order, so the relabeling is deterministic.
+    pub fn hub_bfs(graph: &HnswGraph) -> Self {
+        let n = graph.len();
+        if n == 0 {
+            return Self::identity(0);
+        }
+        // BFS rank over layer 0 from the entry point.
+        let mut rank = vec![u32::MAX; n];
+        let mut queue = std::collections::VecDeque::new();
+        let mut next = 0u32;
+        let mut push = |node: u32, rank: &mut Vec<u32>, queue: &mut std::collections::VecDeque<u32>| {
+            if rank[node as usize] == u32::MAX {
+                rank[node as usize] = next;
+                next += 1;
+                queue.push_back(node);
+            }
+        };
+        push(graph.entry_point(), &mut rank, &mut queue);
+        while let Some(node) = queue.pop_front() {
+            for &nb in graph.neighbors(node, 0) {
+                push(nb, &mut rank, &mut queue);
+            }
+        }
+        // Unreached nodes (disconnected layer 0) go after every reached
+        // one, in corpus order.
+        for (node, r) in rank.iter_mut().enumerate() {
+            if *r == u32::MAX {
+                *r = next + node as u32;
+            }
+        }
+        let mut ext_of: Vec<u32> = (0..n as u32).collect();
+        ext_of.sort_by_key(|&node| {
+            (std::cmp::Reverse(graph.level(node)), rank[node as usize])
+        });
+        Self::from_ext_of(ext_of).expect("hub-bfs order is a bijection by construction")
+    }
+
+    /// Node count this permutation covers.
+    pub fn len(&self) -> usize {
+        self.ext_of.len()
+    }
+
+    /// True for the zero-node permutation.
+    pub fn is_empty(&self) -> bool {
+        self.ext_of.is_empty()
+    }
+
+    /// True when the relabeling is the identity (nothing moved).
+    pub fn is_identity(&self) -> bool {
+        self.ext_of.iter().enumerate().all(|(i, &e)| e == i as u32)
+    }
+
+    /// External id of reordered row `internal`.
+    #[inline]
+    pub fn ext(&self, internal: u32) -> u32 {
+        self.ext_of[internal as usize]
+    }
+
+    /// Reordered row holding external id `external`.
+    #[inline]
+    pub fn int(&self, external: u32) -> u32 {
+        self.int_of[external as usize]
+    }
+
+    /// The persisted direction (`ext_of[internal] = external`).
+    pub fn ext_of(&self) -> &[u32] {
+        &self.ext_of
+    }
+
+    /// The inverse permutation (swap the two directions).
+    pub fn inverse(&self) -> Self {
+        Self { ext_of: self.int_of.clone(), int_of: self.ext_of.clone() }
+    }
+
+    /// Relabel a frozen (or staging) graph: row order, neighbor ids,
+    /// and the entry point all move together, with each node's neighbor
+    /// list order preserved — the reordered graph is isomorphic to the
+    /// input and search walks it in the same sequence.
+    pub fn apply_to_graph(&self, graph: &HnswGraph) -> Result<HnswGraph> {
+        let n = graph.len();
+        ensure!(n == self.len(), "permutation covers {} nodes, graph has {n}", self.len());
+        if n == 0 {
+            let mut g = HnswGraph::empty(graph.m(), graph.m0());
+            g.freeze();
+            return Ok(g);
+        }
+        let mut levels = Vec::with_capacity(n);
+        for internal in 0..n as u32 {
+            levels.push(graph.level(self.ext(internal)) as u8);
+        }
+        let n_levels = graph.max_level() + 1;
+        let mut parts: Vec<(Vec<u32>, Vec<u32>)> = Vec::with_capacity(n_levels);
+        for l in 0..n_levels {
+            let mut offsets = Vec::with_capacity(n + 1);
+            offsets.push(0u32);
+            let mut neighbors = Vec::with_capacity(graph.edges_at_level(l));
+            for internal in 0..n as u32 {
+                for &nb in graph.neighbors(self.ext(internal), l) {
+                    neighbors.push(self.int(nb));
+                }
+                offsets.push(neighbors.len() as u32);
+            }
+            parts.push((offsets, neighbors));
+        }
+        HnswGraph::from_csr_parts(
+            graph.m(),
+            graph.m0(),
+            self.int(graph.entry_point()),
+            graph.max_level(),
+            levels,
+            parts,
+        )
+    }
+
+    /// Relabel a vector set: reordered row `internal` holds the vector
+    /// originally at row `ext_of[internal]`.
+    pub fn apply_to_set(&self, set: &VectorSet) -> VectorSet {
+        assert_eq!(set.len(), self.len(), "permutation/set length mismatch");
+        let mut out = VectorSet::new(set.dim());
+        for internal in 0..self.len() as u32 {
+            out.push(set.row(self.ext(internal) as usize));
+        }
+        out
+    }
+
+    /// Relabel a plain per-node array (e.g. a `.ids` sidecar map).
+    pub fn apply_to_ids(&self, ids: &[u32]) -> Vec<u32> {
+        assert_eq!(ids.len(), self.len(), "permutation/ids length mismatch");
+        (0..self.len() as u32).map(|internal| ids[self.ext(internal) as usize]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic::{generate, SyntheticConfig};
+    use crate::graph::build::{build, BuildConfig};
+    use crate::proptest_lite;
+    use crate::rng::Pcg32;
+
+    fn random_graph(n: usize, seed: u64) -> HnswGraph {
+        let cfg = SyntheticConfig { n_base: n, n_queries: 1, seed, ..SyntheticConfig::tiny() };
+        let (base, _) = generate(&cfg);
+        build(&base, &BuildConfig { m: 6, ef_construction: 32, ..Default::default() })
+    }
+
+    #[test]
+    fn mode_parses_and_labels() {
+        assert_eq!(ReorderMode::parse("hub-bfs").unwrap(), ReorderMode::HubBfs);
+        assert_eq!(ReorderMode::parse("none").unwrap(), ReorderMode::None);
+        assert!(ReorderMode::parse("zorder").is_err());
+        assert_eq!(ReorderMode::HubBfs.label(), "hub-bfs");
+        assert_eq!(ReorderMode::default(), ReorderMode::None);
+    }
+
+    #[test]
+    fn from_ext_of_rejects_non_bijections() {
+        assert!(Permutation::from_ext_of(vec![0, 0]).is_err(), "duplicate entry");
+        assert!(Permutation::from_ext_of(vec![0, 2]).is_err(), "out of range");
+        assert!(Permutation::from_ext_of(vec![1, 0]).is_ok());
+    }
+
+    #[test]
+    fn identity_roundtrips() {
+        let p = Permutation::identity(5);
+        assert!(p.is_identity());
+        assert_eq!(p.ext(3), 3);
+        assert_eq!(p.int(3), 3);
+        assert_eq!(p.inverse(), p);
+    }
+
+    /// Proptest-style: random permutations compose with their inverse to
+    /// the identity in both directions.
+    #[test]
+    fn prop_perm_compose_inverse_is_identity() {
+        proptest_lite::run(
+            &proptest_lite::Config { cases: 64, ..Default::default() },
+            |rng: &mut Pcg32| {
+                let n = rng.range(1, 200);
+                let mut ext_of: Vec<u32> = (0..n as u32).collect();
+                // Fisher–Yates with the harness RNG.
+                for i in (1..n).rev() {
+                    let j = rng.below(i as u32 + 1) as usize;
+                    ext_of.swap(i, j);
+                }
+                ext_of
+            },
+            |ext_of| {
+                let p = Permutation::from_ext_of(ext_of.clone()).unwrap();
+                let inv = p.inverse();
+                (0..ext_of.len() as u32).all(|i| {
+                    p.int(p.ext(i)) == i
+                        && p.ext(p.int(i)) == i
+                        && inv.ext(i) == p.int(i)
+                        && inv.int(i) == p.ext(i)
+                })
+            },
+        );
+    }
+
+    /// Proptest-style: applying a random permutation to a graph
+    /// preserves per-node degree and neighbor-list order, and applying
+    /// the inverse to the result restores the original graph exactly.
+    #[test]
+    fn prop_graph_apply_preserves_structure_and_inverts() {
+        let g = random_graph(300, 9);
+        proptest_lite::run(
+            &proptest_lite::Config { cases: 16, ..Default::default() },
+            |rng: &mut Pcg32| {
+                let n = g.len();
+                let mut ext_of: Vec<u32> = (0..n as u32).collect();
+                for i in (1..n).rev() {
+                    let j = rng.below(i as u32 + 1) as usize;
+                    ext_of.swap(i, j);
+                }
+                ext_of
+            },
+            |ext_of| {
+                let p = Permutation::from_ext_of(ext_of.clone()).unwrap();
+                let pg = p.apply_to_graph(&g).unwrap();
+                // Degree and list order are preserved under relabeling.
+                for internal in 0..pg.len() as u32 {
+                    let ext = p.ext(internal);
+                    if pg.level(internal) != g.level(ext) {
+                        return false;
+                    }
+                    for l in 0..=g.level(ext) {
+                        let want: Vec<u32> =
+                            g.neighbors(ext, l).iter().map(|&nb| p.int(nb)).collect();
+                        if pg.neighbors(internal, l) != want.as_slice() {
+                            return false;
+                        }
+                    }
+                }
+                if pg.entry_point() != p.int(g.entry_point()) {
+                    return false;
+                }
+                // perm ∘ inverse = identity on the graph itself.
+                let back = p.inverse().apply_to_graph(&pg).unwrap();
+                for node in 0..g.len() as u32 {
+                    for l in 0..=g.level(node) {
+                        if back.neighbors(node, l) != g.neighbors(node, l) {
+                            return false;
+                        }
+                    }
+                }
+                back.entry_point() == g.entry_point() && back.check_invariants().is_empty()
+            },
+        );
+    }
+
+    #[test]
+    fn hub_bfs_orders_hubs_first() {
+        let g = random_graph(400, 3);
+        let p = Permutation::hub_bfs(&g);
+        assert_eq!(p.len(), g.len());
+        // Levels are non-increasing along the new internal order.
+        for w in 0..p.len() as u32 - 1 {
+            assert!(
+                g.level(p.ext(w)) >= g.level(p.ext(w + 1)),
+                "internal {w}: level order violated"
+            );
+        }
+        // The entry point becomes internal id 0.
+        assert_eq!(p.ext(0), g.entry_point());
+        let pg = p.apply_to_graph(&g).unwrap();
+        assert_eq!(pg.entry_point(), 0);
+        assert!(pg.check_invariants().is_empty());
+        assert_eq!(pg.nodes_at_level(0), g.nodes_at_level(0));
+        assert_eq!(pg.edges_at_level(0), g.edges_at_level(0));
+    }
+
+    #[test]
+    fn apply_to_set_and_ids_move_rows_together() {
+        let mut set = VectorSet::new(2);
+        for i in 0..4 {
+            set.push(&[i as f32, -(i as f32)]);
+        }
+        let p = Permutation::from_ext_of(vec![2, 0, 3, 1]).unwrap();
+        let out = p.apply_to_set(&set);
+        assert_eq!(out.row(0), &[2.0, -2.0]);
+        assert_eq!(out.row(3), &[1.0, -1.0]);
+        assert_eq!(p.apply_to_ids(&[10, 11, 12, 13]), vec![12, 10, 13, 11]);
+    }
+
+    #[test]
+    fn empty_and_single_node_graphs_reorder() {
+        let p = Permutation::hub_bfs(&{
+            let mut g = HnswGraph::empty(4, 8);
+            g.freeze();
+            g
+        });
+        assert!(p.is_empty());
+        let mut g = HnswGraph::empty(4, 8);
+        g.add_node(0);
+        g.freeze();
+        let p = Permutation::hub_bfs(&g);
+        assert!(p.is_identity());
+        let pg = p.apply_to_graph(&g).unwrap();
+        assert_eq!(pg.len(), 1);
+    }
+}

@@ -105,6 +105,29 @@ fn bundle_format_v3(args: &Args) -> Result<bool> {
     }
 }
 
+/// `--reorder`: the hub-first locality relabeling. Defaults to `hub-bfs`
+/// wherever the permutation can be represented (`perm_ok` — v3 bundles,
+/// which carry the `PERM` section, or builds that never leave memory)
+/// and `none` otherwise; an explicit `hub-bfs` that can't be represented
+/// is a loud error rather than a silently dropped pass. Reordering
+/// changes the on-disk layout only — search results are identical.
+fn reorder_mode(args: &Args, perm_ok: bool) -> Result<phnsw::graph::ReorderMode> {
+    use phnsw::graph::ReorderMode;
+    match args.get("reorder") {
+        Some(raw) => {
+            let mode = ReorderMode::parse(&raw)?;
+            anyhow::ensure!(
+                mode == ReorderMode::None || perm_ok,
+                "--reorder {} writes a PERM section, which only the v3 layout carries \
+                 (add --bundle-format v3)",
+                mode.label()
+            );
+            Ok(mode)
+        }
+        None => Ok(if perm_ok { ReorderMode::HubBfs } else { ReorderMode::None }),
+    }
+}
+
 fn workbench_from(args: &Args) -> Result<Workbench> {
     let cfg = WorkbenchConfig {
         n_base: args.get_parsed_or("n", 10_000usize)?,
@@ -205,6 +228,13 @@ fn cmd_build(args: &Args) -> Result<()> {
             default: Some("exact".into()),
             is_flag: false,
         });
+        o.push(OptSpec {
+            name: "reorder",
+            help: "locality relabeling: hub-bfs | none (changes on-disk layout, never results; \
+                   hub-bfs needs --bundle-format v3 when writing a bundle)",
+            default: Some("hub-bfs".into()),
+            is_flag: false,
+        });
         println!("{}", usage("phnsw build", "build + cache index, PCA, ground truth", &o));
         return Ok(());
     }
@@ -237,15 +267,17 @@ fn cmd_build(args: &Args) -> Result<()> {
             "--mid-stage writes a MIDQ section, which only the v3 layout carries \
              (add --bundle-format v3)"
         );
+        let reorder = reorder_mode(args, v3)?;
         if v3 {
-            w.save_bundle_v3(&out, mid_stage)?;
+            w.save_bundle_v3(&out, mid_stage, reorder)?;
         } else {
             w.save_bundle(&out)?;
         }
         println!(
-            "bundle: wrote {out} ({} bytes, {} — graph + PCA + sq8 low store{} + f32 high store)",
+            "bundle: wrote {out} ({} bytes, {}, reorder {} — graph + PCA + sq8 low store{} + f32 high store)",
             std::fs::metadata(&out)?.len(),
             if v3 { "v3 page-aligned" } else { "v2 streamed" },
+            reorder.label(),
             if mid_stage { " + sq8 mid store" } else { "" }
         );
     }
@@ -288,12 +320,19 @@ fn cmd_build_segmented(args: &Args) -> Result<()> {
         ..SyntheticConfig::default()
     });
     let mid_stage = args.flag("mid-stage");
-    let spec = SegmentSpec { n_shards: shards, build_threads: threads, assignment, mid_stage };
+    // The permutation only needs on-disk representation (the v3 PERM
+    // section) when a bundle is actually written; in-memory builds can
+    // always reorder.
+    let v3 = bundle_format_v3(args)?;
+    let reorder = reorder_mode(args, v3 || args.get("bundle-out").is_none())?;
+    let spec =
+        SegmentSpec { n_shards: shards, build_threads: threads, assignment, mid_stage, reorder };
     let t0 = std::time::Instant::now();
     let idx = build_segmented(&base, &bc, dim_low, seed, &spec);
     let ms = t0.elapsed().as_secs_f64() * 1e3;
     println!(
-        "{{\"bench\":\"segmented_build\",\"shards\":{shards},\"threads\":{threads},\"n\":{n},\"ms\":{ms:.1}}}"
+        "{{\"bench\":\"segmented_build\",\"shards\":{shards},\"threads\":{threads},\"n\":{n},\"reorder\":\"{}\",\"ms\":{ms:.1}}}",
+        reorder.label()
     );
     for (s, seg) in idx.segments.iter().enumerate() {
         println!(
@@ -326,7 +365,6 @@ fn cmd_build_segmented(args: &Args) -> Result<()> {
         anyhow::ensure!(r >= floor, "recall {r:.3} below required floor {floor}");
     }
     if let Some(out) = args.get("bundle-out") {
-        let v3 = bundle_format_v3(args)?;
         anyhow::ensure!(
             !mid_stage || v3,
             "--mid-stage writes MIDQ sections, which only the v3 layout carries \
@@ -338,10 +376,11 @@ fn cmd_build_segmented(args: &Args) -> Result<()> {
             phnsw::runtime::save_segmented(&out, &idx)?;
         }
         println!(
-            "bundle: wrote {out} ({} bytes, {} segment(s), {}{})",
+            "bundle: wrote {out} ({} bytes, {} segment(s), {}, reorder {}{})",
             std::fs::metadata(&out)?.len(),
             idx.n_segments(),
             if v3 { "v3 page-aligned" } else { "v2 streamed" },
+            reorder.label(),
             if mid_stage { ", mid stage" } else { "" }
         );
     }
@@ -378,6 +417,12 @@ fn cmd_query(args: &Args) -> Result<()> {
         &w.gt[qi][..res.len().min(w.gt[qi].len())]
     );
     Ok(())
+}
+
+/// One FNV-1a step — the serve digest's per-value mixer.
+fn fnv_mix(h: &mut u64, v: u64) {
+    *h ^= v;
+    *h = h.wrapping_mul(0x100_0000_01b3);
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -417,6 +462,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             name: "min-filtered-recall",
             help: "with --mix: fail unless filtered recall reaches this floor",
             default: None,
+            is_flag: false,
+        });
+        o.push(OptSpec {
+            name: "query-skew",
+            help: "with --mix: which query each request carries: uniform | zipf | zipf:<s> \
+                   (zipf clusters load on a hot head of repeated queries)",
+            default: Some("uniform".into()),
             is_flag: false,
         });
         o.push(OptSpec {
@@ -561,10 +613,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // filter from the serving mix; one shared filter per configured
     // selectivity, built once over the corpus. Overrides perturb the
     // engine's configured beam widths (--ef), not the global defaults.
+    let query_skew = phnsw::coordinator::QuerySkew::parse(&args.get_or("query-skew", "uniform"))?;
+    anyhow::ensure!(
+        query_skew == phnsw::coordinator::QuerySkew::Uniform || mix_on,
+        "--query-skew shapes the --mix workload (the plain serve path visits queries \
+         round-robin so its results digest covers every query)"
+    );
     let prepared = if mix_on {
         let mut mix = phnsw::coordinator::RequestMix::serving();
         mix.base_ef = phnsw_params(args)?.search;
-        Some(mix.prepare(corpus.as_ref().map_or(0, |c| c.len()), seed ^ 0x4D49_5846))
+        mix.query_skew = query_skew;
+        Some(mix.prepare(
+            corpus.as_ref().map_or(0, |c| c.len()),
+            queries.len(),
+            seed ^ 0x4D49_5846,
+        ))
     } else {
         None
     };
@@ -573,6 +636,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // filtered recall can be graded after the run.
     type FilteredEval = (usize, Arc<phnsw::search::IdFilter>, usize, Vec<u32>);
     let mut filtered_evals: Vec<FilteredEval> = Vec::new();
+    // Order-independent digest over every served result (summed
+    // per-request FNV of query index, ids, and dist bits): two serves of
+    // the same workload must agree bit-for-bit regardless of how
+    // requests interleave across workers. The reorder CI smoke compares
+    // this line between `--reorder hub-bfs` and `--reorder none` builds.
+    let mut results_digest = 0u64;
     let t0 = std::time::Instant::now();
     std::thread::scope(|s| {
         let mut joins = Vec::new();
@@ -585,23 +654,39 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     seed.wrapping_add((c as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
                 );
                 let mut local: Vec<FilteredEval> = Vec::new();
+                let mut digest = 0u64;
                 for i in 0..per_client {
-                    let qi = (c * per_client + i) % queries.len();
+                    // With a prepared mix the query choice honors the
+                    // configured skew; the plain path stays round-robin
+                    // so the digest covers every query.
+                    let qi = match prepared {
+                        Some(p) => p.sample_query_index(&mut rng),
+                        None => (c * per_client + i) % queries.len(),
+                    };
                     let mut q = Query::new(queries.row(qi).to_vec()).with_tier(tier);
                     if let Some(p) = prepared {
                         q = p.sample(&mut rng, q);
                     }
                     let (topk, filter) = (q.core.topk.unwrap_or(10), q.core.filter.clone());
                     let Ok(res) = h.query_blocking(q) else { continue };
+                    let mut hash = 0xcbf2_9ce4_8422_2325u64;
+                    fnv_mix(&mut hash, qi as u64);
+                    for nb in &res.neighbors {
+                        fnv_mix(&mut hash, nb.id as u64);
+                        fnv_mix(&mut hash, nb.dist.to_bits() as u64);
+                    }
+                    digest = digest.wrapping_add(hash);
                     if let Some(f) = filter {
                         local.push((qi, f, topk, res.neighbors.iter().map(|n| n.id).collect()));
                     }
                 }
-                local
+                (local, digest)
             }));
         }
         for j in joins {
-            filtered_evals.extend(j.join().expect("client thread"));
+            let (local, digest) = j.join().expect("client thread");
+            filtered_evals.extend(local);
+            results_digest = results_digest.wrapping_add(digest);
         }
     });
     let elapsed = t0.elapsed();
@@ -614,10 +699,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // Machine-readable rows-touched line: the cascade CI smoke compares
     // this across tiers to assert the staged f32-touch reduction.
     println!(
-        "{{\"bench\":\"serve_rows\",\"tier\":\"{}\",\"mid_rows_touched\":{},\"f32_rows_touched\":{}}}",
+        "{{\"bench\":\"serve_rows\",\"tier\":\"{}\",\"query_skew\":\"{}\",\"mid_rows_touched\":{},\"f32_rows_touched\":{}}}",
         tier.label(),
+        query_skew.label(),
         server.stats().mid_rows_touched(),
         server.stats().f32_rows_touched()
+    );
+    println!(
+        "{{\"bench\":\"serve_results\",\"requests\":{},\"digest\":\"{results_digest:016x}\"}}",
+        per_client * clients
     );
     println!("{}", server.stats().render());
     server.shutdown();
@@ -646,9 +736,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         let recall = if wanted == 0 { 1.0 } else { hits as f64 / wanted as f64 };
         println!(
-            "{{\"bench\":\"serve_mix\",\"requests\":{},\"filtered\":{},\"filtered_recall\":{recall:.3}}}",
+            "{{\"bench\":\"serve_mix\",\"requests\":{},\"filtered\":{},\"query_skew\":\"{}\",\"filtered_recall\":{recall:.3}}}",
             per_client * clients,
-            filtered_evals.len()
+            filtered_evals.len(),
+            query_skew.label()
         );
         if let Some(raw) = args.get("min-filtered-recall") {
             let floor: f64 =
@@ -939,6 +1030,18 @@ fn cmd_inspect(args: &Args) -> Result<()> {
             s.len,
             if s.page_aligned { "page" } else { "-" }
         );
+    }
+    // Locality relabeling summary: v1/v2 bundles (whose writers refuse
+    // reordered indexes) and identity-order v3 bundles both report
+    // `none`.
+    match &info.perm {
+        Some(p) => println!(
+            "reorder: hub-first (PERM × {}, {} entries, {})",
+            p.n_sections,
+            p.entries,
+            if p.page_aligned { "page-aligned" } else { "NOT page-aligned" }
+        ),
+        None => println!("reorder: none"),
     }
     Ok(())
 }

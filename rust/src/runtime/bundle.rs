@@ -52,7 +52,7 @@
 //! reader).
 
 use crate::dataset::VectorSet;
-use crate::graph::{serialize, HnswGraph};
+use crate::graph::{serialize, HnswGraph, Permutation};
 use crate::pca::PcaModel;
 use crate::search::{AnnEngine, PhnswParams, PhnswSearcher};
 use crate::segment::{Segment, SegmentedIndex, ShardAssignment, ShardMap};
@@ -75,11 +75,16 @@ pub(crate) const TAG_PCA: &[u8; 4] = b"PCAM";
 pub(crate) const TAG_LOW: &[u8; 4] = b"LOWQ";
 /// Mid-stage cascade table (v3 only): SQ8 codes of the *high*-dim rows.
 pub(crate) const TAG_MID: &[u8; 4] = b"MIDQ";
+/// Locality permutation (v3 only): the internal→external id mapping of a
+/// hub-first reordered shard. Skipped by readers that predate it, like
+/// `MIDQ` — but *never* written to v1/v2 frames, where an old reader
+/// would silently serve the reordered tables under internal ids.
+pub(crate) const TAG_PERM: &[u8; 4] = b"PERM";
 pub(crate) const TAG_HIGH: &[u8; 4] = b"HIGH";
 pub(crate) const TAG_SEGDIR: &[u8; 4] = b"SEGD";
 
 /// Upper bound on shards in one bundle (bounds the section count a file
-/// may declare: `2 + 4 × MAX_SHARDS`).
+/// may declare: `2 + 5 × MAX_SHARDS`).
 pub const MAX_SHARDS: usize = 256;
 
 /// An opened `.phnsw` artifact: every component a [`PhnswSearcher`] needs.
@@ -96,6 +101,10 @@ pub struct IndexBundle {
     pub mid: Option<Arc<dyn VectorStore>>,
     /// High-dim f32 rerank table.
     pub high: Arc<VectorSet>,
+    /// Locality permutation (`PERM`, v3 reordered builds only): the
+    /// graph/low/mid/high tables are stored hub-first and row `i` holds
+    /// the row externally known as `perm.ext(i)`. `None` = corpus order.
+    pub perm: Option<Arc<Permutation>>,
 }
 
 fn write_section(w: &mut impl Write, tag: &[u8; 4], payload: &[u8]) -> Result<()> {
@@ -185,11 +194,12 @@ impl IndexBundle {
     /// no PCA refit, no re-projection, no re-quantization. A `MIDQ`
     /// section rides along as the searcher's mid-stage cascade table.
     pub fn searcher(&self, params: PhnswParams) -> PhnswSearcher {
-        PhnswSearcher::with_stores(
+        PhnswSearcher::with_stores_perm(
             self.graph.clone(),
             self.high.clone(),
             self.low.clone(),
             self.mid.clone(),
+            self.perm.clone(),
             self.pca.clone(),
             params,
         )
@@ -204,6 +214,8 @@ pub(crate) enum Section {
     Low(Arc<dyn VectorStore>),
     /// Mid-stage cascade table (v3 `MIDQ`; never produced by v1/v2).
     Mid(Arc<dyn VectorStore>),
+    /// Locality permutation (v3 `PERM`; never produced by v1/v2).
+    Perm(Permutation),
     High(VectorSet),
     SegDir(ShardMap),
 }
@@ -225,7 +237,7 @@ fn read_sections(path: &Path) -> Result<(u32, Vec<Section>)> {
         "unsupported bundle version {version}"
     );
     let n_sections = u32::from_le_bytes(head[8..12].try_into()?);
-    ensure!(n_sections as usize <= 2 + 4 * MAX_SHARDS, "implausible section count {n_sections}");
+    ensure!(n_sections as usize <= 2 + 5 * MAX_SHARDS, "implausible section count {n_sections}");
 
     let mut consumed = 12u64;
     let mut out = Vec::with_capacity(n_sections as usize);
@@ -386,15 +398,22 @@ impl Bundle {
 
     /// Row `global` of the high-dim corpus the bundle indexes (the f32
     /// rerank table). For a segmented bundle the global id is remapped
-    /// through the shard directory. Lets callers compute exact ground
-    /// truth against a bundle — e.g. the serve CLI's filtered-recall
-    /// gate — without re-generating the corpus.
+    /// through the shard directory; for a locality-reordered bundle the
+    /// shard-local id is further remapped through the `PERM` mapping, so
+    /// callers always address corpus-order ids. Lets callers compute
+    /// exact ground truth against a bundle — e.g. the serve CLI's
+    /// filtered-recall gate — without re-generating the corpus.
     pub fn high_row(&self, global: usize) -> &[f32] {
         match self {
-            Bundle::Single(b) => b.high.row(global),
+            Bundle::Single(b) => {
+                let row = b.perm.as_ref().map_or(global, |p| p.int(global as u32) as usize);
+                b.high.row(row)
+            }
             Bundle::Segmented(s) => {
                 let (shard, local) = s.map.shard_of(global as u32);
-                s.segments[shard].high.row(local as usize)
+                let seg = &s.segments[shard];
+                let row = seg.perm.as_ref().map_or(local as usize, |p| p.int(local) as usize);
+                seg.high.row(row)
             }
         }
     }
@@ -455,6 +474,7 @@ pub(crate) fn assemble_single(sections: Vec<Section>) -> Result<IndexBundle> {
     let mut pca = None;
     let mut low: Option<Arc<dyn VectorStore>> = None;
     let mut mid: Option<Arc<dyn VectorStore>> = None;
+    let mut perm: Option<Permutation> = None;
     let mut high = None;
     for section in sections {
         match section {
@@ -462,6 +482,7 @@ pub(crate) fn assemble_single(sections: Vec<Section>) -> Result<IndexBundle> {
             Section::Pca(p) => pca = Some(p),
             Section::Low(l) => low = Some(l),
             Section::Mid(m) => mid = Some(m),
+            Section::Perm(p) => perm = Some(p),
             Section::High(h) => high = Some(h),
             Section::SegDir(_) => {}
         }
@@ -477,12 +498,18 @@ pub(crate) fn assemble_single(sections: Vec<Section>) -> Result<IndexBundle> {
         ensure!(m.len() == high.len(), "mid/high-dim size mismatch");
         ensure!(m.dim() == high.dim(), "MIDQ dim != high-dim table dim");
     }
+    if let Some(p) = &perm {
+        ensure!(p.len() == high.len(), "PERM/high-dim size mismatch");
+    }
     Ok(IndexBundle {
         graph: Arc::new(graph),
         pca: Arc::new(pca),
         low,
         mid,
         high: Arc::new(high),
+        // An identity mapping carries no information; drop it so the
+        // searcher skips translation entirely.
+        perm: perm.filter(|p| !p.is_identity()).map(Arc::new),
     })
 }
 
@@ -494,6 +521,7 @@ pub(crate) fn assemble_segmented(sections: Vec<Section>, map: ShardMap) -> Resul
     let mut graphs = Vec::new();
     let mut lows: Vec<Arc<dyn VectorStore>> = Vec::new();
     let mut mids: Vec<Arc<dyn VectorStore>> = Vec::new();
+    let mut perms: Vec<Permutation> = Vec::new();
     let mut highs = Vec::new();
     for section in sections {
         match section {
@@ -501,6 +529,7 @@ pub(crate) fn assemble_segmented(sections: Vec<Section>, map: ShardMap) -> Resul
             Section::Pca(p) => pca = Some(p),
             Section::Low(l) => lows.push(l),
             Section::Mid(m) => mids.push(m),
+            Section::Perm(p) => perms.push(p),
             Section::High(h) => highs.push(h),
             Section::SegDir(_) => {}
         }
@@ -528,10 +557,23 @@ pub(crate) fn assemble_segmented(sections: Vec<Section>, map: ShardMap) -> Resul
     } else {
         mids.into_iter().map(Some).collect()
     };
+    // PERM is all-or-nothing too: the writer emits an identity mapping
+    // for any shard the reorder pass left untouched, so the positional
+    // pairing of repeated section groups stays unambiguous.
+    ensure!(
+        perms.is_empty() || perms.len() == s,
+        "segmented bundle holds {} PERM sections for {s} shards (must be 0 or {s})",
+        perms.len()
+    );
+    let perms: Vec<Option<Permutation>> = if perms.is_empty() {
+        (0..s).map(|_| None).collect()
+    } else {
+        perms.into_iter().map(Some).collect()
+    };
     let pca = Arc::new(pca);
     let mut segments = Vec::with_capacity(s);
-    for (i, (((graph, low), mid), high)) in
-        graphs.into_iter().zip(lows).zip(mids).zip(highs).enumerate()
+    for (i, ((((graph, low), mid), perm), high)) in
+        graphs.into_iter().zip(lows).zip(mids).zip(perms).zip(highs).enumerate()
     {
         ensure!(
             graph.len() == map.shard_len(i),
@@ -547,7 +589,16 @@ pub(crate) fn assemble_segmented(sections: Vec<Section>, map: ShardMap) -> Resul
             ensure!(m.len() == high.len(), "shard {i}: mid/high-dim size mismatch");
             ensure!(m.dim() == high.dim(), "shard {i}: MIDQ dim != high-dim table dim");
         }
-        segments.push(Segment { graph: Arc::new(graph), high: Arc::new(high), low, mid });
+        if let Some(p) = &perm {
+            ensure!(p.len() == high.len(), "shard {i}: PERM/high-dim size mismatch");
+        }
+        segments.push(Segment {
+            graph: Arc::new(graph),
+            high: Arc::new(high),
+            low,
+            mid,
+            perm: perm.filter(|p| !p.is_identity()).map(Arc::new),
+        });
     }
     Ok(SegmentedIndex { pca, segments, map })
 }
@@ -582,6 +633,21 @@ pub struct BundleInfo {
     pub file_len: u64,
     /// Every section in file order (unknown tags included).
     pub sections: Vec<SectionInfo>,
+    /// Locality-reorder summary: `None` for legacy / corpus-order
+    /// bundles (`reorder: none`), `Some` when `PERM` sections are
+    /// present.
+    pub perm: Option<PermInfo>,
+}
+
+/// What `inspect` reports about a bundle's `PERM` sections.
+#[derive(Debug, Clone)]
+pub struct PermInfo {
+    /// Number of `PERM` sections (one per shard in a reordered bundle).
+    pub n_sections: usize,
+    /// Total mapping entries across all `PERM` sections (= corpus rows).
+    pub entries: u64,
+    /// True when every `PERM` payload starts on a page boundary.
+    pub page_aligned: bool,
 }
 
 /// Read a `.phnsw` file's section directory without decoding payloads —
@@ -604,7 +670,7 @@ pub fn inspect_bundle(path: impl AsRef<Path>) -> Result<BundleInfo> {
         "unsupported bundle version {version}"
     );
     let n_sections = u32::from_le_bytes(head[8..12].try_into()?);
-    ensure!(n_sections as usize <= 2 + 4 * MAX_SHARDS, "implausible section count {n_sections}");
+    ensure!(n_sections as usize <= 2 + 5 * MAX_SHARDS, "implausible section count {n_sections}");
     let mut consumed = 12u64;
     let mut sections = Vec::with_capacity(n_sections as usize);
     let mut n_shards = 1usize;
@@ -642,6 +708,9 @@ pub fn inspect_bundle(path: impl AsRef<Path>) -> Result<BundleInfo> {
         n_shards,
         file_len,
         sections,
+        // v1/v2 writers refuse reordered indexes, so legacy bundles are
+        // always corpus-order.
+        perm: None,
     })
 }
 
@@ -654,6 +723,14 @@ pub fn save_segmented(path: impl AsRef<Path>, index: &SegmentedIndex) -> Result<
     let s = index.n_segments();
     ensure!(s >= 1, "index holds no segments");
     ensure!(s <= MAX_SHARDS, "{s} shards exceeds the bundle cap {MAX_SHARDS}");
+    // No PERM frame exists in v1/v2, and a reader that merely skipped an
+    // unknown tag would serve the reordered tables under internal ids —
+    // silently wrong results. Refuse loudly instead.
+    ensure!(
+        index.segments.iter().all(|seg| seg.perm.is_none()),
+        "locality-reordered indexes require the v3 bundle format (PERM section); \
+         write with --bundle-format v3 or rebuild with --reorder none"
+    );
     if s == 1 {
         let seg = &index.segments[0];
         return IndexBundle::save(path, &seg.graph, &index.pca, seg.low.as_ref(), &seg.high);

@@ -20,15 +20,16 @@
 //! | `GRPH` | `HNS3` image — CSR arrays 64-byte aligned in place (`graph::serialize`) |
 //! | `LOWQ` | `F32P`/`SQ8P` — SIMD-padded rows, 64-byte-aligned payload (`store`) |
 //! | `MIDQ` | `SQ8P` — SQ8 codes of the *high*-dim rows (optional; staged-cascade mid stage) |
+//! | `PERM` | `"PRM1"` `[u32 n]` → pad 64 → `n × u32-le` internal→external ids (optional; reordered builds) |
 //! | `HIGH` | `[u32 dim][u32 reserved][u64 n]` → pad 64 → `n × dim × f32-le` |
 //!
-//! The **single** flavor is `PCAM, GRPH, LOWQ[, MIDQ], HIGH`; the
-//! **segmented** flavor leads with `SEGD, PCAM` then one
-//! `GRPH, LOWQ[, MIDQ], HIGH` group per shard in shard order (flavor is
-//! decided by `SEGD`'s presence, as in v2). `MIDQ` is written
-//! all-or-nothing across shards and only by mid-stage builds; readers
-//! that predate it skip the unknown tag, so the section is purely
-//! additive. All integers are fixed-width little-endian, every array a
+//! The **single** flavor is `PCAM, GRPH, LOWQ[, MIDQ][, PERM], HIGH`;
+//! the **segmented** flavor leads with `SEGD, PCAM` then one
+//! `GRPH, LOWQ[, MIDQ][, PERM], HIGH` group per shard in shard order
+//! (flavor is decided by `SEGD`'s presence, as in v2). `MIDQ` and
+//! `PERM` are each written all-or-nothing across shards (`PERM` fills
+//! untouched shards with the identity mapping); readers that predate
+//! them skip the unknown tags, so both sections are purely additive. All integers are fixed-width little-endian, every array a
 //! reader hands to the kernels is 64-byte aligned absolutely
 //! (page-aligned section + 64-aligned internal offset), and section
 //! lengths are exact — padding lives *between* sections.
@@ -46,11 +47,11 @@
 
 use super::bundle::{
     assemble_segmented, assemble_single, decode_segdir, encode_segdir, Bundle, BundleInfo,
-    Section, SectionInfo, MAGIC, MAX_SHARDS, TAG_GRAPH, TAG_HIGH, TAG_LOW, TAG_MID, TAG_PCA,
-    TAG_SEGDIR, VERSION_V3,
+    PermInfo, Section, SectionInfo, MAGIC, MAX_SHARDS, TAG_GRAPH, TAG_HIGH, TAG_LOW, TAG_MID,
+    TAG_PCA, TAG_PERM, TAG_SEGDIR, VERSION_V3,
 };
 use crate::dataset::VectorSet;
-use crate::graph::{serialize, HnswGraph};
+use crate::graph::{serialize, HnswGraph, Permutation};
 use crate::mmap::{align_up, take_cow, Advice, Mmap};
 use crate::pca::PcaModel;
 use crate::segment::SegmentedIndex;
@@ -74,6 +75,13 @@ const HEADER: usize = 16;
 /// Offset of the f32 rows inside a v3 `HIGH` payload (header padded to
 /// one cache line).
 const HIGH3_DATA_OFF: usize = 64;
+
+/// Magic of a v3 `PERM` payload.
+const PERM_MAGIC: &[u8; 4] = b"PRM1";
+
+/// Offset of the id array inside a v3 `PERM` payload (header padded to
+/// one cache line, matching the `HIGH` idiom).
+const PERM_DATA_OFF: usize = 64;
 
 /// Staging-buffer size for the streamed `HIGH` rows.
 const CHUNK: usize = 64 * 1024;
@@ -172,23 +180,66 @@ impl V3Writer {
     }
 }
 
+/// Encode a `PERM` payload: magic, entry count, the internal→external
+/// mapping. `Permutation::from_ext_of` re-validates the bijection on
+/// decode, so a corrupted or truncated mapping can never reach a
+/// searcher.
+fn encode_perm(perm: &Permutation) -> Vec<u8> {
+    let mut out = Vec::with_capacity(PERM_DATA_OFF + perm.len() * 4);
+    out.extend_from_slice(PERM_MAGIC);
+    out.extend_from_slice(&(perm.len() as u32).to_le_bytes());
+    out.resize(PERM_DATA_OFF, 0);
+    for &e in perm.ext_of() {
+        out.extend_from_slice(&e.to_le_bytes());
+    }
+    out
+}
+
+/// Decode a `PERM` payload (always owned — the mapping is 4 B/row, hot
+/// on every translated request, and must be bijection-checked anyway).
+fn decode_perm(bytes: &[u8]) -> Result<Permutation> {
+    ensure!(bytes.len() >= PERM_DATA_OFF, "PERM section too short ({} bytes)", bytes.len());
+    ensure!(&bytes[0..4] == PERM_MAGIC, "bad PERM payload magic {:?}", &bytes[0..4]);
+    let n = u32::from_le_bytes(bytes[4..8].try_into()?) as usize;
+    let want = PERM_DATA_OFF as u64 + n as u64 * 4;
+    ensure!(
+        bytes.len() as u64 == want,
+        "PERM section length {} != expected {want} for {n} entries",
+        bytes.len()
+    );
+    let ext_of: Vec<u32> = bytes[PERM_DATA_OFF..]
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Permutation::from_ext_of(ext_of).context("PERM section is not a permutation")
+}
+
 /// Write one monolithic index in the v3 page-aligned layout. `mid`
 /// (the SQ8-over-high-dim cascade table) adds an optional `MIDQ`
-/// section between `LOWQ` and `HIGH`.
+/// section between `LOWQ` and `HIGH`; `perm` (the locality-reorder
+/// internal→external mapping) adds an optional `PERM` section after it.
 pub fn save_v3_single(
     path: impl AsRef<Path>,
     graph: &HnswGraph,
     pca: &PcaModel,
     low: &dyn VectorStore,
     mid: Option<&dyn VectorStore>,
+    perm: Option<&Permutation>,
     high: &VectorSet,
 ) -> Result<()> {
-    let mut w = V3Writer::create(path.as_ref(), 4 + usize::from(mid.is_some()))?;
+    let mut w = V3Writer::create(
+        path.as_ref(),
+        4 + usize::from(mid.is_some()) + usize::from(perm.is_some()),
+    )?;
     w.section(TAG_PCA, &pca.to_bytes())?;
     w.section(TAG_GRAPH, &serialize::to_v3_bytes(graph)?)?;
     w.section(TAG_LOW, &low.to_bytes_v3())?;
     if let Some(m) = mid {
         w.section(TAG_MID, &m.to_bytes_v3())?;
+    }
+    if let Some(p) = perm {
+        ensure!(p.len() == high.len(), "PERM/high-dim size mismatch");
+        w.section(TAG_PERM, &encode_perm(p))?;
     }
     w.section_high(high)?;
     w.finish()
@@ -205,12 +256,28 @@ pub fn save_v3(path: impl AsRef<Path>, index: &SegmentedIndex) -> Result<()> {
     // make the cascade tier shard-dependent, so mixed indexes are
     // written mid-free.
     let with_mid = index.segments.iter().all(|seg| seg.mid.is_some());
+    // PERM is all-or-nothing across shards like MIDQ, but a reorder pass
+    // may legitimately leave some shards at the identity (e.g. empty or
+    // single-node shards) — those get an explicit identity mapping so
+    // the positional pairing of section groups stays unambiguous.
+    let with_perm = index.segments.iter().any(|seg| seg.perm.is_some());
     if s == 1 {
         let seg = &index.segments[0];
         let mid = if with_mid { seg.mid.as_deref() } else { None };
-        return save_v3_single(path, &seg.graph, &index.pca, seg.low.as_ref(), mid, &seg.high);
+        return save_v3_single(
+            path,
+            &seg.graph,
+            &index.pca,
+            seg.low.as_ref(),
+            mid,
+            seg.perm.as_deref(),
+            &seg.high,
+        );
     }
-    let mut w = V3Writer::create(path.as_ref(), 2 + (3 + usize::from(with_mid)) * s)?;
+    let mut w = V3Writer::create(
+        path.as_ref(),
+        2 + (3 + usize::from(with_mid) + usize::from(with_perm)) * s,
+    )?;
     w.section(TAG_SEGDIR, &encode_segdir(&index.map))?;
     w.section(TAG_PCA, &index.pca.to_bytes())?;
     for seg in &index.segments {
@@ -218,6 +285,18 @@ pub fn save_v3(path: impl AsRef<Path>, index: &SegmentedIndex) -> Result<()> {
         w.section(TAG_LOW, &seg.low.to_bytes_v3())?;
         if with_mid {
             w.section(TAG_MID, &seg.mid.as_ref().expect("with_mid checked").to_bytes_v3())?;
+        }
+        if with_perm {
+            let identity;
+            let p = match &seg.perm {
+                Some(p) => p.as_ref(),
+                None => {
+                    identity = Permutation::identity(seg.high.len());
+                    &identity
+                }
+            };
+            ensure!(p.len() == seg.high.len(), "PERM/high-dim size mismatch");
+            w.section(TAG_PERM, &encode_perm(p))?;
         }
         w.section_high(&seg.high)?;
     }
@@ -243,7 +322,7 @@ fn read_directory(map: &Mmap, path: &Path) -> Result<Vec<DirEntry>> {
     let version = u32::from_le_bytes(bytes[4..8].try_into()?);
     ensure!(version == VERSION_V3, "expected a v3 bundle, found version {version}");
     let n_sections = u32::from_le_bytes(bytes[8..12].try_into()?) as usize;
-    ensure!(n_sections <= 2 + 4 * MAX_SHARDS, "implausible section count {n_sections}");
+    ensure!(n_sections <= 2 + 5 * MAX_SHARDS, "implausible section count {n_sections}");
     let dir_end = HEADER + n_sections * DIR_ENTRY;
     ensure!(
         dir_end <= bytes.len(),
@@ -298,7 +377,11 @@ pub(crate) fn open_v3(path: &Path, mapped: bool) -> Result<Bundle> {
             let (off, len) = (e.offset as usize, e.len as usize);
             match &e.tag {
                 TAG_HIGH => map.advise(off, len, Advice::Random),
-                TAG_GRAPH | TAG_LOW | TAG_MID => map.advise(off, len, Advice::WillNeed),
+                // PERM rides with the hot set: every translated filter
+                // probe and result emission touches it.
+                TAG_GRAPH | TAG_LOW | TAG_MID | TAG_PERM => {
+                    map.advise(off, len, Advice::WillNeed)
+                }
                 _ => {}
             }
         }
@@ -314,6 +397,9 @@ pub(crate) fn open_v3(path: &Path, mapped: bool) -> Result<Bundle> {
                 .push(Section::Pca(PcaModel::from_bytes(&map.as_slice()[off..off + len])?)),
             TAG_LOW => sections.push(Section::Low(store_from_v3_section(&map, off, len, mapped)?)),
             TAG_MID => sections.push(Section::Mid(store_from_v3_section(&map, off, len, mapped)?)),
+            TAG_PERM => {
+                sections.push(Section::Perm(decode_perm(&map.as_slice()[off..off + len])?))
+            }
             TAG_HIGH => sections.push(Section::High(decode_high_v3(&map, off, len, mapped)?)),
             TAG_SEGDIR => {
                 sections.push(Section::SegDir(decode_segdir(&map.as_slice()[off..off + len])?))
@@ -364,11 +450,25 @@ pub(crate) fn inspect_v3(path: &Path) -> Result<BundleInfo> {
     let entries = read_directory(&map, path)?;
     let mut n_shards = 1usize;
     let mut segmented = false;
+    let mut perm: Option<PermInfo> = None;
     for e in &entries {
+        let (off, len) = (e.offset as usize, e.len as usize);
         if &e.tag == TAG_SEGDIR {
-            let (off, len) = (e.offset as usize, e.len as usize);
             n_shards = decode_segdir(&map.as_slice()[off..off + len])?.n_shards();
             segmented = true;
+        }
+        if &e.tag == TAG_PERM {
+            // Best-effort entry count from the 8-byte payload header —
+            // inspect must display a damaged section, not reject it.
+            let bytes = &map.as_slice()[off..off + len];
+            let n = (bytes.len() >= 8 && &bytes[0..4] == PERM_MAGIC)
+                .then(|| u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as u64)
+                .unwrap_or(0);
+            let aligned = e.offset % PAGE as u64 == 0;
+            let p = perm.get_or_insert(PermInfo { n_sections: 0, entries: 0, page_aligned: true });
+            p.n_sections += 1;
+            p.entries += n;
+            p.page_aligned &= aligned;
         }
     }
     Ok(BundleInfo {
@@ -385,5 +485,6 @@ pub(crate) fn inspect_v3(path: &Path) -> Result<BundleInfo> {
                 page_aligned: e.offset % PAGE as u64 == 0,
             })
             .collect(),
+        perm,
     })
 }

@@ -32,13 +32,13 @@
 use super::beam::{beam_search_layer, BeamSpec, BeamState, HopCounters, NeighborScorer};
 use super::config::PhnswParams;
 use super::dist::l2_sq;
-use super::request::{QualityTier, SearchRequest};
+use super::request::{IdFilter, QualityTier, SearchRequest};
 use super::stats::{SearchStats, SearchTrace};
 use super::visited::VisitedSet;
 use super::{AnnEngine, Neighbor};
 use crate::dataset::gt::TopK;
 use crate::dataset::VectorSet;
-use crate::graph::HnswGraph;
+use crate::graph::{HnswGraph, Permutation};
 use crate::pca::PcaModel;
 use crate::store::{Sq8Store, StoreScratch, VectorStore};
 use std::sync::{Arc, Mutex};
@@ -69,6 +69,12 @@ pub struct PhnswSearcher {
     mid: Option<Arc<dyn VectorStore>>,
     pca: Arc<PcaModel>,
     params: PhnswParams,
+    /// Locality relabeling of every table above (see
+    /// [`crate::graph::reorder`]): internal row `i` holds the row the
+    /// caller knows as `perm.ext(i)`. Requests arrive and results leave
+    /// in external ids; the walk itself runs entirely in internal ids.
+    /// `None` (corpus order) skips translation bit-for-bit.
+    perm: Option<Arc<Permutation>>,
     pool: Mutex<Vec<Scratch>>,
 }
 
@@ -229,6 +235,23 @@ impl PhnswSearcher {
         pca: Arc<PcaModel>,
         params: PhnswParams,
     ) -> Self {
+        Self::with_stores_perm(graph, data_high, low, mid, None, pca, params)
+    }
+
+    /// [`Self::with_stores`] over locality-reordered tables: `perm`
+    /// declares that graph/high/low/mid all share the reordered row
+    /// labeling, and the searcher translates ids at its boundary —
+    /// filters arrive external, results leave external. `None` is the
+    /// plain corpus-order path, bit-for-bit.
+    pub fn with_stores_perm(
+        graph: Arc<HnswGraph>,
+        data_high: Arc<VectorSet>,
+        low: Arc<dyn VectorStore>,
+        mid: Option<Arc<dyn VectorStore>>,
+        perm: Option<Arc<Permutation>>,
+        pca: Arc<PcaModel>,
+        params: PhnswParams,
+    ) -> Self {
         assert_eq!(graph.len(), data_high.len(), "graph/corpus size mismatch");
         assert_eq!(data_high.len(), low.len(), "high/low corpus size mismatch");
         assert_eq!(pca.dim(), data_high.dim(), "PCA input dim mismatch");
@@ -237,8 +260,11 @@ impl PhnswSearcher {
             assert_eq!(data_high.len(), m.len(), "high/mid corpus size mismatch");
             assert_eq!(data_high.dim(), m.dim(), "mid store dim mismatch");
         }
+        if let Some(p) = &perm {
+            assert_eq!(p.len(), graph.len(), "permutation/corpus size mismatch");
+        }
         params.validate().expect("invalid pHNSW params");
-        Self { graph, data_high, low, mid, pca, params, pool: Mutex::new(Vec::new()) }
+        Self { graph, data_high, low, mid, pca, params, perm, pool: Mutex::new(Vec::new()) }
     }
 
     /// Create a searcher from an f32 projection table. `data_low` must be
@@ -304,6 +330,12 @@ impl PhnswSearcher {
         self.mid.as_ref()
     }
 
+    /// The locality permutation the tables were reordered under, when
+    /// present (`None` = corpus order).
+    pub fn perm(&self) -> Option<&Arc<Permutation>> {
+        self.perm.as_ref()
+    }
+
     fn take_scratch(&self) -> Scratch {
         self.pool.lock().unwrap().pop().unwrap_or_else(|| Scratch {
             visited: VisitedSet::new(self.data_high.len()),
@@ -338,7 +370,21 @@ impl PhnswSearcher {
         if self.graph.is_empty() {
             return Vec::new();
         }
-        let filter = req.filter.as_deref();
+        let ext_filter = req.filter.as_deref();
+        // Reordered tables: rewrite the external-id filter into internal
+        // (relabeled) space once per request — the walk, the shortcut,
+        // and the beam predicate all speak internal ids from here on.
+        // n_total/n_allowed are preserved, so the selectivity-driven ef
+        // boost in `effective_search` is untouched. A filter sized for a
+        // different corpus is passed through untranslated so the
+        // shortcut's mismatch degrade still fires.
+        let translated: Option<IdFilter> = match (&self.perm, ext_filter) {
+            (Some(p), Some(f)) if f.n_total() == self.data_high.len() => {
+                Some(IdFilter::from_fn(f.n_total(), |int| f.allows(p.ext(int))))
+            }
+            _ => None,
+        };
+        let filter = translated.as_ref().or(ext_filter);
         let mut eff = req.effective_search(&self.params.search);
         // Upper clamp: beam widths beyond the corpus size cannot improve
         // results but would size the result heap from a client-supplied
@@ -349,7 +395,7 @@ impl PhnswSearcher {
         // Degenerate filters short-circuit before the walk: mismatched
         // or empty filters degrade to empty results, small allowed
         // subsets are scored exactly (see `search::filtered_shortcut`).
-        if let Some(out) = super::filtered_shortcut(
+        if let Some(mut out) = super::filtered_shortcut(
             filter,
             &self.data_high,
             q,
@@ -357,6 +403,11 @@ impl PhnswSearcher {
             req.topk,
             trace.as_deref_mut(),
         ) {
+            if let Some(p) = &self.perm {
+                for nb in &mut out {
+                    nb.id = p.ext(nb.id);
+                }
+            }
             return out;
         }
         // Resolve the cascade tier: `Staged` engages the mid stage only
@@ -433,8 +484,16 @@ impl PhnswSearcher {
         scratch.mid_store = mid_scratch;
         scratch.dists = dists;
         self.put_scratch(scratch);
-        let mut out: Vec<Neighbor> =
-            found.into_iter().map(|(dist, id)| Neighbor { id, dist }).collect();
+        // Leave internal-id space at the last possible moment: distances
+        // were computed on the same rows either way, so a reordered
+        // searcher's results differ from corpus order only in labels.
+        let mut out: Vec<Neighbor> = found
+            .into_iter()
+            .map(|(dist, id)| Neighbor {
+                id: self.perm.as_ref().map_or(id, |p| p.ext(id)),
+                dist,
+            })
+            .collect();
         if let Some(k) = req.topk {
             out.truncate(k);
         }

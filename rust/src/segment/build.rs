@@ -12,7 +12,7 @@
 use super::{SegmentSpec, ShardMap};
 use crate::dataset::VectorSet;
 use crate::graph::build::{build, BuildConfig};
-use crate::graph::HnswGraph;
+use crate::graph::{HnswGraph, Permutation, ReorderMode};
 use crate::pca::PcaModel;
 use crate::search::PhnswParams;
 use crate::store::{Sq8Store, VectorStore};
@@ -32,6 +32,11 @@ pub struct Segment {
     /// (per-shard quantization grid, like `low`). Present only for
     /// mid-stage builds; `None` disables the staged cascade.
     pub mid: Option<Arc<dyn VectorStore>>,
+    /// Locality relabeling applied to every table above: internal row
+    /// `i` holds the shard-local row originally labeled `perm.ext(i)`.
+    /// `None` means corpus order (identity) — the searcher then skips
+    /// id translation entirely.
+    pub perm: Option<Arc<Permutation>>,
 }
 
 /// A fully built segmented index: `S` independent segments plus the one
@@ -117,6 +122,7 @@ pub fn build_segmented_with_pca(
     let s_total = spec.n_shards;
     let workers = spec.build_threads.clamp(1, s_total);
     let mid_stage = spec.mid_stage;
+    let reorder = spec.reorder;
 
     // Dynamic shard queue: workers pull the next shard index from a
     // shared counter and report finished segments over a channel. The
@@ -140,6 +146,27 @@ pub fn build_segmented_with_pca(
                 let high = shard_rows(data, map, s);
                 let cfg = BuildConfig { seed: shard_seed(bc.seed, s), ..bc.clone() };
                 let graph = build(&high, &cfg);
+                // Locality pass: relabel the graph hub-first and move the
+                // high rows with it BEFORE quantizing, so the SQ8 tables
+                // below inherit the same row order. The per-dimension
+                // affine grid is a min/scale over all rows — permutation
+                // invariant — so reordered codes are the identity build's
+                // codes, just byte-adjacent to their graph neighbors.
+                let (graph, high, perm) = match reorder {
+                    ReorderMode::None => (graph, high, None),
+                    ReorderMode::HubBfs => {
+                        let p = Permutation::hub_bfs(&graph);
+                        if p.is_identity() {
+                            (graph, high, None)
+                        } else {
+                            let g = p
+                                .apply_to_graph(&graph)
+                                .expect("hub-bfs permutation covers its own graph");
+                            let h = p.apply_to_set(&high);
+                            (g, h, Some(Arc::new(p)))
+                        }
+                    }
+                };
                 let low: Arc<dyn VectorStore> =
                     Arc::new(Sq8Store::from_set(&pca.project_set(&high)));
                 // Mid stage: quantize the shard's own high-dim rows, so
@@ -148,7 +175,7 @@ pub fn build_segmented_with_pca(
                 // for insert-time determinism).
                 let mid: Option<Arc<dyn VectorStore>> =
                     mid_stage.then(|| Arc::new(Sq8Store::from_set(&high)) as _);
-                let seg = Segment { graph: Arc::new(graph), high: Arc::new(high), low, mid };
+                let seg = Segment { graph: Arc::new(graph), high: Arc::new(high), low, mid, perm };
                 if tx.send((s, seg)).is_err() {
                     break;
                 }

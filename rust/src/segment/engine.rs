@@ -59,11 +59,12 @@ impl SegmentedEngine {
             .segments
             .iter()
             .map(|seg| {
-                PhnswSearcher::with_stores(
+                PhnswSearcher::with_stores_perm(
                     seg.graph.clone(),
                     seg.high.clone(),
                     seg.low.clone(),
                     seg.mid.clone(),
+                    seg.perm.clone(),
                     index.pca.clone(),
                     params.clone(),
                 )

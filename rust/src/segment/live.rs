@@ -48,7 +48,7 @@ use super::build::shard_seed;
 use super::memtable::{affine_from_pca, high_affine_from_pca, MemSegment};
 use crate::dataset::VectorSet;
 use crate::graph::build::{insert_node, BuildConfig, DistCache};
-use crate::graph::HnswGraph;
+use crate::graph::{HnswGraph, Permutation, ReorderMode};
 use crate::pca::PcaModel;
 use crate::search::visited::VisitedSet;
 use crate::search::{
@@ -80,6 +80,11 @@ pub struct LiveConfig {
     /// inserting thread when the threshold is crossed (deterministic —
     /// what the tests use).
     pub background: bool,
+    /// Locality relabeling applied to every seal/compaction output (see
+    /// [`crate::graph::reorder`]). The `.ids` sidecar absorbs the
+    /// permutation, so global ids — and therefore search results — are
+    /// unchanged; defaults to hub-first, the serving default.
+    pub reorder: ReorderMode,
 }
 
 impl Default for LiveConfig {
@@ -91,6 +96,7 @@ impl Default for LiveConfig {
             params: PhnswParams::default(),
             dir: None,
             background: true,
+            reorder: ReorderMode::HubBfs,
         }
     }
 }
@@ -396,6 +402,37 @@ impl LiveEngine {
         self.len() == 0
     }
 
+    /// Locality permutation for a freshly frozen graph per
+    /// [`LiveConfig::reorder`], or `None` when disabled or the hub-first
+    /// order already matches insertion order.
+    fn locality_perm(&self, graph: &HnswGraph) -> Option<Permutation> {
+        match self.cfg.reorder {
+            ReorderMode::None => None,
+            ReorderMode::HubBfs => {
+                let p = Permutation::hub_bfs(graph);
+                (!p.is_identity()).then_some(p)
+            }
+        }
+    }
+
+    /// Encode LOWQ/MIDQ tables for `high` under the frozen PCA-derived
+    /// affines — the exact affines the memtable inserts with, so
+    /// re-encoding permuted rows reproduces the memtable's codes bitwise
+    /// (row-permuted).
+    fn encode_stores(&self, high: &VectorSet) -> (Sq8Store, Sq8Store) {
+        let (min, scale) = affine_from_pca(&self.pca);
+        let mut low = Sq8Store::with_affine(self.pca.k(), min, scale);
+        let (hmin, hscale) = high_affine_from_pca(&self.pca);
+        let mut mid = Sq8Store::with_affine(self.pca.dim(), hmin, hscale);
+        let mut buf = vec![0f32; self.pca.k()];
+        for row in high.iter() {
+            self.pca.project(row, &mut buf);
+            low.push_row(&buf);
+            mid.push_row(row);
+        }
+        (low, mid)
+    }
+
     /// Seal the current memtable into a sealed shard and publish the next
     /// view, then fold small shards. Serialized on `seal_lock`.
     ///
@@ -419,11 +456,32 @@ impl LiveEngine {
         };
         let n = parts.high.len() as u32;
         let ids: Vec<u32> = (view.mem_base..view.mem_base + n).collect();
+        // Locality pass at seal time: relabel the frozen snapshot
+        // hub-first and move every row-aligned table (and the id map)
+        // with the graph. The SQ8 tables are re-encoded from the
+        // permuted rows under the same frozen PCA-derived affines the
+        // memtable inserted with, so the codes are bitwise the
+        // memtable's codes, row-permuted — and because `ids` moves too,
+        // global ids (and thus search results) are untouched. No PERM
+        // section is needed for live shards: the `.ids` sidecar absorbs
+        // the permutation.
+        let (graph, high, low, mid, ids) = match self.locality_perm(&parts.graph) {
+            None => (parts.graph, parts.high, parts.low, parts.mid, ids),
+            Some(p) => {
+                let graph = p
+                    .apply_to_graph(&parts.graph)
+                    .expect("hub-bfs permutation covers its own graph");
+                let high = p.apply_to_set(&parts.high);
+                let ids = p.apply_to_ids(&ids);
+                let (low, mid) = self.encode_stores(&high);
+                (graph, high, low, mid, ids)
+            }
+        };
         let path = self.shard_path("shard", view.epoch);
-        let graph = Arc::new(parts.graph);
-        let high = Arc::new(parts.high);
-        let low: Arc<dyn VectorStore> = Arc::new(parts.low);
-        let mid: Arc<dyn VectorStore> = Arc::new(parts.mid);
+        let graph = Arc::new(graph);
+        let high = Arc::new(high);
+        let low: Arc<dyn VectorStore> = Arc::new(low);
+        let mid: Arc<dyn VectorStore> = Arc::new(mid);
         let searcher = PhnswSearcher::with_stores(
             graph.clone(),
             high.clone(),
@@ -507,7 +565,9 @@ impl LiveEngine {
         ids: &[u32],
     ) {
         if let Err(e) =
-            crate::runtime::save_v3_single(path, graph, &self.pca, low, Some(mid), high)
+            // Live shards never carry a PERM section: the `.ids` sidecar
+            // written below already absorbs any locality permutation.
+            crate::runtime::save_v3_single(path, graph, &self.pca, low, Some(mid), None, high)
         {
             log::warn!("failed to persist sealed shard {}: {e:#}", path.display());
             return;
@@ -597,18 +657,22 @@ impl LiveEngine {
                 );
             }
             graph.freeze();
-            let (min, scale) = affine_from_pca(&self.pca);
-            let mut low = Sq8Store::with_affine(self.pca.k(), min, scale);
-            let (hmin, hscale) = high_affine_from_pca(&self.pca);
-            let mut mid = Sq8Store::with_affine(self.pca.dim(), hmin, hscale);
-            let mut buf = vec![0f32; self.pca.k()];
-            for row in high.iter() {
-                self.pca.project(row, &mut buf);
-                low.push_row(&buf);
-                // Same frozen PCA-derived affine the memtable encodes
-                // with, so compaction re-encodes rows bitwise identically.
-                mid.push_row(row);
-            }
+            // Same locality pass the seal path runs: relabel hub-first
+            // and move `high` and the global-id map with the graph before
+            // the SQ8 tables are encoded, so the encode loop below
+            // naturally runs over the permuted row order.
+            let (graph, high, ids) = match self.locality_perm(&graph) {
+                None => (graph, high, ids),
+                Some(p) => (
+                    p.apply_to_graph(&graph)
+                        .expect("hub-bfs permutation covers its own graph"),
+                    p.apply_to_set(&high),
+                    p.apply_to_ids(&ids),
+                ),
+            };
+            // Same frozen PCA-derived affines the memtable encodes with,
+            // so compaction re-encodes rows bitwise identically.
+            let (low, mid) = self.encode_stores(&high);
             let path = self.shard_path("compact", view.epoch);
             let graph = Arc::new(graph);
             let high = Arc::new(high);

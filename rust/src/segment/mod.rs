@@ -181,6 +181,11 @@ pub struct SegmentSpec {
     /// `Staged`-tier serving. Off by default: the table costs 1 B per
     /// high-dim component of bundle size and build-time corpus scans.
     pub mid_stage: bool,
+    /// Locality relabeling applied per shard after the graph is built
+    /// (hub-first node order; see [`crate::graph::reorder`]). The
+    /// library default is `None` so programmatic builds stay bitwise
+    /// pinned to corpus order; the CLI defaults to `hub-bfs`.
+    pub reorder: crate::graph::ReorderMode,
 }
 
 impl Default for SegmentSpec {
@@ -190,6 +195,7 @@ impl Default for SegmentSpec {
             assignment: ShardAssignment::RoundRobin,
             build_threads: 1,
             mid_stage: false,
+            reorder: crate::graph::ReorderMode::None,
         }
     }
 }

@@ -255,21 +255,53 @@ impl Workbench {
     /// server can serve them zero-copy from a memory mapping
     /// (`phnsw serve --mmap`). With `mid_stage` the bundle also carries
     /// the `MIDQ` cascade table (SQ8 over the high-dim corpus), enabling
-    /// `Staged`-tier serving.
+    /// `Staged`-tier serving. `reorder` applies the locality pass on the
+    /// way out: the graph, the stores, and the rerank rows are written
+    /// hub-first with a `PERM` section recording the relabeling — the
+    /// served results are identical, only the byte layout changes. The
+    /// in-memory workbench stays corpus-order either way.
     pub fn save_bundle_v3(
         &self,
         path: impl AsRef<std::path::Path>,
         mid_stage: bool,
+        reorder: crate::graph::ReorderMode,
     ) -> crate::Result<()> {
-        let low = Sq8Store::from_set(&self.base_low);
-        let mid = mid_stage.then(|| Sq8Store::from_set(&self.base));
+        use crate::graph::{Permutation, ReorderMode};
+        let perm = match reorder {
+            ReorderMode::None => None,
+            ReorderMode::HubBfs => {
+                let p = Permutation::hub_bfs(&self.graph);
+                (!p.is_identity()).then_some(p)
+            }
+        };
+        let Some(p) = perm else {
+            let low = Sq8Store::from_set(&self.base_low);
+            let mid = mid_stage.then(|| Sq8Store::from_set(&self.base));
+            return crate::runtime::save_v3_single(
+                path,
+                &self.graph,
+                &self.pca,
+                &low,
+                mid.as_ref().map(|m| m as &dyn VectorStore),
+                None,
+                &self.base,
+            );
+        };
+        let graph = p.apply_to_graph(&self.graph)?;
+        let high = p.apply_to_set(&self.base);
+        // SQ8's per-dimension affine grid is a min/scale over all rows —
+        // permutation invariant — so these are the corpus-order codes,
+        // row-permuted.
+        let low = Sq8Store::from_set(&self.pca.project_set(&high));
+        let mid = mid_stage.then(|| Sq8Store::from_set(&high));
         crate::runtime::save_v3_single(
             path,
-            &self.graph,
+            &graph,
             &self.pca,
             &low,
             mid.as_ref().map(|m| m as &dyn VectorStore),
-            &self.base,
+            Some(&p),
+            &high,
         )
     }
 

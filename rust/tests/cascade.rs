@@ -171,6 +171,7 @@ fn build_index(f: &Fixture, shards: usize, mid_stage: bool) -> SegmentedIndex {
         build_threads: shards.min(2),
         assignment: ShardAssignment::RoundRobin,
         mid_stage,
+        ..Default::default()
     };
     build_segmented(&f.base, &bc, DIM_LOW, PCA_SEED, &spec)
 }

@@ -1,0 +1,307 @@
+//! Integration tests for the hub-first locality reorder: the relabeling
+//! must be invisible at the engine boundary — bitwise-identical results
+//! under external ids across monolithic, segmented, v3 owned + mmap,
+//! and live-sealed/compacted shards — while the `PERM` section round
+//! trips through the v3 bundle, shows up in `inspect`, is refused by
+//! the legacy v2 writer, and rejects corruption loudly.
+
+use phnsw::coordinator::{Query, Server, ServerConfig};
+use phnsw::dataset::synthetic::{generate, SyntheticConfig};
+use phnsw::dataset::VectorSet;
+use phnsw::graph::build::BuildConfig;
+use phnsw::graph::ReorderMode;
+use phnsw::pca::PcaModel;
+use phnsw::runtime::{inspect_bundle, save_segmented, save_v3, Bundle, OpenOptions};
+use phnsw::search::{AnnEngine, IdFilter, PhnswParams, SearchRequest};
+use phnsw::segment::{
+    build_segmented, LiveConfig, LiveEngine, SegmentSpec, SegmentedIndex, ShardAssignment,
+};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const DIM_LOW: usize = 8;
+const PCA_SEED: u64 = 7;
+
+struct Fixture {
+    base: Arc<VectorSet>,
+    queries: VectorSet,
+}
+
+fn fixture(n: usize, nq: usize) -> Fixture {
+    let cfg = SyntheticConfig { n_base: n, n_queries: nq, ..SyntheticConfig::tiny() };
+    let (base, queries) = generate(&cfg);
+    Fixture { base: Arc::new(base), queries }
+}
+
+fn build(f: &Fixture, shards: usize, reorder: ReorderMode) -> SegmentedIndex {
+    let bc = BuildConfig { m: 8, ef_construction: 100, ..Default::default() };
+    let spec = SegmentSpec {
+        n_shards: shards,
+        build_threads: shards.min(2),
+        assignment: ShardAssignment::RoundRobin,
+        reorder,
+        ..Default::default()
+    };
+    build_segmented(&f.base, &bc, DIM_LOW, PCA_SEED, &spec)
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("phnsw_reorder_{}_{name}.phnsw", std::process::id()))
+}
+
+fn results(engine: &dyn AnnEngine, queries: &VectorSet) -> Vec<Vec<phnsw::search::Neighbor>> {
+    queries.iter().map(|q| engine.search(q)).collect()
+}
+
+// ---- engine-boundary invisibility -----------------------------------
+
+#[test]
+fn reordered_builds_serve_identical_results_monolithic_and_segmented() {
+    let f = fixture(1200, 30);
+    let params = PhnswParams::default();
+    for shards in [1usize, 4] {
+        let plain = build(&f, shards, ReorderMode::None);
+        let hub = build(&f, shards, ReorderMode::HubBfs);
+        assert!(
+            plain.segments.iter().all(|s| s.perm.is_none()),
+            "--reorder none must not attach a permutation"
+        );
+        assert!(
+            hub.segments.iter().any(|s| s.perm.is_some()),
+            "hub-bfs left every shard in corpus order — the pass never ran"
+        );
+        // Internal layouts differ (that is the point)…
+        let (sp, sh) = (&plain.segments[0], &hub.segments[0]);
+        let p = sh.perm.as_ref().expect("shard 0 is large enough to move");
+        assert!(!p.is_identity(), "a {shards}-shard build of 1200 rows reordered to identity");
+        let moved = (0..p.len() as u32).find(|&i| p.ext(i) != i).unwrap();
+        assert_eq!(
+            sh.high.row(moved as usize),
+            sp.high.row(p.ext(moved) as usize),
+            "internal slot {moved} must hold the row originally labeled {}",
+            p.ext(moved)
+        );
+        // …but the served results do not, bitwise.
+        let before = results(&plain.engine(params.clone()), &f.queries);
+        let after = results(&hub.engine(params.clone()), &f.queries);
+        assert_eq!(before, after, "S={shards}: reordering changed served results");
+    }
+}
+
+#[test]
+fn reordered_v3_bundle_matches_plain_build_owned_and_mmap() {
+    let f = fixture(1400, 25);
+    let params = PhnswParams::default();
+    let plain = build(&f, 1, ReorderMode::None);
+    let before = results(&plain.engine(params.clone()), &f.queries);
+
+    let hub = build(&f, 1, ReorderMode::HubBfs);
+    let path = tmp("v3_parity");
+    save_v3(&path, &hub).unwrap();
+    for (label, mmap) in [("owned", false), ("mmap", true)] {
+        let any = Bundle::open(&path, OpenOptions::new().mmap(mmap)).unwrap();
+        let after = results(any.engine(params.clone()).as_ref(), &f.queries);
+        assert_eq!(before, after, "{label}: reordered v3 round-trip diverged from plain build");
+        // External addressing holds straight through the permutation:
+        // high_row(g) is corpus row g, whatever internal slot holds it.
+        for g in [0usize, 1, f.base.len() / 2, f.base.len() - 1] {
+            assert_eq!(any.high_row(g), f.base.row(g), "{label}: HIGH row {g}");
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn id_filters_are_translated_at_the_engine_boundary() {
+    let f = fixture(1200, 20);
+    let params = PhnswParams::default();
+    let plain = build(&f, 1, ReorderMode::None).engine(params.clone());
+    let hub = build(&f, 1, ReorderMode::HubBfs).engine(params);
+    let filter = Arc::new(IdFilter::from_fn(f.base.len(), |id| id % 3 == 0));
+    for (qi, q) in f.queries.iter().enumerate() {
+        let req = SearchRequest::new(q).with_topk(10).with_filter(filter.clone());
+        let a = plain.search_req(&req);
+        let b = hub.search_req(&req);
+        assert_eq!(a, b, "query {qi}: filtered results diverged under reordering");
+        for nb in &b {
+            assert_eq!(nb.id % 3, 0, "query {qi}: filter leaked id {}", nb.id);
+        }
+    }
+}
+
+#[test]
+fn live_seal_and_compact_reorder_is_invisible_in_results() {
+    let n = 1_000usize;
+    let (base, queries) = generate(&SyntheticConfig {
+        n_base: n,
+        n_queries: 20,
+        seed: 0x5EA1_04D0,
+        ..SyntheticConfig::default()
+    });
+    let mut sample = VectorSet::new(base.dim());
+    for i in 0..base.len().min(1_024) {
+        sample.push(base.row(i));
+    }
+    let pca = Arc::new(PcaModel::fit(&sample, 15, 7));
+
+    let run = |reorder: ReorderMode| -> Vec<Vec<phnsw::search::Neighbor>> {
+        let cfg = LiveConfig {
+            seal_threshold: 256,
+            background: false,
+            build: BuildConfig { m: 8, ef_construction: 64, ..Default::default() },
+            reorder,
+            ..Default::default()
+        };
+        let live = LiveEngine::new(pca.clone(), cfg);
+        let server = Server::builder()
+            .config(ServerConfig { workers: 2, ..Default::default() })
+            .live(live)
+            .start()
+            .unwrap();
+        let h = server.handle();
+        for i in 0..n {
+            assert_eq!(h.insert(base.row(i).to_vec()).unwrap() as usize, i);
+        }
+        for id in (0..n as u32).step_by(17) {
+            assert!(h.delete(id).unwrap());
+        }
+        h.flush().unwrap();
+        let engine = server.live().unwrap().clone();
+        engine.compact();
+        assert!(engine.stats().seals >= 2, "stream never crossed a seal");
+        let out = queries
+            .iter()
+            .map(|q| h.query_blocking(Query::new(q.to_vec()).with_topk(10)).unwrap().neighbors)
+            .collect();
+        server.shutdown();
+        out
+    };
+
+    let plain = run(ReorderMode::None);
+    let hub = run(ReorderMode::HubBfs);
+    assert_eq!(plain, hub, "live-tier reordering changed served results");
+}
+
+// ---- PERM section round trip + inspect ------------------------------
+
+#[test]
+fn perm_section_round_trips_and_inspect_reports_it() {
+    let f = fixture(900, 2);
+
+    // Monolithic: PCAM, GRPH, LOWQ, PERM, HIGH.
+    let hub = build(&f, 1, ReorderMode::HubBfs);
+    let p1 = tmp("inspect_mono");
+    save_v3(&p1, &hub).unwrap();
+    let info = inspect_bundle(&p1).unwrap();
+    assert_eq!((info.version, info.n_shards), (3, 1));
+    assert_eq!(info.sections.len(), 5, "PERM adds one section to the single flavor");
+    let perm = info.perm.as_ref().expect("inspect must surface the PERM section");
+    assert_eq!(perm.n_sections, 1);
+    assert_eq!(perm.entries, f.base.len() as u64);
+    assert!(perm.page_aligned);
+    std::fs::remove_file(&p1).ok();
+
+    // Segmented: PERM is all-or-nothing, identity-filled, one per shard.
+    let seg = build(&f, 3, ReorderMode::HubBfs);
+    let p3 = tmp("inspect_seg");
+    save_v3(&p3, &seg).unwrap();
+    let info = inspect_bundle(&p3).unwrap();
+    assert_eq!(info.n_shards, 3);
+    assert_eq!(info.sections.len(), 2 + 3 * 4, "SEGD + PCAM + 3×(GRPH,LOWQ,PERM,HIGH)");
+    let perm = info.perm.as_ref().expect("segmented inspect must surface PERM");
+    assert_eq!(perm.n_sections, 3, "one PERM per shard");
+    assert_eq!(perm.entries, f.base.len() as u64, "entry counts sum to the corpus");
+    assert!(perm.page_aligned);
+    std::fs::remove_file(&p3).ok();
+
+    // A corpus-order build writes no PERM and inspects as such.
+    let plain = build(&f, 1, ReorderMode::None);
+    let p0 = tmp("inspect_plain");
+    save_v3(&p0, &plain).unwrap();
+    let info = inspect_bundle(&p0).unwrap();
+    assert_eq!(info.sections.len(), 4);
+    assert!(info.perm.is_none(), "legacy layout must inspect as reorder: none");
+    std::fs::remove_file(&p0).ok();
+}
+
+#[test]
+fn v2_writer_refuses_reordered_indexes_loudly() {
+    let f = fixture(700, 2);
+    let hub = build(&f, 1, ReorderMode::HubBfs);
+    let path = tmp("v2_refuse");
+    let err = save_segmented(&path, &hub).unwrap_err().to_string();
+    assert!(err.contains("v3 bundle format"), "v2-on-reordered error must name the fix: {err}");
+    assert!(err.contains("--reorder none"), "error must name the opt-out: {err}");
+    assert!(!path.exists(), "refused write must not leave a file behind");
+}
+
+// ---- PERM corruption matrix -----------------------------------------
+
+/// A reordered single-flavor v3 file plus its PERM directory slot:
+/// (bytes, entry_offset_in_directory, payload_offset, payload_len).
+fn perm_bytes() -> (Vec<u8>, usize, u64, u64) {
+    let f = fixture(600, 2);
+    let hub = build(&f, 1, ReorderMode::HubBfs);
+    let path = tmp("corrupt_src");
+    save_v3(&path, &hub).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let n_sections = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    for i in 0..n_sections {
+        let e = 16 + i * 24;
+        if &bytes[e..e + 4] == b"PERM" {
+            let off = u64::from_le_bytes(bytes[e + 8..e + 16].try_into().unwrap());
+            let len = u64::from_le_bytes(bytes[e + 16..e + 24].try_into().unwrap());
+            return (bytes, e, off, len);
+        }
+    }
+    panic!("reordered v3 bundle is missing its PERM directory entry");
+}
+
+fn open_raw(name: &str, bytes: &[u8]) -> anyhow::Error {
+    let path = tmp(name);
+    std::fs::write(&path, bytes).unwrap();
+    let err = Bundle::open(&path, OpenOptions::new().mmap(true)).unwrap_err();
+    std::fs::remove_file(&path).ok();
+    err
+}
+
+#[test]
+fn corrupted_perm_sections_are_rejected_with_named_errors() {
+    let (good, e, off, len) = perm_bytes();
+
+    // Truncated payload: the directory claims fewer bytes than the
+    // entry count needs.
+    let mut bad = good.clone();
+    bad[e + 16..e + 24].copy_from_slice(&(len - 4).to_le_bytes());
+    let err = open_raw("perm_trunc", &bad).to_string();
+    assert!(err.contains("PERM section length"), "truncated-PERM error: {err}");
+
+    // Bad payload magic.
+    let mut bad = good.clone();
+    bad[off as usize..off as usize + 4].copy_from_slice(b"NOPE");
+    let err = open_raw("perm_magic", &bad).to_string();
+    assert!(err.contains("PERM payload magic"), "bad-magic error: {err}");
+
+    // Duplicate mapping entries: still well-formed bytes, no longer a
+    // bijection — the searcher must never see it.
+    let mut bad = good.clone();
+    let d = off as usize + 64;
+    bad[d..d + 4].copy_from_slice(&0u32.to_le_bytes());
+    bad[d + 4..d + 8].copy_from_slice(&0u32.to_le_bytes());
+    let err = open_raw("perm_dup", &bad).to_string();
+    assert!(err.contains("not a permutation"), "non-bijection error: {err}");
+
+    // Knocked off the page grid: rejected by the zero-copy alignment
+    // check before any decode runs.
+    let mut bad = good.clone();
+    bad[e + 8..e + 16].copy_from_slice(&(off - 64).to_le_bytes());
+    let err = open_raw("perm_misaligned", &bad).to_string();
+    assert!(err.contains("not page-aligned"), "misalignment error: {err}");
+
+    // And the uncorrupted original still opens.
+    let path = tmp("perm_good");
+    std::fs::write(&path, &good).unwrap();
+    Bundle::open(&path, OpenOptions::new().mmap(true)).unwrap();
+    std::fs::remove_file(&path).ok();
+}

@@ -22,6 +22,9 @@ import sys
 RETENTION = 0.75  # fresh speedup must keep >= 75% of the committed one
 FLOOR = 1.5  # ... unless it still clears the absolute acceptance floor
 CASCADE_FLOOR = 2.0  # staged tier must cut f32 rerank rows at least 2x
+QPS_RETENTION = 0.75  # absolute QPS must keep >= 75% of the committed run
+REORDER_WARM_FLOOR = 1.10  # hub-first must speed warm search >= 1.10x ...
+REORDER_FAULT_FLOOR = 1.3  # ... or cut mmap first-touch bytes >= 1.3x
 
 
 def load(path):
@@ -70,7 +73,61 @@ def main():
         f"fresh {fresh['entries']['cascade_f32_rows_reduction']:6.2f}x   ok"
     )
 
+    # The locality-reorder gate is relative (hub-first vs corpus-order
+    # layout measured within the same run), so like the cascade gate it
+    # applies on every kernel variant. Either clause clears it: a warm
+    # cache-locality speedup, or a cut in the bytes one cold mmap query
+    # faults in — small corpora can legitimately show only the latter.
+    reorder_names = ("reorder_warm_speedup", "reorder_first_touch_reduction")
+    for which, doc in (("committed", committed), ("fresh", fresh)):
+        vals = [doc["entries"].get(n) for n in reorder_names]
+        if any(v is None for v in vals):
+            sys.exit(f"error: {which} snapshot is missing reorder entries {reorder_names}")
+        warm, fault = vals
+        if warm < REORDER_WARM_FLOOR and fault < REORDER_FAULT_FLOOR:
+            sys.exit(
+                f"error: {which} reorder gate failed — warm speedup {warm:.2f}x "
+                f"< {REORDER_WARM_FLOOR}x and first-touch reduction {fault:.2f}x "
+                f"< {REORDER_FAULT_FLOOR}x"
+            )
+    print(
+        "  reorder gate                    committed "
+        f"{committed['entries']['reorder_warm_speedup']:6.2f}x warm / "
+        f"{committed['entries']['reorder_first_touch_reduction']:.2f}x fault   "
+        f"fresh {fresh['entries']['reorder_warm_speedup']:6.2f}x warm / "
+        f"{fresh['entries']['reorder_first_touch_reduction']:.2f}x fault   ok"
+    )
+
     variant = fresh.get("kernel_variant", "unknown")
+
+    # Absolute-QPS retention: unlike the speedup ratios this compares
+    # timings across runs, so it only holds between runs that dispatched
+    # to the same kernel set (committed snapshots come from the same CI
+    # host class). A variant mismatch skips the check rather than
+    # comparing apples to oranges.
+    if variant == committed.get("kernel_variant", "unknown"):
+        for name in ("hnsw_qps", "phnsw_qps"):
+            committed_v = committed["entries"].get(name)
+            fresh_v = fresh["entries"].get(name)
+            if committed_v is None or fresh_v is None:
+                sys.exit(f"error: snapshot missing {name} for the QPS retention gate")
+            ok = fresh_v >= QPS_RETENTION * committed_v
+            status = "ok" if ok else "REGRESSED"
+            print(
+                f"  {name:<32} committed {committed_v:9.1f}   "
+                f"fresh {fresh_v:9.1f}   {status}"
+            )
+            if not ok:
+                sys.exit(
+                    f"error: {name} fresh {fresh_v:.1f} fell below "
+                    f"{QPS_RETENTION:.0%} of committed {committed_v:.1f}"
+                )
+    else:
+        print(
+            f"  qps retention gate skipped (variant {variant} vs "
+            f"committed {committed.get('kernel_variant', 'unknown')})"
+        )
+
     if variant == "scalar":
         print(
             "bench gate: fresh run dispatched to the scalar set "
